@@ -1,0 +1,12 @@
+//! Fig 8 style sweep: SPNN-SS vs SPNN-HE across network bandwidths —
+//! demonstrates the paper's crossover (SS wins on fast links, HE on slow).
+//!
+//!     cargo run --release --example bandwidth_sweep
+
+use spnn::exp::{fig8, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let md = fig8::run(&ExpOpts { scale: 0.5, quick: false, seed: 7 })?;
+    println!("{md}");
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Financial-distress workload (paper §6.1's second benchmark): the wide
+//! 556-feature, 400-unit first layer — the configuration that stresses the
+//! ring-matmul Pallas kernel and the Paillier pipeline hardest.
+//!
+//!     cargo run --release --example distress_prediction
+
+use spnn::config::{TrainConfig, DISTRESS};
+use spnn::data::{synth_distress, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols::spnn::Spnn;
+use spnn::protocols::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let ds = synth_distress(SynthOpts { rows: 3_672, seed: 43, pos_boost: 2.0 });
+    let (train, test) = ds.split(0.7, 43); // the dataset owner's split
+    println!("distress workload: {} train / {} test rows", train.len(), test.len());
+
+    let tc = TrainConfig { batch: 1024, epochs: 4, lr_override: Some(0.15), ..Default::default() };
+    let rep = Spnn { he: false }.train(&DISTRESS, &tc, LinkSpec::mbps100(), &train, &test, 2)?;
+    println!("{}", rep.summary());
+    println!("loss curve: {:?}", rep.train_losses);
+    Ok(())
+}

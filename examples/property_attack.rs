@@ -1,0 +1,20 @@
+//! Table 2 demo: shadow-training property-inference attack against the
+//! hidden features the server sees, with and without SGLD noise.
+//!
+//!     cargo run --release --example property_attack
+
+use spnn::attack::{property_attack, AttackOpts};
+
+fn main() -> anyhow::Result<()> {
+    let opts = AttackOpts { rows: 12_000, epochs: 5, seed: 11, noise: None };
+    println!("property attack: infer 'amount' (binarized at median) from h1\n");
+    for sgld in [false, true] {
+        let r = property_attack(sgld, &opts)?;
+        println!(
+            "{:>4}: task AUC {:.4}   attack AUC {:.4}",
+            r.optimizer, r.task_auc, r.attack_auc
+        );
+    }
+    println!("\npaper (Table 2): SGD .9118/.8223, SGLD .9313/.5951 — SGLD should cut the attack AUC.");
+    Ok(())
+}

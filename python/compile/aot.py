@@ -1,0 +1,143 @@
+"""AOT compile path: lower every SPNN graph to HLO text artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per dataset config in model.CONFIGS and per batch size in
+model.BATCH_SIZES:
+
+  server_fwd_{ds}_b{B}   (h1, thetaS...)        -> (hL,)
+  server_bwd_{ds}_b{B}   (h1, g_hL, thetaS...)  -> (g_h1, g_thetaS...)
+  label_grad_{ds}_b{B}   (hL, y, mask, wy, by)  -> (p, loss, g_hL, g_wy, g_by)
+  label_fwd_{ds}_b{B}    (hL, wy, by)           -> (p,)
+  nn_train_{ds}_b{B}     (X, y, mask, theta...) -> (loss, p, g_theta...)
+  ring_matmul_{ds}_b{B}  (u64 BxD, u64 DxH)     -> (u64 BxH,)   [L1 Pallas]
+
+plus ``manifest.txt`` describing the I/O signature of every artifact so the
+rust runtime can marshal Literals without reparsing HLO.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # required for the u64 ring kernel
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("uint64"): "u64",
+    jnp.dtype("int64"): "s64",
+}
+
+
+def _sig(avals):
+    """Manifest signature string for a list of ShapeDtypeStructs."""
+    parts = []
+    for a in avals:
+        shape = "x".join(str(d) for d in a.shape) if a.shape else "scalar"
+        parts.append(f"{shape}:{_DTYPE_NAMES[jnp.dtype(a.dtype)]}")
+    return ";".join(parts)
+
+
+def to_hlo_text(fn, specs):
+    """Lower fn at the given ShapeDtypeStruct specs to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def u64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint64)
+
+
+def artifact_inventory(batches=None, datasets=None):
+    """Yield (name, fn, input_specs) for every artifact to build."""
+    batches = batches or model.BATCH_SIZES
+    datasets = datasets or list(model.CONFIGS)
+    for ds in datasets:
+        cfg = model.CONFIGS[ds]
+        d_in = cfg["n_features"]
+        h1 = cfg["h1_dim"]
+        hl = cfg["server_dims"][-1]
+        sp = [f32(*s) for s in model.server_param_shapes(cfg)]
+        lp = [f32(*s) for s in model.label_param_shapes(cfg)]
+        for b in batches:
+            tag = f"{ds}_b{b}"
+            yield (f"server_fwd_{tag}", model.make_server_fwd(cfg),
+                   [f32(b, h1)] + sp)
+            yield (f"server_bwd_{tag}", model.make_server_bwd(cfg),
+                   [f32(b, h1), f32(b, hl)] + sp)
+            yield (f"label_grad_{tag}", model.make_label_grad(cfg),
+                   [f32(b, hl), f32(b), f32(b)] + lp)
+            yield (f"label_fwd_{tag}", model.make_label_fwd(cfg),
+                   [f32(b, hl)] + lp)
+            yield (f"nn_train_{tag}", model.make_nn_train(cfg),
+                   [f32(b, d_in), f32(b), f32(b), f32(d_in, h1)] + sp + lp)
+            yield (f"ring_matmul_{tag}", model.make_ring_matmul(),
+                   [u64(b, d_in), u64(d_in, h1)])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=None,
+                    help="artifact output dir (default: <repo>/artifacts)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated batch sizes (default: all)")
+    args = ap.parse_args(argv)
+
+    outdir = args.outdir
+    if outdir is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        outdir = os.path.join(here, "..", "..", "artifacts")
+    outdir = os.path.abspath(outdir)
+    os.makedirs(outdir, exist_ok=True)
+
+    batches = None
+    if args.batches:
+        batches = tuple(int(b) for b in args.batches.split(","))
+
+    manifest = []
+    t_all = time.time()
+    for name, fn, specs in artifact_inventory(batches=batches):
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        out_avals = jax.eval_shape(fn, *specs)
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name}\t{fname}\t{_sig(specs)}\t{_sig(list(out_avals))}")
+        print(f"  {name}: {len(text)} chars in {time.time()-t0:.2f}s",
+              file=sys.stderr)
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("# name\tfile\tinputs\toutputs\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {outdir} "
+          f"in {time.time()-t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

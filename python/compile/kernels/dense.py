@@ -1,0 +1,179 @@
+"""Layer-1 Pallas kernel: fused f32 dense layer (matmul + bias + activation).
+
+Used by the Layer-2 server stack (python/compile/model.py) for the plaintext
+hidden-layer computations SPNN delegates to the semi-honest server.  The
+paper's nets are narrow (8..556 wide) with batch as the only large dimension,
+so the kernel tiles the batch axis and keeps the full (K, N) weight resident
+in VMEM — for the largest layer (556x400 f32 = 0.85 MB) that is far under the
+~16 MB budget, and the (bm x K) @ (K x N) tile shape keeps the MXU fed on
+real hardware (see DESIGN.md §9).  Lowered with interpret=True for CPU PJRT.
+
+``dense`` carries a custom VJP (pallas_call is not reverse-differentiable):
+the backward pass reuses the blocked ``matmul_f32`` kernel for the two
+gradient GEMMs, and recovers the activation derivative from the *output*
+(sigmoid' = a(1-a), relu' = [a>0], tanh' = 1-a^2) so no pre-activation cache
+is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BM = 256
+
+ACTIVATIONS = ("identity", "sigmoid", "relu", "tanh")
+
+
+def _apply_act(x, act):
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "identity":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _act_grad_from_output(a, act):
+    """d act / d preact expressed in terms of the activation output a."""
+    if act == "sigmoid":
+        return a * (1.0 - a)
+    if act == "relu":
+        return (a > 0.0).astype(a.dtype)
+    if act == "tanh":
+        return 1.0 - a * a
+    if act == "identity":
+        return jnp.ones_like(a)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _ceil_pow2(v):
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Plain blocked f32 matmul (backward GEMMs + general use)
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(x, m_mult, n_mult):
+    m, n = x.shape
+    pm = (-m) % m_mult
+    pn = (-n) % n_mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_f32(x, w, *, bm=256, bk=512, bn=128):
+    """Blocked f32 matmul (M,K)@(K,N)->(M,N); arbitrary shapes (padded)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm_ = min(bm, _ceil_pow2(m))
+    bk_ = min(bk, _ceil_pow2(k))
+    bn_ = min(bn, _ceil_pow2(n))
+    xp = _pad_to(x, bm_, bk_)
+    wp = _pad_to(w, bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused dense layer with custom VJP
+# ---------------------------------------------------------------------------
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    y = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y = y + b_ref[...]  # (1, N) broadcasts over the batch tile
+    o_ref[...] = _apply_act(y, act)
+
+
+def _dense_impl(x, w, b, act, bm):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), (b.shape, n)
+    bm_ = min(bm, _ceil_pow2(m))
+    pm = (-m) % bm_
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    mp = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, act=act),
+        grid=(mp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, w, b.reshape(1, n))
+    return out[:m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _dense(x, w, b, act, bm):
+    return _dense_impl(x, w, b, act, bm)
+
+
+def _dense_fwd(x, w, b, act, bm):
+    a = _dense_impl(x, w, b, act, bm)
+    return a, (x, w, a)
+
+
+def _dense_bwd(act, bm, res, g):
+    x, w, a = res
+    ga = g * _act_grad_from_output(a, act)   # (M, N) grad at pre-activation
+    gx = matmul_f32(ga, w.T)                 # (M, K)
+    gw = matmul_f32(x.T, ga)                 # (K, N)
+    gb = jnp.sum(ga, axis=0)                 # (N,)
+    return gx, gw, gb
+
+
+_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense(x, w, b, *, act="identity", bm=DEF_BM):
+    """Fused ``act(x @ w + b)`` with batch tiling and a custom VJP.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    """
+    assert act in ACTIVATIONS, act
+    return _dense(x, w, b, act, bm)

@@ -1,0 +1,157 @@
+"""Layer-1 Pallas kernel: blocked fixed-point (ring) matmul over Z_{2^64}.
+
+This is the compute hot-spot of SPNN's Algorithm 2: every party-local term of
+the arithmetic-secret-shared first-hidden-layer product — ``<X>_i @ <theta>_i``
+and the Beaver-opened cross terms — is a dense matmul over the ring Z_{2^64}
+(uint64 with natural wrap-around).  Both the shares and the Beaver triples
+live in this ring, so the kernel must be *bit-exact* modular arithmetic; any
+float detour breaks reconstruction.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): integer dots do not run
+on the TPU MXU, so the kernel is tiled for the VPU with VMEM-resident u64
+accumulators.  BlockSpec tiles (bm x bk)@(bk x bn) are sized so that
+x-tile + w-tile + out-tile stay well under the ~16 MB VMEM budget
+(defaults: 256x512x128 u64 -> ~1.6 MB).  Kernels are lowered with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls);
+see DESIGN.md §9 for the analytic TPU estimate.
+
+The public entry points pad ragged shapes to tile multiples inside the traced
+function (zero rows/cols are exact in ring matmul) so the rust caller never
+needs to know the tiling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  bm*bk + bk*bn + bm*bn u64 words; 256*512 + 512*128 +
+# 256*128 = 229k words = 1.8 MB VMEM — comfortable double-buffering headroom.
+DEF_BM = 256
+DEF_BK = 512
+DEF_BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm x bn) output tile; grid axis 2 walks the K blocks.
+
+    The accumulator lives in the output ref (u64, wraps mod 2^64 natively).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Integer dot: explicit dot_general with a u64 accumulator — `@` would
+    # try to promote through the default (float) path on some backends.
+    prod = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.uint64,
+    )
+    o_ref[...] += prod
+
+
+def _pad_to(x, m_mult, n_mult):
+    m, n = x.shape
+    pm = (-m) % m_mult
+    pn = (-n) % n_mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def fixed_matmul(x, w, *, bm=DEF_BM, bk=DEF_BK, bn=DEF_BN):
+    """Ring matmul ``x @ w mod 2^64`` for uint64 operands.
+
+    Shapes (M,K) @ (K,N) -> (M,N); arbitrary M,K,N (padded internally).
+    """
+    assert x.dtype == jnp.uint64 and w.dtype == jnp.uint64, (x.dtype, w.dtype)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    # Shrink tiles for small problems so we never pad more than one tile.
+    bm_ = min(bm, _ceil_pow2(m))
+    bk_ = min(bk, _ceil_pow2(k))
+    bn_ = min(bn, _ceil_pow2(n))
+    xp = _pad_to(x, bm_, bk_)
+    wp = _pad_to(w, bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.uint64),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _ceil_pow2(v):
+    """Smallest power of two >= v (used to shrink tiles for tiny dims)."""
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+def _trunc_kernel(z_ref, o_ref, *, role, frac_bits):
+    """SecureML local share truncation (elementwise, u64).
+
+    After a fixed-point multiply the product carries 2*f fractional bits; each
+    party truncates its *share* locally:
+      party 0:  z0 -> floor(z0_signed / 2^f)          (arithmetic shift)
+      party 1:  z1 -> -floor(-z1_signed / 2^f)        (two's-complement trick)
+    Reconstruction is then correct up to +-1 ulp with overwhelming
+    probability (SecureML, Thm 1).
+    """
+    z = z_ref[...].astype(jnp.int64)
+    if role == 0:
+        t = z >> frac_bits  # arithmetic shift == floor div for int64
+    else:
+        t = -((-z) >> frac_bits)
+    o_ref[...] = t.astype(jnp.uint64)
+
+
+@functools.partial(jax.jit, static_argnames=("role", "frac_bits", "bm"))
+def trunc_share(z, *, role, frac_bits=16, bm=DEF_BM):
+    """Truncate a share matrix by ``frac_bits`` (role-dependent, see kernel)."""
+    assert z.dtype == jnp.uint64
+    m, n = z.shape
+    bm_ = min(bm, _ceil_pow2(m))
+    zp = _pad_to(z, bm_, 1)
+    mp = zp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_trunc_kernel, role=role, frac_bits=frac_bits),
+        grid=(mp // bm_,),
+        in_specs=[pl.BlockSpec((bm_, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm_, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.uint64),
+        interpret=True,
+    )(zp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "bm", "bk", "bn"))
+def fixed_matmul_trunc(x, w, *, role, frac_bits=16, bm=DEF_BM, bk=DEF_BK, bn=DEF_BN):
+    """Fused ring matmul + local truncation: the per-iteration hot path of
+    Algorithm 2 (local product term of one party, ready for reconstruction).
+
+    ``role`` is a traced scalar (0/1) so one compiled artifact serves both
+    parties: role selects between the two truncation formulas via jnp.where.
+    """
+    prod = fixed_matmul(x, w, bm=bm, bk=bk, bn=bn)
+    z = prod.astype(jnp.int64)
+    t0 = (z >> frac_bits).astype(jnp.uint64)
+    t1 = (-((-z) >> frac_bits)).astype(jnp.uint64)
+    return jnp.where(role == 0, t0, t1)

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against:
+bit-exact equality for the Z_{2^64} ring ops, allclose for f32 dense.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_fixed_matmul(x, w):
+    """x @ w mod 2^64 — uint64 dot_general wraps natively."""
+    return jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.uint64
+    )
+
+
+def ref_trunc_share(z, *, role, frac_bits=16):
+    """SecureML local share truncation, elementwise (see fixed_matmul.py)."""
+    zi = z.astype(jnp.int64)
+    if role == 0:
+        t = zi >> frac_bits
+    else:
+        t = -((-zi) >> frac_bits)
+    return t.astype(jnp.uint64)
+
+
+def ref_dense(x, w, b, *, act="identity"):
+    y = x @ w + b
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "identity":
+        return y
+    raise ValueError(f"unknown activation {act!r}")

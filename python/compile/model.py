@@ -1,0 +1,214 @@
+"""Layer-2: SPNN's DNN computation graphs in JAX, calling the L1 kernels.
+
+The paper splits one logical network into three owners (§4.2):
+
+  * data holders: ``h1 = X_A @ theta_A + X_B @ theta_B``   (crypto, rust side)
+  * server:       ``hL = f(act(h1); theta_S)``             (plaintext, heavy)
+  * label holder: ``y_hat = sigmoid(hL @ w_y + b_y)``      (private labels)
+
+This module defines each owner's forward/backward as standalone jax functions
+so that ``aot.py`` can lower them to separate HLO artifacts; the rust
+coordinator stitches them together at runtime, with the crypto (Algorithm 2/3)
+between the holder and server pieces.  The dense layers call the L1 Pallas
+``dense`` kernel so the hot matmuls lower through the same kernel path.
+
+Paper hyper-parameters (§6.1):
+  fraud:    MLP 28 -> 8 -> 8 -> 1, sigmoid activations, lr 0.001
+  distress: MLP 556 -> 400 -> 16 -> 8 -> 1, sigmoid hidden + relu last, lr 0.006
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense
+from .kernels.fixed_matmul import fixed_matmul
+
+# ---------------------------------------------------------------------------
+# Dataset / network configurations (paper §6.1)
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "fraud": dict(
+        n_features=28,      # creditcard fraud dataset feature count
+        h1_dim=8,           # first hidden layer — computed by the holders
+        server_dims=(8,),   # server-side hidden stack
+        server_acts=("sigmoid",),
+        first_act="sigmoid",  # applied by the server on the received h1
+        lr=0.001,
+    ),
+    "distress": dict(
+        n_features=556,     # 83 raw -> 556 after one-hot (paper §6.1)
+        h1_dim=400,
+        server_dims=(16, 8),
+        server_acts=("sigmoid", "relu"),  # "Relu in the last layer"
+        first_act="sigmoid",
+        lr=0.006,
+    ),
+}
+
+# Batch sizes we lower artifacts for.  5000 is the paper's timing batch
+# (Table 3); the smaller ones serve training examples and the Fig 9a sweep.
+BATCH_SIZES = (256, 512, 1024, 2048, 5000)
+
+
+def server_param_shapes(cfg):
+    """[(K,N)] weight + (N,) bias shapes of the server stack, in order."""
+    dims = (cfg["h1_dim"],) + tuple(cfg["server_dims"])
+    shapes = []
+    for k, n in zip(dims[:-1], dims[1:]):
+        shapes.append((k, n))
+        shapes.append((n,))
+    return shapes
+
+
+def label_param_shapes(cfg):
+    """Label-holder parameters: (hL_dim, 1) weight and (1,) bias."""
+    hl = cfg["server_dims"][-1]
+    return [(hl, 1), (1,)]
+
+
+# ---------------------------------------------------------------------------
+# Server-side graphs (the "heavy hidden layer related computations", §4.4)
+# ---------------------------------------------------------------------------
+
+def make_server_fwd(cfg):
+    acts = cfg["server_acts"]
+    first_act = cfg["first_act"]
+
+    def server_fwd(h1, *theta_s):
+        """(h1, W1, b1, ...) -> (hL,).  Stateless — no activation cache."""
+        a = _act(h1, first_act)
+        for i, aname in enumerate(acts):
+            w, b = theta_s[2 * i], theta_s[2 * i + 1]
+            a = dense(a, w, b, act=aname)
+        return (a,)
+
+    return server_fwd
+
+
+def _act(x, name):
+    if name == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "identity":
+        return x
+    raise ValueError(name)
+
+
+def make_server_bwd(cfg):
+    fwd = make_server_fwd(cfg)
+
+    def server_bwd(h1, g_hl, *theta_s):
+        """(h1, g_hL, W1, b1, ...) -> (g_h1, g_W1, g_b1, ...).
+
+        Recomputes the forward internally (vjp) so the server holds no state
+        between the fwd and bwd phases — halves the wire traffic vs shipping
+        activation caches (DESIGN.md §9).
+        """
+        def f(h1_, theta):
+            return fwd(h1_, *theta)[0]
+
+        _, vjp = jax.vjp(f, h1, theta_s)
+        g_h1, g_theta = vjp(g_hl)
+        return (g_h1,) + tuple(g_theta)
+
+    return server_bwd
+
+
+# ---------------------------------------------------------------------------
+# Label-holder graphs (the "private label related computations", §4.5)
+# ---------------------------------------------------------------------------
+
+def _bce_from_logit(logit, y, mask):
+    """Numerically-stable masked binary cross-entropy (mean over mask)."""
+    # log(1+e^z) - y*z, stable via logaddexp
+    per = jnp.logaddexp(0.0, logit) - y * logit
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per * mask) / denom
+
+
+def make_label_grad(cfg):
+    del cfg
+
+    def label_grad(hl, y, mask, wy, by):
+        """(hL, y, mask, w_y, b_y) -> (p, loss, g_hL, g_wy, g_by).
+
+        mask zeroes out padding rows of ragged final batches (artifacts have
+        static shapes; rust pads the batch with zero rows).
+        """
+        def f(hl_, wy_, by_):
+            logit = (hl_ @ wy_ + by_)[:, 0]
+            return _bce_from_logit(logit, y, mask)
+
+        loss, vjp = jax.value_and_grad(f, argnums=(0, 1, 2))(hl, wy, by)
+        g_hl, g_wy, g_by = vjp
+        logit = (hl @ wy + by)[:, 0]
+        p = jax.nn.sigmoid(logit)
+        return (p, jnp.float32(loss), g_hl, g_wy, g_by)
+
+    return label_grad
+
+
+def make_label_fwd(cfg):
+    del cfg
+
+    def label_fwd(hl, wy, by):
+        """(hL, w_y, b_y) -> (p,) — inference only (AUC evaluation)."""
+        logit = (hl @ wy + by)[:, 0]
+        return (jax.nn.sigmoid(logit),)
+
+    return label_fwd
+
+
+# ---------------------------------------------------------------------------
+# Full plaintext network (the NN baseline, Table 1/3)
+# ---------------------------------------------------------------------------
+
+def make_nn_train(cfg):
+    acts = cfg["server_acts"]
+    first_act = cfg["first_act"]
+
+    def nn_train(x, y, mask, w0, *rest):
+        """Full plaintext fwd+bwd: (X, y, mask, theta0, thetaS..., wy, by) ->
+        (loss, p, g_theta0, g_thetaS..., g_wy, g_by).
+
+        theta0 is the holders' first-layer weight (no bias, matching the
+        SPNN split h1 = X @ theta); rest = server params + label params.
+        """
+        ns = 2 * len(acts)
+        theta_s, (wy, by) = rest[:ns], rest[ns:]
+
+        def f(w0_, theta_s_, wy_, by_):
+            h1 = x @ w0_
+            a = _act(h1, first_act)
+            for i, aname in enumerate(acts):
+                a = dense(a, theta_s_[2 * i], theta_s_[2 * i + 1], act=aname)
+            logit = (a @ wy_ + by_)[:, 0]
+            return _bce_from_logit(logit, y, mask)
+
+        loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(
+            w0, tuple(theta_s), wy, by)
+        g_w0, g_ts, g_wy, g_by = grads
+
+        # forward once more for predictions (XLA CSEs the shared subgraph)
+        h1 = x @ w0
+        a = _act(h1, first_act)
+        for i, aname in enumerate(acts):
+            a = dense(a, theta_s[2 * i], theta_s[2 * i + 1], act=aname)
+        p = jax.nn.sigmoid((a @ wy + by)[:, 0])
+        return (jnp.float32(loss), p, g_w0) + tuple(g_ts) + (g_wy, g_by)
+
+    return nn_train
+
+
+# ---------------------------------------------------------------------------
+# Ring matmul graph (Algorithm 2's hot spot, used by the rust smpc engine)
+# ---------------------------------------------------------------------------
+
+def make_ring_matmul():
+    def ring_matmul(x, w):
+        """(u64 M x K, u64 K x N) -> (u64 M x N) mod 2^64 via the L1 kernel."""
+        return (fixed_matmul(x, w),)
+
+    return ring_matmul

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# make `compile.*` importable whether pytest runs from repo root or python/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# The Z_{2^64} ring kernels require 64-bit mode; set it before any test
+# creates arrays.
+jax.config.update("jax_enable_x64", True)

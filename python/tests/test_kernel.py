@@ -1,0 +1,205 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+The u64 ring kernels must be *bit-exact* (secret-share reconstruction breaks
+on any deviation); the f32 dense kernel is checked with allclose.  Hypothesis
+sweeps shapes and dtype edge cases per the repo testing mandate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dense import dense, matmul_f32, ACTIVATIONS
+from compile.kernels.fixed_matmul import (
+    fixed_matmul,
+    fixed_matmul_trunc,
+    trunc_share,
+)
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=40)
+SEEDS = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _rand_u64(rng, shape):
+    # full-range u64, exercises wrap-around
+    return jnp.asarray(
+        rng.integers(0, 2**64, size=shape, dtype=np.uint64))
+
+
+def _np_wrap_matmul(x, w):
+    """Independent numpy oracle: wrapping u64 matmul via object ints."""
+    xo = np.asarray(x).astype(object)
+    wo = np.asarray(w).astype(object)
+    out = xo @ wo
+    return (out % (2**64)).astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# fixed_matmul (ring matmul mod 2^64)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_fixed_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_u64(rng, (m, k))
+    w = _rand_u64(rng, (k, n))
+    got = fixed_matmul(x, w)
+    want = ref.ref_fixed_matmul(x, w)
+    assert got.dtype == jnp.uint64
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS)
+def test_fixed_matmul_matches_numpy_object_oracle(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_u64(rng, (7, 13))
+    w = _rand_u64(rng, (13, 5))
+    got = np.asarray(fixed_matmul(x, w))
+    np.testing.assert_array_equal(got, _np_wrap_matmul(x, w))
+
+
+def test_fixed_matmul_blocked_path():
+    """Shapes larger than one tile exercise the K-loop accumulator."""
+    rng = np.random.default_rng(0)
+    x = _rand_u64(rng, (300, 600))
+    w = _rand_u64(rng, (600, 130))
+    got = fixed_matmul(x, w, bm=128, bk=256, bn=64)
+    want = ref.ref_fixed_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fixed_matmul_wraps_mod_2_64():
+    x = jnp.full((1, 2), 2**63, dtype=jnp.uint64)
+    w = jnp.full((2, 1), 3, dtype=jnp.uint64)
+    # 2 * 3 * 2^63 mod 2^64 = 0 ... (2^63*3)*2 = 3*2^64 ≡ 0
+    got = fixed_matmul(x, w)
+    assert int(got[0, 0]) == (2 * 3 * 2**63) % 2**64
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, k=DIMS, seed=SEEDS)
+def test_fixed_matmul_identity(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_u64(rng, (m, k))
+    eye = jnp.asarray(np.eye(k, dtype=np.uint64))
+    np.testing.assert_array_equal(np.asarray(fixed_matmul(x, eye)),
+                                  np.asarray(x))
+
+
+def test_fixed_matmul_zero_annihilates():
+    rng = np.random.default_rng(1)
+    x = _rand_u64(rng, (9, 11))
+    z = jnp.zeros((11, 3), dtype=jnp.uint64)
+    assert not np.asarray(fixed_matmul(x, z)).any()
+
+
+# ---------------------------------------------------------------------------
+# trunc_share (SecureML fixed-point truncation)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, role=st.integers(0, 1), seed=SEEDS)
+def test_trunc_share_matches_ref(m, n, role, seed):
+    rng = np.random.default_rng(seed)
+    z = _rand_u64(rng, (m, n))
+    got = trunc_share(z, role=role, frac_bits=16)
+    want = ref.ref_trunc_share(z, role=role, frac_bits=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS)
+def test_trunc_share_reconstruction(seed):
+    """SecureML Thm 1: truncating both shares reconstructs the truncated
+    value within 1 ulp (whp; we keep the secret small so wrap never hits)."""
+    rng = np.random.default_rng(seed)
+    f = 16
+    # fixed-point product of two Q.16 values in (-2^20, 2^20)
+    val = rng.integers(-(2**40), 2**40, size=(8, 8))
+    secret = val.astype(np.uint64)  # two's complement
+    r = rng.integers(0, 2**64, size=(8, 8), dtype=np.uint64)
+    s0 = (secret - r)  # wraps naturally in uint64
+    s1 = r
+    t0 = np.asarray(trunc_share(jnp.asarray(s0), role=0, frac_bits=f))
+    t1 = np.asarray(trunc_share(jnp.asarray(s1), role=1, frac_bits=f))
+    rec = (t0 + t1).astype(np.int64)
+    want = val >> f
+    assert np.max(np.abs(rec - want)) <= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, role=st.integers(0, 1))
+def test_fixed_matmul_trunc_fuses(seed, role):
+    rng = np.random.default_rng(seed)
+    x = _rand_u64(rng, (6, 10))
+    w = _rand_u64(rng, (10, 4))
+    got = fixed_matmul_trunc(x, w, role=jnp.uint64(role), frac_bits=16)
+    want = ref.ref_trunc_share(ref.ref_fixed_matmul(x, w), role=role,
+                               frac_bits=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# dense (fused f32 layer) + matmul_f32
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       act=st.sampled_from(ACTIVATIONS))
+def test_dense_matches_ref(m, k, n, seed, act):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), dtype=jnp.float32)
+    got = dense(x, w, b, act=act)
+    want = ref.ref_dense(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_matmul_f32_matches_jnp(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(matmul_f32(x, w)),
+                               np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_dense_custom_vjp_matches_autodiff(act):
+    """The hand-written VJP must agree with autodiff of the reference."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(17, 9)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(9, 5)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(5,)), dtype=jnp.float32)
+
+    def loss_kernel(x_, w_, b_):
+        return jnp.sum(dense(x_, w_, b_, act=act) ** 2)
+
+    def loss_ref(x_, w_, b_):
+        return jnp.sum(ref.ref_dense(x_, w_, b_, act=act) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_dense_batch_tiling_padding():
+    """Batch not a multiple of the tile: padding path must be exact."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(301, 28)), dtype=jnp.float32)
+    w = jnp.asarray(rng.normal(size=(28, 8)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(8,)), dtype=jnp.float32)
+    got = dense(x, w, b, act="sigmoid", bm=128)
+    want = ref.ref_dense(x, w, b, act="sigmoid")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

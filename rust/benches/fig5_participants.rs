@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's fig5 (quick mode; run
+//! `spnn repro fig5` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{fig5, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/fig5(quick)", || {
+        match fig5::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("fig5 failed: {e}"),
+        }
+    });
+}

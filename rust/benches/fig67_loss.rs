@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's fig67 (quick mode; run
+//! `spnn repro fig67` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{fig67, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/fig67(quick)", || {
+        match fig67::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("fig67 failed: {e}"),
+        }
+    });
+}

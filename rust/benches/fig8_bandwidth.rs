@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's fig8 (quick mode; run
+//! `spnn repro fig8` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{fig8, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/fig8(quick)", || {
+        match fig8::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("fig8 failed: {e}"),
+        }
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's fig9 (quick mode; run
+//! `spnn repro fig9` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{fig9, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/fig9(quick)", || {
+        match fig9::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("fig9 failed: {e}"),
+        }
+    });
+}

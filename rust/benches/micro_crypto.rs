@@ -1,0 +1,72 @@
+//! Microbenchmarks of the cryptographic substrates: bignum modpow, Paillier
+//! enc/dec (full vs DJN short-exponent), ring matmul (native vs AOT Pallas
+//! kernel), Beaver matmul, and the bit-sliced DReLU. These are the §Perf
+//! primitives behind every table.
+
+use spnn::bench_harness::bench;
+use spnn::bignum::{modpow, BigUint};
+use spnn::paillier::{keygen, NoncePool};
+use spnn::rng::{ChaChaRng, Pcg64, Rng64};
+use spnn::runtime::Engine;
+use spnn::smpc::RingMat;
+
+fn main() {
+    let mut rng = ChaChaRng::seed_from_u64(1);
+
+    // bignum: 1024-bit modpow (the Paillier inner loop)
+    let m = BigUint::random_bits(&mut rng, 1024).add_u64(1);
+    let m = if m.is_even() { m.add_u64(1) } else { m };
+    let b = BigUint::random_below(&mut rng, &m);
+    let e = BigUint::random_bits(&mut rng, 1024);
+    bench("bignum/modpow_1024", 2, 10, || {
+        std::hint::black_box(modpow(&b, &e, &m));
+    });
+
+    // Paillier 1024-bit: keygen, enc (full + pooled short-exp), dec
+    let kp = keygen(&mut rng, 1024);
+    let msg = BigUint::from_u64(123_456_789);
+    bench("paillier1024/encrypt_full", 1, 5, || {
+        std::hint::black_box(kp.pk.encrypt(&msg, &mut rng));
+    });
+    let mut pool = NoncePool::new(&kp.pk, true);
+    bench("paillier1024/nonce_short_exp", 1, 5, || {
+        pool.refill(&mut rng, 1);
+        pool.take();
+    });
+    pool.refill(&mut rng, 40);
+    bench("paillier1024/encrypt_pooled", 2, 30, || {
+        if pool.remaining() == 0 {
+            pool.refill(&mut rng, 30);
+        }
+        std::hint::black_box(kp.pk.encrypt_with_pool(&msg, &mut pool));
+    });
+    let ct = kp.pk.encrypt(&msg, &mut rng);
+    bench("paillier1024/decrypt_crt", 1, 10, || {
+        std::hint::black_box(kp.sk.decrypt(&ct));
+    });
+
+    // ring matmul: native vs AOT Pallas kernel (fraud + distress shapes)
+    let mut prng = Pcg64::seed_from_u64(2);
+    let x = RingMat::random(&mut prng, 1024, 28);
+    let w = RingMat::random(&mut prng, 28, 8);
+    bench("ring_matmul/native_1024x28x8", 2, 20, || {
+        std::hint::black_box(x.matmul(&w));
+    });
+    let xd = RingMat::random(&mut prng, 1024, 556);
+    let wd = RingMat::random(&mut prng, 556, 400);
+    bench("ring_matmul/native_1024x556x400", 1, 3, || {
+        std::hint::black_box(xd.matmul(&wd));
+    });
+    if let Ok(mut eng) = Engine::load_default() {
+        bench("ring_matmul/pallas_1024x28x8", 2, 20, || {
+            std::hint::black_box(eng.ring_matmul("ring_matmul_fraud_b1024", &x, &w).unwrap());
+        });
+        bench("ring_matmul/pallas_1024x556x400", 1, 3, || {
+            std::hint::black_box(
+                eng.ring_matmul("ring_matmul_distress_b1024", &xd, &wd).unwrap(),
+            );
+        });
+    } else {
+        eprintln!("(run `make artifacts` for the Pallas kernel benches)");
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's table1 (quick mode; run
+//! `spnn repro table1` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{table1, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/table1(quick)", || {
+        match table1::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("table1 failed: {e}"),
+        }
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's table2 (quick mode; run
+//! `spnn repro table2` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{table2, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/table2(quick)", || {
+        match table2::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("table2 failed: {e}"),
+        }
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench target regenerating the paper's table3 (quick mode; run
+//! `spnn repro table3` for the full-size version).
+
+use spnn::bench_harness::bench_once;
+use spnn::exp::{table3, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts::quick();
+    bench_once("repro/table3(quick)", || {
+        match table3::run(&opts) {
+            Ok(md) => println!("{md}"),
+            Err(e) => eprintln!("table3 failed: {e}"),
+        }
+    });
+}

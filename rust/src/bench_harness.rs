@@ -1,0 +1,96 @@
+//! Minimal timing harness for `cargo bench` targets (criterion is not in
+//! the offline vendor set). Warms up, runs a fixed iteration budget, and
+//! prints mean / median / min with throughput hooks.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>4} iters  mean {:>12}  median {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.min_s)
+        );
+    }
+
+    /// Print with an items/sec throughput line.
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        self.print();
+        println!(
+            "{:<44}       -> {:.2} {unit}/s",
+            "",
+            items / self.mean_s
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: times.iter().sum::<f64>() / iters as f64,
+        median_s: times[iters / 2],
+        min_s: times[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Time a one-shot (expensive) operation.
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> f64 {
+    let t = Instant::now();
+    f();
+    let dt = t.elapsed().as_secs_f64();
+    println!("{name:<44}    1 iter   {:>12}", fmt_time(dt));
+    dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let s = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_s <= s.median_s && s.median_s <= s.mean_s * 5.0);
+        assert_eq!(s.iters, 5);
+    }
+}

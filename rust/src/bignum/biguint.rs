@@ -1,0 +1,544 @@
+//! Core big-unsigned-integer type: representation, comparison, +, -, *, <<, >>.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+use crate::rng::Rng64;
+
+/// Arbitrary-precision unsigned integer, little-endian `u64` limbs.
+///
+/// Invariant: no trailing zero limbs (`limbs.is_empty()` represents 0).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut b = BigUint { limbs: vec![lo, hi] };
+        b.normalize();
+        b
+    }
+
+    /// From little-endian limbs (normalizing).
+    pub fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut b = BigUint { limbs };
+        b.normalize();
+        b
+    }
+
+    /// Parse a hexadecimal string (no prefix).
+    pub fn from_hex(s: &str) -> Self {
+        let s = s.trim_start_matches("0x");
+        let mut limbs = vec![];
+        let bytes = s.as_bytes();
+        let mut i = bytes.len();
+        while i > 0 {
+            let start = i.saturating_sub(16);
+            let chunk = std::str::from_utf8(&bytes[start..i]).unwrap();
+            limbs.push(u64::from_str_radix(chunk, 16).expect("bad hex"));
+            i = start;
+        }
+        Self::from_limbs(limbs)
+    }
+
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".into();
+        }
+        let mut s = format!("{:x}", self.limbs.last().unwrap());
+        for l in self.limbs.iter().rev().skip(1) {
+            s.push_str(&format!("{l:016x}"));
+        }
+        s
+    }
+
+    /// Little-endian bytes (no trailing zeros beyond the last nonzero).
+    pub fn to_bytes_le(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for l in &self.limbs {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        while out.last() == Some(&0) {
+            out.pop();
+        }
+        out
+    }
+
+    pub fn from_bytes_le(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len().div_ceil(8));
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            limbs.push(u64::from_le_bytes(buf));
+        }
+        Self::from_limbs(limbs)
+    }
+
+    pub(crate) fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    /// Number of significant bits.
+    pub fn bits(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => 64 * (self.limbs.len() - 1) + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Bit at position i (0 = LSB).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
+    }
+
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    pub fn to_u128(&self) -> Option<u128> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u128),
+            2 => Some(self.limbs[0] as u128 | (self.limbs[1] as u128) << 64),
+            _ => None,
+        }
+    }
+
+    // ---- comparison ----
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for (a, b) in self.limbs.iter().rev().zip(other.limbs.iter().rev()) {
+            match a.cmp(b) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    // ---- addition / subtraction ----
+
+    pub fn add(&self, other: &Self) -> Self {
+        let (long, short) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let b = short.get(i).copied().unwrap_or(0);
+            let (s1, c1) = long[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        Self::from_limbs(out)
+    }
+
+    pub fn add_u64(&self, v: u64) -> Self {
+        self.add(&BigUint::from_u64(v))
+    }
+
+    /// `self - other`; panics if `other > self`.
+    pub fn sub(&self, other: &Self) -> Self {
+        debug_assert!(
+            self.cmp_big(other) != Ordering::Less,
+            "BigUint::sub underflow"
+        );
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        assert_eq!(borrow, 0, "BigUint::sub underflow");
+        Self::from_limbs(out)
+    }
+
+    pub fn sub_u64(&self, v: u64) -> Self {
+        self.sub(&BigUint::from_u64(v))
+    }
+
+    // ---- shifts ----
+
+    pub fn shl_bits(&self, n: usize) -> Self {
+        if self.is_zero() || n == 0 {
+            return self.clone();
+        }
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        let mut out = vec![0u64; self.limbs.len() + limb_shift + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            out[i + limb_shift] |= l << bit_shift;
+            if bit_shift > 0 {
+                out[i + limb_shift + 1] |= l >> (64 - bit_shift);
+            }
+        }
+        Self::from_limbs(out)
+    }
+
+    pub fn shr_bits(&self, n: usize) -> Self {
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        if limb_shift >= self.limbs.len() {
+            return Self::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() - limb_shift);
+        for i in limb_shift..self.limbs.len() {
+            let mut v = self.limbs[i] >> bit_shift;
+            if bit_shift > 0 && i + 1 < self.limbs.len() {
+                v |= self.limbs[i + 1] << (64 - bit_shift);
+            }
+            out.push(v);
+        }
+        Self::from_limbs(out)
+    }
+
+    // ---- multiplication ----
+
+    /// Karatsuba threshold in limbs; below this, schoolbook wins.
+    const KARATSUBA_LIMBS: usize = 24;
+
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        if self.limbs.len().min(other.limbs.len()) >= Self::KARATSUBA_LIMBS {
+            return self.mul_karatsuba(other);
+        }
+        self.mul_schoolbook(other)
+    }
+
+    fn mul_schoolbook(&self, other: &Self) -> Self {
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        Self::from_limbs(out)
+    }
+
+    fn mul_karatsuba(&self, other: &Self) -> Self {
+        let half = self.limbs.len().max(other.limbs.len()).div_ceil(2);
+        let (a0, a1) = self.split_at_limb(half);
+        let (b0, b1) = other.split_at_limb(half);
+        let z0 = a0.mul(&b0);
+        let z2 = a1.mul(&b1);
+        let z1 = a0.add(&a1).mul(&b0.add(&b1)).sub(&z0).sub(&z2);
+        // result = z2 << (2*half*64) + z1 << (half*64) + z0
+        z2.shl_limbs(2 * half).add(&z1.shl_limbs(half)).add(&z0)
+    }
+
+    fn split_at_limb(&self, at: usize) -> (Self, Self) {
+        if at >= self.limbs.len() {
+            (self.clone(), Self::zero())
+        } else {
+            (
+                Self::from_limbs(self.limbs[..at].to_vec()),
+                Self::from_limbs(self.limbs[at..].to_vec()),
+            )
+        }
+    }
+
+    pub(crate) fn shl_limbs(&self, n: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let mut limbs = vec![0u64; n];
+        limbs.extend_from_slice(&self.limbs);
+        Self::from_limbs(limbs)
+    }
+
+    pub fn mul_u64(&self, v: u64) -> Self {
+        self.mul(&BigUint::from_u64(v))
+    }
+
+    pub fn square(&self) -> Self {
+        self.mul(self)
+    }
+
+    // ---- randomness ----
+
+    /// Uniform integer with exactly `bits` bits (MSB set).
+    pub fn random_bits<R: Rng64>(rng: &mut R, bits: usize) -> Self {
+        assert!(bits > 0);
+        let limbs_n = bits.div_ceil(64);
+        let mut limbs = vec![0u64; limbs_n];
+        rng.fill_u64(&mut limbs);
+        let top_bits = bits - (limbs_n - 1) * 64;
+        let mask = if top_bits == 64 { u64::MAX } else { (1u64 << top_bits) - 1 };
+        limbs[limbs_n - 1] &= mask;
+        limbs[limbs_n - 1] |= 1u64 << (top_bits - 1); // force MSB
+        Self::from_limbs(limbs)
+    }
+
+    /// Uniform in `[0, bound)` by rejection.
+    pub fn random_below<R: Rng64>(rng: &mut R, bound: &Self) -> Self {
+        assert!(!bound.is_zero());
+        let bits = bound.bits();
+        let limbs_n = bits.div_ceil(64);
+        let top_bits = bits - (limbs_n - 1) * 64;
+        let mask = if top_bits == 64 { u64::MAX } else { (1u64 << top_bits) - 1 };
+        loop {
+            let mut limbs = vec![0u64; limbs_n];
+            rng.fill_u64(&mut limbs);
+            limbs[limbs_n - 1] &= mask;
+            let v = Self::from_limbs(limbs);
+            if v.cmp_big(bound) == Ordering::Less {
+                return v;
+            }
+        }
+    }
+}
+
+impl fmt::Debug for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BigUint(0x{})", self.to_hex())
+    }
+}
+
+impl fmt::Display for BigUint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "0x{}", self.to_hex())
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_big(other))
+    }
+}
+
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_big(other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand128(rng: &mut Pcg64) -> u128 {
+        (rng.next_u64() as u128) << 64 | rng.next_u64() as u128
+    }
+
+    #[test]
+    fn u128_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..100 {
+            let v = rand128(&mut rng);
+            assert_eq!(BigUint::from_u128(v).to_u128(), Some(v));
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        for bits in [1usize, 13, 64, 65, 128, 500] {
+            let v = BigUint::random_bits(&mut rng, bits);
+            assert_eq!(BigUint::from_hex(&v.to_hex()), v);
+        }
+        assert_eq!(BigUint::from_hex("ff"), BigUint::from_u64(255));
+        assert_eq!(BigUint::from_hex("10000000000000000").bits(), 65);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for bits in [8usize, 63, 64, 100, 1024] {
+            let v = BigUint::random_bits(&mut rng, bits);
+            assert_eq!(BigUint::from_bytes_le(&v.to_bytes_le()), v);
+        }
+    }
+
+    #[test]
+    fn add_sub_match_u128() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        for _ in 0..500 {
+            let a = rand128(&mut rng) >> 1;
+            let b = rand128(&mut rng) >> 1;
+            let (hi, lo) = (a.max(b), a.min(b));
+            let sum = BigUint::from_u128(a).add(&BigUint::from_u128(b));
+            assert_eq!(sum.to_u128(), Some(a + b));
+            let diff = BigUint::from_u128(hi).sub(&BigUint::from_u128(lo));
+            assert_eq!(diff.to_u128(), Some(hi - lo));
+        }
+    }
+
+    #[test]
+    fn add_carries_across_limbs() {
+        let a = BigUint::from_limbs(vec![u64::MAX, u64::MAX]);
+        let s = a.add_u64(1);
+        assert_eq!(s.limbs, vec![0, 0, 1]);
+        assert_eq!(s.sub_u64(1), a);
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..500 {
+            let a = rng.next_u64() as u128;
+            let b = rng.next_u64() as u128;
+            let p = BigUint::from_u128(a).mul(&BigUint::from_u128(b));
+            assert_eq!(p.to_u128(), Some(a * b));
+        }
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for bits in [1600usize, 2048, 3000] {
+            let a = BigUint::random_bits(&mut rng, bits);
+            let b = BigUint::random_bits(&mut rng, bits);
+            assert_eq!(a.mul_karatsuba(&b), a.mul_schoolbook(&b), "bits={bits}");
+        }
+        // asymmetric operands
+        let a = BigUint::random_bits(&mut rng, 2048);
+        let b = BigUint::random_bits(&mut rng, 700);
+        assert_eq!(a.mul_karatsuba(&b), a.mul_schoolbook(&b));
+    }
+
+    #[test]
+    fn mul_algebra() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let a = BigUint::random_bits(&mut rng, 300);
+        let b = BigUint::random_bits(&mut rng, 200);
+        let c = BigUint::random_bits(&mut rng, 250);
+        // commutativity, associativity, distributivity
+        assert_eq!(a.mul(&b), b.mul(&a));
+        assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+        assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+        // identities
+        assert_eq!(a.mul(&BigUint::one()), a);
+        assert!(a.mul(&BigUint::zero()).is_zero());
+    }
+
+    #[test]
+    fn shifts_match_u128() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        for _ in 0..200 {
+            let v = rand128(&mut rng) >> 4;
+            for sh in [0usize, 1, 3, 63, 64, 65, 100] {
+                let b = BigUint::from_u128(v);
+                if 124 + sh < 256 {
+                    let expect = v << sh as u32 & (u128::MAX);
+                    if sh < 4 {
+                        assert_eq!(b.shl_bits(sh).to_u128(), Some(expect));
+                    }
+                }
+                assert_eq!(b.shr_bits(sh).to_u128(), Some(v >> sh.min(127)));
+            }
+        }
+    }
+
+    #[test]
+    fn shl_then_shr_is_identity() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let v = BigUint::random_bits(&mut rng, 1000);
+        for sh in [1usize, 64, 65, 129, 1000] {
+            assert_eq!(v.shl_bits(sh).shr_bits(sh), v);
+        }
+    }
+
+    #[test]
+    fn bits_and_bit() {
+        assert_eq!(BigUint::zero().bits(), 0);
+        assert_eq!(BigUint::one().bits(), 1);
+        assert_eq!(BigUint::from_u64(0x8000_0000_0000_0000).bits(), 64);
+        let v = BigUint::from_hex("10000000000000000"); // 2^64
+        assert_eq!(v.bits(), 65);
+        assert!(v.bit(64));
+        assert!(!v.bit(0));
+        assert!(!v.bit(200));
+    }
+
+    #[test]
+    fn random_bits_has_exact_bits() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        for bits in [1usize, 5, 64, 65, 512, 1024] {
+            for _ in 0..10 {
+                assert_eq!(BigUint::random_bits(&mut rng, bits).bits(), bits);
+            }
+        }
+    }
+
+    #[test]
+    fn random_below_in_range() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let bound = BigUint::from_hex("deadbeefcafebabe1234");
+        for _ in 0..100 {
+            assert!(BigUint::random_below(&mut rng, &bound) < bound);
+        }
+    }
+
+    #[test]
+    fn ordering() {
+        let a = BigUint::from_hex("ffffffffffffffff");
+        let b = BigUint::from_hex("10000000000000000");
+        assert!(a < b);
+        assert!(b > a);
+        assert_eq!(a.cmp_big(&a), Ordering::Equal);
+    }
+}

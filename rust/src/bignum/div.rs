@@ -1,0 +1,207 @@
+//! Division: Knuth TAOCP Vol.2 Algorithm D (4.3.1), with single-limb fast
+//! path. Exposes `divrem` on [`BigUint`].
+
+use super::BigUint;
+
+impl BigUint {
+    /// Quotient and remainder: `(self / div, self % div)`. Panics on /0.
+    pub fn divrem(&self, div: &Self) -> (Self, Self) {
+        assert!(!div.is_zero(), "division by zero");
+        match self.cmp_big(div) {
+            std::cmp::Ordering::Less => return (Self::zero(), self.clone()),
+            std::cmp::Ordering::Equal => return (Self::one(), Self::zero()),
+            _ => {}
+        }
+        if div.limbs.len() == 1 {
+            let (q, r) = self.divrem_u64(div.limbs[0]);
+            return (q, Self::from_u64(r));
+        }
+        self.divrem_knuth(div)
+    }
+
+    pub fn rem(&self, div: &Self) -> Self {
+        self.divrem(div).1
+    }
+
+    pub fn div(&self, d: &Self) -> Self {
+        self.divrem(d).0
+    }
+
+    /// Fast path: divide by a single limb.
+    pub fn divrem_u64(&self, div: u64) -> (Self, u64) {
+        assert!(div != 0, "division by zero");
+        let mut q = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            q[i] = (cur / div as u128) as u64;
+            rem = cur % div as u128;
+        }
+        (Self::from_limbs(q), rem as u64)
+    }
+
+    /// Knuth Algorithm D. Requires `div.limbs.len() >= 2` and `self > div`.
+    fn divrem_knuth(&self, div: &Self) -> (Self, Self) {
+        let n = div.limbs.len();
+        let m = self.limbs.len() - n;
+
+        // D1: normalize so the divisor's top limb has its MSB set.
+        let shift = div.limbs[n - 1].leading_zeros() as usize;
+        let u = self.shl_bits(shift); // dividend, may grow one limb
+        let v = div.shl_bits(shift);
+        let mut ul = u.limbs.clone();
+        ul.resize(self.limbs.len() + 1, 0); // ensure u has m+n+1 limbs
+        let vl = &v.limbs;
+        debug_assert_eq!(vl.len(), n);
+        let vtop = vl[n - 1];
+        let vsecond = vl[n - 2];
+
+        let mut q = vec![0u64; m + 1];
+
+        // D2..D7: main loop over quotient digits, most significant first.
+        for j in (0..=m).rev() {
+            // D3: estimate qhat from the top two dividend limbs.
+            let num = ((ul[j + n] as u128) << 64) | ul[j + n - 1] as u128;
+            let mut qhat = num / vtop as u128;
+            let mut rhat = num % vtop as u128;
+            // refine: at most two corrections (Knuth Thm 4.3.1B)
+            while qhat >= 1u128 << 64
+                || qhat * vsecond as u128 > ((rhat << 64) | ul[j + n - 2] as u128)
+            {
+                qhat -= 1;
+                rhat += vtop as u128;
+                if rhat >= 1u128 << 64 {
+                    break;
+                }
+            }
+            let mut qhat = qhat as u64;
+
+            // D4: multiply-subtract u[j..j+n] -= qhat * v
+            let mut borrow = 0i128;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let p = qhat as u128 * vl[i] as u128 + carry;
+                carry = p >> 64;
+                let sub = ul[j + i] as i128 - (p as u64) as i128 + borrow;
+                ul[j + i] = sub as u64; // wraps correctly
+                borrow = sub >> 64; // arithmetic shift: 0 or -1
+            }
+            let sub = ul[j + n] as i128 - carry as i128 + borrow;
+            ul[j + n] = sub as u64;
+            let went_negative = sub < 0;
+
+            // D5/D6: if we overshot (prob ~2/2^64), add back one v.
+            if went_negative {
+                qhat -= 1;
+                let mut carry = 0u128;
+                for i in 0..n {
+                    let s = ul[j + i] as u128 + vl[i] as u128 + carry;
+                    ul[j + i] = s as u64;
+                    carry = s >> 64;
+                }
+                ul[j + n] = ul[j + n].wrapping_add(carry as u64);
+            }
+            q[j] = qhat;
+        }
+
+        // D8: denormalize the remainder.
+        let r = Self::from_limbs(ul[..n].to_vec()).shr_bits(shift);
+        (Self::from_limbs(q), r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng64};
+
+    fn rand128(rng: &mut Pcg64) -> u128 {
+        (rng.next_u64() as u128) << 64 | rng.next_u64() as u128
+    }
+
+    #[test]
+    fn divrem_matches_u128() {
+        let mut rng = Pcg64::seed_from_u64(20);
+        for _ in 0..1000 {
+            let a = rand128(&mut rng);
+            let b = rand128(&mut rng) >> (rng.u64_below(120) as usize);
+            if b == 0 {
+                continue;
+            }
+            let (q, r) = BigUint::from_u128(a).divrem(&BigUint::from_u128(b));
+            assert_eq!(q.to_u128(), Some(a / b), "a={a:x} b={b:x}");
+            assert_eq!(r.to_u128(), Some(a % b));
+        }
+    }
+
+    #[test]
+    fn divrem_u64_path() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        for _ in 0..500 {
+            let a = rand128(&mut rng);
+            let b = rng.next_u64() | 1;
+            let (q, r) = BigUint::from_u128(a).divrem(&BigUint::from_u64(b));
+            assert_eq!(q.to_u128(), Some(a / b as u128));
+            assert_eq!(r.to_u64(), Some((a % b as u128) as u64));
+        }
+    }
+
+    #[test]
+    fn reconstruction_property_large() {
+        // a == q*b + r and r < b, across many operand sizes
+        let mut rng = Pcg64::seed_from_u64(22);
+        for (abits, bbits) in [
+            (256usize, 128usize),
+            (1024, 512),
+            (2048, 1024),
+            (2049, 2048),
+            (4096, 2048),
+            (300, 300),
+            (512, 65),
+        ] {
+            for _ in 0..10 {
+                let a = BigUint::random_bits(&mut rng, abits);
+                let b = BigUint::random_bits(&mut rng, bbits);
+                let (q, r) = a.divrem(&b);
+                assert!(r < b, "remainder not reduced");
+                assert_eq!(q.mul(&b).add(&r), a, "a != q*b+r ({abits},{bbits})");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_cases() {
+        let a = BigUint::from_hex("ffffffffffffffffffffffffffffffff");
+        assert_eq!(a.divrem(&a), (BigUint::one(), BigUint::zero()));
+        assert_eq!(
+            BigUint::one().divrem(&a),
+            (BigUint::zero(), BigUint::one())
+        );
+        assert_eq!(
+            BigUint::zero().divrem(&a),
+            (BigUint::zero(), BigUint::zero())
+        );
+        // divisor with top limb needing max normalization shift
+        let b = BigUint::from_hex("10000000000000001");
+        let (q, r) = a.divrem(&b);
+        assert_eq!(q.mul(&b).add(&r), a);
+        assert!(r < b);
+    }
+
+    #[test]
+    fn add_back_branch_is_reachable_and_correct() {
+        // Constructed case known to trigger D6 (from Hacker's Delight):
+        // dividend 0x7fff_8000_0000_0000_0000_0001, divisor 0x8000_0000_0000_0001
+        let a = BigUint::from_hex("7fff800000000000800000000000000000000001");
+        let b = BigUint::from_hex("800000000000000080000000000000001");
+        let (q, r) = a.divrem(&b);
+        assert_eq!(q.mul(&b).add(&r), a);
+        assert!(r < b);
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn div_by_zero_panics() {
+        let _ = BigUint::one().divrem(&BigUint::zero());
+    }
+}

@@ -1,0 +1,25 @@
+//! From-scratch arbitrary-precision unsigned integers.
+//!
+//! The vendored crate set has no `num-bigint`, and SPNN-HE (Algorithm 3)
+//! needs 2048-bit modular arithmetic for Paillier. This module implements
+//! exactly what the cryptosystem requires, with algorithm choices sized to
+//! the 1024–2048-bit operands involved:
+//!
+//! * little-endian `u64` limbs ([`BigUint`]), schoolbook + Karatsuba
+//!   multiplication,
+//! * Knuth Algorithm D division ([`div`]),
+//! * Montgomery-form modular exponentiation ([`monty`]) for odd moduli
+//!   (Paillier's `n` and `n^2` are odd by construction),
+//! * extended-Euclid modular inverse and binary GCD ([`modular`]),
+//! * Miller–Rabin primality and random prime generation ([`prime`]).
+
+mod biguint;
+mod div;
+mod modular;
+mod monty;
+mod prime;
+
+pub use biguint::BigUint;
+pub use modular::{gcd, lcm, modinv};
+pub use monty::{modpow, Montgomery};
+pub use prime::{gen_prime, is_prime};

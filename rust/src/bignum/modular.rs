@@ -1,0 +1,198 @@
+//! GCD / LCM / modular inverse on [`BigUint`].
+
+use super::BigUint;
+
+/// Binary GCD (Stein's algorithm) — avoids division entirely.
+pub fn gcd(a: &BigUint, b: &BigUint) -> BigUint {
+    if a.is_zero() {
+        return b.clone();
+    }
+    if b.is_zero() {
+        return a.clone();
+    }
+    let mut a = a.clone();
+    let mut b = b.clone();
+    // factor out common powers of two
+    let tz = |x: &BigUint| -> usize {
+        let mut n = 0;
+        for &l in &x.limbs {
+            if l == 0 {
+                n += 64;
+            } else {
+                n += l.trailing_zeros() as usize;
+                break;
+            }
+        }
+        n
+    };
+    let shift = tz(&a).min(tz(&b));
+    a = a.shr_bits(tz(&a));
+    loop {
+        b = b.shr_bits(tz(&b));
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+        }
+        b = b.sub(&a);
+        if b.is_zero() {
+            return a.shl_bits(shift);
+        }
+    }
+}
+
+/// Least common multiple: `a*b / gcd(a,b)`.
+pub fn lcm(a: &BigUint, b: &BigUint) -> BigUint {
+    if a.is_zero() || b.is_zero() {
+        return BigUint::zero();
+    }
+    a.div(&gcd(a, b)).mul(b)
+}
+
+/// Modular inverse `a^-1 mod m` via the extended Euclidean algorithm.
+/// Returns `None` when `gcd(a, m) != 1`.
+///
+/// The Bézout coefficients alternate sign deterministically, so we track
+/// magnitudes plus a sign flag instead of implementing signed bignums.
+pub fn modinv(a: &BigUint, m: &BigUint) -> Option<BigUint> {
+    if m.is_zero() || m.is_one() {
+        return None;
+    }
+    let a = a.rem(m);
+    if a.is_zero() {
+        return None;
+    }
+    // Iterative extended Euclid on (r0, r1), coefficients (t0, t1) with signs.
+    let mut r0 = m.clone();
+    let mut r1 = a;
+    let mut t0 = (BigUint::zero(), false); // (magnitude, negative?)
+    let mut t1 = (BigUint::one(), false);
+    while !r1.is_zero() {
+        let (q, r2) = r0.divrem(&r1);
+        // t2 = t0 - q * t1 with sign tracking
+        let qt1 = q.mul(&t1.0);
+        let t2 = sub_signed(&t0, &(qt1, t1.1));
+        r0 = r1;
+        r1 = r2;
+        t0 = t1;
+        t1 = t2;
+    }
+    if !r0.is_one() {
+        return None; // not coprime
+    }
+    let (mag, neg) = t0;
+    let mag = mag.rem(m);
+    Some(if neg && !mag.is_zero() { m.sub(&mag) } else { mag })
+}
+
+/// `x - y` on sign-magnitude pairs.
+fn sub_signed(x: &(BigUint, bool), y: &(BigUint, bool)) -> (BigUint, bool) {
+    match (x.1, y.1) {
+        // x - y, same "positive": ordinary signed subtract
+        (false, false) => {
+            if x.0 >= y.0 {
+                (x.0.sub(&y.0), false)
+            } else {
+                (y.0.sub(&x.0), true)
+            }
+        }
+        // (-x) - (-y) = y - x
+        (true, true) => {
+            if y.0 >= x.0 {
+                (y.0.sub(&x.0), false)
+            } else {
+                (x.0.sub(&y.0), true)
+            }
+        }
+        // x - (-y) = x + y
+        (false, true) => (x.0.add(&y.0), false),
+        // (-x) - y = -(x + y)
+        (true, false) => (x.0.add(&y.0), true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gcd_u128(mut a: u128, mut b: u128) -> u128 {
+        while b != 0 {
+            let t = a % b;
+            a = b;
+            b = t;
+        }
+        a
+    }
+
+    #[test]
+    fn gcd_matches_u128() {
+        let mut rng = Pcg64::seed_from_u64(30);
+        for _ in 0..300 {
+            let a = crate::rng::Rng64::next_u64(&mut rng) as u128;
+            let b = crate::rng::Rng64::next_u64(&mut rng) as u128;
+            let g = gcd(&BigUint::from_u128(a), &BigUint::from_u128(b));
+            assert_eq!(g.to_u128(), Some(gcd_u128(a, b)));
+        }
+    }
+
+    #[test]
+    fn gcd_properties() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let a = BigUint::random_bits(&mut rng, 400);
+        let b = BigUint::random_bits(&mut rng, 300);
+        let g = gcd(&a, &b);
+        assert!(a.rem(&g).is_zero());
+        assert!(b.rem(&g).is_zero());
+        assert_eq!(gcd(&a, &b), gcd(&b, &a));
+        assert_eq!(gcd(&a, &BigUint::zero()), a);
+        // gcd(ka, kb) = k gcd(a,b)
+        let k = BigUint::from_u64(12345);
+        assert_eq!(gcd(&a.mul(&k), &b.mul(&k)), g.mul(&k));
+    }
+
+    #[test]
+    fn lcm_relation() {
+        let mut rng = Pcg64::seed_from_u64(32);
+        let a = BigUint::random_bits(&mut rng, 200);
+        let b = BigUint::random_bits(&mut rng, 180);
+        // lcm * gcd == a * b
+        assert_eq!(lcm(&a, &b).mul(&gcd(&a, &b)), a.mul(&b));
+    }
+
+    #[test]
+    fn modinv_small_known() {
+        // 3^-1 mod 7 = 5
+        assert_eq!(
+            modinv(&BigUint::from_u64(3), &BigUint::from_u64(7)),
+            Some(BigUint::from_u64(5))
+        );
+        // even numbers not invertible mod even modulus
+        assert_eq!(modinv(&BigUint::from_u64(4), &BigUint::from_u64(8)), None);
+        assert_eq!(modinv(&BigUint::zero(), &BigUint::from_u64(7)), None);
+    }
+
+    #[test]
+    fn modinv_property_large() {
+        let mut rng = Pcg64::seed_from_u64(33);
+        // odd modulus so random values are usually coprime
+        let mut m = BigUint::random_bits(&mut rng, 512);
+        if m.is_even() {
+            m = m.add_u64(1);
+        }
+        let mut ok = 0;
+        for _ in 0..20 {
+            let a = BigUint::random_below(&mut rng, &m);
+            if let Some(inv) = modinv(&a, &m) {
+                assert!(inv < m);
+                assert!(a.mul(&inv).rem(&m).is_one(), "a*inv != 1 mod m");
+                ok += 1;
+            }
+        }
+        assert!(ok >= 15, "too many non-invertible draws: {ok}");
+    }
+
+    #[test]
+    fn modinv_of_one_is_one() {
+        let m = BigUint::from_hex("ffffffffffffffffffffffff61");
+        assert_eq!(modinv(&BigUint::one(), &m), Some(BigUint::one()));
+    }
+}

@@ -1,0 +1,289 @@
+//! Montgomery-form modular arithmetic and exponentiation.
+//!
+//! Paillier spends essentially all of its time in `modpow` over `n` (CRT
+//! decryption) and `n^2` (encryption); both moduli are odd, which is all
+//! Montgomery reduction needs. CIOS (coarsely integrated operand scanning)
+//! multiplication keeps everything in one pass over the limbs.
+
+use super::{modinv, BigUint};
+
+/// Precomputed Montgomery context for an odd modulus.
+pub struct Montgomery {
+    /// The modulus `m` (odd).
+    pub m: BigUint,
+    /// Limb count of `m`.
+    n: usize,
+    /// `-m^-1 mod 2^64` (the CIOS per-limb factor).
+    m_inv_neg: u64,
+    /// `R^2 mod m` where `R = 2^(64n)` — converts into Montgomery form.
+    r2: BigUint,
+}
+
+impl Montgomery {
+    pub fn new(m: &BigUint) -> Self {
+        assert!(!m.is_even() && !m.is_zero(), "Montgomery needs odd modulus");
+        let n = m.limbs.len();
+        // m^-1 mod 2^64 by Newton iteration (5 steps suffice for 64 bits)
+        let m0 = m.limbs[0];
+        let mut inv = m0; // correct mod 2^3 already for odd m0
+        for _ in 0..5 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(m0.wrapping_mul(inv)));
+        }
+        debug_assert_eq!(m0.wrapping_mul(inv), 1);
+        let m_inv_neg = inv.wrapping_neg();
+        // R^2 mod m via shifting (R = 2^(64n))
+        let r2 = BigUint::one().shl_bits(2 * 64 * n).rem(m);
+        Montgomery { m: m.clone(), n, m_inv_neg, r2 }
+    }
+
+    /// CIOS Montgomery multiplication: returns `a * b * R^-1 mod m`
+    /// for inputs in Montgomery form (each `< m`, padded to n limbs).
+    fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let n = self.n;
+        let m = &self.m.limbs;
+        let mut t = vec![0u64; n + 2];
+        for i in 0..n {
+            // t += a[i] * b
+            let mut carry = 0u128;
+            let ai = a[i] as u128;
+            for j in 0..n {
+                let cur = t[j] as u128 + ai * b[j] as u128 + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[n] as u128 + carry;
+            t[n] = cur as u64;
+            t[n + 1] = (cur >> 64) as u64;
+
+            // u = t[0] * m' mod 2^64; t += u * m; t >>= 64
+            let u = t[0].wrapping_mul(self.m_inv_neg) as u128;
+            let mut carry = (t[0] as u128 + u * m[0] as u128) >> 64;
+            for j in 1..n {
+                let cur = t[j] as u128 + u * m[j] as u128 + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[n] as u128 + carry;
+            t[n - 1] = cur as u64;
+            t[n] = t[n + 1] + ((cur >> 64) as u64);
+            t[n + 1] = 0;
+        }
+        t.truncate(n + 1);
+        // conditional subtract m
+        if t[n] != 0 || ge(&t[..n], m) {
+            sub_in_place(&mut t, m);
+        }
+        t.truncate(n);
+        t
+    }
+
+    fn to_mont(&self, a: &BigUint) -> Vec<u64> {
+        let mut al = a.rem(&self.m).limbs;
+        al.resize(self.n, 0);
+        let mut r2 = self.r2.limbs.clone();
+        r2.resize(self.n, 0);
+        self.mont_mul(&al, &r2)
+    }
+
+    fn from_mont(&self, a: &[u64]) -> BigUint {
+        let mut one = vec![0u64; self.n];
+        one[0] = 1;
+        BigUint::from_limbs(self.mont_mul(a, &one))
+    }
+
+    /// `base^exp mod m` (left-to-right square-and-multiply in Montgomery
+    /// form). Not constant-time — the threat model is semi-honest, no
+    /// side-channel adversary (DESIGN.md §7).
+    pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&self.m);
+        }
+        let bm = self.to_mont(base);
+        let mut acc = self.to_mont(&BigUint::one());
+        for i in (0..exp.bits()).rev() {
+            acc = self.mont_mul(&acc, &acc);
+            if exp.bit(i) {
+                acc = self.mont_mul(&acc, &bm);
+            }
+        }
+        self.from_mont(&acc)
+    }
+
+    /// Modular multiplication through Montgomery form.
+    pub fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
+        let am = self.to_mont(a);
+        let bm = self.to_mont(b);
+        self.from_mont(&self.mont_mul(&am, &bm))
+    }
+}
+
+fn ge(a: &[u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    for i in (0..a.len()).rev() {
+        if a[i] != b[i] {
+            return a[i] > b[i];
+        }
+    }
+    true
+}
+
+fn sub_in_place(a: &mut [u64], b: &[u64]) {
+    let mut borrow = 0u64;
+    for i in 0..b.len() {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    if borrow > 0 {
+        a[b.len()] = a[b.len()].wrapping_sub(borrow);
+    }
+}
+
+/// One-shot `base^exp mod m` for odd `m` (builds a context). For even
+/// moduli falls back to simple square-and-multiply with `divrem` reduction.
+pub fn modpow(base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
+    assert!(!m.is_zero(), "modpow modulus 0");
+    if m.is_one() {
+        return BigUint::zero();
+    }
+    if !m.is_even() {
+        return Montgomery::new(m).pow(base, exp);
+    }
+    // generic fallback (rare in this codebase)
+    let mut acc = BigUint::one();
+    let mut b = base.rem(m);
+    for i in 0..exp.bits() {
+        if exp.bit(i) {
+            acc = acc.mul(&b).rem(m);
+        }
+        b = b.square().rem(m);
+    }
+    acc
+}
+
+/// Modular inverse convenience re-export used by Paillier.
+pub fn inv_mod(a: &BigUint, m: &BigUint) -> Option<BigUint> {
+    modinv(a, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng64};
+
+    fn modpow_u128(mut b: u128, mut e: u128, m: u128) -> u128 {
+        // schoolbook for oracle, 64-bit operands only (products fit u128)
+        let mut acc = 1u128 % m;
+        b %= m;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc * b % m;
+            }
+            b = b * b % m;
+            e >>= 1;
+        }
+        acc
+    }
+
+    #[test]
+    fn matches_u128_oracle() {
+        let mut rng = Pcg64::seed_from_u64(40);
+        for _ in 0..200 {
+            let m = (rng.next_u64() | 1) as u128; // odd
+            if m <= 2 {
+                continue;
+            }
+            let b = rng.next_u64() as u128;
+            let e = rng.next_u64() as u128;
+            let got = modpow(
+                &BigUint::from_u128(b),
+                &BigUint::from_u128(e),
+                &BigUint::from_u128(m),
+            );
+            assert_eq!(got.to_u128(), Some(modpow_u128(b, e, m)));
+        }
+    }
+
+    #[test]
+    fn fermat_little_theorem() {
+        // a^(p-1) ≡ 1 mod p for prime p
+        let p = BigUint::from_hex("ffffffffffffffc5"); // largest 64-bit prime
+        let mut rng = Pcg64::seed_from_u64(41);
+        for _ in 0..20 {
+            let a = BigUint::from_u64(rng.next_u64() % 0xffff_ffff_ffff_ffc4 + 1);
+            assert!(modpow(&a, &p.sub_u64(1), &p).is_one());
+        }
+    }
+
+    #[test]
+    fn large_operand_algebra() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let mut m = BigUint::random_bits(&mut rng, 1024);
+        if m.is_even() {
+            m = m.add_u64(1);
+        }
+        let mont = Montgomery::new(&m);
+        let a = BigUint::random_below(&mut rng, &m);
+        let b = BigUint::random_below(&mut rng, &m);
+        // mont.mul == naive mul+rem
+        assert_eq!(mont.mul(&a, &b), a.mul(&b).rem(&m));
+        // (a^x)^y == a^(x*y)
+        let x = BigUint::from_u64(rng.next_u64() % 1000 + 2);
+        let y = BigUint::from_u64(rng.next_u64() % 1000 + 2);
+        assert_eq!(
+            mont.pow(&mont.pow(&a, &x), &y),
+            mont.pow(&a, &x.mul(&y))
+        );
+        // a^x * a^y == a^(x+y)
+        assert_eq!(
+            mont.mul(&mont.pow(&a, &x), &mont.pow(&a, &y)),
+            mont.pow(&a, &x.add(&y))
+        );
+    }
+
+    #[test]
+    fn exponent_edge_cases() {
+        let m = BigUint::from_u64(101);
+        let a = BigUint::from_u64(7);
+        assert!(modpow(&a, &BigUint::zero(), &m).is_one());
+        assert_eq!(modpow(&a, &BigUint::one(), &m), a);
+        assert_eq!(modpow(&BigUint::zero(), &BigUint::from_u64(5), &m), BigUint::zero());
+        assert_eq!(modpow(&a, &BigUint::from_u64(3), &BigUint::one()), BigUint::zero());
+    }
+
+    #[test]
+    fn even_modulus_fallback() {
+        let mut rng = Pcg64::seed_from_u64(43);
+        for _ in 0..100 {
+            let m = ((rng.next_u64() >> 32) as u128) & !1;
+            if m < 4 {
+                continue;
+            }
+            let b = rng.next_u64() as u128 % m;
+            let e = rng.next_u64() as u128 % 1000;
+            let got = modpow(
+                &BigUint::from_u128(b),
+                &BigUint::from_u128(e),
+                &BigUint::from_u128(m),
+            );
+            assert_eq!(got.to_u128(), Some(modpow_u128(b, e, m)));
+        }
+    }
+
+    #[test]
+    fn mont_against_paillier_shaped_modulus() {
+        // n^2 for a 512-bit n — the exact shape SPNN-HE exercises
+        let mut rng = Pcg64::seed_from_u64(44);
+        let n = BigUint::random_bits(&mut rng, 512).add_u64(1); // make odd-ish
+        let n = if n.is_even() { n.add_u64(1) } else { n };
+        let n2 = n.square();
+        let mont = Montgomery::new(&n2);
+        let g = n.add_u64(1); // Paillier's g = n+1
+        let x = BigUint::random_below(&mut rng, &n);
+        // (1+n)^x = 1 + n*x mod n^2 (binomial identity used by Paillier)
+        let got = mont.pow(&g, &x);
+        let want = n.mul(&x).add_u64(1).rem(&n2);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,214 @@
+//! Primality testing (Miller–Rabin) and random prime generation, used by
+//! Paillier key generation.
+
+use super::{BigUint, Montgomery};
+use crate::rng::Rng64;
+
+/// Trial-division primes (all 168 primes < 1000), sieved once.
+fn small_primes() -> &'static [u64] {
+    static PRIMES: std::sync::OnceLock<Vec<u64>> = std::sync::OnceLock::new();
+    PRIMES.get_or_init(|| {
+        let mut sieve = vec![true; 1000];
+        sieve[0] = false;
+        sieve[1] = false;
+        for i in 2..1000usize {
+            if sieve[i] {
+                let mut j = i * i;
+                while j < 1000 {
+                    sieve[j] = false;
+                    j += i;
+                }
+            }
+        }
+        sieve
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p)
+            .map(|(i, _)| i as u64)
+            .collect()
+    })
+}
+
+/// Deterministic Miller–Rabin witness set, valid for all n < 3.3e24
+/// (covers every u64/u128-scale candidate); for larger n these act as 12
+/// strong pseudo-random bases with error < 4^-12, and we add extra random
+/// bases in [`is_prime_rounds`].
+const MR_BASES: [u64; 12] = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37];
+
+fn mr_witness(n: &BigUint, mont: &Montgomery, d: &BigUint, s: usize, a: u64) -> bool {
+    // returns true if `a` PROVES n composite
+    let a = BigUint::from_u64(a);
+    if a.rem(n).is_zero() {
+        return false;
+    }
+    let mut x = mont.pow(&a, d);
+    let n_minus_1 = n.sub_u64(1);
+    if x.is_one() || x == n_minus_1 {
+        return false;
+    }
+    for _ in 1..s {
+        x = mont.mul(&x, &x);
+        if x == n_minus_1 {
+            return false;
+        }
+        if x.is_one() {
+            return true; // nontrivial sqrt of 1
+        }
+    }
+    true
+}
+
+/// Miller–Rabin with the deterministic base set plus `extra` random bases.
+pub fn is_prime_rounds<R: Rng64>(n: &BigUint, rng: &mut R, extra: usize) -> bool {
+    if n.is_zero() || n.is_one() {
+        return false;
+    }
+    if let Some(v) = n.to_u64() {
+        if v < 1000 {
+            return small_primes().contains(&v);
+        }
+    }
+    for &p in small_primes() {
+        if n.rem(&BigUint::from_u64(p)).is_zero() {
+            return n.to_u64() == Some(p);
+        }
+    }
+    // n-1 = d * 2^s
+    let n_minus_1 = n.sub_u64(1);
+    let mut s = 0usize;
+    let mut d = n_minus_1.clone();
+    while d.is_even() {
+        d = d.shr_bits(1);
+        s += 1;
+    }
+    let mont = Montgomery::new(n);
+    for &a in &MR_BASES {
+        if mr_witness(n, &mont, &d, s, a) {
+            return false;
+        }
+    }
+    for _ in 0..extra {
+        let a = rng.next_u64() | 2; // >= 2
+        if mr_witness(n, &mont, &d, s, a) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Primality test with default confidence (deterministic set + 8 random
+/// bases ⇒ error < 4^-20 for adversarial inputs, none exist here).
+pub fn is_prime<R: Rng64>(n: &BigUint, rng: &mut R) -> bool {
+    is_prime_rounds(n, rng, 8)
+}
+
+/// Generate a random prime with exactly `bits` bits.
+pub fn gen_prime<R: Rng64>(rng: &mut R, bits: usize) -> BigUint {
+    assert!(bits >= 8, "gen_prime: need >= 8 bits");
+    loop {
+        let mut cand = BigUint::random_bits(rng, bits);
+        if cand.is_even() {
+            cand = cand.add_u64(1);
+            if cand.bits() != bits {
+                continue;
+            }
+        }
+        // incremental search in a window keeps the candidate fresh
+        for _ in 0..64 {
+            if cand.bits() != bits {
+                break;
+            }
+            if is_prime(&cand, rng) {
+                return cand;
+            }
+            cand = cand.add_u64(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn is_prime_u64_naive(n: u64) -> bool {
+        if n < 2 {
+            return false;
+        }
+        let mut i = 2u64;
+        while i * i <= n {
+            if n % i == 0 {
+                return false;
+            }
+            i += 1;
+        }
+        true
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Pcg64::seed_from_u64(50);
+        for n in 0u64..2000 {
+            assert_eq!(
+                is_prime(&BigUint::from_u64(n), &mut rng),
+                is_prime_u64_naive(n),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_random_u32() {
+        let mut rng = Pcg64::seed_from_u64(51);
+        for _ in 0..300 {
+            let n = rng.next_u64() >> 40; // ~24-bit
+            assert_eq!(
+                is_prime(&BigUint::from_u64(n), &mut rng),
+                is_prime_u64_naive(n),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn known_primes_and_composites() {
+        let mut rng = Pcg64::seed_from_u64(52);
+        // 2^61 - 1 is a Mersenne prime
+        let m61 = BigUint::from_u64((1u64 << 61) - 1);
+        assert!(is_prime(&m61, &mut rng));
+        // 2^67 - 1 = 193707721 × 761838257287 (famously composite)
+        let m67 = BigUint::from_hex("7ffffffffffffffff");
+        assert!(!is_prime(&m67, &mut rng));
+        // Carmichael number 561 = 3·11·17 must be caught
+        assert!(!is_prime(&BigUint::from_u64(561), &mut rng));
+        // large Carmichael: 101101
+        assert!(!is_prime(&BigUint::from_u64(101101), &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_is_prime_with_exact_bits() {
+        let mut rng = Pcg64::seed_from_u64(53);
+        for bits in [32usize, 64, 128, 256] {
+            let p = gen_prime(&mut rng, bits);
+            assert_eq!(p.bits(), bits);
+            assert!(is_prime(&p, &mut rng));
+            assert!(!p.is_even());
+        }
+    }
+
+    #[test]
+    fn gen_primes_are_distinct() {
+        let mut rng = Pcg64::seed_from_u64(54);
+        let a = gen_prime(&mut rng, 128);
+        let b = gen_prime(&mut rng, 128);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn product_of_two_primes_is_composite() {
+        let mut rng = Pcg64::seed_from_u64(55);
+        let p = gen_prime(&mut rng, 96);
+        let q = gen_prime(&mut rng, 96);
+        assert!(!is_prime(&p.mul(&q), &mut rng));
+    }
+}

@@ -1,0 +1,177 @@
+//! Central configuration: dataset/network hyper-parameters (paper §6.1)
+//! and experiment defaults. Mirrors `python/compile/model.py::CONFIGS` —
+//! the two must agree or the artifact shapes will not match.
+
+/// Activation kinds used by the server stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Sigmoid,
+    Relu,
+    Identity,
+}
+
+/// One dataset + network configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Dataset key (artifact name component).
+    pub name: &'static str,
+    /// Total input features across all holders.
+    pub n_features: usize,
+    /// First-hidden-layer width (computed by the holders under crypto).
+    pub h1_dim: usize,
+    /// Server-side hidden widths.
+    pub server_dims: &'static [usize],
+    /// Server-side activations (same length as `server_dims`).
+    pub server_acts: &'static [Act],
+    /// Activation the server applies to the received `h1`.
+    pub first_act: Act,
+    /// Learning rate (paper §6.1).
+    pub lr: f64,
+}
+
+/// Paper configuration for the fraud-detection dataset:
+/// MLP 28 -> 8 -> 8 -> 1, sigmoid, lr 0.001.
+pub const FRAUD: ModelConfig = ModelConfig {
+    name: "fraud",
+    n_features: 28,
+    h1_dim: 8,
+    server_dims: &[8],
+    server_acts: &[Act::Sigmoid],
+    first_act: Act::Sigmoid,
+    lr: 0.001,
+};
+
+/// Paper configuration for the financial-distress dataset:
+/// MLP 556 -> 400 -> 16 -> 8 -> 1, sigmoid hidden + relu last, lr 0.006.
+pub const DISTRESS: ModelConfig = ModelConfig {
+    name: "distress",
+    n_features: 556,
+    h1_dim: 400,
+    server_dims: &[16, 8],
+    server_acts: &[Act::Sigmoid, Act::Relu],
+    first_act: Act::Sigmoid,
+    lr: 0.006,
+};
+
+/// Batch sizes with AOT artifacts (must mirror `model.BATCH_SIZES`).
+pub const BATCH_SIZES: &[usize] = &[256, 512, 1024, 2048, 5000];
+
+impl ModelConfig {
+    pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+        match name {
+            "fraud" => Some(&FRAUD),
+            "distress" => Some(&DISTRESS),
+            _ => None,
+        }
+    }
+
+    /// Final hidden width (`hL` — what the server sends the label holder).
+    pub fn hl_dim(&self) -> usize {
+        *self.server_dims.last().unwrap()
+    }
+
+    /// Server parameter shapes, in artifact argument order: (W, b) pairs.
+    pub fn server_param_shapes(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.h1_dim];
+        dims.extend_from_slice(self.server_dims);
+        let mut out = Vec::new();
+        for win in dims.windows(2) {
+            out.push((win[0], win[1]));
+            out.push((win[1], 0)); // bias marker: cols=0 means (len,) vector
+        }
+        out
+    }
+
+    /// Total number of server parameter tensors (weights + biases).
+    pub fn n_server_params(&self) -> usize {
+        2 * self.server_dims.len()
+    }
+
+    /// Artifact base name for a graph kind at a batch size.
+    pub fn artifact(&self, kind: &str, batch: usize) -> String {
+        format!("{kind}_{}_b{batch}", self.name)
+    }
+
+    /// Pick the smallest AOT batch size >= `n` (or the largest available).
+    pub fn pick_batch(n: usize) -> usize {
+        for &b in BATCH_SIZES {
+            if n <= b {
+                return b;
+            }
+        }
+        *BATCH_SIZES.last().unwrap()
+    }
+}
+
+/// Training-run options shared by all protocols.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Number of epochs.
+    pub epochs: usize,
+    /// Use SGLD (gradient noise) instead of plain SGD.
+    pub sgld: bool,
+    /// RNG seed for initialization / batching / noise.
+    pub seed: u64,
+    /// Learning-rate override (None = paper value from [`ModelConfig`]).
+    pub lr_override: Option<f64>,
+    /// Paillier modulus bits (SPNN-HE).
+    pub paillier_bits: usize,
+    /// Use DJN short-exponent encryption randomness.
+    pub paillier_short_exp: bool,
+    /// SGLD noise-scale override (None = lr-matched tempering).
+    pub sgld_noise: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch: 1024,
+            epochs: 3,
+            sgld: false,
+            seed: 7,
+            lr_override: None,
+            paillier_bits: 1024,
+            paillier_short_exp: true,
+            sgld_noise: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_mirror_python_configs() {
+        assert_eq!(FRAUD.n_features, 28);
+        assert_eq!(FRAUD.h1_dim, 8);
+        assert_eq!(FRAUD.hl_dim(), 8);
+        assert_eq!(FRAUD.n_server_params(), 2);
+        assert_eq!(DISTRESS.n_features, 556);
+        assert_eq!(DISTRESS.hl_dim(), 8);
+        assert_eq!(DISTRESS.n_server_params(), 4);
+        assert_eq!(
+            DISTRESS.server_param_shapes(),
+            vec![(400, 16), (16, 0), (16, 8), (8, 0)]
+        );
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        assert_eq!(FRAUD.artifact("server_fwd", 256), "server_fwd_fraud_b256");
+        assert_eq!(
+            DISTRESS.artifact("ring_matmul", 5000),
+            "ring_matmul_distress_b5000"
+        );
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        assert_eq!(ModelConfig::pick_batch(1), 256);
+        assert_eq!(ModelConfig::pick_batch(256), 256);
+        assert_eq!(ModelConfig::pick_batch(257), 512);
+        assert_eq!(ModelConfig::pick_batch(99999), 5000);
+    }
+}

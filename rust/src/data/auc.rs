@@ -1,0 +1,96 @@
+//! Area under the ROC curve (the paper's metric, §6.1), computed by the
+//! rank statistic (Mann–Whitney U) with midrank tie handling.
+
+/// AUC of `scores` against binary `labels` (1.0 = positive).
+///
+/// Returns 0.5 when either class is empty (undefined AUC).
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+
+    // midranks over ties
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = (0..n).filter(|&i| labels[i] > 0.5).map(|i| ranks[i]).sum();
+    let u = rank_sum - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng64};
+
+    #[test]
+    fn perfect_and_inverted_classifiers() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&scores, &labels), 1.0);
+        let inv = [0.9f32, 0.8, 0.2, 0.1];
+        assert_eq!(auc(&inv, &labels), 0.0);
+    }
+
+    #[test]
+    fn random_scores_near_half() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f64_unit() as f32).collect();
+        let labels: Vec<f32> = (0..n).map(|_| (rng.next_u64() & 1) as f32).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc {a}");
+    }
+
+    #[test]
+    fn matches_brute_force_pair_counting() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let n = 200;
+        let scores: Vec<f32> = (0..n).map(|_| (rng.f64_unit() * 10.0).round() as f32 / 10.0).collect();
+        let labels: Vec<f32> = (0..n).map(|_| (rng.next_u64() % 4 == 0) as u64 as f32).collect();
+        // brute force: P(score_pos > score_neg) + 0.5 P(equal)
+        let (mut wins, mut ties, mut pairs) = (0f64, 0f64, 0f64);
+        for i in 0..n {
+            if labels[i] < 0.5 {
+                continue;
+            }
+            for j in 0..n {
+                if labels[j] > 0.5 {
+                    continue;
+                }
+                pairs += 1.0;
+                if scores[i] > scores[j] {
+                    wins += 1.0;
+                } else if scores[i] == scores[j] {
+                    ties += 1.0;
+                }
+            }
+        }
+        let want = (wins + 0.5 * ties) / pairs;
+        let got = auc(&scores, &labels);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(auc(&[0.3, 0.4], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[0.3, 0.4], &[0.0, 0.0]), 0.5);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dataset container, train/test split, vertical partitioning, batching.
+
+use crate::rng::{Pcg64, Rng64};
+
+/// Row-major feature matrix + binary labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n_features: usize,
+    /// `n x d`, row-major.
+    pub x: Vec<f32>,
+    /// `n` binary labels.
+    pub y: Vec<f32>,
+}
+
+/// One mini-batch padded to a static artifact batch size.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Padded to `cap` rows; padding rows are zero.
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    /// 1.0 for real rows, 0.0 for padding.
+    pub mask: Vec<f32>,
+    /// Real (unpadded) row count.
+    pub rows: usize,
+    /// Padded row count (the artifact's static batch).
+    pub cap: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Shuffled split into train/test by fraction.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        rng.shuffle(&mut idx);
+        let n_train = (n as f64 * train_frac).round() as usize;
+        let take = |ids: &[usize]| -> Dataset {
+            let mut x = Vec::with_capacity(ids.len() * self.n_features);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset { n_features: self.n_features, x, y }
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// Keep the first `frac` of rows (Fig 9b/c data-size sweeps).
+    pub fn subset_frac(&self, frac: f64) -> Dataset {
+        let keep = ((self.len() as f64) * frac).round() as usize;
+        Dataset {
+            n_features: self.n_features,
+            x: self.x[..keep * self.n_features].to_vec(),
+            y: self.y[..keep].to_vec(),
+        }
+    }
+
+    /// Mini-batches of `batch` rows, each padded to `cap` rows with a mask.
+    pub fn batches(&self, batch: usize, cap: usize) -> Vec<Batch> {
+        assert!(batch <= cap, "batch {batch} exceeds artifact cap {cap}");
+        let d = self.n_features;
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.len() {
+            let rows = batch.min(self.len() - start);
+            let mut x = vec![0.0f32; cap * d];
+            let mut y = vec![0.0f32; cap];
+            let mut mask = vec![0.0f32; cap];
+            x[..rows * d].copy_from_slice(&self.x[start * d..(start + rows) * d]);
+            y[..rows].copy_from_slice(&self.y[start..start + rows]);
+            for m in mask.iter_mut().take(rows) {
+                *m = 1.0;
+            }
+            out.push(Batch { x, y, mask, rows, cap });
+            start += rows;
+        }
+        out
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.5).count() as f64 / self.len() as f64
+    }
+}
+
+/// A vertical (feature-wise) partition of a dataset across `k` holders.
+///
+/// The paper assumes samples are pre-aligned by PSI (§3.1.1); synthetic data
+/// is aligned by construction. Holder 0 (`A`) additionally owns the labels.
+#[derive(Clone, Debug)]
+pub struct VerticalSplit {
+    /// Column ranges per holder: `[start, end)`.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl VerticalSplit {
+    /// Split `d` features into `k` near-equal contiguous ranges.
+    pub fn even(d: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= d, "bad split {k} of {d}");
+        let base = d / k;
+        let extra = d % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut start = 0;
+        for i in 0..k {
+            let w = base + usize::from(i < extra);
+            ranges.push((start, start + w));
+            start += w;
+        }
+        Self { ranges }
+    }
+
+    pub fn k(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Extract holder `i`'s feature block from a row-major matrix.
+    pub fn slice_x(&self, x: &[f32], d: usize, holder: usize) -> Vec<f32> {
+        let (s, e) = self.ranges[holder];
+        let rows = x.len() / d;
+        let w = e - s;
+        let mut out = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            out.extend_from_slice(&x[r * d + s..r * d + e]);
+        }
+        out
+    }
+
+    /// Holder `i`'s feature width.
+    pub fn width(&self, holder: usize) -> usize {
+        let (s, e) = self.ranges[holder];
+        e - s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, d: usize) -> Dataset {
+        Dataset {
+            n_features: d,
+            x: (0..n * d).map(|i| i as f32).collect(),
+            y: (0..n).map(|i| (i % 2) as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows_and_is_disjoint() {
+        let ds = toy(100, 3);
+        let (tr, te) = ds.split(0.8, 1);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        // all original first-column values present exactly once
+        let mut firsts: Vec<i64> = tr
+            .x
+            .chunks(3)
+            .chain(te.x.chunks(3))
+            .map(|r| r[0] as i64)
+            .collect();
+        firsts.sort_unstable();
+        assert_eq!(firsts, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batches_pad_and_mask() {
+        let ds = toy(10, 2);
+        let batches = ds.batches(4, 6);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].rows, 4);
+        assert_eq!(batches[2].rows, 2);
+        let last = &batches[2];
+        assert_eq!(last.mask[..2], [1.0, 1.0]);
+        assert_eq!(last.mask[2..], [0.0, 0.0, 0.0, 0.0]);
+        assert!(last.x[2 * 2..].iter().all(|&v| v == 0.0), "padding not zero");
+        // batch rows preserve data
+        assert_eq!(last.x[0], ds.x[8 * 2]);
+    }
+
+    #[test]
+    fn vertical_split_covers_all_columns() {
+        for (d, k) in [(28, 2), (28, 3), (28, 5), (556, 2), (7, 7)] {
+            let vs = VerticalSplit::even(d, k);
+            assert_eq!(vs.k(), k);
+            assert_eq!(vs.ranges[0].0, 0);
+            assert_eq!(vs.ranges[k - 1].1, d);
+            let total: usize = (0..k).map(|i| vs.width(i)).sum();
+            assert_eq!(total, d);
+            // widths differ by at most 1
+            let ws: Vec<usize> = (0..k).map(|i| vs.width(i)).collect();
+            assert!(ws.iter().max().unwrap() - ws.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn slice_x_extracts_columns() {
+        let ds = toy(3, 4);
+        let vs = VerticalSplit::even(4, 2);
+        let xa = vs.slice_x(&ds.x, 4, 0);
+        let xb = vs.slice_x(&ds.x, 4, 1);
+        assert_eq!(xa, vec![0.0, 1.0, 4.0, 5.0, 8.0, 9.0]);
+        assert_eq!(xb, vec![2.0, 3.0, 6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn subset_frac_truncates() {
+        let ds = toy(10, 2);
+        let s = ds.subset_frac(0.3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.x.len(), 6);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+/// Unified error for all SPNN subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (artifact load, compile, execute).
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Artifact registry problems (missing artifact, signature mismatch).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Protocol-level violations (share mismatch, wrong phase, bad message).
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    /// Cryptographic failures (key generation, decryption, range checks).
+    #[error("crypto: {0}")]
+    Crypto(String),
+
+    /// Simulated-network failures (disconnected channel, unknown party).
+    #[error("netsim: {0}")]
+    Net(String),
+
+    /// Configuration / CLI errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Dataset / shape errors.
+    #[error("data: {0}")]
+    Data(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,51 @@
+//! Figure 5: AUC vs number of data holders (2..5) on fraud. Paper: SPNN and
+//! SecureML stay flat (crypto preserves cross-holder interactions); SplitNN
+//! declines as each holder's private encoder sees fewer features.
+
+use super::report::{fmt_auc, md_table};
+use super::ExpOpts;
+use crate::config::{TrainConfig, FRAUD};
+use crate::data::{synth_fraud, SynthOpts};
+use crate::netsim::LinkSpec;
+use crate::protocols;
+use crate::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let ds = synth_fraud(SynthOpts {
+        rows: opts.size(10_000, 1_200),
+        seed: opts.seed,
+        pos_boost: 20.0,
+    });
+    let (train, test) = ds.split(0.8, opts.seed);
+    let ks: Vec<usize> = if opts.quick { vec![2, 3] } else { vec![2, 3, 4, 5] };
+    let mut rows = Vec::new();
+    for &k in &ks {
+        let mut row = vec![format!("{k} holders")];
+        for proto in ["splitnn", "secureml", "spnn-ss"] {
+            let epochs = if opts.quick {
+                1
+            } else if proto == "secureml" {
+                3
+            } else {
+                10
+            };
+            let tc = TrainConfig {
+                batch: 1024,
+                epochs,
+                lr_override: Some(0.25),
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let t = protocols::by_name(proto).unwrap();
+            let rep = t.train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, k)?;
+            eprintln!("  k={k} {}", rep.summary());
+            row.push(fmt_auc(rep.auc));
+        }
+        rows.push(row);
+    }
+    Ok(md_table(
+        "Figure 5 — AUC vs number of data holders, fraud (paper: SplitNN declines, SecureML/SPNN flat)",
+        &["k", "SplitNN", "SecureML", "SPNN"],
+        &rows,
+    ))
+}

@@ -1,0 +1,104 @@
+//! Figure 8: SPNN-SS vs SPNN-HE epoch time across bandwidths
+//! (100 Kbps .. 100 Mbps). Paper: SS wins at high bandwidth (cheap compute,
+//! heavy wire), HE wins at very low bandwidth (heavy compute, light wire) —
+//! the crossover is the result.
+//!
+//! Method: each variant runs ONCE per dataset; the per-epoch time at other
+//! bandwidths is reconstructed as
+//! `t(bw) = t_compute + bytes*8/bw`, with `t_compute` solved from the
+//! measured run. This critical-path extrapolation is exact for SPNN's
+//! lock-step protocol (every byte crosses the bottleneck link serially) and
+//! avoids re-running the expensive HE epoch four times.
+
+use super::report::{fmt_secs, md_table};
+use super::ExpOpts;
+use crate::config::{TrainConfig, DISTRESS, FRAUD};
+use crate::data::{synth_distress, synth_fraud, Dataset, SynthOpts};
+use crate::netsim::LinkSpec;
+use crate::protocols::spnn::Spnn;
+use crate::protocols::Trainer;
+use crate::Result;
+
+const BANDWIDTH_LABELS: [&str; 4] = ["100Kbps", "1Mbps", "10Mbps", "100Mbps"];
+const BANDWIDTH_BPS: [f64; 4] = [1e5, 1e6, 1e7, 1e8];
+
+struct Measured {
+    compute_s: f64,
+    online_bytes: f64,
+    epochs: f64,
+}
+
+fn measure(
+    he: bool,
+    cfg: &'static crate::config::ModelConfig,
+    train: &Dataset,
+    test: &Dataset,
+    opts: &ExpOpts,
+    pbits: usize,
+) -> Result<Measured> {
+    let tc = TrainConfig {
+        batch: 1024,
+        epochs: 1,
+        seed: opts.seed,
+        paillier_bits: pbits,
+        ..Default::default()
+    };
+    let base = LinkSpec::mbps100();
+    let rep = Spnn { he }.train(cfg, &tc, base, train, test, 2)?;
+    eprintln!("  {}", rep.summary());
+    let bytes = rep.online_bytes as f64;
+    let t = rep.mean_epoch_time();
+    let compute = (t - bytes * 8.0 / base.bandwidth_bps).max(0.0);
+    Ok(Measured { compute_s: compute, online_bytes: bytes, epochs: 1.0 })
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let mut out = String::new();
+    // HE epochs are compute-heavy (b x h1 Paillier ops per batch); use a
+    // 512-bit modulus and smaller row counts, and report both variants on
+    // identical data so the comparison is apples-to-apples.
+    let pbits = if opts.quick { 256 } else { 512 };
+    let runs: [(&str, _, _, f64); 2] = [
+        (
+            "Figure 8 — SPNN-SS vs SPNN-HE epoch time vs bandwidth, fraud (seconds, simulated)",
+            &FRAUD,
+            synth_fraud(SynthOpts {
+                rows: opts.size(8_000, 600),
+                seed: opts.seed,
+                pos_boost: 10.0,
+            }),
+            0.8,
+        ),
+        (
+            "Figure 8 — SPNN-SS vs SPNN-HE epoch time vs bandwidth, distress (seconds, simulated)",
+            &DISTRESS,
+            synth_distress(SynthOpts {
+                rows: opts.size(1_200, 400),
+                seed: opts.seed + 1,
+                pos_boost: 2.0,
+            }),
+            0.7,
+        ),
+    ];
+    for (title, cfg, ds, frac) in runs {
+        let (train, test) = ds.split(frac, opts.seed);
+        let ss = measure(false, cfg, &train, &test, opts, pbits)?;
+        let he = measure(true, cfg, &train, &test, opts, pbits)?;
+        let mut rows = Vec::new();
+        for (label, bps) in BANDWIDTH_LABELS.iter().zip(BANDWIDTH_BPS) {
+            let t_ss = ss.compute_s + ss.online_bytes * 8.0 / bps;
+            let t_he = he.compute_s + he.online_bytes * 8.0 / bps;
+            rows.push(vec![label.to_string(), fmt_secs(t_ss), fmt_secs(t_he)]);
+        }
+        out.push_str(&md_table(title, &["bandwidth", "SPNN-SS", "SPNN-HE"], &rows));
+        out.push_str(&format!(
+            "SS: compute {:.2}s, {:.1} MB/epoch; HE: compute {:.2}s, {:.1} MB/epoch (Paillier {}-bit)\n\n",
+            ss.compute_s,
+            ss.online_bytes / 1e6,
+            he.compute_s,
+            he.online_bytes / 1e6,
+            pbits,
+        ));
+    }
+    Ok(out)
+}

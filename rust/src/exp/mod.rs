@@ -1,0 +1,82 @@
+//! Experiment drivers: one module per table/figure in the paper's
+//! evaluation (§6). Each returns a markdown section used by
+//! `spnn repro ...` and recorded in EXPERIMENTS.md.
+//!
+//! Wall-time note: this is a 1-core container; dataset sizes default to
+//! scaled-down-but-representative values (`ExpOpts::scale` grows them) and
+//! network timings are *simulated* (netsim virtual clocks), so the numbers
+//! to compare against the paper are orderings/ratios, not absolute seconds
+//! (DESIGN.md §5, §10).
+
+pub mod fig5;
+pub mod fig67;
+pub mod fig8;
+pub mod fig9;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::Result;
+
+/// Shared experiment options.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpOpts {
+    /// Multiplier on default dataset sizes / epochs.
+    pub scale: f64,
+    /// Quick mode: tiny sizes for tests and smoke benches.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { scale: 1.0, quick: false, seed: 7 }
+    }
+}
+
+impl ExpOpts {
+    pub fn quick() -> Self {
+        ExpOpts { quick: true, ..Default::default() }
+    }
+
+    /// Scaled size with a floor.
+    pub fn size(&self, base: usize, floor: usize) -> usize {
+        if self.quick {
+            return floor;
+        }
+        ((base as f64 * self.scale) as usize).max(floor)
+    }
+}
+
+/// Run every experiment, returning the combined markdown.
+pub fn run_all(opts: &ExpOpts) -> Result<String> {
+    let mut out = String::new();
+    for (name, f) in experiments() {
+        eprintln!("== running {name} ==");
+        let section = f(opts)?;
+        eprintln!("{section}");
+        out.push_str(&section);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+type ExpFn = fn(&ExpOpts) -> Result<String>;
+
+/// Registry of (name, driver).
+pub fn experiments() -> Vec<(&'static str, ExpFn)> {
+    vec![
+        ("table1", table1::run as ExpFn),
+        ("table2", table2::run as ExpFn),
+        ("table3", table3::run as ExpFn),
+        ("fig5", fig5::run as ExpFn),
+        ("fig67", fig67::run as ExpFn),
+        ("fig8", fig8::run as ExpFn),
+        ("fig9", fig9::run as ExpFn),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ExpFn> {
+    experiments().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f)
+}

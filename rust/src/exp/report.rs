@@ -1,0 +1,69 @@
+//! Markdown table rendering for experiment reports.
+
+/// Render a markdown table.
+pub fn md_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = format!("### {title}\n\n");
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+/// Format seconds adaptively.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.4}")
+    }
+}
+
+pub fn fmt_auc(a: f64) -> String {
+    format!("{a:.4}")
+}
+
+/// An (x, y) series rendered as a compact markdown row set.
+pub fn md_series(title: &str, xlabel: &str, series: &[(&str, Vec<(f64, f64)>)]) -> String {
+    let mut s = format!("### {title}\n\n");
+    // union of x values in order of first series
+    let xs: Vec<f64> = series
+        .first()
+        .map(|(_, pts)| pts.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    let mut headers = vec![xlabel.to_string()];
+    headers.extend(series.iter().map(|(n, _)| n.to_string()));
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for (i, x) in xs.iter().enumerate() {
+        let mut row = vec![format!("{x}")];
+        for (_, pts) in series {
+            row.push(pts.get(i).map(|p| fmt_secs(p.1)).unwrap_or_default());
+        }
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape() {
+        let t = md_table("T", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("### T"));
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(960.3), "960");
+        assert_eq!(fmt_secs(37.22), "37.22");
+        assert_eq!(fmt_secs(0.2152), "0.2152");
+    }
+}

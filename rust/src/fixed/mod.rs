@@ -1,0 +1,140 @@
+//! Fixed-point encoding over the ring `Z_{2^64}` (paper §3.3.2).
+//!
+//! Decimal values are embedded as two's-complement integers scaled by
+//! `2^FRAC_BITS` with `FRAC_BITS = l_F = 16` (the paper's choice). All MPC
+//! arithmetic then happens in the ring with natural wrap-around; after each
+//! fixed-point multiplication the extra `l_F` fractional bits are removed by
+//! the SecureML local-truncation trick (see [`smpc::trunc`](crate::smpc)).
+
+/// Number of fractional bits (`l_F` in the paper).
+pub const FRAC_BITS: u32 = 16;
+
+/// Scale factor `2^l_F`.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Encode a decimal into the ring (round-to-nearest).
+#[inline]
+pub fn encode(x: f64) -> u64 {
+    debug_assert!(
+        x.abs() < (1u64 << 46) as f64,
+        "fixed::encode overflow risk: {x}"
+    );
+    (x * SCALE).round() as i64 as u64
+}
+
+/// Decode a ring element back to a decimal (two's-complement).
+#[inline]
+pub fn decode(v: u64) -> f64 {
+    (v as i64) as f64 / SCALE
+}
+
+/// Decode a value carrying `2*l_F` fractional bits (a raw product that has
+/// not been truncated yet).
+#[inline]
+pub fn decode_wide(v: u64) -> f64 {
+    (v as i64) as f64 / (SCALE * SCALE)
+}
+
+/// Encode a slice.
+pub fn encode_vec(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|&x| encode(x)).collect()
+}
+
+/// Decode a slice.
+pub fn decode_vec(vs: &[u64]) -> Vec<f64> {
+    vs.iter().map(|&v| decode(v)).collect()
+}
+
+/// Truncate a *plaintext* ring value by `l_F` bits (arithmetic shift on the
+/// signed interpretation). The share-level version lives in `smpc::trunc`.
+#[inline]
+pub fn trunc_plain(v: u64) -> u64 {
+    ((v as i64) >> FRAC_BITS) as u64
+}
+
+/// Maximum decimal magnitude that survives one fixed-point multiply without
+/// wrapping: products carry 2*l_F fractional bits, so |x*y| must stay below
+/// 2^(63 - 2*l_F) in decimal terms.
+pub fn product_headroom() -> f64 {
+    ((1u128 << (63 - 2 * FRAC_BITS)) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng64};
+
+    #[test]
+    fn roundtrip_exact_for_representable() {
+        for x in [-3.5, 0.0, 1.0, 0.5, -0.25, 1000.125, -77.0625] {
+            assert_eq!(decode(encode(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_ulp() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..10_000 {
+            let x = (rng.f64_unit() - 0.5) * 2000.0;
+            let err = (decode(encode(x)) - x).abs();
+            assert!(err <= 0.5 / SCALE + 1e-12, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn negative_values_use_twos_complement() {
+        let v = encode(-1.0);
+        assert_eq!(v, (-(1i64 << FRAC_BITS)) as u64);
+        assert_eq!(decode(v), -1.0);
+    }
+
+    #[test]
+    fn addition_is_ring_addition() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for _ in 0..1000 {
+            let a = (rng.f64_unit() - 0.5) * 100.0;
+            let b = (rng.f64_unit() - 0.5) * 100.0;
+            let sum = decode(encode(a).wrapping_add(encode(b)));
+            assert!((sum - (a + b)).abs() < 2.0 / SCALE, "{a}+{b}={sum}");
+        }
+    }
+
+    #[test]
+    fn multiply_then_truncate() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..1000 {
+            let a = (rng.f64_unit() - 0.5) * 20.0;
+            let b = (rng.f64_unit() - 0.5) * 20.0;
+            let prod = encode(a).wrapping_mul(encode(b));
+            let got = decode(trunc_plain(prod));
+            // operand rounding propagates as |a|*0.5ulp + |b|*0.5ulp, plus
+            // one ulp from the truncation itself
+            let tol = (a.abs() + b.abs() + 2.0) * 0.5 / SCALE + 1.0 / SCALE;
+            assert!((got - a * b).abs() < tol, "{a}*{b}={got}");
+        }
+    }
+
+    #[test]
+    fn trunc_plain_matches_float_division() {
+        assert_eq!(decode(trunc_plain(encode(2.0).wrapping_mul(encode(3.0)))), 6.0);
+        let v = encode(-2.5).wrapping_mul(encode(4.0));
+        let dec = decode(trunc_plain(v));
+        assert!((dec - -10.0).abs() <= 1.0 / SCALE);
+    }
+
+    #[test]
+    fn wide_decode_sees_untruncated_products() {
+        let prod = encode(1.5).wrapping_mul(encode(2.0));
+        assert!((decode_wide(prod) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn headroom_is_sane() {
+        let h = product_headroom();
+        // values below the headroom multiply without wrapping
+        let x = h * 0.9;
+        let prod = encode(x).wrapping_mul(encode(x));
+        let dec = decode_wide(prod);
+        assert!((dec - x * x).abs() / (x * x) < 1e-3, "{dec} vs {}", x * x);
+    }
+}

@@ -1,0 +1,49 @@
+//! # SPNN — Scalable and Privacy-Preserving Deep Neural Network
+//!
+//! Rust + JAX + Pallas reproduction of *"Towards Scalable and
+//! Privacy-Preserving Deep Neural Network via Algorithmic-Cryptographic
+//! Co-design"* (Zhou, Zheng, Chen et al., ACM TIST 2021).
+//!
+//! The paper co-designs an algorithmic split of the DNN computation graph
+//! with cryptographic protocols: isolated data holders jointly compute the
+//! first hidden layer under **arithmetic secret sharing** (Algorithm 2) or
+//! **Paillier additive homomorphic encryption** (Algorithm 3); a semi-honest
+//! compute server runs the heavy plaintext hidden stack; the label holder
+//! computes predictions and the loss. Training uses SGD or SGLD (noise
+//! injection to blunt property-inference attacks on the exposed hidden
+//! features).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the decentralized coordinator: party actors
+//!   ([`parties`]), a deterministic network simulator ([`netsim`]), the MPC
+//!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack, the
+//!   PJRT [`runtime`] and the five training [`protocols`].
+//! * **Layer 2** — JAX graphs (`python/compile/model.py`), AOT-lowered to
+//!   `artifacts/*.hlo.txt` once by `make artifacts`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the blocked
+//!   `Z_{2^64}` ring matmul (Algorithm 2's hot spot) and the fused f32
+//!   dense layer used by the server stack.
+//!
+//! Python never runs on the training path: the rust binary loads the HLO
+//! artifacts at startup and drives everything else natively.
+
+pub mod attack;
+pub mod bench_harness;
+pub mod bignum;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod exp;
+pub mod fixed;
+pub mod netsim;
+pub mod nn;
+pub mod paillier;
+pub mod parties;
+pub mod protocols;
+pub mod rng;
+pub mod runtime;
+pub mod smpc;
+pub mod testutil;
+
+pub use error::{Error, Result};

@@ -1,0 +1,192 @@
+//! `spnn` — the SPNN coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train   — run one protocol end-to-end on a synthetic benchmark
+//!   repro   — regenerate one (or all) of the paper's tables/figures
+//!   attack  — run the Table 2 property-inference attack standalone
+//!   info    — list loaded AOT artifacts
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+
+use std::collections::HashMap;
+
+use spnn::attack::{property_attack, AttackOpts};
+use spnn::config::{ModelConfig, TrainConfig, DISTRESS, FRAUD};
+use spnn::data::{synth_distress, synth_fraud, SynthOpts};
+use spnn::exp::{self, ExpOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+use spnn::runtime::Engine;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "repro" => cmd_repro(&args[1..], &flags),
+        "attack" => cmd_attack(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "spnn — Scalable and Privacy-Preserving DNN (TIST 2021 reproduction)
+
+USAGE:
+  spnn train  [--protocol nn|splitnn|secureml|spnn-ss|spnn-he]
+              [--dataset fraud|distress] [--rows N] [--epochs E]
+              [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
+              [--paillier-bits N] [--seed S]
+  spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
+              [--scale F] [--quick] [--out FILE]
+  spnn attack [--rows N] [--epochs E] [--seed S]
+  spnn info
+"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let proto = flags.get("protocol").map(|s| s.as_str()).unwrap_or("spnn-ss");
+    let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("fraud");
+    let cfg: &ModelConfig = ModelConfig::by_name(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?;
+    let rows = flag(flags, "rows", if dataset == "fraud" { 12_000 } else { 3_672 });
+    let seed = flag(flags, "seed", 7u64);
+    let ds = if dataset == "fraud" {
+        synth_fraud(SynthOpts { rows, seed, pos_boost: 10.0 })
+    } else {
+        synth_distress(SynthOpts { rows, seed, pos_boost: 2.0 })
+    };
+    let (train, test) = ds.split(if dataset == "fraud" { 0.8 } else { 0.7 }, seed);
+    let tc = TrainConfig {
+        batch: flag(flags, "batch", 1024),
+        epochs: flag(flags, "epochs", 3),
+        sgld: flags.contains_key("sgld"),
+        seed,
+        lr_override: flags.get("lr").and_then(|v| v.parse().ok()),
+        paillier_bits: flag(flags, "paillier-bits", 1024),
+        paillier_short_exp: true,
+        sgld_noise: None,
+    };
+    let spec = LinkSpec::from_mbps(flag(flags, "mbps", 100.0));
+    let holders = flag(flags, "holders", 2usize);
+    let trainer = protocols::by_name(proto)
+        .ok_or_else(|| anyhow::anyhow!("unknown protocol {proto:?}"))?;
+    eprintln!(
+        "training {proto} on {dataset} ({} train / {} test rows, {} holders)",
+        train.len(),
+        test.len(),
+        holders
+    );
+    let rep = trainer.train(cfg, &tc, spec, &train, &test, holders)?;
+    println!("{}", rep.summary());
+    println!("train losses: {:?}", rep.train_losses);
+    println!("epoch times (sim s): {:?}", rep.epoch_times);
+    Ok(())
+}
+
+fn cmd_repro(args: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let which = args
+        .iter()
+        .find(|a| !a.starts_with("--") && a.parse::<f64>().is_err())
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ExpOpts {
+        scale: flag(flags, "scale", 1.0),
+        quick: flags.contains_key("quick"),
+        seed: flag(flags, "seed", 7u64),
+    };
+    let md = if which == "all" {
+        exp::run_all(&opts)?
+    } else {
+        let f = exp::by_name(which)
+            .ok_or_else(|| anyhow::anyhow!("unknown experiment {which:?}"))?;
+        f(&opts)?
+    };
+    println!("{md}");
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, &md)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_attack(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let opts = AttackOpts {
+        rows: flag(flags, "rows", 16_000),
+        epochs: flag(flags, "epochs", 6),
+        seed: flag(flags, "seed", 11u64),
+        noise: flags.get("noise").and_then(|v| v.parse().ok()),
+    };
+    for sgld in [false, true] {
+        let r = property_attack(sgld, &opts)?;
+        println!(
+            "{:>4}: task AUC {:.4}  attack AUC {:.4}",
+            r.optimizer, r.task_auc, r.attack_auc
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let engine = Engine::load_default()?;
+    let m = engine.manifest();
+    println!("{} artifacts loaded:", m.len());
+    let mut names: Vec<&String> = m.entries.keys().collect();
+    names.sort();
+    for n in names {
+        let e = &m.entries[n];
+        println!("  {n}: {} inputs, {} outputs", e.inputs.len(), e.outputs.len());
+    }
+    println!("configs: {} / {}", FRAUD.name, DISTRESS.name);
+    Ok(())
+}

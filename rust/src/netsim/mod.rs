@@ -1,0 +1,214 @@
+//! Deterministic network simulator for the decentralized SPNN runtime.
+//!
+//! The paper's experiments (§6.4) sweep the network bandwidth from 100 Kbps
+//! to 100 Mbps across machines; this environment is a single host, so the
+//! parties talk over in-process channels and the simulator models the wire:
+//!
+//! * every message is **byte-accounted** from its payload type,
+//! * each party carries a **virtual clock** (Lamport-style): wall-clock time
+//!   between its netsim calls is accumulated as compute time, and a received
+//!   message forwards the clock to
+//!   `max(local, sender_depart + latency + bytes/bandwidth)`,
+//! * per-link statistics (bytes, messages, per [`Phase`]) feed the
+//!   experiment reports.
+//!
+//! Offline-phase traffic (trusted-dealer triples — the standard MPC
+//! offline/online split, SecureML §IV) is byte-counted but does not delay
+//! the online clock; Table 3 / Fig 8 report online epoch time, and the
+//! offline bytes are reported separately by the benches.
+
+mod payload;
+mod port;
+mod stats;
+
+pub use payload::Payload;
+pub use port::{Msg, NetPort};
+pub use stats::NetStats;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Party identifier within one simulated deployment.
+pub type PartyId = usize;
+
+/// Link characteristics applied to every edge of the mesh.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    /// The paper's default experiment setting: 100 Mbps.
+    pub fn mbps100() -> Self {
+        Self::from_mbps(100.0)
+    }
+
+    /// Local-area network (Fig 9a setting): 1 Gbps, 1 ms one-way.
+    pub fn lan() -> Self {
+        LinkSpec { bandwidth_bps: 1e9, latency_s: 0.001 }
+    }
+
+    pub fn from_mbps(mbps: f64) -> Self {
+        LinkSpec { bandwidth_bps: mbps * 1e6, latency_s: 0.001 }
+    }
+
+    pub fn from_kbps(kbps: f64) -> Self {
+        LinkSpec { bandwidth_bps: kbps * 1e3, latency_s: 0.001 }
+    }
+
+    /// Seconds to push `bytes` through the link (excluding latency).
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Message phase for accounting (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Input-independent preprocessing (dealer triples, key setup).
+    Offline,
+    /// The per-iteration critical path.
+    Online,
+}
+
+/// Build a full mesh of simulated links between `names.len()` parties.
+///
+/// Returns one [`NetPort`] per party (move each into its thread) and the
+/// shared [`NetStats`].
+pub fn full_mesh(names: &[&str], spec: LinkSpec) -> (Vec<NetPort>, Arc<NetStats>) {
+    let n = names.len();
+    let stats = Arc::new(NetStats::new(names));
+    // channel per ordered pair (i -> j)
+    let mut txs: Vec<HashMap<PartyId, mpsc::Sender<Msg>>> =
+        (0..n).map(|_| HashMap::new()).collect();
+    let mut rxs: Vec<HashMap<PartyId, mpsc::Receiver<Msg>>> =
+        (0..n).map(|_| HashMap::new()).collect();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            txs[i].insert(j, tx);
+            rxs[j].insert(i, rx);
+        }
+    }
+    let ports = txs
+        .into_iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(id, (tx, rx))| NetPort::new(id, names[id], spec, tx, rx, stats.clone()))
+        .collect();
+    (ports, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_math() {
+        let s = LinkSpec::from_mbps(100.0);
+        // 12.5 MB at 100 Mbps = 1 s
+        assert!((s.transfer_time(12_500_000) - 1.0).abs() < 1e-9);
+        let k = LinkSpec::from_kbps(100.0);
+        assert!((k.transfer_time(12_500) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mesh_roundtrip_and_byte_accounting() {
+        let (mut ports, stats) = full_mesh(&["A", "B"], LinkSpec::lan());
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let p = b.recv(0).unwrap();
+            match p {
+                Payload::U64s(v) => {
+                    assert_eq!(v, vec![1, 2, 3]);
+                    b.send(0, Payload::F32s(vec![9.0])).unwrap();
+                }
+                _ => panic!("wrong payload"),
+            }
+            b
+        });
+        a.send(1, Payload::U64s(vec![1, 2, 3])).unwrap();
+        match a.recv(1).unwrap() {
+            Payload::F32s(v) => assert_eq!(v, vec![9.0]),
+            _ => panic!("wrong payload"),
+        }
+        let mut b = h.join().unwrap();
+        // bytes: 3*8 + header one way, 4 + header the other
+        let sent_ab = stats.bytes_between(0, 1);
+        let sent_ba = stats.bytes_between(1, 0);
+        assert_eq!(sent_ab, 24 + Payload::HEADER_BYTES);
+        assert_eq!(sent_ba, 4 + Payload::HEADER_BYTES);
+        assert!(a.now() > 0.0 && b.now() > 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_includes_bandwidth_delay() {
+        // 1 MB at 1 Mbps = 8 s simulated, instant in wall time
+        let spec = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 };
+        let (mut ports, _stats) = full_mesh(&["A", "B"], spec);
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            a.send(1, Payload::U64s(vec![0u64; 125_000])).unwrap();
+            a
+        });
+        b.recv(0).unwrap();
+        let _ = h.join().unwrap();
+        assert!(b.now() >= 8.0, "clock {} missing transfer delay", b.now());
+        assert!(b.now() < 9.0, "clock {} wildly over", b.now());
+    }
+
+    #[test]
+    fn offline_phase_skips_clock_delay() {
+        let spec = LinkSpec { bandwidth_bps: 1e3, latency_s: 0.0 }; // 1 kbps!
+        let (mut ports, stats) = full_mesh(&["A", "B"], spec);
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            a.send_phase(1, Payload::U64s(vec![0u64; 10_000]), Phase::Offline)
+                .unwrap();
+            a
+        });
+        b.recv(0).unwrap();
+        h.join().unwrap();
+        assert!(b.now() < 1.0, "offline message delayed the online clock");
+        assert!(stats.bytes_phase(Phase::Offline) > 10_000);
+        assert_eq!(stats.bytes_phase(Phase::Online), 0);
+    }
+
+    #[test]
+    fn latency_counts_once_per_message() {
+        let spec = LinkSpec { bandwidth_bps: 1e12, latency_s: 0.5 };
+        let (mut ports, _) = full_mesh(&["A", "B"], spec);
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            for _ in 0..4 {
+                a.send(1, Payload::U64s(vec![1])).unwrap();
+            }
+            a
+        });
+        for _ in 0..4 {
+            b.recv(0).unwrap();
+        }
+        h.join().unwrap();
+        // messages pipeline: sender stamps all ~immediately, each arrival is
+        // depart+0.5 — the clock lands near 0.5, NOT 2.0
+        assert!(b.now() >= 0.5 && b.now() < 0.7, "clock {}", b.now());
+    }
+
+    #[test]
+    fn unknown_peer_errors() {
+        let (mut ports, _) = full_mesh(&["A"], LinkSpec::lan());
+        let mut a = ports.pop().unwrap();
+        assert!(a.send(5, Payload::U64s(vec![])).is_err());
+    }
+}

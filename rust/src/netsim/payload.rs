@@ -1,0 +1,152 @@
+//! Typed message payloads with exact wire-size accounting.
+//!
+//! No serde offline, and no real serialization is needed (in-process
+//! channels move the data by ownership); the only thing the simulator needs
+//! is *how many bytes this would be on the wire*.
+
+/// Message payload variants used by the SPNN protocols.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Ring elements / secret shares (`Z_{2^64}`).
+    U64s(Vec<u64>),
+    /// Dense activations / gradients.
+    F32s(Vec<f32>),
+    /// High-precision values (label-holder loss, metrics).
+    F64s(Vec<f64>),
+    /// Paillier ciphertexts as little-endian byte strings.
+    Cipher(Vec<Vec<u8>>),
+    /// A 32-byte PRG seed (compressed correlated randomness).
+    Seed([u8; 32]),
+    /// Boolean-share bit-matrix packed 64/word (secureml comparison).
+    Bits(Vec<u64>),
+    /// Control messages (coordinator orders, acks).
+    Control(String),
+}
+
+impl Payload {
+    /// Fixed per-message framing overhead (type tag, lengths, routing) —
+    /// roughly a gRPC/HTTP2 frame header.
+    pub const HEADER_BYTES: usize = 16;
+
+    /// Payload bytes on the wire (excluding [`Self::HEADER_BYTES`]).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::U64s(v) => v.len() * 8,
+            Payload::F32s(v) => v.len() * 4,
+            Payload::F64s(v) => v.len() * 8,
+            Payload::Cipher(cs) => cs.iter().map(|c| c.len()).sum(),
+            Payload::Seed(_) => 32,
+            Payload::Bits(v) => v.len() * 8,
+            Payload::Control(s) => s.len(),
+        }
+    }
+
+    /// Total bytes including framing.
+    pub fn total_bytes(&self) -> usize {
+        self.wire_bytes() + Self::HEADER_BYTES
+    }
+
+    /// Helpers that unwrap a specific variant (protocol phase mismatches
+    /// are bugs, so these return protocol errors, not panics).
+    pub fn into_u64s(self) -> crate::Result<Vec<u64>> {
+        match self {
+            Payload::U64s(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected U64s, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_f32s(self) -> crate::Result<Vec<f32>> {
+        match self {
+            Payload::F32s(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected F32s, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_f64s(self) -> crate::Result<Vec<f64>> {
+        match self {
+            Payload::F64s(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected F64s, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_cipher(self) -> crate::Result<Vec<Vec<u8>>> {
+        match self {
+            Payload::Cipher(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected Cipher, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_seed(self) -> crate::Result<[u8; 32]> {
+        match self {
+            Payload::Seed(s) => Ok(s),
+            other => Err(crate::Error::Protocol(format!(
+                "expected Seed, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_bits(self) -> crate::Result<Vec<u64>> {
+        match self {
+            Payload::Bits(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected Bits, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_control(self) -> crate::Result<String> {
+        match self {
+            Payload::Control(s) => Ok(s),
+            other => Err(crate::Error::Protocol(format!(
+                "expected Control, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::U64s(_) => "U64s",
+            Payload::F32s(_) => "F32s",
+            Payload::F64s(_) => "F64s",
+            Payload::Cipher(_) => "Cipher",
+            Payload::Seed(_) => "Seed",
+            Payload::Bits(_) => "Bits",
+            Payload::Control(_) => "Control",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_per_variant() {
+        assert_eq!(Payload::U64s(vec![0; 10]).wire_bytes(), 80);
+        assert_eq!(Payload::F32s(vec![0.0; 10]).wire_bytes(), 40);
+        assert_eq!(Payload::F64s(vec![0.0; 10]).wire_bytes(), 80);
+        assert_eq!(Payload::Seed([0; 32]).wire_bytes(), 32);
+        assert_eq!(Payload::Bits(vec![0; 4]).wire_bytes(), 32);
+        assert_eq!(Payload::Control("go".into()).wire_bytes(), 2);
+        assert_eq!(
+            Payload::Cipher(vec![vec![0u8; 256], vec![0u8; 256]]).wire_bytes(),
+            512
+        );
+    }
+
+    #[test]
+    fn unwrap_helpers_enforce_variant() {
+        assert!(Payload::U64s(vec![1]).into_u64s().is_ok());
+        assert!(Payload::U64s(vec![1]).into_f32s().is_err());
+        assert!(Payload::Control("x".into()).into_control().is_ok());
+        assert!(Payload::Seed([1; 32]).into_seed().is_ok());
+    }
+}

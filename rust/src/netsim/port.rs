@@ -1,0 +1,145 @@
+//! Per-party network endpoint with a Lamport-style virtual clock.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{LinkSpec, NetStats, PartyId, Payload, Phase};
+use crate::{Error, Result};
+
+/// A message in flight.
+#[derive(Debug)]
+pub struct Msg {
+    pub from: PartyId,
+    pub payload: Payload,
+    /// Sender's virtual clock at departure.
+    pub depart: f64,
+    pub phase: Phase,
+}
+
+/// One party's connection to the simulated mesh.
+///
+/// Wall time elapsed between calls on this port is accounted as local
+/// compute and advances the virtual clock; receives forward the clock past
+/// the simulated wire delay. Deadlocks are caught by a receive timeout.
+pub struct NetPort {
+    pub id: PartyId,
+    pub name: String,
+    spec: LinkSpec,
+    txs: HashMap<PartyId, mpsc::Sender<Msg>>,
+    rxs: HashMap<PartyId, mpsc::Receiver<Msg>>,
+    stats: Arc<NetStats>,
+    now_s: f64,
+    last_wall: Instant,
+    recv_timeout: Duration,
+}
+
+impl NetPort {
+    pub(super) fn new(
+        id: PartyId,
+        name: &str,
+        spec: LinkSpec,
+        txs: HashMap<PartyId, mpsc::Sender<Msg>>,
+        rxs: HashMap<PartyId, mpsc::Receiver<Msg>>,
+        stats: Arc<NetStats>,
+    ) -> Self {
+        NetPort {
+            id,
+            name: name.to_string(),
+            spec,
+            txs,
+            rxs,
+            stats,
+            now_s: 0.0,
+            last_wall: Instant::now(),
+            recv_timeout: Duration::from_secs(600),
+        }
+    }
+
+    /// Accumulate wall time since the last netsim call as compute time.
+    fn absorb_compute(&mut self) {
+        let dt = self.last_wall.elapsed().as_secs_f64();
+        self.now_s += dt;
+        self.last_wall = Instant::now();
+    }
+
+    /// Current virtual time (compute + wire delays so far).
+    pub fn now(&mut self) -> f64 {
+        self.absorb_compute();
+        self.now_s
+    }
+
+    /// Manually advance the virtual clock (extrapolated compute sections).
+    pub fn advance(&mut self, dt: f64) {
+        self.absorb_compute();
+        self.now_s += dt;
+    }
+
+    /// Reset the clock (e.g. between timed epochs).
+    pub fn reset_clock(&mut self) {
+        self.now_s = 0.0;
+        self.last_wall = Instant::now();
+    }
+
+    /// Send `payload` to party `to` (online phase).
+    pub fn send(&mut self, to: PartyId, payload: Payload) -> Result<()> {
+        self.send_phase(to, payload, Phase::Online)
+    }
+
+    /// Send with explicit phase tag.
+    pub fn send_phase(&mut self, to: PartyId, payload: Payload, phase: Phase) -> Result<()> {
+        self.absorb_compute();
+        let bytes = payload.total_bytes();
+        self.stats.record(self.id, to, bytes, phase);
+        let msg = Msg { from: self.id, payload, depart: self.now_s, phase };
+        self.txs
+            .get(&to)
+            .ok_or_else(|| Error::Net(format!("{}: unknown peer {to}", self.name)))?
+            .send(msg)
+            .map_err(|_| Error::Net(format!("{}: peer {to} disconnected", self.name)))
+    }
+
+    /// Blocking receive from party `from`, advancing the virtual clock past
+    /// the message's simulated arrival time.
+    pub fn recv(&mut self, from: PartyId) -> Result<Payload> {
+        self.absorb_compute(); // compute up to the blocking point
+        let rx = self
+            .rxs
+            .get(&from)
+            .ok_or_else(|| Error::Net(format!("{}: unknown peer {from}", self.name)))?;
+        let msg = rx
+            .recv_timeout(self.recv_timeout)
+            .map_err(|e| Error::Net(format!("{}: recv from {from}: {e}", self.name)))?;
+        // blocked wall time is NOT compute; restart the wall anchor
+        self.last_wall = Instant::now();
+        if msg.phase == Phase::Online {
+            let arrival = msg.depart
+                + self.spec.latency_s
+                + self.spec.transfer_time(msg.payload.total_bytes());
+            self.now_s = self.now_s.max(arrival);
+        } else {
+            // offline traffic: causality only, no wire delay
+            self.now_s = self.now_s.max(msg.depart);
+        }
+        Ok(msg.payload)
+    }
+
+    /// Receive and assert the u64 variant (the most common case).
+    pub fn recv_u64s(&mut self, from: PartyId) -> Result<Vec<u64>> {
+        self.recv(from)?.into_u64s()
+    }
+
+    pub fn recv_f32s(&mut self, from: PartyId) -> Result<Vec<f32>> {
+        self.recv(from)?.into_f32s()
+    }
+
+    pub fn set_recv_timeout(&mut self, d: Duration) {
+        self.recv_timeout = d;
+    }
+
+    /// Link spec (for cost estimation in reports).
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+}

@@ -1,0 +1,136 @@
+//! Shared traffic statistics for a simulated deployment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{PartyId, Phase};
+
+/// Lock-free per-link byte/message counters.
+///
+/// Indexed `[from][to]`; phases tracked separately so experiments can report
+/// online vs offline traffic (SecureML-style accounting).
+#[derive(Debug)]
+pub struct NetStats {
+    names: Vec<String>,
+    n: usize,
+    bytes_online: Vec<AtomicU64>,
+    bytes_offline: Vec<AtomicU64>,
+    msgs_online: Vec<AtomicU64>,
+    msgs_offline: Vec<AtomicU64>,
+}
+
+impl NetStats {
+    pub fn new(names: &[&str]) -> Self {
+        let n = names.len();
+        let mk = || (0..n * n).map(|_| AtomicU64::new(0)).collect();
+        NetStats {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            n,
+            bytes_online: mk(),
+            bytes_offline: mk(),
+            msgs_online: mk(),
+            msgs_offline: mk(),
+        }
+    }
+
+    pub(super) fn record(&self, from: PartyId, to: PartyId, bytes: usize, phase: Phase) {
+        if from >= self.n || to >= self.n {
+            return; // send() will fail with unknown peer anyway
+        }
+        let idx = from * self.n + to;
+        let (b, m) = match phase {
+            Phase::Online => (&self.bytes_online, &self.msgs_online),
+            Phase::Offline => (&self.bytes_offline, &self.msgs_offline),
+        };
+        b[idx].fetch_add(bytes as u64, Ordering::Relaxed);
+        m[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total bytes from `a` to `b` (both phases).
+    pub fn bytes_between(&self, a: PartyId, b: PartyId) -> usize {
+        let idx = a * self.n + b;
+        (self.bytes_online[idx].load(Ordering::Relaxed)
+            + self.bytes_offline[idx].load(Ordering::Relaxed)) as usize
+    }
+
+    /// Total bytes in one phase across all links.
+    pub fn bytes_phase(&self, phase: Phase) -> usize {
+        let v = match phase {
+            Phase::Online => &self.bytes_online,
+            Phase::Offline => &self.bytes_offline,
+        };
+        v.iter().map(|a| a.load(Ordering::Relaxed)).sum::<u64>() as usize
+    }
+
+    /// Total messages in one phase.
+    pub fn msgs_phase(&self, phase: Phase) -> usize {
+        let v = match phase {
+            Phase::Online => &self.msgs_online,
+            Phase::Offline => &self.msgs_offline,
+        };
+        v.iter().map(|a| a.load(Ordering::Relaxed)).sum::<u64>() as usize
+    }
+
+    /// Grand total bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_phase(Phase::Online) + self.bytes_phase(Phase::Offline)
+    }
+
+    /// Reset all counters (between timed epochs).
+    pub fn reset(&self) {
+        for v in [
+            &self.bytes_online,
+            &self.bytes_offline,
+            &self.msgs_online,
+            &self.msgs_offline,
+        ] {
+            for a in v.iter() {
+                a.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Human-readable per-link traffic table.
+    pub fn report(&self) -> String {
+        let mut s = String::from("link traffic (online bytes / offline bytes):\n");
+        for a in 0..self.n {
+            for b in 0..self.n {
+                if a == b {
+                    continue;
+                }
+                let idx = a * self.n + b;
+                let on = self.bytes_online[idx].load(Ordering::Relaxed);
+                let off = self.bytes_offline[idx].load(Ordering::Relaxed);
+                if on + off > 0 {
+                    s.push_str(&format!(
+                        "  {} -> {}: {} / {}\n",
+                        self.names[a], self.names[b], on, off
+                    ));
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let s = NetStats::new(&["A", "B", "S"]);
+        s.record(0, 1, 100, Phase::Online);
+        s.record(0, 1, 50, Phase::Online);
+        s.record(1, 2, 7, Phase::Offline);
+        assert_eq!(s.bytes_between(0, 1), 150);
+        assert_eq!(s.bytes_between(1, 2), 7);
+        assert_eq!(s.bytes_between(2, 0), 0);
+        assert_eq!(s.bytes_phase(Phase::Online), 150);
+        assert_eq!(s.bytes_phase(Phase::Offline), 7);
+        assert_eq!(s.msgs_phase(Phase::Online), 2);
+        assert_eq!(s.total_bytes(), 157);
+        assert!(s.report().contains("A -> B"));
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

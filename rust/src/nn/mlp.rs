@@ -1,0 +1,258 @@
+//! Multi-layer perceptron with manual backprop.
+
+use super::loss::sigmoid;
+use super::MatF64;
+use crate::rng::Rng64;
+
+/// Layer activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Sigmoid,
+    Relu,
+    Tanh,
+}
+
+impl Activation {
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Activation::Identity => x,
+            Activation::Sigmoid => sigmoid(x),
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative expressed in terms of the activation *output*.
+    pub fn grad_from_output(&self, a: f64) -> f64 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Sigmoid => a * (1.0 - a),
+            Activation::Relu => f64::from(a > 0.0),
+            Activation::Tanh => 1.0 - a * a,
+        }
+    }
+}
+
+impl From<crate::config::Act> for Activation {
+    fn from(a: crate::config::Act) -> Self {
+        match a {
+            crate::config::Act::Sigmoid => Activation::Sigmoid,
+            crate::config::Act::Relu => Activation::Relu,
+            crate::config::Act::Identity => Activation::Identity,
+        }
+    }
+}
+
+/// Fully-connected network: `dims[0] -> dims[1] -> ... -> dims.last()`,
+/// one activation per layer. Bias per layer optional (SPNN's first layer
+/// has no bias to match `h1 = X·theta`).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub weights: Vec<MatF64>,
+    pub biases: Vec<Vec<f64>>, // empty vec = no bias for that layer
+    pub acts: Vec<Activation>,
+}
+
+/// Gradients with the same layout as [`Mlp`].
+#[derive(Clone, Debug)]
+pub struct MlpGrads {
+    pub d_weights: Vec<MatF64>,
+    pub d_biases: Vec<Vec<f64>>,
+    /// Gradient w.r.t. the network input (chained to upstream models).
+    pub d_input: MatF64,
+}
+
+impl Mlp {
+    /// Xavier-initialized network. `with_bias[i]` controls layer i's bias.
+    pub fn new<R: Rng64>(
+        rng: &mut R,
+        dims: &[usize],
+        acts: &[Activation],
+        with_bias: &[bool],
+    ) -> Self {
+        assert_eq!(dims.len() - 1, acts.len());
+        assert_eq!(acts.len(), with_bias.len());
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for (i, win) in dims.windows(2).enumerate() {
+            weights.push(MatF64::xavier(rng, win[0], win[1]));
+            biases.push(if with_bias[i] { vec![0.0; win[1]] } else { vec![] });
+        }
+        Mlp { weights, biases, acts: acts.to_vec() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Forward pass returning every layer's activation output (index 0 is
+    /// the input itself) for backprop.
+    pub fn forward_cached(&self, x: &MatF64) -> Vec<MatF64> {
+        let mut outs = Vec::with_capacity(self.n_layers() + 1);
+        outs.push(x.clone());
+        for l in 0..self.n_layers() {
+            let mut z = outs[l].matmul(&self.weights[l]);
+            if !self.biases[l].is_empty() {
+                z = z.add_bias(&self.biases[l]);
+            }
+            let act = self.acts[l];
+            outs.push(z.map(|v| act.apply(v)));
+        }
+        outs
+    }
+
+    /// Forward only (last activation).
+    pub fn forward(&self, x: &MatF64) -> MatF64 {
+        self.forward_cached(x).pop().unwrap()
+    }
+
+    /// Backprop from `d_out` (gradient w.r.t. the last activation output).
+    pub fn backward(&self, cache: &[MatF64], d_out: &MatF64) -> MlpGrads {
+        assert_eq!(cache.len(), self.n_layers() + 1);
+        let mut d_weights = vec![MatF64::zeros(0, 0); self.n_layers()];
+        let mut d_biases = vec![vec![]; self.n_layers()];
+        let mut delta = d_out.clone();
+        for l in (0..self.n_layers()).rev() {
+            let a = &cache[l + 1];
+            let act = self.acts[l];
+            // delta at pre-activation
+            let dz = delta.hadamard(&a.map(|v| act.grad_from_output(v)));
+            d_weights[l] = cache[l].transpose().matmul(&dz);
+            if !self.biases[l].is_empty() {
+                d_biases[l] = dz.col_sums();
+            }
+            delta = dz.matmul(&self.weights[l].transpose());
+        }
+        MlpGrads { d_weights, d_biases, d_input: delta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::{bce_with_logits, bce_with_logits_grad};
+    use crate::rng::Pcg64;
+
+    fn toy_net(seed: u64) -> Mlp {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Mlp::new(
+            &mut rng,
+            &[5, 4, 3, 1],
+            &[Activation::Sigmoid, Activation::Relu, Activation::Identity],
+            &[false, true, true],
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = toy_net(1);
+        let x = MatF64::zeros(7, 5);
+        let cache = net.forward_cached(&x);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache[1].shape(), (7, 4));
+        assert_eq!(cache[3].shape(), (7, 1));
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut net = toy_net(2);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let x = MatF64::gaussian(&mut rng, 6, 5, 1.0);
+        let y: Vec<f64> = (0..6).map(|i| f64::from(i % 2 == 0)).collect();
+        let mask = vec![1.0; 6];
+
+        let loss_of = |net: &Mlp| -> f64 {
+            let out = net.forward(&x);
+            bce_with_logits(&out.data, &y, &mask)
+        };
+
+        // analytic gradients
+        let cache = net.forward_cached(&x);
+        let logits = &cache[net.n_layers()];
+        let dlogit = bce_with_logits_grad(&logits.data, &y, &mask);
+        let grads = net.backward(&cache, &MatF64::from_data(6, 1, dlogit));
+
+        let eps = 1e-6;
+        // check a sample of weight entries in every layer
+        for l in 0..net.n_layers() {
+            for &idx in &[0usize, net.weights[l].data.len() / 2] {
+                let orig = net.weights[l].data[idx];
+                net.weights[l].data[idx] = orig + eps;
+                let lp = loss_of(&net);
+                net.weights[l].data[idx] = orig - eps;
+                let lm = loss_of(&net);
+                net.weights[l].data[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads.d_weights[l].data[idx];
+                assert!(
+                    (fd - an).abs() < 1e-5,
+                    "layer {l} idx {idx}: fd {fd} vs {an}"
+                );
+            }
+            if !net.biases[l].is_empty() {
+                let orig = net.biases[l][0];
+                net.biases[l][0] = orig + eps;
+                let lp = loss_of(&net);
+                net.biases[l][0] = orig - eps;
+                let lm = loss_of(&net);
+                net.biases[l][0] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!((fd - grads.d_biases[l][0]).abs() < 1e-5, "bias {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn d_input_matches_finite_differences() {
+        let net = toy_net(4);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut x = MatF64::gaussian(&mut rng, 3, 5, 1.0);
+        let y = vec![1.0, 0.0, 1.0];
+        let mask = vec![1.0; 3];
+        let cache = net.forward_cached(&x);
+        let logits = &cache[net.n_layers()];
+        let dlogit = bce_with_logits_grad(&logits.data, &y, &mask);
+        let grads = net.backward(&cache, &MatF64::from_data(3, 1, dlogit));
+        let eps = 1e-6;
+        for idx in [0usize, 7, 14] {
+            let orig = x.data[idx];
+            x.data[idx] = orig + eps;
+            let lp = bce_with_logits(&net.forward(&x).data, &y, &mask);
+            x.data[idx] = orig - eps;
+            let lm = bce_with_logits(&net.forward(&x).data, &y, &mask);
+            x.data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - grads.d_input.data[idx]).abs() < 1e-5, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn training_decreases_loss() {
+        let mut net = toy_net(6);
+        let mut rng = Pcg64::seed_from_u64(7);
+        let x = MatF64::gaussian(&mut rng, 64, 5, 1.0);
+        // separable labels
+        let y: Vec<f64> = (0..64).map(|i| f64::from(x.at(i, 0) + x.at(i, 1) > 0.0)).collect();
+        let mask = vec![1.0; 64];
+        let mut losses = vec![];
+        for _ in 0..200 {
+            let cache = net.forward_cached(&x);
+            let logits = &cache[net.n_layers()];
+            losses.push(bce_with_logits(&logits.data, &y, &mask));
+            let dlogit = bce_with_logits_grad(&logits.data, &y, &mask);
+            let grads = net.backward(&cache, &MatF64::from_data(64, 1, dlogit));
+            for l in 0..net.n_layers() {
+                net.weights[l] = net.weights[l].sub(&grads.d_weights[l].scale(2.0));
+                for (b, g) in net.biases[l].iter_mut().zip(&grads.d_biases[l]) {
+                    *b -= 2.0 * g;
+                }
+            }
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "{:?}",
+            &losses[..3]
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-rust reference neural network (f64).
+//!
+//! Three jobs:
+//! 1. the SplitNN baseline's *holder-side encoders* (each data holder trains
+//!    a private bottom network — tiny, so native rust is the right tool),
+//! 2. the logistic-regression attacker for the Table 2 property attack,
+//! 3. an independent correctness oracle for the PJRT/JAX pipeline.
+
+mod loss;
+mod mlp;
+mod optimizer;
+mod tensor;
+
+pub use loss::{bce_with_logits, bce_with_logits_grad};
+pub use mlp::{Activation, Mlp, MlpGrads};
+pub use optimizer::{Optimizer, Sgd, Sgld};
+pub use tensor::MatF64;

@@ -1,0 +1,175 @@
+//! Minimal row-major f64 matrix for the reference NN.
+
+use crate::rng::{NormalSampler, Rng64};
+
+/// Row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        MatF64 { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        MatF64 { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Xavier/Glorot-uniform initialization.
+    pub fn xavier<R: Rng64>(rng: &mut R, rows: usize, cols: usize) -> Self {
+        let limit = (6.0 / (rows + cols) as f64).sqrt();
+        let data = (0..rows * cols)
+            .map(|_| (rng.f64_unit() * 2.0 - 1.0) * limit)
+            .collect();
+        MatF64 { rows, cols, data }
+    }
+
+    /// Gaussian init with given std.
+    pub fn gaussian<R: Rng64>(rng: &mut R, rows: usize, cols: usize, std: f64) -> Self {
+        let mut ns = NormalSampler::new();
+        let data = (0..rows * cols).map(|_| ns.sample(rng) * std).collect();
+        MatF64 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        MatF64 { rows: m, cols: n, data: out }
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        MatF64 { rows: self.cols, cols: self.rows, data: out }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        MatF64 { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        MatF64 { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f64) -> Self {
+        MatF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_bias(&self, bias: &[f64]) -> Self {
+        assert_eq!(bias.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[r * self.cols + c] += bias[c];
+            }
+        }
+        out
+    }
+
+    /// Column sums (bias gradient).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c] += self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Self {
+        MatF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    pub fn hadamard(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        MatF64 { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = MatF64::from_data(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = MatF64::from_data(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_and_bias() {
+        let a = MatF64::from_data(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().data, vec![1., 4., 2., 5., 3., 6.]);
+        let ab = a.add_bias(&[10.0, 20.0, 30.0]);
+        assert_eq!(ab.data, vec![11., 22., 33., 14., 25., 36.]);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn xavier_scale_is_sane() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let m = MatF64::xavier(&mut rng, 100, 50);
+        let limit = (6.0f64 / 150.0).sqrt();
+        assert!(m.data.iter().all(|v| v.abs() <= limit));
+        let mean: f64 = m.data.iter().sum::<f64>() / m.data.len() as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+    }
+}

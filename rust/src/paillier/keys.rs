@@ -1,0 +1,238 @@
+//! Paillier key generation, encryption, decryption, homomorphic operators.
+
+use std::sync::Arc;
+
+use crate::bignum::{gen_prime, modinv, BigUint, Montgomery};
+use crate::rng::Rng64;
+
+use super::NoncePool;
+
+/// A Paillier ciphertext: an element of `Z_{n^2}^*`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ciphertext(pub BigUint);
+
+/// Public key. `g = n + 1` is implicit.
+#[derive(Clone)]
+pub struct PublicKey {
+    /// Modulus `n = p·q`.
+    pub n: BigUint,
+    /// `n^2` — the ciphertext modulus.
+    pub n2: BigUint,
+    /// Half of n (signed-embedding threshold).
+    pub half_n: BigUint,
+    /// Montgomery context for `n^2` (shared; contexts are immutable).
+    pub(crate) mont_n2: Arc<Montgomery>,
+}
+
+/// Secret key with CRT precomputation.
+#[derive(Clone)]
+pub struct SecretKey {
+    pub p: BigUint,
+    pub q: BigUint,
+    p2: BigUint,
+    q2: BigUint,
+    mont_p2: Arc<Montgomery>,
+    mont_q2: Arc<Montgomery>,
+    /// `h_p = L_p(g^{p-1} mod p^2)^{-1} mod p`
+    hp: BigUint,
+    hq: BigUint,
+    /// `q^{-1} mod p` for the CRT recombination.
+    q_inv_p: BigUint,
+    /// Copy of the public side for decode helpers.
+    pub pk: PublicKey,
+}
+
+/// Key pair.
+pub struct KeyPair {
+    pub pk: PublicKey,
+    pub sk: SecretKey,
+}
+
+/// Generate a Paillier keypair with an `n_bits` modulus.
+///
+/// `n_bits = 1024` is the experiments' default; tests use smaller. Primes
+/// are rejected until `gcd(pq, (p-1)(q-1)) = 1` holds (automatic for
+/// same-size primes) and `p != q`.
+pub fn keygen<R: Rng64>(rng: &mut R, n_bits: usize) -> KeyPair {
+    assert!(n_bits >= 64 && n_bits % 2 == 0, "keygen: bad n_bits {n_bits}");
+    loop {
+        let p = gen_prime(rng, n_bits / 2);
+        let q = gen_prime(rng, n_bits / 2);
+        if p == q {
+            continue;
+        }
+        let n = p.mul(&q);
+        if n.bits() != n_bits {
+            continue; // product came out one bit short
+        }
+        let n2 = n.square();
+        let pk = PublicKey {
+            half_n: n.shr_bits(1),
+            mont_n2: Arc::new(Montgomery::new(&n2)),
+            n2,
+            n,
+        };
+
+        // CRT precomputation. With g = n+1:
+        //   L_p(g^{p-1} mod p^2) = (g^{p-1} mod p^2 - 1)/p,  hp = its inverse mod p
+        let p2 = p.square();
+        let q2 = q.square();
+        let mont_p2 = Arc::new(Montgomery::new(&p2));
+        let mont_q2 = Arc::new(Montgomery::new(&q2));
+        let g = pk.n.add_u64(1);
+        let lp = l_func(&mont_p2.pow(&g, &p.sub_u64(1)), &p);
+        let lq = l_func(&mont_q2.pow(&g, &q.sub_u64(1)), &q);
+        let (hp, hq) = match (modinv(&lp, &p), modinv(&lq, &q)) {
+            (Some(a), Some(b)) => (a, b),
+            _ => continue, // pathological primes; retry
+        };
+        let q_inv_p = match modinv(&q, &p) {
+            Some(v) => v,
+            None => continue,
+        };
+        let sk = SecretKey {
+            p,
+            q,
+            p2,
+            q2,
+            mont_p2,
+            mont_q2,
+            hp,
+            hq,
+            q_inv_p,
+            pk: pk.clone(),
+        };
+        return KeyPair { pk, sk };
+    }
+}
+
+/// Paillier's `L(u) = (u - 1) / d` (exact division).
+fn l_func(u: &BigUint, d: &BigUint) -> BigUint {
+    u.sub_u64(1).div(d)
+}
+
+impl PublicKey {
+    /// Rebuild a public key from its modulus (what travels on the wire —
+    /// `g = n+1` is implicit, everything else is derived).
+    pub fn from_n(n: BigUint) -> Self {
+        let n2 = n.square();
+        PublicKey {
+            half_n: n.shr_bits(1),
+            mont_n2: Arc::new(Montgomery::new(&n2)),
+            n2,
+            n,
+        }
+    }
+
+    /// Encrypt with a fresh random nonce (`r^n` exponentiation inline).
+    pub fn encrypt<R: Rng64>(&self, m: &BigUint, rng: &mut R) -> Ciphertext {
+        let r = self.sample_unit(rng);
+        let rn = self.mont_n2.pow(&r, &self.n);
+        self.encrypt_with_rn(m, &rn)
+    }
+
+    /// Encrypt consuming a precomputed `r^n` from a [`NoncePool`]
+    /// — the hot-path entry point (zero exponentiations).
+    pub fn encrypt_with_pool(&self, m: &BigUint, pool: &mut NoncePool) -> Ciphertext {
+        let rn = pool.take();
+        self.encrypt_with_rn(m, &rn)
+    }
+
+    /// `c = (1 + m·n) · rn  mod n^2` (binomial shortcut for `g^m`).
+    pub(crate) fn encrypt_with_rn(&self, m: &BigUint, rn: &BigUint) -> Ciphertext {
+        debug_assert!(m < &self.n, "plaintext out of range");
+        let gm = m.mul(&self.n).add_u64(1).rem(&self.n2);
+        Ciphertext(self.mont_n2.mul(&gm, rn))
+    }
+
+    /// Sample `r` in `[1, n)` with `gcd(r, n) = 1` (whp for RSA-like n).
+    pub(crate) fn sample_unit<R: Rng64>(&self, rng: &mut R) -> BigUint {
+        loop {
+            let r = BigUint::random_below(rng, &self.n);
+            if !r.is_zero() {
+                return r;
+            }
+        }
+    }
+
+    /// Homomorphic addition: `Dec(add(a,b)) = Dec(a) + Dec(b) mod n`.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext(self.mont_n2.mul(&a.0, &b.0))
+    }
+
+    /// Add a plaintext constant: `c · g^k = c · (1 + k·n)`.
+    pub fn add_plain(&self, c: &Ciphertext, k: &BigUint) -> Ciphertext {
+        let gk = k.rem(&self.n).mul(&self.n).add_u64(1).rem(&self.n2);
+        Ciphertext(self.mont_n2.mul(&c.0, &gk))
+    }
+
+    /// Multiply the plaintext by a constant: `c^k`.
+    pub fn mul_plain(&self, c: &Ciphertext, k: &BigUint) -> Ciphertext {
+        Ciphertext(self.mont_n2.pow(&c.0, k))
+    }
+
+    /// Encode a signed value into `Z_n` (negative as `n - |v|`).
+    pub fn encode_i64(&self, v: i64) -> BigUint {
+        if v >= 0 {
+            BigUint::from_u64(v as u64)
+        } else {
+            self.n.sub(&BigUint::from_u64(v.unsigned_abs()))
+        }
+    }
+
+    /// Encrypt a signed 64-bit value (fixed-point ring element).
+    pub fn encrypt_i64<R: Rng64>(&self, v: i64, rng: &mut R) -> Ciphertext {
+        self.encrypt(&self.encode_i64(v), rng)
+    }
+
+    /// Encrypt a signed value using pool randomness.
+    pub fn encrypt_i64_with_pool(&self, v: i64, pool: &mut NoncePool) -> Ciphertext {
+        self.encrypt_with_rn(&self.encode_i64(v), &pool.take())
+    }
+
+    /// Wire size of one ciphertext (bytes) for network accounting.
+    pub fn ciphertext_bytes(&self) -> usize {
+        2 * self.n.bits().div_ceil(8)
+    }
+}
+
+impl SecretKey {
+    /// CRT decryption.
+    pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
+        // m_p = L_p(c^{p-1} mod p^2) · hp mod p
+        let cp = self.mont_p2.pow(&c.0.rem(&self.p2), &self.p.sub_u64(1));
+        let mp = l_func(&cp, &self.p).mul(&self.hp).rem(&self.p);
+        let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q.sub_u64(1));
+        let mq = l_func(&cq, &self.q).mul(&self.hq).rem(&self.q);
+        // CRT: m = mq + q * ((mp - mq) * q^{-1} mod p)
+        let diff = if mp >= mq {
+            mp.sub(&mq) // < p since mp < p
+        } else {
+            // (mp - mq) mod p for mp < mq
+            let d = mq.sub(&mp).rem(&self.p);
+            if d.is_zero() {
+                d
+            } else {
+                self.p.sub(&d)
+            }
+        };
+        let t = diff.mul(&self.q_inv_p).rem(&self.p);
+        mq.add(&t.mul(&self.q))
+    }
+
+    /// Decrypt into a signed value (inverse of [`PublicKey::encode_i64`]).
+    pub fn decrypt_i64(&self, c: &Ciphertext) -> i64 {
+        let m = self.decrypt(c);
+        if m > self.pk.half_n {
+            let mag = self.pk.n.sub(&m);
+            -(mag.to_u64().expect("signed magnitude too large") as i64)
+        } else {
+            m.to_u64().expect("magnitude too large") as i64
+        }
+    }
+
+    /// Decrypt into the `Z_{2^64}` ring (two's complement).
+    pub fn decrypt_ring(&self, c: &Ciphertext) -> u64 {
+        self.decrypt_i64(c) as u64
+    }
+}

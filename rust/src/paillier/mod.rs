@@ -1,0 +1,161 @@
+//! Paillier additively homomorphic encryption (paper §3.4, Algorithm 3).
+//!
+//! Implements the scheme exactly as SPNN-HE uses it: the *server* generates
+//! the keypair and distributes `pk` to the data holders; holders encrypt
+//! their partial first-layer products; ciphertexts are added homomorphically
+//! and only the final sum travels back to the server for decryption.
+//!
+//! Implementation notes:
+//! * `g = n + 1`, so encryption is `c = (1 + m·n) · r^n  mod n^2` — one
+//!   modular exponentiation (`r^n`) per ciphertext.
+//! * Decryption uses the standard CRT split over `p^2` / `q^2` (~4x faster
+//!   than the textbook `λ`-based formula).
+//! * [`PublicKey::encrypt_with_pool`] consumes pre-generated `r^n` values
+//!   from a [`NoncePool`] so the hot loop does zero exponentiations; the
+//!   pool can also be filled with **short-exponent** randomizers
+//!   (Damgård–Jurik–Nielsen style `h_s^{r'}` with a 400-bit `r'`), the main
+//!   lever found in the §Perf pass.
+//! * Ring payloads (`Z_{2^64}` fixed-point, two's complement) are embedded
+//!   as signed integers: non-negative as-is, negative as `n - |x|`. Sums
+//!   stay ≪ `n/2`, so decoding is unambiguous.
+
+mod keys;
+mod nonce;
+
+pub use keys::{keygen, Ciphertext, KeyPair, PublicKey, SecretKey};
+pub use nonce::NoncePool;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::BigUint;
+    use crate::rng::{ChaChaRng, Rng64};
+
+    fn small_keys() -> (PublicKey, SecretKey) {
+        let mut rng = ChaChaRng::seed_from_u64(1000);
+        let kp = keygen(&mut rng, 256); // test-size modulus
+        (kp.pk, kp.sk)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(1);
+        for _ in 0..20 {
+            let m = BigUint::random_below(&mut rng, &pk.n);
+            let c = pk.encrypt(&m, &mut rng);
+            assert_eq!(sk.decrypt(&c), m);
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(2);
+        for _ in 0..10 {
+            let a = BigUint::from_u64(rng.next_u64() >> 8);
+            let b = BigUint::from_u64(rng.next_u64() >> 8);
+            let ca = pk.encrypt(&a, &mut rng);
+            let cb = pk.encrypt(&b, &mut rng);
+            let sum = pk.add(&ca, &cb);
+            assert_eq!(sk.decrypt(&sum), a.add(&b));
+        }
+    }
+
+    #[test]
+    fn homomorphic_scalar_multiplication() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        let m = BigUint::from_u64(123_456_789);
+        let c = pk.encrypt(&m, &mut rng);
+        let c5 = pk.mul_plain(&c, &BigUint::from_u64(5));
+        assert_eq!(sk.decrypt(&c5), m.mul_u64(5));
+    }
+
+    #[test]
+    fn add_plain() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(4);
+        let m = BigUint::from_u64(1_000_000);
+        let c = pk.encrypt(&m, &mut rng);
+        let c2 = pk.add_plain(&c, &BigUint::from_u64(999));
+        assert_eq!(sk.decrypt(&c2), BigUint::from_u64(1_000_999));
+    }
+
+    #[test]
+    fn probabilistic_encryption_differs() {
+        let (pk, _) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(5);
+        let m = BigUint::from_u64(42);
+        let c1 = pk.encrypt(&m, &mut rng);
+        let c2 = pk.encrypt(&m, &mut rng);
+        assert_ne!(c1.0, c2.0, "same randomness reused");
+    }
+
+    #[test]
+    fn signed_ring_embedding_roundtrip() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(6);
+        for v in [0i64, 1, -1, 42, -42, i32::MAX as i64, -(1i64 << 40)] {
+            let c = pk.encrypt_i64(v, &mut rng);
+            assert_eq!(sk.decrypt_i64(&c), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn signed_sums_match_ring_addition() {
+        // the exact SPNN-HE flow: two ring (u64 two's-complement) partial
+        // products, encrypted and added, decrypted back into the ring
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(7);
+        for _ in 0..20 {
+            // values bounded like fixed-point pre-truncation products
+            let a = (rng.next_u64() >> 20) as i64 - (1i64 << 43);
+            let b = (rng.next_u64() >> 20) as i64 - (1i64 << 43);
+            let ca = pk.encrypt_i64(a, &mut rng);
+            let cb = pk.encrypt_i64(b, &mut rng);
+            let got = sk.decrypt_i64(&pk.add(&ca, &cb));
+            assert_eq!(got, a + b);
+        }
+    }
+
+    #[test]
+    fn nonce_pool_encryption_matches() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        let mut pool = NoncePool::new(&pk, false);
+        pool.refill(&mut rng, 8);
+        for i in 0..8 {
+            let m = BigUint::from_u64(1000 + i);
+            let c = pk.encrypt_with_pool(&m, &mut pool);
+            assert_eq!(sk.decrypt(&c), m);
+        }
+        assert_eq!(pool.remaining(), 0);
+    }
+
+    #[test]
+    fn short_exponent_pool_decrypts_correctly() {
+        let (pk, sk) = small_keys();
+        let mut rng = ChaChaRng::seed_from_u64(9);
+        let mut pool = NoncePool::new(&pk, true); // DJN short randomizer
+        pool.refill(&mut rng, 4);
+        let m = BigUint::from_u64(777);
+        let c = pk.encrypt_with_pool(&m, &mut pool);
+        assert_eq!(sk.decrypt(&c), m);
+    }
+
+    #[test]
+    fn ciphertext_size_accounting() {
+        let (pk, _) = small_keys();
+        // a ciphertext lives in Z_{n^2}: 2x modulus bits
+        assert_eq!(pk.ciphertext_bytes(), 2 * 256 / 8);
+    }
+
+    #[test]
+    fn keygen_distinct_primes_and_sizes() {
+        let mut rng = ChaChaRng::seed_from_u64(10);
+        let kp = keygen(&mut rng, 128);
+        assert_eq!(kp.pk.n.bits(), 128);
+        assert_ne!(kp.sk.p, kp.sk.q);
+    }
+}

@@ -1,0 +1,194 @@
+//! Decentralized party harness (paper §5, Figure 3).
+//!
+//! A deployment is a set of named parties — coordinator, server, dealer,
+//! data holders — each running as its own thread connected through the
+//! [`netsim`](crate::netsim) mesh. The coordinator only ever exchanges
+//! [`Payload::Control`] messages: it splits the computation graph (decides
+//! each party's role parameters), starts training, monitors per-epoch
+//! status, and terminates the run — it can never touch features, labels or
+//! shares, which is enforced by the message types it sends/accepts.
+
+use std::sync::Arc;
+
+use crate::netsim::{full_mesh, LinkSpec, NetPort, NetStats, PartyId, Payload};
+use crate::{Error, Result};
+
+/// Canonical party ids used by all protocol deployments.
+pub mod ids {
+    use super::PartyId;
+    pub const COORDINATOR: PartyId = 0;
+    pub const SERVER: PartyId = 1;
+    pub const DEALER: PartyId = 2;
+    /// First data holder (A — owns the labels).
+    pub const HOLDER0: PartyId = 3;
+
+    pub fn holder(i: usize) -> PartyId {
+        HOLDER0 + i
+    }
+}
+
+/// What each party thread returns to the harness.
+#[derive(Clone, Debug, Default)]
+pub struct PartyOut {
+    /// Final virtual-clock value (simulated seconds).
+    pub sim_time: f64,
+    /// Per-epoch simulated time (parties that track epochs).
+    pub epoch_times: Vec<f64>,
+    /// Per-epoch average training loss (label holder / server).
+    pub epoch_losses: Vec<f64>,
+    /// Free-form key=value metrics.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Spawn one thread per party function and join them all.
+///
+/// `fns[i]` runs as party id `i` (see [`ids`]). Panics in any party are
+/// converted into errors naming the party, and the mesh statistics are
+/// returned for traffic reporting.
+pub fn run_parties(
+    names: &[&str],
+    spec: LinkSpec,
+    fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>>,
+) -> Result<(Vec<PartyOut>, Arc<NetStats>)> {
+    assert_eq!(names.len(), fns.len());
+    let (ports, stats) = full_mesh(names, spec);
+    let mut handles = Vec::new();
+    for ((port, f), name) in ports.into_iter().zip(fns).zip(names) {
+        let name = name.to_string();
+        handles.push((
+            name.clone(),
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || f(port))
+                .map_err(Error::Io)?,
+        ));
+    }
+    let mut outs = Vec::new();
+    let mut first_err = None;
+    for (name, h) in handles {
+        match h.join() {
+            Ok(Ok(out)) => outs.push(out),
+            Ok(Err(e)) => {
+                first_err.get_or_insert(Error::Protocol(format!("party {name}: {e}")));
+                outs.push(PartyOut::default());
+            }
+            Err(_) => {
+                first_err.get_or_insert(Error::Protocol(format!("party {name} panicked")));
+                outs.push(PartyOut::default());
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok((outs, stats)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator protocol
+// ---------------------------------------------------------------------------
+
+/// Coordinator role: broadcast start, collect one status per epoch from the
+/// `reporter` party, broadcast stop. Returns the reported epoch losses.
+pub fn coordinator_run(
+    port: &mut NetPort,
+    workers: &[PartyId],
+    reporter: PartyId,
+    epochs: usize,
+) -> Result<PartyOut> {
+    for &w in workers {
+        port.send(w, Payload::Control(format!("start:{epochs}")))?;
+    }
+    let mut losses = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        let status = port.recv(reporter)?.into_control()?;
+        let loss = status
+            .strip_prefix("epoch_done:")
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| Error::Protocol(format!("bad status {status:?}")))?;
+        losses.push(loss);
+    }
+    for &w in workers {
+        port.send(w, Payload::Control("stop".into()))?;
+    }
+    Ok(PartyOut {
+        sim_time: port.now(),
+        epoch_losses: losses,
+        ..Default::default()
+    })
+}
+
+/// Worker-side handshake: wait for the coordinator's start order.
+pub fn await_start(port: &mut NetPort) -> Result<usize> {
+    let msg = port.recv(ids::COORDINATOR)?.into_control()?;
+    msg.strip_prefix("start:")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Protocol(format!("expected start order, got {msg:?}")))
+}
+
+/// Reporter-side: send the epoch status to the coordinator.
+pub fn report_epoch(port: &mut NetPort, loss: f64) -> Result<()> {
+    port.send(ids::COORDINATOR, Payload::Control(format!("epoch_done:{loss}")))
+}
+
+/// Worker-side: consume the final stop order.
+pub fn await_stop(port: &mut NetPort) -> Result<()> {
+    let msg = port.recv(ids::COORDINATOR)?.into_control()?;
+    if msg != "stop" {
+        return Err(Error::Protocol(format!("expected stop, got {msg:?}")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_runs_and_collects() {
+        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
+            Box::new(|mut p: NetPort| {
+                p.send(1, Payload::Control("hi".into()))?;
+                Ok(PartyOut { metrics: vec![("x".into(), 1.0)], ..Default::default() })
+            }),
+            Box::new(|mut p: NetPort| {
+                let m = p.recv(0)?.into_control()?;
+                assert_eq!(m, "hi");
+                Ok(PartyOut::default())
+            }),
+        ];
+        let (outs, stats) = run_parties(&["a", "b"], LinkSpec::lan(), fns).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].metrics[0].0, "x");
+        assert!(stats.total_bytes() > 0);
+    }
+
+    #[test]
+    fn party_error_is_named() {
+        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
+            Box::new(|_p| Err(Error::Protocol("boom".into()))),
+            Box::new(|_p| Ok(PartyOut::default())),
+        ];
+        let err = run_parties(&["bad", "ok"], LinkSpec::lan(), fns).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("bad") && msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn coordinator_roundtrip() {
+        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
+            Box::new(|mut p: NetPort| coordinator_run(&mut p, &[1], 1, 2)),
+            Box::new(|mut p: NetPort| {
+                let epochs = await_start(&mut p)?;
+                assert_eq!(epochs, 2);
+                for e in 0..epochs {
+                    report_epoch(&mut p, 0.5 - e as f64 * 0.1)?;
+                }
+                await_stop(&mut p)?;
+                Ok(PartyOut::default())
+            }),
+        ];
+        let (outs, _) = run_parties(&["coord", "w"], LinkSpec::lan(), fns).unwrap();
+        assert_eq!(outs[0].epoch_losses, vec![0.5, 0.4]);
+    }
+}

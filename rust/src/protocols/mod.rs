@@ -1,0 +1,55 @@
+//! The five training protocols the paper evaluates (§6.1):
+//!
+//! | protocol | module | first layer | heavy layers | labels |
+//! |---|---|---|---|---|
+//! | NN (plaintext)  | [`plaintext`] | local | local | local |
+//! | SplitNN         | [`splitnn`]   | per-holder encoders (plaintext) | server | **on server** (leaked) |
+//! | SecureML        | [`secureml`]  | 2-party MPC | 2-party MPC (piecewise act.) | shared |
+//! | SPNN-SS         | [`spnn`]      | arithmetic sharing (Alg. 2) | server (plaintext) | holder A |
+//! | SPNN-HE         | [`spnn`]      | Paillier HE (Alg. 3) | server (plaintext) | holder A |
+//!
+//! All implement [`Trainer`] and produce a [`TrainReport`] with accuracy,
+//! loss curves, simulated epoch times, and traffic accounting — the raw
+//! material for every table/figure in `exp/`.
+
+pub mod common;
+pub mod plaintext;
+pub mod secureml;
+pub mod splitnn;
+pub mod spnn;
+
+pub use common::{ModelParams, TrainReport};
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::Dataset;
+use crate::netsim::LinkSpec;
+use crate::Result;
+
+/// A privacy-preserving (or baseline) training protocol.
+pub trait Trainer {
+    /// Human-readable protocol name (report rows).
+    fn name(&self) -> &'static str;
+
+    /// Train on `train`, evaluate AUC on `test`, under the given network.
+    fn train(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        spec: LinkSpec,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<TrainReport>;
+}
+
+/// Instantiate a trainer by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Trainer>> {
+    match name {
+        "nn" => Some(Box::new(plaintext::PlainNn)),
+        "splitnn" => Some(Box::new(splitnn::SplitNn)),
+        "secureml" => Some(Box::new(secureml::SecureMl)),
+        "spnn-ss" => Some(Box::new(spnn::Spnn { he: false })),
+        "spnn-he" => Some(Box::new(spnn::Spnn { he: true })),
+        _ => None,
+    }
+}

@@ -1,0 +1,156 @@
+//! Plaintext NN baseline: the whole network trained centrally on the
+//! concatenated data — no privacy, fastest, the accuracy ceiling of
+//! Table 1 and the time floor of Table 3.
+//!
+//! Single "server" party; the only traffic is the coordinator handshake.
+//! Uses the monolithic `nn_train` AOT graph (the same math the split
+//! pipeline distributes across parties — `python/tests/test_model.py`
+//! proves the two compose identically).
+
+use std::time::Instant;
+
+use super::common::{evaluate, ModelParams, TrainReport, Updater};
+use super::Trainer;
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::Dataset;
+use crate::netsim::{LinkSpec, NetPort};
+use crate::parties::{self, run_parties, PartyOut};
+use crate::runtime::{Engine, TensorIn};
+use crate::Result;
+
+pub struct PlainNn;
+
+impl Trainer for PlainNn {
+    fn name(&self) -> &'static str {
+        "NN"
+    }
+
+    fn train(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        spec: LinkSpec,
+        train: &Dataset,
+        test: &Dataset,
+        _n_holders: usize,
+    ) -> Result<TrainReport> {
+        let wall = Instant::now();
+        let mut params = ModelParams::init(cfg, tc.seed);
+        let cap = ModelConfig::pick_batch(tc.batch);
+        let batches = train.batches(tc.batch, cap);
+        let cfgc = cfg.clone();
+        let tcc = tc.clone();
+
+        // run as a 2-party deployment (coordinator + server) so the control
+        // flow matches the decentralized protocols
+        let test_c = test.clone();
+        let (mut epoch_losses, mut epoch_times) = (Vec::new(), Vec::new());
+        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
+            Box::new(move |mut p: NetPort| {
+                parties::coordinator_run(&mut p, &[1], 1, tcc.epochs)
+            }),
+            Box::new(move |mut p: NetPort| {
+                let epochs = parties::await_start(&mut p)?;
+                let mut engine = Engine::load_default()?;
+                let mut up = Updater::new(&tcc, &cfgc, tcc.seed);
+                let art = cfgc.artifact("nn_train", cap);
+                let mut times = Vec::new();
+                for _ in 0..epochs {
+                    p.reset_clock();
+                    let mut loss_sum = 0.0;
+                    for b in &batches {
+                        let theta0 = params.theta0_f32();
+                        let server = params.server_f32();
+                        let wy = params.wy_f32();
+                        let by = params.by_f32();
+                        let mut inputs: Vec<TensorIn> = vec![
+                            TensorIn::F32(&b.x),
+                            TensorIn::F32(&b.y),
+                            TensorIn::F32(&b.mask),
+                            TensorIn::F32(&theta0),
+                        ];
+                        for s in &server {
+                            inputs.push(TensorIn::F32(s));
+                        }
+                        inputs.push(TensorIn::F32(&wy));
+                        inputs.push(TensorIn::F32(&by));
+                        let outs = engine.execute(&art, &inputs)?;
+                        loss_sum += outs[0].scalar()?;
+                        let g_theta0 = outs[2].clone().f32()?;
+                        up.step_mat_f32(&mut params.theta0, &g_theta0);
+                        let ns = params.server.len();
+                        for i in 0..ns {
+                            let g = outs[3 + i].clone().f32()?;
+                            up.step_mat_f32(&mut params.server[i], &g);
+                        }
+                        let g_wy = outs[3 + ns].clone().f32()?;
+                        let g_by = outs[4 + ns].clone().f32()?;
+                        up.step_mat_f32(&mut params.wy, &g_wy);
+                        up.step_mat_f32(&mut params.by, &g_by);
+                        up.tick();
+                    }
+                    times.push(p.now());
+                    parties::report_epoch(&mut p, loss_sum / batches.len() as f64)?;
+                }
+                parties::await_stop(&mut p)?;
+                // evaluate inside the party (owns the params)
+                let (auc, test_loss) = evaluate(&mut engine, &cfgc, &params, &test_c)?;
+                Ok(PartyOut {
+                    sim_time: p.now(),
+                    epoch_times: times,
+                    epoch_losses: vec![auc, test_loss],
+                    ..Default::default()
+                })
+            }),
+        ];
+        let (outs, stats) = run_parties(&["coord", "server"], spec, fns)?;
+        epoch_losses.extend(outs[0].epoch_losses.clone());
+        epoch_times.extend(outs[1].epoch_times.clone());
+        let auc = outs[1].epoch_losses[0];
+        let test_loss = outs[1].epoch_losses[1];
+
+        Ok(TrainReport {
+            protocol: self.name().into(),
+            dataset: cfg.name.into(),
+            auc,
+            train_losses: epoch_losses,
+            test_losses: vec![test_loss],
+            epoch_times,
+            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
+            offline_bytes: 0,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FRAUD;
+    use crate::data::{synth_fraud, SynthOpts};
+
+    #[test]
+    fn nn_trains_and_loss_decreases() {
+        if !crate::runtime::default_artifact_dir().join("manifest.txt").exists() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(2000));
+        let (train, test) = ds.split(0.8, 1);
+        let tc = TrainConfig {
+            batch: 256,
+            epochs: 3,
+            lr_override: Some(0.05),
+            ..Default::default()
+        };
+        let rep = PlainNn
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 1)
+            .unwrap();
+        assert_eq!(rep.train_losses.len(), 3);
+        assert!(
+            rep.train_losses[2] < rep.train_losses[0],
+            "{:?}",
+            rep.train_losses
+        );
+        assert!(rep.auc > 0.6, "AUC {}", rep.auc);
+    }
+}

@@ -1,0 +1,363 @@
+//! SplitNN baseline (Vepakomma et al. 2018, paper Figure 1b).
+//!
+//! Each data holder trains a *private bottom encoder* on its own feature
+//! block (plaintext, no crypto); the cut-layer activations are concatenated
+//! at the server, which owns everything above the cut **including the
+//! labels** — the privacy weakness the paper calls out (labels leak to the
+//! server, and per-holder encoders cannot model cross-holder feature
+//! interactions, which costs accuracy as the holder count grows — Fig 5).
+//!
+//! Cut-layer width is `h1_dim` split evenly across holders, so the server
+//! stack reuses the same AOT graphs as SPNN.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::common::{ModelParams, TrainReport, Updater};
+use super::Trainer;
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::{auc, Dataset, VerticalSplit};
+use crate::netsim::{LinkSpec, NetPort, Payload};
+use crate::nn::MatF64;
+use crate::parties::{self, ids, run_parties, PartyOut};
+use crate::runtime::{Engine, TensorIn};
+use crate::rng::Pcg64;
+use crate::{Error, Result};
+
+pub struct SplitNn;
+
+/// Cut-layer split: how many h1 units each holder produces.
+fn unit_split(h1: usize, k: usize) -> VerticalSplit {
+    VerticalSplit::even(h1, k)
+}
+
+impl Trainer for SplitNn {
+    fn name(&self) -> &'static str {
+        "SplitNN"
+    }
+
+    fn train(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        spec: LinkSpec,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<TrainReport> {
+        let wall = Instant::now();
+        let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
+        let usplit = unit_split(cfg.h1_dim, n_holders);
+        let plan = super::spnn::batch_plan(train.len(), tc.batch);
+        let params = ModelParams::init(cfg, tc.seed);
+        // encoders: holder j maps its d_j features to its u_j units
+        let encoders: Arc<Mutex<Vec<MatF64>>> = Arc::new(Mutex::new(
+            (0..n_holders)
+                .map(|j| {
+                    let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
+                    MatF64::xavier(&mut rng, fsplit.width(j), usplit.width(j))
+                })
+                .collect(),
+        ));
+        let server_state: Arc<Mutex<ModelParams>> = Arc::new(Mutex::new(params));
+
+        let mut names = vec!["coord".to_string(), "server".to_string(), "dealer".to_string()];
+        for j in 0..n_holders {
+            names.push(format!("holder{j}"));
+        }
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = Vec::new();
+
+        // coordinator
+        {
+            let workers: Vec<usize> = (1..names.len()).filter(|&i| i != ids::DEALER).collect();
+            let epochs = tc.epochs;
+            fns.push(Box::new(move |mut p: NetPort| {
+                parties::coordinator_run(&mut p, &workers, ids::SERVER, epochs)
+            }));
+        }
+        // server (owns labels in SplitNN!)
+        {
+            let cfg = cfg.clone();
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let y = train.y.clone();
+            let st = server_state.clone();
+            fns.push(Box::new(move |mut p: NetPort| {
+                server_role(&mut p, &cfg, &tc, &plan, &y, st, n_holders)
+            }));
+        }
+        // dealer: unused in SplitNN — parks until the process ends
+        fns.push(Box::new(move |_p: NetPort| Ok(PartyOut::default())));
+        // holders
+        for j in 0..n_holders {
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let xj = fsplit.slice_x(&train.x, cfg.n_features, j);
+            let dj = fsplit.width(j);
+            let enc = encoders.clone();
+            let cfg = cfg.clone();
+            fns.push(Box::new(move |mut p: NetPort| {
+                holder_role(&mut p, &cfg, &tc, &plan, j, xj, dj, enc)
+            }));
+        }
+
+        let (outs, stats) = run_parties(&name_refs, spec, fns)?;
+
+        // evaluation: encoders (holders) + server stack on test data
+        let encoders = encoders.lock().unwrap().clone();
+        let sp = server_state.lock().unwrap().clone();
+        let mut engine = Engine::load_default()?;
+        let (a, test_loss) =
+            eval_splitnn(&mut engine, cfg, &fsplit, &usplit, &encoders, &sp, test)?;
+
+        Ok(TrainReport {
+            protocol: self.name().into(),
+            dataset: cfg.name.into(),
+            auc: a,
+            train_losses: outs[ids::COORDINATOR].epoch_losses.clone(),
+            test_losses: vec![test_loss],
+            epoch_times: outs[ids::SERVER].epoch_times.clone(),
+            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
+            offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn server_role(
+    p: &mut NetPort,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    plan: &[(usize, usize)],
+    y: &[f32],
+    st: Arc<Mutex<ModelParams>>,
+    n_holders: usize,
+) -> Result<PartyOut> {
+    let epochs = parties::await_start(p)?;
+    let mut engine = Engine::load_default()?;
+    let mut params = st.lock().unwrap().clone();
+    let mut up = Updater::new(tc, cfg, tc.seed ^ 0x3e7);
+    let cap = ModelConfig::pick_batch(tc.batch);
+    let h1 = cfg.h1_dim;
+    let hl = cfg.hl_dim();
+    let usplit = unit_split(h1, n_holders);
+    let mut times = Vec::new();
+    let mut losses = Vec::new();
+
+    for _ in 0..epochs {
+        p.reset_clock();
+        let mut loss_sum = 0.0;
+        for &(s, rows) in plan {
+            // gather cut-layer blocks from every holder, concat by unit range
+            let mut h1_pad = vec![0.0f32; cap * h1];
+            for j in 0..n_holders {
+                let blk = p.recv_f32s(ids::holder(j))?;
+                let (us, ue) = usplit.ranges[j];
+                let w = ue - us;
+                if blk.len() != rows * w {
+                    return Err(Error::Protocol("splitnn: cut block size".into()));
+                }
+                for r in 0..rows {
+                    h1_pad[r * h1 + us..r * h1 + ue]
+                        .copy_from_slice(&blk[r * w..(r + 1) * w]);
+                }
+            }
+            let server_f32 = params.server_f32();
+            let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+            for sp in &server_f32 {
+                inputs.push(TensorIn::F32(sp));
+            }
+            let hl_act = engine
+                .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+                .remove(0)
+                .f32()?;
+            // label layer runs on the SERVER (labels leaked by design)
+            let mut y_pad = vec![0.0f32; cap];
+            y_pad[..rows].copy_from_slice(&y[s..s + rows]);
+            let mut mask = vec![0.0f32; cap];
+            for m in mask.iter_mut().take(rows) {
+                *m = 1.0;
+            }
+            let wy = params.wy_f32();
+            let by = params.by_f32();
+            let outs = engine.execute(
+                &cfg.artifact("label_grad", cap),
+                &[
+                    TensorIn::F32(&hl_act),
+                    TensorIn::F32(&y_pad),
+                    TensorIn::F32(&mask),
+                    TensorIn::F32(&wy),
+                    TensorIn::F32(&by),
+                ],
+            )?;
+            loss_sum += outs[1].scalar()?;
+            let g_hl = outs[2].clone().f32()?;
+            let g_wy = outs[3].clone().f32()?;
+            let g_by = outs[4].clone().f32()?;
+            up.step_mat_f32(&mut params.wy, &g_wy);
+            up.step_mat_f32(&mut params.by, &g_by);
+
+            // backward through the server stack
+            let mut g_hl_pad = vec![0.0f32; cap * hl];
+            g_hl_pad.copy_from_slice(&g_hl);
+            let mut inputs: Vec<TensorIn> =
+                vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl_pad)];
+            for sp in &server_f32 {
+                inputs.push(TensorIn::F32(sp));
+            }
+            let mut outs = engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
+            let g_params: Vec<Vec<f32>> = outs
+                .split_off(1)
+                .into_iter()
+                .map(|t| t.f32())
+                .collect::<Result<_>>()?;
+            let g_h1 = outs.remove(0).f32()?;
+            for (m, g) in params.server.iter_mut().zip(&g_params) {
+                up.step_mat_f32(m, g);
+            }
+            up.tick();
+            // scatter cut-layer gradients back to holders
+            for j in 0..n_holders {
+                let (us, ue) = usplit.ranges[j];
+                let w = ue - us;
+                let mut blk = vec![0.0f32; rows * w];
+                for r in 0..rows {
+                    blk[r * w..(r + 1) * w]
+                        .copy_from_slice(&g_h1[r * h1 + us..r * h1 + ue]);
+                }
+                p.send(ids::holder(j), Payload::F32s(blk))?;
+            }
+        }
+        times.push(p.now());
+        losses.push(loss_sum / plan.len() as f64);
+        parties::report_epoch(p, loss_sum / plan.len() as f64)?;
+    }
+    parties::await_stop(p)?;
+    *st.lock().unwrap() = params;
+    Ok(PartyOut {
+        sim_time: p.now(),
+        epoch_times: times,
+        epoch_losses: losses,
+        ..Default::default()
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn holder_role(
+    p: &mut NetPort,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    plan: &[(usize, usize)],
+    j: usize,
+    xj: Vec<f32>,
+    dj: usize,
+    enc: Arc<Mutex<Vec<MatF64>>>,
+) -> Result<PartyOut> {
+    let epochs = parties::await_start(p)?;
+    let mut w = enc.lock().unwrap()[j].clone();
+    let mut up = Updater::new(tc, cfg, tc.seed ^ (0x591 + j as u64));
+    for _ in 0..epochs {
+        for &(s, rows) in plan {
+            let x = MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
+            // encoder forward: pre-activation units (server applies act)
+            let z = x.matmul(&w);
+            p.send(ids::SERVER, Payload::F32s(z.to_f32()))?;
+            let g = p.recv_f32s(ids::SERVER)?;
+            let g_m = MatF64::from_f32(rows, w.cols, &g);
+            let g_w = x.transpose().matmul(&g_m);
+            up.step_mat_f32(&mut w, &g_w.to_f32());
+            up.tick();
+        }
+    }
+    parties::await_stop(p)?;
+    enc.lock().unwrap()[j] = w;
+    Ok(PartyOut { sim_time: p.now(), ..Default::default() })
+}
+
+/// Plaintext evaluation of the SplitNN composite model.
+fn eval_splitnn(
+    engine: &mut Engine,
+    cfg: &ModelConfig,
+    fsplit: &VerticalSplit,
+    usplit: &VerticalSplit,
+    encoders: &[MatF64],
+    sp: &ModelParams,
+    test: &Dataset,
+) -> Result<(f64, f64)> {
+    let cap = ModelConfig::pick_batch(test.len().min(5000));
+    let h1 = cfg.h1_dim;
+    let mut scores = Vec::with_capacity(test.len());
+    let mut losses = Vec::new();
+    for b in test.batches(cap, cap) {
+        let mut h1_pad = vec![0.0f32; cap * h1];
+        for (j, w) in encoders.iter().enumerate() {
+            let xj = fsplit.slice_x(&b.x, cfg.n_features, j);
+            let x = MatF64::from_f32(cap, fsplit.width(j), &xj);
+            let z = x.matmul(w);
+            let (us, ue) = usplit.ranges[j];
+            for r in 0..cap {
+                for c in us..ue {
+                    h1_pad[r * h1 + c] = z.at(r, c - us) as f32;
+                }
+            }
+        }
+        let server_f32 = sp.server_f32();
+        let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+        for s in &server_f32 {
+            inputs.push(TensorIn::F32(s));
+        }
+        let hl = engine
+            .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+            .remove(0)
+            .f32()?;
+        let wy = sp.wy_f32();
+        let by = sp.by_f32();
+        let outs = engine.execute(
+            &cfg.artifact("label_grad", cap),
+            &[
+                TensorIn::F32(&hl),
+                TensorIn::F32(&b.y),
+                TensorIn::F32(&b.mask),
+                TensorIn::F32(&wy),
+                TensorIn::F32(&by),
+            ],
+        )?;
+        let pvec = outs[0].clone().f32()?;
+        losses.push(outs[1].scalar()?);
+        scores.extend_from_slice(&pvec[..b.rows]);
+    }
+    Ok((
+        auc(&scores, &test.y),
+        losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FRAUD;
+    use crate::data::{synth_fraud, SynthOpts};
+
+    #[test]
+    fn splitnn_trains_small() {
+        if !crate::runtime::default_artifact_dir().join("manifest.txt").exists() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(2000));
+        let (train, test) = ds.split(0.8, 3);
+        let tc = TrainConfig { batch: 256, epochs: 8, lr_override: Some(0.3), ..Default::default() };
+        let rep = SplitNn
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert!(rep.auc > 0.55, "AUC {}", rep.auc);
+        assert!(rep.train_losses.last().unwrap() <= &rep.train_losses[0]);
+    }
+
+    #[test]
+    fn unit_split_matches_h1() {
+        let us = unit_split(8, 3);
+        assert_eq!(us.ranges, vec![(0, 3), (3, 6), (6, 8)]);
+    }
+}

@@ -1,0 +1,672 @@
+//! SPNN: the paper's protocol (Algorithms 1-3), in both variants.
+//!
+//! Deployment (paper Figure 3): coordinator, server, dealer (SS only),
+//! and `k >= 2` data holders. Holder 0 (`A`) owns the labels.
+//!
+//! Per mini-batch:
+//! 1. **Private-feature computations** (§4.3) — holders jointly compute
+//!    `h1 = X·theta0` without revealing `X` or `theta0`:
+//!    * **SS** (Algorithm 2): holders secret-share their feature/weight
+//!      blocks to the two compute holders A and B, which run one Beaver
+//!      matrix multiplication over the concatenated shares
+//!      (`X·θ = (<X>_1+<X>_2)·(<θ>_1+<θ>_2)` — the same algebra as the
+//!      paper's expanded four-term form, one triple either way), truncate
+//!      their product shares (SecureML trick) and send them to the server.
+//!      The big ring matmuls route through the AOT Pallas kernel.
+//!    * **HE** (Algorithm 3): the server owns the Paillier keypair; each
+//!      holder encrypts its local plaintext product `X_j·theta_j` and the
+//!      running ciphertext sum hops holder-to-holder before the server
+//!      decrypts `h1`.
+//! 2. **Hidden-layer computations** (§4.4) — the server reconstructs `h1`
+//!    in plaintext and runs the AOT `server_fwd` graph.
+//! 3. **Private-label computations** (§4.5) — A runs `label_grad`,
+//!    updates its label layer, and returns `g_hL`.
+//! 4. **Backward** (§4.6) — the server runs `server_bwd`, updates its
+//!    stack, and broadcasts `g_h1`; every holder computes
+//!    `g_theta_j = X_j^T · g_h1` *locally in plaintext* (both operands are
+//!    known to it) and updates with SGD or SGLD.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::common::{evaluate, ModelParams, TrainReport, Updater};
+use super::Trainer;
+use crate::bignum::BigUint;
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::{Dataset, VerticalSplit};
+use crate::netsim::{LinkSpec, NetPort, Payload};
+use crate::nn::MatF64;
+use crate::paillier::{keygen, Ciphertext, NoncePool, PublicKey};
+use crate::parties::{self, ids, run_parties, PartyOut};
+use crate::rng::{ChaChaRng, Pcg64, Rng64};
+use crate::runtime::{Engine, TensorIn};
+use crate::smpc::{beaver_matmul, dealer, share2, trunc_share_mat, RingMat};
+use crate::{Error, Result};
+
+/// SPNN trainer; `he` selects Algorithm 3 (Paillier) over Algorithm 2 (SS).
+pub struct Spnn {
+    pub he: bool,
+}
+
+/// Batch boundaries shared by every party (deterministic schedule).
+pub(crate) fn batch_plan(n: usize, batch: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut s = 0;
+    while s < n {
+        let rows = batch.min(n - s);
+        out.push((s, rows));
+        s += rows;
+    }
+    out
+}
+
+impl Trainer for Spnn {
+    fn name(&self) -> &'static str {
+        if self.he {
+            "SPNN-HE"
+        } else {
+            "SPNN-SS"
+        }
+    }
+
+    fn train(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        spec: LinkSpec,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<TrainReport> {
+        assert!(n_holders >= 2, "SPNN needs >= 2 data holders");
+        let wall = Instant::now();
+        let split = VerticalSplit::even(cfg.n_features, n_holders);
+        let plan = batch_plan(train.len(), tc.batch);
+        let params = ModelParams::init(cfg, tc.seed);
+        let final_params: Arc<Mutex<ModelParams>> = Arc::new(Mutex::new(params.clone()));
+
+        let n_parties = ids::HOLDER0 + n_holders;
+        let mut names: Vec<String> = vec!["coord".into(), "server".into(), "dealer".into()];
+        for i in 0..n_holders {
+            names.push(format!("holder{i}"));
+        }
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+
+        let mut fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = Vec::new();
+
+        // --- coordinator ---
+        {
+            let workers: Vec<usize> = (1..n_parties).collect();
+            let epochs = tc.epochs;
+            fns.push(Box::new(move |mut p: NetPort| {
+                parties::coordinator_run(&mut p, &workers, ids::SERVER, epochs)
+            }));
+        }
+
+        // --- server ---
+        {
+            let cfg = cfg.clone();
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let params = params.clone();
+            let fp = final_params.clone();
+            let he = self.he;
+            fns.push(Box::new(move |mut p: NetPort| {
+                server_role(&mut p, &cfg, &tc, &plan, params, fp, he, n_holders)
+            }));
+        }
+
+        // --- dealer (idle under HE, but still part of the mesh) ---
+        {
+            let he = self.he;
+            let seed = tc.seed ^ 0xdea1;
+            fns.push(Box::new(move |mut p: NetPort| {
+                if he {
+                    // HE runs have no preprocessing; wait for the stop order
+                    parties::await_start(&mut p)?;
+                    parties::await_stop(&mut p)?;
+                } else {
+                    parties::await_start(&mut p)?;
+                    dealer::serve(&mut p, ids::holder(0), ids::holder(1), seed)?;
+                    parties::await_stop(&mut p)?;
+                }
+                Ok(PartyOut::default())
+            }));
+        }
+
+        // --- holders ---
+        for j in 0..n_holders {
+            let cfg = cfg.clone();
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let split = split.clone();
+            let fp = final_params.clone();
+            let he = self.he;
+            // holder j's private inputs
+            let xj = split.slice_x(&train.x, cfg.n_features, j);
+            let yj = if j == 0 { Some(train.y.clone()) } else { None };
+            // holder j's theta block: rows [s, e) of theta0
+            let (s, e) = split.ranges[j];
+            let h = cfg.h1_dim;
+            let block = MatF64::from_data(
+                e - s,
+                h,
+                params.theta0.data[s * h..e * h].to_vec(),
+            );
+            fns.push(Box::new(move |mut p: NetPort| {
+                holder_role(
+                    &mut p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, fp, he,
+                )
+            }));
+        }
+
+        let (outs, stats) = run_parties(&name_refs, spec, fns)?;
+
+        // evaluation on the assembled final parameters
+        let final_params = final_params.lock().unwrap().clone();
+        let mut engine = Engine::load_default()?;
+        let (auc, test_loss) = evaluate(&mut engine, cfg, &final_params, test)?;
+
+        Ok(TrainReport {
+            protocol: self.name().to_string(),
+            dataset: cfg.name.to_string(),
+            auc,
+            train_losses: outs[ids::COORDINATOR].epoch_losses.clone(),
+            test_losses: vec![test_loss],
+            epoch_times: outs[ids::SERVER].epoch_times.clone(),
+            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
+            offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server role
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn server_role(
+    p: &mut NetPort,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    plan: &[(usize, usize)],
+    mut params: ModelParams,
+    fp: Arc<Mutex<ModelParams>>,
+    he: bool,
+    n_holders: usize,
+) -> Result<PartyOut> {
+    let epochs = parties::await_start(p)?;
+    let mut engine = Engine::load_default()?;
+    let mut up = Updater::new(tc, cfg, tc.seed ^ 0x5e7);
+    let a = ids::holder(0);
+    let last_holder = ids::holder(n_holders - 1);
+
+    // HE setup: the server generates the keypair and broadcasts pk (§3.4)
+    let sk = if he {
+        let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ 0x4e7);
+        let kp = keygen(&mut rng, tc.paillier_bits);
+        let n_bytes = kp.pk.n.to_bytes_le();
+        for j in 0..n_holders {
+            p.send(ids::holder(j), Payload::Cipher(vec![n_bytes.clone()]))?;
+        }
+        Some(kp.sk)
+    } else {
+        None
+    };
+
+    let cap = crate::config::ModelConfig::pick_batch(tc.batch);
+    let h1_dim = cfg.h1_dim;
+    let hl_dim = cfg.hl_dim();
+    let mut epoch_times = Vec::with_capacity(epochs);
+    let mut out = PartyOut::default();
+
+    for _epoch in 0..epochs {
+        p.reset_clock();
+        let mut loss_sum = 0.0;
+        for &(_s, rows) in plan {
+            // ---- receive h1 (reconstruct from shares or decrypt) ----
+            let h1_f32: Vec<f32> = if he {
+                let sk = sk.as_ref().unwrap();
+                let cts = p.recv(last_holder)?.into_cipher()?;
+                if cts.len() != rows * h1_dim {
+                    return Err(Error::Protocol(format!(
+                        "server: expected {} ciphertexts, got {}",
+                        rows * h1_dim,
+                        cts.len()
+                    )));
+                }
+                cts.iter()
+                    .map(|bytes| {
+                        let c = Ciphertext(BigUint::from_bytes_le(bytes));
+                        crate::fixed::decode(sk.decrypt_ring(&c)) as f32
+                    })
+                    .collect()
+            } else {
+                let sa = p.recv_u64s(a)?;
+                let sb = p.recv_u64s(ids::holder(1))?;
+                if sa.len() != rows * h1_dim || sb.len() != sa.len() {
+                    return Err(Error::Protocol("server: h1 share size".into()));
+                }
+                sa.iter()
+                    .zip(&sb)
+                    .map(|(x, y)| crate::fixed::decode(x.wrapping_add(*y)) as f32)
+                    .collect()
+            };
+
+            // ---- forward through the hidden stack (AOT graph) ----
+            let mut h1_pad = vec![0.0f32; cap * h1_dim];
+            h1_pad[..rows * h1_dim].copy_from_slice(&h1_f32);
+            let server_f32 = params.server_f32();
+            let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+            for s in &server_f32 {
+                inputs.push(TensorIn::F32(s));
+            }
+            let hl = engine
+                .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+                .remove(0)
+                .f32()?;
+            // send hL (only the real rows) to the label holder
+            p.send(a, Payload::F32s(hl[..rows * hl_dim].to_vec()))?;
+
+            // ---- backward ----
+            let g_hl_rows = p.recv_f32s(a)?;
+            let mut g_hl = vec![0.0f32; cap * hl_dim];
+            g_hl[..rows * hl_dim].copy_from_slice(&g_hl_rows);
+            let mut inputs: Vec<TensorIn> =
+                vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl)];
+            for s in &server_f32 {
+                inputs.push(TensorIn::F32(s));
+            }
+            let mut outs = engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
+            let g_params: Vec<Vec<f32>> = outs
+                .split_off(1)
+                .into_iter()
+                .map(|t| t.f32())
+                .collect::<Result<_>>()?;
+            let g_h1 = outs.remove(0).f32()?;
+
+            // update server params, broadcast g_h1 to all holders
+            for (m, g) in params.server.iter_mut().zip(&g_params) {
+                up.step_mat_f32(m, g);
+            }
+            up.tick();
+            let g_h1_rows = g_h1[..rows * h1_dim].to_vec();
+            for j in 0..n_holders {
+                p.send(ids::holder(j), Payload::F32s(g_h1_rows.clone()))?;
+            }
+
+            // loss bookkeeping (A reports its scalar loss for monitoring)
+            let loss = p.recv(a)?.into_f64s()?[0];
+            loss_sum += loss;
+        }
+        epoch_times.push(p.now());
+        parties::report_epoch(p, loss_sum / plan.len() as f64)?;
+    }
+    parties::await_stop(p)?;
+    fp.lock().unwrap().server = params.server;
+    out.epoch_times = epoch_times;
+    out.sim_time = p.now();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Holder role
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn holder_role(
+    p: &mut NetPort,
+    cfg: &ModelConfig,
+    tc: &TrainConfig,
+    plan: &[(usize, usize)],
+    j: usize,
+    n_holders: usize,
+    split: &VerticalSplit,
+    xj: Vec<f32>,
+    yj: Option<Vec<f32>>,
+    mut theta_j: MatF64,
+    fp: Arc<Mutex<ModelParams>>,
+    he: bool,
+) -> Result<PartyOut> {
+    let epochs = parties::await_start(p)?;
+    let dj = split.width(j);
+    let h = cfg.h1_dim;
+    let is_a = j == 0;
+    let is_b = j == 1;
+    let role: u8 = if is_a { 0 } else { 1 };
+    let _me = ids::holder(j);
+    let peer = if is_a { ids::holder(1) } else { ids::holder(0) };
+    let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0x401d + j as u64));
+    let mut up = Updater::new(tc, cfg, tc.seed ^ (0x901 + j as u64));
+    let mut engine = if is_a || is_b || he {
+        Some(Engine::load_default()?)
+    } else {
+        None
+    };
+
+    // HE setup: receive pk, build a nonce pool
+    let (pk, mut pool) = if he {
+        let n_bytes = p.recv(ids::SERVER)?.into_cipher()?.remove(0);
+        let pk = PublicKey::from_n(BigUint::from_bytes_le(&n_bytes));
+        let pool = NoncePool::new(&pk, tc.paillier_short_exp);
+        (Some(pk), Some(pool))
+    } else {
+        (None, None)
+    };
+
+    // label-layer state (A only)
+    let hl_dim = cfg.hl_dim();
+    let mut wy = MatF64::zeros(hl_dim, 1);
+    let mut by = MatF64::zeros(1, 1);
+    if is_a {
+        let init = ModelParams::init(cfg, tc.seed);
+        wy = init.wy;
+        by = init.by;
+    }
+    let total_d = cfg.n_features;
+    let cap = crate::config::ModelConfig::pick_batch(tc.batch);
+    let ring_art = cfg.artifact("ring_matmul", cap);
+    let mut train_losses = Vec::new();
+
+    for _epoch in 0..epochs {
+        p.reset_clock();
+        let mut loss_sum = 0.0;
+        for &(s, rows) in plan {
+            // my feature block for this batch
+            let xblk = MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
+
+            if he {
+                // ---- Algorithm 3 ----
+                let pk = pk.as_ref().unwrap();
+                let pool = pool.as_mut().unwrap();
+                // local plaintext product, fixed-point encoded
+                let prod = xblk.matmul(&theta_j); // rows x h
+                pool.refill(&mut rng, rows * h);
+                let mut acc: Option<Vec<Ciphertext>> = if j == 0 {
+                    None
+                } else {
+                    // receive the running ciphertext sum from holder j-1
+                    let cts = p.recv(ids::holder(j - 1))?.into_cipher()?;
+                    Some(cts.iter().map(|b| Ciphertext(BigUint::from_bytes_le(b))).collect())
+                };
+                let mut out_cts = Vec::with_capacity(rows * h);
+                for (idx, &v) in prod.data.iter().enumerate() {
+                    let m = pk.encode_i64(crate::fixed::encode(v) as i64);
+                    let c = pk.encrypt_with_pool(&m, pool);
+                    let c = match &mut acc {
+                        Some(prev) => pk.add(&prev[idx], &c),
+                        None => c,
+                    };
+                    out_cts.push(c);
+                }
+                let next = if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
+                let bytes: Vec<Vec<u8>> = out_cts.iter().map(|c| c.0.to_bytes_le()).collect();
+                p.send(next, Payload::Cipher(bytes))?;
+            } else {
+                // ---- Algorithm 2 ----
+                if is_a || is_b {
+                    // 1) own block shares
+                    let x_ring = RingMat::encode_f64(
+                        rows,
+                        dj,
+                        &xblk.data,
+                    );
+                    let t_ring = RingMat::encode_f64(dj, h, &theta_j.data);
+                    let (x_mine, x_theirs) = share2(&mut rng, &x_ring);
+                    let (t_mine, t_theirs) = share2(&mut rng, &t_ring);
+                    let mut buf = x_theirs.data;
+                    buf.extend_from_slice(&t_theirs.data);
+                    p.send(peer, Payload::U64s(buf))?;
+                    let theirs = p.recv_u64s(peer)?;
+                    let dpeer = split.width(if is_a { 1 } else { 0 });
+                    if theirs.len() != rows * dpeer + dpeer * h {
+                        return Err(Error::Protocol("holder: peer share size".into()));
+                    }
+                    let x_peer = RingMat::from_data(rows, dpeer, theirs[..rows * dpeer].to_vec());
+                    let t_peer = RingMat::from_data(dpeer, h, theirs[rows * dpeer..].to_vec());
+
+                    // 2) shares of the extra holders' blocks (j >= 2)
+                    let mut x_parts: Vec<(usize, RingMat)> = vec![
+                        (j, x_mine),
+                        (if is_a { 1 } else { 0 }, x_peer),
+                    ];
+                    let mut t_parts: Vec<(usize, RingMat)> = vec![
+                        (j, t_mine),
+                        (if is_a { 1 } else { 0 }, t_peer),
+                    ];
+                    for extra in 2..n_holders {
+                        let dx = split.width(extra);
+                        let buf = p.recv_u64s(ids::holder(extra))?;
+                        if buf.len() != rows * dx + dx * h {
+                            return Err(Error::Protocol("holder: extra share size".into()));
+                        }
+                        x_parts.push((extra, RingMat::from_data(rows, dx, buf[..rows * dx].to_vec())));
+                        t_parts.push((extra, RingMat::from_data(dx, h, buf[rows * dx..].to_vec())));
+                    }
+                    // concat in holder order (theta rows stack in the same order)
+                    x_parts.sort_by_key(|(i, _)| *i);
+                    t_parts.sort_by_key(|(i, _)| *i);
+                    let mut x_share = x_parts.remove(0).1;
+                    for (_, m) in x_parts {
+                        x_share = x_share.concat_cols(&m);
+                    }
+                    let mut t_share = t_parts.remove(0).1;
+                    for (_, m) in t_parts {
+                        t_share = t_share.concat_rows(&m);
+                    }
+                    debug_assert_eq!(x_share.shape(), (rows, total_d));
+                    debug_assert_eq!(t_share.shape(), (total_d, h));
+
+                    // 3) triple + Beaver matmul through the Pallas kernel
+                    let triple = if is_a {
+                        dealer::request_mat_triple(p, ids::DEALER, rows, total_d, h)?
+                    } else {
+                        dealer::recv_mat_triple_b(p, ids::DEALER, rows, total_d, h)?
+                    };
+                    let eng = engine.as_mut().unwrap();
+                    // engine is behind &mut — wrap in RefCell for the closure
+                    let eng_cell = std::cell::RefCell::new(eng);
+                    let art = ring_art.clone();
+                    // the AOT Pallas kernel is the default hot path; the
+                    // §Perf pass measured a 3.5-5.5x interpret-mode CPU
+                    // overhead vs the native ring matmul, selectable via
+                    // SPNN_NATIVE_MM=1 (EXPERIMENTS.md §Perf)
+                    let native = std::env::var("SPNN_NATIVE_MM").is_ok();
+                    let mm = move |x: &RingMat, w: &RingMat| -> RingMat {
+                        if native {
+                            x.matmul(w)
+                        } else {
+                            eng_cell
+                                .borrow_mut()
+                                .ring_matmul(&art, x, w)
+                                .expect("ring matmul artifact")
+                        }
+                    };
+                    let mut z =
+                        beaver_matmul(p, peer, role, &x_share, &t_share, &triple, &mm)?;
+                    // 4) truncate my share, ship to the server
+                    trunc_share_mat(&mut z, role);
+                    p.send(ids::SERVER, Payload::U64s(z.data))?;
+                } else {
+                    // extra holder: share my block to A and B
+                    let x_ring = RingMat::encode_f64(rows, dj, &xblk.data);
+                    let t_ring = RingMat::encode_f64(dj, h, &theta_j.data);
+                    let (xa, xb) = share2(&mut rng, &x_ring);
+                    let (ta, tb) = share2(&mut rng, &t_ring);
+                    let mut buf_a = xa.data;
+                    buf_a.extend_from_slice(&ta.data);
+                    p.send(ids::holder(0), Payload::U64s(buf_a))?;
+                    let mut buf_b = xb.data;
+                    buf_b.extend_from_slice(&tb.data);
+                    p.send(ids::holder(1), Payload::U64s(buf_b))?;
+                }
+            }
+
+            // ---- label computations on A (§4.5) ----
+            if is_a {
+                let hl = p.recv_f32s(ids::SERVER)?;
+                let mut hl_pad = vec![0.0f32; cap * hl_dim];
+                hl_pad[..rows * hl_dim].copy_from_slice(&hl);
+                let y = yj.as_ref().unwrap();
+                let mut y_pad = vec![0.0f32; cap];
+                y_pad[..rows].copy_from_slice(&y[s..s + rows]);
+                let mut mask = vec![0.0f32; cap];
+                for m in mask.iter_mut().take(rows) {
+                    *m = 1.0;
+                }
+                let wy_f32 = wy.to_f32();
+                let by_f32 = by.to_f32();
+                let eng = engine.as_mut().unwrap();
+                let outs = eng.execute(
+                    &cfg.artifact("label_grad", cap),
+                    &[
+                        TensorIn::F32(&hl_pad),
+                        TensorIn::F32(&y_pad),
+                        TensorIn::F32(&mask),
+                        TensorIn::F32(&wy_f32),
+                        TensorIn::F32(&by_f32),
+                    ],
+                )?;
+                let loss = outs[1].scalar()?;
+                let g_hl = outs[2].clone().f32()?;
+                let g_wy = outs[3].clone().f32()?;
+                let g_by = outs[4].clone().f32()?;
+                up.step_mat_f32(&mut wy, &g_wy);
+                up.step_mat_f32(&mut by, &g_by);
+                p.send(ids::SERVER, Payload::F32s(g_hl[..rows * hl_dim].to_vec()))?;
+                loss_sum += loss;
+                // loss scalar to server for epoch monitoring (f64 channel)
+                // (sent after g_hl so the server can overlap the backward)
+                p.send(ids::SERVER, Payload::F64s(vec![loss]))?;
+            }
+
+            // ---- local first-layer backward (§4.6) ----
+            let g_h1 = p.recv_f32s(ids::SERVER)?;
+            if g_h1.len() != rows * h {
+                return Err(Error::Protocol("holder: g_h1 size".into()));
+            }
+            let g_h1_m = MatF64::from_f32(rows, h, &g_h1);
+            let g_theta = xblk.transpose().matmul(&g_h1_m);
+            up.step_mat_f32(&mut theta_j, &g_theta.to_f32());
+            up.tick();
+        }
+        if is_a {
+            train_losses.push(loss_sum / plan.len() as f64);
+        }
+    }
+    if is_a && !he {
+        dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
+    }
+    parties::await_stop(p)?;
+
+    // hand the final block to the evaluation harness (out-of-band)
+    {
+        let mut fp = fp.lock().unwrap();
+        let (s, e) = split.ranges[j];
+        fp.theta0.data[s * cfg.h1_dim..e * cfg.h1_dim].copy_from_slice(&theta_j.data);
+        if is_a {
+            fp.wy = wy;
+            fp.by = by;
+        }
+    }
+    Ok(PartyOut {
+        sim_time: p.now(),
+        epoch_losses: train_losses,
+        ..Default::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FRAUD;
+    use crate::data::{synth_fraud, SynthOpts};
+
+    fn artifacts_ready() -> bool {
+        crate::runtime::default_artifact_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn batch_plan_covers_everything() {
+        assert_eq!(batch_plan(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(batch_plan(4, 4), vec![(0, 4)]);
+        assert_eq!(batch_plan(3, 10), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn spnn_ss_trains_small_fraud() {
+        if !artifacts_ready() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(1200));
+        let (train, test) = ds.split(0.8, 1);
+        let tc = TrainConfig { batch: 256, epochs: 2, ..Default::default() };
+        let rep = Spnn { he: false }
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert_eq!(rep.train_losses.len(), 2);
+        assert!(rep.train_losses[1] <= rep.train_losses[0] * 1.05,
+                "loss diverged: {:?}", rep.train_losses);
+        assert!(rep.auc > 0.6, "AUC too low: {}", rep.auc);
+        assert!(rep.online_bytes > 0 && rep.offline_bytes > 0);
+    }
+
+    #[test]
+    fn spnn_ss_three_holders() {
+        if !artifacts_ready() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(800));
+        let (train, test) = ds.split(0.8, 2);
+        let tc = TrainConfig { batch: 256, epochs: 1, ..Default::default() };
+        let rep = Spnn { he: false }
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 3)
+            .unwrap();
+        assert!(rep.auc > 0.5, "AUC {}", rep.auc);
+    }
+
+    #[test]
+    fn spnn_he_trains_small_fraud() {
+        if !artifacts_ready() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(400));
+        let (train, test) = ds.split(0.8, 3);
+        let tc = TrainConfig {
+            batch: 256,
+            epochs: 1,
+            paillier_bits: 256, // test-size keys; experiments use 512/1024
+            ..Default::default()
+        };
+        let rep = Spnn { he: true }
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert!(rep.auc > 0.5, "AUC {}", rep.auc);
+        assert_eq!(rep.offline_bytes, 0, "HE path has no dealer traffic");
+    }
+
+    #[test]
+    fn ss_and_he_reach_similar_loss() {
+        // both variants compute the same h1 (up to fixed-point noise)
+        if !artifacts_ready() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(600));
+        let (train, test) = ds.split(0.8, 4);
+        let tc_ss = TrainConfig { batch: 256, epochs: 1, ..Default::default() };
+        let tc_he = TrainConfig { batch: 256, epochs: 1, paillier_bits: 256, ..Default::default() };
+        let r1 = Spnn { he: false }
+            .train(&FRAUD, &tc_ss, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        let r2 = Spnn { he: true }
+            .train(&FRAUD, &tc_he, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert!(
+            (r1.train_losses[0] - r2.train_losses[0]).abs() < 0.05,
+            "SS {} vs HE {}",
+            r1.train_losses[0],
+            r2.train_losses[0]
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! ChaCha20 stream generator (RFC 8439 core, counter-mode keystream).
+//!
+//! This is the **cryptographic** RNG: secret-share masks, Beaver triple
+//! expansion and Paillier nonces all come from here. In the MPC protocols a
+//! 32-byte seed doubles as a PRG key that two parties expand identically —
+//! that is how the trusted dealer compresses correlated randomness from
+//! O(matrix) bytes down to one seed per matrix (DESIGN.md §9).
+
+use super::Rng64;
+
+/// ChaCha20-based deterministic random generator.
+#[derive(Clone, Debug)]
+pub struct ChaChaRng {
+    key: [u32; 8],
+    counter: u64,
+    nonce: u64,
+    /// Buffered keystream block (16 words) and read position.
+    block: [u32; 16],
+    pos: usize,
+}
+
+const SIGMA: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+const ROUNDS: usize = 20;
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+fn chacha_block(key: &[u32; 8], counter: u64, nonce: u64) -> [u32; 16] {
+    let mut s = [0u32; 16];
+    s[..4].copy_from_slice(&SIGMA);
+    s[4..12].copy_from_slice(key);
+    s[12] = counter as u32;
+    s[13] = (counter >> 32) as u32;
+    s[14] = nonce as u32;
+    s[15] = (nonce >> 32) as u32;
+    let mut w = s;
+    for _ in 0..ROUNDS / 2 {
+        // column rounds
+        quarter_round(&mut w, 0, 4, 8, 12);
+        quarter_round(&mut w, 1, 5, 9, 13);
+        quarter_round(&mut w, 2, 6, 10, 14);
+        quarter_round(&mut w, 3, 7, 11, 15);
+        // diagonal rounds
+        quarter_round(&mut w, 0, 5, 10, 15);
+        quarter_round(&mut w, 1, 6, 11, 12);
+        quarter_round(&mut w, 2, 7, 8, 13);
+        quarter_round(&mut w, 3, 4, 9, 14);
+    }
+    for (wi, si) in w.iter_mut().zip(s.iter()) {
+        *wi = wi.wrapping_add(*si);
+    }
+    w
+}
+
+impl ChaChaRng {
+    /// Construct from a 32-byte key (the PRG seed) and a 64-bit nonce
+    /// (domain separator: party id, matrix id, epoch ...).
+    pub fn from_seed(seed: [u8; 32], nonce: u64) -> Self {
+        let mut key = [0u32; 8];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes(seed[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        let mut rng = ChaChaRng { key, counter: 0, nonce, block: [0; 16], pos: 16 };
+        rng.refill();
+        rng
+    }
+
+    /// Convenience: derive a seed from a u64 (tests, non-adversarial use).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut s = seed;
+        let mut bytes = [0u8; 32];
+        for chunk in bytes.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&super::splitmix64(&mut s).to_le_bytes());
+        }
+        Self::from_seed(bytes, 0)
+    }
+
+    fn refill(&mut self) {
+        self.block = chacha_block(&self.key, self.counter, self.nonce);
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    /// Fresh 32-byte seed (for handing PRG keys to other parties).
+    pub fn gen_seed(&mut self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for chunk in out.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        out
+    }
+}
+
+impl Rng64 for ChaChaRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        if self.pos + 2 > 16 {
+            self.refill();
+        }
+        let lo = self.block[self.pos] as u64;
+        let hi = self.block[self.pos + 1] as u64;
+        self.pos += 2;
+        lo | (hi << 32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 8439 §2.3.2 test vector for the ChaCha20 block function.
+    #[test]
+    fn rfc8439_block_vector() {
+        let mut key = [0u32; 8];
+        let key_bytes: Vec<u8> = (0u8..32).collect();
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes(key_bytes[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        // nonce 00:00:00:09:00:00:00:4a:00:00:00:00, counter 1.
+        // Our layout packs counter into words 12-13 and nonce into 14-15,
+        // so replicate the RFC state directly through the core function by
+        // choosing counter/nonce words to match:
+        //   s[12]=1 (counter), s[13]=0x09000000, s[14]=0x4a000000, s[15]=0
+        let counter = 1u64 | (0x0900_0000u64 << 32);
+        let nonce = 0x4a00_0000u64;
+        let out = chacha_block(&key, counter, nonce);
+        let expected: [u32; 16] = [
+            0xe4e7f110, 0x15593bd1, 0x1fdd0f50, 0xc47120a3, 0xc7f4d1c7,
+            0x0368c033, 0x9aaa2204, 0x4e6cd4c3, 0x466482d2, 0x09aa9f07,
+            0x05d7c214, 0xa2028bd9, 0xd19c12b5, 0xb94e16de, 0xe883d0cb,
+            0x4e3c50a2,
+        ];
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn deterministic_expansion() {
+        let seed = [7u8; 32];
+        let mut a = ChaChaRng::from_seed(seed, 3);
+        let mut b = ChaChaRng::from_seed(seed, 3);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn nonce_separates_streams() {
+        let seed = [9u8; 32];
+        let mut a = ChaChaRng::from_seed(seed, 0);
+        let mut b = ChaChaRng::from_seed(seed, 1);
+        let eq = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(eq, 0);
+    }
+
+    #[test]
+    fn bit_balance() {
+        let mut rng = ChaChaRng::seed_from_u64(5);
+        let n = 20_000;
+        let mut ones = 0u64;
+        for _ in 0..n {
+            ones += rng.next_u64().count_ones() as u64;
+        }
+        let frac = ones as f64 / (64.0 * n as f64);
+        assert!((frac - 0.5).abs() < 0.005, "{frac}");
+    }
+}

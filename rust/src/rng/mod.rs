@@ -1,0 +1,149 @@
+//! From-scratch random number generation.
+//!
+//! The offline vendor tree has no `rand` crate, so SPNN ships its own two
+//! generators with distinct duties:
+//!
+//! * [`Pcg64`] — PCG-XSL-RR-128/64, fast statistical RNG for data synthesis,
+//!   initialization, SGLD noise and tests.
+//! * [`ChaChaRng`] — ChaCha20 stream, the cryptographic RNG used wherever
+//!   security matters: secret-share masks, Beaver triples, Paillier
+//!   randomness, PRG-compressed correlated randomness (both parties expand
+//!   the same seed — determinism is part of the protocol, see
+//!   `smpc::triple`).
+//!
+//! Both implement [`Rng64`] so the consumers are generic.
+
+mod chacha;
+mod normal;
+mod pcg;
+
+pub use chacha::ChaChaRng;
+pub use normal::NormalSampler;
+pub use pcg::Pcg64;
+
+/// Minimal uniform-u64 generator interface.
+pub trait Rng64 {
+    /// Next uniformly distributed `u64`.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, bound)` by rejection sampling (no modulo bias).
+    fn u64_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "u64_below(0)");
+        // Rejection zone: multiples of bound fitting in 2^64.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill a slice with uniform u64s.
+    fn fill_u64(&mut self, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.next_u64();
+        }
+    }
+
+    /// Standard normal via Box–Muller (see [`NormalSampler`] for the
+    /// cached-pair version used in hot loops).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64_unit();
+            if u1 > 0.0 {
+                let u2 = self.f64_unit();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.u64_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — used to expand small seeds into generator state.
+/// (Vigna's canonical constants; also a decent standalone mixer.)
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut s1 = 42u64;
+        let mut s2 = 42u64;
+        for _ in 0..10 {
+            assert_eq!(splitmix64(&mut s1), splitmix64(&mut s2));
+        }
+    }
+
+    #[test]
+    fn u64_below_respects_bound() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2 + 1] {
+            for _ in 0..200 {
+                assert!(rng.u64_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_unit_in_range_and_varied() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut min = 1.0f64;
+        let mut max = 0.0f64;
+        for _ in 0..10_000 {
+            let v = rng.f64_unit();
+            assert!((0.0..1.0).contains(&v));
+            min = min.min(v);
+            max = max.max(v);
+        }
+        assert!(min < 0.01 && max > 0.99, "poor coverage: [{min}, {max}]");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.normal();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "identity shuffle");
+    }
+}

@@ -1,0 +1,99 @@
+//! PCG-XSL-RR-128/64 (O'Neill 2014): 128-bit LCG state, xorshift-low +
+//! random rotation output. Fast, tiny, passes BigCrush — the workhorse
+//! statistical RNG for everything that does not need to be unpredictable.
+
+use super::{splitmix64, Rng64};
+
+const MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG-XSL-RR-128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd stream selector
+}
+
+impl Pcg64 {
+    /// Construct from full 128-bit state + stream.
+    pub fn new(state: u128, stream: u128) -> Self {
+        let mut g = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        g.state = g.state.wrapping_add(state);
+        g.step();
+        g
+    }
+
+    /// Expand a 64-bit seed via SplitMix64 (stream fixed).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut s = seed;
+        let a = splitmix64(&mut s) as u128;
+        let b = splitmix64(&mut s) as u128;
+        let c = splitmix64(&mut s) as u128;
+        let d = splitmix64(&mut s) as u128;
+        Self::new((a << 64) | b, (c << 64) | d)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+}
+
+impl Rng64 for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::seed_from_u64(123);
+        let mut b = Pcg64::seed_from_u64(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn bit_balance() {
+        // each bit position should be ~50% ones
+        let mut rng = Pcg64::seed_from_u64(77);
+        let n = 20_000;
+        let mut counts = [0u32; 64];
+        for _ in 0..n {
+            let v = rng.next_u64();
+            for (b, c) in counts.iter_mut().enumerate() {
+                *c += ((v >> b) & 1) as u32;
+            }
+        }
+        for (b, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.5).abs() < 0.02, "bit {b}: {frac}");
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(5, 1);
+        let mut b = Pcg64::new(5, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`).
+//!
+//! Format, one artifact per line (tab-separated):
+//! `name \t file \t in_sig \t out_sig` where a sig is
+//! `shape:dtype;shape:dtype;...`, shape is `AxBxC` or `scalar`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Element dtype of a tensor crossing the FFI boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    U64,
+    S64,
+}
+
+impl Dt {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dt::F32),
+            "u64" => Ok(Dt::U64),
+            "s64" => Ok(Dt::S64),
+            other => Err(Error::Artifact(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dt: Dt,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (shape_s, dt_s) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact(format!("bad sig {s:?}")))?;
+        let shape = if shape_s == "scalar" {
+            vec![]
+        } else {
+            shape_s
+                .split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Artifact(format!("bad dim {d:?} in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSig { shape, dt: Dt::parse(dt_s)? })
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed manifest: artifact name -> entry.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 4 columns, got {}",
+                    ln + 1,
+                    cols.len()
+                )));
+            }
+            let parse_sigs = |s: &str| -> Result<Vec<TensorSig>> {
+                s.split(';').map(TensorSig::parse).collect()
+            };
+            let entry = ArtifactEntry {
+                name: cols[0].to_string(),
+                path: dir.join(cols[1]),
+                inputs: parse_sigs(cols[2])?,
+                outputs: parse_sigs(cols[3])?,
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "artifact {name:?} not in manifest ({} known)",
+                self.entries.len()
+            ))
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# name\tfile\tinputs\toutputs\n\
+        label_fwd_fraud_b256\tlabel_fwd_fraud_b256.hlo.txt\t256x8:f32;8x1:f32;1:f32\t256:f32\n\
+        ring_matmul_fraud_b256\tring_matmul_fraud_b256.hlo.txt\t256x28:u64;28x8:u64\t256x8:u64\n\
+        scalar_thing\ts.hlo.txt\tscalar:f32\tscalar:f32\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m.get("ring_matmul_fraud_b256").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![256, 28]);
+        assert_eq!(e.inputs[0].dt, Dt::U64);
+        assert_eq!(e.outputs[0].elements(), 256 * 8);
+        assert_eq!(e.path, PathBuf::from("/art/ring_matmul_fraud_b256.hlo.txt"));
+        let s = m.get("scalar_thing").unwrap();
+        assert_eq!(s.inputs[0].shape, Vec::<usize>::new());
+        assert_eq!(s.inputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse("a\tb\tc", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\t1x2:f99\t1:f32", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\t1xq:f32\t1:f32", Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! The PJRT execution engine: lazy compile cache + literal marshaling.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::artifact::{ArtifactEntry, Dt, Manifest, TensorSig};
+use crate::smpc::RingMat;
+use crate::{Error, Result};
+
+/// Input tensor handed to [`Engine::execute`].
+pub enum TensorIn<'a> {
+    F32(&'a [f32]),
+    U64(&'a [u64]),
+}
+
+/// Output tensor returned by [`Engine::execute`].
+#[derive(Clone, Debug)]
+pub enum TensorOut {
+    F32(Vec<f32>),
+    U64(Vec<u64>),
+}
+
+impl TensorOut {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorOut::F32(v) => Ok(v),
+            TensorOut::U64(_) => Err(Error::Artifact("expected f32 output".into())),
+        }
+    }
+
+    pub fn u64(self) -> Result<Vec<u64>> {
+        match self {
+            TensorOut::U64(v) => Ok(v),
+            TensorOut::F32(_) => Err(Error::Artifact("expected u64 output".into())),
+        }
+    }
+
+    /// First element as f64 (scalar outputs like the loss).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            TensorOut::F32(v) => v
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| Error::Artifact("empty scalar".into())),
+            TensorOut::U64(v) => v
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| Error::Artifact("empty scalar".into())),
+        }
+    }
+}
+
+/// Per-party PJRT engine. Artifacts compile on first use and stay cached;
+/// every `execute` validates shapes/dtypes against the manifest signature.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Engine {
+    /// Build from an artifact directory (reads `manifest.txt`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Engine over the default artifact dir.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile_if_needed(&mut self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, ArtifactEntry)> {
+        let entry = self.manifest.get(name)?.clone();
+        if !self.compiled.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().ok_or_else(|| {
+                    Error::Artifact(format!("non-utf8 path {:?}", entry.path))
+                })?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok((self.compiled.get(name).unwrap(), entry))
+    }
+
+    /// Execute artifact `name` with validated inputs; returns all outputs.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+        let (_, entry) = self.compile_if_needed(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            literals.push(to_literal(input, sig).map_err(|e| {
+                Error::Artifact(format!("{name}: input {i}: {e}"))
+            })?);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                parts.len()
+            )));
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, sig)| from_literal(lit, sig))
+            .collect()
+    }
+
+    /// Ring matmul through the AOT Pallas kernel, padding ragged shapes to
+    /// the artifact's static shape (zero rows/cols are exact in ring math).
+    ///
+    /// `artifact` must be a `ring_matmul_*` entry with signature
+    /// `(B x D, D x H) -> (B x H)` and `x.rows <= B`, `x.cols <= D`,
+    /// `w.cols <= H`.
+    pub fn ring_matmul(&mut self, artifact: &str, x: &RingMat, w: &RingMat) -> Result<RingMat> {
+        let entry = self.manifest.get(artifact)?.clone();
+        let (b_cap, d_cap) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let h_cap = entry.inputs[1].shape[1];
+        if x.rows > b_cap || x.cols > d_cap || w.cols > h_cap || x.cols != w.rows {
+            return Err(Error::Artifact(format!(
+                "{artifact}: shape ({},{})x({},{}) exceeds cap ({b_cap},{d_cap})x({d_cap},{h_cap})",
+                x.rows, x.cols, w.rows, w.cols
+            )));
+        }
+        // pad inputs into artifact-shaped buffers
+        let mut xb = vec![0u64; b_cap * d_cap];
+        for r in 0..x.rows {
+            xb[r * d_cap..r * d_cap + x.cols]
+                .copy_from_slice(&x.data[r * x.cols..(r + 1) * x.cols]);
+        }
+        let mut wb = vec![0u64; d_cap * h_cap];
+        for r in 0..w.rows {
+            wb[r * h_cap..r * h_cap + w.cols]
+                .copy_from_slice(&w.data[r * w.cols..(r + 1) * w.cols]);
+        }
+        let outs = self.execute(artifact, &[TensorIn::U64(&xb), TensorIn::U64(&wb)])?;
+        let full = outs.into_iter().next().unwrap().u64()?;
+        // crop to the logical shape
+        let mut out = RingMat::zeros(x.rows, w.cols);
+        for r in 0..x.rows {
+            out.data[r * w.cols..(r + 1) * w.cols]
+                .copy_from_slice(&full[r * h_cap..r * h_cap + w.cols]);
+        }
+        Ok(out)
+    }
+
+    /// Total artifact executions (perf accounting).
+    pub fn total_execs(&self) -> u64 {
+        self.exec_counts.values().sum()
+    }
+}
+
+fn to_literal(input: &TensorIn, sig: &TensorSig) -> Result<xla::Literal> {
+    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+    match (input, sig.dt) {
+        (TensorIn::F32(v), Dt::F32) => {
+            check_len(v.len(), sig)?;
+            let lit = xla::Literal::vec1(v);
+            if sig.shape.is_empty() {
+                Ok(lit.reshape(&[])?)
+            } else {
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+        (TensorIn::U64(v), Dt::U64) => {
+            check_len(v.len(), sig)?;
+            let lit = xla::Literal::vec1(v);
+            if sig.shape.is_empty() {
+                Ok(lit.reshape(&[])?)
+            } else {
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+        _ => Err(Error::Artifact("dtype mismatch".into())),
+    }
+}
+
+fn check_len(len: usize, sig: &TensorSig) -> Result<()> {
+    if len != sig.elements() {
+        return Err(Error::Artifact(format!(
+            "length {len} != signature elements {} (shape {:?})",
+            sig.elements(),
+            sig.shape
+        )));
+    }
+    Ok(())
+}
+
+fn from_literal(lit: xla::Literal, sig: &TensorSig) -> Result<TensorOut> {
+    match sig.dt {
+        Dt::F32 => Ok(TensorOut::F32(lit.to_vec::<f32>()?)),
+        Dt::U64 => Ok(TensorOut::U64(lit.to_vec::<u64>()?)),
+        Dt::S64 => {
+            let v = lit.to_vec::<i64>()?;
+            Ok(TensorOut::U64(v.into_iter().map(|x| x as u64).collect()))
+        }
+    }
+}
+
+/// Resolve the artifact dir for tests: prefer `SPNN_ARTIFACTS`, else the
+/// repo-relative `artifacts/` (tests are run from the workspace root).
+pub fn test_artifact_dir() -> PathBuf {
+    super::default_artifact_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn engine() -> Option<Engine> {
+        let dir = test_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping engine tests: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn ring_matmul_matches_native() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = RingMat::random(&mut rng, 100, 28);
+        let w = RingMat::random(&mut rng, 28, 8);
+        let got = eng.ring_matmul("ring_matmul_fraud_b256", &x, &w).unwrap();
+        assert_eq!(got, x.matmul(&w), "PJRT ring kernel != native ring matmul");
+    }
+
+    #[test]
+    fn ring_matmul_full_batch() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x = RingMat::random(&mut rng, 256, 28);
+        let w = RingMat::random(&mut rng, 28, 8);
+        let got = eng.ring_matmul("ring_matmul_fraud_b256", &x, &w).unwrap();
+        assert_eq!(got, x.matmul(&w));
+        assert_eq!(eng.total_execs(), 1);
+    }
+
+    #[test]
+    fn server_fwd_runs_and_shapes() {
+        let Some(mut eng) = engine() else { return };
+        let b = 256;
+        let h1 = vec![0.1f32; b * 8];
+        let w = vec![0.05f32; 8 * 8];
+        let bias = vec![0.0f32; 8];
+        let outs = eng
+            .execute(
+                "server_fwd_fraud_b256",
+                &[TensorIn::F32(&h1), TensorIn::F32(&w), TensorIn::F32(&bias)],
+            )
+            .unwrap();
+        let hl = outs.into_iter().next().unwrap().f32().unwrap();
+        assert_eq!(hl.len(), b * 8);
+        // sigmoid outputs in (0,1)
+        assert!(hl.iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn wrong_inputs_are_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let bad = vec![0.0f32; 3];
+        assert!(eng
+            .execute("server_fwd_fraud_b256", &[TensorIn::F32(&bad)])
+            .is_err());
+        let h1 = vec![0.0f32; 256 * 8];
+        assert!(eng
+            .execute(
+                "server_fwd_fraud_b256",
+                &[TensorIn::F32(&h1), TensorIn::F32(&bad), TensorIn::F32(&bad)]
+            )
+            .is_err());
+        assert!(eng.execute("not_an_artifact", &[]).is_err());
+    }
+}

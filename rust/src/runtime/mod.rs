@@ -1,0 +1,27 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from the rust
+//! training hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers every SPNN graph to
+//! `artifacts/*.hlo.txt` plus a `manifest.txt` describing I/O signatures.
+//! The [`Engine`] parses the manifest, compiles artifacts **lazily** on
+//! first use (a party only pays for the graphs it runs), caches the loaded
+//! executables, and marshals between rust slices and XLA literals.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod artifact;
+mod engine;
+
+pub use artifact::{Manifest, TensorSig, Dt};
+pub use engine::{Engine, TensorIn, TensorOut};
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // honor an override for tests and deployments
+    if let Ok(d) = std::env::var("SPNN_ARTIFACTS") {
+        return d.into();
+    }
+    "artifacts".into()
+}

@@ -1,0 +1,595 @@
+//! Boolean (XOR) sharing and the secure-comparison stack.
+//!
+//! Used by the SecureML baseline for its non-linearities: ReLU's derivative
+//! (DReLU) and the piecewise sigmoid both reduce to *most-significant-bit
+//! extraction* of a shared value. SPNN itself deliberately avoids all of
+//! this (its server computes activations in plaintext) — reproducing the
+//! cost difference is exactly the point of the baseline.
+//!
+//! Protocol (trusted-dealer GMW, bit-sliced 64 lanes per word):
+//!
+//! 1. **Open** `c = x + r` with a dealer edaBit `r` (arith shares of `r` +
+//!    XOR shares of `r`'s bits). `c` is uniform, reveals nothing.
+//! 2. **Borrow circuit**: `msb(x) = msb(c - r)`, computed by a Kogge–Stone
+//!    borrow-lookahead over the shared bits of `r` and the public bits of
+//!    `c`: generate `g = ¬c ∧ r` and propagate `p = ¬(c ⊕ r)` are *local*
+//!    (one operand public); the `log2(64) = 6` prefix levels each cost one
+//!    batched secure-AND round.
+//! 3. **B2A** via dealer daBits to get an arithmetic share of the bit.
+
+use crate::netsim::{NetPort, PartyId, Payload};
+use crate::rng::{ChaChaRng, Rng64};
+use crate::Result;
+
+/// Words needed to pack `lanes` bits.
+#[inline]
+pub fn words_for(lanes: usize) -> usize {
+    lanes.div_ceil(64)
+}
+
+/// Bit-sliced matrix: 64 bit-positions x `lanes` elements, each position a
+/// packed word row. `words[pos * wpl + w]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMat {
+    pub lanes: usize,
+    pub wpl: usize,
+    pub words: Vec<u64>,
+}
+
+impl BitMat {
+    pub fn zeros(lanes: usize) -> Self {
+        let wpl = words_for(lanes);
+        BitMat { lanes, wpl, words: vec![0; 64 * wpl] }
+    }
+
+    /// Bit-decompose `vals` (lane-major) into slices.
+    pub fn decompose(vals: &[u64]) -> Self {
+        let lanes = vals.len();
+        let mut m = Self::zeros(lanes);
+        for (lane, &v) in vals.iter().enumerate() {
+            let (w, off) = (lane / 64, lane % 64);
+            for pos in 0..64 {
+                if (v >> pos) & 1 == 1 {
+                    m.words[pos * m.wpl + w] |= 1u64 << off;
+                }
+            }
+        }
+        m
+    }
+
+    /// Recompose to values (inverse of [`Self::decompose`]).
+    pub fn recompose(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.lanes];
+        for pos in 0..64 {
+            let row = &self.words[pos * self.wpl..(pos + 1) * self.wpl];
+            for (lane, o) in out.iter_mut().enumerate() {
+                let (w, off) = (lane / 64, lane % 64);
+                *o |= ((row[w] >> off) & 1) << pos;
+            }
+        }
+        out
+    }
+
+    /// Packed word row of one bit position.
+    pub fn row(&self, pos: usize) -> &[u64] {
+        &self.words[pos * self.wpl..(pos + 1) * self.wpl]
+    }
+
+    pub fn xor(&self, other: &Self) -> Self {
+        assert_eq!(self.lanes, other.lanes);
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a ^ b).collect();
+        BitMat { lanes: self.lanes, wpl: self.wpl, words }
+    }
+
+    /// Random bit matrix (XOR-share material).
+    pub fn random<R: Rng64>(rng: &mut R, lanes: usize) -> Self {
+        let wpl = words_for(lanes);
+        let mut words = vec![0u64; 64 * wpl];
+        rng.fill_u64(&mut words);
+        // mask tail bits of the last word so lanes stay canonical
+        let tail = lanes % 64;
+        if tail != 0 {
+            let mask = (1u64 << tail) - 1;
+            for pos in 0..64 {
+                words[pos * wpl + wpl - 1] &= mask;
+            }
+        }
+        BitMat { lanes, wpl, words }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dealer material
+// ---------------------------------------------------------------------------
+
+/// Bank of AND-triple words (XOR shares of `a, b, c = a & b`), consumed
+/// sequentially by the comparison circuit.
+#[derive(Clone, Debug, Default)]
+pub struct TripleBank {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+    cursor: usize,
+}
+
+impl TripleBank {
+    pub fn new(a: Vec<u64>, b: Vec<u64>, c: Vec<u64>) -> Self {
+        assert!(a.len() == b.len() && b.len() == c.len());
+        TripleBank { a, b, c, cursor: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> (&[u64], &[u64], &[u64]) {
+        assert!(
+            self.cursor + n <= self.a.len(),
+            "TripleBank exhausted: need {n}, have {}",
+            self.a.len() - self.cursor
+        );
+        let s = self.cursor;
+        self.cursor += n;
+        (&self.a[s..s + n], &self.b[s..s + n], &self.c[s..s + n])
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.a.len() - self.cursor
+    }
+
+    /// AND-triple words one 64-lane comparison batch consumes.
+    pub fn words_per_compare(wpl: usize) -> usize {
+        // Kogge–Stone levels d ∈ {1,2,4,8,16,32}: (63-d+1) positions... we
+        // combine positions i ∈ [d, 64) — (64-d) nodes, 2 ANDs each.
+        let positions: usize = [1usize, 2, 4, 8, 16, 32].iter().map(|d| 64 - d).sum();
+        2 * positions * wpl
+    }
+}
+
+/// edaBit: shares of a uniform `r` in both representations.
+#[derive(Clone, Debug)]
+pub struct EdaBits {
+    /// Additive share of `r` (per lane).
+    pub r_arith: Vec<u64>,
+    /// XOR shares of `r`'s bit-decomposition.
+    pub r_bits: BitMat,
+}
+
+/// daBit vector: shares of uniform bits in both representations.
+#[derive(Clone, Debug)]
+pub struct DaBits {
+    /// Additive share of each bit's 0/1 value (per lane).
+    pub arith: Vec<u64>,
+    /// XOR share of the bits (packed words).
+    pub bits: Vec<u64>,
+}
+
+/// In-memory dealer for the boolean stack (the network dealer in
+/// `smpc::dealer` wraps these with PRG compression + byte accounting).
+pub struct BoolDealer {
+    rng: ChaChaRng,
+}
+
+impl BoolDealer {
+    pub fn new(seed: u64) -> Self {
+        BoolDealer { rng: ChaChaRng::seed_from_u64(seed) }
+    }
+
+    /// Deal `n` AND-triple words to two parties.
+    pub fn and_triples(&mut self, n: usize) -> (TripleBank, TripleBank) {
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        self.rng.fill_u64(&mut a);
+        self.rng.fill_u64(&mut b);
+        let c: Vec<u64> = a.iter().zip(&b).map(|(x, y)| x & y).collect();
+        let mut a1 = vec![0u64; n];
+        let mut b1 = vec![0u64; n];
+        let mut c1 = vec![0u64; n];
+        self.rng.fill_u64(&mut a1);
+        self.rng.fill_u64(&mut b1);
+        self.rng.fill_u64(&mut c1);
+        let a0: Vec<u64> = a.iter().zip(&a1).map(|(x, s)| x ^ s).collect();
+        let b0: Vec<u64> = b.iter().zip(&b1).map(|(x, s)| x ^ s).collect();
+        let c0: Vec<u64> = c.iter().zip(&c1).map(|(x, s)| x ^ s).collect();
+        (
+            TripleBank { a: a0, b: b0, c: c0, cursor: 0 },
+            TripleBank { a: a1, b: b1, c: c1, cursor: 0 },
+        )
+    }
+
+    /// Deal edaBits for `lanes` values.
+    pub fn edabits(&mut self, lanes: usize) -> (EdaBits, EdaBits) {
+        let mut r = vec![0u64; lanes];
+        self.rng.fill_u64(&mut r);
+        let bits = BitMat::decompose(&r);
+        // arithmetic shares
+        let mut r1 = vec![0u64; lanes];
+        self.rng.fill_u64(&mut r1);
+        let r0: Vec<u64> = r.iter().zip(&r1).map(|(x, s)| x.wrapping_sub(*s)).collect();
+        // boolean shares
+        let b1 = BitMat::random(&mut self.rng, lanes);
+        let b0 = bits.xor(&b1);
+        (
+            EdaBits { r_arith: r0, r_bits: b0 },
+            EdaBits { r_arith: r1, r_bits: b1 },
+        )
+    }
+
+    /// Deal daBits for `lanes` bits.
+    pub fn dabits(&mut self, lanes: usize) -> (DaBits, DaBits) {
+        let wpl = words_for(lanes);
+        let mut packed = vec![0u64; wpl];
+        self.rng.fill_u64(&mut packed);
+        if lanes % 64 != 0 {
+            packed[wpl - 1] &= (1u64 << (lanes % 64)) - 1;
+        }
+        // arith shares of each bit value
+        let mut arith1 = vec![0u64; lanes];
+        self.rng.fill_u64(&mut arith1);
+        let arith0: Vec<u64> = (0..lanes)
+            .map(|l| ((packed[l / 64] >> (l % 64)) & 1).wrapping_sub(arith1[l]))
+            .collect();
+        // bool shares
+        let mut bits1 = vec![0u64; wpl];
+        self.rng.fill_u64(&mut bits1);
+        let bits0: Vec<u64> = packed.iter().zip(&bits1).map(|(x, s)| x ^ s).collect();
+        (
+            DaBits { arith: arith0, bits: bits0 },
+            DaBits { arith: arith1, bits: bits1 },
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online protocols
+// ---------------------------------------------------------------------------
+
+/// Batched secure AND of packed bit words (GMW + Beaver-style triples).
+/// One round: open `d = x ⊕ a`, `e = y ⊕ b`.
+pub fn secure_and(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    x: &[u64],
+    y: &[u64],
+    bank: &mut TripleBank,
+) -> Result<Vec<u64>> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let (ta, tb, tc) = {
+        let (a, b, c) = bank.take(n);
+        (a.to_vec(), b.to_vec(), c.to_vec())
+    };
+    let d_p: Vec<u64> = x.iter().zip(&ta).map(|(v, a)| v ^ a).collect();
+    let e_p: Vec<u64> = y.iter().zip(&tb).map(|(v, b)| v ^ b).collect();
+    let mut buf = d_p.clone();
+    buf.extend_from_slice(&e_p);
+    port.send(peer, Payload::Bits(buf))?;
+    let theirs = port.recv(peer)?.into_bits()?;
+    if theirs.len() != 2 * n {
+        return Err(crate::Error::Protocol("secure_and size".into()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = d_p[i] ^ theirs[i];
+        let e = e_p[i] ^ theirs[n + i];
+        let mut z = (d & tb[i]) ^ (ta[i] & e) ^ tc[i];
+        if role == 0 {
+            z ^= d & e;
+        }
+        out.push(z);
+    }
+    Ok(out)
+}
+
+/// MSB of `x = c - r` where `c` is public and `r`'s bits are XOR-shared.
+///
+/// Returns an XOR share of `msb(x)` packed into `wpl` words.
+/// Borrow recurrence (`g` = generate, `p` = propagate, mutually exclusive,
+/// so OR == XOR): `b_{i+1} = g_i ⊕ (p_i ∧ b_i)`; Kogge–Stone prefix:
+/// `(g,p) ∘ (g',p') = (g ⊕ (p ∧ g'), p ∧ p')`.
+pub fn shared_msb_of_diff(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    c_pub: &[u64],
+    r_bits: &BitMat,
+    bank: &mut TripleBank,
+) -> Result<Vec<u64>> {
+    let lanes = c_pub.len();
+    assert_eq!(lanes, r_bits.lanes);
+    let wpl = r_bits.wpl;
+    let c_bits = BitMat::decompose(c_pub);
+
+    // local generate / propagate per bit position
+    // g = (¬c) ∧ r      (public ∧ shared: each party ANDs its share)
+    // p = ¬(c ⊕ r) = ¬c ⊕ r  (public ⊕ shared: party 0 applies the flip)
+    let mut g = vec![0u64; 64 * wpl];
+    let mut p = vec![0u64; 64 * wpl];
+    for pos in 0..64 {
+        for w in 0..wpl {
+            let idx = pos * wpl + w;
+            let notc = !c_bits.words[idx];
+            g[idx] = notc & r_bits.words[idx];
+            p[idx] = if role == 0 { notc ^ r_bits.words[idx] } else { r_bits.words[idx] };
+        }
+    }
+    // lane-tail hygiene: keep only valid lanes in the packed words
+    let tail_mask = if lanes % 64 == 0 { u64::MAX } else { (1u64 << (lanes % 64)) - 1 };
+    let mask_row = |row: &mut [u64]| {
+        if wpl > 0 {
+            row[wpl - 1] &= tail_mask;
+        }
+    };
+    for pos in 0..64 {
+        mask_row(&mut g[pos * wpl..(pos + 1) * wpl]);
+        mask_row(&mut p[pos * wpl..(pos + 1) * wpl]);
+    }
+
+    // Kogge–Stone prefix: after all levels, g[pos] = borrow out of bit pos
+    for d in [1usize, 2, 4, 8, 16, 32] {
+        // batch this level's two AND groups: p_i ∧ g_{i-d} and p_i ∧ p_{i-d}
+        let npos = 64 - d;
+        let mut lhs = Vec::with_capacity(2 * npos * wpl);
+        let mut rhs = Vec::with_capacity(2 * npos * wpl);
+        for i in d..64 {
+            lhs.extend_from_slice(&p[i * wpl..(i + 1) * wpl]);
+            rhs.extend_from_slice(&g[(i - d) * wpl..(i - d + 1) * wpl]);
+        }
+        for i in d..64 {
+            lhs.extend_from_slice(&p[i * wpl..(i + 1) * wpl]);
+            rhs.extend_from_slice(&p[(i - d) * wpl..(i - d + 1) * wpl]);
+        }
+        let anded = secure_and(port, peer, role, &lhs, &rhs, bank)?;
+        let (pg, pp) = anded.split_at(npos * wpl);
+        for (k, i) in (d..64).enumerate() {
+            for w in 0..wpl {
+                g[i * wpl + w] ^= pg[k * wpl + w];
+                p[i * wpl + w] = pp[k * wpl + w];
+            }
+        }
+    }
+
+    // msb(x) = c_63 ⊕ r_63 ⊕ borrow_in(63);  borrow_in(63) = g[62]
+    let mut msb = vec![0u64; wpl];
+    for w in 0..wpl {
+        msb[w] = r_bits.words[63 * wpl + w] ^ g[62 * wpl + w];
+        if role == 0 {
+            msb[w] ^= c_bits.words[63 * wpl + w];
+        }
+        msb[w] &= tail_mask_for(w, wpl, lanes);
+    }
+    Ok(msb)
+}
+
+fn tail_mask_for(w: usize, wpl: usize, lanes: usize) -> u64 {
+    if w == wpl - 1 && lanes % 64 != 0 {
+        (1u64 << (lanes % 64)) - 1
+    } else {
+        u64::MAX
+    }
+}
+
+/// Convert XOR-shared bits to additive shares of 0/1 values using daBits.
+/// One opening round: `t = β ⊕ b` is public; `β = t + b - 2·t·b` is local.
+pub fn b2a(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    bool_share: &[u64],
+    dab: &DaBits,
+    lanes: usize,
+) -> Result<Vec<u64>> {
+    let wpl = words_for(lanes);
+    assert_eq!(bool_share.len(), wpl);
+    let t_p: Vec<u64> = bool_share.iter().zip(&dab.bits).map(|(x, b)| x ^ b).collect();
+    port.send(peer, Payload::Bits(t_p.clone()))?;
+    let theirs = port.recv(peer)?.into_bits()?;
+    if theirs.len() != wpl {
+        return Err(crate::Error::Protocol("b2a size".into()));
+    }
+    let mut out = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let t = ((t_p[l / 64] ^ theirs[l / 64]) >> (l % 64)) & 1;
+        let b = dab.arith[l];
+        // β = t + (1 - 2t)·b
+        let coeff: u64 = 1u64.wrapping_sub(2u64.wrapping_mul(t));
+        let mut v = coeff.wrapping_mul(b);
+        if role == 0 {
+            v = v.wrapping_add(t);
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// DReLU: additive shares of `[x >= 0]` for a vector of shared ring values.
+///
+/// Cost per 64-lane word: 1 opening + 6 AND rounds + 1 daBit opening.
+pub fn drelu_arith(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    x_share: &[u64],
+    eda: &EdaBits,
+    bank: &mut TripleBank,
+    dab: &DaBits,
+) -> Result<Vec<u64>> {
+    let lanes = x_share.len();
+    assert_eq!(lanes, eda.r_arith.len(), "edaBit lane mismatch");
+    // open c = x + r
+    let m_p: Vec<u64> = x_share
+        .iter()
+        .zip(&eda.r_arith)
+        .map(|(x, r)| x.wrapping_add(*r))
+        .collect();
+    port.send(peer, Payload::U64s(m_p.clone()))?;
+    let theirs = port.recv_u64s(peer)?;
+    if theirs.len() != lanes {
+        return Err(crate::Error::Protocol("drelu open size".into()));
+    }
+    let c: Vec<u64> = m_p.iter().zip(&theirs).map(|(a, b)| a.wrapping_add(*b)).collect();
+    // msb(x) shared, then flip: drelu = ¬msb
+    let mut msb = shared_msb_of_diff(port, peer, role, &c, &eda.r_bits, bank)?;
+    if role == 0 {
+        let wpl = words_for(lanes);
+        for (w, m) in msb.iter_mut().enumerate() {
+            *m ^= tail_mask_for(w, wpl, lanes);
+        }
+    }
+    b2a(port, peer, role, &msb, dab, lanes)
+}
+
+/// Dealer material sizing for one DReLU batch of `lanes` values.
+pub fn drelu_triple_words(lanes: usize) -> usize {
+    TripleBank::words_per_compare(words_for(lanes))
+}
+
+/// Expand a full boolean-dealer bundle for one DReLU batch from a seed
+/// (party-B-side PRG decompression; see `smpc::dealer`).
+pub struct BoolBundle {
+    pub eda: EdaBits,
+    pub bank: TripleBank,
+    pub dab: DaBits,
+}
+
+impl std::fmt::Debug for BoolBundle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BoolBundle(lanes={})", self.eda.r_arith.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{full_mesh, LinkSpec};
+    use crate::rng::Pcg64;
+
+    fn run2<F0, F1, T0: Send + 'static, T1: Send + 'static>(f0: F0, f1: F1) -> (T0, T1)
+    where
+        F0: FnOnce(NetPort) -> T0 + Send + 'static,
+        F1: FnOnce(NetPort) -> T1 + Send + 'static,
+    {
+        let (mut ports, _) = full_mesh(&["P0", "P1"], LinkSpec::lan());
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        let h1 = std::thread::spawn(move || f1(p1));
+        let r0 = f0(p0);
+        (r0, h1.join().expect("party 1 panicked"))
+    }
+
+    #[test]
+    fn bitmat_decompose_recompose() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for lanes in [1usize, 63, 64, 65, 130] {
+            let vals: Vec<u64> = (0..lanes).map(|_| rng.next_u64()).collect();
+            let m = BitMat::decompose(&vals);
+            assert_eq!(m.recompose(), vals, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn secure_and_matches_plaintext() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        let y: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        // XOR-share inputs
+        let xs1: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        let ys1: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        let xs0: Vec<u64> = x.iter().zip(&xs1).map(|(v, s)| v ^ s).collect();
+        let ys0: Vec<u64> = y.iter().zip(&ys1).map(|(v, s)| v ^ s).collect();
+        let mut dealer = BoolDealer::new(3);
+        let (mut b0, mut b1) = dealer.and_triples(10);
+        let (z0, z1) = run2(
+            move |mut p| secure_and(&mut p, 1, 0, &xs0, &ys0, &mut b0).unwrap(),
+            move |mut p| secure_and(&mut p, 0, 1, &xs1, &ys1, &mut b1).unwrap(),
+        );
+        for i in 0..10 {
+            assert_eq!(z0[i] ^ z1[i], x[i] & y[i], "word {i}");
+        }
+    }
+
+    #[test]
+    fn msb_extraction_matches_sign() {
+        let lanes = 100usize;
+        let mut rng = Pcg64::seed_from_u64(4);
+        // mix of positive/negative (two's complement) values
+        let x: Vec<u64> = (0..lanes)
+            .map(|i| {
+                if i % 3 == 0 {
+                    rng.next_u64() | (1u64 << 63) // negative
+                } else {
+                    rng.next_u64() >> 1 // positive
+                }
+            })
+            .collect();
+        // arithmetic shares of x
+        let xs1: Vec<u64> = (0..lanes).map(|_| rng.next_u64()).collect();
+        let xs0: Vec<u64> = x.iter().zip(&xs1).map(|(v, s)| v.wrapping_sub(*s)).collect();
+        let mut dealer = BoolDealer::new(5);
+        let (eda0, eda1) = dealer.edabits(lanes);
+        let need = drelu_triple_words(lanes);
+        let (mut bank0, mut bank1) = dealer.and_triples(need);
+        let (dab0, dab1) = dealer.dabits(lanes);
+
+        let x_check = x.clone();
+        let (d0, d1) = run2(
+            move |mut p| drelu_arith(&mut p, 1, 0, &xs0, &eda0, &mut bank0, &dab0).unwrap(),
+            move |mut p| drelu_arith(&mut p, 0, 1, &xs1, &eda1, &mut bank1, &dab1).unwrap(),
+        );
+        for i in 0..lanes {
+            let bit = d0[i].wrapping_add(d1[i]);
+            let want = ((x_check[i] as i64) >= 0) as u64;
+            assert_eq!(bit, want, "lane {i}: x={:#x}", x_check[i]);
+        }
+    }
+
+    #[test]
+    fn b2a_converts_bits() {
+        let lanes = 70usize;
+        let mut rng = Pcg64::seed_from_u64(6);
+        let wpl = words_for(lanes);
+        // random bool-shared bits
+        let mut bits = vec![0u64; wpl];
+        rng.fill_u64(&mut bits);
+        bits[wpl - 1] &= (1u64 << (lanes % 64)) - 1;
+        let mut s1 = vec![0u64; wpl];
+        rng.fill_u64(&mut s1);
+        s1[wpl - 1] &= (1u64 << (lanes % 64)) - 1;
+        let s0: Vec<u64> = bits.iter().zip(&s1).map(|(b, s)| b ^ s).collect();
+        let mut dealer = BoolDealer::new(7);
+        let (dab0, dab1) = dealer.dabits(lanes);
+        let bits_check = bits.clone();
+        let (a0, a1) = run2(
+            move |mut p| b2a(&mut p, 1, 0, &s0, &dab0, lanes).unwrap(),
+            move |mut p| b2a(&mut p, 0, 1, &s1, &dab1, lanes).unwrap(),
+        );
+        for l in 0..lanes {
+            let want = (bits_check[l / 64] >> (l % 64)) & 1;
+            assert_eq!(a0[l].wrapping_add(a1[l]), want, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn triple_bank_exhaustion_panics() {
+        let mut dealer = BoolDealer::new(8);
+        let (mut b0, _) = dealer.and_triples(4);
+        let _ = b0.take(3);
+        assert_eq!(b0.remaining(), 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b0.take(2);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn edabit_consistency() {
+        // arith reconstruction and bit reconstruction agree
+        let mut dealer = BoolDealer::new(9);
+        let (e0, e1) = dealer.edabits(50);
+        let r: Vec<u64> = e0
+            .r_arith
+            .iter()
+            .zip(&e1.r_arith)
+            .map(|(a, b)| a.wrapping_add(*b))
+            .collect();
+        let bits = e0.r_bits.xor(&e1.r_bits).recompose();
+        assert_eq!(r, bits);
+    }
+}

@@ -1,0 +1,405 @@
+//! The trusted-dealer actor: serves preprocessing material over the
+//! simulated network (offline phase).
+//!
+//! The dealer abstraction is the standard MPC offline/online split
+//! (SecureML realizes it with OT or HE between the parties themselves; that
+//! changes *offline* cost only). All dealer traffic is tagged
+//! [`Phase::Offline`]: byte-counted, reported separately, excluded from the
+//! online epoch clock.
+//!
+//! Wire protocol (requests always come from party A, role 0; B runs the
+//! matching `recv_*_b` at the same protocol step):
+//!
+//! ```text
+//! A -> D: Control("mat:m,k,n")     D -> A: Seed, U64s(w_a)   D -> B: Seed
+//! A -> D: Control("elem:len")      D -> A: Seed, U64s(w_a)   D -> B: Seed
+//! A -> D: Control("bool:lanes")    D -> A: Seed, Bits(eda bits), Bits(c),
+//!                                          U64s(dab arith), Bits(dab bits)
+//!                                  D -> B: Seed
+//! A -> D: Control("stop")          (dealer thread exits)
+//! ```
+//!
+//! PRG compression: B's entire bundle expands from one 32-byte seed; A
+//! expands its input-mask shares from its seed and receives only the
+//! product/bit *corrections* explicitly — the information-theoretic minimum
+//! for a dealer that must fix `W = U·V` / `c = a∧b` / bit-consistency.
+
+use super::boolean::{words_for, BitMat, BoolBundle, DaBits, EdaBits, TripleBank};
+use super::matmul::ElemTriple;
+use super::ring::RingMat;
+use super::triple::{expand_triple_shares, expand_uv, MatTriple};
+use crate::netsim::{NetPort, PartyId, Payload, Phase};
+use crate::rng::{ChaChaRng, Rng64};
+use crate::{Error, Result};
+
+// Domain-separation nonces for A-side / B-side bundle expansions.
+const NONCE_ELEM_U: u64 = 0x454c_454d_5f55;
+const NONCE_ELEM_V: u64 = 0x454c_454d_5f56;
+const NONCE_ELEM_W: u64 = 0x454c_454d_5f57;
+const NONCE_BOOL_RA: u64 = 0x424f_4f4c_5f52;
+const NONCE_BOOL_TA: u64 = 0x424f_4f4c_5f41;
+const NONCE_BOOL_TB: u64 = 0x424f_4f4c_5f42;
+
+fn expand_vec(seed: [u8; 32], nonce: u64, n: usize) -> Vec<u64> {
+    let mut rng = ChaChaRng::from_seed(seed, nonce);
+    let mut v = vec![0u64; n];
+    rng.fill_u64(&mut v);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Dealer-side
+// ---------------------------------------------------------------------------
+
+/// Serve preprocessing requests until `Control("stop")`.
+pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()> {
+    let mut rng = ChaChaRng::seed_from_u64(seed);
+    loop {
+        let req = port.recv(a)?.into_control()?;
+        let (kind, args) = req.split_once(':').unwrap_or((req.as_str(), ""));
+        match kind {
+            "stop" => return Ok(()),
+            "mat" => {
+                let d: Vec<usize> = parse_dims(args, 3)?;
+                let (m, k, n) = (d[0], d[1], d[2]);
+                let seed_a = rng.gen_seed();
+                let seed_b = rng.gen_seed();
+                let (ua, va) = expand_uv(seed_a, m, k, n);
+                let tb = expand_triple_shares(seed_b, m, k, n);
+                let u = ua.add(&tb.u);
+                let v = va.add(&tb.v);
+                let w_a = u.matmul(&v).sub(&tb.w);
+                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_phase(a, Payload::U64s(w_a.data), Phase::Offline)?;
+                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+            }
+            "elem" => {
+                let d = parse_dims(args, 1)?;
+                let len = d[0];
+                let seed_a = rng.gen_seed();
+                let seed_b = rng.gen_seed();
+                let (ua, va) = (
+                    expand_vec(seed_a, NONCE_ELEM_U, len),
+                    expand_vec(seed_a, NONCE_ELEM_V, len),
+                );
+                let (ub, vb, wb) = (
+                    expand_vec(seed_b, NONCE_ELEM_U, len),
+                    expand_vec(seed_b, NONCE_ELEM_V, len),
+                    expand_vec(seed_b, NONCE_ELEM_W, len),
+                );
+                let w_a: Vec<u64> = (0..len)
+                    .map(|i| {
+                        let u = ua[i].wrapping_add(ub[i]);
+                        let v = va[i].wrapping_add(vb[i]);
+                        u.wrapping_mul(v).wrapping_sub(wb[i])
+                    })
+                    .collect();
+                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_phase(a, Payload::U64s(w_a), Phase::Offline)?;
+                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+            }
+            "bool" => {
+                let d = parse_dims(args, 1)?;
+                let lanes = d[0];
+                let words = super::boolean::drelu_triple_words(lanes);
+                let wpl = words_for(lanes);
+                let seed_a = rng.gen_seed();
+                let seed_b = rng.gen_seed();
+
+                // edaBit: r = ra + rb; bits(r) = bits_a ^ bits_b
+                let ra = expand_vec(seed_a, NONCE_BOOL_RA, lanes);
+                let bund_b = expand_bool_b(seed_b, lanes, words);
+                let r: Vec<u64> = ra
+                    .iter()
+                    .zip(&bund_b.eda.r_arith)
+                    .map(|(x, y)| x.wrapping_add(*y))
+                    .collect();
+                let bits = BitMat::decompose(&r);
+                let eda_bits_a = bits.xor(&bund_b.eda.r_bits);
+
+                // AND triples: a = aa ^ ab, b = ba ^ bb, c = a&b; c_a = c ^ c_b
+                let aa = expand_vec(seed_a, NONCE_BOOL_TA, words);
+                let ba = expand_vec(seed_a, NONCE_BOOL_TB, words);
+                let c_a: Vec<u64> = (0..words)
+                    .map(|i| {
+                        let av = aa[i] ^ bund_b.bank.a[i];
+                        let bv = ba[i] ^ bund_b.bank.b[i];
+                        (av & bv) ^ bund_b.bank.c[i]
+                    })
+                    .collect();
+
+                // daBits: fresh bits; B side fully from seed, A explicit
+                let mut dab_bits = vec![0u64; wpl];
+                rng.fill_u64(&mut dab_bits);
+                if lanes % 64 != 0 {
+                    dab_bits[wpl - 1] &= (1u64 << (lanes % 64)) - 1;
+                }
+                let dab_arith_a: Vec<u64> = (0..lanes)
+                    .map(|l| {
+                        ((dab_bits[l / 64] >> (l % 64)) & 1)
+                            .wrapping_sub(bund_b.dab.arith[l])
+                    })
+                    .collect();
+                let dab_bits_a: Vec<u64> = dab_bits
+                    .iter()
+                    .zip(&bund_b.dab.bits)
+                    .map(|(x, y)| x ^ y)
+                    .collect();
+
+                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_phase(a, Payload::Bits(eda_bits_a.words), Phase::Offline)?;
+                port.send_phase(a, Payload::Bits(c_a), Phase::Offline)?;
+                port.send_phase(a, Payload::U64s(dab_arith_a), Phase::Offline)?;
+                port.send_phase(a, Payload::Bits(dab_bits_a), Phase::Offline)?;
+                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+            }
+            other => {
+                return Err(Error::Protocol(format!("dealer: unknown request {other:?}")));
+            }
+        }
+    }
+}
+
+fn parse_dims(s: &str, n: usize) -> Result<Vec<usize>> {
+    let v: Vec<usize> = s.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+    if v.len() != n {
+        return Err(Error::Protocol(format!("dealer: bad dims {s:?} (want {n})")));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Party-side
+// ---------------------------------------------------------------------------
+
+/// A-side (role 0): request + receive one matrix triple.
+pub fn request_mat_triple(
+    port: &mut NetPort,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<MatTriple> {
+    port.send_phase(dealer, Payload::Control(format!("mat:{m},{k},{n}")), Phase::Offline)?;
+    let seed = port.recv(dealer)?.into_seed()?;
+    let w = port.recv(dealer)?.into_u64s()?;
+    let (u, v) = expand_uv(seed, m, k, n);
+    Ok(MatTriple { u, v, w: RingMat::from_data(m, n, w) })
+}
+
+/// B-side (role 1): receive the matching matrix triple.
+pub fn recv_mat_triple_b(
+    port: &mut NetPort,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<MatTriple> {
+    let seed = port.recv(dealer)?.into_seed()?;
+    Ok(expand_triple_shares(seed, m, k, n))
+}
+
+/// A-side: request + receive an elementwise triple.
+pub fn request_elem_triple(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
+    port.send_phase(dealer, Payload::Control(format!("elem:{len}")), Phase::Offline)?;
+    let seed = port.recv(dealer)?.into_seed()?;
+    let w = port.recv(dealer)?.into_u64s()?;
+    Ok(ElemTriple {
+        u: expand_vec(seed, NONCE_ELEM_U, len),
+        v: expand_vec(seed, NONCE_ELEM_V, len),
+        w,
+    })
+}
+
+/// B-side: receive the matching elementwise triple.
+pub fn recv_elem_triple_b(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
+    let seed = port.recv(dealer)?.into_seed()?;
+    Ok(ElemTriple {
+        u: expand_vec(seed, NONCE_ELEM_U, len),
+        v: expand_vec(seed, NONCE_ELEM_V, len),
+        w: expand_vec(seed, NONCE_ELEM_W, len),
+    })
+}
+
+/// A-side: request + receive a boolean bundle (edaBit + AND bank + daBits)
+/// sized for one DReLU batch over `lanes` values.
+pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+    port.send_phase(dealer, Payload::Control(format!("bool:{lanes}")), Phase::Offline)?;
+    let words = super::boolean::drelu_triple_words(lanes);
+    let wpl = words_for(lanes);
+    let seed = port.recv(dealer)?.into_seed()?;
+    let eda_bits = port.recv(dealer)?.into_bits()?;
+    let c = port.recv(dealer)?.into_bits()?;
+    let dab_arith = port.recv(dealer)?.into_u64s()?;
+    let dab_bits = port.recv(dealer)?.into_bits()?;
+    if eda_bits.len() != 64 * wpl || c.len() != words || dab_arith.len() != lanes {
+        return Err(Error::Protocol("bool bundle size mismatch".into()));
+    }
+    Ok(BoolBundle {
+        eda: EdaBits {
+            r_arith: expand_vec(seed, NONCE_BOOL_RA, lanes),
+            r_bits: BitMat { lanes, wpl, words: eda_bits },
+        },
+        bank: TripleBank::new(
+            expand_vec(seed, NONCE_BOOL_TA, words),
+            expand_vec(seed, NONCE_BOOL_TB, words),
+            c,
+        ),
+        dab: DaBits { arith: dab_arith, bits: dab_bits },
+    })
+}
+
+/// B-side: expand the matching boolean bundle from the dealer seed.
+pub fn recv_bool_bundle_b(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+    let seed = port.recv(dealer)?.into_seed()?;
+    let words = super::boolean::drelu_triple_words(lanes);
+    Ok(expand_bool_b(seed, lanes, words))
+}
+
+/// Expand party B's full boolean bundle from a seed.
+fn expand_bool_b(seed: [u8; 32], lanes: usize, words: usize) -> BoolBundle {
+    let wpl = words_for(lanes);
+    let mut bits_rng = ChaChaRng::from_seed(seed, NONCE_BOOL_RA ^ 0xF0F0);
+    let mut eda_words = vec![0u64; 64 * wpl];
+    bits_rng.fill_u64(&mut eda_words);
+    mask_tail(&mut eda_words, wpl, lanes);
+    let mut dab_rng = ChaChaRng::from_seed(seed, NONCE_BOOL_RA ^ 0xDAB1);
+    let mut dab_arith = vec![0u64; lanes];
+    dab_rng.fill_u64(&mut dab_arith);
+    let mut dab_bits = vec![0u64; wpl];
+    dab_rng.fill_u64(&mut dab_bits);
+    mask_tail(&mut dab_bits, wpl, lanes);
+    BoolBundle {
+        eda: EdaBits {
+            r_arith: expand_vec(seed, NONCE_BOOL_RA, lanes),
+            r_bits: BitMat { lanes, wpl, words: eda_words },
+        },
+        bank: TripleBank::new(
+            expand_vec(seed, NONCE_BOOL_TA, words),
+            expand_vec(seed, NONCE_BOOL_TB, words),
+            expand_vec(seed, NONCE_BOOL_TB ^ 0xC0C0, words),
+        ),
+        dab: DaBits { arith: dab_arith, bits: dab_bits },
+    }
+}
+
+fn mask_tail(words: &mut [u64], wpl: usize, lanes: usize) {
+    if lanes % 64 != 0 {
+        let mask = (1u64 << (lanes % 64)) - 1;
+        let rows = words.len() / wpl;
+        for r in 0..rows {
+            words[r * wpl + wpl - 1] &= mask;
+        }
+    }
+}
+
+/// Stop the dealer (protocol teardown).
+pub fn stop(port: &mut NetPort, dealer: PartyId) -> Result<()> {
+    port.send_phase(dealer, Payload::Control("stop".into()), Phase::Offline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{full_mesh, LinkSpec};
+    use crate::rng::Pcg64;
+    use crate::smpc::boolean::drelu_arith;
+    use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm};
+    use crate::smpc::share::{reconstruct2, share2};
+
+    /// Spin up A(0), B(1), Dealer(2); run fa/fb; dealer serves until stop.
+    fn run_with_dealer<FA, FB, TA: Send + 'static, TB: Send + 'static>(
+        fa: FA,
+        fb: FB,
+    ) -> (TA, TB, usize)
+    where
+        FA: FnOnce(&mut NetPort) -> TA + Send + 'static,
+        FB: FnOnce(&mut NetPort) -> TB + Send + 'static,
+    {
+        let (mut ports, stats) = full_mesh(&["A", "B", "D"], LinkSpec::lan());
+        let mut pd = ports.pop().unwrap();
+        let mut pb = ports.pop().unwrap();
+        let mut pa = ports.pop().unwrap();
+        let hd = std::thread::spawn(move || serve(&mut pd, 0, 1, 99).unwrap());
+        let hb = std::thread::spawn(move || fb(&mut pb));
+        let ra = fa(&mut pa);
+        stop(&mut pa, 2).unwrap();
+        let rb = hb.join().expect("B panicked");
+        hd.join().expect("dealer panicked");
+        let off = stats.bytes_phase(crate::netsim::Phase::Offline);
+        (ra, rb, off)
+    }
+
+    #[test]
+    fn networked_mat_triple_works_end_to_end() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = RingMat::random(&mut rng, 5, 3);
+        let y = RingMat::random(&mut rng, 3, 4);
+        let mut crng = crate::rng::ChaChaRng::seed_from_u64(2);
+        let (x0, x1) = share2(&mut crng, &x);
+        let (y0, y1) = share2(&mut crng, &y);
+        let want = x.matmul(&y);
+        let (z0, z1, off_bytes) = run_with_dealer(
+            move |p| {
+                let t = request_mat_triple(p, 2, 5, 3, 4).unwrap();
+                beaver_matmul(p, 1, 0, &x0, &y0, &t, &native_mm).unwrap()
+            },
+            move |p| {
+                let t = recv_mat_triple_b(p, 2, 5, 3, 4).unwrap();
+                beaver_matmul(p, 0, 1, &x1, &y1, &t, &native_mm).unwrap()
+            },
+        );
+        assert_eq!(reconstruct2(&z0, &z1), want);
+        assert!(off_bytes > 0, "offline traffic not accounted");
+    }
+
+    #[test]
+    fn networked_elem_triple() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let x = RingMat::random(&mut rng, 1, 9);
+        let y = RingMat::random(&mut rng, 1, 9);
+        let mut crng = crate::rng::ChaChaRng::seed_from_u64(4);
+        let (x0, x1) = share2(&mut crng, &x);
+        let (y0, y1) = share2(&mut crng, &y);
+        let (xc, yc) = (x.clone(), y.clone());
+        let (z0, z1, _) = run_with_dealer(
+            move |p| {
+                let t = request_elem_triple(p, 2, 9).unwrap();
+                beaver_mul_elem(p, 1, 0, &x0.data, &y0.data, &t).unwrap()
+            },
+            move |p| {
+                let t = recv_elem_triple_b(p, 2, 9).unwrap();
+                beaver_mul_elem(p, 0, 1, &x1.data, &y1.data, &t).unwrap()
+            },
+        );
+        for i in 0..9 {
+            assert_eq!(z0[i].wrapping_add(z1[i]), xc.data[i].wrapping_mul(yc.data[i]));
+        }
+    }
+
+    #[test]
+    fn networked_bool_bundle_drives_drelu() {
+        let lanes = 80usize;
+        let mut rng = Pcg64::seed_from_u64(5);
+        let x: Vec<u64> = (0..lanes)
+            .map(|i| if i % 2 == 0 { rng.next_u64() >> 1 } else { rng.next_u64() | (1 << 63) })
+            .collect();
+        let xs1: Vec<u64> = (0..lanes).map(|_| rng.next_u64()).collect();
+        let xs0: Vec<u64> = x.iter().zip(&xs1).map(|(v, s)| v.wrapping_sub(*s)).collect();
+        let xc = x.clone();
+        let (d0, d1, _) = run_with_dealer(
+            move |p| {
+                let mut bb = request_bool_bundle(p, 2, lanes).unwrap();
+                drelu_arith(p, 1, 0, &xs0, &bb.eda, &mut bb.bank, &bb.dab).unwrap()
+            },
+            move |p| {
+                let mut bb = recv_bool_bundle_b(p, 2, lanes).unwrap();
+                drelu_arith(p, 0, 1, &xs1, &bb.eda, &mut bb.bank, &bb.dab).unwrap()
+            },
+        );
+        for i in 0..lanes {
+            let bit = d0[i].wrapping_add(d1[i]);
+            assert_eq!(bit, ((xc[i] as i64) >= 0) as u64, "lane {i}");
+        }
+    }
+}

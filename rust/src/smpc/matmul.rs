@@ -1,0 +1,228 @@
+//! Online Beaver protocols: secure matrix multiplication and elementwise
+//! (Hadamard) multiplication over `Z_{2^64}`.
+
+use super::ring::RingMat;
+use super::triple::MatTriple;
+use crate::netsim::{NetPort, PartyId, Payload};
+use crate::Result;
+
+/// Pluggable ring-matmul backend: the protocols call this for every local
+/// matrix product, so the coordinator can route the big ones through the
+/// AOT-compiled Pallas kernel and keep small ones native.
+pub type MatmulFn<'a> = &'a dyn Fn(&RingMat, &RingMat) -> RingMat;
+
+/// Native backend (used by tests and small shapes).
+pub fn native_mm(a: &RingMat, b: &RingMat) -> RingMat {
+    a.matmul(b)
+}
+
+/// Beaver secure matmul: both parties hold `<X>` (m,k) and `<Y>` (k,n) and a
+/// matching [`MatTriple`]; each obtains `<X·Y>`.
+///
+/// Round structure (1 round): exchange `E_p = <X>_p - <U>_p` and
+/// `F_p = <Y>_p - <V>_p`; reconstruct `E, F`; combine locally:
+/// `<Z>_p = [p=0]·E·F + E·<V>_p + <U>_p·F + <W>_p`.
+pub fn beaver_matmul(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    x: &RingMat,
+    y: &RingMat,
+    triple: &MatTriple,
+    mm: MatmulFn,
+) -> Result<RingMat> {
+    assert_eq!(x.shape(), triple.u.shape(), "triple U shape mismatch");
+    assert_eq!(y.shape(), triple.v.shape(), "triple V shape mismatch");
+    let e_p = x.sub(&triple.u);
+    let f_p = y.sub(&triple.v);
+    // single message carrying both E and F halves
+    let mut buf = e_p.data.clone();
+    buf.extend_from_slice(&f_p.data);
+    port.send(peer, Payload::U64s(buf))?;
+    let theirs = port.recv_u64s(peer)?;
+    if theirs.len() != e_p.len() + f_p.len() {
+        return Err(crate::Error::Protocol(format!(
+            "beaver_matmul: expected {} words, got {}",
+            e_p.len() + f_p.len(),
+            theirs.len()
+        )));
+    }
+    let e_o = RingMat::from_data(x.rows, x.cols, theirs[..e_p.len()].to_vec());
+    let f_o = RingMat::from_data(y.rows, y.cols, theirs[e_p.len()..].to_vec());
+    let e = e_p.add(&e_o);
+    let f = f_p.add(&f_o);
+
+    // Z_p = [role=0] E·F + E·V_p + U_p·F + W_p
+    let mut z = mm(&e, &triple.v);
+    z.add_assign(&mm(&triple.u, &f));
+    z.add_assign(&triple.w);
+    if role == 0 {
+        z.add_assign(&mm(&e, &f));
+    }
+    Ok(z)
+}
+
+/// Elementwise triple (`w = u ⊙ v`): stored as 1-column RingMats.
+#[derive(Clone, Debug)]
+pub struct ElemTriple {
+    pub u: Vec<u64>,
+    pub v: Vec<u64>,
+    pub w: Vec<u64>,
+}
+
+/// Beaver elementwise (Hadamard) product of two shared vectors.
+pub fn beaver_mul_elem(
+    port: &mut NetPort,
+    peer: PartyId,
+    role: u8,
+    x: &[u64],
+    y: &[u64],
+    triple: &ElemTriple,
+) -> Result<Vec<u64>> {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), triple.u.len(), "elem triple size mismatch");
+    let e_p: Vec<u64> = x.iter().zip(&triple.u).map(|(a, b)| a.wrapping_sub(*b)).collect();
+    let f_p: Vec<u64> = y.iter().zip(&triple.v).map(|(a, b)| a.wrapping_sub(*b)).collect();
+    let mut buf = e_p.clone();
+    buf.extend_from_slice(&f_p);
+    port.send(peer, Payload::U64s(buf))?;
+    let theirs = port.recv_u64s(peer)?;
+    if theirs.len() != 2 * x.len() {
+        return Err(crate::Error::Protocol("beaver_mul_elem size".into()));
+    }
+    let n = x.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let e = e_p[i].wrapping_add(theirs[i]);
+        let f = f_p[i].wrapping_add(theirs[n + i]);
+        let mut z = e
+            .wrapping_mul(triple.v[i])
+            .wrapping_add(triple.u[i].wrapping_mul(f))
+            .wrapping_add(triple.w[i]);
+        if role == 0 {
+            z = z.wrapping_add(e.wrapping_mul(f));
+        }
+        out.push(z);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{full_mesh, LinkSpec};
+    use crate::rng::{ChaChaRng, Pcg64};
+    use crate::smpc::share::{reconstruct2, share2};
+    use crate::smpc::triple::TripleGen;
+
+    /// Run a two-party closure pair over a fresh LAN mesh.
+    fn run2<F0, F1, T0: Send + 'static, T1: Send + 'static>(f0: F0, f1: F1) -> (T0, T1)
+    where
+        F0: FnOnce(NetPort) -> T0 + Send + 'static,
+        F1: FnOnce(NetPort) -> T1 + Send + 'static,
+    {
+        let (mut ports, _) = full_mesh(&["P0", "P1"], LinkSpec::lan());
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        let h1 = std::thread::spawn(move || f1(p1));
+        let r0 = f0(p0);
+        (r0, h1.join().expect("party 1 panicked"))
+    }
+
+    #[test]
+    fn secure_matmul_equals_plaintext() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = RingMat::random(&mut rng, 6, 4);
+        let y = RingMat::random(&mut rng, 4, 3);
+        let mut crng = ChaChaRng::seed_from_u64(2);
+        let (x0, x1) = share2(&mut crng, &x);
+        let (y0, y1) = share2(&mut crng, &y);
+        let mut gen = TripleGen::new(3);
+        let dealt = gen.deal(6, 4, 3);
+        let t0 = TripleGen::triple_a(&dealt, 6, 4, 3);
+        let t1 = TripleGen::triple_b(&dealt, 6, 4, 3);
+
+        let (z0, z1) = run2(
+            move |mut p| beaver_matmul(&mut p, 1, 0, &x0, &y0, &t0, &native_mm).unwrap(),
+            move |mut p| beaver_matmul(&mut p, 0, 1, &x1, &y1, &t1, &native_mm).unwrap(),
+        );
+        assert_eq!(reconstruct2(&z0, &z1), x.matmul(&y));
+    }
+
+    #[test]
+    fn secure_matmul_fixed_point_values() {
+        // Algorithm 2 semantics: fixed-point inputs, product carries 2*l_F
+        let x = RingMat::encode_f64(2, 3, &[0.5, -1.0, 2.0, 1.5, 0.25, -0.75]);
+        let y = RingMat::encode_f64(3, 1, &[1.0, 2.0, -1.0]);
+        let mut crng = ChaChaRng::seed_from_u64(5);
+        let (x0, x1) = share2(&mut crng, &x);
+        let (y0, y1) = share2(&mut crng, &y);
+        let mut gen = TripleGen::new(6);
+        let dealt = gen.deal(2, 3, 1);
+        let t0 = TripleGen::triple_a(&dealt, 2, 3, 1);
+        let t1 = TripleGen::triple_b(&dealt, 2, 3, 1);
+        let (z0, z1) = run2(
+            move |mut p| beaver_matmul(&mut p, 1, 0, &x0, &y0, &t0, &native_mm).unwrap(),
+            move |mut p| beaver_matmul(&mut p, 0, 1, &x1, &y1, &t1, &native_mm).unwrap(),
+        );
+        let z = reconstruct2(&z0, &z1);
+        let got: Vec<f64> = z.data.iter().map(|&v| crate::fixed::decode_wide(v)).collect();
+        // x@y = [0.5-2.0-2.0, 1.5+0.5+0.75]
+        assert!((got[0] - -3.5).abs() < 1e-3, "{got:?}");
+        assert!((got[1] - 2.75).abs() < 1e-3, "{got:?}");
+    }
+
+    #[test]
+    fn elementwise_mul_equals_plaintext() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let x = RingMat::random(&mut rng, 1, 20);
+        let y = RingMat::random(&mut rng, 1, 20);
+        let mut crng = ChaChaRng::seed_from_u64(8);
+        let (x0, x1) = share2(&mut crng, &x);
+        let (y0, y1) = share2(&mut crng, &y);
+        // dealer: elementwise triple
+        let mut trng = ChaChaRng::seed_from_u64(9);
+        let u = RingMat::random(&mut trng, 1, 20);
+        let v = RingMat::random(&mut trng, 1, 20);
+        let w: Vec<u64> = u.data.iter().zip(&v.data).map(|(a, b)| a.wrapping_mul(*b)).collect();
+        let (u0, u1) = share2(&mut trng, &u);
+        let (v0, v1) = share2(&mut trng, &v);
+        let (w0, w1) = share2(&mut trng, &RingMat::from_data(1, 20, w));
+        let t0 = ElemTriple { u: u0.data, v: v0.data, w: w0.data };
+        let t1 = ElemTriple { u: u1.data, v: v1.data, w: w1.data };
+
+        let (x0d, y0d) = (x0.data.clone(), y0.data.clone());
+        let (x1d, y1d) = (x1.data.clone(), y1.data.clone());
+        let (z0, z1) = run2(
+            move |mut p| beaver_mul_elem(&mut p, 1, 0, &x0d, &y0d, &t0).unwrap(),
+            move |mut p| beaver_mul_elem(&mut p, 0, 1, &x1d, &y1d, &t1).unwrap(),
+        );
+        for i in 0..20 {
+            assert_eq!(
+                z0[i].wrapping_add(z1[i]),
+                x.data[i].wrapping_mul(y.data[i])
+            );
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_protocol_error() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        let x = RingMat::random(&mut rng, 2, 2);
+        let y = RingMat::random(&mut rng, 2, 2);
+        let mut gen = TripleGen::new(11);
+        let dealt = gen.deal(2, 2, 2);
+        let t0 = TripleGen::triple_a(&dealt, 2, 2, 2);
+        let t1 = TripleGen::triple_b(&dealt, 2, 2, 2);
+        // party 1 sends a wrong-size opening
+        let (r0, _r1) = run2(
+            move |mut p| beaver_matmul(&mut p, 1, 0, &x, &y, &t0, &native_mm),
+            move |mut p| {
+                p.send(0, Payload::U64s(vec![0u64; 3])).unwrap();
+                let _ = p.recv_u64s(0); // drain
+                drop(t1);
+            },
+        );
+        assert!(r0.is_err());
+    }
+}

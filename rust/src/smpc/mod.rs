@@ -1,0 +1,35 @@
+//! Secure multi-party computation engine over `Z_{2^64}`.
+//!
+//! Implements everything Algorithm 2 (SPNN-SS) and the SecureML baseline
+//! need, under the paper's semi-honest threat model with a trusted dealer
+//! for input-independent preprocessing (the standard offline/online split;
+//! SecureML realizes the dealer with OT/HE, which only changes *offline*
+//! cost — accounted, not simulated):
+//!
+//! * [`ring`] — dense matrices over `Z_{2^64}` with wrapping arithmetic and
+//!   fixed-point embedding (Q47.16).
+//! * [`share`] — additive secret sharing (2-party and n-party).
+//! * [`triple`] — Beaver **matrix** triples, PRG-compressed: each party
+//!   expands its `U`/`V`/(one side of) `W` shares from a 32-byte seed, so
+//!   the dealer ships `O(1)` bytes to B and only the `W` correction to A.
+//! * [`matmul`] — the online Beaver protocol: open `X-U`, `Y-V`, combine.
+//! * [`trunc`] — SecureML local share truncation after fixed-point products.
+//! * [`boolean`] — bit-sliced XOR sharing, dealer AND triples, Kogge–Stone
+//!   borrow comparison (MSB extraction), daBit B2A, DReLU and the SecureML
+//!   piecewise sigmoid. Used by the SecureML baseline's non-linearities.
+//! * [`dealer`] — the trusted-dealer actor serving preprocessing requests
+//!   over the simulated network (offline phase).
+
+pub mod boolean;
+pub mod dealer;
+pub mod matmul;
+pub mod ring;
+pub mod share;
+pub mod triple;
+pub mod trunc;
+
+pub use matmul::beaver_matmul;
+pub use ring::RingMat;
+pub use share::{reconstruct2, share2, share_n};
+pub use triple::{MatTriple, TripleGen};
+pub use trunc::trunc_share_mat;

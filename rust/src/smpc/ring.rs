@@ -1,0 +1,257 @@
+//! Dense matrices over the ring `Z_{2^64}` (wrapping u64 arithmetic).
+//!
+//! This is the data type every share, triple and protocol message is made
+//! of. The native `matmul` here is the rust-side fallback / oracle; the
+//! production hot path for the big first-layer products goes through the
+//! AOT-compiled Pallas ring kernel (`runtime::Engine::ring_matmul`).
+
+use crate::fixed;
+use crate::rng::Rng64;
+
+/// Row-major matrix over `Z_{2^64}`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u64>,
+}
+
+impl RingMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        RingMat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, data: Vec<u64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "RingMat shape mismatch");
+        RingMat { rows, cols, data }
+    }
+
+    /// Uniformly random matrix (mask / share material).
+    pub fn random<R: Rng64>(rng: &mut R, rows: usize, cols: usize) -> Self {
+        let mut data = vec![0u64; rows * cols];
+        rng.fill_u64(&mut data);
+        RingMat { rows, cols, data }
+    }
+
+    /// Embed a decimal matrix as fixed-point ring elements.
+    pub fn encode_f64(rows: usize, cols: usize, xs: &[f64]) -> Self {
+        assert_eq!(xs.len(), rows * cols);
+        RingMat { rows, cols, data: fixed::encode_vec(xs) }
+    }
+
+    /// Decode back to decimals (assumes single-`l_F` scaling).
+    pub fn decode_f64(&self) -> Vec<f64> {
+        fixed::decode_vec(&self.data)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Elementwise wrapping addition.
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a.wrapping_add(*b))
+            .collect();
+        RingMat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place wrapping addition (hot path — avoids reallocation).
+    pub fn add_assign(&mut self, other: &Self) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = a.wrapping_add(*b);
+        }
+    }
+
+    /// Elementwise wrapping subtraction.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a.wrapping_sub(*b))
+            .collect();
+        RingMat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Negate (two's complement).
+    pub fn neg(&self) -> Self {
+        let data = self.data.iter().map(|a| a.wrapping_neg()).collect();
+        RingMat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Native ring matmul `self @ other mod 2^64` (ikj loop order).
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0u64; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o = o.wrapping_add(a.wrapping_mul(b));
+                }
+            }
+        }
+        RingMat { rows: m, cols: n, data: out }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Self {
+        let mut out = vec![0u64; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        RingMat { rows: self.cols, cols: self.rows, data: out }
+    }
+
+    /// Horizontal concatenation (the paper's `⊕` in Algorithm 2).
+    pub fn concat_cols(&self, other: &Self) -> Self {
+        assert_eq!(self.rows, other.rows, "concat_cols row mismatch");
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.data[r * self.cols..(r + 1) * self.cols]);
+            data.extend_from_slice(&other.data[r * other.cols..(r + 1) * other.cols]);
+        }
+        RingMat { rows: self.rows, cols, data }
+    }
+
+    /// Vertical concatenation.
+    pub fn concat_rows(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.cols, "concat_rows col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        RingMat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matmul_matches_naive_wrapping() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = RingMat::random(&mut rng, 7, 5);
+        let b = RingMat::random(&mut rng, 5, 3);
+        let c = a.matmul(&b);
+        for i in 0..7 {
+            for j in 0..3 {
+                let mut acc = 0u64;
+                for k in 0..5 {
+                    acc = acc.wrapping_add(a.at(i, k).wrapping_mul(b.at(k, j)));
+                }
+                assert_eq!(c.at(i, j), acc);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = RingMat::random(&mut rng, 4, 4);
+        let mut eye = RingMat::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1);
+        }
+        assert_eq!(a.matmul(&eye), a);
+        assert_eq!(eye.matmul(&a), a);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let a = RingMat::random(&mut rng, 6, 6);
+        let b = RingMat::random(&mut rng, 6, 6);
+        assert_eq!(a.add(&b).sub(&b), a);
+        assert_eq!(a.sub(&a), RingMat::zeros(6, 6));
+        assert_eq!(a.add(&a.neg()), RingMat::zeros(6, 6));
+    }
+
+    #[test]
+    fn distributive_law_in_ring() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let a = RingMat::random(&mut rng, 3, 4);
+        let b = RingMat::random(&mut rng, 4, 2);
+        let c = RingMat::random(&mut rng, 4, 2);
+        assert_eq!(a.matmul(&b.add(&c)), a.matmul(&b).add(&a.matmul(&c)));
+    }
+
+    #[test]
+    fn transpose_involution_and_product_rule() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let a = RingMat::random(&mut rng, 3, 5);
+        let b = RingMat::random(&mut rng, 5, 2);
+        assert_eq!(a.transpose().transpose(), a);
+        // (AB)^T = B^T A^T holds in any ring
+        assert_eq!(
+            a.matmul(&b).transpose(),
+            b.transpose().matmul(&a.transpose())
+        );
+    }
+
+    #[test]
+    fn concat_cols_matches_blockwise_matmul() {
+        // [Xa | Xb] @ [Ta; Tb] == Xa Ta + Xb Tb — the Algorithm 2 identity
+        let mut rng = Pcg64::seed_from_u64(6);
+        let xa = RingMat::random(&mut rng, 4, 3);
+        let xb = RingMat::random(&mut rng, 4, 2);
+        let ta = RingMat::random(&mut rng, 3, 5);
+        let tb = RingMat::random(&mut rng, 2, 5);
+        let lhs = xa.concat_cols(&xb).matmul(&ta.concat_rows(&tb));
+        let rhs = xa.matmul(&ta).add(&xb.matmul(&tb));
+        assert_eq!(lhs, rhs);
+    }
+
+    #[test]
+    fn fixed_point_embedding_roundtrip() {
+        let xs = vec![1.5, -2.25, 0.0, 100.0625];
+        let m = RingMat::encode_f64(2, 2, &xs);
+        let back = m.decode_f64();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn fixed_point_matmul_approximates_float() {
+        let a = RingMat::encode_f64(2, 2, &[1.5, 2.0, -0.5, 3.0]);
+        let b = RingMat::encode_f64(2, 1, &[2.0, -1.0]);
+        let prod = a.matmul(&b);
+        // products carry 2*l_F fractional bits
+        let got: Vec<f64> = prod.data.iter().map(|&v| crate::fixed::decode_wide(v)).collect();
+        assert!((got[0] - 1.0).abs() < 1e-3, "{got:?}");
+        assert!((got[1] - -4.0).abs() < 1e-3, "{got:?}");
+    }
+}

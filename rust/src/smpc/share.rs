@@ -1,0 +1,100 @@
+//! Additive secret sharing over `Z_{2^64}` (paper §3.3).
+
+use super::RingMat;
+use crate::rng::Rng64;
+
+/// Split `x` into two additive shares: `(x - r, r)` with uniform `r`.
+/// Either share alone is uniformly distributed (perfect secrecy).
+pub fn share2<R: Rng64>(rng: &mut R, x: &RingMat) -> (RingMat, RingMat) {
+    let r = RingMat::random(rng, x.rows, x.cols);
+    (x.sub(&r), r)
+}
+
+/// Split into `n >= 2` additive shares.
+pub fn share_n<R: Rng64>(rng: &mut R, x: &RingMat, n: usize) -> Vec<RingMat> {
+    assert!(n >= 2, "share_n needs >= 2 parties");
+    let mut shares: Vec<RingMat> = (0..n - 1)
+        .map(|_| RingMat::random(rng, x.rows, x.cols))
+        .collect();
+    let mut last = x.clone();
+    for s in &shares {
+        last = last.sub(s);
+    }
+    shares.push(last);
+    shares
+}
+
+/// Reconstruct from two shares.
+pub fn reconstruct2(a: &RingMat, b: &RingMat) -> RingMat {
+    a.add(b)
+}
+
+/// Reconstruct from any number of shares.
+pub fn reconstruct_n(shares: &[RingMat]) -> RingMat {
+    assert!(!shares.is_empty());
+    let mut acc = shares[0].clone();
+    for s in &shares[1..] {
+        acc.add_assign(s);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{ChaChaRng, Pcg64, Rng64};
+
+    #[test]
+    fn share2_reconstructs() {
+        let mut rng = ChaChaRng::seed_from_u64(1);
+        let x = RingMat::random(&mut Pcg64::seed_from_u64(2), 5, 7);
+        let (s0, s1) = share2(&mut rng, &x);
+        assert_eq!(reconstruct2(&s0, &s1), x);
+        assert_ne!(s0, x, "share leaks plaintext");
+        assert_ne!(s1, x);
+    }
+
+    #[test]
+    fn share_n_reconstructs_for_many_parties() {
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        let x = RingMat::random(&mut Pcg64::seed_from_u64(4), 3, 3);
+        for n in 2..=6 {
+            let shares = share_n(&mut rng, &x, n);
+            assert_eq!(shares.len(), n);
+            assert_eq!(reconstruct_n(&shares), x);
+        }
+    }
+
+    #[test]
+    fn linearity_of_shares() {
+        // <x> + <y> reconstructs to x + y without communication
+        let mut rng = ChaChaRng::seed_from_u64(5);
+        let mut prng = Pcg64::seed_from_u64(6);
+        let x = RingMat::random(&mut prng, 4, 4);
+        let y = RingMat::random(&mut prng, 4, 4);
+        let (x0, x1) = share2(&mut rng, &x);
+        let (y0, y1) = share2(&mut rng, &y);
+        let z = reconstruct2(&x0.add(&y0), &x1.add(&y1));
+        assert_eq!(z, x.add(&y));
+    }
+
+    #[test]
+    fn single_share_is_statistically_masked() {
+        // sharing the zero matrix must still look uniform: check bit balance
+        let mut rng = ChaChaRng::seed_from_u64(7);
+        let zero = RingMat::zeros(32, 32);
+        let (s0, _) = share2(&mut rng, &zero);
+        let ones: u64 = s0.data.iter().map(|v| v.count_ones() as u64).sum();
+        let frac = ones as f64 / (64.0 * s0.data.len() as f64);
+        assert!((frac - 0.5).abs() < 0.01, "share not uniform: {frac}");
+    }
+
+    #[test]
+    fn fixed_point_value_shares() {
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        let x = RingMat::encode_f64(2, 2, &[1.25, -3.5, 0.0, 42.0]);
+        let (s0, s1) = share2(&mut rng, &x);
+        let back = reconstruct2(&s0, &s1).decode_f64();
+        assert_eq!(back, vec![1.25, -3.5, 0.0, 42.0]);
+    }
+}

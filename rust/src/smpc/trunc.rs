@@ -1,0 +1,109 @@
+//! SecureML local share truncation (Mohassel–Zhang 2017, §IV-A, Thm 1).
+//!
+//! After a fixed-point multiply the shared product carries `2·l_F`
+//! fractional bits. Each party truncates its own share *locally* — no
+//! interaction — and reconstruction is correct to within 1 ulp except with
+//! probability `~2^{l_x + 1 - 64}` (negligible for our value ranges):
+//!
+//! * party 0: `z0 <- floor_signed(z0 / 2^f)`     (arithmetic shift)
+//! * party 1: `z1 <- -floor_signed(-z1 / 2^f)`   (two's complement trick)
+//!
+//! This mirrors the L1 Pallas `trunc_share` kernel bit-for-bit (see
+//! `python/compile/kernels/fixed_matmul.py`); the pytest suite checks the
+//! kernel, and the tests here check the rust twin against the same spec.
+
+use super::ring::RingMat;
+use crate::fixed::FRAC_BITS;
+
+/// Truncate one party's share of a fixed-point product.
+#[inline]
+pub fn trunc_share_val(v: u64, role: u8) -> u64 {
+    trunc_share_val_bits(v, role, FRAC_BITS)
+}
+
+#[inline]
+pub fn trunc_share_val_bits(v: u64, role: u8, f: u32) -> u64 {
+    let z = v as i64;
+    if role == 0 {
+        (z >> f) as u64
+    } else {
+        (-((-z) >> f)) as u64
+    }
+}
+
+/// Truncate a whole share matrix in place.
+pub fn trunc_share_mat(m: &mut RingMat, role: u8) {
+    for v in m.data.iter_mut() {
+        *v = trunc_share_val(*v, role);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{self, SCALE};
+    use crate::rng::{ChaChaRng, Pcg64, Rng64};
+    use crate::smpc::share::{reconstruct2, share2};
+
+    #[test]
+    fn truncated_shares_reconstruct_within_one_ulp() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut crng = ChaChaRng::seed_from_u64(2);
+        for _ in 0..200 {
+            // a fixed-point product value (2*l_F fractional bits)
+            let a = (rng.f64_unit() - 0.5) * 50.0;
+            let b = (rng.f64_unit() - 0.5) * 50.0;
+            let prod = fixed::encode(a).wrapping_mul(fixed::encode(b));
+            let x = RingMat::from_data(1, 1, vec![prod]);
+            let (mut s0, mut s1) = share2(&mut crng, &x);
+            trunc_share_mat(&mut s0, 0);
+            trunc_share_mat(&mut s1, 1);
+            let rec = reconstruct2(&s0, &s1).data[0];
+            let want = fixed::trunc_plain(prod);
+            let diff = (rec as i64).wrapping_sub(want as i64).unsigned_abs();
+            assert!(diff <= 1, "a={a} b={b} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn decoded_product_error_is_small() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut crng = ChaChaRng::seed_from_u64(4);
+        let mut worst: f64 = 0.0;
+        for _ in 0..500 {
+            let a = (rng.f64_unit() - 0.5) * 10.0;
+            let b = (rng.f64_unit() - 0.5) * 10.0;
+            let prod = fixed::encode(a).wrapping_mul(fixed::encode(b));
+            let x = RingMat::from_data(1, 1, vec![prod]);
+            let (mut s0, mut s1) = share2(&mut crng, &x);
+            trunc_share_mat(&mut s0, 0);
+            trunc_share_mat(&mut s1, 1);
+            let got = fixed::decode(reconstruct2(&s0, &s1).data[0]);
+            worst = worst.max((got - a * b).abs());
+        }
+        // half-ulp operand rounding + 1 ulp trunc + 1 ulp share jitter
+        assert!(worst < 12.0 / SCALE, "worst error {worst}");
+    }
+
+    #[test]
+    fn roles_differ_on_shares_with_low_bits() {
+        // floor vs ceil: role 0 and role 1 disagree on any share whose low
+        // f bits are nonzero — the asymmetry is what cancels the rounding
+        // of the two shares against each other
+        let v = (5u64 << 16) | 0x1234;
+        assert_ne!(trunc_share_val(v, 0), trunc_share_val(v, 1));
+        // and agree when the value is exactly representable
+        let w = 7u64 << 16;
+        assert_eq!(trunc_share_val(w, 0), trunc_share_val(w, 1));
+    }
+
+    #[test]
+    fn matches_pallas_kernel_spec() {
+        // the exact formulas the L1 kernel implements
+        for v in [0u64, 1, u64::MAX, 1 << 16, (1u64 << 63) + 12345, 0xdead_beef_0000] {
+            let z = v as i64;
+            assert_eq!(trunc_share_val(v, 0), (z >> 16) as u64);
+            assert_eq!(trunc_share_val(v, 1), (-((-z) >> 16)) as u64);
+        }
+    }
+}

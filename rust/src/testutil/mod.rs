@@ -1,0 +1,65 @@
+//! Small property-testing helpers (the proptest crate is not in the offline
+//! vendor set, so tests use seeded-random sweeps with shrink-free reporting).
+
+use crate::rng::{Pcg64, Rng64};
+
+/// Run `f` against `iters` seeded RNGs; panics with the failing seed so the
+/// case is reproducible (`prop_check` + the seed = a regression test).
+pub fn prop_check(name: &str, iters: u64, mut f: impl FnMut(&mut Pcg64)) {
+    for seed in 0..iters {
+        let mut rng = Pcg64::seed_from_u64(0xBAD5EED ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_close(got: &[f64], want: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{ctx}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+/// Random f64 vector in [-scale, scale].
+pub fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| (rng.f64_unit() * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_quiet() {
+        prop_check("trivial", 5, |rng| {
+            assert!(rng.f64_unit() < 1.0);
+        });
+    }
+
+    #[test]
+    fn prop_check_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            prop_check("fails", 3, |_| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("seed 0"), "{msg}");
+    }
+
+    #[test]
+    fn assert_close_tolerates() {
+        assert_close(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, "ok");
+    }
+}
