@@ -5,7 +5,7 @@
 
 use spnn::exp::{fig8, ExpOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let md = fig8::run(&ExpOpts { scale: 0.5, quick: false, seed: 7 })?;
     println!("{md}");
     Ok(())

@@ -10,7 +10,7 @@ use spnn::netsim::LinkSpec;
 use spnn::protocols::spnn::Spnn;
 use spnn::protocols::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let ds = synth_distress(SynthOpts { rows: 3_672, seed: 43, pos_boost: 2.0 });
     let (train, test) = ds.split(0.7, 43); // the dataset owner's split
     println!("distress workload: {} train / {} test rows", train.len(), test.len());

@@ -10,7 +10,7 @@ use spnn::data::{synth_fraud, SynthOpts};
 use spnn::netsim::LinkSpec;
 use spnn::protocols;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let rows: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12_000);
     let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);

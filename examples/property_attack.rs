@@ -5,7 +5,7 @@
 
 use spnn::attack::{property_attack, AttackOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let opts = AttackOpts { rows: 12_000, epochs: 5, seed: 11, noise: None };
     println!("property attack: infer 'amount' (binarized at median) from h1\n");
     for sgld in [false, true] {

@@ -9,7 +9,7 @@ use spnn::netsim::LinkSpec;
 use spnn::protocols::spnn::Spnn;
 use spnn::protocols::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. a vertically-partitioned dataset (two holders, A also has labels)
     let ds = synth_fraud(SynthOpts::small(4_000));
     let (train, test) = ds.split(0.8, 7);

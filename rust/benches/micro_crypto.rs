@@ -5,8 +5,10 @@
 
 use spnn::bench_harness::bench;
 use spnn::bignum::{modpow, BigUint};
+use spnn::exec::ExecPool;
+use spnn::paillier::pack::{self, Packing};
 use spnn::paillier::{keygen, NoncePool};
-use spnn::rng::{ChaChaRng, Pcg64, Rng64};
+use spnn::rng::{ChaChaRng, Pcg64};
 use spnn::runtime::Engine;
 use spnn::smpc::RingMat;
 
@@ -45,6 +47,77 @@ fn main() {
         std::hint::black_box(kp.sk.decrypt(&ct));
     });
 
+    // Paillier plaintext packing + exec-pool batching (the Algorithm 3 hot
+    // path): unpacked per-element encryption (the seed loop) vs packed
+    // batch, single-thread vs multi-core. 512-bit keys keep the nonce
+    // precomputation affordable in a quick bench run; the packing factor
+    // only grows at 1024 bits (21 slots vs 10).
+    let serial = ExecPool::serial();
+    let pooled = ExecPool::new(0);
+    let kp5 = keygen(&mut rng, 512);
+    let packing = Packing::new(&kp5.pk, 48, 2).unwrap();
+    let vals: Vec<i64> = (0..512i64).map(|i| (i - 256) << 10).collect();
+    let n_packed = packing.ct_count(vals.len());
+    println!(
+        "packing: {} slots/ct at 512-bit keys -> {} cts for {} values; {} threads",
+        packing.slots(),
+        n_packed,
+        vals.len(),
+        pooled.threads()
+    );
+
+    let mut pool = NoncePool::new(&kp5.pk, true);
+    bench("paillier512/encrypt_unpacked_serial_512v", 1, 3, || {
+        if pool.remaining() < vals.len() {
+            pool.refill_parallel(&mut rng, 2 * vals.len(), &pooled);
+        }
+        for &v in &vals {
+            std::hint::black_box(kp5.pk.encrypt_i64_with_pool(v, &mut pool));
+        }
+    });
+    bench("paillier512/encrypt_packed_serial_512v", 1, 5, || {
+        if pool.remaining() < n_packed {
+            pool.refill_parallel(&mut rng, 8 * n_packed, &pooled);
+        }
+        std::hint::black_box(pack::encrypt_batch(
+            &kp5.pk, &packing, &vals, &mut pool, &serial,
+        ));
+    });
+    bench("paillier512/encrypt_packed_pooled_512v", 1, 5, || {
+        if pool.remaining() < n_packed {
+            pool.refill_parallel(&mut rng, 8 * n_packed, &pooled);
+        }
+        std::hint::black_box(pack::encrypt_batch(
+            &kp5.pk, &packing, &vals, &mut pool, &pooled,
+        ));
+    });
+    // nonce precomputation (the per-batch offline cost): serial vs pooled
+    bench("paillier512/nonce_refill16_serial", 1, 3, || {
+        let mut p = NoncePool::new(&kp5.pk, true);
+        p.refill(&mut rng, 16);
+        std::hint::black_box(p.remaining());
+    });
+    bench("paillier512/nonce_refill16_pooled", 1, 3, || {
+        let mut p = NoncePool::new(&kp5.pk, true);
+        p.refill_parallel(&mut rng, 16, &pooled);
+        std::hint::black_box(p.remaining());
+    });
+    // server-side decryption of a packed batch: serial vs pooled
+    pool.refill_parallel(&mut rng, n_packed, &pooled);
+    let packed_cts = pack::encrypt_batch(&kp5.pk, &packing, &vals, &mut pool, &pooled);
+    bench("paillier512/decrypt_batch_serial", 1, 5, || {
+        std::hint::black_box(
+            pack::decrypt_batch(&kp5.sk, &packing, &packed_cts, vals.len(), 1, &serial)
+                .unwrap(),
+        );
+    });
+    bench("paillier512/decrypt_batch_pooled", 1, 5, || {
+        std::hint::black_box(
+            pack::decrypt_batch(&kp5.sk, &packing, &packed_cts, vals.len(), 1, &pooled)
+                .unwrap(),
+        );
+    });
+
     // ring matmul: native vs AOT Pallas kernel (fraud + distress shapes)
     let mut prng = Pcg64::seed_from_u64(2);
     let x = RingMat::random(&mut prng, 1024, 28);
@@ -54,8 +127,11 @@ fn main() {
     });
     let xd = RingMat::random(&mut prng, 1024, 556);
     let wd = RingMat::random(&mut prng, 556, 400);
-    bench("ring_matmul/native_1024x556x400", 1, 3, || {
-        std::hint::black_box(xd.matmul(&wd));
+    bench("ring_matmul/native_serial_1024x556x400", 1, 3, || {
+        std::hint::black_box(xd.matmul_with(&serial, &wd));
+    });
+    bench("ring_matmul/native_pooled_1024x556x400", 1, 3, || {
+        std::hint::black_box(xd.matmul_with(&pooled, &wd));
     });
     if let Ok(mut eng) = Engine::load_default() {
         bench("ring_matmul/pallas_1024x28x8", 2, 20, || {

@@ -122,6 +122,13 @@ pub struct TrainConfig {
     pub paillier_short_exp: bool,
     /// SGLD noise-scale override (None = lr-matched tempering).
     pub sgld_noise: Option<f64>,
+    /// Paillier packing slot width in bits (SPNN-HE): a multiple of 8 in
+    /// `[16, 56]`; `floor((n_bits-1)/slot_bits)` fixed-point values share
+    /// each ciphertext (see [`crate::paillier::pack`]).
+    pub slot_bits: usize,
+    /// Worker threads for the crypto exec pool, 0 = auto (the
+    /// `SPNN_EXEC_THREADS` env var, then `available_parallelism`).
+    pub exec_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -135,6 +142,8 @@ impl Default for TrainConfig {
             paillier_bits: 1024,
             paillier_short_exp: true,
             sgld_noise: None,
+            slot_bits: crate::paillier::pack::DEFAULT_SLOT_BITS,
+            exec_threads: 0,
         }
     }
 }
@@ -165,6 +174,17 @@ mod tests {
             DISTRESS.artifact("ring_matmul", 5000),
             "ring_matmul_distress_b5000"
         );
+    }
+
+    #[test]
+    fn crypto_pipeline_defaults_are_sane() {
+        let tc = TrainConfig::default();
+        // 48-bit slots divide bytes evenly and pack 21 values per 1024-bit
+        // plaintext; 0 threads = auto-detect
+        assert_eq!(tc.slot_bits, 48);
+        assert_eq!(tc.slot_bits % 8, 0);
+        assert_eq!((tc.paillier_bits - 1) / tc.slot_bits, 21);
+        assert_eq!(tc.exec_threads, 0);
     }
 
     #[test]

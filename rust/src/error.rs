@@ -1,44 +1,82 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — the offline vendor set has no
+//! `thiserror`, and the surface is small enough not to miss it).
+
+use std::fmt;
 
 /// Unified error for all SPNN subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA runtime failures (artifact load, compile, execute).
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Artifact registry problems (missing artifact, signature mismatch).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Protocol-level violations (share mismatch, wrong phase, bad message).
-    #[error("protocol: {0}")]
     Protocol(String),
 
     /// Cryptographic failures (key generation, decryption, range checks).
-    #[error("crypto: {0}")]
     Crypto(String),
 
     /// Simulated-network failures (disconnected channel, unknown party).
-    #[error("netsim: {0}")]
     Net(String),
 
     /// Configuration / CLI errors.
-    #[error("config: {0}")]
     Config(String),
 
     /// Dataset / shape errors.
-    #[error("data: {0}")]
     Data(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Crypto(m) => write!(f, "crypto: {m}"),
+            Error::Net(m) => write!(f, "netsim: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_subsystem() {
+        assert_eq!(format!("{}", Error::Protocol("boom".into())), "protocol: boom");
+        assert_eq!(format!("{}", Error::Crypto("bad key".into())), "crypto: bad key");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(format!("{io}").contains("gone"));
+    }
+}

@@ -1,0 +1,211 @@
+//! Dependency-free chunked execution pool for the crypto hot paths.
+//!
+//! The SPNN hot loops — Paillier batch encryption/decryption
+//! ([`paillier::pack`](crate::paillier::pack)), fixed-point encoding, the
+//! native ring matmul and the Beaver combine step — are all
+//! embarrassingly parallel over contiguous chunks. [`ExecPool`] fans such
+//! work out over scoped OS threads (`std::thread::scope`, so borrowed
+//! inputs need no `'static` gymnastics) and falls back to the calling
+//! thread when the work is too small to amortize a spawn or the pool is
+//! sized to one.
+//!
+//! **Determinism:** every operation assigns each output element to exactly
+//! one worker and runs the same per-element code in the same order as the
+//! serial path, so results are bit-identical for any thread count — the
+//! protocol tests (seeded end-to-end runs) hold under `ExecPool::serial()`
+//! and `ExecPool::new(0)` alike. Randomness is never drawn inside workers;
+//! callers pre-draw RNG material serially (see
+//! [`NoncePool::refill_parallel`](crate::paillier::NoncePool::refill_parallel)).
+//!
+//! Sizing: explicit count > `TrainConfig::exec_threads` via
+//! [`set_default_threads`] > `SPNN_EXEC_THREADS` env var >
+//! `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide default thread count (0 = auto-detect). Written once per
+/// training run from `TrainConfig::exec_threads`.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default pool width (0 = auto-detect).
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Hardware/env auto-detection, computed once.
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPNN_EXEC_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// The process-default pool (honors [`set_default_threads`], then the
+/// `SPNN_EXEC_THREADS` env var, then the core count).
+pub fn pool() -> ExecPool {
+    ExecPool::new(DEFAULT_THREADS.load(Ordering::Relaxed))
+}
+
+/// A chunked fork-join pool. Cheap to copy — it is only a width; threads
+/// are scoped per call, so there is no teardown/lifecycle to manage.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecPool {
+    threads: usize,
+}
+
+impl ExecPool {
+    /// `threads = 0` resolves `SPNN_EXEC_THREADS`, then
+    /// `available_parallelism`; any explicit count is taken as-is.
+    pub fn new(threads: usize) -> Self {
+        let t = if threads == 0 { auto_threads() } else { threads };
+        ExecPool { threads: t.max(1) }
+    }
+
+    /// Single-thread pool: the deterministic baseline for tests/benches.
+    pub fn serial() -> Self {
+        ExecPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Chunk length splitting `n` items across the pool, floored at
+    /// `min_chunk` so tiny work stays inline.
+    fn chunk_len(&self, n: usize, min_chunk: usize) -> usize {
+        n.div_ceil(self.threads).max(min_chunk.max(1))
+    }
+
+    /// Parallel map preserving input order. Chunks of at least `min_chunk`
+    /// items ship to workers; if everything fits one chunk the map runs on
+    /// the calling thread.
+    pub fn par_map<T, R, F>(&self, items: &[T], min_chunk: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let chunk = self.chunk_len(items.len(), min_chunk);
+        if self.threads == 1 || chunk >= items.len() {
+            return items.iter().map(f).collect();
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| {
+                    // re-raise worker panics with their original payload
+                    h.join().unwrap_or_else(|e| std::panic::resume_unwind(e))
+                })
+                .collect()
+        })
+    }
+
+    /// Row-banded in-place fill: `out.len()` must be a multiple of
+    /// `stride`; disjoint bands of whole rows go to workers as
+    /// `(first_row, band)`. `stride = 1` gives plain elementwise chunking.
+    /// Bands never split a row, so matrix kernels can index freely.
+    pub fn par_rows_mut<T, F>(&self, out: &mut [T], stride: usize, min_rows: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(stride > 0 && out.len() % stride == 0, "par_rows_mut: bad stride");
+        let rows = out.len() / stride;
+        let chunk_rows = self.chunk_len(rows, min_rows);
+        if self.threads == 1 || chunk_rows >= rows {
+            f(0, out);
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for (i, band) in out.chunks_mut(chunk_rows * stride).enumerate() {
+                s.spawn(move || f(i * chunk_rows, band));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_and_values() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        for pool in [ExecPool::serial(), ExecPool::new(2), ExecPool::new(7)] {
+            let got = pool.par_map(&xs, 1, |&x| x * x + 1);
+            let want: Vec<u64> = xs.iter().map(|&x| x * x + 1).collect();
+            assert_eq!(got, want, "threads={}", pool.threads());
+        }
+    }
+
+    #[test]
+    fn par_map_small_input_runs_inline() {
+        let xs = [1u32, 2, 3];
+        let got = ExecPool::new(8).par_map(&xs, 64, |&x| x + 1);
+        assert_eq!(got, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_rows_mut_bands_never_split_rows() {
+        let (rows, cols) = (97, 13); // deliberately non-round
+        for pool in [ExecPool::serial(), ExecPool::new(3), ExecPool::new(16)] {
+            let mut out = vec![0usize; rows * cols];
+            pool.par_rows_mut(&mut out, cols, 1, |row0, band| {
+                assert_eq!(band.len() % cols, 0, "band split a row");
+                for (i, v) in band.iter_mut().enumerate() {
+                    let r = row0 + i / cols;
+                    let c = i % cols;
+                    *v = r * 1000 + c;
+                }
+            });
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(out[r * cols + c], r * 1000 + c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_mut_empty_and_single() {
+        let mut empty: Vec<u8> = vec![];
+        ExecPool::new(4).par_rows_mut(&mut empty, 1, 1, |_, _| {});
+        let mut one = vec![7u8];
+        ExecPool::new(4).par_rows_mut(&mut one, 1, 1, |off, c| {
+            assert_eq!(off, 0);
+            c[0] += 1;
+        });
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn pool_resolves_to_at_least_one_thread() {
+        assert!(ExecPool::new(0).threads() >= 1);
+        assert_eq!(ExecPool::serial().threads(), 1);
+        assert_eq!(ExecPool::new(5).threads(), 5);
+        assert!(pool().threads() >= 1);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // the determinism contract the protocol tests lean on
+        let xs: Vec<f64> = (0..5000).map(|i| (i as f64) * 0.37 - 900.0).collect();
+        let serial = ExecPool::serial().par_map(&xs, 1, |&x| (x * 1.000001).to_bits());
+        let par = ExecPool::new(4).par_map(&xs, 1, |&x| (x * 1.000001).to_bits());
+        assert_eq!(serial, par);
+    }
+}

@@ -17,8 +17,10 @@
 //!
 //! * **Layer 3 (this crate)** — the decentralized coordinator: party actors
 //!   ([`parties`]), a deterministic network simulator ([`netsim`]), the MPC
-//!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack, the
-//!   PJRT [`runtime`] and the five training [`protocols`].
+//!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack (with
+//!   plaintext packing, [`paillier::pack`]), the chunked [`exec`] thread
+//!   pool that fans the crypto hot paths out across cores, the PJRT
+//!   [`runtime`] and the five training [`protocols`].
 //! * **Layer 2** — JAX graphs (`python/compile/model.py`), AOT-lowered to
 //!   `artifacts/*.hlo.txt` once by `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the blocked
@@ -34,6 +36,7 @@ pub mod bignum;
 pub mod config;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod exp;
 pub mod fixed;
 pub mod netsim;

@@ -6,7 +6,8 @@
 //!   attack  — run the Table 2 property-inference attack standalone
 //!   info    — list loaded AOT artifacts
 //!
-//! Hand-rolled argument parsing (no clap in the offline vendor set).
+//! Hand-rolled argument parsing (no clap in the offline vendor set), and a
+//! boxed error alias instead of anyhow for the same reason.
 
 use std::collections::HashMap;
 
@@ -17,6 +18,13 @@ use spnn::exp::{self, ExpOpts};
 use spnn::netsim::LinkSpec;
 use spnn::protocols;
 use spnn::runtime::Engine;
+
+type CliError = Box<dyn std::error::Error>;
+type CliResult<T> = std::result::Result<T, CliError>;
+
+fn err(msg: String) -> CliError {
+    msg.into()
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,7 +38,7 @@ fn main() {
     std::process::exit(code);
 }
 
-fn run(args: &[String]) -> anyhow::Result<()> {
+fn run(args: &[String]) -> CliResult<()> {
     let Some(cmd) = args.first() else {
         print_usage();
         return Ok(());
@@ -47,7 +55,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
         other => {
             print_usage();
-            anyhow::bail!("unknown command {other:?}");
+            Err(err(format!("unknown command {other:?}")))
         }
     }
 }
@@ -60,7 +68,7 @@ USAGE:
   spnn train  [--protocol nn|splitnn|secureml|spnn-ss|spnn-he]
               [--dataset fraud|distress] [--rows N] [--epochs E]
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
-              [--paillier-bits N] [--seed S]
+              [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
@@ -94,11 +102,11 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, defaul
         .unwrap_or(default)
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
     let proto = flags.get("protocol").map(|s| s.as_str()).unwrap_or("spnn-ss");
     let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("fraud");
     let cfg: &ModelConfig = ModelConfig::by_name(dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?;
+        .ok_or_else(|| err(format!("unknown dataset {dataset:?}")))?;
     let rows = flag(flags, "rows", if dataset == "fraud" { 12_000 } else { 3_672 });
     let seed = flag(flags, "seed", 7u64);
     let ds = if dataset == "fraud" {
@@ -116,11 +124,13 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         paillier_bits: flag(flags, "paillier-bits", 1024),
         paillier_short_exp: true,
         sgld_noise: None,
+        slot_bits: flag(flags, "slot-bits", spnn::paillier::pack::DEFAULT_SLOT_BITS),
+        exec_threads: flag(flags, "threads", 0usize),
     };
     let spec = LinkSpec::from_mbps(flag(flags, "mbps", 100.0));
     let holders = flag(flags, "holders", 2usize);
     let trainer = protocols::by_name(proto)
-        .ok_or_else(|| anyhow::anyhow!("unknown protocol {proto:?}"))?;
+        .ok_or_else(|| err(format!("unknown protocol {proto:?}")))?;
     eprintln!(
         "training {proto} on {dataset} ({} train / {} test rows, {} holders)",
         train.len(),
@@ -134,7 +144,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_repro(args: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_repro(args: &[String], flags: &HashMap<String, String>) -> CliResult<()> {
     let which = args
         .iter()
         .find(|a| !a.starts_with("--") && a.parse::<f64>().is_err())
@@ -149,7 +159,7 @@ fn cmd_repro(args: &[String], flags: &HashMap<String, String>) -> anyhow::Result
         exp::run_all(&opts)?
     } else {
         let f = exp::by_name(which)
-            .ok_or_else(|| anyhow::anyhow!("unknown experiment {which:?}"))?;
+            .ok_or_else(|| err(format!("unknown experiment {which:?}")))?;
         f(&opts)?
     };
     println!("{md}");
@@ -160,7 +170,7 @@ fn cmd_repro(args: &[String], flags: &HashMap<String, String>) -> anyhow::Result
     Ok(())
 }
 
-fn cmd_attack(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_attack(flags: &HashMap<String, String>) -> CliResult<()> {
     let opts = AttackOpts {
         rows: flag(flags, "rows", 16_000),
         epochs: flag(flags, "epochs", 6),
@@ -177,7 +187,7 @@ fn cmd_attack(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> CliResult<()> {
     let engine = Engine::load_default()?;
     let m = engine.manifest();
     println!("{} artifacts loaded:", m.len());

@@ -13,8 +13,19 @@ pub enum Payload {
     F32s(Vec<f32>),
     /// High-precision values (label-holder loss, metrics).
     F64s(Vec<f64>),
-    /// Paillier ciphertexts as little-endian byte strings.
+    /// Paillier ciphertexts as little-endian byte strings — the legacy
+    /// per-ciphertext framing (one length prefix each). Kept for small
+    /// one-off messages (key broadcast); the hot path uses
+    /// [`Payload::CipherBlock`].
     Cipher(Vec<Vec<u8>>),
+    /// A contiguous block of `count` equal-size ciphertexts, `ct_bytes`
+    /// each, zero-padded to fixed width — the HE hot-path wire format.
+    /// One allocation, one length prefix for the whole block.
+    CipherBlock {
+        data: Vec<u8>,
+        ct_bytes: usize,
+        count: usize,
+    },
     /// A 32-byte PRG seed (compressed correlated randomness).
     Seed([u8; 32]),
     /// Boolean-share bit-matrix packed 64/word (secureml comparison).
@@ -28,13 +39,24 @@ impl Payload {
     /// roughly a gRPC/HTTP2 frame header.
     pub const HEADER_BYTES: usize = 16;
 
+    /// Per-item length framing for the legacy [`Payload::Cipher`] variant:
+    /// variable-size byte strings each need their own u32 length prefix.
+    pub const CIPHER_ITEM_FRAME: usize = 4;
+
+    /// Per-message framing for [`Payload::CipherBlock`]: one `ct_bytes` +
+    /// one `count` word (u32 each) describing the whole block.
+    pub const CIPHER_BLOCK_FRAME: usize = 8;
+
     /// Payload bytes on the wire (excluding [`Self::HEADER_BYTES`]).
     pub fn wire_bytes(&self) -> usize {
         match self {
             Payload::U64s(v) => v.len() * 8,
             Payload::F32s(v) => v.len() * 4,
             Payload::F64s(v) => v.len() * 8,
-            Payload::Cipher(cs) => cs.iter().map(|c| c.len()).sum(),
+            Payload::Cipher(cs) => {
+                cs.iter().map(|c| c.len() + Self::CIPHER_ITEM_FRAME).sum()
+            }
+            Payload::CipherBlock { data, .. } => data.len() + Self::CIPHER_BLOCK_FRAME,
             Payload::Seed(_) => 32,
             Payload::Bits(v) => v.len() * 8,
             Payload::Control(s) => s.len(),
@@ -84,6 +106,16 @@ impl Payload {
         }
     }
 
+    /// Unwrap a flat ciphertext block as `(data, ct_bytes, count)`.
+    pub fn into_cipher_block(self) -> crate::Result<(Vec<u8>, usize, usize)> {
+        match self {
+            Payload::CipherBlock { data, ct_bytes, count } => Ok((data, ct_bytes, count)),
+            other => Err(crate::Error::Protocol(format!(
+                "expected CipherBlock, got {}", other.kind()
+            ))),
+        }
+    }
+
     pub fn into_seed(self) -> crate::Result<[u8; 32]> {
         match self {
             Payload::Seed(s) => Ok(s),
@@ -117,6 +149,7 @@ impl Payload {
             Payload::F32s(_) => "F32s",
             Payload::F64s(_) => "F64s",
             Payload::Cipher(_) => "Cipher",
+            Payload::CipherBlock { .. } => "CipherBlock",
             Payload::Seed(_) => "Seed",
             Payload::Bits(_) => "Bits",
             Payload::Control(_) => "Control",
@@ -136,10 +169,29 @@ mod tests {
         assert_eq!(Payload::Seed([0; 32]).wire_bytes(), 32);
         assert_eq!(Payload::Bits(vec![0; 4]).wire_bytes(), 32);
         assert_eq!(Payload::Control("go".into()).wire_bytes(), 2);
+    }
+
+    #[test]
+    fn cipher_counts_per_item_framing() {
+        // each variable-size ciphertext needs its own u32 length prefix
         assert_eq!(
             Payload::Cipher(vec![vec![0u8; 256], vec![0u8; 256]]).wire_bytes(),
-            512
+            2 * (256 + Payload::CIPHER_ITEM_FRAME)
         );
+        assert_eq!(Payload::Cipher(vec![]).wire_bytes(), 0);
+        assert_eq!(
+            Payload::Cipher(vec![vec![1]]).wire_bytes(),
+            1 + Payload::CIPHER_ITEM_FRAME
+        );
+    }
+
+    #[test]
+    fn cipher_block_counts_one_frame_total() {
+        let blk = Payload::CipherBlock { data: vec![0u8; 4 * 256], ct_bytes: 256, count: 4 };
+        assert_eq!(blk.wire_bytes(), 4 * 256 + Payload::CIPHER_BLOCK_FRAME);
+        // flat framing beats per-item framing for every count > 2
+        let legacy = Payload::Cipher(vec![vec![0u8; 256]; 4]);
+        assert!(blk.wire_bytes() < legacy.wire_bytes());
     }
 
     #[test]
@@ -148,5 +200,14 @@ mod tests {
         assert!(Payload::U64s(vec![1]).into_f32s().is_err());
         assert!(Payload::Control("x".into()).into_control().is_ok());
         assert!(Payload::Seed([1; 32]).into_seed().is_ok());
+        let blk = Payload::CipherBlock { data: vec![7; 12], ct_bytes: 4, count: 3 };
+        let (data, ct_bytes, count) = blk.into_cipher_block().unwrap();
+        assert_eq!((data.len(), ct_bytes, count), (12, 4, 3));
+        assert!(Payload::Cipher(vec![]).into_cipher_block().is_err());
+        assert!(
+            Payload::CipherBlock { data: vec![], ct_bytes: 0, count: 0 }
+                .into_cipher()
+                .is_err()
+        );
     }
 }

@@ -1,6 +1,15 @@
 //! Minimal row-major f64 matrix for the reference NN.
+//!
+//! `matmul` is row-banded over the process [`exec::pool`](crate::exec)
+//! above a work threshold (each output row is still accumulated in serial
+//! order, so results are bit-identical at any pool width) — the SPNN-HE
+//! holders' local `X_j·theta_j` products ride this.
 
+use crate::exec;
 use crate::rng::{NormalSampler, Rng64};
+
+/// Minimum multiply-accumulate count before matmul fans out.
+const PAR_MIN_WORK: usize = 1 << 17;
 
 /// Row-major f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,18 +63,23 @@ impl MatF64 {
         assert_eq!(self.cols, other.rows, "matmul inner dim");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = vec![0.0f64; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
+        if n > 0 && m > 0 {
+            let min_rows = (PAR_MIN_WORK / (k * n).max(1)).max(1);
+            exec::pool().par_rows_mut(&mut out, n, min_rows, |row0, band| {
+                for (bi, orow) in band.chunks_mut(n).enumerate() {
+                    let i = row0 + bi;
+                    for kk in 0..k {
+                        let a = self.data[i * k + kk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[kk * n..(kk + 1) * n];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                    }
                 }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
+            });
         }
         MatF64 { rows: m, cols: n, data: out }
     }

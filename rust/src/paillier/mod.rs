@@ -18,12 +18,18 @@
 //! * Ring payloads (`Z_{2^64}` fixed-point, two's complement) are embedded
 //!   as signed integers: non-negative as-is, negative as `n - |x|`. Sums
 //!   stay ≪ `n/2`, so decoding is unambiguous.
+//! * [`pack`] packs `floor((n_bits-1)/slot_bits)` fixed-point values per
+//!   plaintext (offset-encoded, with headroom for the k-holder ciphertext
+//!   sum), with pool-parallel `encrypt_batch`/`decrypt_batch` — the
+//!   Algorithm 3 hot path encrypts per *slot group*, not per element.
 
 mod keys;
 mod nonce;
+pub mod pack;
 
 pub use keys::{keygen, Ciphertext, KeyPair, PublicKey, SecretKey};
 pub use nonce::NoncePool;
+pub use pack::Packing;
 
 #[cfg(test)]
 mod tests {

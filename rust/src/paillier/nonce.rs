@@ -16,6 +16,7 @@
 use std::collections::VecDeque;
 
 use crate::bignum::BigUint;
+use crate::exec::ExecPool;
 use crate::rng::Rng64;
 
 use super::PublicKey;
@@ -71,6 +72,27 @@ impl NoncePool {
             };
             self.pool.push_back(rn);
         }
+    }
+
+    /// Parallel refill: the random exponents are drawn **serially** (the
+    /// same RNG stream as [`Self::refill`], so the pool contents are
+    /// bit-identical for any pool width) and the expensive modular
+    /// exponentiations fan out over `exec`. This is the dominant per-batch
+    /// cost of SPNN-HE, now one exponentiation per *packed* ciphertext.
+    pub fn refill_parallel<R: Rng64>(&mut self, rng: &mut R, count: usize, exec: &ExecPool) {
+        let exps: Vec<BigUint> = (0..count)
+            .map(|_| match &self.hs {
+                Some(_) => BigUint::random_bits(rng, SHORT_EXP_BITS),
+                None => self.pk.sample_unit(rng),
+            })
+            .collect();
+        let pk = &self.pk;
+        let hs = self.hs.as_ref();
+        let rns = exec.par_map(&exps, 1, |e| match hs {
+            Some(hs) => pk.mont_n2.pow(hs, e),
+            None => pk.mont_n2.pow(e, &pk.n),
+        });
+        self.pool.extend(rns);
     }
 
     /// Take one nonce; panics if the pool ran dry (a protocol bug: refill

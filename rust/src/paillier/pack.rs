@@ -1,0 +1,462 @@
+//! Paillier **plaintext packing**: many fixed-point values per ciphertext.
+//!
+//! The Algorithm 3 hot loop encrypts a `rows x h1_dim` matrix per
+//! mini-batch. A Paillier plaintext lives in `Z_n` (1024 bits at the
+//! experiments' default) while each matrix entry is a ~48-bit fixed-point
+//! ring value, so encrypting one entry per ciphertext wastes >95% of every
+//! plaintext — and of every wire byte, since a ciphertext is `2·n_bits`.
+//! Packing (the BatchCrypt lever from "Industrial Scale Privacy Preserving
+//! Deep Neural Network", Zheng et al. 2020) lays
+//! `slots = floor((n_bits-1)/slot_bits)` values side by side in one
+//! plaintext, shrinking both the encryption count and the HE traffic by
+//! `slots`x.
+//!
+//! Homomorphic addition adds all slots componentwise, which is exactly the
+//! `k`-holder ciphertext-chain sum SPNN-HE needs — provided no slot ever
+//! carries into its neighbor. Two measures guarantee that:
+//!
+//! * **offset encoding**: a signed value `v` is stored as `v + bias` with
+//!   `bias = 2^(value_bits-1)`, so slot contents are non-negative and
+//!   two's-complement borrows cannot cross slot boundaries;
+//! * **headroom**: `value_bits = slot_bits - ceil(log2(max_addends))`, so
+//!   the sum of `max_addends` slots stays `< 2^slot_bits`.
+//!
+//! Decoding a sum of `k` ciphertexts subtracts `k·bias` per slot. Unused
+//! trailing slots in the last ciphertext are left all-zero (no bias) and
+//! never read back.
+//!
+//! Layout: little-endian slot order, `slot_bits/8` bytes per slot, so
+//! packing/unpacking is pure byte movement (no bignum shifts).
+
+use crate::bignum::BigUint;
+use crate::exec::ExecPool;
+use crate::{Error, Result};
+
+use super::{Ciphertext, NoncePool, PublicKey, SecretKey};
+
+/// Default per-slot width in bits (`TrainConfig::slot_bits`): 21 slots per
+/// 1024-bit plaintext, 5 per test-size 256-bit plaintext.
+pub const DEFAULT_SLOT_BITS: usize = 48;
+
+/// Minimum items per worker chunk for batched modular arithmetic; one
+/// Paillier op is microseconds-to-milliseconds, so tiny chunks are fine
+/// but single-digit batches stay inline.
+const PAR_MIN_OPS: usize = 8;
+
+/// Packing geometry for one public key: how many fixed-point values share
+/// a plaintext and how much per-slot headroom a `k`-holder sum needs.
+#[derive(Clone, Copy, Debug)]
+pub struct Packing {
+    slot_bits: usize,
+    slot_bytes: usize,
+    /// Values per ciphertext.
+    slots: usize,
+    /// Per-slot offset making stored slot contents non-negative.
+    bias: u64,
+    /// Largest number of ciphertexts the slots leave headroom to sum.
+    max_addends: usize,
+}
+
+impl Packing {
+    /// `slot_bits` must be a multiple of 8 in `[16, 56]` (so a summed slot
+    /// always fits a `u64` read); `max_addends >= 1` is the number of
+    /// homomorphic addends — SPNN-HE passes the holder count.
+    pub fn new(pk: &PublicKey, slot_bits: usize, max_addends: usize) -> Result<Self> {
+        if slot_bits % 8 != 0 || !(16..=56).contains(&slot_bits) {
+            return Err(Error::Crypto(format!(
+                "packing: slot_bits {slot_bits} must be a multiple of 8 in [16, 56]"
+            )));
+        }
+        if max_addends == 0 {
+            return Err(Error::Crypto("packing: max_addends must be >= 1".into()));
+        }
+        let headroom = usize::BITS as usize - (max_addends - 1).leading_zeros() as usize;
+        let value_bits = slot_bits
+            .checked_sub(headroom)
+            .filter(|&vb| vb >= 8)
+            .ok_or_else(|| {
+                Error::Crypto(format!(
+                    "packing: slot_bits {slot_bits} leaves no room for \
+                     {max_addends}-addend headroom"
+                ))
+            })?;
+        // packed plaintexts stay < 2^(n_bits-1) < n, so Z_n never wraps
+        let slots = (pk.n.bits() - 1) / slot_bits;
+        if slots == 0 {
+            return Err(Error::Crypto(format!(
+                "packing: modulus of {} bits too small for slot_bits {slot_bits}",
+                pk.n.bits()
+            )));
+        }
+        Ok(Packing {
+            slot_bits,
+            slot_bytes: slot_bits / 8,
+            slots,
+            bias: 1u64 << (value_bits - 1),
+            max_addends,
+        })
+    }
+
+    /// Values per ciphertext.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn slot_bits(&self) -> usize {
+        self.slot_bits
+    }
+
+    pub fn max_addends(&self) -> usize {
+        self.max_addends
+    }
+
+    /// Ciphertexts needed for `count` values.
+    pub fn ct_count(&self, count: usize) -> usize {
+        count.div_ceil(self.slots)
+    }
+
+    /// Largest value magnitude one slot can carry: values must lie in
+    /// `[-max, max]` with `max = bias - 1` (the fixed-point products of
+    /// normalized features sit far below this at the default 48-bit slots).
+    pub fn max_value(&self) -> i64 {
+        (self.bias - 1) as i64
+    }
+
+    /// Pack signed fixed-point values into plaintext integers,
+    /// [`Self::slots`] per number, little-endian slot order.
+    ///
+    /// Panics if a value exceeds [`Self::max_value`] — that is a protocol
+    /// sizing bug (increase `slot_bits` or shrink the fixed-point scale),
+    /// not a runtime condition to limp past.
+    pub fn pack(&self, vals: &[i64]) -> Vec<BigUint> {
+        vals.chunks(self.slots)
+            .map(|chunk| {
+                let mut bytes = vec![0u8; chunk.len() * self.slot_bytes];
+                for (i, &v) in chunk.iter().enumerate() {
+                    assert!(
+                        v.unsigned_abs() < self.bias,
+                        "packing: value {v} exceeds slot capacity {} \
+                         (slot_bits {}, {} addends) — increase slot_bits",
+                        self.max_value(),
+                        self.slot_bits,
+                        self.max_addends
+                    );
+                    let u = (v + self.bias as i64) as u64;
+                    bytes[i * self.slot_bytes..(i + 1) * self.slot_bytes]
+                        .copy_from_slice(&u.to_le_bytes()[..self.slot_bytes]);
+                }
+                BigUint::from_bytes_le(&bytes)
+            })
+            .collect()
+    }
+
+    /// Unpack plaintexts that are the sum of `addends` packed ciphertexts
+    /// back into `count` signed values (`addends = 1` decodes a single
+    /// unpaired encryption).
+    pub fn unpack_sum(&self, plains: &[BigUint], count: usize, addends: usize) -> Result<Vec<i64>> {
+        if addends == 0 || addends > self.max_addends {
+            return Err(Error::Crypto(format!(
+                "unpack: {addends} addends exceeds the packing headroom ({})",
+                self.max_addends
+            )));
+        }
+        if plains.len() != self.ct_count(count) {
+            return Err(Error::Protocol(format!(
+                "unpack: {} plaintexts for {count} values (expected {})",
+                plains.len(),
+                self.ct_count(count)
+            )));
+        }
+        let k_bias = (addends as u64 * self.bias) as i64;
+        let mut out = Vec::with_capacity(count);
+        for (ci, m) in plains.iter().enumerate() {
+            let bytes = m.to_bytes_le(); // trailing zero bytes are trimmed
+            let here = (count - ci * self.slots).min(self.slots);
+            for i in 0..here {
+                let start = i * self.slot_bytes;
+                let mut buf = [0u8; 8];
+                for (b, slot) in buf.iter_mut().take(self.slot_bytes).enumerate() {
+                    *slot = bytes.get(start + b).copied().unwrap_or(0);
+                }
+                out.push(u64::from_le_bytes(buf) as i64 - k_bias);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Pack and encrypt `vals`: one [`NoncePool`] nonce per ciphertext (drawn
+/// serially — the pool order is part of the deterministic transcript), the
+/// modular multiplications fanned out over `exec`.
+pub fn encrypt_batch(
+    pk: &PublicKey,
+    packing: &Packing,
+    vals: &[i64],
+    pool: &mut NoncePool,
+    exec: &ExecPool,
+) -> Vec<Ciphertext> {
+    let plains = packing.pack(vals);
+    let jobs: Vec<(BigUint, BigUint)> =
+        plains.into_iter().map(|m| (m, pool.take())).collect();
+    exec.par_map(&jobs, PAR_MIN_OPS, |(m, rn)| pk.encrypt_with_rn(m, rn))
+}
+
+/// Decrypt a batch of packed ciphertexts (parallel CRT decryptions) and
+/// unpack the per-slot sums of `addends` original ciphertexts.
+pub fn decrypt_batch(
+    sk: &SecretKey,
+    packing: &Packing,
+    cts: &[Ciphertext],
+    count: usize,
+    addends: usize,
+    exec: &ExecPool,
+) -> Result<Vec<i64>> {
+    let plains = exec.par_map(cts, PAR_MIN_OPS / 4, |c| sk.decrypt(c));
+    packing.unpack_sum(&plains, count, addends)
+}
+
+/// Elementwise homomorphic addition of two equal-length ciphertext
+/// batches, fanned out over `exec`.
+pub fn add_batch(
+    pk: &PublicKey,
+    a: &[Ciphertext],
+    b: &[Ciphertext],
+    exec: &ExecPool,
+) -> Result<Vec<Ciphertext>> {
+    if a.len() != b.len() {
+        return Err(Error::Protocol(format!(
+            "add_batch: {} vs {} ciphertexts",
+            a.len(),
+            b.len()
+        )));
+    }
+    let idx: Vec<usize> = (0..a.len()).collect();
+    Ok(exec.par_map(&idx, PAR_MIN_OPS, |&i| pk.add(&a[i], &b[i])))
+}
+
+/// Flatten ciphertexts into one contiguous buffer, each padded to
+/// `ct_bytes` (use [`PublicKey::ciphertext_bytes`]) — the
+/// `Payload::CipherBlock` wire format.
+pub fn cts_to_block(cts: &[Ciphertext], ct_bytes: usize) -> Vec<u8> {
+    let mut data = vec![0u8; cts.len() * ct_bytes];
+    for (i, c) in cts.iter().enumerate() {
+        let b = c.0.to_bytes_le();
+        assert!(
+            b.len() <= ct_bytes,
+            "cts_to_block: ciphertext of {} bytes exceeds ct_bytes {ct_bytes}",
+            b.len()
+        );
+        data[i * ct_bytes..i * ct_bytes + b.len()].copy_from_slice(&b);
+    }
+    data
+}
+
+/// Parse a flat ciphertext block (inverse of [`cts_to_block`]).
+pub fn block_to_cts(data: &[u8], ct_bytes: usize, count: usize) -> Result<Vec<Ciphertext>> {
+    if ct_bytes == 0 || data.len() != ct_bytes * count {
+        return Err(Error::Protocol(format!(
+            "cipher block: {} bytes != {count} ciphertexts x {ct_bytes} bytes",
+            data.len()
+        )));
+    }
+    Ok(data
+        .chunks(ct_bytes)
+        .map(|c| Ciphertext(BigUint::from_bytes_le(c)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paillier::keygen;
+    use crate::rng::{ChaChaRng, Pcg64, Rng64};
+
+    fn keys_256() -> (PublicKey, SecretKey) {
+        let mut rng = ChaChaRng::seed_from_u64(0x9ac4);
+        let kp = keygen(&mut rng, 256);
+        (kp.pk, kp.sk)
+    }
+
+    #[test]
+    fn geometry_at_default_slot_bits() {
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, DEFAULT_SLOT_BITS, 2).unwrap();
+        // 255 usable bits / 48 = 5 slots: a >= 4x wire reduction even at
+        // test-size keys (21 slots at the 1024-bit experiments default)
+        assert_eq!(p.slots(), 5);
+        assert_eq!(p.ct_count(0), 0);
+        assert_eq!(p.ct_count(5), 1);
+        assert_eq!(p.ct_count(6), 2);
+        assert_eq!(p.ct_count(2048), 410);
+        // headroom: 48 - ceil(log2(2)) - 1 = 46 bits of magnitude
+        assert_eq!(p.max_value(), (1i64 << 46) - 1);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let (pk, _) = keys_256();
+        assert!(Packing::new(&pk, 47, 2).is_err(), "not a byte multiple");
+        assert!(Packing::new(&pk, 8, 2).is_err(), "below minimum");
+        assert!(Packing::new(&pk, 64, 2).is_err(), "above u64-safe maximum");
+        assert!(Packing::new(&pk, 48, 0).is_err(), "zero addends");
+        assert!(Packing::new(&pk, 16, 1 << 10).is_err(), "headroom eats the slot");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_single() {
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, 48, 3).unwrap();
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..50 {
+            let n = (rng.next_u64() % 23) as usize;
+            let vals: Vec<i64> = (0..n)
+                .map(|_| {
+                    let span = 2 * p.max_value() as u128 + 1;
+                    (rng.next_u64() as u128 % span) as i64 - p.max_value()
+                })
+                .collect();
+            let plains = p.pack(&vals);
+            assert_eq!(plains.len(), p.ct_count(n));
+            let back = p.unpack_sum(&plains, n, 1).unwrap();
+            assert_eq!(back, vals);
+        }
+    }
+
+    #[test]
+    fn packed_sum_matches_plaintext_sum_for_k_holders() {
+        // the exact SPNN-HE flow: k holders each encrypt_batch their local
+        // products, the ciphertext chain adds them, the server decrypts the
+        // per-slot sums — exercised for k in {2, 3, 5}
+        let (pk, sk) = keys_256();
+        let exec = ExecPool::new(2);
+        let mut rng = ChaChaRng::seed_from_u64(2);
+        for k in [2usize, 3, 5] {
+            let p = Packing::new(&pk, 48, k).unwrap();
+            let count = 37; // deliberately not a slot multiple
+            let per_holder_max = p.max_value() / k as i64;
+            let holders: Vec<Vec<i64>> = (0..k)
+                .map(|_| {
+                    (0..count)
+                        .map(|_| {
+                            let span = 2 * per_holder_max as u128 + 1;
+                            (rng.next_u64() as u128 % span) as i64 - per_holder_max
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut acc: Option<Vec<Ciphertext>> = None;
+            for vals in &holders {
+                let mut pool = NoncePool::new(&pk, true);
+                pool.refill_parallel(&mut rng, p.ct_count(count), &exec);
+                let mine = encrypt_batch(&pk, &p, vals, &mut pool, &exec);
+                acc = Some(match acc {
+                    None => mine,
+                    Some(prev) => add_batch(&pk, &prev, &mine, &exec).unwrap(),
+                });
+            }
+            let got = decrypt_batch(&sk, &p, &acc.unwrap(), count, k, &exec).unwrap();
+            let want: Vec<i64> = (0..count)
+                .map(|i| holders.iter().map(|h| h[i]).sum::<i64>())
+                .collect();
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn boundary_magnitudes_respect_headroom() {
+        // every holder at +/- the per-holder extreme: the slot sum touches
+        // its design limit without carrying into the neighbor slot
+        let (pk, sk) = keys_256();
+        let exec = ExecPool::serial();
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        for k in [2usize, 3, 5] {
+            let p = Packing::new(&pk, 48, k).unwrap();
+            let m = p.max_value() / k as i64;
+            let vals = vec![m, -m, m, -m, m, -m, m]; // crosses one ct boundary
+            let mut acc: Option<Vec<Ciphertext>> = None;
+            for _ in 0..k {
+                let mut pool = NoncePool::new(&pk, false);
+                pool.refill(&mut rng, p.ct_count(vals.len()));
+                let mine = encrypt_batch(&pk, &p, &vals, &mut pool, &exec);
+                acc = Some(match acc {
+                    None => mine,
+                    Some(prev) => add_batch(&pk, &prev, &mine, &exec).unwrap(),
+                });
+            }
+            let got = decrypt_batch(&sk, &p, &acc.unwrap(), vals.len(), k, &exec).unwrap();
+            let want: Vec<i64> = vals.iter().map(|v| v * k as i64).collect();
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_encryption_agree() {
+        // exec width must never change the transcript: same pool nonces,
+        // same ciphertexts
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, 48, 2).unwrap();
+        let vals: Vec<i64> = (-40..40).map(|v| v * 1000).collect();
+        let mk = |exec: &ExecPool| {
+            let mut rng = ChaChaRng::seed_from_u64(4);
+            let mut pool = NoncePool::new(&pk, true);
+            pool.refill_parallel(&mut rng, p.ct_count(vals.len()), exec);
+            encrypt_batch(&pk, &p, &vals, &mut pool, exec)
+        };
+        let serial = mk(&ExecPool::serial());
+        let par = mk(&ExecPool::new(4));
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn refill_parallel_matches_refill() {
+        let (pk, sk) = keys_256();
+        let exec = ExecPool::new(3);
+        for short in [false, true] {
+            let mut a = NoncePool::new(&pk, short);
+            let mut b = NoncePool::new(&pk, short);
+            let mut ra = ChaChaRng::seed_from_u64(5);
+            let mut rb = ChaChaRng::seed_from_u64(5);
+            a.refill(&mut ra, 6);
+            b.refill_parallel(&mut rb, 6, &exec);
+            assert_eq!(a.remaining(), b.remaining());
+            // same nonces => identical ciphertexts for identical messages
+            for i in 0..6 {
+                let m = BigUint::from_u64(100 + i);
+                let ca = pk.encrypt_with_pool(&m, &mut a);
+                let cb = pk.encrypt_with_pool(&m, &mut b);
+                assert_eq!(ca, cb, "short={short} i={i}");
+                assert_eq!(sk.decrypt(&ca), m);
+            }
+        }
+    }
+
+    #[test]
+    fn block_roundtrip_and_size_checks() {
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, 48, 2).unwrap();
+        let mut rng = ChaChaRng::seed_from_u64(6);
+        let mut pool = NoncePool::new(&pk, false);
+        pool.refill(&mut rng, 3);
+        let vals: Vec<i64> = (0..11).map(|v| v - 5).collect();
+        let cts = encrypt_batch(&pk, &p, &vals, &mut pool, &ExecPool::serial());
+        assert_eq!(cts.len(), 3);
+        let ct_bytes = pk.ciphertext_bytes();
+        let block = cts_to_block(&cts, ct_bytes);
+        assert_eq!(block.len(), 3 * ct_bytes);
+        let back = block_to_cts(&block, ct_bytes, 3).unwrap();
+        assert_eq!(back, cts);
+        assert!(block_to_cts(&block, ct_bytes, 2).is_err());
+        assert!(block_to_cts(&block[1..], ct_bytes, 3).is_err());
+        assert!(block_to_cts(&block, 0, 0).is_err());
+    }
+
+    #[test]
+    fn unpack_guards_addends_and_length() {
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, 48, 2).unwrap();
+        let plains = p.pack(&[1, 2, 3]);
+        assert!(p.unpack_sum(&plains, 3, 3).is_err(), "past headroom");
+        assert!(p.unpack_sum(&plains, 3, 0).is_err());
+        assert!(p.unpack_sum(&plains, 99, 1).is_err(), "length mismatch");
+    }
+}

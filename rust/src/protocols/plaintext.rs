@@ -35,6 +35,7 @@ impl Trainer for PlainNn {
         _n_holders: usize,
     ) -> Result<TrainReport> {
         let wall = Instant::now();
+        crate::exec::set_default_threads(tc.exec_threads);
         let mut params = ModelParams::init(cfg, tc.seed);
         let cap = ModelConfig::pick_batch(tc.batch);
         let batches = train.batches(tc.batch, cap);

@@ -71,6 +71,7 @@ impl Trainer for SecureMl {
         n_holders: usize,
     ) -> Result<TrainReport> {
         let wall = Instant::now();
+        crate::exec::set_default_threads(tc.exec_threads);
         let split = VerticalSplit::even(cfg.n_features, n_holders.max(2));
         let plan = super::spnn::batch_plan(train.len(), tc.batch);
         // final reconstructed weights for evaluation

@@ -46,6 +46,7 @@ impl Trainer for SplitNn {
         n_holders: usize,
     ) -> Result<TrainReport> {
         let wall = Instant::now();
+        crate::exec::set_default_threads(tc.exec_threads);
         let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
         let usplit = unit_split(cfg.h1_dim, n_holders);
         let plan = super::spnn::batch_plan(train.len(), tc.batch);

@@ -16,7 +16,10 @@
 //!    * **HE** (Algorithm 3): the server owns the Paillier keypair; each
 //!      holder encrypts its local plaintext product `X_j·theta_j` and the
 //!      running ciphertext sum hops holder-to-holder before the server
-//!      decrypts `h1`.
+//!      decrypts `h1`. The batch is **packed** (`paillier::pack`):
+//!      `slots` fixed-point values share each plaintext, encryption /
+//!      addition / decryption run `exec`-pool-parallel, and ciphertexts
+//!      travel as one flat [`Payload::CipherBlock`] per hop.
 //! 2. **Hidden-layer computations** (§4.4) — the server reconstructs `h1`
 //!    in plaintext and runs the AOT `server_fwd` graph.
 //! 3. **Private-label computations** (§4.5) — A runs `label_grad`,
@@ -34,11 +37,13 @@ use super::Trainer;
 use crate::bignum::BigUint;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{Dataset, VerticalSplit};
+use crate::exec;
 use crate::netsim::{LinkSpec, NetPort, Payload};
 use crate::nn::MatF64;
-use crate::paillier::{keygen, Ciphertext, NoncePool, PublicKey};
+use crate::paillier::pack::{self, Packing};
+use crate::paillier::{keygen, NoncePool, PublicKey};
 use crate::parties::{self, ids, run_parties, PartyOut};
-use crate::rng::{ChaChaRng, Pcg64, Rng64};
+use crate::rng::ChaChaRng;
 use crate::runtime::{Engine, TensorIn};
 use crate::smpc::{beaver_matmul, dealer, share2, trunc_share_mat, RingMat};
 use crate::{Error, Result};
@@ -80,6 +85,7 @@ impl Trainer for Spnn {
     ) -> Result<TrainReport> {
         assert!(n_holders >= 2, "SPNN needs >= 2 data holders");
         let wall = Instant::now();
+        exec::set_default_threads(tc.exec_threads);
         let split = VerticalSplit::even(cfg.n_features, n_holders);
         let plan = batch_plan(train.len(), tc.batch);
         let params = ModelParams::init(cfg, tc.seed);
@@ -199,6 +205,7 @@ fn server_role(
     let epochs = parties::await_start(p)?;
     let mut engine = Engine::load_default()?;
     let mut up = Updater::new(tc, cfg, tc.seed ^ 0x5e7);
+    let exec = exec::pool();
     let a = ids::holder(0);
     let last_holder = ids::holder(n_holders - 1);
 
@@ -214,6 +221,12 @@ fn server_role(
     } else {
         None
     };
+    // packing geometry is derived from (pk, slot_bits, holder count) on
+    // both sides — nothing extra travels on the wire
+    let packing = match &sk {
+        Some(sk) => Some(Packing::new(&sk.pk, tc.slot_bits, n_holders)?),
+        None => None,
+    };
 
     let cap = crate::config::ModelConfig::pick_batch(tc.batch);
     let h1_dim = cfg.h1_dim;
@@ -228,20 +241,19 @@ fn server_role(
             // ---- receive h1 (reconstruct from shares or decrypt) ----
             let h1_f32: Vec<f32> = if he {
                 let sk = sk.as_ref().unwrap();
-                let cts = p.recv(last_holder)?.into_cipher()?;
-                if cts.len() != rows * h1_dim {
+                let packing = packing.as_ref().unwrap();
+                let (data, ct_bytes, count) = p.recv(last_holder)?.into_cipher_block()?;
+                let expect = packing.ct_count(rows * h1_dim);
+                if count != expect {
                     return Err(Error::Protocol(format!(
-                        "server: expected {} ciphertexts, got {}",
-                        rows * h1_dim,
-                        cts.len()
+                        "server: expected {expect} packed ciphertexts, got {count}"
                     )));
                 }
-                cts.iter()
-                    .map(|bytes| {
-                        let c = Ciphertext(BigUint::from_bytes_le(bytes));
-                        crate::fixed::decode(sk.decrypt_ring(&c)) as f32
-                    })
-                    .collect()
+                let cts = pack::block_to_cts(&data, ct_bytes, count)?;
+                // parallel CRT decryptions, then per-slot k-holder sums
+                let sums =
+                    pack::decrypt_batch(sk, packing, &cts, rows * h1_dim, n_holders, &exec)?;
+                sums.iter().map(|&s| crate::fixed::decode(s as u64) as f32).collect()
             } else {
                 let sa = p.recv_u64s(a)?;
                 let sb = p.recv_u64s(ids::holder(1))?;
@@ -345,14 +357,17 @@ fn holder_role(
         None
     };
 
-    // HE setup: receive pk, build a nonce pool
-    let (pk, mut pool) = if he {
+    let exec = exec::pool();
+
+    // HE setup: receive pk, derive the packing geometry, build a nonce pool
+    let (pk, mut pool, packing) = if he {
         let n_bytes = p.recv(ids::SERVER)?.into_cipher()?.remove(0);
         let pk = PublicKey::from_n(BigUint::from_bytes_le(&n_bytes));
         let pool = NoncePool::new(&pk, tc.paillier_short_exp);
-        (Some(pk), Some(pool))
+        let packing = Packing::new(&pk, tc.slot_bits, n_holders)?;
+        (Some(pk), Some(pool), Some(packing))
     } else {
-        (None, None)
+        (None, None, None)
     };
 
     // label-layer state (A only)
@@ -377,42 +392,42 @@ fn holder_role(
             let xblk = MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
 
             if he {
-                // ---- Algorithm 3 ----
+                // ---- Algorithm 3 (packed + pool-parallel) ----
                 let pk = pk.as_ref().unwrap();
                 let pool = pool.as_mut().unwrap();
-                // local plaintext product, fixed-point encoded
+                let packing = packing.as_ref().unwrap();
+                // local plaintext product, fixed-point encoded and packed
+                // `slots` values per Paillier plaintext
                 let prod = xblk.matmul(&theta_j); // rows x h
-                pool.refill(&mut rng, rows * h);
-                let mut acc: Option<Vec<Ciphertext>> = if j == 0 {
-                    None
+                let vals: Vec<i64> =
+                    prod.data.iter().map(|&v| crate::fixed::encode(v) as i64).collect();
+                let n_cts = packing.ct_count(vals.len());
+                pool.refill_parallel(&mut rng, n_cts, &exec);
+                let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
+                let out_cts = if j == 0 {
+                    mine
                 } else {
-                    // receive the running ciphertext sum from holder j-1
-                    let cts = p.recv(ids::holder(j - 1))?.into_cipher()?;
-                    Some(cts.iter().map(|b| Ciphertext(BigUint::from_bytes_le(b))).collect())
+                    // running ciphertext sum from holder j-1 (flat block)
+                    let (data, ct_bytes, count) =
+                        p.recv(ids::holder(j - 1))?.into_cipher_block()?;
+                    if count != n_cts {
+                        return Err(Error::Protocol(format!(
+                            "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
+                        )));
+                    }
+                    let prev = pack::block_to_cts(&data, ct_bytes, count)?;
+                    pack::add_batch(pk, &prev, &mine, &exec)?
                 };
-                let mut out_cts = Vec::with_capacity(rows * h);
-                for (idx, &v) in prod.data.iter().enumerate() {
-                    let m = pk.encode_i64(crate::fixed::encode(v) as i64);
-                    let c = pk.encrypt_with_pool(&m, pool);
-                    let c = match &mut acc {
-                        Some(prev) => pk.add(&prev[idx], &c),
-                        None => c,
-                    };
-                    out_cts.push(c);
-                }
                 let next = if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
-                let bytes: Vec<Vec<u8>> = out_cts.iter().map(|c| c.0.to_bytes_le()).collect();
-                p.send(next, Payload::Cipher(bytes))?;
+                let ct_bytes = pk.ciphertext_bytes();
+                let data = pack::cts_to_block(&out_cts, ct_bytes);
+                p.send(next, Payload::CipherBlock { data, ct_bytes, count: n_cts })?;
             } else {
                 // ---- Algorithm 2 ----
                 if is_a || is_b {
-                    // 1) own block shares
-                    let x_ring = RingMat::encode_f64(
-                        rows,
-                        dj,
-                        &xblk.data,
-                    );
-                    let t_ring = RingMat::encode_f64(dj, h, &theta_j.data);
+                    // 1) own block shares (chunk-parallel fixed-point encode)
+                    let x_ring = RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
+                    let t_ring = RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
                     let (x_mine, x_theirs) = share2(&mut rng, &x_ring);
                     let (t_mine, t_theirs) = share2(&mut rng, &t_ring);
                     let mut buf = x_theirs.data;
@@ -490,8 +505,8 @@ fn holder_role(
                     p.send(ids::SERVER, Payload::U64s(z.data))?;
                 } else {
                     // extra holder: share my block to A and B
-                    let x_ring = RingMat::encode_f64(rows, dj, &xblk.data);
-                    let t_ring = RingMat::encode_f64(dj, h, &theta_j.data);
+                    let x_ring = RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
+                    let t_ring = RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
                     let (xa, xb) = share2(&mut rng, &x_ring);
                     let (ta, tb) = share2(&mut rng, &t_ring);
                     let mut buf_a = xa.data;
@@ -592,6 +607,34 @@ mod tests {
         assert_eq!(batch_plan(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
         assert_eq!(batch_plan(4, 4), vec![(0, 4)]);
         assert_eq!(batch_plan(3, 10), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn packed_he_hop_is_at_least_4x_smaller_on_the_wire() {
+        // analytic accounting for one Algorithm 3 hop at the fraud shape
+        // (batch 256 x h1 8) and test-size 256-bit keys: the packed
+        // CipherBlock must carry >= 4x fewer bytes than the seed's
+        // one-ciphertext-per-element Cipher payload. Only n.bits() matters
+        // for the geometry, so any odd 256-bit modulus works here.
+        let pk = PublicKey::from_n(BigUint::from_limbs(vec![u64::MAX; 4]));
+        let packing = Packing::new(&pk, TrainConfig::default().slot_bits, 2).unwrap();
+        let (rows, h) = (256usize, 8usize);
+        let ct_bytes = pk.ciphertext_bytes();
+        let packed = Payload::CipherBlock {
+            data: vec![0u8; packing.ct_count(rows * h) * ct_bytes],
+            ct_bytes,
+            count: packing.ct_count(rows * h),
+        }
+        .wire_bytes();
+        let unpacked = Payload::Cipher(vec![vec![0u8; ct_bytes]; rows * h]).wire_bytes();
+        assert!(
+            unpacked >= 4 * packed,
+            "packed {packed} vs unpacked {unpacked} bytes"
+        );
+        // at the experiments' 1024-bit keys the ratio is slots = 21x
+        let pk1024 = PublicKey::from_n(BigUint::from_limbs(vec![u64::MAX; 16]));
+        let p1024 = Packing::new(&pk1024, TrainConfig::default().slot_bits, 2).unwrap();
+        assert_eq!(p1024.slots(), 21);
     }
 
     #[test]

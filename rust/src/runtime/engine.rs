@@ -4,6 +4,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use super::artifact::{ArtifactEntry, Dt, Manifest, TensorSig};
+use super::xla;
 use crate::smpc::RingMat;
 use crate::{Error, Result};
 

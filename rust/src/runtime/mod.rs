@@ -13,6 +13,7 @@
 
 mod artifact;
 mod engine;
+pub mod xla;
 
 pub use artifact::{Manifest, TensorSig, Dt};
 pub use engine::{Engine, TensorIn, TensorOut};

@@ -1,5 +1,11 @@
 //! Online Beaver protocols: secure matrix multiplication and elementwise
 //! (Hadamard) multiplication over `Z_{2^64}`.
+//!
+//! The combine steps (`E·V + U·F + W`, and the per-element Hadamard
+//! combine) ride the process [`exec::pool`](crate::exec::pool): matrix
+//! products and `add_assign` are chunk-parallel inside [`RingMat`], and
+//! the elementwise combine below is banded explicitly. Ring math is
+//! exact, so the transcript is unchanged at any pool width.
 
 use super::ring::RingMat;
 use super::triple::MatTriple;
@@ -91,19 +97,22 @@ pub fn beaver_mul_elem(
         return Err(crate::Error::Protocol("beaver_mul_elem size".into()));
     }
     let n = x.len();
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let e = e_p[i].wrapping_add(theirs[i]);
-        let f = f_p[i].wrapping_add(theirs[n + i]);
-        let mut z = e
-            .wrapping_mul(triple.v[i])
-            .wrapping_add(triple.u[i].wrapping_mul(f))
-            .wrapping_add(triple.w[i]);
-        if role == 0 {
-            z = z.wrapping_add(e.wrapping_mul(f));
+    let mut out = vec![0u64; n];
+    crate::exec::pool().par_rows_mut(&mut out, 1, 1 << 14, |off, chunk| {
+        for (i, z) in chunk.iter_mut().enumerate() {
+            let gi = off + i;
+            let e = e_p[gi].wrapping_add(theirs[gi]);
+            let f = f_p[gi].wrapping_add(theirs[n + gi]);
+            let mut v = e
+                .wrapping_mul(triple.v[gi])
+                .wrapping_add(triple.u[gi].wrapping_mul(f))
+                .wrapping_add(triple.w[gi]);
+            if role == 0 {
+                v = v.wrapping_add(e.wrapping_mul(f));
+            }
+            *z = v;
         }
-        out.push(z);
-    }
+    });
     Ok(out)
 }
 

@@ -4,9 +4,24 @@
 //! of. The native `matmul` here is the rust-side fallback / oracle; the
 //! production hot path for the big first-layer products goes through the
 //! AOT-compiled Pallas ring kernel (`runtime::Engine::ring_matmul`).
+//!
+//! `matmul`/`add`/`sub`/`add_assign` and the fixed-point encode are
+//! chunk-parallel over the process [`exec::pool`] once the work passes a
+//! spawn-amortizing threshold (small fraud-shape ops stay inline); the
+//! `*_with` variants take an explicit [`ExecPool`] for benches and
+//! determinism baselines. Ring arithmetic is exact, so results are
+//! bit-identical at any pool width.
 
+use crate::exec::{self, ExecPool};
 use crate::fixed;
 use crate::rng::Rng64;
+
+/// Minimum elements for a parallel elementwise op (below this the spawn
+/// overhead beats the win).
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Minimum multiply-accumulate count for a parallel matmul.
+const PAR_MIN_WORK: usize = 1 << 17;
 
 /// Row-major matrix over `Z_{2^64}`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -35,8 +50,19 @@ impl RingMat {
 
     /// Embed a decimal matrix as fixed-point ring elements.
     pub fn encode_f64(rows: usize, cols: usize, xs: &[f64]) -> Self {
+        Self::encode_f64_with(&exec::pool(), rows, cols, xs)
+    }
+
+    /// [`Self::encode_f64`] over an explicit pool.
+    pub fn encode_f64_with(exec: &ExecPool, rows: usize, cols: usize, xs: &[f64]) -> Self {
         assert_eq!(xs.len(), rows * cols);
-        RingMat { rows, cols, data: fixed::encode_vec(xs) }
+        let mut data = vec![0u64; xs.len()];
+        exec.par_rows_mut(&mut data, 1, PAR_MIN_ELEMS, |off, chunk| {
+            for (o, &x) in chunk.iter_mut().zip(&xs[off..]) {
+                *o = fixed::encode(x);
+            }
+        });
+        RingMat { rows, cols, data }
     }
 
     /// Decode back to decimals (assumes single-`l_F` scaling).
@@ -56,33 +82,51 @@ impl RingMat {
 
     /// Elementwise wrapping addition.
     pub fn add(&self, other: &Self) -> Self {
+        self.add_with(&exec::pool(), other)
+    }
+
+    /// [`Self::add`] over an explicit pool.
+    pub fn add_with(&self, exec: &ExecPool, other: &Self) -> Self {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| a.wrapping_add(*b))
-            .collect();
+        let mut data = vec![0u64; self.data.len()];
+        exec.par_rows_mut(&mut data, 1, PAR_MIN_ELEMS, |off, chunk| {
+            for ((o, a), b) in chunk.iter_mut().zip(&self.data[off..]).zip(&other.data[off..]) {
+                *o = a.wrapping_add(*b);
+            }
+        });
         RingMat { rows: self.rows, cols: self.cols, data }
     }
 
     /// In-place wrapping addition (hot path — avoids reallocation).
     pub fn add_assign(&mut self, other: &Self) {
+        let exec = exec::pool();
+        self.add_assign_with(&exec, other);
+    }
+
+    /// [`Self::add_assign`] over an explicit pool.
+    pub fn add_assign_with(&mut self, exec: &ExecPool, other: &Self) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a = a.wrapping_add(*b);
-        }
+        exec.par_rows_mut(&mut self.data, 1, PAR_MIN_ELEMS, |off, chunk| {
+            for (a, b) in chunk.iter_mut().zip(&other.data[off..]) {
+                *a = a.wrapping_add(*b);
+            }
+        });
     }
 
     /// Elementwise wrapping subtraction.
     pub fn sub(&self, other: &Self) -> Self {
+        self.sub_with(&exec::pool(), other)
+    }
+
+    /// [`Self::sub`] over an explicit pool.
+    pub fn sub_with(&self, exec: &ExecPool, other: &Self) -> Self {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| a.wrapping_sub(*b))
-            .collect();
+        let mut data = vec![0u64; self.data.len()];
+        exec.par_rows_mut(&mut data, 1, PAR_MIN_ELEMS, |off, chunk| {
+            for ((o, a), b) in chunk.iter_mut().zip(&self.data[off..]).zip(&other.data[off..]) {
+                *o = a.wrapping_sub(*b);
+            }
+        });
         RingMat { rows: self.rows, cols: self.cols, data }
     }
 
@@ -92,23 +136,36 @@ impl RingMat {
         RingMat { rows: self.rows, cols: self.cols, data }
     }
 
-    /// Native ring matmul `self @ other mod 2^64` (ikj loop order).
+    /// Native ring matmul `self @ other mod 2^64` (ikj loop order,
+    /// row-banded across the exec pool for big shapes).
     pub fn matmul(&self, other: &Self) -> Self {
+        self.matmul_with(&exec::pool(), other)
+    }
+
+    /// [`Self::matmul`] over an explicit pool ([`ExecPool::serial`] is the
+    /// single-thread baseline the benches compare against).
+    pub fn matmul_with(&self, exec: &ExecPool, other: &Self) -> Self {
         assert_eq!(self.cols, other.rows, "matmul inner dim");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = vec![0u64; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0 {
-                    continue;
+        if n > 0 && m > 0 {
+            // band rows so each spawn carries at least PAR_MIN_WORK macs
+            let min_rows = (PAR_MIN_WORK / (k * n).max(1)).max(1);
+            exec.par_rows_mut(&mut out, n, min_rows, |row0, band| {
+                for (bi, orow) in band.chunks_mut(n).enumerate() {
+                    let i = row0 + bi;
+                    let arow = &self.data[i * k..(i + 1) * k];
+                    for (kk, &a) in arow.iter().enumerate() {
+                        if a == 0 {
+                            continue;
+                        }
+                        let brow = &other.data[kk * n..(kk + 1) * n];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o = o.wrapping_add(a.wrapping_mul(b));
+                        }
+                    }
                 }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o = o.wrapping_add(a.wrapping_mul(b));
-                }
-            }
+            });
         }
         RingMat { rows: m, cols: n, data: out }
     }
@@ -234,6 +291,30 @@ mod tests {
         let lhs = xa.concat_cols(&xb).matmul(&ta.concat_rows(&tb));
         let rhs = xa.matmul(&ta).add(&xb.matmul(&tb));
         assert_eq!(lhs, rhs);
+    }
+
+    #[test]
+    fn pooled_ops_match_serial_bitwise() {
+        // sizes chosen to actually cross the parallel thresholds
+        use crate::exec::ExecPool;
+        let serial = ExecPool::serial();
+        let par = ExecPool::new(4);
+        let mut rng = Pcg64::seed_from_u64(77);
+        let a = RingMat::random(&mut rng, 130, 70);
+        let b = RingMat::random(&mut rng, 70, 50);
+        assert_eq!(a.matmul_with(&serial, &b), a.matmul_with(&par, &b));
+        let x = RingMat::random(&mut rng, 300, 200);
+        let y = RingMat::random(&mut rng, 300, 200);
+        assert_eq!(x.add_with(&serial, &y), x.add_with(&par, &y));
+        assert_eq!(x.sub_with(&serial, &y), x.sub_with(&par, &y));
+        let mut z = x.clone();
+        z.add_assign_with(&par, &y);
+        assert_eq!(z, x.add_with(&serial, &y));
+        let xs: Vec<f64> = (0..300 * 200).map(|i| i as f64 * 0.01 - 300.0).collect();
+        assert_eq!(
+            RingMat::encode_f64_with(&serial, 300, 200, &xs),
+            RingMat::encode_f64_with(&par, 300, 200, &xs)
+        );
     }
 
     #[test]
