@@ -1,0 +1,80 @@
+//! Pipeline-depth sweep: end-to-end sim-time + wire bytes per trainer at
+//! `pipeline_depth` 1 / 2 / 4, emitted as machine-readable
+//! `BENCH_pipeline.json` for the perf trajectory (CI bench job).
+//!
+//! SPNN-HE / SPNN-SS need the AOT artifacts (`make artifacts`); without
+//! them those trainers are recorded as `"skipped"` and SecureML (artifact-
+//! free) still produces real numbers.
+
+use spnn::bench_harness::JsonObj;
+use spnn::config::{TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+
+const DEPTHS: [usize; 3] = [1, 2, 4];
+
+fn run_sweep(proto: &str, rows: usize, batch: usize, seed: u64) -> JsonObj {
+    let ds = synth_fraud(SynthOpts::small(rows));
+    let (train, test) = ds.split(0.8, seed);
+    let t = protocols::by_name(proto).expect("known trainer");
+    let mut obj = JsonObj::new().str("trainer", proto);
+    let mut sims: Vec<f64> = Vec::new();
+    for depth in DEPTHS {
+        let tc = TrainConfig {
+            batch,
+            epochs: 1,
+            seed,
+            paillier_bits: 256, // bench-size keys; experiments use 512/1024
+            lr_override: Some(0.05),
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let key = format!("depth_{depth}");
+        match t.train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2) {
+            Ok(rep) => {
+                let sim = rep.mean_epoch_time();
+                println!(
+                    "{proto:<10} depth {depth}: sim {sim:.4}s, online {} B, offline {} B",
+                    rep.online_bytes, rep.offline_bytes
+                );
+                sims.push(sim);
+                obj = obj.obj(
+                    &key,
+                    JsonObj::new()
+                        .num("sim_s", sim)
+                        .int("online_bytes", rep.online_bytes as u64)
+                        .int("offline_bytes", rep.offline_bytes as u64)
+                        // hex string: u64 digests overflow JSON doubles
+                        .str("weight_digest", &format!("{:016x}", rep.weight_digest)),
+                );
+            }
+            Err(e) => {
+                println!("{proto:<10} depth {depth}: skipped ({e})");
+                obj = obj.obj(&key, JsonObj::new().str("skipped", &format!("{e}")));
+            }
+        }
+    }
+    if sims.len() == DEPTHS.len() {
+        obj = obj
+            .num("speedup_d2", sims[0] / sims[1])
+            .num("speedup_d4", sims[0] / sims[2]);
+    }
+    obj
+}
+
+fn main() {
+    // modest sizes: the bench must finish on a 1-core CI runner
+    let spnn_sweep = |he: bool| run_sweep(if he { "spnn-he" } else { "spnn-ss" }, 1200, 256, 7);
+    let out = JsonObj::new()
+        .str("bench", "pipeline_depth")
+        .str("config", "fraud, 1 epoch, batch 256, 100 Mbps, 2 holders")
+        .obj("secureml", run_sweep("secureml", 240, 64, 7))
+        .obj("spnn_ss", spnn_sweep(false))
+        .obj("spnn_he", spnn_sweep(true));
+    let json = out.render();
+    match std::fs::write("BENCH_pipeline.json", format!("{json}\n")) {
+        Ok(()) => println!("wrote BENCH_pipeline.json"),
+        Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
+    }
+}

@@ -81,6 +81,67 @@ pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> f64 {
     dt
 }
 
+/// Minimal JSON object builder for machine-readable bench artifacts
+/// (`BENCH_pipeline.json` etc.) — no serde in the offline vendor set.
+#[derive(Default)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        let val = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        self.fields.push((key.to_string(), val));
+        self
+    }
+
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.fields.push((key.to_string(), format!("\"{}\"", json_escape(v))));
+        self
+    }
+
+    /// Nest a sub-object (consumes its rendering).
+    pub fn obj(mut self, key: &str, v: JsonObj) -> Self {
+        self.fields.push((key.to_string(), v.render()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let body: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
+            .collect();
+        format!("{{{}}}", body.join(", "))
+    }
+}
+
+/// Escape a string for JSON embedding.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +153,21 @@ mod tests {
         });
         assert!(s.min_s <= s.median_s && s.median_s <= s.mean_s * 5.0);
         assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn json_obj_renders_and_escapes() {
+        let j = JsonObj::new()
+            .str("name", "spnn-\"ss\"\n")
+            .num("sim_s", 1.5)
+            .int("bytes", 42)
+            .obj("nested", JsonObj::new().int("depth", 2));
+        let s = j.render();
+        assert_eq!(
+            s,
+            "{\"name\": \"spnn-\\\"ss\\\"\\n\", \"sim_s\": 1.5, \"bytes\": 42, \
+             \"nested\": {\"depth\": 2}}"
+        );
+        assert_eq!(JsonObj::new().num("x", f64::NAN).render(), "{\"x\": null}");
     }
 }

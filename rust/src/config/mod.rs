@@ -129,6 +129,14 @@ pub struct TrainConfig {
     /// Worker threads for the crypto exec pool, 0 = auto (the
     /// `SPNN_EXEC_THREADS` env var, then `available_parallelism`).
     pub exec_threads: usize,
+    /// Mini-batches in flight per party in the pipelined session
+    /// framework (`protocols::common::run_pipeline`): value-independent
+    /// crypto (nonce exponentiations, dealer material, share masks, input
+    /// encodes) for up to `depth - 1` future batches overlaps the wait on
+    /// remote results. Depth 1 = strict lock-step (the seed schedule);
+    /// any depth trains bit-identical weights (RNG draws stay in schedule
+    /// order). 0 is coerced to 1.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -144,6 +152,7 @@ impl Default for TrainConfig {
             sgld_noise: None,
             slot_bits: crate::paillier::pack::DEFAULT_SLOT_BITS,
             exec_threads: 0,
+            pipeline_depth: 1,
         }
     }
 }
@@ -185,6 +194,8 @@ mod tests {
         assert_eq!(tc.slot_bits % 8, 0);
         assert_eq!((tc.paillier_bits - 1) / tc.slot_bits, 21);
         assert_eq!(tc.exec_threads, 0);
+        // depth 1 = strict lock-step, the reference schedule
+        assert_eq!(tc.pipeline_depth, 1);
     }
 
     #[test]

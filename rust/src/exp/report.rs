@@ -1,5 +1,7 @@
 //! Markdown table rendering for experiment reports.
 
+use crate::netsim::{Phase, StageRow};
+
 /// Render a markdown table.
 pub fn md_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut s = format!("### {title}\n\n");
@@ -24,6 +26,35 @@ pub fn fmt_secs(s: f64) -> String {
 
 pub fn fmt_auc(a: f64) -> String {
     format!("{a:.4}")
+}
+
+/// Render a per-phase / per-stage traffic breakdown ("where do the bytes
+/// go") from [`crate::netsim::NetStats::stage_rows`] — surfaced next to
+/// the Table 2/3 traffic numbers.
+pub fn stage_breakdown(title: &str, rows: &[StageRow]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                match r.phase {
+                    Phase::Online => "online".to_string(),
+                    Phase::Offline => "offline".to_string(),
+                },
+                r.stage.to_string(),
+                format!("{:.3}", r.bytes as f64 / 1e6),
+                r.msgs.to_string(),
+                fmt_secs(r.wire_s),
+            ]
+        })
+        .collect();
+    md_table(
+        title,
+        &["phase", "stage", "MB", "msgs", "est. wire s"],
+        &table_rows,
+    )
 }
 
 /// An (x, y) series rendered as a compact markdown row set.
@@ -65,5 +96,30 @@ mod tests {
         assert_eq!(fmt_secs(960.3), "960");
         assert_eq!(fmt_secs(37.22), "37.22");
         assert_eq!(fmt_secs(0.2152), "0.2152");
+    }
+
+    #[test]
+    fn stage_breakdown_renders_rows() {
+        let rows = vec![
+            StageRow {
+                phase: Phase::Online,
+                stage: "server-fwd",
+                bytes: 2_000_000,
+                msgs: 12,
+                wire_s: 0.25,
+            },
+            StageRow {
+                phase: Phase::Offline,
+                stage: "dealer",
+                bytes: 500_000,
+                msgs: 3,
+                wire_s: 0.0,
+            },
+        ];
+        let md = stage_breakdown("traffic by stage", &rows);
+        assert!(md.contains("### traffic by stage"));
+        assert!(md.contains("| online | server-fwd | 2.000 | 12 |"));
+        assert!(md.contains("| offline | dealer |"));
+        assert!(stage_breakdown("empty", &[]).is_empty());
     }
 }

@@ -3,7 +3,7 @@
 //! distress .0507 / .4541 / 751.3 / 21.84). The *ordering and ratios* are
 //! the reproduction target: NN < SplitNN << SPNN-SS << SecureML.
 
-use super::report::{fmt_secs, md_table};
+use super::report::{fmt_secs, md_table, stage_breakdown};
 use super::ExpOpts;
 use crate::config::{TrainConfig, DISTRESS, FRAUD};
 use crate::data::{synth_distress, synth_fraud, SynthOpts};
@@ -35,6 +35,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             0.7,
         ),
     ];
+    // per-phase / per-stage breakdown of the most interesting column
+    // (SPNN-SS): shows where the protocol's traffic goes
+    let mut breakdowns = String::new();
     for (label, cfg, ds, frac) in datasets {
         let (train, test) = ds.split(frac, opts.seed);
         let mut row = vec![label.to_string()];
@@ -49,12 +52,21 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             let rep = t.train(cfg, &tc, LinkSpec::mbps100(), &train, &test, 2)?;
             eprintln!("  {}", rep.summary());
             row.push(fmt_secs(rep.mean_epoch_time()));
+            if proto == "spnn-ss" {
+                breakdowns.push('\n');
+                breakdowns.push_str(&stage_breakdown(
+                    &format!("Table 3b — {label}: SPNN-SS traffic by stage"),
+                    &rep.stages,
+                ));
+            }
         }
         rows.push(row);
     }
-    Ok(md_table(
+    let mut out = md_table(
         "Table 3 — training time per epoch, seconds (simulated net + measured compute), batch 5000 @ 100 Mbps (paper: fraud .2152/.7427/960.3/37.22; distress .0507/.4541/751.3/21.84)",
         &["Training time", "NN", "SplitNN", "SecureML", "SPNN-SS"],
         &rows,
-    ))
+    );
+    out.push_str(&breakdowns);
+    Ok(out)
 }

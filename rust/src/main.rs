@@ -69,6 +69,7 @@ USAGE:
               [--dataset fraud|distress] [--rows N] [--epochs E]
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
               [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
+              [--pipeline-depth D]
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
@@ -126,6 +127,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
         sgld_noise: None,
         slot_bits: flag(flags, "slot-bits", spnn::paillier::pack::DEFAULT_SLOT_BITS),
         exec_threads: flag(flags, "threads", 0usize),
+        pipeline_depth: flag(flags, "pipeline-depth", 1usize),
     };
     let spec = LinkSpec::from_mbps(flag(flags, "mbps", 100.0));
     let holders = flag(flags, "holders", 2usize);

@@ -2,7 +2,9 @@
 //!
 //! No serde offline, and no real serialization is needed (in-process
 //! channels move the data by ownership); the only thing the simulator needs
-//! is *how many bytes this would be on the wire*.
+//! is *how many bytes this would be on the wire*. Batch / stream ids ride
+//! the [`Msg`](super::Msg) envelope (not the payload), so tagging adds no
+//! accounted bytes beyond the fixed [`Payload::HEADER_BYTES`] frame.
 
 /// Message payload variants used by the SPNN protocols.
 #[derive(Clone, Debug)]

@@ -1,6 +1,21 @@
-//! Per-party network endpoint with a Lamport-style virtual clock.
+//! Per-party network endpoint with a Lamport-style virtual clock and
+//! tagged out-of-order delivery.
+//!
+//! Pipelined protocols keep several mini-batches in flight per link, so a
+//! receiver may be handed batch `t+1`'s message while it still waits for
+//! batch `t`. Every [`Msg`] therefore carries a `tag` (batch / stream id);
+//! [`NetPort::recv_tagged`] delivers the next message matching a tag and
+//! parks mismatches in a per-peer reorder buffer, preserving FIFO order
+//! within each tag. Untagged traffic ([`NO_TAG`]) and [`NetPort::recv`]
+//! keep the seed semantics.
+//!
+//! Clock accounting credits overlap: wall time blocked inside a receive is
+//! *not* compute (the wall anchor restarts on delivery), and a message's
+//! arrival stamp depends only on its departure time and size — so work done
+//! ahead of demand (prefetched crypto material) is absorbed into the wait
+//! for slower remote results instead of extending the critical path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -8,10 +23,16 @@ use std::time::{Duration, Instant};
 use super::{LinkSpec, NetStats, PartyId, Payload, Phase};
 use crate::{Error, Result};
 
+/// Tag carried by messages sent through the untagged [`NetPort::send`] /
+/// [`NetPort::send_phase`] API.
+pub const NO_TAG: u64 = u64::MAX;
+
 /// A message in flight.
 #[derive(Debug)]
 pub struct Msg {
     pub from: PartyId,
+    /// Batch / stream id for out-of-order matching ([`NO_TAG`] = untagged).
+    pub tag: u64,
     pub payload: Payload,
     /// Sender's virtual clock at departure.
     pub depart: f64,
@@ -22,14 +43,21 @@ pub struct Msg {
 ///
 /// Wall time elapsed between calls on this port is accounted as local
 /// compute and advances the virtual clock; receives forward the clock past
-/// the simulated wire delay. Deadlocks are caught by a receive timeout.
+/// the simulated wire delay. Deadlocks are caught by a receive timeout
+/// that reports both endpoints, the awaited tag, the current protocol
+/// stage, and the reorder-buffer depths.
 pub struct NetPort {
     pub id: PartyId,
     pub name: String,
     spec: LinkSpec,
     txs: HashMap<PartyId, mpsc::Sender<Msg>>,
     rxs: HashMap<PartyId, mpsc::Receiver<Msg>>,
+    /// Out-of-order messages parked per peer, in arrival order.
+    pending: HashMap<PartyId, VecDeque<Msg>>,
     stats: Arc<NetStats>,
+    /// Protocol-stage label stamped on sends (traffic breakdown) and
+    /// reported by deadlock diagnostics.
+    stage: &'static str,
     now_s: f64,
     last_wall: Instant,
     recv_timeout: Duration,
@@ -50,7 +78,9 @@ impl NetPort {
             spec,
             txs,
             rxs,
+            pending: HashMap::new(),
             stats,
+            stage: "run",
             now_s: 0.0,
             last_wall: Instant::now(),
             recv_timeout: Duration::from_secs(600),
@@ -82,17 +112,44 @@ impl NetPort {
         self.last_wall = Instant::now();
     }
 
-    /// Send `payload` to party `to` (online phase).
+    /// Label the current protocol stage: stamped on outgoing traffic for
+    /// the per-stage byte breakdown and echoed in deadlock diagnostics.
+    pub fn set_stage(&mut self, stage: &'static str) {
+        self.stage = stage;
+    }
+
+    /// Send `payload` to party `to` (online phase, untagged).
     pub fn send(&mut self, to: PartyId, payload: Payload) -> Result<()> {
-        self.send_phase(to, payload, Phase::Online)
+        self.send_tagged_phase(to, NO_TAG, payload, Phase::Online)
     }
 
     /// Send with explicit phase tag.
     pub fn send_phase(&mut self, to: PartyId, payload: Payload, phase: Phase) -> Result<()> {
+        self.send_tagged_phase(to, NO_TAG, payload, phase)
+    }
+
+    /// Send tagged with a batch / stream id (online phase).
+    pub fn send_tagged(&mut self, to: PartyId, tag: u64, payload: Payload) -> Result<()> {
+        self.send_tagged_phase(to, tag, payload, Phase::Online)
+    }
+
+    /// Send with explicit tag and phase.
+    pub fn send_tagged_phase(
+        &mut self,
+        to: PartyId,
+        tag: u64,
+        payload: Payload,
+        phase: Phase,
+    ) -> Result<()> {
         self.absorb_compute();
         let bytes = payload.total_bytes();
         self.stats.record(self.id, to, bytes, phase);
-        let msg = Msg { from: self.id, payload, depart: self.now_s, phase };
+        let wire_s = match phase {
+            Phase::Online => self.spec.latency_s + self.spec.transfer_time(bytes),
+            Phase::Offline => 0.0,
+        };
+        self.stats.record_stage(phase, self.stage, bytes, wire_s);
+        let msg = Msg { from: self.id, tag, payload, depart: self.now_s, phase };
         self.txs
             .get(&to)
             .ok_or_else(|| Error::Net(format!("{}: unknown peer {to}", self.name)))?
@@ -100,18 +157,10 @@ impl NetPort {
             .map_err(|_| Error::Net(format!("{}: peer {to} disconnected", self.name)))
     }
 
-    /// Blocking receive from party `from`, advancing the virtual clock past
-    /// the message's simulated arrival time.
-    pub fn recv(&mut self, from: PartyId) -> Result<Payload> {
-        self.absorb_compute(); // compute up to the blocking point
-        let rx = self
-            .rxs
-            .get(&from)
-            .ok_or_else(|| Error::Net(format!("{}: unknown peer {from}", self.name)))?;
-        let msg = rx
-            .recv_timeout(self.recv_timeout)
-            .map_err(|e| Error::Net(format!("{}: recv from {from}: {e}", self.name)))?;
-        // blocked wall time is NOT compute; restart the wall anchor
+    /// Consume a delivered message: restart the wall anchor (blocked time
+    /// is idle-wait, not compute) and forward the virtual clock past the
+    /// simulated arrival.
+    fn accept(&mut self, msg: Msg) -> (u64, Payload) {
         self.last_wall = Instant::now();
         if msg.phase == Phase::Online {
             let arrival = msg.depart
@@ -122,7 +171,103 @@ impl NetPort {
             // offline traffic: causality only, no wire delay
             self.now_s = self.now_s.max(msg.depart);
         }
-        Ok(msg.payload)
+        (msg.tag, msg.payload)
+    }
+
+    /// Pull the next channel message from `from` within the deadline.
+    fn next_msg(&self, from: PartyId, remaining: Duration, awaited: &str) -> Result<Msg> {
+        let rx = self
+            .rxs
+            .get(&from)
+            .ok_or_else(|| Error::Net(format!("{}: unknown peer {from}", self.name)))?;
+        rx.recv_timeout(remaining).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Disconnected => Error::Net(format!(
+                "{}: peer {} ({}) disconnected while {} awaited {}",
+                self.name,
+                from,
+                self.stats.name(from),
+                self.name,
+                awaited
+            )),
+            mpsc::RecvTimeoutError::Timeout => self.timeout_error(from, awaited),
+        })
+    }
+
+    /// Deadlock diagnostic: both endpoints, awaited tag, stage, and
+    /// reorder-buffer queue depths.
+    fn timeout_error(&self, from: PartyId, awaited: &str) -> Error {
+        let fmt_tag =
+            |t: u64| if t == NO_TAG { "-".to_string() } else { t.to_string() };
+        let here: Vec<String> = self
+            .pending
+            .get(&from)
+            .map(|q| q.iter().map(|m| fmt_tag(m.tag)).collect())
+            .unwrap_or_default();
+        let elsewhere: usize = self
+            .pending
+            .iter()
+            .filter(|(p, _)| **p != from)
+            .map(|(_, q)| q.len())
+            .sum();
+        Error::Net(format!(
+            "{}(party {}) timed out after {:.0}s receiving from {}(party {}): \
+             awaited {} in stage {:?}; reorder buffer holds {} message(s) from \
+             this peer (tags [{}]) and {} from other peers — the parties are \
+             likely deadlocked on mismatched send/recv schedules",
+            self.name,
+            self.id,
+            self.recv_timeout.as_secs_f64(),
+            self.stats.name(from),
+            from,
+            awaited,
+            self.stage,
+            here.len(),
+            here.join(", "),
+            elsewhere,
+        ))
+    }
+
+    /// Blocking receive of the next message from `from` regardless of tag
+    /// (buffered messages first, in arrival order), advancing the virtual
+    /// clock past the message's simulated arrival time.
+    pub fn recv(&mut self, from: PartyId) -> Result<Payload> {
+        self.recv_any_tag(from).map(|(_, p)| p)
+    }
+
+    /// Like [`Self::recv`] but also returns the message's tag (used by
+    /// actors that echo tags, e.g. the dealer).
+    pub fn recv_any_tag(&mut self, from: PartyId) -> Result<(u64, Payload)> {
+        self.absorb_compute(); // compute up to the blocking point
+        if let Some(msg) = self.pending.get_mut(&from).and_then(|q| q.pop_front()) {
+            return Ok(self.accept(msg));
+        }
+        let msg = self.next_msg(from, self.recv_timeout, "any message")?;
+        Ok(self.accept(msg))
+    }
+
+    /// Blocking receive of the next message from `from` carrying `tag`.
+    ///
+    /// Messages with other tags arriving first are parked in the per-peer
+    /// reorder buffer (FIFO within each tag) and delivered by their own
+    /// `recv_tagged` / [`Self::recv`] calls later.
+    pub fn recv_tagged(&mut self, from: PartyId, tag: u64) -> Result<Payload> {
+        self.absorb_compute();
+        if let Some(q) = self.pending.get_mut(&from) {
+            if let Some(pos) = q.iter().position(|m| m.tag == tag) {
+                let msg = q.remove(pos).expect("position within queue");
+                return Ok(self.accept(msg).1);
+            }
+        }
+        let awaited = format!("tag {tag}");
+        let deadline = Instant::now() + self.recv_timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let msg = self.next_msg(from, remaining, &awaited)?;
+            if msg.tag == tag {
+                return Ok(self.accept(msg).1);
+            }
+            self.pending.entry(from).or_default().push_back(msg);
+        }
     }
 
     /// Receive and assert the u64 variant (the most common case).

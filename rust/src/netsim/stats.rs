@@ -1,13 +1,37 @@
 //! Shared traffic statistics for a simulated deployment.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::{PartyId, Phase};
 
-/// Lock-free per-link byte/message counters.
+/// One row of the per-phase / per-stage traffic breakdown.
+#[derive(Clone, Copy, Debug)]
+pub struct StageRow {
+    pub phase: Phase,
+    /// Protocol-stage label ([`super::NetPort::set_stage`]).
+    pub stage: &'static str,
+    pub bytes: u64,
+    pub msgs: u64,
+    /// Estimated wire seconds (latency + serialization) for the online
+    /// phase; 0 for offline traffic (which never delays the online clock).
+    pub wire_s: f64,
+}
+
+#[derive(Default)]
+struct StageEntry {
+    bytes: u64,
+    msgs: u64,
+    wire_s: f64,
+}
+
+/// Lock-free per-link byte/message counters, plus a coarse per-stage map.
 ///
 /// Indexed `[from][to]`; phases tracked separately so experiments can report
-/// online vs offline traffic (SecureML-style accounting).
+/// online vs offline traffic (SecureML-style accounting). The stage map is
+/// keyed by the sender's current stage label and answers "where does the
+/// traffic go" for the Table 2/3 reports.
 #[derive(Debug)]
 pub struct NetStats {
     names: Vec<String>,
@@ -16,6 +40,13 @@ pub struct NetStats {
     bytes_offline: Vec<AtomicU64>,
     msgs_online: Vec<AtomicU64>,
     msgs_offline: Vec<AtomicU64>,
+    stages: Mutex<HashMap<(Phase, &'static str), StageEntry>>,
+}
+
+impl std::fmt::Debug for StageEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}B/{}msg/{:.3}s", self.bytes, self.msgs, self.wire_s)
+    }
 }
 
 impl NetStats {
@@ -29,7 +60,13 @@ impl NetStats {
             bytes_offline: mk(),
             msgs_online: mk(),
             msgs_offline: mk(),
+            stages: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Party name by id (deadlock diagnostics), `"?"` if out of range.
+    pub fn name(&self, id: PartyId) -> &str {
+        self.names.get(id).map(|s| s.as_str()).unwrap_or("?")
     }
 
     pub(super) fn record(&self, from: PartyId, to: PartyId, bytes: usize, phase: Phase) {
@@ -43,6 +80,41 @@ impl NetStats {
         };
         b[idx].fetch_add(bytes as u64, Ordering::Relaxed);
         m[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn record_stage(
+        &self,
+        phase: Phase,
+        stage: &'static str,
+        bytes: usize,
+        wire_s: f64,
+    ) {
+        let mut map = self.stages.lock().unwrap();
+        let e = map.entry((phase, stage)).or_default();
+        e.bytes += bytes as u64;
+        e.msgs += 1;
+        e.wire_s += wire_s;
+    }
+
+    /// Per-phase / per-stage traffic rows, online first, largest first.
+    pub fn stage_rows(&self) -> Vec<StageRow> {
+        let map = self.stages.lock().unwrap();
+        let mut rows: Vec<StageRow> = map
+            .iter()
+            .map(|(&(phase, stage), e)| StageRow {
+                phase,
+                stage,
+                bytes: e.bytes,
+                msgs: e.msgs,
+                wire_s: e.wire_s,
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            let pa = (a.phase == Phase::Offline) as u8;
+            let pb = (b.phase == Phase::Offline) as u8;
+            pa.cmp(&pb).then(b.bytes.cmp(&a.bytes)).then(a.stage.cmp(b.stage))
+        });
+        rows
     }
 
     /// Total bytes from `a` to `b` (both phases).
@@ -87,6 +159,7 @@ impl NetStats {
                 a.store(0, Ordering::Relaxed);
             }
         }
+        self.stages.lock().unwrap().clear();
     }
 
     /// Human-readable per-link traffic table.
@@ -130,7 +203,28 @@ mod tests {
         assert_eq!(s.msgs_phase(Phase::Online), 2);
         assert_eq!(s.total_bytes(), 157);
         assert!(s.report().contains("A -> B"));
+        assert_eq!(s.name(2), "S");
+        assert_eq!(s.name(9), "?");
         s.reset();
         assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn stage_breakdown_aggregates_and_sorts() {
+        let s = NetStats::new(&["A", "B"]);
+        s.record_stage(Phase::Online, "fwd", 100, 0.5);
+        s.record_stage(Phase::Online, "fwd", 50, 0.25);
+        s.record_stage(Phase::Online, "bwd", 400, 1.0);
+        s.record_stage(Phase::Offline, "triple", 9000, 0.0);
+        let rows = s.stage_rows();
+        assert_eq!(rows.len(), 3);
+        // online first, largest first; offline last
+        assert_eq!((rows[0].stage, rows[0].bytes, rows[0].msgs), ("bwd", 400, 1));
+        assert_eq!((rows[1].stage, rows[1].bytes, rows[1].msgs), ("fwd", 150, 2));
+        assert!((rows[1].wire_s - 0.75).abs() < 1e-12);
+        assert_eq!(rows[2].phase, Phase::Offline);
+        assert_eq!(rows[2].bytes, 9000);
+        s.reset();
+        assert!(s.stage_rows().is_empty());
     }
 }

@@ -7,6 +7,11 @@
 //! each party's role parameters), starts training, monitors per-epoch
 //! status, and terminates the run — it can never touch features, labels or
 //! shares, which is enforced by the message types it sends/accepts.
+//!
+//! Inside a deployment every worker drives its mini-batch loop through the
+//! pipelined session framework (`protocols::common::run_pipeline`), which
+//! keeps up to `TrainConfig::pipeline_depth` batches of value-independent
+//! work in flight; the coordinator handshake stays strictly sequential.
 
 use std::sync::Arc;
 
@@ -36,6 +41,9 @@ pub struct PartyOut {
     pub epoch_times: Vec<f64>,
     /// Per-epoch average training loss (label holder / server).
     pub epoch_losses: Vec<f64>,
+    /// Bit-exact digest of the weights this party finished with (parties
+    /// that own the full model, e.g. the plaintext trainer); 0 = unset.
+    pub weight_digest: u64,
     /// Free-form key=value metrics.
     pub metrics: Vec<(String, f64)>,
 }

@@ -1,12 +1,127 @@
-//! Shared protocol machinery: parameter containers, updates, evaluation.
+//! Shared protocol machinery: parameter containers, updates, evaluation,
+//! and the **pipelined session framework** every trainer's party loop runs
+//! on ([`run_pipeline`]).
+//!
+//! # Pipelined batch-stage state machine
+//!
+//! SGD's weight update makes each mini-batch *value-dependent* on the
+//! previous one, so the tensor math cannot reorder. What can run ahead is
+//! everything **value-independent**: Paillier nonce exponentiations,
+//! dealer triples / boolean bundles, secret-share masks, fixed-point input
+//! encodes. [`run_pipeline`] splits a party's per-batch work into three
+//! [`Step`]s and drives up to `pipeline_depth` batches of
+//! [`Step::Prefetch`] work ahead of demand, placing it inside the window
+//! where the party would otherwise idle-wait on remote results
+//! ([`Step::Submit`] has been sent, [`Step::Complete`] not yet received).
+//! The netsim virtual clock then absorbs the prefetch wall time into the
+//! wait (overlap credit) instead of the critical path.
+//!
+//! Prefetch runs in schedule order at every depth, so all RNG draws stay
+//! in schedule order and the trained weights are **bit-identical at any
+//! depth** (asserted by the transcript-equality tests via
+//! [`TrainReport::weight_digest`]).
 
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset};
+use crate::netsim::StageRow;
 use crate::nn::{Optimizer, Sgd, Sgld};
 use crate::runtime::{Engine, TensorIn};
 use crate::rng::Pcg64;
 use crate::nn::MatF64;
 use crate::Result;
+
+/// Scheduler step of the pipelined session (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Value-independent lookahead work for a batch (RNG draws in schedule
+    /// order): nonce refills, dealer requests, share masks, input encodes.
+    Prefetch,
+    /// Critical-path work for a batch up to its last send.
+    Submit,
+    /// Blocking receives of remote results for a batch + state updates.
+    Complete,
+}
+
+/// One mini-batch in flight through the pipelined session.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCtx {
+    /// Batch index within the epoch (also the message tag).
+    pub index: usize,
+    /// First row of the batch in the training set.
+    pub start: usize,
+    /// Rows in this batch (the last batch may be partial).
+    pub rows: usize,
+}
+
+impl BatchCtx {
+    /// Message tag for this batch's traffic.
+    pub fn tag(&self) -> u64 {
+        self.index as u64
+    }
+}
+
+/// Drive one party's per-epoch batch loop with up to `depth` mini-batches
+/// in flight.
+///
+/// For every batch `t` (in order): any outstanding `Prefetch` up to `t`
+/// runs first (demand), then `Submit(t)`, then `Prefetch` for batches up
+/// to `t + depth - 1` (the overlap window), then `Complete(t)`. Depth 1
+/// reproduces the strict lock-step schedule: `Prefetch(t)` immediately
+/// followed by `Submit(t)`, `Complete(t)`.
+pub fn run_pipeline<F>(plan: &[(usize, usize)], depth: usize, mut step: F) -> Result<()>
+where
+    F: FnMut(Step, &BatchCtx) -> Result<()>,
+{
+    let depth = depth.max(1);
+    let ctx = |i: usize| BatchCtx { index: i, start: plan[i].0, rows: plan[i].1 };
+    let mut pre = 0usize;
+    for t in 0..plan.len() {
+        while pre <= t {
+            step(Step::Prefetch, &ctx(pre))?;
+            pre += 1;
+        }
+        step(Step::Submit, &ctx(t))?;
+        while pre < plan.len() && pre < t + depth {
+            step(Step::Prefetch, &ctx(pre))?;
+            pre += 1;
+        }
+        step(Step::Complete, &ctx(t))?;
+    }
+    Ok(())
+}
+
+/// FNV-1a 64 over raw bit patterns — the transcript digest used to assert
+/// bit-identical training across pipeline depths.
+pub struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn add_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn add_f64s(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add_bytes(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn add_u64(&mut self, x: u64) {
+        self.add_bytes(&x.to_le_bytes());
+    }
+}
 
 /// All model parameters, in f64 master copies (updates) with f32 views
 /// generated per artifact call.
@@ -55,6 +170,18 @@ impl ModelParams {
 
     pub fn theta0_f32(&self) -> Vec<f32> {
         self.theta0.to_f32()
+    }
+
+    /// Bit-exact digest of every parameter (transcript-equality checks).
+    pub fn digest(&self) -> u64 {
+        let mut f = Fnv::new();
+        f.add_f64s(&self.theta0.data);
+        for m in &self.server {
+            f.add_f64s(&m.data);
+        }
+        f.add_f64s(&self.wy.data);
+        f.add_f64s(&self.by.data);
+        f.0
     }
 }
 
@@ -165,6 +292,11 @@ pub struct TrainReport {
     /// Online / offline traffic (bytes, whole run).
     pub online_bytes: usize,
     pub offline_bytes: usize,
+    /// Per-phase / per-stage traffic breakdown (where the bytes go).
+    pub stages: Vec<StageRow>,
+    /// Bit-exact digest of the final model weights — equal digests mean
+    /// transcript-equal training (used by the pipeline-depth tests).
+    pub weight_digest: u64,
     /// Wall-clock seconds for the whole run (this harness, not the paper's).
     pub wall_seconds: f64,
 }
@@ -195,6 +327,131 @@ impl TrainReport {
 mod tests {
     use super::*;
     use crate::config::FRAUD;
+
+    #[test]
+    fn pipeline_depth1_is_lockstep() {
+        let plan = [(0usize, 4usize), (4, 4), (8, 2)];
+        let mut log = Vec::new();
+        run_pipeline(&plan, 1, |st, b| {
+            log.push((st, b.index));
+            Ok(())
+        })
+        .unwrap();
+        use Step::*;
+        assert_eq!(
+            log,
+            vec![
+                (Prefetch, 0),
+                (Submit, 0),
+                (Complete, 0),
+                (Prefetch, 1),
+                (Submit, 1),
+                (Complete, 1),
+                (Prefetch, 2),
+                (Submit, 2),
+                (Complete, 2),
+            ]
+        );
+        // depth 0 coerces to 1
+        let mut log0 = Vec::new();
+        run_pipeline(&plan, 0, |st, b| {
+            log0.push((st, b.index));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(log0, log);
+    }
+
+    #[test]
+    fn pipeline_depth2_prefetches_in_the_wait_window() {
+        let plan = [(0usize, 4usize), (4, 4), (8, 2)];
+        let mut log = Vec::new();
+        run_pipeline(&plan, 2, |st, b| {
+            log.push((st, b.index));
+            Ok(())
+        })
+        .unwrap();
+        use Step::*;
+        // prefetch(t+1) lands between submit(t) and complete(t)
+        assert_eq!(
+            log,
+            vec![
+                (Prefetch, 0),
+                (Submit, 0),
+                (Prefetch, 1),
+                (Complete, 0),
+                (Submit, 1),
+                (Prefetch, 2),
+                (Complete, 1),
+                (Submit, 2),
+                (Complete, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn pipeline_large_depth_saturates_then_drains() {
+        let plan = [(0usize, 2usize), (2, 2), (4, 2)];
+        let mut log = Vec::new();
+        run_pipeline(&plan, 10, |st, b| {
+            log.push((st, b.index));
+            Ok(())
+        })
+        .unwrap();
+        use Step::*;
+        assert_eq!(
+            log,
+            vec![
+                (Prefetch, 0),
+                (Submit, 0),
+                (Prefetch, 1),
+                (Prefetch, 2),
+                (Complete, 0),
+                (Submit, 1),
+                (Complete, 1),
+                (Submit, 2),
+                (Complete, 2),
+            ]
+        );
+        // invariants at any depth: per-batch step order, prefetch in order
+        for d in 1..6 {
+            let mut seen_pre = Vec::new();
+            let mut submitted = Vec::new();
+            let mut completed = Vec::new();
+            run_pipeline(&plan, d, |st, b| {
+                match st {
+                    Prefetch => seen_pre.push(b.index),
+                    Submit => {
+                        assert!(seen_pre.contains(&b.index), "submit before prefetch");
+                        submitted.push(b.index);
+                    }
+                    Complete => {
+                        assert_eq!(submitted.last(), Some(&b.index));
+                        completed.push(b.index);
+                    }
+                }
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seen_pre, vec![0, 1, 2], "depth {d}");
+            assert_eq!(completed, vec![0, 1, 2], "depth {d}");
+        }
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let p = ModelParams::init(&FRAUD, 3);
+        let q = p.clone();
+        assert_eq!(p.digest(), q.digest());
+        let mut r = p.clone();
+        r.theta0.data[0] += 1e-12;
+        assert_ne!(p.digest(), r.digest());
+        let mut f = Fnv::new();
+        f.add_u64(7);
+        let mut g = Fnv::new();
+        g.add_u64(8);
+        assert_ne!(f.0, g.0);
+    }
 
     #[test]
     fn params_shapes() {

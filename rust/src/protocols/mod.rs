@@ -9,8 +9,14 @@
 //! | SPNN-HE         | [`spnn`]      | Paillier HE (Alg. 3) | server (plaintext) | holder A |
 //!
 //! All implement [`Trainer`] and produce a [`TrainReport`] with accuracy,
-//! loss curves, simulated epoch times, and traffic accounting — the raw
-//! material for every table/figure in `exp/`.
+//! loss curves, simulated epoch times, traffic accounting, and a bit-exact
+//! weight digest — the raw material for every table/figure in `exp/`.
+//!
+//! Every trainer's party loops run on the shared pipelined session
+//! framework ([`common::run_pipeline`]): `TrainConfig::pipeline_depth`
+//! mini-batches of value-independent crypto stay in flight per party,
+//! while the weight-update schedule (and therefore the trained model) is
+//! identical at any depth.
 
 pub mod common;
 pub mod plaintext;
@@ -18,7 +24,7 @@ pub mod secureml;
 pub mod splitnn;
 pub mod spnn;
 
-pub use common::{ModelParams, TrainReport};
+pub use common::{run_pipeline, BatchCtx, ModelParams, Step, TrainReport};
 
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Dataset;

@@ -9,7 +9,7 @@
 
 use std::time::Instant;
 
-use super::common::{evaluate, ModelParams, TrainReport, Updater};
+use super::common::{evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Dataset;
@@ -39,6 +39,18 @@ impl Trainer for PlainNn {
         let mut params = ModelParams::init(cfg, tc.seed);
         let cap = ModelConfig::pick_batch(tc.batch);
         let batches = train.batches(tc.batch, cap);
+        // plan derived FROM the batches so the two can never disagree
+        let plan: Vec<(usize, usize)> = {
+            let mut start = 0usize;
+            batches
+                .iter()
+                .map(|b| {
+                    let e = (start, b.rows);
+                    start += b.rows;
+                    e
+                })
+                .collect()
+        };
         let cfgc = cfg.clone();
         let tcc = tc.clone();
 
@@ -59,7 +71,14 @@ impl Trainer for PlainNn {
                 for _ in 0..epochs {
                     p.reset_clock();
                     let mut loss_sum = 0.0;
-                    for b in &batches {
+                    // single-party pipeline: there is no remote wait to
+                    // overlap, but the loop rides the same state machine
+                    // so the depth knob is honored uniformly
+                    run_pipeline(&plan, tcc.pipeline_depth, |step, bc| {
+                        if step != Step::Submit {
+                            return Ok(());
+                        }
+                        let b = &batches[bc.index];
                         let theta0 = params.theta0_f32();
                         let server = params.server_f32();
                         let wy = params.wy_f32();
@@ -89,7 +108,8 @@ impl Trainer for PlainNn {
                         up.step_mat_f32(&mut params.wy, &g_wy);
                         up.step_mat_f32(&mut params.by, &g_by);
                         up.tick();
-                    }
+                        Ok(())
+                    })?;
                     times.push(p.now());
                     parties::report_epoch(&mut p, loss_sum / batches.len() as f64)?;
                 }
@@ -100,6 +120,7 @@ impl Trainer for PlainNn {
                     sim_time: p.now(),
                     epoch_times: times,
                     epoch_losses: vec![auc, test_loss],
+                    weight_digest: params.digest(),
                     ..Default::default()
                 })
             }),
@@ -119,6 +140,8 @@ impl Trainer for PlainNn {
             epoch_times,
             online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
             offline_bytes: 0,
+            stages: stats.stage_rows(),
+            weight_digest: outs[1].weight_digest,
             wall_seconds: wall.elapsed().as_secs_f64(),
         })
     }

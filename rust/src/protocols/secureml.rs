@@ -15,22 +15,32 @@
 //! The paper's SecureML column is 2-party; with more data holders the extra
 //! holders secret-share their feature blocks into the two compute parties
 //! (accuracy is unchanged — Fig 5's flat SecureML line).
+//!
+//! **Pipelining**: the party loops run on the shared
+//! [`run_pipeline`] batch-stage state machine. The dealer material a batch
+//! needs is fully determined by the layer plan ([`batch_script`]), so A
+//! fires the whole script as tagged requests from `Prefetch` — up to
+//! `pipeline_depth - 1` batches ahead — and both parties pull the replies
+//! with `recv_tagged` at point of use: the dealer's triple generation
+//! streams ahead of demand instead of serializing a request round-trip
+//! into every Beaver multiplication.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::common::{TrainReport, ModelParams};
+use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport};
 use super::Trainer;
 use crate::config::{Act, ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
-use crate::fixed::{self, FRAC_BITS, SCALE};
+use crate::fixed::{self, SCALE};
 use crate::netsim::{LinkSpec, NetPort, Payload};
 use crate::nn::MatF64;
 use crate::parties::{self, ids, run_parties, PartyOut};
 use crate::rng::ChaChaRng;
 use crate::smpc::boolean::drelu_arith;
+use crate::smpc::dealer::{self, Req};
 use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm};
-use crate::smpc::{dealer, share2, trunc_share_mat, RingMat};
+use crate::smpc::{share2_from_mask, trunc_share_mat, RingMat};
 use crate::{Error, Result};
 
 pub struct SecureMl;
@@ -54,6 +64,45 @@ fn layer_plan(cfg: &ModelConfig) -> (Vec<usize>, Vec<Act>, Vec<bool>) {
     let mut bias = vec![false]; // first layer: h1 = X·theta, no bias
     bias.extend(std::iter::repeat(true).take(cfg.server_dims.len() + 1));
     (dims, acts, bias)
+}
+
+/// The exact dealer-material sequence one mini-batch consumes, in
+/// consumption order. `Prefetch` fires these as tagged requests; the
+/// forward/backward code pulls the replies in the same order, so the two
+/// MUST stay in sync (guarded by `secureml_depths_are_transcript_equal`
+/// and the tiny end-to-end test).
+fn batch_script(dims: &[usize], acts: &[Act], rows: usize) -> Vec<Req> {
+    let n_layers = dims.len() - 1;
+    let mut script = Vec::new();
+    // forward: one matrix triple per layer + activation material
+    for l in 0..n_layers {
+        let lanes = rows * dims[l + 1];
+        script.push(Req::Mat(rows, dims[l], dims[l + 1]));
+        match acts[l] {
+            Act::Sigmoid => {
+                script.push(Req::Bool(lanes));
+                script.push(Req::Bool(lanes));
+                script.push(Req::Elem(lanes));
+            }
+            Act::Relu => {
+                script.push(Req::Bool(lanes));
+                script.push(Req::Elem(lanes));
+            }
+            Act::Identity => {}
+        }
+    }
+    // backward, in reverse layer order
+    for l in (0..n_layers).rev() {
+        let lanes = rows * dims[l + 1];
+        if acts[l] != Act::Identity {
+            script.push(Req::Elem(lanes));
+        }
+        script.push(Req::Mat(dims[l], rows, dims[l + 1]));
+        if l > 0 {
+            script.push(Req::Mat(rows, dims[l + 1], dims[l]));
+        }
+    }
+    script
 }
 
 impl Trainer for SecureMl {
@@ -134,6 +183,8 @@ impl Trainer for SecureMl {
             }));
         }
         // extra data holders: share their block into A and B each batch
+        // (the block and the mask are value-independent, so both stage in
+        // the prefetch window)
         for j in 2..n_holders {
             let plan = plan.clone();
             let split = split.clone();
@@ -145,19 +196,35 @@ impl Trainer for SecureMl {
                 let epochs = parties::await_start(&mut p)?;
                 let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
                 for _ in 0..epochs {
-                    for &(s, rows) in &plan {
-                        let xr = RingMat::encode_f64(
-                            rows,
-                            dj,
-                            &xj[s * dj..(s + rows) * dj]
-                                .iter()
-                                .map(|&v| v as f64)
-                                .collect::<Vec<_>>(),
-                        );
-                        let (sa, sb) = share2(&mut rng, &xr);
-                        p.send(a_id, Payload::U64s(sa.data))?;
-                        p.send(b_id, Payload::U64s(sb.data))?;
-                    }
+                    let mut staged: std::collections::VecDeque<(RingMat, RingMat)> =
+                        std::collections::VecDeque::new();
+                    run_pipeline(&plan, tc.pipeline_depth, |step, b| {
+                        let (s, rows) = (b.start, b.rows);
+                        match step {
+                            Step::Prefetch => {
+                                let xr = RingMat::encode_f64(
+                                    rows,
+                                    dj,
+                                    &xj[s * dj..(s + rows) * dj]
+                                        .iter()
+                                        .map(|&v| v as f64)
+                                        .collect::<Vec<_>>(),
+                                );
+                                let r = RingMat::random(&mut rng, rows, dj);
+                                staged.push_back((xr, r));
+                                Ok(())
+                            }
+                            Step::Submit => {
+                                let (xr, r) =
+                                    staged.pop_front().expect("prefetch before submit");
+                                let (sa, sb) = share2_from_mask(&xr, r);
+                                p.send_tagged(a_id, b.tag(), Payload::U64s(sa.data))?;
+                                p.send_tagged(b_id, b.tag(), Payload::U64s(sb.data))?;
+                                Ok(())
+                            }
+                            Step::Complete => Ok(()),
+                        }
+                    })?;
                 }
                 parties::await_stop(&mut p)?;
                 Ok(PartyOut::default())
@@ -170,6 +237,13 @@ impl Trainer for SecureMl {
         // activations MPC used (the approximation is part of the accuracy)
         let finals = finals.lock().unwrap().clone();
         let (a, test_loss) = eval_piecewise(cfg, &finals, test);
+        let mut digest = Fnv::new();
+        for (w, b) in &finals {
+            digest.add_f64s(&w.data);
+            if let Some(b) = b {
+                digest.add_f64s(b);
+            }
+        }
 
         Ok(TrainReport {
             protocol: self.name().into(),
@@ -180,6 +254,8 @@ impl Trainer for SecureMl {
             epoch_times: outs[a_id].epoch_times.clone(),
             online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
             offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
+            stages: stats.stage_rows(),
+            weight_digest: digest.0,
             wall_seconds: wall.elapsed().as_secs_f64(),
         })
     }
@@ -197,6 +273,14 @@ fn add_const(share: &mut [u64], c: u64, role: u8) {
             *v = v.wrapping_add(c);
         }
     }
+}
+
+/// Per-batch state handed from the `Submit` (forward) stage to the
+/// `Complete` (backward) stage.
+struct InFlight {
+    act_shares: Vec<RingMat>,
+    deriv_shares: Vec<Vec<u64>>,
+    g_out: RingMat,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -254,11 +338,11 @@ fn mpc_party(
         mats.push((init.wy.clone(), Some(init.by.data.clone())));
         for (w, b) in mats {
             let wr = RingMat::encode_f64(w.rows, w.cols, &w.data);
-            let (wa, wb) = share2(&mut rng, &wr);
+            let (wa, wb) = crate::smpc::share2(&mut rng, &wr);
             p.send_phase(peer, Payload::U64s(wb.data), crate::netsim::Phase::Offline)?;
             let bshare = if let Some(bv) = b {
                 let br = RingMat::encode_f64(1, bv.len(), &bv);
-                let (ba, bb) = share2(&mut rng, &br);
+                let (ba, bb) = crate::smpc::share2(&mut rng, &br);
                 p.send_phase(peer, Payload::U64s(bb.data), crate::netsim::Phase::Offline)?;
                 Some(ba.data)
             } else {
@@ -286,183 +370,226 @@ fn mpc_party(
     for _ in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        for &(s, rows) in plan {
-            // ---- input sharing ----
-            let xr = RingMat::encode_f64(
-                rows,
-                dj,
-                &x_mine[s * dj..(s + rows) * dj]
-                    .iter()
-                    .map(|&v| v as f64)
-                    .collect::<Vec<_>>(),
-            );
-            let (mine, theirs) = share2(&mut rng, &xr);
-            p.send(peer, Payload::U64s(theirs.data))?;
-            let peer_share = p.recv_u64s(peer)?;
-            let dpeer = split.width(if me_is_a { 1 } else { 0 });
-            let peer_mat = RingMat::from_data(rows, dpeer, peer_share);
-            // column order: holder 0 block, holder 1 block, extras...
-            let mut x_share = if me_is_a {
-                mine.concat_cols(&peer_mat)
-            } else {
-                peer_mat.concat_cols(&mine)
-            };
-            for j in 2..n_holders {
-                let blk = p.recv_u64s(2 + j)?;
-                let w = split.width(j);
-                if blk.len() != rows * w {
-                    return Err(Error::Protocol("secureml: extra block size".into()));
-                }
-                x_share = x_share.concat_cols(&RingMat::from_data(rows, w, blk));
-            }
-            // labels: A shares y
-            let y_share: Vec<u64> = if me_is_a {
-                let yv: Vec<f64> = y.as_ref().unwrap()[s..s + rows]
-                    .iter()
-                    .map(|&v| v as f64)
-                    .collect();
-                let yr = RingMat::encode_f64(rows, 1, &yv);
-                let (ya, yb) = share2(&mut rng, &yr);
-                p.send(peer, Payload::U64s(yb.data))?;
-                ya.data
-            } else {
-                p.recv_u64s(peer)?
-            };
-
-            // ---- forward ----
-            let mut act_shares: Vec<RingMat> = vec![x_share];
-            let mut deriv_shares: Vec<Vec<u64>> = Vec::new(); // per layer
-            for l in 0..n_layers {
-                let a_in = act_shares.last().unwrap().clone();
-                let (m, k, n) = (rows, dims[l], dims[l + 1]);
-                let triple = get_triple(p, role, m, k, n)?;
-                let mut z = beaver_matmul(p, peer, role, &a_in, &layers[l].w, &triple, &native_mm)?;
-                trunc_share_mat(&mut z, role);
-                if let Some(b) = &layers[l].b {
-                    for r in 0..m {
-                        for c in 0..n {
-                            let v = &mut z.data[r * n + c];
-                            *v = v.wrapping_add(b[c]);
+        // pre-drawn input-share masks (x, and y for A), FIFO by batch
+        let mut masks: std::collections::VecDeque<(RingMat, Option<RingMat>)> =
+            std::collections::VecDeque::new();
+        let mut inflight: Option<InFlight> = None;
+        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+            let (s, rows) = (b.start, b.rows);
+            let tag = b.tag();
+            match step {
+                Step::Prefetch => {
+                    p.set_stage("prefetch");
+                    // A streams the whole batch's dealer script ahead of
+                    // demand; the dealer computes inside our wait windows
+                    if me_is_a {
+                        for req in batch_script(&dims, &acts, rows) {
+                            dealer::send_request_tagged(p, ids::DEALER, req, tag)?;
                         }
                     }
+                    // input-share masks, drawn in schedule order
+                    let r_x = RingMat::random(&mut rng, rows, dj);
+                    let r_y = if me_is_a {
+                        Some(RingMat::random(&mut rng, rows, 1))
+                    } else {
+                        None
+                    };
+                    masks.push_back((r_x, r_y));
+                    Ok(())
                 }
-                // activation
-                let lanes = m * n;
-                match acts[l] {
-                    Act::Sigmoid => {
-                        // piecewise: f = (b1-b2)(z+1/2) + b2
-                        let mut u = z.data.clone();
-                        add_const(&mut u, enc_const(0.5), role);
-                        let b1 = drelu(p, role, a_id, &u)?;
-                        let mut v = z.data.clone();
-                        add_const(&mut v, enc_const(-0.5), role);
-                        let b2 = drelu(p, role, a_id, &v)?;
-                        let d: Vec<u64> = b1
+                Step::Submit => {
+                    p.set_stage("fwd");
+                    let (r_x, r_y) = masks.pop_front().expect("prefetch before submit");
+                    // ---- input sharing ----
+                    let xr = RingMat::encode_f64(
+                        rows,
+                        dj,
+                        &x_mine[s * dj..(s + rows) * dj]
                             .iter()
-                            .zip(&b2)
-                            .map(|(x, yv)| x.wrapping_sub(*yv))
-                            .collect();
-                        let et = get_elem_triple(p, role, lanes)?;
-                        let prod = beaver_mul_elem(p, peer, role, &d, &u, &et)?;
-                        let f: Vec<u64> = prod
+                            .map(|&v| v as f64)
+                            .collect::<Vec<_>>(),
+                    );
+                    let (mine, theirs) = share2_from_mask(&xr, r_x);
+                    p.send_tagged(peer, tag, Payload::U64s(theirs.data))?;
+                    let peer_share = p.recv_tagged(peer, tag)?.into_u64s()?;
+                    let dpeer = split.width(if me_is_a { 1 } else { 0 });
+                    let peer_mat = RingMat::from_data(rows, dpeer, peer_share);
+                    // column order: holder 0 block, holder 1 block, extras...
+                    let mut x_share = if me_is_a {
+                        mine.concat_cols(&peer_mat)
+                    } else {
+                        peer_mat.concat_cols(&mine)
+                    };
+                    for j in 2..n_holders {
+                        let blk = p.recv_tagged(2 + j, tag)?.into_u64s()?;
+                        let w = split.width(j);
+                        if blk.len() != rows * w {
+                            return Err(Error::Protocol("secureml: extra block size".into()));
+                        }
+                        x_share = x_share.concat_cols(&RingMat::from_data(rows, w, blk));
+                    }
+                    // labels: A shares y
+                    let y_share: Vec<u64> = if me_is_a {
+                        let yv: Vec<f64> = y.as_ref().unwrap()[s..s + rows]
                             .iter()
-                            .zip(&b2)
-                            .map(|(x, yv)| {
-                                x.wrapping_add(yv.wrapping_mul(SCALE as u64))
-                            })
+                            .map(|&v| v as f64)
                             .collect();
-                        deriv_shares.push(d);
-                        act_shares.push(RingMat::from_data(m, n, f));
-                    }
-                    Act::Relu => {
-                        let b = drelu(p, role, a_id, &z.data)?;
-                        let et = get_elem_triple(p, role, lanes)?;
-                        let f = beaver_mul_elem(p, peer, role, &b, &z.data, &et)?;
-                        deriv_shares.push(b);
-                        act_shares.push(RingMat::from_data(m, n, f));
-                    }
-                    Act::Identity => {
-                        deriv_shares.push(vec![]);
-                        act_shares.push(z);
-                    }
-                }
-            }
+                        let yr = RingMat::encode_f64(rows, 1, &yv);
+                        let (ya, yb) = share2_from_mask(&yr, r_y.unwrap());
+                        p.send_tagged(peer, tag, Payload::U64s(yb.data))?;
+                        ya.data
+                    } else {
+                        p.recv_tagged(peer, tag)?.into_u64s()?
+                    };
 
-            // ---- loss gradient: g = (p - y) / rows ----
-            let p_share = act_shares.last().unwrap().clone(); // (rows x 1)
-            let mut g: Vec<u64> = p_share
-                .data
-                .iter()
-                .zip(&y_share)
-                .map(|(a, b)| a.wrapping_sub(*b))
-                .collect();
-            let inv_rows = enc_const(1.0 / rows as f64);
-            for v in g.iter_mut() {
-                *v = v.wrapping_mul(inv_rows);
-            }
-            let mut g = RingMat::from_data(rows, 1, g);
-            trunc_share_mat(&mut g, role);
-
-            // loss monitoring: open p to A (A owns y anyway)
-            if me_is_a {
-                let p_peer = p.recv_u64s(peer)?;
-                let yv = &y.as_ref().unwrap()[s..s + rows];
-                let mut loss = 0.0;
-                for i in 0..rows {
-                    let pi = fixed::decode(p_share.data[i].wrapping_add(p_peer[i]))
-                        .clamp(1e-4, 1.0 - 1e-4);
-                    let yi = yv[i] as f64;
-                    loss -= yi * pi.ln() + (1.0 - yi) * (1.0 - pi).ln();
-                }
-                loss_sum += loss / rows as f64;
-            } else {
-                p.send(peer, Payload::U64s(p_share.data.clone()))?;
-            }
-
-            // ---- backward ----
-            let mut g_out = g; // gradient w.r.t. layer output activation
-            for l in (0..n_layers).rev() {
-                let (m, k, n) = (rows, dims[l], dims[l + 1]);
-                // through the activation
-                let g_z = if deriv_shares[l].is_empty() {
-                    g_out.clone()
-                } else {
-                    let et = get_elem_triple(p, role, m * n)?;
-                    let gz =
-                        beaver_mul_elem(p, peer, role, &deriv_shares[l], &g_out.data, &et)?;
-                    RingMat::from_data(m, n, gz)
-                };
-                // g_W = a_in^T @ g_z
-                let a_in_t = act_shares[l].transpose();
-                let triple = get_triple(p, role, k, m, n)?;
-                let mut g_w = beaver_matmul(p, peer, role, &a_in_t, &g_z, &triple, &native_mm)?;
-                trunc_share_mat(&mut g_w, role);
-                // g_b = column sums (local)
-                let g_b: Option<Vec<u64>> = layers[l].b.as_ref().map(|_| {
-                    let mut out = vec![0u64; n];
-                    for r in 0..m {
-                        for c in 0..n {
-                            out[c] = out[c].wrapping_add(g_z.data[r * n + c]);
+                    // ---- forward ----
+                    let mut act_shares: Vec<RingMat> = vec![x_share];
+                    let mut deriv_shares: Vec<Vec<u64>> = Vec::new(); // per layer
+                    for l in 0..n_layers {
+                        let a_in = act_shares.last().unwrap().clone();
+                        let (m, k, n) = (rows, dims[l], dims[l + 1]);
+                        let triple = get_triple(p, role, m, k, n, tag)?;
+                        let mut z = beaver_matmul(
+                            p, peer, role, &a_in, &layers[l].w, &triple, &native_mm,
+                        )?;
+                        trunc_share_mat(&mut z, role);
+                        if let Some(bv) = &layers[l].b {
+                            for r in 0..m {
+                                for c in 0..n {
+                                    let v = &mut z.data[r * n + c];
+                                    *v = v.wrapping_add(bv[c]);
+                                }
+                            }
+                        }
+                        // activation
+                        let lanes = m * n;
+                        match acts[l] {
+                            Act::Sigmoid => {
+                                // piecewise: f = (b1-b2)(z+1/2) + b2
+                                let mut u = z.data.clone();
+                                add_const(&mut u, enc_const(0.5), role);
+                                let b1 = drelu(p, role, a_id, &u, tag)?;
+                                let mut v = z.data.clone();
+                                add_const(&mut v, enc_const(-0.5), role);
+                                let b2 = drelu(p, role, a_id, &v, tag)?;
+                                let d: Vec<u64> = b1
+                                    .iter()
+                                    .zip(&b2)
+                                    .map(|(x, yv)| x.wrapping_sub(*yv))
+                                    .collect();
+                                let et = get_elem_triple(p, role, lanes, tag)?;
+                                let prod = beaver_mul_elem(p, peer, role, &d, &u, &et)?;
+                                let f: Vec<u64> = prod
+                                    .iter()
+                                    .zip(&b2)
+                                    .map(|(x, yv)| {
+                                        x.wrapping_add(yv.wrapping_mul(SCALE as u64))
+                                    })
+                                    .collect();
+                                deriv_shares.push(d);
+                                act_shares.push(RingMat::from_data(m, n, f));
+                            }
+                            Act::Relu => {
+                                let bb = drelu(p, role, a_id, &z.data, tag)?;
+                                let et = get_elem_triple(p, role, lanes, tag)?;
+                                let f = beaver_mul_elem(p, peer, role, &bb, &z.data, &et)?;
+                                deriv_shares.push(bb);
+                                act_shares.push(RingMat::from_data(m, n, f));
+                            }
+                            Act::Identity => {
+                                deriv_shares.push(vec![]);
+                                act_shares.push(z);
+                            }
                         }
                     }
-                    out
-                });
-                // g_in = g_z @ W^T (skip for the first layer)
-                if l > 0 {
-                    let w_t = layers[l].w.transpose();
-                    let triple = get_triple(p, role, m, n, k)?;
-                    let mut g_in =
-                        beaver_matmul(p, peer, role, &g_z, &w_t, &triple, &native_mm)?;
-                    trunc_share_mat(&mut g_in, role);
-                    g_out = g_in;
+
+                    // ---- loss gradient: g = (p - y) / rows ----
+                    let p_share = act_shares.last().unwrap().clone(); // (rows x 1)
+                    let mut g: Vec<u64> = p_share
+                        .data
+                        .iter()
+                        .zip(&y_share)
+                        .map(|(av, bv)| av.wrapping_sub(*bv))
+                        .collect();
+                    let inv_rows = enc_const(1.0 / rows as f64);
+                    for v in g.iter_mut() {
+                        *v = v.wrapping_mul(inv_rows);
+                    }
+                    let mut g = RingMat::from_data(rows, 1, g);
+                    trunc_share_mat(&mut g, role);
+
+                    // loss monitoring: open p to A (A owns y anyway)
+                    if me_is_a {
+                        let p_peer = p.recv_tagged(peer, tag)?.into_u64s()?;
+                        let yv = &y.as_ref().unwrap()[s..s + rows];
+                        let mut loss = 0.0;
+                        for i in 0..rows {
+                            let pi = fixed::decode(p_share.data[i].wrapping_add(p_peer[i]))
+                                .clamp(1e-4, 1.0 - 1e-4);
+                            let yi = yv[i] as f64;
+                            loss -= yi * pi.ln() + (1.0 - yi) * (1.0 - pi).ln();
+                        }
+                        loss_sum += loss / rows as f64;
+                    } else {
+                        p.send_tagged(peer, tag, Payload::U64s(p_share.data.clone()))?;
+                    }
+                    inflight = Some(InFlight { act_shares, deriv_shares, g_out: g });
+                    Ok(())
                 }
-                // updates: W -= lr * g_W (public lr: local mult + trunc)
-                apply_update(&mut layers[l].w.data, &g_w.data, lr_enc, role);
-                if let (Some(b), Some(gb)) = (&mut layers[l].b, g_b) {
-                    apply_update(b, &gb, lr_enc, role);
+                Step::Complete => {
+                    p.set_stage("bwd");
+                    let fl = inflight.take().expect("submit before complete");
+                    // g_out: gradient w.r.t. the current layer's output
+                    let InFlight { act_shares, deriv_shares, mut g_out } = fl;
+                    for l in (0..n_layers).rev() {
+                        let (m, k, n) = (rows, dims[l], dims[l + 1]);
+                        // through the activation
+                        let g_z = if deriv_shares[l].is_empty() {
+                            g_out.clone()
+                        } else {
+                            let et = get_elem_triple(p, role, m * n, tag)?;
+                            let gz = beaver_mul_elem(
+                                p, peer, role, &deriv_shares[l], &g_out.data, &et,
+                            )?;
+                            RingMat::from_data(m, n, gz)
+                        };
+                        // g_W = a_in^T @ g_z
+                        let a_in_t = act_shares[l].transpose();
+                        let triple = get_triple(p, role, k, m, n, tag)?;
+                        let mut g_w = beaver_matmul(
+                            p, peer, role, &a_in_t, &g_z, &triple, &native_mm,
+                        )?;
+                        trunc_share_mat(&mut g_w, role);
+                        // g_b = column sums (local)
+                        let g_b: Option<Vec<u64>> = layers[l].b.as_ref().map(|_| {
+                            let mut out = vec![0u64; n];
+                            for r in 0..m {
+                                for c in 0..n {
+                                    out[c] = out[c].wrapping_add(g_z.data[r * n + c]);
+                                }
+                            }
+                            out
+                        });
+                        // g_in = g_z @ W^T (skip for the first layer)
+                        if l > 0 {
+                            let w_t = layers[l].w.transpose();
+                            let triple = get_triple(p, role, m, n, k, tag)?;
+                            let mut g_in = beaver_matmul(
+                                p, peer, role, &g_z, &w_t, &triple, &native_mm,
+                            )?;
+                            trunc_share_mat(&mut g_in, role);
+                            g_out = g_in;
+                        }
+                        // updates: W -= lr * g_W (public lr: local mult + trunc)
+                        apply_update(&mut layers[l].w.data, &g_w.data, lr_enc, role);
+                        if let (Some(bv), Some(gb)) = (&mut layers[l].b, g_b) {
+                            apply_update(bv, &gb, lr_enc, role);
+                        }
+                    }
+                    Ok(())
                 }
             }
-        }
+        })?;
         epoch_times.push(p.now());
         if me_is_a {
             epoch_losses.push(loss_sum / plan.len() as f64);
@@ -527,18 +654,20 @@ fn apply_update(param: &mut [u64], grad: &[u64], lr_enc: u64, role: u8) {
     }
 }
 
-/// Fetch a matrix triple (A requests, B receives).
+/// Pull a matrix triple requested at prefetch under `tag` (A expands the
+/// correction reply, B expands its seed).
 fn get_triple(
     p: &mut NetPort,
     role: u8,
     m: usize,
     k: usize,
     n: usize,
+    tag: u64,
 ) -> Result<crate::smpc::MatTriple> {
     if role == 0 {
-        dealer::request_mat_triple(p, ids::DEALER, m, k, n)
+        dealer::recv_mat_triple_a(p, ids::DEALER, m, k, n, tag)
     } else {
-        dealer::recv_mat_triple_b(p, ids::DEALER, m, k, n)
+        dealer::recv_mat_triple_b_tagged(p, ids::DEALER, m, k, n, tag)
     }
 }
 
@@ -546,21 +675,22 @@ fn get_elem_triple(
     p: &mut NetPort,
     role: u8,
     len: usize,
+    tag: u64,
 ) -> Result<crate::smpc::matmul::ElemTriple> {
     if role == 0 {
-        dealer::request_elem_triple(p, ids::DEALER, len)
+        dealer::recv_elem_triple_a(p, ids::DEALER, len, tag)
     } else {
-        dealer::recv_elem_triple_b(p, ids::DEALER, len)
+        dealer::recv_elem_triple_b_tagged(p, ids::DEALER, len, tag)
     }
 }
 
-/// DReLU over a share vector via a fresh dealer bundle.
-fn drelu(p: &mut NetPort, role: u8, _a_id: usize, x: &[u64]) -> Result<Vec<u64>> {
+/// DReLU over a share vector via a prefetched dealer bundle.
+fn drelu(p: &mut NetPort, role: u8, _a_id: usize, x: &[u64], tag: u64) -> Result<Vec<u64>> {
     let lanes = x.len();
     let mut bundle = if role == 0 {
-        dealer::request_bool_bundle(p, ids::DEALER, lanes)?
+        dealer::recv_bool_bundle_a(p, ids::DEALER, lanes, tag)?
     } else {
-        dealer::recv_bool_bundle_b(p, ids::DEALER, lanes)?
+        dealer::recv_bool_bundle_b_tagged(p, ids::DEALER, lanes, tag)?
     };
     let peer = if role == 0 { 3 } else { 1 };
     drelu_arith(p, peer, role, x, &bundle.eda, &mut bundle.bank, &bundle.dab)
@@ -615,6 +745,24 @@ mod tests {
     }
 
     #[test]
+    fn batch_script_matches_layer_plan() {
+        let (dims, acts, _) = layer_plan(&FRAUD);
+        let script = batch_script(&dims, &acts, 64);
+        // fraud = 3 sigmoid layers: fwd (mat + 2 bool + elem) * 3,
+        // bwd per layer: elem + g_W mat (+ g_in mat above layer 0)
+        let mats = script.iter().filter(|r| matches!(r, Req::Mat(..))).count();
+        let bools = script.iter().filter(|r| matches!(r, Req::Bool(_))).count();
+        let elems = script.iter().filter(|r| matches!(r, Req::Elem(_))).count();
+        assert_eq!(mats, 3 + 3 + 2, "fwd mats + g_W mats + g_in mats");
+        assert_eq!(bools, 6);
+        assert_eq!(elems, 3 + 3);
+        // forward prefix order for layer 0
+        assert_eq!(script[0], Req::Mat(64, 28, 8));
+        assert_eq!(script[1], Req::Bool(64 * 8));
+        assert_eq!(script[3], Req::Elem(64 * 8));
+    }
+
+    #[test]
     fn secureml_trains_tiny() {
         // whole-network MPC is expensive; keep this tiny but end-to-end
         let ds = synth_fraud(SynthOpts::small(240));
@@ -632,6 +780,50 @@ mod tests {
         assert!(rep.auc > 0.3, "AUC {}", rep.auc);
         assert!(rep.offline_bytes > rep.online_bytes / 10,
                 "dealer traffic missing: {} vs {}", rep.offline_bytes, rep.online_bytes);
+        assert!(!rep.stages.is_empty(), "stage breakdown missing");
+    }
+
+    #[test]
+    fn secureml_depths_are_transcript_equal() {
+        // the pipeline may only move value-independent work: at any depth
+        // the final weights (digest) and the loss transcript are identical
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 9);
+        let mut runs = Vec::new();
+        for depth in [1usize, 2, 4] {
+            let tc = TrainConfig {
+                batch: 64,
+                epochs: 1,
+                lr_override: Some(0.05),
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            let rep = SecureMl
+                .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                .unwrap();
+            runs.push((rep.weight_digest, rep.train_losses.clone(), rep.auc.to_bits()));
+        }
+        assert_ne!(runs[0].0, 0, "digest not populated");
+        assert_eq!(runs[0], runs[1], "depth 2 diverged from depth 1");
+        assert_eq!(runs[0], runs[2], "depth 4 diverged from depth 1");
+    }
+
+    #[test]
+    fn secureml_three_holders_pipelined() {
+        // extra holders stage their shares through the same pipeline
+        let ds = synth_fraud(SynthOpts::small(160));
+        let (train, test) = ds.split(0.8, 12);
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let rep = SecureMl
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 3)
+            .unwrap();
+        assert!(rep.train_losses[0].is_finite());
     }
 
     #[test]

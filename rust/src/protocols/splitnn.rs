@@ -9,11 +9,18 @@
 //!
 //! Cut-layer width is `h1_dim` split evenly across holders, so the server
 //! stack reuses the same AOT graphs as SPNN.
+//!
+//! The party loops run on the shared [`run_pipeline`] batch-stage state
+//! machine: holders stage their (value-independent) feature-block decode
+//! in `Prefetch`, send cut-layer activations in `Submit` and consume the
+//! server's gradients in `Complete`, so the knob sweep in the pipeline
+//! bench covers this baseline too.
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::common::{ModelParams, TrainReport, Updater};
+use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
@@ -111,6 +118,13 @@ impl Trainer for SplitNn {
         let mut engine = Engine::load_default()?;
         let (a, test_loss) =
             eval_splitnn(&mut engine, cfg, &fsplit, &usplit, &encoders, &sp, test)?;
+        // digest over everything the composite model trains: the holders'
+        // encoders plus the server stack and label layer
+        let mut digest = Fnv::new();
+        for enc in &encoders {
+            digest.add_f64s(&enc.data);
+        }
+        digest.add_u64(sp.digest());
 
         Ok(TrainReport {
             protocol: self.name().into(),
@@ -121,6 +135,8 @@ impl Trainer for SplitNn {
             epoch_times: outs[ids::SERVER].epoch_times.clone(),
             online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
             offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
+            stages: stats.stage_rows(),
+            weight_digest: digest.0,
             wall_seconds: wall.elapsed().as_secs_f64(),
         })
     }
@@ -150,11 +166,19 @@ fn server_role(
     for _ in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        for &(s, rows) in plan {
+        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+            // the server's whole per-batch load depends on the holders'
+            // activations, so it all lives in Submit (no lookahead work)
+            if step != Step::Submit {
+                return Ok(());
+            }
+            let (s, rows) = (b.start, b.rows);
+            let tag = b.tag();
+            p.set_stage("server");
             // gather cut-layer blocks from every holder, concat by unit range
             let mut h1_pad = vec![0.0f32; cap * h1];
             for j in 0..n_holders {
-                let blk = p.recv_f32s(ids::holder(j))?;
+                let blk = p.recv_tagged(ids::holder(j), tag)?.into_f32s()?;
                 let (us, ue) = usplit.ranges[j];
                 let w = ue - us;
                 if blk.len() != rows * w {
@@ -228,9 +252,10 @@ fn server_role(
                     blk[r * w..(r + 1) * w]
                         .copy_from_slice(&g_h1[r * h1 + us..r * h1 + ue]);
                 }
-                p.send(ids::holder(j), Payload::F32s(blk))?;
+                p.send_tagged(ids::holder(j), tag, Payload::F32s(blk))?;
             }
-        }
+            Ok(())
+        })?;
         times.push(p.now());
         losses.push(loss_sum / plan.len() as f64);
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
@@ -260,17 +285,42 @@ fn holder_role(
     let mut w = enc.lock().unwrap()[j].clone();
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x591 + j as u64));
     for _ in 0..epochs {
-        for &(s, rows) in plan {
-            let x = MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
-            // encoder forward: pre-activation units (server applies act)
-            let z = x.matmul(&w);
-            p.send(ids::SERVER, Payload::F32s(z.to_f32()))?;
-            let g = p.recv_f32s(ids::SERVER)?;
-            let g_m = MatF64::from_f32(rows, w.cols, &g);
-            let g_w = x.transpose().matmul(&g_m);
-            up.step_mat_f32(&mut w, &g_w.to_f32());
-            up.tick();
-        }
+        // decoded feature blocks staged ahead; in-flight block for backward
+        let mut staged: VecDeque<MatF64> = VecDeque::new();
+        let mut inflight: Option<MatF64> = None;
+        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+            let (s, rows) = (b.start, b.rows);
+            match step {
+                Step::Prefetch => {
+                    p.set_stage("prefetch");
+                    staged.push_back(MatF64::from_f32(
+                        rows,
+                        dj,
+                        &xj[s * dj..(s + rows) * dj],
+                    ));
+                    Ok(())
+                }
+                Step::Submit => {
+                    p.set_stage("cut-fwd");
+                    let x = staged.pop_front().expect("prefetch before submit");
+                    // encoder forward: pre-activation units (server applies act)
+                    let z = x.matmul(&w);
+                    p.send_tagged(ids::SERVER, b.tag(), Payload::F32s(z.to_f32()))?;
+                    inflight = Some(x);
+                    Ok(())
+                }
+                Step::Complete => {
+                    p.set_stage("cut-bwd");
+                    let x = inflight.take().expect("submit before complete");
+                    let g = p.recv_tagged(ids::SERVER, b.tag())?.into_f32s()?;
+                    let g_m = MatF64::from_f32(rows, w.cols, &g);
+                    let g_w = x.transpose().matmul(&g_m);
+                    up.step_mat_f32(&mut w, &g_w.to_f32());
+                    up.tick();
+                    Ok(())
+                }
+            }
+        })?;
     }
     parties::await_stop(p)?;
     enc.lock().unwrap()[j] = w;

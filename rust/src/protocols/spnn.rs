@@ -28,11 +28,21 @@
 //!    stack, and broadcasts `g_h1`; every holder computes
 //!    `g_theta_j = X_j^T · g_h1` *locally in plaintext* (both operands are
 //!    known to it) and updates with SGD or SGLD.
+//!
+//! **Pipelining** (`TrainConfig::pipeline_depth`): every party loop runs on
+//! the shared [`run_pipeline`] batch-stage state machine. The holders'
+//! value-independent crypto — Paillier nonce exponentiations (HE), share
+//! masks / input encodes / dealer triple requests (SS) — runs in the
+//! `Prefetch` stage up to `depth - 1` batches ahead, inside the window
+//! where the holder otherwise idle-waits on `server_fwd`/`server_bwd`.
+//! Weight updates themselves stay in schedule order, so the trained model
+//! is bit-identical at any depth (see `spnn_depths_are_transcript_equal`).
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::common::{evaluate, ModelParams, TrainReport, Updater};
+use super::common::{evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
 use crate::bignum::BigUint;
 use crate::config::{ModelConfig, TrainConfig};
@@ -45,7 +55,7 @@ use crate::paillier::{keygen, NoncePool, PublicKey};
 use crate::parties::{self, ids, run_parties, PartyOut};
 use crate::rng::ChaChaRng;
 use crate::runtime::{Engine, TensorIn};
-use crate::smpc::{beaver_matmul, dealer, share2, trunc_share_mat, RingMat};
+use crate::smpc::{beaver_matmul, dealer, share2_from_mask, trunc_share_mat, RingMat};
 use crate::{Error, Result};
 
 /// SPNN trainer; `he` selects Algorithm 3 (Paillier) over Algorithm 2 (SS).
@@ -182,6 +192,8 @@ impl Trainer for Spnn {
             epoch_times: outs[ids::SERVER].epoch_times.clone(),
             online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
             offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
+            stages: stats.stage_rows(),
+            weight_digest: final_params.digest(),
             wall_seconds: wall.elapsed().as_secs_f64(),
         })
     }
@@ -237,81 +249,108 @@ fn server_role(
     for _epoch in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        for &(_s, rows) in plan {
-            // ---- receive h1 (reconstruct from shares or decrypt) ----
-            let h1_f32: Vec<f32> = if he {
-                let sk = sk.as_ref().unwrap();
-                let packing = packing.as_ref().unwrap();
-                let (data, ct_bytes, count) = p.recv(last_holder)?.into_cipher_block()?;
-                let expect = packing.ct_count(rows * h1_dim);
-                if count != expect {
-                    return Err(Error::Protocol(format!(
-                        "server: expected {expect} packed ciphertexts, got {count}"
-                    )));
+        // padded h1 of the in-flight batch, handed from Submit to Complete
+        let mut inflight_h1: Option<Vec<f32>> = None;
+        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+            let rows = b.rows;
+            let tag = b.tag();
+            match step {
+                // the server has no value-independent lookahead work: its
+                // entire per-batch load depends on the holders' h1
+                Step::Prefetch => Ok(()),
+                Step::Submit => {
+                    p.set_stage("server-fwd");
+                    // ---- receive h1 (reconstruct from shares or decrypt) ----
+                    let h1_f32: Vec<f32> = if he {
+                        let sk = sk.as_ref().unwrap();
+                        let packing = packing.as_ref().unwrap();
+                        let (data, ct_bytes, count) =
+                            p.recv_tagged(last_holder, tag)?.into_cipher_block()?;
+                        let expect = packing.ct_count(rows * h1_dim);
+                        if count != expect {
+                            return Err(Error::Protocol(format!(
+                                "server: expected {expect} packed ciphertexts, got {count}"
+                            )));
+                        }
+                        let cts = pack::block_to_cts(&data, ct_bytes, count)?;
+                        // parallel CRT decryptions, then per-slot k-holder sums
+                        let sums = pack::decrypt_batch(
+                            sk,
+                            packing,
+                            &cts,
+                            rows * h1_dim,
+                            n_holders,
+                            &exec,
+                        )?;
+                        sums.iter().map(|&s| crate::fixed::decode(s as u64) as f32).collect()
+                    } else {
+                        let sa = p.recv_tagged(a, tag)?.into_u64s()?;
+                        let sb = p.recv_tagged(ids::holder(1), tag)?.into_u64s()?;
+                        if sa.len() != rows * h1_dim || sb.len() != sa.len() {
+                            return Err(Error::Protocol("server: h1 share size".into()));
+                        }
+                        sa.iter()
+                            .zip(&sb)
+                            .map(|(x, y)| crate::fixed::decode(x.wrapping_add(*y)) as f32)
+                            .collect()
+                    };
+
+                    // ---- forward through the hidden stack (AOT graph) ----
+                    let mut h1_pad = vec![0.0f32; cap * h1_dim];
+                    h1_pad[..rows * h1_dim].copy_from_slice(&h1_f32);
+                    let server_f32 = params.server_f32();
+                    let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+                    for sp in &server_f32 {
+                        inputs.push(TensorIn::F32(sp));
+                    }
+                    let hl = engine
+                        .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+                        .remove(0)
+                        .f32()?;
+                    // send hL (only the real rows) to the label holder
+                    p.send_tagged(a, tag, Payload::F32s(hl[..rows * hl_dim].to_vec()))?;
+                    inflight_h1 = Some(h1_pad);
+                    Ok(())
                 }
-                let cts = pack::block_to_cts(&data, ct_bytes, count)?;
-                // parallel CRT decryptions, then per-slot k-holder sums
-                let sums =
-                    pack::decrypt_batch(sk, packing, &cts, rows * h1_dim, n_holders, &exec)?;
-                sums.iter().map(|&s| crate::fixed::decode(s as u64) as f32).collect()
-            } else {
-                let sa = p.recv_u64s(a)?;
-                let sb = p.recv_u64s(ids::holder(1))?;
-                if sa.len() != rows * h1_dim || sb.len() != sa.len() {
-                    return Err(Error::Protocol("server: h1 share size".into()));
+                Step::Complete => {
+                    p.set_stage("server-bwd");
+                    let h1_pad = inflight_h1.take().expect("submit before complete");
+                    // ---- backward ----
+                    let g_hl_rows = p.recv_tagged(a, tag)?.into_f32s()?;
+                    let mut g_hl = vec![0.0f32; cap * hl_dim];
+                    g_hl[..rows * hl_dim].copy_from_slice(&g_hl_rows);
+                    let server_f32 = params.server_f32();
+                    let mut inputs: Vec<TensorIn> =
+                        vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl)];
+                    for sp in &server_f32 {
+                        inputs.push(TensorIn::F32(sp));
+                    }
+                    let mut outs =
+                        engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
+                    let g_params: Vec<Vec<f32>> = outs
+                        .split_off(1)
+                        .into_iter()
+                        .map(|t| t.f32())
+                        .collect::<Result<_>>()?;
+                    let g_h1 = outs.remove(0).f32()?;
+
+                    // update server params, broadcast g_h1 to all holders
+                    for (m, g) in params.server.iter_mut().zip(&g_params) {
+                        up.step_mat_f32(m, g);
+                    }
+                    up.tick();
+                    let g_h1_rows = g_h1[..rows * h1_dim].to_vec();
+                    for j in 0..n_holders {
+                        p.send_tagged(ids::holder(j), tag, Payload::F32s(g_h1_rows.clone()))?;
+                    }
+
+                    // loss bookkeeping (A reports its scalar loss for monitoring)
+                    let loss = p.recv_tagged(a, tag)?.into_f64s()?[0];
+                    loss_sum += loss;
+                    Ok(())
                 }
-                sa.iter()
-                    .zip(&sb)
-                    .map(|(x, y)| crate::fixed::decode(x.wrapping_add(*y)) as f32)
-                    .collect()
-            };
-
-            // ---- forward through the hidden stack (AOT graph) ----
-            let mut h1_pad = vec![0.0f32; cap * h1_dim];
-            h1_pad[..rows * h1_dim].copy_from_slice(&h1_f32);
-            let server_f32 = params.server_f32();
-            let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
-            for s in &server_f32 {
-                inputs.push(TensorIn::F32(s));
             }
-            let hl = engine
-                .execute(&cfg.artifact("server_fwd", cap), &inputs)?
-                .remove(0)
-                .f32()?;
-            // send hL (only the real rows) to the label holder
-            p.send(a, Payload::F32s(hl[..rows * hl_dim].to_vec()))?;
-
-            // ---- backward ----
-            let g_hl_rows = p.recv_f32s(a)?;
-            let mut g_hl = vec![0.0f32; cap * hl_dim];
-            g_hl[..rows * hl_dim].copy_from_slice(&g_hl_rows);
-            let mut inputs: Vec<TensorIn> =
-                vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl)];
-            for s in &server_f32 {
-                inputs.push(TensorIn::F32(s));
-            }
-            let mut outs = engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
-            let g_params: Vec<Vec<f32>> = outs
-                .split_off(1)
-                .into_iter()
-                .map(|t| t.f32())
-                .collect::<Result<_>>()?;
-            let g_h1 = outs.remove(0).f32()?;
-
-            // update server params, broadcast g_h1 to all holders
-            for (m, g) in params.server.iter_mut().zip(&g_params) {
-                up.step_mat_f32(m, g);
-            }
-            up.tick();
-            let g_h1_rows = g_h1[..rows * h1_dim].to_vec();
-            for j in 0..n_holders {
-                p.send(ids::holder(j), Payload::F32s(g_h1_rows.clone()))?;
-            }
-
-            // loss bookkeeping (A reports its scalar loss for monitoring)
-            let loss = p.recv(a)?.into_f64s()?[0];
-            loss_sum += loss;
-        }
+        })?;
         epoch_times.push(p.now());
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
     }
@@ -325,6 +364,16 @@ fn server_role(
 // ---------------------------------------------------------------------------
 // Holder role
 // ---------------------------------------------------------------------------
+
+/// Value-independent SS material staged by the `Prefetch` step: the encoded
+/// feature block and the pre-drawn share masks (drawn in schedule order, so
+/// the RNG transcript is depth-invariant).
+struct SsPre {
+    xblk: MatF64,
+    x_ring: RingMat,
+    r_x: RingMat,
+    r_t: RingMat,
+}
 
 #[allow(clippy::too_many_arguments)]
 fn holder_role(
@@ -387,185 +436,265 @@ fn holder_role(
     for _epoch in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        for &(s, rows) in plan {
-            // my feature block for this batch
-            let xblk = MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
-
-            if he {
-                // ---- Algorithm 3 (packed + pool-parallel) ----
-                let pk = pk.as_ref().unwrap();
-                let pool = pool.as_mut().unwrap();
-                let packing = packing.as_ref().unwrap();
-                // local plaintext product, fixed-point encoded and packed
-                // `slots` values per Paillier plaintext
-                let prod = xblk.matmul(&theta_j); // rows x h
-                let vals: Vec<i64> =
-                    prod.data.iter().map(|&v| crate::fixed::encode(v) as i64).collect();
-                let n_cts = packing.ct_count(vals.len());
-                pool.refill_parallel(&mut rng, n_cts, &exec);
-                let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
-                let out_cts = if j == 0 {
-                    mine
-                } else {
-                    // running ciphertext sum from holder j-1 (flat block)
-                    let (data, ct_bytes, count) =
-                        p.recv(ids::holder(j - 1))?.into_cipher_block()?;
-                    if count != n_cts {
-                        return Err(Error::Protocol(format!(
-                            "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
-                        )));
-                    }
-                    let prev = pack::block_to_cts(&data, ct_bytes, count)?;
-                    pack::add_batch(pk, &prev, &mine, &exec)?
-                };
-                let next = if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
-                let ct_bytes = pk.ciphertext_bytes();
-                let data = pack::cts_to_block(&out_cts, ct_bytes);
-                p.send(next, Payload::CipherBlock { data, ct_bytes, count: n_cts })?;
-            } else {
-                // ---- Algorithm 2 ----
-                if is_a || is_b {
-                    // 1) own block shares (chunk-parallel fixed-point encode)
-                    let x_ring = RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
-                    let t_ring = RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
-                    let (x_mine, x_theirs) = share2(&mut rng, &x_ring);
-                    let (t_mine, t_theirs) = share2(&mut rng, &t_ring);
-                    let mut buf = x_theirs.data;
-                    buf.extend_from_slice(&t_theirs.data);
-                    p.send(peer, Payload::U64s(buf))?;
-                    let theirs = p.recv_u64s(peer)?;
-                    let dpeer = split.width(if is_a { 1 } else { 0 });
-                    if theirs.len() != rows * dpeer + dpeer * h {
-                        return Err(Error::Protocol("holder: peer share size".into()));
-                    }
-                    let x_peer = RingMat::from_data(rows, dpeer, theirs[..rows * dpeer].to_vec());
-                    let t_peer = RingMat::from_data(dpeer, h, theirs[rows * dpeer..].to_vec());
-
-                    // 2) shares of the extra holders' blocks (j >= 2)
-                    let mut x_parts: Vec<(usize, RingMat)> = vec![
-                        (j, x_mine),
-                        (if is_a { 1 } else { 0 }, x_peer),
-                    ];
-                    let mut t_parts: Vec<(usize, RingMat)> = vec![
-                        (j, t_mine),
-                        (if is_a { 1 } else { 0 }, t_peer),
-                    ];
-                    for extra in 2..n_holders {
-                        let dx = split.width(extra);
-                        let buf = p.recv_u64s(ids::holder(extra))?;
-                        if buf.len() != rows * dx + dx * h {
-                            return Err(Error::Protocol("holder: extra share size".into()));
-                        }
-                        x_parts.push((extra, RingMat::from_data(rows, dx, buf[..rows * dx].to_vec())));
-                        t_parts.push((extra, RingMat::from_data(dx, h, buf[rows * dx..].to_vec())));
-                    }
-                    // concat in holder order (theta rows stack in the same order)
-                    x_parts.sort_by_key(|(i, _)| *i);
-                    t_parts.sort_by_key(|(i, _)| *i);
-                    let mut x_share = x_parts.remove(0).1;
-                    for (_, m) in x_parts {
-                        x_share = x_share.concat_cols(&m);
-                    }
-                    let mut t_share = t_parts.remove(0).1;
-                    for (_, m) in t_parts {
-                        t_share = t_share.concat_rows(&m);
-                    }
-                    debug_assert_eq!(x_share.shape(), (rows, total_d));
-                    debug_assert_eq!(t_share.shape(), (total_d, h));
-
-                    // 3) triple + Beaver matmul through the Pallas kernel
-                    let triple = if is_a {
-                        dealer::request_mat_triple(p, ids::DEALER, rows, total_d, h)?
+        // staged SS material (FIFO by batch index) and the in-flight
+        // feature block handed from Submit to Complete
+        let mut pre: VecDeque<SsPre> = VecDeque::new();
+        let mut inflight: Option<MatF64> = None;
+        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+            let (s, rows) = (b.start, b.rows);
+            let tag = b.tag();
+            match step {
+                Step::Prefetch => {
+                    p.set_stage("prefetch");
+                    if he {
+                        // the Paillier nonce exponentiations are the
+                        // dominant holder cost and value-independent:
+                        // refill for this batch ahead of demand
+                        let packing = packing.as_ref().unwrap();
+                        let n_cts = packing.ct_count(rows * h);
+                        pool.as_mut().unwrap().refill_parallel(&mut rng, n_cts, &exec);
                     } else {
-                        dealer::recv_mat_triple_b(p, ids::DEALER, rows, total_d, h)?
-                    };
-                    let eng = engine.as_mut().unwrap();
-                    // engine is behind &mut — wrap in RefCell for the closure
-                    let eng_cell = std::cell::RefCell::new(eng);
-                    let art = ring_art.clone();
-                    // the AOT Pallas kernel is the default hot path; the
-                    // §Perf pass measured a 3.5-5.5x interpret-mode CPU
-                    // overhead vs the native ring matmul, selectable via
-                    // SPNN_NATIVE_MM=1 (EXPERIMENTS.md §Perf)
-                    let native = std::env::var("SPNN_NATIVE_MM").is_ok();
-                    let mm = move |x: &RingMat, w: &RingMat| -> RingMat {
-                        if native {
-                            x.matmul(w)
-                        } else {
-                            eng_cell
-                                .borrow_mut()
-                                .ring_matmul(&art, x, w)
-                                .expect("ring matmul artifact")
+                        // encode the feature block and pre-draw the share
+                        // masks; A also fires the dealer triple request so
+                        // the dealer's matmul overlaps the online path
+                        let xblk =
+                            MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
+                        let x_ring =
+                            RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
+                        let r_x = RingMat::random(&mut rng, rows, dj);
+                        let r_t = RingMat::random(&mut rng, dj, h);
+                        if is_a {
+                            dealer::send_request_tagged(
+                                p,
+                                ids::DEALER,
+                                dealer::Req::Mat(rows, total_d, h),
+                                tag,
+                            )?;
                         }
+                        pre.push_back(SsPre { xblk, x_ring, r_x, r_t });
+                    }
+                    Ok(())
+                }
+                Step::Submit => {
+                    let xblk = if he {
+                        // ---- Algorithm 3 (packed + pool-parallel) ----
+                        p.set_stage("he-chain");
+                        let xblk =
+                            MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
+                        let pk = pk.as_ref().unwrap();
+                        let pool = pool.as_mut().unwrap();
+                        let packing = packing.as_ref().unwrap();
+                        // local plaintext product, fixed-point encoded and
+                        // packed `slots` values per Paillier plaintext
+                        let prod = xblk.matmul(&theta_j); // rows x h
+                        let vals: Vec<i64> = prod
+                            .data
+                            .iter()
+                            .map(|&v| crate::fixed::encode(v) as i64)
+                            .collect();
+                        let n_cts = packing.ct_count(vals.len());
+                        let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
+                        let out_cts = if j == 0 {
+                            mine
+                        } else {
+                            // running ciphertext sum from holder j-1
+                            let (data, ct_bytes, count) = p
+                                .recv_tagged(ids::holder(j - 1), tag)?
+                                .into_cipher_block()?;
+                            if count != n_cts {
+                                return Err(Error::Protocol(format!(
+                                    "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
+                                )));
+                            }
+                            let prev = pack::block_to_cts(&data, ct_bytes, count)?;
+                            pack::add_batch(pk, &prev, &mine, &exec)?
+                        };
+                        let next =
+                            if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
+                        let ct_bytes = pk.ciphertext_bytes();
+                        let data = pack::cts_to_block(&out_cts, ct_bytes);
+                        p.send_tagged(
+                            next,
+                            tag,
+                            Payload::CipherBlock { data, ct_bytes, count: n_cts },
+                        )?;
+                        xblk
+                    } else {
+                        // ---- Algorithm 2 ----
+                        p.set_stage("share-mm");
+                        let SsPre { xblk, x_ring, r_x, r_t } =
+                            pre.pop_front().expect("prefetch before submit");
+                        let t_ring =
+                            RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
+                        if is_a || is_b {
+                            // 1) own block shares (masks pre-drawn)
+                            let (x_mine, x_theirs) = share2_from_mask(&x_ring, r_x);
+                            let (t_mine, t_theirs) = share2_from_mask(&t_ring, r_t);
+                            let mut buf = x_theirs.data;
+                            buf.extend_from_slice(&t_theirs.data);
+                            p.send_tagged(peer, tag, Payload::U64s(buf))?;
+                            let theirs = p.recv_tagged(peer, tag)?.into_u64s()?;
+                            let dpeer = split.width(if is_a { 1 } else { 0 });
+                            if theirs.len() != rows * dpeer + dpeer * h {
+                                return Err(Error::Protocol("holder: peer share size".into()));
+                            }
+                            let x_peer =
+                                RingMat::from_data(rows, dpeer, theirs[..rows * dpeer].to_vec());
+                            let t_peer =
+                                RingMat::from_data(dpeer, h, theirs[rows * dpeer..].to_vec());
+
+                            // 2) shares of the extra holders' blocks (j >= 2)
+                            let mut x_parts: Vec<(usize, RingMat)> = vec![
+                                (j, x_mine),
+                                (if is_a { 1 } else { 0 }, x_peer),
+                            ];
+                            let mut t_parts: Vec<(usize, RingMat)> = vec![
+                                (j, t_mine),
+                                (if is_a { 1 } else { 0 }, t_peer),
+                            ];
+                            for extra in 2..n_holders {
+                                let dx = split.width(extra);
+                                let buf =
+                                    p.recv_tagged(ids::holder(extra), tag)?.into_u64s()?;
+                                if buf.len() != rows * dx + dx * h {
+                                    return Err(Error::Protocol(
+                                        "holder: extra share size".into(),
+                                    ));
+                                }
+                                x_parts.push((
+                                    extra,
+                                    RingMat::from_data(rows, dx, buf[..rows * dx].to_vec()),
+                                ));
+                                t_parts.push((
+                                    extra,
+                                    RingMat::from_data(dx, h, buf[rows * dx..].to_vec()),
+                                ));
+                            }
+                            // concat in holder order (theta rows stack the same)
+                            x_parts.sort_by_key(|(i, _)| *i);
+                            t_parts.sort_by_key(|(i, _)| *i);
+                            let mut x_share = x_parts.remove(0).1;
+                            for (_, m) in x_parts {
+                                x_share = x_share.concat_cols(&m);
+                            }
+                            let mut t_share = t_parts.remove(0).1;
+                            for (_, m) in t_parts {
+                                t_share = t_share.concat_rows(&m);
+                            }
+                            debug_assert_eq!(x_share.shape(), (rows, total_d));
+                            debug_assert_eq!(t_share.shape(), (total_d, h));
+
+                            // 3) triple (requested at prefetch) + Beaver
+                            // matmul through the Pallas kernel
+                            let triple = if is_a {
+                                dealer::recv_mat_triple_a(
+                                    p, ids::DEALER, rows, total_d, h, tag,
+                                )?
+                            } else {
+                                dealer::recv_mat_triple_b_tagged(
+                                    p, ids::DEALER, rows, total_d, h, tag,
+                                )?
+                            };
+                            let eng = engine.as_mut().unwrap();
+                            // engine is behind &mut — wrap in RefCell for the closure
+                            let eng_cell = std::cell::RefCell::new(eng);
+                            let art = ring_art.clone();
+                            // the AOT Pallas kernel is the default hot path; the
+                            // §Perf pass measured a 3.5-5.5x interpret-mode CPU
+                            // overhead vs the native ring matmul, selectable via
+                            // SPNN_NATIVE_MM=1 (EXPERIMENTS.md §Perf)
+                            let native = std::env::var("SPNN_NATIVE_MM").is_ok();
+                            let mm = move |x: &RingMat, w: &RingMat| -> RingMat {
+                                if native {
+                                    x.matmul(w)
+                                } else {
+                                    eng_cell
+                                        .borrow_mut()
+                                        .ring_matmul(&art, x, w)
+                                        .expect("ring matmul artifact")
+                                }
+                            };
+                            let mut z = beaver_matmul(
+                                p, peer, role, &x_share, &t_share, &triple, &mm,
+                            )?;
+                            // 4) truncate my share, ship to the server
+                            trunc_share_mat(&mut z, role);
+                            p.send_tagged(ids::SERVER, tag, Payload::U64s(z.data))?;
+                        } else {
+                            // extra holder: share my block to A and B
+                            let (xa, xb) = share2_from_mask(&x_ring, r_x);
+                            let (ta, tb) = share2_from_mask(&t_ring, r_t);
+                            let mut buf_a = xa.data;
+                            buf_a.extend_from_slice(&ta.data);
+                            p.send_tagged(ids::holder(0), tag, Payload::U64s(buf_a))?;
+                            let mut buf_b = xb.data;
+                            buf_b.extend_from_slice(&tb.data);
+                            p.send_tagged(ids::holder(1), tag, Payload::U64s(buf_b))?;
+                        }
+                        xblk
                     };
-                    let mut z =
-                        beaver_matmul(p, peer, role, &x_share, &t_share, &triple, &mm)?;
-                    // 4) truncate my share, ship to the server
-                    trunc_share_mat(&mut z, role);
-                    p.send(ids::SERVER, Payload::U64s(z.data))?;
-                } else {
-                    // extra holder: share my block to A and B
-                    let x_ring = RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
-                    let t_ring = RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
-                    let (xa, xb) = share2(&mut rng, &x_ring);
-                    let (ta, tb) = share2(&mut rng, &t_ring);
-                    let mut buf_a = xa.data;
-                    buf_a.extend_from_slice(&ta.data);
-                    p.send(ids::holder(0), Payload::U64s(buf_a))?;
-                    let mut buf_b = xb.data;
-                    buf_b.extend_from_slice(&tb.data);
-                    p.send(ids::holder(1), Payload::U64s(buf_b))?;
+                    inflight = Some(xblk);
+                    Ok(())
+                }
+                Step::Complete => {
+                    p.set_stage("label-bwd");
+                    let xblk = inflight.take().expect("submit before complete");
+                    // ---- label computations on A (§4.5) ----
+                    if is_a {
+                        let hl = p.recv_tagged(ids::SERVER, tag)?.into_f32s()?;
+                        let mut hl_pad = vec![0.0f32; cap * hl_dim];
+                        hl_pad[..rows * hl_dim].copy_from_slice(&hl);
+                        let y = yj.as_ref().unwrap();
+                        let mut y_pad = vec![0.0f32; cap];
+                        y_pad[..rows].copy_from_slice(&y[s..s + rows]);
+                        let mut mask = vec![0.0f32; cap];
+                        for m in mask.iter_mut().take(rows) {
+                            *m = 1.0;
+                        }
+                        let wy_f32 = wy.to_f32();
+                        let by_f32 = by.to_f32();
+                        let eng = engine.as_mut().unwrap();
+                        let outs = eng.execute(
+                            &cfg.artifact("label_grad", cap),
+                            &[
+                                TensorIn::F32(&hl_pad),
+                                TensorIn::F32(&y_pad),
+                                TensorIn::F32(&mask),
+                                TensorIn::F32(&wy_f32),
+                                TensorIn::F32(&by_f32),
+                            ],
+                        )?;
+                        let loss = outs[1].scalar()?;
+                        let g_hl = outs[2].clone().f32()?;
+                        let g_wy = outs[3].clone().f32()?;
+                        let g_by = outs[4].clone().f32()?;
+                        up.step_mat_f32(&mut wy, &g_wy);
+                        up.step_mat_f32(&mut by, &g_by);
+                        p.send_tagged(
+                            ids::SERVER,
+                            tag,
+                            Payload::F32s(g_hl[..rows * hl_dim].to_vec()),
+                        )?;
+                        loss_sum += loss;
+                        // loss scalar to server for epoch monitoring (f64
+                        // channel, sent after g_hl so the server can overlap
+                        // the backward)
+                        p.send_tagged(ids::SERVER, tag, Payload::F64s(vec![loss]))?;
+                    }
+
+                    // ---- local first-layer backward (§4.6) ----
+                    let g_h1 = p.recv_tagged(ids::SERVER, tag)?.into_f32s()?;
+                    if g_h1.len() != rows * h {
+                        return Err(Error::Protocol("holder: g_h1 size".into()));
+                    }
+                    let g_h1_m = MatF64::from_f32(rows, h, &g_h1);
+                    let g_theta = xblk.transpose().matmul(&g_h1_m);
+                    up.step_mat_f32(&mut theta_j, &g_theta.to_f32());
+                    up.tick();
+                    Ok(())
                 }
             }
-
-            // ---- label computations on A (§4.5) ----
-            if is_a {
-                let hl = p.recv_f32s(ids::SERVER)?;
-                let mut hl_pad = vec![0.0f32; cap * hl_dim];
-                hl_pad[..rows * hl_dim].copy_from_slice(&hl);
-                let y = yj.as_ref().unwrap();
-                let mut y_pad = vec![0.0f32; cap];
-                y_pad[..rows].copy_from_slice(&y[s..s + rows]);
-                let mut mask = vec![0.0f32; cap];
-                for m in mask.iter_mut().take(rows) {
-                    *m = 1.0;
-                }
-                let wy_f32 = wy.to_f32();
-                let by_f32 = by.to_f32();
-                let eng = engine.as_mut().unwrap();
-                let outs = eng.execute(
-                    &cfg.artifact("label_grad", cap),
-                    &[
-                        TensorIn::F32(&hl_pad),
-                        TensorIn::F32(&y_pad),
-                        TensorIn::F32(&mask),
-                        TensorIn::F32(&wy_f32),
-                        TensorIn::F32(&by_f32),
-                    ],
-                )?;
-                let loss = outs[1].scalar()?;
-                let g_hl = outs[2].clone().f32()?;
-                let g_wy = outs[3].clone().f32()?;
-                let g_by = outs[4].clone().f32()?;
-                up.step_mat_f32(&mut wy, &g_wy);
-                up.step_mat_f32(&mut by, &g_by);
-                p.send(ids::SERVER, Payload::F32s(g_hl[..rows * hl_dim].to_vec()))?;
-                loss_sum += loss;
-                // loss scalar to server for epoch monitoring (f64 channel)
-                // (sent after g_hl so the server can overlap the backward)
-                p.send(ids::SERVER, Payload::F64s(vec![loss]))?;
-            }
-
-            // ---- local first-layer backward (§4.6) ----
-            let g_h1 = p.recv_f32s(ids::SERVER)?;
-            if g_h1.len() != rows * h {
-                return Err(Error::Protocol("holder: g_h1 size".into()));
-            }
-            let g_h1_m = MatF64::from_f32(rows, h, &g_h1);
-            let g_theta = xblk.transpose().matmul(&g_h1_m);
-            up.step_mat_f32(&mut theta_j, &g_theta.to_f32());
-            up.tick();
-        }
+        })?;
         if is_a {
             train_losses.push(loss_sum / plan.len() as f64);
         }
@@ -597,6 +726,7 @@ mod tests {
     use super::*;
     use crate::config::FRAUD;
     use crate::data::{synth_fraud, SynthOpts};
+    use crate::rng::{Pcg64, Rng64};
 
     fn artifacts_ready() -> bool {
         crate::runtime::default_artifact_dir().join("manifest.txt").exists()
@@ -607,6 +737,33 @@ mod tests {
         assert_eq!(batch_plan(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
         assert_eq!(batch_plan(4, 4), vec![(0, 4)]);
         assert_eq!(batch_plan(3, 10), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn batch_plan_properties() {
+        // property sweep: exact cover, contiguity, no empty batches, every
+        // batch but the last full, expected batch count
+        let mut rng = Pcg64::seed_from_u64(42);
+        for _ in 0..300 {
+            let n = (rng.next_u64() % 5000) as usize + 1;
+            let batch = (rng.next_u64() % 600) as usize + 1;
+            let plan = batch_plan(n, batch);
+            let mut cursor = 0usize;
+            for &(s, rows) in &plan {
+                assert_eq!(s, cursor, "gap or overlap at n={n} batch={batch}");
+                assert!(rows >= 1, "empty batch at n={n} batch={batch}");
+                assert!(rows <= batch, "oversized batch at n={n} batch={batch}");
+                cursor += rows;
+            }
+            assert_eq!(cursor, n, "plan does not cover n={n} batch={batch}");
+            for &(_, rows) in &plan[..plan.len() - 1] {
+                assert_eq!(rows, batch, "non-final partial batch n={n} batch={batch}");
+            }
+            assert_eq!(plan.len(), n.div_ceil(batch));
+            // last batch is the remainder (or a full batch)
+            let want_last = if n % batch == 0 { batch } else { n % batch };
+            assert_eq!(plan.last().unwrap().1, want_last);
+        }
     }
 
     #[test]
@@ -653,6 +810,7 @@ mod tests {
                 "loss diverged: {:?}", rep.train_losses);
         assert!(rep.auc > 0.6, "AUC too low: {}", rep.auc);
         assert!(rep.online_bytes > 0 && rep.offline_bytes > 0);
+        assert!(!rep.stages.is_empty(), "stage breakdown missing");
     }
 
     #[test]
@@ -711,5 +869,36 @@ mod tests {
             r1.train_losses[0],
             r2.train_losses[0]
         );
+    }
+
+    #[test]
+    fn spnn_depths_are_transcript_equal() {
+        // ISSUE 2 acceptance: with any pipeline depth the final model
+        // weights are bit-identical (same digest) and the loss transcript
+        // matches — the pipeline may only move value-independent work.
+        if !artifacts_ready() {
+            return;
+        }
+        let ds = synth_fraud(SynthOpts::small(900));
+        let (train, test) = ds.split(0.8, 8);
+        for he in [false, true] {
+            let mut runs = Vec::new();
+            for depth in [1usize, 2, 4] {
+                let tc = TrainConfig {
+                    batch: 256,
+                    epochs: 1,
+                    paillier_bits: 256,
+                    pipeline_depth: depth,
+                    ..Default::default()
+                };
+                let rep = Spnn { he }
+                    .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                    .unwrap();
+                runs.push((rep.weight_digest, rep.train_losses.clone()));
+            }
+            assert_ne!(runs[0].0, 0, "digest not populated (he={he})");
+            assert_eq!(runs[0], runs[1], "depth 2 diverged from depth 1 (he={he})");
+            assert_eq!(runs[0], runs[2], "depth 4 diverged from depth 1 (he={he})");
+        }
     }
 }

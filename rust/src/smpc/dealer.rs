@@ -23,14 +23,50 @@
 //! expands its input-mask shares from its seed and receives only the
 //! product/bit *corrections* explicitly — the information-theoretic minimum
 //! for a dealer that must fix `W = U·V` / `c = a∧b` / bit-consistency.
+//!
+//! **Streaming ahead of demand:** requests and replies carry a batch tag
+//! (echoed verbatim by the dealer), so the pipelined trainers issue the
+//! requests for future batches from their `Step::Prefetch` stage
+//! (`protocols::common::run_pipeline`) and pull the replies with
+//! `recv_tagged` at point of use. The dealer computes while the parties'
+//! online critical path runs, and its early departure stamps let the
+//! netsim clock absorb the preprocessing into the parties' wait windows
+//! instead of serializing a request round-trip into every batch.
 
 use super::boolean::{words_for, BitMat, BoolBundle, DaBits, EdaBits, TripleBank};
 use super::matmul::ElemTriple;
 use super::ring::RingMat;
 use super::triple::{expand_triple_shares, expand_uv, MatTriple};
-use crate::netsim::{NetPort, PartyId, Payload, Phase};
+use crate::netsim::{NetPort, PartyId, Payload, Phase, NO_TAG};
 use crate::rng::{ChaChaRng, Rng64};
 use crate::{Error, Result};
+
+/// One preprocessing request (the wire strings in [`serve`]'s protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Req {
+    /// Matrix triple for an `(m x k) @ (k x n)` Beaver multiplication.
+    Mat(usize, usize, usize),
+    /// Elementwise (Hadamard) triple over `len` lanes.
+    Elem(usize),
+    /// Boolean bundle (edaBit + AND bank + daBits) for one DReLU batch.
+    Bool(usize),
+}
+
+/// A-side: fire one tagged request without blocking for the reply
+/// (prefetch stage). The dealer echoes the tag on every reply message.
+pub fn send_request_tagged(
+    port: &mut NetPort,
+    dealer: PartyId,
+    req: Req,
+    tag: u64,
+) -> Result<()> {
+    let s = match req {
+        Req::Mat(m, k, n) => format!("mat:{m},{k},{n}"),
+        Req::Elem(len) => format!("elem:{len}"),
+        Req::Bool(lanes) => format!("bool:{lanes}"),
+    };
+    port.send_tagged_phase(dealer, tag, Payload::Control(s), Phase::Offline)
+}
 
 // Domain-separation nonces for A-side / B-side bundle expansions.
 const NONCE_ELEM_U: u64 = 0x454c_454d_5f55;
@@ -52,10 +88,16 @@ fn expand_vec(seed: [u8; 32], nonce: u64, n: usize) -> Vec<u64> {
 // ---------------------------------------------------------------------------
 
 /// Serve preprocessing requests until `Control("stop")`.
+///
+/// Every reply is tagged with the request's tag, so prefetched requests
+/// for several future batches can be outstanding at once and the parties
+/// reassemble them per batch with `recv_tagged`.
 pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()> {
     let mut rng = ChaChaRng::seed_from_u64(seed);
+    port.set_stage("dealer");
     loop {
-        let req = port.recv(a)?.into_control()?;
+        let (tag, payload) = port.recv_any_tag(a)?;
+        let req = payload.into_control()?;
         let (kind, args) = req.split_once(':').unwrap_or((req.as_str(), ""));
         match kind {
             "stop" => return Ok(()),
@@ -69,9 +111,9 @@ pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()
                 let u = ua.add(&tb.u);
                 let v = va.add(&tb.v);
                 let w_a = u.matmul(&v).sub(&tb.w);
-                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
-                port.send_phase(a, Payload::U64s(w_a.data), Phase::Offline)?;
-                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::U64s(w_a.data), Phase::Offline)?;
+                port.send_tagged_phase(b, tag, Payload::Seed(seed_b), Phase::Offline)?;
             }
             "elem" => {
                 let d = parse_dims(args, 1)?;
@@ -94,9 +136,9 @@ pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()
                         u.wrapping_mul(v).wrapping_sub(wb[i])
                     })
                     .collect();
-                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
-                port.send_phase(a, Payload::U64s(w_a), Phase::Offline)?;
-                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::U64s(w_a), Phase::Offline)?;
+                port.send_tagged_phase(b, tag, Payload::Seed(seed_b), Phase::Offline)?;
             }
             "bool" => {
                 let d = parse_dims(args, 1)?;
@@ -146,12 +188,12 @@ pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()
                     .map(|(x, y)| x ^ y)
                     .collect();
 
-                port.send_phase(a, Payload::Seed(seed_a), Phase::Offline)?;
-                port.send_phase(a, Payload::Bits(eda_bits_a.words), Phase::Offline)?;
-                port.send_phase(a, Payload::Bits(c_a), Phase::Offline)?;
-                port.send_phase(a, Payload::U64s(dab_arith_a), Phase::Offline)?;
-                port.send_phase(a, Payload::Bits(dab_bits_a), Phase::Offline)?;
-                port.send_phase(b, Payload::Seed(seed_b), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Seed(seed_a), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Bits(eda_bits_a.words), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Bits(c_a), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::U64s(dab_arith_a), Phase::Offline)?;
+                port.send_tagged_phase(a, tag, Payload::Bits(dab_bits_a), Phase::Offline)?;
+                port.send_tagged_phase(b, tag, Payload::Seed(seed_b), Phase::Offline)?;
             }
             other => {
                 return Err(Error::Protocol(format!("dealer: unknown request {other:?}")));
@@ -172,7 +214,23 @@ fn parse_dims(s: &str, n: usize) -> Result<Vec<usize>> {
 // Party-side
 // ---------------------------------------------------------------------------
 
-/// A-side (role 0): request + receive one matrix triple.
+/// A-side (role 0): receive one matrix triple previously requested with
+/// [`send_request_tagged`] (`Req::Mat`) under `tag`.
+pub fn recv_mat_triple_a(
+    port: &mut NetPort,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+    tag: u64,
+) -> Result<MatTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
+    let (u, v) = expand_uv(seed, m, k, n);
+    Ok(MatTriple { u, v, w: RingMat::from_data(m, n, w) })
+}
+
+/// A-side (role 0): request + receive one matrix triple (lock-step path).
 pub fn request_mat_triple(
     port: &mut NetPort,
     dealer: PartyId,
@@ -180,14 +238,24 @@ pub fn request_mat_triple(
     k: usize,
     n: usize,
 ) -> Result<MatTriple> {
-    port.send_phase(dealer, Payload::Control(format!("mat:{m},{k},{n}")), Phase::Offline)?;
-    let seed = port.recv(dealer)?.into_seed()?;
-    let w = port.recv(dealer)?.into_u64s()?;
-    let (u, v) = expand_uv(seed, m, k, n);
-    Ok(MatTriple { u, v, w: RingMat::from_data(m, n, w) })
+    send_request_tagged(port, dealer, Req::Mat(m, k, n), NO_TAG)?;
+    recv_mat_triple_a(port, dealer, m, k, n, NO_TAG)
 }
 
-/// B-side (role 1): receive the matching matrix triple.
+/// B-side (role 1): receive the matching matrix triple under `tag`.
+pub fn recv_mat_triple_b_tagged(
+    port: &mut NetPort,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+    tag: u64,
+) -> Result<MatTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    Ok(expand_triple_shares(seed, m, k, n))
+}
+
+/// B-side (role 1): receive the matching matrix triple (lock-step path).
 pub fn recv_mat_triple_b(
     port: &mut NetPort,
     dealer: PartyId,
@@ -195,15 +263,18 @@ pub fn recv_mat_triple_b(
     k: usize,
     n: usize,
 ) -> Result<MatTriple> {
-    let seed = port.recv(dealer)?.into_seed()?;
-    Ok(expand_triple_shares(seed, m, k, n))
+    recv_mat_triple_b_tagged(port, dealer, m, k, n, NO_TAG)
 }
 
-/// A-side: request + receive an elementwise triple.
-pub fn request_elem_triple(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
-    port.send_phase(dealer, Payload::Control(format!("elem:{len}")), Phase::Offline)?;
-    let seed = port.recv(dealer)?.into_seed()?;
-    let w = port.recv(dealer)?.into_u64s()?;
+/// A-side: receive an elementwise triple requested under `tag`.
+pub fn recv_elem_triple_a(
+    port: &mut NetPort,
+    dealer: PartyId,
+    len: usize,
+    tag: u64,
+) -> Result<ElemTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
     Ok(ElemTriple {
         u: expand_vec(seed, NONCE_ELEM_U, len),
         v: expand_vec(seed, NONCE_ELEM_V, len),
@@ -211,9 +282,20 @@ pub fn request_elem_triple(port: &mut NetPort, dealer: PartyId, len: usize) -> R
     })
 }
 
-/// B-side: receive the matching elementwise triple.
-pub fn recv_elem_triple_b(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
-    let seed = port.recv(dealer)?.into_seed()?;
+/// A-side: request + receive an elementwise triple (lock-step path).
+pub fn request_elem_triple(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
+    send_request_tagged(port, dealer, Req::Elem(len), NO_TAG)?;
+    recv_elem_triple_a(port, dealer, len, NO_TAG)
+}
+
+/// B-side: receive the matching elementwise triple under `tag`.
+pub fn recv_elem_triple_b_tagged(
+    port: &mut NetPort,
+    dealer: PartyId,
+    len: usize,
+    tag: u64,
+) -> Result<ElemTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
     Ok(ElemTriple {
         u: expand_vec(seed, NONCE_ELEM_U, len),
         v: expand_vec(seed, NONCE_ELEM_V, len),
@@ -221,17 +303,26 @@ pub fn recv_elem_triple_b(port: &mut NetPort, dealer: PartyId, len: usize) -> Re
     })
 }
 
-/// A-side: request + receive a boolean bundle (edaBit + AND bank + daBits)
-/// sized for one DReLU batch over `lanes` values.
-pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
-    port.send_phase(dealer, Payload::Control(format!("bool:{lanes}")), Phase::Offline)?;
+/// B-side: receive the matching elementwise triple (lock-step path).
+pub fn recv_elem_triple_b(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
+    recv_elem_triple_b_tagged(port, dealer, len, NO_TAG)
+}
+
+/// A-side: receive a boolean bundle (edaBit + AND bank + daBits) requested
+/// under `tag`, sized for one DReLU batch over `lanes` values.
+pub fn recv_bool_bundle_a(
+    port: &mut NetPort,
+    dealer: PartyId,
+    lanes: usize,
+    tag: u64,
+) -> Result<BoolBundle> {
     let words = super::boolean::drelu_triple_words(lanes);
     let wpl = words_for(lanes);
-    let seed = port.recv(dealer)?.into_seed()?;
-    let eda_bits = port.recv(dealer)?.into_bits()?;
-    let c = port.recv(dealer)?.into_bits()?;
-    let dab_arith = port.recv(dealer)?.into_u64s()?;
-    let dab_bits = port.recv(dealer)?.into_bits()?;
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let eda_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
+    let c = port.recv_tagged(dealer, tag)?.into_bits()?;
+    let dab_arith = port.recv_tagged(dealer, tag)?.into_u64s()?;
+    let dab_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
     if eda_bits.len() != 64 * wpl || c.len() != words || dab_arith.len() != lanes {
         return Err(Error::Protocol("bool bundle size mismatch".into()));
     }
@@ -249,11 +340,28 @@ pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) ->
     })
 }
 
-/// B-side: expand the matching boolean bundle from the dealer seed.
-pub fn recv_bool_bundle_b(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
-    let seed = port.recv(dealer)?.into_seed()?;
+/// A-side: request + receive a boolean bundle (lock-step path).
+pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+    send_request_tagged(port, dealer, Req::Bool(lanes), NO_TAG)?;
+    recv_bool_bundle_a(port, dealer, lanes, NO_TAG)
+}
+
+/// B-side: expand the matching boolean bundle from the dealer seed
+/// received under `tag`.
+pub fn recv_bool_bundle_b_tagged(
+    port: &mut NetPort,
+    dealer: PartyId,
+    lanes: usize,
+    tag: u64,
+) -> Result<BoolBundle> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
     let words = super::boolean::drelu_triple_words(lanes);
     Ok(expand_bool_b(seed, lanes, words))
+}
+
+/// B-side: expand the matching boolean bundle (lock-step path).
+pub fn recv_bool_bundle_b(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+    recv_bool_bundle_b_tagged(port, dealer, lanes, NO_TAG)
 }
 
 /// Expand party B's full boolean bundle from a seed.
@@ -375,6 +483,35 @@ mod tests {
         for i in 0..9 {
             assert_eq!(z0[i].wrapping_add(z1[i]), xc.data[i].wrapping_mul(yc.data[i]));
         }
+    }
+
+    #[test]
+    fn tagged_prefetch_streams_ahead_of_demand() {
+        // A fires the requests for two "batches" up front (prefetch), then
+        // consumes the replies in REVERSE order; the reorder buffers must
+        // hand every party the right material for each tag.
+        let (ta, tb, _) = run_with_dealer(
+            move |p| {
+                send_request_tagged(p, 2, Req::Mat(5, 3, 4), 0).unwrap();
+                send_request_tagged(p, 2, Req::Mat(4, 2, 2), 1).unwrap();
+                let t1 = recv_mat_triple_a(p, 2, 4, 2, 2, 1).unwrap();
+                let t0 = recv_mat_triple_a(p, 2, 5, 3, 4, 0).unwrap();
+                (t0, t1)
+            },
+            move |p| {
+                let t1 = recv_mat_triple_b_tagged(p, 2, 4, 2, 2, 1).unwrap();
+                let t0 = recv_mat_triple_b_tagged(p, 2, 5, 3, 4, 0).unwrap();
+                (t0, t1)
+            },
+        );
+        // each reconstructed triple must satisfy W = U · V
+        for (a, b) in [(&ta.0, &tb.0), (&ta.1, &tb.1)] {
+            let u = reconstruct2(&a.u, &b.u);
+            let v = reconstruct2(&a.v, &b.v);
+            let w = reconstruct2(&a.w, &b.w);
+            assert_eq!(u.matmul(&v), w, "tagged triple is inconsistent");
+        }
+        assert_ne!(ta.0.u.shape(), ta.1.u.shape());
     }
 
     #[test]

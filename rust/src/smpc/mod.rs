@@ -30,6 +30,6 @@ pub mod trunc;
 
 pub use matmul::beaver_matmul;
 pub use ring::RingMat;
-pub use share::{reconstruct2, share2, share_n};
+pub use share::{reconstruct2, share2, share2_from_mask, share_n};
 pub use triple::{MatTriple, TripleGen};
 pub use trunc::trunc_share_mat;

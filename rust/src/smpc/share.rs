@@ -7,6 +7,15 @@ use crate::rng::Rng64;
 /// Either share alone is uniformly distributed (perfect secrecy).
 pub fn share2<R: Rng64>(rng: &mut R, x: &RingMat) -> (RingMat, RingMat) {
     let r = RingMat::random(rng, x.rows, x.cols);
+    share2_from_mask(x, r)
+}
+
+/// [`share2`] with a pre-drawn mask: the mask draw is value-independent,
+/// so pipelined parties draw `r` in schedule order during prefetch and
+/// bind the value (`x - r`) later — bit-identical to [`share2`] when `r`
+/// comes from the same RNG stream position.
+pub fn share2_from_mask(x: &RingMat, r: RingMat) -> (RingMat, RingMat) {
+    assert_eq!(x.shape(), r.shape(), "mask shape mismatch");
     (x.sub(&r), r)
 }
 
@@ -52,6 +61,20 @@ mod tests {
         assert_eq!(reconstruct2(&s0, &s1), x);
         assert_ne!(s0, x, "share leaks plaintext");
         assert_ne!(s1, x);
+    }
+
+    #[test]
+    fn share2_from_mask_matches_share2() {
+        // same RNG stream position => identical shares
+        let x = RingMat::encode_f64(2, 3, &[1.0, -2.0, 3.5, 0.0, 9.0, -4.25]);
+        let mut r1 = ChaChaRng::seed_from_u64(11);
+        let mut r2 = ChaChaRng::seed_from_u64(11);
+        let (a, b) = share2(&mut r1, &x);
+        let mask = RingMat::random(&mut r2, x.rows, x.cols);
+        let (a2, b2) = share2_from_mask(&x, mask);
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+        assert_eq!(reconstruct2(&a2, &b2), x);
     }
 
     #[test]
