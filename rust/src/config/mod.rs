@@ -103,6 +103,38 @@ impl ModelConfig {
     }
 }
 
+/// Which transport backend carries the parties' traffic
+/// (see [`crate::transport`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels with the deterministic virtual-clock simulator
+    /// (the seed behavior; fastest, fully reproducible timing).
+    #[default]
+    Netsim,
+    /// Real `TcpStream` sockets over loopback, one socket pair per party
+    /// pair, with length-prefixed wire framing. Trains bit-identical
+    /// weights to [`TransportKind::Netsim`] (asserted by the transport
+    /// parity tests); sim-time is still modeled from the configured link.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "netsim" | "sim" => Some(TransportKind::Netsim),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Netsim => "netsim",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Training-run options shared by all protocols.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -137,6 +169,10 @@ pub struct TrainConfig {
     /// any depth trains bit-identical weights (RNG draws stay in schedule
     /// order). 0 is coerced to 1.
     pub pipeline_depth: usize,
+    /// Transport backend for the party mesh: the in-process netsim
+    /// simulator (default) or real loopback TCP sockets. Multi-process
+    /// deployments (`spnn party` / `spnn launch`) always use TCP.
+    pub transport: TransportKind,
 }
 
 impl Default for TrainConfig {
@@ -153,6 +189,7 @@ impl Default for TrainConfig {
             slot_bits: crate::paillier::pack::DEFAULT_SLOT_BITS,
             exec_threads: 0,
             pipeline_depth: 1,
+            transport: TransportKind::Netsim,
         }
     }
 }
@@ -196,6 +233,18 @@ mod tests {
         assert_eq!(tc.exec_threads, 0);
         // depth 1 = strict lock-step, the reference schedule
         assert_eq!(tc.pipeline_depth, 1);
+        // the simulator stays the default transport
+        assert_eq!(tc.transport, TransportKind::Netsim);
+    }
+
+    #[test]
+    fn transport_kind_parses_cli_names() {
+        assert_eq!(TransportKind::parse("netsim"), Some(TransportKind::Netsim));
+        assert_eq!(TransportKind::parse("sim"), Some(TransportKind::Netsim));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("quic"), None);
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
+        assert_eq!(TransportKind::default(), TransportKind::Netsim);
     }
 
     #[test]

@@ -63,7 +63,8 @@ mod tests {
     fn matches_brute_force_pair_counting() {
         let mut rng = Pcg64::seed_from_u64(2);
         let n = 200;
-        let scores: Vec<f32> = (0..n).map(|_| (rng.f64_unit() * 10.0).round() as f32 / 10.0).collect();
+        let scores: Vec<f32> =
+            (0..n).map(|_| (rng.f64_unit() * 10.0).round() as f32 / 10.0).collect();
         let labels: Vec<f32> = (0..n).map(|_| (rng.next_u64() % 4 == 0) as u64 as f32).collect();
         // brute force: P(score_pos > score_neg) + 0.5 P(equal)
         let (mut wins, mut ties, mut pairs) = (0f64, 0f64, 0f64);

@@ -16,11 +16,15 @@
 //! ## Architecture (three layers)
 //!
 //! * **Layer 3 (this crate)** — the decentralized coordinator: party actors
-//!   ([`parties`]), a deterministic network simulator ([`netsim`]), the MPC
+//!   ([`parties`]), a pluggable [`transport`] layer (the deterministic
+//!   [`netsim`] simulator and a real-TCP backend with session rendezvous
+//!   behind one `Channel` trait, so the same roles run in-process or as
+//!   separate OS processes via `spnn launch` / `spnn party`), the MPC
 //!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack (with
 //!   plaintext packing, [`paillier::pack`]), the chunked [`exec`] thread
 //!   pool that fans the crypto hot paths out across cores, the PJRT
-//!   [`runtime`] and the five training [`protocols`].
+//!   [`runtime`] (with a pure-rust graph fallback when artifacts are
+//!   absent) and the five training [`protocols`].
 //! * **Layer 2** — JAX graphs (`python/compile/model.py`), AOT-lowered to
 //!   `artifacts/*.hlo.txt` once by `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the blocked
@@ -48,5 +52,6 @@ pub mod rng;
 pub mod runtime;
 pub mod smpc;
 pub mod testutil;
+pub mod transport;
 
 pub use error::{Error, Result};

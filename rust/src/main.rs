@@ -2,6 +2,11 @@
 //!
 //! Subcommands:
 //!   train   — run one protocol end-to-end on a synthetic benchmark
+//!             (all parties in this process; netsim or loopback TCP)
+//!   launch  — run one protocol genuinely decentralized: host the session
+//!             and spawn every role as its own OS process over TCP
+//!   party   — join a hosted session as one role (multi-terminal /
+//!             multi-host deployments)
 //!   repro   — regenerate one (or all) of the paper's tables/figures
 //!   attack  — run the Table 2 property-inference attack standalone
 //!   info    — list loaded AOT artifacts
@@ -12,12 +17,12 @@
 use std::collections::HashMap;
 
 use spnn::attack::{property_attack, AttackOpts};
-use spnn::config::{ModelConfig, TrainConfig, DISTRESS, FRAUD};
-use spnn::data::{synth_distress, synth_fraud, SynthOpts};
+use spnn::config::{TrainConfig, TransportKind, DISTRESS, FRAUD};
 use spnn::exp::{self, ExpOpts};
-use spnn::netsim::LinkSpec;
 use spnn::protocols;
 use spnn::runtime::Engine;
+use spnn::transport::runner::{run_launch, run_party, LaunchOpts};
+use spnn::transport::session::SessionSpec;
 
 type CliError = Box<dyn std::error::Error>;
 type CliResult<T> = std::result::Result<T, CliError>;
@@ -46,6 +51,8 @@ fn run(args: &[String]) -> CliResult<()> {
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
         "train" => cmd_train(&flags),
+        "launch" => cmd_launch(&flags),
+        "party" => cmd_party(&flags),
         "repro" => cmd_repro(&args[1..], &flags),
         "attack" => cmd_attack(&flags),
         "info" => cmd_info(),
@@ -69,7 +76,15 @@ USAGE:
               [--dataset fraud|distress] [--rows N] [--epochs E]
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
               [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
-              [--pipeline-depth D]
+              [--pipeline-depth D] [--transport netsim|tcp]
+  spnn launch [same training flags as train]
+              [--listen HOST:PORT] [--no-spawn]
+              runs every role as its own OS process over real TCP;
+              --no-spawn prints the `spnn party` commands instead of
+              forking (join them from other terminals or hosts)
+  spnn party  --role <name> --connect HOST:PORT [--bind HOST]
+              join a hosted session as one role (e.g. server, dealer,
+              holder0, holder1 — role names come from the protocol)
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
@@ -103,19 +118,20 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, defaul
         .unwrap_or(default)
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
+/// Assemble the canonical session config from the shared training flags —
+/// `train` and `launch` build the exact same [`SessionSpec`], which is
+/// what makes their `weight_digest`s comparable.
+fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
     let proto = flags.get("protocol").map(|s| s.as_str()).unwrap_or("spnn-ss");
     let dataset = flags.get("dataset").map(|s| s.as_str()).unwrap_or("fraud");
-    let cfg: &ModelConfig = ModelConfig::by_name(dataset)
-        .ok_or_else(|| err(format!("unknown dataset {dataset:?}")))?;
+    if !matches!(dataset, "fraud" | "distress") {
+        return Err(err(format!("unknown dataset {dataset:?}")));
+    }
+    if protocols::by_name(proto).is_none() {
+        return Err(err(format!("unknown protocol {proto:?}")));
+    }
     let rows = flag(flags, "rows", if dataset == "fraud" { 12_000 } else { 3_672 });
     let seed = flag(flags, "seed", 7u64);
-    let ds = if dataset == "fraud" {
-        synth_fraud(SynthOpts { rows, seed, pos_boost: 10.0 })
-    } else {
-        synth_distress(SynthOpts { rows, seed, pos_boost: 2.0 })
-    };
-    let (train, test) = ds.split(if dataset == "fraud" { 0.8 } else { 0.7 }, seed);
     let tc = TrainConfig {
         batch: flag(flags, "batch", 1024),
         epochs: flag(flags, "epochs", 3),
@@ -128,21 +144,71 @@ fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
         slot_bits: flag(flags, "slot-bits", spnn::paillier::pack::DEFAULT_SLOT_BITS),
         exec_threads: flag(flags, "threads", 0usize),
         pipeline_depth: flag(flags, "pipeline-depth", 1usize),
+        transport: flags
+            .get("transport")
+            .map(|v| TransportKind::parse(v).ok_or_else(|| err(format!("unknown transport {v:?}"))))
+            .transpose()?
+            .unwrap_or(TransportKind::Netsim),
     };
-    let spec = LinkSpec::from_mbps(flag(flags, "mbps", 100.0));
-    let holders = flag(flags, "holders", 2usize);
-    let trainer = protocols::by_name(proto)
-        .ok_or_else(|| err(format!("unknown protocol {proto:?}")))?;
-    eprintln!(
-        "training {proto} on {dataset} ({} train / {} test rows, {} holders)",
-        train.len(),
-        test.len(),
-        holders
-    );
-    let rep = trainer.train(cfg, &tc, spec, &train, &test, holders)?;
+    Ok(SessionSpec {
+        protocol: proto.to_string(),
+        dataset: dataset.to_string(),
+        rows,
+        holders: flag(flags, "holders", 2usize),
+        mbps: flag(flags, "mbps", 100.0),
+        tc,
+    })
+}
+
+fn print_report(rep: &spnn::protocols::TrainReport) {
     println!("{}", rep.summary());
     println!("train losses: {:?}", rep.train_losses);
     println!("epoch times (sim s): {:?}", rep.epoch_times);
+    // machine-readable digest line (scripted parity checks grep this)
+    println!("weight_digest=0x{:016x}", rep.weight_digest);
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
+    let spec = spec_from_flags(flags)?;
+    let (cfg, train, test) = spec.datasets()?;
+    let trainer = protocols::by_name(&spec.protocol)
+        .ok_or_else(|| err(format!("unknown protocol {:?}", spec.protocol)))?;
+    eprintln!(
+        "training {} on {} ({} train / {} test rows, {} holders, {} transport)",
+        spec.protocol,
+        spec.dataset,
+        train.len(),
+        test.len(),
+        spec.holders,
+        spec.tc.transport.name(),
+    );
+    let rep = trainer.train(cfg, &spec.tc, spec.link(), &train, &test, spec.holders)?;
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_launch(flags: &HashMap<String, String>) -> CliResult<()> {
+    let spec = spec_from_flags(flags)?;
+    let opts = LaunchOpts {
+        listen: flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".into()),
+        spawn: !flags.contains_key("no-spawn"),
+    };
+    eprintln!(
+        "launching {} on {} decentralized ({} holders, multi-process TCP)",
+        spec.protocol, spec.dataset, spec.holders
+    );
+    let rep = run_launch(&spec, &opts)?;
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_party(flags: &HashMap<String, String>) -> CliResult<()> {
+    let role = flags.get("role").ok_or_else(|| err("party needs --role <name>".into()))?;
+    let connect = flags
+        .get("connect")
+        .ok_or_else(|| err("party needs --connect HOST:PORT".into()))?;
+    let bind = flags.get("bind").map(|s| s.as_str()).unwrap_or("127.0.0.1");
+    run_party(connect, role, bind)?;
     Ok(())
 }
 
@@ -191,6 +257,12 @@ fn cmd_attack(flags: &HashMap<String, String>) -> CliResult<()> {
 
 fn cmd_info() -> CliResult<()> {
     let engine = Engine::load_default()?;
+    if engine.is_native() {
+        println!(
+            "no AOT artifacts (run `make artifacts`); using the native \
+             pure-rust graph fallback"
+        );
+    }
     let m = engine.manifest();
     println!("{} artifacts loaded:", m.len());
     let mut names: Vec<&String> = m.entries.keys().collect();

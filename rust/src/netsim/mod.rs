@@ -272,6 +272,28 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_tagged_polls_without_blocking() {
+        let (mut ports, _) = full_mesh(&["A", "B"], LinkSpec::lan());
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        // nothing sent yet: poll returns None immediately
+        assert!(b.try_recv_tagged(0, 3).unwrap().is_none());
+        a.send_tagged(1, 4, Payload::U64s(vec![4])).unwrap();
+        a.send_tagged(1, 3, Payload::U64s(vec![3])).unwrap();
+        // tag 3 is behind tag 4 in the channel: the poll parks 4 and
+        // delivers 3; the parked message is still delivered later
+        assert_eq!(
+            b.try_recv_tagged(0, 3).unwrap().unwrap().into_u64s().unwrap(),
+            vec![3]
+        );
+        assert!(b.try_recv_tagged(0, 9).unwrap().is_none());
+        assert_eq!(b.recv_tagged(0, 4).unwrap().into_u64s().unwrap(), vec![4]);
+        // dropped sender surfaces as a disconnect error, not a hang
+        drop(a);
+        assert!(b.try_recv_tagged(0, 9).is_err());
+    }
+
+    #[test]
     fn recv_timeout_reports_endpoints_tag_stage_and_queues() {
         let (mut ports, _) = full_mesh(&["alice", "bob"], LinkSpec::lan());
         let mut b = ports.pop().unwrap();

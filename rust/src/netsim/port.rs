@@ -64,7 +64,12 @@ pub struct NetPort {
 }
 
 impl NetPort {
-    pub(super) fn new(
+    /// Build a port from raw per-peer channel endpoints. The netsim
+    /// [`full_mesh`](super::full_mesh) wires both ends in-process; the TCP
+    /// backend ([`crate::transport::tcp`]) wires each endpoint to socket
+    /// reader/writer threads instead — the clock, reorder-buffer, stats,
+    /// and diagnostic machinery here is backend-agnostic.
+    pub(crate) fn new(
         id: PartyId,
         name: &str,
         spec: LinkSpec,
@@ -267,6 +272,45 @@ impl NetPort {
                 return Ok(self.accept(msg).1);
             }
             self.pending.entry(from).or_default().push_back(msg);
+        }
+    }
+
+    /// Non-blocking variant of [`Self::recv_tagged`]: deliver the next
+    /// `tag` message from `from` if one is already buffered or sitting in
+    /// the channel, parking mismatches, and return `None` when the channel
+    /// is drained. Lets pipelined parties pull remote material inside
+    /// their prefetch window instead of blocking for it on the critical
+    /// path.
+    pub fn try_recv_tagged(&mut self, from: PartyId, tag: u64) -> Result<Option<Payload>> {
+        self.absorb_compute();
+        if let Some(q) = self.pending.get_mut(&from) {
+            if let Some(pos) = q.iter().position(|m| m.tag == tag) {
+                let msg = q.remove(pos).expect("position within queue");
+                return Ok(Some(self.accept(msg).1));
+            }
+        }
+        loop {
+            let polled = {
+                let rx = self
+                    .rxs
+                    .get(&from)
+                    .ok_or_else(|| Error::Net(format!("{}: unknown peer {from}", self.name)))?;
+                rx.try_recv()
+            };
+            match polled {
+                Ok(msg) if msg.tag == tag => return Ok(Some(self.accept(msg).1)),
+                Ok(msg) => self.pending.entry(from).or_default().push_back(msg),
+                Err(mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Err(Error::Net(format!(
+                        "{}: peer {} ({}) disconnected while {} polled tag {tag}",
+                        self.name,
+                        from,
+                        self.stats.name(from),
+                        self.name,
+                    )))
+                }
+            }
         }
     }
 

@@ -124,6 +124,23 @@ impl NetStats {
             + self.bytes_offline[idx].load(Ordering::Relaxed)) as usize
     }
 
+    /// Total bytes party `from` sent in one phase (all destinations).
+    /// Multi-process deployments report this per party so the coordinator
+    /// can reassemble whole-mesh traffic totals from each process's
+    /// sender-side counters.
+    pub fn bytes_sent_by(&self, from: PartyId, phase: Phase) -> usize {
+        if from >= self.n {
+            return 0;
+        }
+        let v = match phase {
+            Phase::Online => &self.bytes_online,
+            Phase::Offline => &self.bytes_offline,
+        };
+        (0..self.n)
+            .map(|to| v[from * self.n + to].load(Ordering::Relaxed))
+            .sum::<u64>() as usize
+    }
+
     /// Total bytes in one phase across all links.
     pub fn bytes_phase(&self, phase: Phase) -> usize {
         let v = match phase {
@@ -200,6 +217,10 @@ mod tests {
         assert_eq!(s.bytes_between(2, 0), 0);
         assert_eq!(s.bytes_phase(Phase::Online), 150);
         assert_eq!(s.bytes_phase(Phase::Offline), 7);
+        assert_eq!(s.bytes_sent_by(0, Phase::Online), 150);
+        assert_eq!(s.bytes_sent_by(1, Phase::Offline), 7);
+        assert_eq!(s.bytes_sent_by(1, Phase::Online), 0);
+        assert_eq!(s.bytes_sent_by(9, Phase::Online), 0);
         assert_eq!(s.msgs_phase(Phase::Online), 2);
         assert_eq!(s.total_bytes(), 157);
         assert!(s.report().contains("A -> B"));

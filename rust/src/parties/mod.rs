@@ -1,21 +1,32 @@
 //! Decentralized party harness (paper §5, Figure 3).
 //!
 //! A deployment is a set of named parties — coordinator, server, dealer,
-//! data holders — each running as its own thread connected through the
-//! [`netsim`](crate::netsim) mesh. The coordinator only ever exchanges
-//! [`Payload::Control`] messages: it splits the computation graph (decides
-//! each party's role parameters), starts training, monitors per-epoch
-//! status, and terminates the run — it can never touch features, labels or
-//! shares, which is enforced by the message types it sends/accepts.
+//! data holders — each running its role body against a
+//! [`Channel`](crate::transport::Channel). The same boxed role closures
+//! ([`PartyFn`]) run in three execution modes:
 //!
-//! Inside a deployment every worker drives its mini-batch loop through the
-//! pipelined session framework (`protocols::common::run_pipeline`), which
-//! keeps up to `TrainConfig::pipeline_depth` batches of value-independent
-//! work in flight; the coordinator handshake stays strictly sequential.
+//! * **in-process / netsim** — one thread per party over the
+//!   [`netsim`](crate::netsim) mesh (the seed behavior),
+//! * **in-process / TCP** — one thread per party over real loopback
+//!   sockets ([`crate::transport::tcp::loopback_mesh`]),
+//! * **multi-process** — one OS process per party over TCP, rendezvoused
+//!   by the session handshake and driven by
+//!   [`crate::transport::runner`] (`spnn party` / `spnn launch`).
+//!
+//! The coordinator only ever exchanges [`Payload::Control`] messages: it
+//! splits the computation graph (decides each party's role parameters),
+//! starts training, monitors per-epoch status, and terminates the run — it
+//! can never touch features, labels or shares, which is enforced by the
+//! message types it sends/accepts. Each party returns a [`PartyOut`] with
+//! its metrics and (for evaluation only) its final parameter blocks; in
+//! multi-process mode the blocks travel to the coordinator over the wire
+//! ([`send_party_out`] / [`recv_party_out`]) instead of shared memory.
 
 use std::sync::Arc;
 
-use crate::netsim::{full_mesh, LinkSpec, NetPort, NetStats, PartyId, Payload};
+use crate::config::TransportKind;
+use crate::netsim::{full_mesh, LinkSpec, NetStats, PartyId, Payload, Phase, StageRow};
+use crate::transport::{tcp, Channel};
 use crate::{Error, Result};
 
 /// Canonical party ids used by all protocol deployments.
@@ -32,7 +43,17 @@ pub mod ids {
     }
 }
 
-/// What each party thread returns to the harness.
+/// One party's role body, runnable on any transport backend.
+pub type PartyFn = Box<dyn FnOnce(&mut dyn Channel) -> Result<PartyOut> + Send>;
+
+/// A protocol's full party roster: role names (index = party id; name
+/// doubles as the `spnn party --role` claim) and the role bodies.
+pub struct Deployment {
+    pub names: Vec<String>,
+    pub fns: Vec<PartyFn>,
+}
+
+/// What each party returns to the harness.
 #[derive(Clone, Debug, Default)]
 pub struct PartyOut {
     /// Final virtual-clock value (simulated seconds).
@@ -46,28 +67,78 @@ pub struct PartyOut {
     pub weight_digest: u64,
     /// Free-form key=value metrics.
     pub metrics: Vec<(String, f64)>,
+    /// Named final-parameter blocks this party contributes to the
+    /// evaluation harness (bit-exact f64s; assembled by the trainer's
+    /// `finish` step on whichever process collects the outputs).
+    pub params: Vec<(String, Vec<f64>)>,
 }
 
-/// Spawn one thread per party function and join them all.
+impl PartyOut {
+    /// Look up a parameter block by name.
+    pub fn param(&self, name: &str) -> Option<&[f64]> {
+        self.params.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+
+    /// Required parameter block (protocol error when missing).
+    pub fn need_param(&self, name: &str) -> Result<&[f64]> {
+        self.param(name)
+            .ok_or_else(|| Error::Protocol(format!("missing final-parameter block {name:?}")))
+    }
+
+    /// Look up a metric by name.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// Whole-mesh traffic totals handed to the trainer's `finish` step —
+/// built from the shared [`NetStats`] in-process, or reassembled from the
+/// parties' sender-side counters in multi-process mode.
+#[derive(Clone, Debug, Default)]
+pub struct NetSummary {
+    pub online_bytes: usize,
+    pub offline_bytes: usize,
+    /// Per-phase / per-stage traffic breakdown. In multi-process mode this
+    /// covers only the collecting process's own links (each process keeps
+    /// its own stage map); the byte totals above are whole-mesh either way.
+    pub stages: Vec<StageRow>,
+}
+
+impl NetSummary {
+    pub fn from_stats(stats: &NetStats) -> Self {
+        NetSummary {
+            online_bytes: stats.bytes_phase(Phase::Online),
+            offline_bytes: stats.bytes_phase(Phase::Offline),
+            stages: stats.stage_rows(),
+        }
+    }
+}
+
+/// Run every party of `dep` in this process — one thread each — over the
+/// selected transport backend, and join them all.
 ///
-/// `fns[i]` runs as party id `i` (see [`ids`]). Panics in any party are
-/// converted into errors naming the party, and the mesh statistics are
-/// returned for traffic reporting.
+/// Panics in any party are converted into errors naming the party, and
+/// the mesh-wide traffic summary is returned for reporting.
 pub fn run_parties(
-    names: &[&str],
     spec: LinkSpec,
-    fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>>,
-) -> Result<(Vec<PartyOut>, Arc<NetStats>)> {
+    kind: TransportKind,
+    dep: Deployment,
+) -> Result<(Vec<PartyOut>, NetSummary)> {
+    let Deployment { names, fns } = dep;
     assert_eq!(names.len(), fns.len());
-    let (ports, stats) = full_mesh(names, spec);
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let (ports, stats): (Vec<_>, Arc<NetStats>) = match kind {
+        TransportKind::Netsim => full_mesh(&name_refs, spec),
+        TransportKind::Tcp => tcp::loopback_mesh(&name_refs, spec)?,
+    };
     let mut handles = Vec::new();
-    for ((port, f), name) in ports.into_iter().zip(fns).zip(names) {
-        let name = name.to_string();
+    for ((mut port, f), name) in ports.into_iter().zip(fns).zip(&names) {
+        let name = name.clone();
         handles.push((
             name.clone(),
             std::thread::Builder::new()
                 .name(name)
-                .spawn(move || f(port))
+                .spawn(move || f(&mut port))
                 .map_err(Error::Io)?,
         ));
     }
@@ -88,7 +159,7 @@ pub fn run_parties(
     }
     match first_err {
         Some(e) => Err(e),
-        None => Ok((outs, stats)),
+        None => Ok((outs, NetSummary::from_stats(&stats))),
     }
 }
 
@@ -99,7 +170,7 @@ pub fn run_parties(
 /// Coordinator role: broadcast start, collect one status per epoch from the
 /// `reporter` party, broadcast stop. Returns the reported epoch losses.
 pub fn coordinator_run(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     workers: &[PartyId],
     reporter: PartyId,
     epochs: usize,
@@ -127,7 +198,7 @@ pub fn coordinator_run(
 }
 
 /// Worker-side handshake: wait for the coordinator's start order.
-pub fn await_start(port: &mut NetPort) -> Result<usize> {
+pub fn await_start(port: &mut dyn Channel) -> Result<usize> {
     let msg = port.recv(ids::COORDINATOR)?.into_control()?;
     msg.strip_prefix("start:")
         .and_then(|s| s.parse().ok())
@@ -135,12 +206,12 @@ pub fn await_start(port: &mut NetPort) -> Result<usize> {
 }
 
 /// Reporter-side: send the epoch status to the coordinator.
-pub fn report_epoch(port: &mut NetPort, loss: f64) -> Result<()> {
+pub fn report_epoch(port: &mut dyn Channel, loss: f64) -> Result<()> {
     port.send(ids::COORDINATOR, Payload::Control(format!("epoch_done:{loss}")))
 }
 
 /// Worker-side: consume the final stop order.
-pub fn await_stop(port: &mut NetPort) -> Result<()> {
+pub fn await_stop(port: &mut dyn Channel) -> Result<()> {
     let msg = port.recv(ids::COORDINATOR)?.into_control()?;
     if msg != "stop" {
         return Err(Error::Protocol(format!("expected stop, got {msg:?}")));
@@ -148,55 +219,164 @@ pub fn await_stop(port: &mut NetPort) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// PartyOut over the wire (multi-process result collection)
+// ---------------------------------------------------------------------------
+
+/// Ship a finished party's [`PartyOut`] to the collector (party 0 in the
+/// multi-process runner). Counted as offline traffic: result collection
+/// is harness bookkeeping, not protocol cost.
+pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Result<()> {
+    port.send_phase(
+        to,
+        Payload::Control(format!(
+            "partyout {} {} {} {}",
+            out.metrics.len(),
+            out.params.len(),
+            out.weight_digest,
+            out.sim_time,
+        )),
+        Phase::Offline,
+    )?;
+    port.send_phase(to, Payload::F64s(out.epoch_times.clone()), Phase::Offline)?;
+    port.send_phase(to, Payload::F64s(out.epoch_losses.clone()), Phase::Offline)?;
+    for (name, v) in &out.metrics {
+        port.send_phase(to, Payload::Control(name.clone()), Phase::Offline)?;
+        port.send_phase(to, Payload::F64s(vec![*v]), Phase::Offline)?;
+    }
+    for (name, data) in &out.params {
+        port.send_phase(to, Payload::Control(name.clone()), Phase::Offline)?;
+        port.send_phase(to, Payload::F64s(data.clone()), Phase::Offline)?;
+    }
+    Ok(())
+}
+
+/// Collector side of [`send_party_out`].
+pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut> {
+    let header = port.recv(from)?.into_control()?;
+    let fields: Vec<&str> = header.split_whitespace().collect();
+    if fields.len() != 5 || fields[0] != "partyout" {
+        return Err(Error::Protocol(format!("bad partyout header {header:?}")));
+    }
+    let parse = |s: &str| -> Result<usize> {
+        s.parse().map_err(|_| Error::Protocol(format!("bad partyout count {s:?}")))
+    };
+    let n_metrics = parse(fields[1])?;
+    let n_params = parse(fields[2])?;
+    let weight_digest: u64 = fields[3]
+        .parse()
+        .map_err(|_| Error::Protocol(format!("bad partyout digest {:?}", fields[3])))?;
+    let sim_time: f64 = fields[4]
+        .parse()
+        .map_err(|_| Error::Protocol(format!("bad partyout sim_time {:?}", fields[4])))?;
+    let epoch_times = port.recv(from)?.into_f64s()?;
+    let epoch_losses = port.recv(from)?.into_f64s()?;
+    let mut metrics = Vec::with_capacity(n_metrics);
+    for _ in 0..n_metrics {
+        let name = port.recv(from)?.into_control()?;
+        let v = port.recv(from)?.into_f64s()?;
+        metrics.push((name, v.first().copied().unwrap_or(f64::NAN)));
+    }
+    let mut params = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        let name = port.recv(from)?.into_control()?;
+        params.push((name, port.recv(from)?.into_f64s()?));
+    }
+    Ok(PartyOut { sim_time, epoch_times, epoch_losses, weight_digest, metrics, params })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn two_party_dep(fa: PartyFn, fb: PartyFn) -> Deployment {
+        Deployment { names: vec!["a".into(), "b".into()], fns: vec![fa, fb] }
+    }
+
     #[test]
     fn harness_runs_and_collects() {
-        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
-            Box::new(|mut p: NetPort| {
-                p.send(1, Payload::Control("hi".into()))?;
-                Ok(PartyOut { metrics: vec![("x".into(), 1.0)], ..Default::default() })
-            }),
-            Box::new(|mut p: NetPort| {
-                let m = p.recv(0)?.into_control()?;
-                assert_eq!(m, "hi");
-                Ok(PartyOut::default())
-            }),
-        ];
-        let (outs, stats) = run_parties(&["a", "b"], LinkSpec::lan(), fns).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].metrics[0].0, "x");
-        assert!(stats.total_bytes() > 0);
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let dep = two_party_dep(
+                Box::new(|p: &mut dyn Channel| {
+                    p.send(1, Payload::Control("hi".into()))?;
+                    Ok(PartyOut { metrics: vec![("x".into(), 1.0)], ..Default::default() })
+                }),
+                Box::new(|p: &mut dyn Channel| {
+                    let m = p.recv(0)?.into_control()?;
+                    assert_eq!(m, "hi");
+                    Ok(PartyOut::default())
+                }),
+            );
+            let (outs, net) = run_parties(LinkSpec::lan(), kind, dep).unwrap();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(outs[0].metrics[0].0, "x");
+            assert_eq!(outs[0].metric("x"), Some(1.0));
+            assert!(net.online_bytes > 0, "no traffic accounted on {kind:?}");
+        }
     }
 
     #[test]
     fn party_error_is_named() {
-        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
-            Box::new(|_p| Err(Error::Protocol("boom".into()))),
-            Box::new(|_p| Ok(PartyOut::default())),
-        ];
-        let err = run_parties(&["bad", "ok"], LinkSpec::lan(), fns).unwrap_err();
+        let dep = Deployment {
+            names: vec!["bad".into(), "ok".into()],
+            fns: vec![
+                Box::new(|_p: &mut dyn Channel| Err(Error::Protocol("boom".into()))),
+                Box::new(|_p: &mut dyn Channel| Ok(PartyOut::default())),
+            ],
+        };
+        let err = run_parties(LinkSpec::lan(), TransportKind::Netsim, dep).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("bad") && msg.contains("boom"), "{msg}");
     }
 
     #[test]
     fn coordinator_roundtrip() {
-        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
-            Box::new(|mut p: NetPort| coordinator_run(&mut p, &[1], 1, 2)),
-            Box::new(|mut p: NetPort| {
-                let epochs = await_start(&mut p)?;
+        let dep = two_party_dep(
+            Box::new(|p: &mut dyn Channel| coordinator_run(p, &[1], 1, 2)),
+            Box::new(|p: &mut dyn Channel| {
+                let epochs = await_start(p)?;
                 assert_eq!(epochs, 2);
                 for e in 0..epochs {
-                    report_epoch(&mut p, 0.5 - e as f64 * 0.1)?;
+                    report_epoch(p, 0.5 - e as f64 * 0.1)?;
                 }
-                await_stop(&mut p)?;
+                await_stop(p)?;
                 Ok(PartyOut::default())
             }),
-        ];
-        let (outs, _) = run_parties(&["coord", "w"], LinkSpec::lan(), fns).unwrap();
+        );
+        let (outs, _) = run_parties(LinkSpec::lan(), TransportKind::Netsim, dep).unwrap();
         assert_eq!(outs[0].epoch_losses, vec![0.5, 0.4]);
+    }
+
+    #[test]
+    fn party_out_roundtrips_over_any_channel() {
+        let sent = PartyOut {
+            sim_time: 12.5,
+            epoch_times: vec![1.0, 2.0],
+            epoch_losses: vec![0.7],
+            weight_digest: 0xdead_beef_cafe_f00d,
+            metrics: vec![("auc".into(), 0.91), ("bytes".into(), 123.0)],
+            params: vec![("theta".into(), vec![1.5, -2.5]), ("by".into(), vec![])],
+        };
+        let expect = sent.clone();
+        let dep = two_party_dep(
+            Box::new(move |p: &mut dyn Channel| {
+                send_party_out(p, 1, &sent)?;
+                Ok(PartyOut::default())
+            }),
+            Box::new(move |p: &mut dyn Channel| recv_party_out(p, 0)),
+        );
+        let (outs, net) = run_parties(LinkSpec::lan(), TransportKind::Tcp, dep).unwrap();
+        let got = &outs[1];
+        assert_eq!(got.sim_time, expect.sim_time);
+        assert_eq!(got.epoch_times, expect.epoch_times);
+        assert_eq!(got.epoch_losses, expect.epoch_losses);
+        assert_eq!(got.weight_digest, expect.weight_digest);
+        assert_eq!(got.metrics, expect.metrics);
+        assert_eq!(got.params, expect.params);
+        assert_eq!(got.need_param("theta").unwrap(), &[1.5, -2.5]);
+        assert!(got.need_param("nope").is_err());
+        // result collection is offline traffic
+        assert_eq!(net.online_bytes, 0);
+        assert!(net.offline_bytes > 0);
     }
 }

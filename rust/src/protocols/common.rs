@@ -20,6 +20,12 @@
 //! in schedule order and the trained weights are **bit-identical at any
 //! depth** (asserted by the transcript-equality tests via
 //! [`TrainReport::weight_digest`]).
+//!
+//! The party loops talk through the [`Channel`](crate::transport::Channel)
+//! abstraction, so the same per-batch schedule runs unchanged on the
+//! netsim simulator, over loopback TCP, or split across OS processes
+//! (`spnn launch`) — and the digest is bit-identical across all of them
+//! (the `*_transports_are_transcript_equal` tests).
 
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset};

@@ -8,15 +8,25 @@
 //! | SPNN-SS         | [`spnn`]      | arithmetic sharing (Alg. 2) | server (plaintext) | holder A |
 //! | SPNN-HE         | [`spnn`]      | Paillier HE (Alg. 3) | server (plaintext) | holder A |
 //!
-//! All implement [`Trainer`] and produce a [`TrainReport`] with accuracy,
-//! loss curves, simulated epoch times, traffic accounting, and a bit-exact
-//! weight digest — the raw material for every table/figure in `exp/`.
+//! Every trainer is described by two halves that together make the runs
+//! deployable on any [`transport`](crate::transport) backend:
 //!
-//! Every trainer's party loops run on the shared pipelined session
-//! framework ([`common::run_pipeline`]): `TrainConfig::pipeline_depth`
-//! mini-batches of value-independent crypto stay in flight per party,
-//! while the weight-update schedule (and therefore the trained model) is
-//! identical at any depth.
+//! * [`Trainer::deployment`] — the party roster and one boxed role body
+//!   per party (all state a role needs is derived deterministically from
+//!   the config + seed, so a role can run in its own OS process);
+//! * [`Trainer::finish`] — assemble the [`TrainReport`] (evaluation, the
+//!   bit-exact `weight_digest`, traffic totals) from the parties'
+//!   [`PartyOut`]s, wherever they were collected — thread joins
+//!   in-process, or wire messages in a `spnn launch` run.
+//!
+//! The provided [`Trainer::train`] wires the two through
+//! [`run_parties`](crate::parties::run_parties) for single-process runs
+//! (netsim or loopback TCP, per `TrainConfig::transport`); the
+//! multi-process runner ([`crate::transport::runner`]) drives the same
+//! halves across OS processes. Either way the same pipelined session
+//! framework ([`common::run_pipeline`]) executes the per-batch schedule,
+//! so the trained weights are bit-identical across transports and
+//! pipeline depths (transcript tests assert both).
 
 pub mod common;
 pub mod plaintext;
@@ -26,9 +36,12 @@ pub mod spnn;
 
 pub use common::{run_pipeline, BatchCtx, ModelParams, Step, TrainReport};
 
+use std::time::Instant;
+
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Dataset;
 use crate::netsim::LinkSpec;
+use crate::parties::{run_parties, Deployment, NetSummary, PartyOut};
 use crate::Result;
 
 /// A privacy-preserving (or baseline) training protocol.
@@ -36,7 +49,34 @@ pub trait Trainer {
     /// Human-readable protocol name (report rows).
     fn name(&self) -> &'static str;
 
-    /// Train on `train`, evaluate AUC on `test`, under the given network.
+    /// Build the party roster + role bodies for one training run. Role
+    /// bodies must derive all private inputs deterministically from
+    /// `(cfg, tc, train, n_holders)` so any single role can be
+    /// instantiated alone inside its own process.
+    fn deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<Deployment>;
+
+    /// Assemble the final report from the collected party outputs
+    /// (`outs[i]` = party `i`): reconstruct the model from the returned
+    /// parameter blocks, evaluate on `test`, digest the weights.
+    fn finish(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        test: &Dataset,
+        outs: &[PartyOut],
+        net: NetSummary,
+        wall_seconds: f64,
+    ) -> Result<TrainReport>;
+
+    /// Train on `train`, evaluate AUC on `test`, under the given network —
+    /// all parties in this process, over `tc.transport`.
     fn train(
         &self,
         cfg: &ModelConfig,
@@ -45,7 +85,13 @@ pub trait Trainer {
         train: &Dataset,
         test: &Dataset,
         n_holders: usize,
-    ) -> Result<TrainReport>;
+    ) -> Result<TrainReport> {
+        let wall = Instant::now();
+        crate::exec::set_default_threads(tc.exec_threads);
+        let dep = self.deployment(cfg, tc, train, test, n_holders)?;
+        let (outs, net) = run_parties(spec, tc.transport, dep)?;
+        self.finish(cfg, tc, test, &outs, net, wall.elapsed().as_secs_f64())
+    }
 }
 
 /// Instantiate a trainer by CLI name.

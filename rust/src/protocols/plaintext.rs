@@ -7,16 +7,14 @@
 //! pipeline distributes across parties — `python/tests/test_model.py`
 //! proves the two compose identically).
 
-use std::time::Instant;
-
 use super::common::{evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::Dataset;
-use crate::netsim::{LinkSpec, NetPort};
-use crate::parties::{self, run_parties, PartyOut};
+use crate::parties::{self, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::runtime::{Engine, TensorIn};
-use crate::Result;
+use crate::transport::Channel;
+use crate::{Error, Result};
 
 pub struct PlainNn;
 
@@ -25,17 +23,14 @@ impl Trainer for PlainNn {
         "NN"
     }
 
-    fn train(
+    fn deployment(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
-        spec: LinkSpec,
         train: &Dataset,
         test: &Dataset,
         _n_holders: usize,
-    ) -> Result<TrainReport> {
-        let wall = Instant::now();
-        crate::exec::set_default_threads(tc.exec_threads);
+    ) -> Result<Deployment> {
         let mut params = ModelParams::init(cfg, tc.seed);
         let cap = ModelConfig::pick_batch(tc.batch);
         let batches = train.batches(tc.batch, cap);
@@ -53,17 +48,17 @@ impl Trainer for PlainNn {
         };
         let cfgc = cfg.clone();
         let tcc = tc.clone();
+        let tcc2 = tc.clone();
 
         // run as a 2-party deployment (coordinator + server) so the control
         // flow matches the decentralized protocols
         let test_c = test.clone();
-        let (mut epoch_losses, mut epoch_times) = (Vec::new(), Vec::new());
-        let fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = vec![
-            Box::new(move |mut p: NetPort| {
-                parties::coordinator_run(&mut p, &[1], 1, tcc.epochs)
+        let fns: Vec<PartyFn> = vec![
+            Box::new(move |p: &mut dyn Channel| {
+                parties::coordinator_run(p, &[1], 1, tcc2.epochs)
             }),
-            Box::new(move |mut p: NetPort| {
-                let epochs = parties::await_start(&mut p)?;
+            Box::new(move |p: &mut dyn Channel| {
+                let epochs = parties::await_start(p)?;
                 let mut engine = Engine::load_default()?;
                 let mut up = Updater::new(&tcc, &cfgc, tcc.seed);
                 let art = cfgc.artifact("nn_train", cap);
@@ -111,38 +106,50 @@ impl Trainer for PlainNn {
                         Ok(())
                     })?;
                     times.push(p.now());
-                    parties::report_epoch(&mut p, loss_sum / batches.len() as f64)?;
+                    parties::report_epoch(p, loss_sum / batches.len() as f64)?;
                 }
-                parties::await_stop(&mut p)?;
+                parties::await_stop(p)?;
                 // evaluate inside the party (owns the params)
                 let (auc, test_loss) = evaluate(&mut engine, &cfgc, &params, &test_c)?;
                 Ok(PartyOut {
                     sim_time: p.now(),
                     epoch_times: times,
-                    epoch_losses: vec![auc, test_loss],
+                    metrics: vec![("auc".into(), auc), ("test_loss".into(), test_loss)],
                     weight_digest: params.digest(),
                     ..Default::default()
                 })
             }),
         ];
-        let (outs, stats) = run_parties(&["coord", "server"], spec, fns)?;
-        epoch_losses.extend(outs[0].epoch_losses.clone());
-        epoch_times.extend(outs[1].epoch_times.clone());
-        let auc = outs[1].epoch_losses[0];
-        let test_loss = outs[1].epoch_losses[1];
+        Ok(Deployment { names: vec!["coord".into(), "server".into()], fns })
+    }
 
+    fn finish(
+        &self,
+        cfg: &ModelConfig,
+        _tc: &TrainConfig,
+        _test: &Dataset,
+        outs: &[PartyOut],
+        net: NetSummary,
+        wall_seconds: f64,
+    ) -> Result<TrainReport> {
+        let auc = outs[1]
+            .metric("auc")
+            .ok_or_else(|| Error::Protocol("server: missing auc metric".into()))?;
+        let test_loss = outs[1]
+            .metric("test_loss")
+            .ok_or_else(|| Error::Protocol("server: missing test_loss metric".into()))?;
         Ok(TrainReport {
             protocol: self.name().into(),
             dataset: cfg.name.into(),
             auc,
-            train_losses: epoch_losses,
+            train_losses: outs[0].epoch_losses.clone(),
             test_losses: vec![test_loss],
-            epoch_times,
-            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
+            epoch_times: outs[1].epoch_times.clone(),
+            online_bytes: net.online_bytes,
             offline_bytes: 0,
-            stages: stats.stage_rows(),
+            stages: net.stages,
             weight_digest: outs[1].weight_digest,
-            wall_seconds: wall.elapsed().as_secs_f64(),
+            wall_seconds,
         })
     }
 }
@@ -152,6 +159,7 @@ mod tests {
     use super::*;
     use crate::config::FRAUD;
     use crate::data::{synth_fraud, SynthOpts};
+    use crate::netsim::LinkSpec;
 
     #[test]
     fn nn_trains_and_loss_decreases() {

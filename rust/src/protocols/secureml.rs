@@ -25,22 +25,22 @@
 //! streams ahead of demand instead of serializing a request round-trip
 //! into every Beaver multiplication.
 
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::collections::{HashMap, VecDeque};
 
 use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport};
 use super::Trainer;
 use crate::config::{Act, ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
 use crate::fixed::{self, SCALE};
-use crate::netsim::{LinkSpec, NetPort, Payload};
+use crate::netsim::Payload;
 use crate::nn::MatF64;
-use crate::parties::{self, ids, run_parties, PartyOut};
+use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::ChaChaRng;
-use crate::smpc::boolean::drelu_arith;
+use crate::smpc::boolean::{drelu_arith, BoolBundle};
 use crate::smpc::dealer::{self, Req};
-use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm};
-use crate::smpc::{share2_from_mask, trunc_share_mat, RingMat};
+use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm, ElemTriple};
+use crate::smpc::{share2_from_mask, trunc_share_mat, MatTriple, RingMat};
+use crate::transport::Channel;
 use crate::{Error, Result};
 
 pub struct SecureMl;
@@ -110,42 +110,35 @@ impl Trainer for SecureMl {
         "SecureML"
     }
 
-    fn train(
+    fn deployment(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
-        spec: LinkSpec,
         train: &Dataset,
-        test: &Dataset,
+        _test: &Dataset,
         n_holders: usize,
-    ) -> Result<TrainReport> {
-        let wall = Instant::now();
-        crate::exec::set_default_threads(tc.exec_threads);
+    ) -> Result<Deployment> {
         let split = VerticalSplit::even(cfg.n_features, n_holders.max(2));
         let plan = super::spnn::batch_plan(train.len(), tc.batch);
-        // final reconstructed weights for evaluation
-        let finals: Arc<Mutex<Vec<(MatF64, Option<Vec<f64>>)>>> =
-            Arc::new(Mutex::new(Vec::new()));
 
         let mut names = vec!["coord".to_string(), "party0".to_string(), "dealer".to_string()];
         names.push("party1".into());
         for j in 2..n_holders {
             names.push(format!("holder{j}"));
         }
-        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
         // party0 = id 1 slot (A), party1 = id 3 slot, matching ids::holder(0)=3
         // simpler: reuse harness ids — coord 0, A at 1, dealer 2, B at 3,
         // extra holders 4..
         let a_id = 1usize;
         let b_id = 3usize;
 
-        let mut fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = Vec::new();
+        let mut fns: Vec<PartyFn> = Vec::new();
         {
             // every party (incl. the dealer) takes start/stop orders
             let workers: Vec<usize> = (1..names.len()).collect();
             let epochs = tc.epochs;
-            fns.push(Box::new(move |mut p: NetPort| {
-                parties::coordinator_run(&mut p, &workers, a_id, epochs)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                parties::coordinator_run(p, &workers, a_id, epochs)
             }));
         }
         {
@@ -156,17 +149,16 @@ impl Trainer for SecureMl {
             let split = split.clone();
             let xa = split.slice_x(&train.x, cfg.n_features, 0);
             let y = train.y.clone();
-            let fin = finals.clone();
-            fns.push(Box::new(move |mut p: NetPort| {
-                mpc_party(&mut p, &cfg, &tc, &plan, 0, a_id, b_id, &split, xa, Some(y), fin, n_holders)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                mpc_party(p, &cfg, &tc, &plan, 0, a_id, b_id, &split, xa, Some(y), n_holders)
             }));
         }
         {
             let seed = tc.seed ^ 0x5ec;
-            fns.push(Box::new(move |mut p: NetPort| {
-                parties::await_start(&mut p)?;
-                dealer::serve(&mut p, a_id, b_id, seed)?;
-                parties::await_stop(&mut p)?;
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                parties::await_start(p)?;
+                dealer::serve(p, a_id, b_id, seed)?;
+                parties::await_stop(p)?;
                 Ok(PartyOut::default())
             }));
         }
@@ -177,9 +169,8 @@ impl Trainer for SecureMl {
             let plan = plan.clone();
             let split = split.clone();
             let xb = split.slice_x(&train.x, cfg.n_features, 1);
-            let fin = finals.clone();
-            fns.push(Box::new(move |mut p: NetPort| {
-                mpc_party(&mut p, &cfg, &tc, &plan, 1, a_id, b_id, &split, xb, None, fin, n_holders)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                mpc_party(p, &cfg, &tc, &plan, 1, a_id, b_id, &split, xb, None, n_holders)
             }));
         }
         // extra data holders: share their block into A and B each batch
@@ -192,12 +183,11 @@ impl Trainer for SecureMl {
             let dj = split.width(j);
             let tc = tc.clone();
             let me = 2 + j; // ids 4..
-            fns.push(Box::new(move |mut p: NetPort| {
-                let epochs = parties::await_start(&mut p)?;
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                let epochs = parties::await_start(p)?;
                 let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
                 for _ in 0..epochs {
-                    let mut staged: std::collections::VecDeque<(RingMat, RingMat)> =
-                        std::collections::VecDeque::new();
+                    let mut staged: VecDeque<(RingMat, RingMat)> = VecDeque::new();
                     run_pipeline(&plan, tc.pipeline_depth, |step, b| {
                         let (s, rows) = (b.start, b.rows);
                         match step {
@@ -226,16 +216,42 @@ impl Trainer for SecureMl {
                         }
                     })?;
                 }
-                parties::await_stop(&mut p)?;
+                parties::await_stop(p)?;
                 Ok(PartyOut::default())
             }));
         }
+        Ok(Deployment { names, fns })
+    }
 
-        let (outs, stats) = run_parties(&name_refs, spec, fns)?;
+    fn finish(
+        &self,
+        cfg: &ModelConfig,
+        _tc: &TrainConfig,
+        test: &Dataset,
+        outs: &[PartyOut],
+        net: NetSummary,
+        wall_seconds: f64,
+    ) -> Result<TrainReport> {
+        let a_id = 1usize;
+        // A returned the reconstructed plaintext layers as parameter blocks
+        let (dims, _, with_bias) = layer_plan(cfg);
+        let n_layers = dims.len() - 1;
+        let mut finals: Vec<(MatF64, Option<Vec<f64>>)> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let w = outs[a_id].need_param(&format!("w{l}"))?;
+            if w.len() != dims[l] * dims[l + 1] {
+                return Err(Error::Protocol(format!("secureml: w{l} size")));
+            }
+            let b = if with_bias[l] {
+                Some(outs[a_id].need_param(&format!("b{l}"))?.to_vec())
+            } else {
+                None
+            };
+            finals.push((MatF64::from_data(dims[l], dims[l + 1], w.to_vec()), b));
+        }
 
         // evaluate the reconstructed model with the SAME piecewise
         // activations MPC used (the approximation is part of the accuracy)
-        let finals = finals.lock().unwrap().clone();
         let (a, test_loss) = eval_piecewise(cfg, &finals, test);
         let mut digest = Fnv::new();
         for (w, b) in &finals {
@@ -252,11 +268,11 @@ impl Trainer for SecureMl {
             train_losses: outs[ids::COORDINATOR].epoch_losses.clone(),
             test_losses: vec![test_loss],
             epoch_times: outs[a_id].epoch_times.clone(),
-            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
-            offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
-            stages: stats.stage_rows(),
+            online_bytes: net.online_bytes,
+            offline_bytes: net.offline_bytes,
+            stages: net.stages,
             weight_digest: digest.0,
-            wall_seconds: wall.elapsed().as_secs_f64(),
+            wall_seconds,
         })
     }
 }
@@ -283,9 +299,121 @@ struct InFlight {
     g_out: RingMat,
 }
 
+/// Expanded A-side dealer material, ready for consumption.
+enum Material {
+    Mat(MatTriple),
+    Elem(ElemTriple),
+    Bool(BoolBundle),
+}
+
+/// A-side dealer feed with **opportunistic expansion**: requests are fired
+/// from `Prefetch` ([`Self::request`]); [`Self::pump`] then polls the
+/// dealer link without blocking (`try_recv_tagged`) and expands whatever
+/// replies have already landed — so the PRG expansion of `(U, V)` shares
+/// and boolean bundles happens inside the prefetch window instead of
+/// blocking in `Submit`/`Complete` on the critical path. [`Self::next`]
+/// falls back to blocking receives for anything not pumped yet.
+///
+/// Correctness leans on two FIFO facts: A fires requests in consumption
+/// order (the batch script), and the dealer answers its single request
+/// stream in arrival order — so the global reply stream matches
+/// `outstanding` front-to-back, and per-tag `recv_tagged` order equals
+/// per-request reply order. Expansion is pure (seeded PRG), so *when* it
+/// runs cannot change the transcript — guarded by
+/// `secureml_depths_are_transcript_equal`.
+struct DealerFeed {
+    /// Requests awaiting full reply, in fire order, with parts collected
+    /// so far.
+    outstanding: VecDeque<(u64, Req, Vec<Payload>)>,
+    /// Expanded material per batch tag, in request order.
+    ready: HashMap<u64, VecDeque<Material>>,
+}
+
+impl DealerFeed {
+    fn new() -> Self {
+        DealerFeed { outstanding: VecDeque::new(), ready: HashMap::new() }
+    }
+
+    fn parts_needed(req: &Req) -> usize {
+        match req {
+            Req::Mat(..) | Req::Elem(_) => 2, // Seed + correction
+            Req::Bool(_) => 5,                // Seed + 4 explicit payloads
+        }
+    }
+
+    fn expand(req: Req, mut parts: Vec<Payload>) -> Result<Material> {
+        let mut rest = parts.split_off(1);
+        let seed = parts.pop().expect("seed part").into_seed()?;
+        Ok(match req {
+            Req::Mat(m, k, n) => Material::Mat(dealer::mat_triple_from_parts(
+                seed,
+                rest.pop().expect("w part").into_u64s()?,
+                m,
+                k,
+                n,
+            )),
+            Req::Elem(len) => Material::Elem(dealer::elem_triple_from_parts(
+                seed,
+                rest.pop().expect("w part").into_u64s()?,
+                len,
+            )),
+            Req::Bool(lanes) => {
+                let dab_bits = rest.pop().expect("dab bits").into_bits()?;
+                let dab_arith = rest.pop().expect("dab arith").into_u64s()?;
+                let c = rest.pop().expect("and c").into_bits()?;
+                let eda_bits = rest.pop().expect("eda bits").into_bits()?;
+                Material::Bool(dealer::bool_bundle_from_parts(
+                    seed, eda_bits, c, dab_arith, dab_bits, lanes,
+                )?)
+            }
+        })
+    }
+
+    /// Fire one tagged request (prefetch stage).
+    fn request(&mut self, p: &mut dyn Channel, req: Req, tag: u64) -> Result<()> {
+        dealer::send_request_tagged(p, ids::DEALER, req, tag)?;
+        self.outstanding.push_back((tag, req, Vec::new()));
+        Ok(())
+    }
+
+    /// Non-blocking drain: pull every already-delivered reply off the
+    /// dealer link and expand completed requests, front to back.
+    fn pump(&mut self, p: &mut dyn Channel) -> Result<()> {
+        while let Some(front) = self.outstanding.front_mut() {
+            while front.2.len() < Self::parts_needed(&front.1) {
+                match p.try_recv_tagged(ids::DEALER, front.0)? {
+                    Some(payload) => front.2.push(payload),
+                    None => return Ok(()), // nothing more on the wire yet
+                }
+            }
+            let (tag, req, parts) = self.outstanding.pop_front().expect("front exists");
+            self.ready.entry(tag).or_default().push_back(Self::expand(req, parts)?);
+        }
+        Ok(())
+    }
+
+    /// Next material for `tag`, blocking on the wire only for whatever the
+    /// prefetch-window pumping did not get to.
+    fn next(&mut self, p: &mut dyn Channel, tag: u64) -> Result<Material> {
+        loop {
+            if let Some(m) = self.ready.get_mut(&tag).and_then(|q| q.pop_front()) {
+                return Ok(m);
+            }
+            let front = self.outstanding.front_mut().ok_or_else(|| {
+                Error::Protocol(format!("dealer feed empty while awaiting material for tag {tag}"))
+            })?;
+            while front.2.len() < Self::parts_needed(&front.1) {
+                front.2.push(p.recv_tagged(ids::DEALER, front.0)?);
+            }
+            let (t, req, parts) = self.outstanding.pop_front().expect("front exists");
+            self.ready.entry(t).or_default().push_back(Self::expand(req, parts)?);
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn mpc_party(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
@@ -295,10 +423,13 @@ fn mpc_party(
     split: &VerticalSplit,
     x_mine: Vec<f32>,
     y: Option<Vec<f32>>,
-    finals: Arc<Mutex<Vec<(MatF64, Option<Vec<f64>>)>>>,
     n_holders: usize,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
+    // A-side dealer feed: requests stream from Prefetch, replies are
+    // pumped opportunistically so triple expansion lands in the prefetch
+    // window (ROADMAP pipeline follow-up)
+    let mut feed = if role == 0 { Some(DealerFeed::new()) } else { None };
     let peer = if role == 0 { b_id } else { a_id };
     let me_is_a = role == 0;
     let (dims, acts, with_bias) = layer_plan(cfg);
@@ -381,11 +512,15 @@ fn mpc_party(
                 Step::Prefetch => {
                     p.set_stage("prefetch");
                     // A streams the whole batch's dealer script ahead of
-                    // demand; the dealer computes inside our wait windows
-                    if me_is_a {
+                    // demand; the dealer computes inside our wait windows.
+                    // Replies already on the wire are drained and expanded
+                    // HERE (opportunistic try_recv) so the PRG expansion
+                    // also moves off the critical path.
+                    if let Some(feed) = feed.as_mut() {
                         for req in batch_script(&dims, &acts, rows) {
-                            dealer::send_request_tagged(p, ids::DEALER, req, tag)?;
+                            feed.request(p, req, tag)?;
                         }
+                        feed.pump(p)?;
                     }
                     // input-share masks, drawn in schedule order
                     let r_x = RingMat::random(&mut rng, rows, dj);
@@ -448,7 +583,7 @@ fn mpc_party(
                     for l in 0..n_layers {
                         let a_in = act_shares.last().unwrap().clone();
                         let (m, k, n) = (rows, dims[l], dims[l + 1]);
-                        let triple = get_triple(p, role, m, k, n, tag)?;
+                        let triple = get_triple(p, &mut feed, role, m, k, n, tag)?;
                         let mut z = beaver_matmul(
                             p, peer, role, &a_in, &layers[l].w, &triple, &native_mm,
                         )?;
@@ -468,16 +603,16 @@ fn mpc_party(
                                 // piecewise: f = (b1-b2)(z+1/2) + b2
                                 let mut u = z.data.clone();
                                 add_const(&mut u, enc_const(0.5), role);
-                                let b1 = drelu(p, role, a_id, &u, tag)?;
+                                let b1 = drelu(p, &mut feed, role, &u, tag)?;
                                 let mut v = z.data.clone();
                                 add_const(&mut v, enc_const(-0.5), role);
-                                let b2 = drelu(p, role, a_id, &v, tag)?;
+                                let b2 = drelu(p, &mut feed, role, &v, tag)?;
                                 let d: Vec<u64> = b1
                                     .iter()
                                     .zip(&b2)
                                     .map(|(x, yv)| x.wrapping_sub(*yv))
                                     .collect();
-                                let et = get_elem_triple(p, role, lanes, tag)?;
+                                let et = get_elem_triple(p, &mut feed, role, lanes, tag)?;
                                 let prod = beaver_mul_elem(p, peer, role, &d, &u, &et)?;
                                 let f: Vec<u64> = prod
                                     .iter()
@@ -490,8 +625,8 @@ fn mpc_party(
                                 act_shares.push(RingMat::from_data(m, n, f));
                             }
                             Act::Relu => {
-                                let bb = drelu(p, role, a_id, &z.data, tag)?;
-                                let et = get_elem_triple(p, role, lanes, tag)?;
+                                let bb = drelu(p, &mut feed, role, &z.data, tag)?;
+                                let et = get_elem_triple(p, &mut feed, role, lanes, tag)?;
                                 let f = beaver_mul_elem(p, peer, role, &bb, &z.data, &et)?;
                                 deriv_shares.push(bb);
                                 act_shares.push(RingMat::from_data(m, n, f));
@@ -547,7 +682,7 @@ fn mpc_party(
                         let g_z = if deriv_shares[l].is_empty() {
                             g_out.clone()
                         } else {
-                            let et = get_elem_triple(p, role, m * n, tag)?;
+                            let et = get_elem_triple(p, &mut feed, role, m * n, tag)?;
                             let gz = beaver_mul_elem(
                                 p, peer, role, &deriv_shares[l], &g_out.data, &et,
                             )?;
@@ -555,7 +690,7 @@ fn mpc_party(
                         };
                         // g_W = a_in^T @ g_z
                         let a_in_t = act_shares[l].transpose();
-                        let triple = get_triple(p, role, k, m, n, tag)?;
+                        let triple = get_triple(p, &mut feed, role, k, m, n, tag)?;
                         let mut g_w = beaver_matmul(
                             p, peer, role, &a_in_t, &g_z, &triple, &native_mm,
                         )?;
@@ -573,7 +708,7 @@ fn mpc_party(
                         // g_in = g_z @ W^T (skip for the first layer)
                         if l > 0 {
                             let w_t = layers[l].w.transpose();
-                            let triple = get_triple(p, role, m, n, k, tag)?;
+                            let triple = get_triple(p, &mut feed, role, m, n, k, tag)?;
                             let mut g_in = beaver_matmul(
                                 p, peer, role, &g_z, &w_t, &triple, &native_mm,
                             )?;
@@ -602,9 +737,10 @@ fn mpc_party(
     parties::await_stop(p)?;
 
     // reconstruct final weights for evaluation: B sends shares to A,
-    // A decodes and stores (harness-only step)
+    // A decodes and returns them as named parameter blocks (harness-only
+    // step; the trainer's `finish` assembles them wherever it runs)
+    let mut params: Vec<(String, Vec<f64>)> = Vec::new();
     if me_is_a {
-        let mut out = Vec::new();
         for l in 0..n_layers {
             let wb = p.recv_u64s(peer)?;
             let w: Vec<f64> = layers[l]
@@ -614,20 +750,17 @@ fn mpc_party(
                 .zip(&wb)
                 .map(|(a, b)| fixed::decode(a.wrapping_add(*b)))
                 .collect();
-            let bias = if let Some(b) = &layers[l].b {
+            params.push((format!("w{l}"), w));
+            if let Some(b) = &layers[l].b {
                 let bb = p.recv_u64s(peer)?;
-                Some(
-                    b.iter()
-                        .zip(&bb)
-                        .map(|(x, yv)| fixed::decode(x.wrapping_add(*yv)))
-                        .collect(),
-                )
-            } else {
-                None
-            };
-            out.push((MatF64::from_data(dims[l], dims[l + 1], w), bias));
+                let bias: Vec<f64> = b
+                    .iter()
+                    .zip(&bb)
+                    .map(|(x, yv)| fixed::decode(x.wrapping_add(*yv)))
+                    .collect();
+                params.push((format!("b{l}"), bias));
+            }
         }
-        *finals.lock().unwrap() = out;
     } else {
         for l in 0..n_layers {
             p.send(peer, Payload::U64s(layers[l].w.data.clone()))?;
@@ -641,6 +774,7 @@ fn mpc_party(
         sim_time: p.now(),
         epoch_times,
         epoch_losses,
+        params,
         ..Default::default()
     })
 }
@@ -654,43 +788,79 @@ fn apply_update(param: &mut [u64], grad: &[u64], lr_enc: u64, role: u8) {
     }
 }
 
-/// Pull a matrix triple requested at prefetch under `tag` (A expands the
-/// correction reply, B expands its seed).
+/// Pull a matrix triple requested at prefetch under `tag`: A consumes its
+/// (possibly pre-expanded) feed material, B expands its seed at point of
+/// use.
 fn get_triple(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
+    feed: &mut Option<DealerFeed>,
     role: u8,
     m: usize,
     k: usize,
     n: usize,
     tag: u64,
-) -> Result<crate::smpc::MatTriple> {
-    if role == 0 {
-        dealer::recv_mat_triple_a(p, ids::DEALER, m, k, n, tag)
-    } else {
-        dealer::recv_mat_triple_b_tagged(p, ids::DEALER, m, k, n, tag)
+) -> Result<MatTriple> {
+    match feed {
+        Some(feed) => match feed.next(p, tag)? {
+            Material::Mat(t) if t.u.shape() == (m, k) && t.v.shape() == (k, n) => Ok(t),
+            Material::Mat(t) => Err(Error::Protocol(format!(
+                "dealer feed shape drift: wanted ({m},{k})x({k},{n}), got {:?}x{:?}",
+                t.u.shape(),
+                t.v.shape()
+            ))),
+            _ => Err(Error::Protocol("dealer feed kind drift: wanted Mat".into())),
+        },
+        None => {
+            debug_assert_ne!(role, 0);
+            dealer::recv_mat_triple_b_tagged(p, ids::DEALER, m, k, n, tag)
+        }
     }
 }
 
 fn get_elem_triple(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
+    feed: &mut Option<DealerFeed>,
     role: u8,
     len: usize,
     tag: u64,
-) -> Result<crate::smpc::matmul::ElemTriple> {
-    if role == 0 {
-        dealer::recv_elem_triple_a(p, ids::DEALER, len, tag)
-    } else {
-        dealer::recv_elem_triple_b_tagged(p, ids::DEALER, len, tag)
+) -> Result<ElemTriple> {
+    match feed {
+        Some(feed) => match feed.next(p, tag)? {
+            Material::Elem(t) if t.u.len() == len => Ok(t),
+            Material::Elem(t) => Err(Error::Protocol(format!(
+                "dealer feed shape drift: wanted {len} lanes, got {}",
+                t.u.len()
+            ))),
+            _ => Err(Error::Protocol("dealer feed kind drift: wanted Elem".into())),
+        },
+        None => {
+            debug_assert_ne!(role, 0);
+            dealer::recv_elem_triple_b_tagged(p, ids::DEALER, len, tag)
+        }
     }
 }
 
 /// DReLU over a share vector via a prefetched dealer bundle.
-fn drelu(p: &mut NetPort, role: u8, _a_id: usize, x: &[u64], tag: u64) -> Result<Vec<u64>> {
+fn drelu(
+    p: &mut dyn Channel,
+    feed: &mut Option<DealerFeed>,
+    role: u8,
+    x: &[u64],
+    tag: u64,
+) -> Result<Vec<u64>> {
     let lanes = x.len();
-    let mut bundle = if role == 0 {
-        dealer::recv_bool_bundle_a(p, ids::DEALER, lanes, tag)?
-    } else {
-        dealer::recv_bool_bundle_b_tagged(p, ids::DEALER, lanes, tag)?
+    let mut bundle = match feed {
+        Some(feed) => match feed.next(p, tag)? {
+            Material::Bool(b) if b.eda.r_arith.len() == lanes => b,
+            Material::Bool(b) => {
+                return Err(Error::Protocol(format!(
+                    "dealer feed shape drift: wanted {lanes} lanes, got {}",
+                    b.eda.r_arith.len()
+                )))
+            }
+            _ => return Err(Error::Protocol("dealer feed kind drift: wanted Bool".into())),
+        },
+        None => dealer::recv_bool_bundle_b_tagged(p, ids::DEALER, lanes, tag)?,
     };
     let peer = if role == 0 { 3 } else { 1 };
     drelu_arith(p, peer, role, x, &bundle.eda, &mut bundle.bank, &bundle.dab)
@@ -733,8 +903,40 @@ fn eval_piecewise(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::FRAUD;
+    use crate::config::{TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
+    use crate::netsim::LinkSpec;
+
+    #[test]
+    fn secureml_transports_are_transcript_equal() {
+        // whole-network MPC over real loopback sockets (shares, boolean
+        // bundles, dealer streams through the wire codec) must train the
+        // exact same model as the netsim run, at depths 1 and 4
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 13);
+        for depth in [1usize, 4] {
+            let mut digests = Vec::new();
+            for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+                let tc = TrainConfig {
+                    batch: 64,
+                    epochs: 1,
+                    lr_override: Some(0.05),
+                    pipeline_depth: depth,
+                    transport: kind,
+                    ..Default::default()
+                };
+                let rep = SecureMl
+                    .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                    .unwrap();
+                assert_ne!(rep.weight_digest, 0);
+                digests.push(rep.weight_digest);
+            }
+            assert_eq!(
+                digests[0], digests[1],
+                "SecureML over TCP diverged from netsim at depth {depth}"
+            );
+        }
+    }
 
     #[test]
     fn layer_plan_shapes() {

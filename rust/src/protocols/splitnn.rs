@@ -17,18 +17,17 @@
 //! bench covers this baseline too.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
-use crate::netsim::{LinkSpec, NetPort, Payload};
+use crate::netsim::Payload;
 use crate::nn::MatF64;
-use crate::parties::{self, ids, run_parties, PartyOut};
-use crate::runtime::{Engine, TensorIn};
+use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::Pcg64;
+use crate::runtime::{Engine, TensorIn};
+use crate::transport::Channel;
 use crate::{Error, Result};
 
 pub struct SplitNn;
@@ -43,45 +42,31 @@ impl Trainer for SplitNn {
         "SplitNN"
     }
 
-    fn train(
+    fn deployment(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
-        spec: LinkSpec,
         train: &Dataset,
-        test: &Dataset,
+        _test: &Dataset,
         n_holders: usize,
-    ) -> Result<TrainReport> {
-        let wall = Instant::now();
-        crate::exec::set_default_threads(tc.exec_threads);
+    ) -> Result<Deployment> {
         let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
         let usplit = unit_split(cfg.h1_dim, n_holders);
         let plan = super::spnn::batch_plan(train.len(), tc.batch);
         let params = ModelParams::init(cfg, tc.seed);
-        // encoders: holder j maps its d_j features to its u_j units
-        let encoders: Arc<Mutex<Vec<MatF64>>> = Arc::new(Mutex::new(
-            (0..n_holders)
-                .map(|j| {
-                    let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
-                    MatF64::xavier(&mut rng, fsplit.width(j), usplit.width(j))
-                })
-                .collect(),
-        ));
-        let server_state: Arc<Mutex<ModelParams>> = Arc::new(Mutex::new(params));
 
         let mut names = vec!["coord".to_string(), "server".to_string(), "dealer".to_string()];
         for j in 0..n_holders {
             names.push(format!("holder{j}"));
         }
-        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        let mut fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = Vec::new();
+        let mut fns: Vec<PartyFn> = Vec::new();
 
         // coordinator
         {
             let workers: Vec<usize> = (1..names.len()).filter(|&i| i != ids::DEALER).collect();
             let epochs = tc.epochs;
-            fns.push(Box::new(move |mut p: NetPort| {
-                parties::coordinator_run(&mut p, &workers, ids::SERVER, epochs)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                parties::coordinator_run(p, &workers, ids::SERVER, epochs)
             }));
         }
         // server (owns labels in SplitNN!)
@@ -90,31 +75,67 @@ impl Trainer for SplitNn {
             let tc = tc.clone();
             let plan = plan.clone();
             let y = train.y.clone();
-            let st = server_state.clone();
-            fns.push(Box::new(move |mut p: NetPort| {
-                server_role(&mut p, &cfg, &tc, &plan, &y, st, n_holders)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                server_role(p, &cfg, &tc, &plan, &y, params, n_holders)
             }));
         }
         // dealer: unused in SplitNN — parks until the process ends
-        fns.push(Box::new(move |_p: NetPort| Ok(PartyOut::default())));
-        // holders
+        fns.push(Box::new(move |_p: &mut dyn Channel| Ok(PartyOut::default())));
+        // holders: encoder init derived from the seed (holder j maps its
+        // d_j features to its u_j cut-layer units)
         for j in 0..n_holders {
             let tc = tc.clone();
             let plan = plan.clone();
             let xj = fsplit.slice_x(&train.x, cfg.n_features, j);
             let dj = fsplit.width(j);
-            let enc = encoders.clone();
+            let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
+            let enc = MatF64::xavier(&mut rng, dj, usplit.width(j));
             let cfg = cfg.clone();
-            fns.push(Box::new(move |mut p: NetPort| {
-                holder_role(&mut p, &cfg, &tc, &plan, j, xj, dj, enc)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                holder_role(p, &cfg, &tc, &plan, j, xj, dj, enc)
             }));
         }
+        Ok(Deployment { names, fns })
+    }
 
-        let (outs, stats) = run_parties(&name_refs, spec, fns)?;
+    fn finish(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        test: &Dataset,
+        outs: &[PartyOut],
+        net: NetSummary,
+        wall_seconds: f64,
+    ) -> Result<TrainReport> {
+        let n_holders = outs.len() - ids::HOLDER0;
+        let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
+        let usplit = unit_split(cfg.h1_dim, n_holders);
+        // encoders from the holders, server stack + label layer from the
+        // server (theta0 stays at init — SplitNN never trains it)
+        let mut encoders = Vec::with_capacity(n_holders);
+        for j in 0..n_holders {
+            let data = outs[ids::holder(j)].need_param("enc")?;
+            if data.len() != fsplit.width(j) * usplit.width(j) {
+                return Err(Error::Protocol(format!("holder{j}: encoder size")));
+            }
+            encoders.push(MatF64::from_data(fsplit.width(j), usplit.width(j), data.to_vec()));
+        }
+        let mut sp = ModelParams::init(cfg, tc.seed);
+        for (i, m) in sp.server.iter_mut().enumerate() {
+            let got = outs[ids::SERVER].need_param(&format!("server{i}"))?;
+            if got.len() != m.data.len() {
+                return Err(Error::Protocol(format!("server{i}: param size")));
+            }
+            m.data.copy_from_slice(got);
+        }
+        let wy = outs[ids::SERVER].need_param("wy")?;
+        let by = outs[ids::SERVER].need_param("by")?;
+        if wy.len() != sp.wy.data.len() || by.len() != sp.by.data.len() {
+            return Err(Error::Protocol("server: label-layer param size".into()));
+        }
+        sp.wy.data.copy_from_slice(wy);
+        sp.by.data.copy_from_slice(by);
 
-        // evaluation: encoders (holders) + server stack on test data
-        let encoders = encoders.lock().unwrap().clone();
-        let sp = server_state.lock().unwrap().clone();
         let mut engine = Engine::load_default()?;
         let (a, test_loss) =
             eval_splitnn(&mut engine, cfg, &fsplit, &usplit, &encoders, &sp, test)?;
@@ -133,28 +154,27 @@ impl Trainer for SplitNn {
             train_losses: outs[ids::COORDINATOR].epoch_losses.clone(),
             test_losses: vec![test_loss],
             epoch_times: outs[ids::SERVER].epoch_times.clone(),
-            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
-            offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
-            stages: stats.stage_rows(),
+            online_bytes: net.online_bytes,
+            offline_bytes: net.offline_bytes,
+            stages: net.stages,
             weight_digest: digest.0,
-            wall_seconds: wall.elapsed().as_secs_f64(),
+            wall_seconds,
         })
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn server_role(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
     y: &[f32],
-    st: Arc<Mutex<ModelParams>>,
+    mut params: ModelParams,
     n_holders: usize,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
     let mut engine = Engine::load_default()?;
-    let mut params = st.lock().unwrap().clone();
     let mut up = Updater::new(tc, cfg, tc.seed ^ 0x3e7);
     let cap = ModelConfig::pick_batch(tc.batch);
     let h1 = cfg.h1_dim;
@@ -261,28 +281,35 @@ fn server_role(
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
     }
     parties::await_stop(p)?;
-    *st.lock().unwrap() = params;
+    let mut out_params: Vec<(String, Vec<f64>)> = params
+        .server
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (format!("server{i}"), m.data.clone()))
+        .collect();
+    out_params.push(("wy".to_string(), params.wy.data));
+    out_params.push(("by".to_string(), params.by.data));
     Ok(PartyOut {
         sim_time: p.now(),
         epoch_times: times,
         epoch_losses: losses,
+        params: out_params,
         ..Default::default()
     })
 }
 
 #[allow(clippy::too_many_arguments)]
 fn holder_role(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
     j: usize,
     xj: Vec<f32>,
     dj: usize,
-    enc: Arc<Mutex<Vec<MatF64>>>,
+    mut w: MatF64,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
-    let mut w = enc.lock().unwrap()[j].clone();
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x591 + j as u64));
     for _ in 0..epochs {
         // decoded feature blocks staged ahead; in-flight block for backward
@@ -323,8 +350,11 @@ fn holder_role(
         })?;
     }
     parties::await_stop(p)?;
-    enc.lock().unwrap()[j] = w;
-    Ok(PartyOut { sim_time: p.now(), ..Default::default() })
+    Ok(PartyOut {
+        sim_time: p.now(),
+        params: vec![("enc".to_string(), w.data)],
+        ..Default::default()
+    })
 }
 
 /// Plaintext evaluation of the SplitNN composite model.
@@ -388,8 +418,33 @@ fn eval_splitnn(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::FRAUD;
+    use crate::config::{TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
+    use crate::netsim::LinkSpec;
+
+    #[test]
+    fn splitnn_transports_are_transcript_equal() {
+        // plaintext cut-layer traffic (F32s payloads) through the real
+        // wire codec must train the same composite model as netsim
+        let ds = synth_fraud(SynthOpts::small(400));
+        let (train, test) = ds.split(0.8, 31);
+        let mut digests = Vec::new();
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let tc = TrainConfig {
+                batch: 128,
+                epochs: 2,
+                lr_override: Some(0.3),
+                transport: kind,
+                ..Default::default()
+            };
+            let rep = SplitNn
+                .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                .unwrap();
+            assert_ne!(rep.weight_digest, 0);
+            digests.push(rep.weight_digest);
+        }
+        assert_eq!(digests[0], digests[1], "SplitNN over TCP diverged from netsim");
+    }
 
     #[test]
     fn splitnn_trains_small() {
@@ -398,7 +453,8 @@ mod tests {
         }
         let ds = synth_fraud(SynthOpts::small(2000));
         let (train, test) = ds.split(0.8, 3);
-        let tc = TrainConfig { batch: 256, epochs: 8, lr_override: Some(0.3), ..Default::default() };
+        let tc =
+            TrainConfig { batch: 256, epochs: 8, lr_override: Some(0.3), ..Default::default() };
         let rep = SplitNn
             .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
             .unwrap();

@@ -39,8 +39,6 @@
 //! is bit-identical at any depth (see `spnn_depths_are_transcript_equal`).
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use super::common::{evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
 use super::Trainer;
@@ -48,14 +46,15 @@ use crate::bignum::BigUint;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{Dataset, VerticalSplit};
 use crate::exec;
-use crate::netsim::{LinkSpec, NetPort, Payload};
+use crate::netsim::Payload;
 use crate::nn::MatF64;
 use crate::paillier::pack::{self, Packing};
 use crate::paillier::{keygen, NoncePool, PublicKey};
-use crate::parties::{self, ids, run_parties, PartyOut};
+use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::ChaChaRng;
 use crate::runtime::{Engine, TensorIn};
 use crate::smpc::{beaver_matmul, dealer, share2_from_mask, trunc_share_mat, RingMat};
+use crate::transport::Channel;
 use crate::{Error, Result};
 
 /// SPNN trainer; `he` selects Algorithm 3 (Paillier) over Algorithm 2 (SS).
@@ -84,38 +83,35 @@ impl Trainer for Spnn {
         }
     }
 
-    fn train(
+    fn deployment(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
-        spec: LinkSpec,
         train: &Dataset,
-        test: &Dataset,
+        _test: &Dataset,
         n_holders: usize,
-    ) -> Result<TrainReport> {
-        assert!(n_holders >= 2, "SPNN needs >= 2 data holders");
-        let wall = Instant::now();
-        exec::set_default_threads(tc.exec_threads);
+    ) -> Result<Deployment> {
+        if n_holders < 2 {
+            return Err(Error::Config("SPNN needs >= 2 data holders".into()));
+        }
         let split = VerticalSplit::even(cfg.n_features, n_holders);
         let plan = batch_plan(train.len(), tc.batch);
         let params = ModelParams::init(cfg, tc.seed);
-        let final_params: Arc<Mutex<ModelParams>> = Arc::new(Mutex::new(params.clone()));
 
         let n_parties = ids::HOLDER0 + n_holders;
         let mut names: Vec<String> = vec!["coord".into(), "server".into(), "dealer".into()];
         for i in 0..n_holders {
             names.push(format!("holder{i}"));
         }
-        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
 
-        let mut fns: Vec<Box<dyn FnOnce(NetPort) -> Result<PartyOut> + Send>> = Vec::new();
+        let mut fns: Vec<PartyFn> = Vec::new();
 
         // --- coordinator ---
         {
             let workers: Vec<usize> = (1..n_parties).collect();
             let epochs = tc.epochs;
-            fns.push(Box::new(move |mut p: NetPort| {
-                parties::coordinator_run(&mut p, &workers, ids::SERVER, epochs)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                parties::coordinator_run(p, &workers, ids::SERVER, epochs)
             }));
         }
 
@@ -125,10 +121,9 @@ impl Trainer for Spnn {
             let tc = tc.clone();
             let plan = plan.clone();
             let params = params.clone();
-            let fp = final_params.clone();
             let he = self.he;
-            fns.push(Box::new(move |mut p: NetPort| {
-                server_role(&mut p, &cfg, &tc, &plan, params, fp, he, n_holders)
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                server_role(p, &cfg, &tc, &plan, params, he, n_holders)
             }));
         }
 
@@ -136,15 +131,15 @@ impl Trainer for Spnn {
         {
             let he = self.he;
             let seed = tc.seed ^ 0xdea1;
-            fns.push(Box::new(move |mut p: NetPort| {
+            fns.push(Box::new(move |p: &mut dyn Channel| {
                 if he {
                     // HE runs have no preprocessing; wait for the stop order
-                    parties::await_start(&mut p)?;
-                    parties::await_stop(&mut p)?;
+                    parties::await_start(p)?;
+                    parties::await_stop(p)?;
                 } else {
-                    parties::await_start(&mut p)?;
-                    dealer::serve(&mut p, ids::holder(0), ids::holder(1), seed)?;
-                    parties::await_stop(&mut p)?;
+                    parties::await_start(p)?;
+                    dealer::serve(p, ids::holder(0), ids::holder(1), seed)?;
+                    parties::await_stop(p)?;
                 }
                 Ok(PartyOut::default())
             }));
@@ -156,7 +151,6 @@ impl Trainer for Spnn {
             let tc = tc.clone();
             let plan = plan.clone();
             let split = split.clone();
-            let fp = final_params.clone();
             let he = self.he;
             // holder j's private inputs
             let xj = split.slice_x(&train.x, cfg.n_features, j);
@@ -169,19 +163,55 @@ impl Trainer for Spnn {
                 h,
                 params.theta0.data[s * h..e * h].to_vec(),
             );
-            fns.push(Box::new(move |mut p: NetPort| {
-                holder_role(
-                    &mut p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, fp, he,
-                )
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                holder_role(p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, he)
             }));
         }
 
-        let (outs, stats) = run_parties(&name_refs, spec, fns)?;
+        Ok(Deployment { names, fns })
+    }
 
-        // evaluation on the assembled final parameters
-        let final_params = final_params.lock().unwrap().clone();
+    fn finish(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        test: &Dataset,
+        outs: &[PartyOut],
+        net: NetSummary,
+        wall_seconds: f64,
+    ) -> Result<TrainReport> {
+        // reassemble the final model from the parties' parameter blocks:
+        // theta0 rows from every holder, label layer from A, hidden stack
+        // from the server
+        let n_holders = outs.len() - ids::HOLDER0;
+        let split = VerticalSplit::even(cfg.n_features, n_holders);
+        let h = cfg.h1_dim;
+        let mut fp = ModelParams::init(cfg, tc.seed);
+        for j in 0..n_holders {
+            let blk = outs[ids::holder(j)].need_param("theta")?;
+            let (s, e) = split.ranges[j];
+            if blk.len() != (e - s) * h {
+                return Err(Error::Protocol(format!("holder{j}: theta block size")));
+            }
+            fp.theta0.data[s * h..e * h].copy_from_slice(blk);
+        }
+        for (i, m) in fp.server.iter_mut().enumerate() {
+            let got = outs[ids::SERVER].need_param(&format!("server{i}"))?;
+            if got.len() != m.data.len() {
+                return Err(Error::Protocol(format!("server{i}: param size")));
+            }
+            m.data.copy_from_slice(got);
+        }
+        let wy = outs[ids::holder(0)].need_param("wy")?;
+        let by = outs[ids::holder(0)].need_param("by")?;
+        if wy.len() != fp.wy.data.len() || by.len() != fp.by.data.len() {
+            return Err(Error::Protocol("holder0: label-layer param size".into()));
+        }
+        fp.wy.data.copy_from_slice(wy);
+        fp.by.data.copy_from_slice(by);
+
         let mut engine = Engine::load_default()?;
-        let (auc, test_loss) = evaluate(&mut engine, cfg, &final_params, test)?;
+        let (auc, test_loss) = evaluate(&mut engine, cfg, &fp, test)?;
 
         Ok(TrainReport {
             protocol: self.name().to_string(),
@@ -190,11 +220,11 @@ impl Trainer for Spnn {
             train_losses: outs[ids::COORDINATOR].epoch_losses.clone(),
             test_losses: vec![test_loss],
             epoch_times: outs[ids::SERVER].epoch_times.clone(),
-            online_bytes: stats.bytes_phase(crate::netsim::Phase::Online),
-            offline_bytes: stats.bytes_phase(crate::netsim::Phase::Offline),
-            stages: stats.stage_rows(),
-            weight_digest: final_params.digest(),
-            wall_seconds: wall.elapsed().as_secs_f64(),
+            online_bytes: net.online_bytes,
+            offline_bytes: net.offline_bytes,
+            stages: net.stages,
+            weight_digest: fp.digest(),
+            wall_seconds,
         })
     }
 }
@@ -205,12 +235,11 @@ impl Trainer for Spnn {
 
 #[allow(clippy::too_many_arguments)]
 fn server_role(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
     mut params: ModelParams,
-    fp: Arc<Mutex<ModelParams>>,
     he: bool,
     n_holders: usize,
 ) -> Result<PartyOut> {
@@ -355,7 +384,14 @@ fn server_role(
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
     }
     parties::await_stop(p)?;
-    fp.lock().unwrap().server = params.server;
+    // hand the trained hidden stack to whichever process assembles the
+    // final model (bit-exact f64 blocks; crosses the wire in launch mode)
+    out.params = params
+        .server
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (format!("server{i}"), m.data.clone()))
+        .collect();
     out.epoch_times = epoch_times;
     out.sim_time = p.now();
     Ok(out)
@@ -377,7 +413,7 @@ struct SsPre {
 
 #[allow(clippy::too_many_arguments)]
 fn holder_role(
-    p: &mut NetPort,
+    p: &mut dyn Channel,
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
@@ -387,7 +423,6 @@ fn holder_role(
     xj: Vec<f32>,
     yj: Option<Vec<f32>>,
     mut theta_j: MatF64,
-    fp: Arc<Mutex<ModelParams>>,
     he: bool,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
@@ -704,19 +739,17 @@ fn holder_role(
     }
     parties::await_stop(p)?;
 
-    // hand the final block to the evaluation harness (out-of-band)
-    {
-        let mut fp = fp.lock().unwrap();
-        let (s, e) = split.ranges[j];
-        fp.theta0.data[s * cfg.h1_dim..e * cfg.h1_dim].copy_from_slice(&theta_j.data);
-        if is_a {
-            fp.wy = wy;
-            fp.by = by;
-        }
+    // hand the final blocks to the evaluation harness: this holder's
+    // theta0 rows, plus the label layer from A
+    let mut params = vec![("theta".to_string(), theta_j.data)];
+    if is_a {
+        params.push(("wy".to_string(), wy.data));
+        params.push(("by".to_string(), by.data));
     }
     Ok(PartyOut {
         sim_time: p.now(),
         epoch_losses: train_losses,
+        params,
         ..Default::default()
     })
 }
@@ -724,12 +757,71 @@ fn holder_role(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::FRAUD;
+    use crate::config::{TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
+    use crate::netsim::LinkSpec;
     use crate::rng::{Pcg64, Rng64};
 
     fn artifacts_ready() -> bool {
         crate::runtime::default_artifact_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn spnn_ss_transports_are_transcript_equal() {
+        // ISSUE 3 acceptance: a run over real loopback TCP sockets (4+
+        // ports, one socket pair per party pair, full wire serialization)
+        // trains bit-identical weights to the in-process netsim run, at
+        // pipeline depths 1 and 4. Runs in tier-1: without AOT artifacts
+        // the engine's native graph fallback drives both runs identically.
+        let ds = synth_fraud(SynthOpts::small(520));
+        let (train, test) = ds.split(0.8, 21);
+        for depth in [1usize, 4] {
+            let mut digests = Vec::new();
+            for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+                let tc = TrainConfig {
+                    batch: 128,
+                    epochs: 1,
+                    pipeline_depth: depth,
+                    transport: kind,
+                    ..Default::default()
+                };
+                let rep = Spnn { he: false }
+                    .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                    .unwrap();
+                assert_ne!(rep.weight_digest, 0, "digest not populated ({kind:?})");
+                assert!(rep.online_bytes > 0, "no traffic accounted ({kind:?})");
+                digests.push(rep.weight_digest);
+            }
+            assert_eq!(
+                digests[0], digests[1],
+                "TCP transport diverged from netsim at depth {depth}"
+            );
+        }
+    }
+
+    #[test]
+    fn spnn_he_transports_are_transcript_equal() {
+        // the packed-ciphertext (CipherBlock) path through the real wire
+        // codec must also be bit-exact against the simulator
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 22);
+        let mut digests = Vec::new();
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let tc = TrainConfig {
+                batch: 128,
+                epochs: 1,
+                paillier_bits: 256, // test-size keys; experiments use 512/1024
+                pipeline_depth: 2,
+                transport: kind,
+                ..Default::default()
+            };
+            let rep = Spnn { he: true }
+                .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                .unwrap();
+            assert_ne!(rep.weight_digest, 0, "digest not populated ({kind:?})");
+            digests.push(rep.weight_digest);
+        }
+        assert_eq!(digests[0], digests[1], "HE over TCP diverged from netsim");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 mod artifact;
 mod engine;
+mod native;
 pub mod xla;
 
 pub use artifact::{Manifest, TensorSig, Dt};

@@ -1,0 +1,623 @@
+//! Native (pure-rust) fallback for the AOT artifact graphs.
+//!
+//! The PJRT path needs `make artifacts` (python/JAX, build-time) plus the
+//! real xla bindings — neither exists in offline containers or plain CI
+//! runners, which used to make every end-to-end trainer path unrunnable
+//! there. This module reimplements the small set of SPNN graphs
+//! (`python/compile/model.py`) directly on [`MatF64`], so
+//! [`Engine`](super::Engine) can fall back transparently when
+//! `artifacts/manifest.txt` is absent: `spnn train`, `spnn launch`, the
+//! transport-parity tests and the decentralized CI smoke job all run with
+//! zero toolchain beyond cargo.
+//!
+//! Numerics: f64 accumulation with f32 I/O at the artifact boundary. The
+//! values differ from the XLA-compiled f32 graphs in low-order bits, but
+//! every process/backend runs the identical code path, so transcripts
+//! (and `weight_digest`) stay bit-exact across netsim/TCP and
+//! single/multi-process runs — which is what the parity tests assert.
+//!
+//! Graph semantics mirrored from `model.py` (shapes per [`ModelConfig`]):
+//!
+//! * `server_fwd(h1, W1, b1, ...) -> (hL,)` — `a = act(h1)`, then
+//!   `a = act_i(a @ W_i + b_i)` per server layer.
+//! * `server_bwd(h1, g_hL, W1, b1, ...) -> (g_h1, g_W1, g_b1, ...)` —
+//!   recomputes the forward, then standard backprop (vjp).
+//! * `label_grad(hL, y, mask, wy, by) -> (p, loss, g_hL, g_wy, g_by)` —
+//!   masked mean BCE from the logit, numerically stable softplus.
+//! * `label_fwd(hL, wy, by) -> (p,)`.
+//! * `nn_train(x, y, mask, theta0, thetaS..., wy, by) ->
+//!   (loss, p, g_theta0, g_thetaS..., g_wy, g_by)` — the monolithic
+//!   plaintext graph.
+
+use crate::config::{Act, ModelConfig};
+use crate::nn::MatF64;
+use crate::{Error, Result};
+
+use super::engine::{TensorIn, TensorOut};
+
+/// Parse `<kind>_<dataset>_b<batch>` into the graph kind + model config.
+pub(crate) fn parse_name(name: &str) -> Result<(&str, &'static ModelConfig)> {
+    let (rest, _batch) = name
+        .rsplit_once("_b")
+        .ok_or_else(|| Error::Artifact(format!("{name}: not a <kind>_<ds>_b<N> artifact name")))?;
+    let (kind, ds) = rest
+        .rsplit_once('_')
+        .ok_or_else(|| Error::Artifact(format!("{name}: missing dataset component")))?;
+    let cfg = ModelConfig::by_name(ds)
+        .ok_or_else(|| Error::Artifact(format!("{name}: unknown dataset {ds:?}")))?;
+    Ok((kind, cfg))
+}
+
+/// Execute one graph natively. `ring_matmul` is intentionally absent — the
+/// engine's [`Engine::ring_matmul`](super::Engine::ring_matmul) shortcut
+/// handles it without flattening through the artifact calling convention.
+pub(crate) fn execute(name: &str, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let (kind, cfg) = parse_name(name)?;
+    match kind {
+        "server_fwd" => server_fwd(cfg, inputs),
+        "server_bwd" => server_bwd(cfg, inputs),
+        "label_grad" => label_grad(cfg, inputs),
+        "label_fwd" => label_fwd(cfg, inputs),
+        "nn_train" => nn_train(cfg, inputs),
+        other => Err(Error::Artifact(format!(
+            "{name}: no native fallback for graph kind {other:?} — run `make artifacts`"
+        ))),
+    }
+}
+
+fn f32_input<'a>(inputs: &'a [TensorIn], i: usize, what: &str) -> Result<&'a [f32]> {
+    match inputs.get(i) {
+        Some(TensorIn::F32(v)) => Ok(v),
+        Some(TensorIn::U64(_)) => Err(Error::Artifact(format!("input {i} ({what}): wanted f32"))),
+        None => Err(Error::Artifact(format!("missing input {i} ({what})"))),
+    }
+}
+
+fn act_apply(a: Act, x: f64) -> f64 {
+    match a {
+        Act::Sigmoid => sigmoid(x),
+        Act::Relu => x.max(0.0),
+        Act::Identity => x,
+    }
+}
+
+/// Activation derivative in terms of the activation *output*.
+fn act_grad_from_output(a: Act, out: f64) -> f64 {
+    match a {
+        Act::Sigmoid => out * (1.0 - out),
+        Act::Relu => f64::from(out > 0.0),
+        Act::Identity => 1.0,
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// `log(1 + e^z)`, stable for large |z| (jnp.logaddexp(0, z)).
+fn softplus(z: f64) -> f64 {
+    z.max(0.0) + (-z.abs()).exp().ln_1p()
+}
+
+/// Rows of a flat f32 slice given the column count (validated).
+fn rows_of(len: usize, cols: usize, what: &str) -> Result<usize> {
+    if cols == 0 || len % cols != 0 {
+        return Err(Error::Artifact(format!("{what}: length {len} not a multiple of {cols}")));
+    }
+    Ok(len / cols)
+}
+
+/// Server stack parameters (W, b) pairs from the artifact input list
+/// starting at `at`, shaped per the config.
+fn server_params(
+    cfg: &ModelConfig,
+    inputs: &[TensorIn],
+    at: usize,
+) -> Result<(Vec<MatF64>, Vec<Vec<f64>>)> {
+    let mut dims = vec![cfg.h1_dim];
+    dims.extend_from_slice(cfg.server_dims);
+    let mut ws = Vec::new();
+    let mut bs = Vec::new();
+    for (i, win) in dims.windows(2).enumerate() {
+        let w = f32_input(inputs, at + 2 * i, "W")?;
+        if w.len() != win[0] * win[1] {
+            return Err(Error::Artifact(format!(
+                "W{i}: wanted {}x{}, got {} elements",
+                win[0],
+                win[1],
+                w.len()
+            )));
+        }
+        ws.push(MatF64::from_f32(win[0], win[1], w));
+        let b = f32_input(inputs, at + 2 * i + 1, "b")?;
+        if b.len() != win[1] {
+            return Err(Error::Artifact(format!("b{i}: wanted {}, got {}", win[1], b.len())));
+        }
+        bs.push(b.iter().map(|&v| v as f64).collect());
+    }
+    Ok((ws, bs))
+}
+
+/// Forward through the server stack, returning every activation:
+/// `acts[0] = act(h1)`, `acts[i+1] = act_i(acts[i] @ W_i + b_i)`.
+fn stack_forward(
+    cfg: &ModelConfig,
+    h1: &MatF64,
+    ws: &[MatF64],
+    bs: &[Vec<f64>],
+) -> Vec<MatF64> {
+    let mut acts = vec![h1.map(|v| act_apply(cfg.first_act, v))];
+    for (i, (w, b)) in ws.iter().zip(bs).enumerate() {
+        let z = acts.last().unwrap().matmul(w).add_bias(b);
+        acts.push(z.map(|v| act_apply(cfg.server_acts[i], v)));
+    }
+    acts
+}
+
+/// Backprop `g` (gradient w.r.t. the stack output) through the stack.
+/// Returns `(g_h1, [(g_W_i, g_b_i)...])`.
+fn stack_backward(
+    cfg: &ModelConfig,
+    acts: &[MatF64],
+    ws: &[MatF64],
+    mut g: MatF64,
+) -> (MatF64, Vec<(MatF64, Vec<f64>)>) {
+    let n_layers = ws.len();
+    let mut grads: Vec<(MatF64, Vec<f64>)> = Vec::with_capacity(n_layers);
+    for i in (0..n_layers).rev() {
+        let out = &acts[i + 1];
+        let deriv = out.map(|v| act_grad_from_output(cfg.server_acts[i], v));
+        let g_z = g.hadamard(&deriv);
+        let g_w = acts[i].transpose().matmul(&g_z);
+        let g_b = g_z.col_sums();
+        g = g_z.matmul(&ws[i].transpose());
+        grads.push((g_w, g_b));
+    }
+    grads.reverse();
+    // through the first activation applied to h1 (derivative from output)
+    let first_deriv = acts[0].map(|v| act_grad_from_output(cfg.first_act, v));
+    (g.hadamard(&first_deriv), grads)
+}
+
+fn server_fwd(cfg: &ModelConfig, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let h1 = f32_input(inputs, 0, "h1")?;
+    let b = rows_of(h1.len(), cfg.h1_dim, "h1")?;
+    let (ws, bs) = server_params(cfg, inputs, 1)?;
+    let acts = stack_forward(cfg, &MatF64::from_f32(b, cfg.h1_dim, h1), &ws, &bs);
+    Ok(vec![TensorOut::F32(acts.last().unwrap().to_f32())])
+}
+
+fn server_bwd(cfg: &ModelConfig, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let h1 = f32_input(inputs, 0, "h1")?;
+    let b = rows_of(h1.len(), cfg.h1_dim, "h1")?;
+    let g_hl = f32_input(inputs, 1, "g_hl")?;
+    if g_hl.len() != b * cfg.hl_dim() {
+        return Err(Error::Artifact(format!(
+            "g_hl: wanted {}x{}, got {} elements",
+            b,
+            cfg.hl_dim(),
+            g_hl.len()
+        )));
+    }
+    let (ws, bs) = server_params(cfg, inputs, 2)?;
+    let h1 = MatF64::from_f32(b, cfg.h1_dim, h1);
+    let acts = stack_forward(cfg, &h1, &ws, &bs);
+    let g = MatF64::from_f32(b, cfg.hl_dim(), g_hl);
+    let (g_h1, grads) = stack_backward(cfg, &acts, &ws, g);
+    let mut outs = vec![TensorOut::F32(g_h1.to_f32())];
+    for (g_w, g_b) in grads {
+        outs.push(TensorOut::F32(g_w.to_f32()));
+        outs.push(TensorOut::F32(g_b.iter().map(|&v| v as f32).collect()));
+    }
+    Ok(outs)
+}
+
+/// Shared label-layer math: logit, probability, masked-mean BCE and the
+/// logit gradient `(sigmoid(z) - y) * mask / denom`.
+struct LabelOut {
+    p: Vec<f64>,
+    loss: f64,
+    d_logit: Vec<f64>,
+}
+
+fn label_core(hl: &MatF64, y: &[f32], mask: &[f32], wy: &[f64], by: f64) -> LabelOut {
+    let b = hl.rows;
+    let mut p = Vec::with_capacity(b);
+    let mut d_logit = vec![0.0; b];
+    let denom: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1.0);
+    let mut loss = 0.0;
+    for r in 0..b {
+        let mut z = by;
+        for c in 0..hl.cols {
+            z += hl.at(r, c) * wy[c];
+        }
+        let pr = sigmoid(z);
+        p.push(pr);
+        let yr = y[r] as f64;
+        let mr = mask[r] as f64;
+        loss += (softplus(z) - yr * z) * mr;
+        d_logit[r] = (pr - yr) * mr / denom;
+    }
+    LabelOut { p, loss: loss / denom, d_logit }
+}
+
+fn label_grad(cfg: &ModelConfig, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let hl_dim = cfg.hl_dim();
+    let hl = f32_input(inputs, 0, "hl")?;
+    let y = f32_input(inputs, 1, "y")?;
+    let mask = f32_input(inputs, 2, "mask")?;
+    let wy = f32_input(inputs, 3, "wy")?;
+    let by = f32_input(inputs, 4, "by")?;
+    let b = rows_of(hl.len(), hl_dim, "hl")?;
+    if y.len() != b || mask.len() != b || wy.len() != hl_dim || by.len() != 1 {
+        return Err(Error::Artifact("label_grad: input shape mismatch".into()));
+    }
+    let hl = MatF64::from_f32(b, hl_dim, hl);
+    let wy64: Vec<f64> = wy.iter().map(|&v| v as f64).collect();
+    let out = label_core(&hl, y, mask, &wy64, by[0] as f64);
+    // g_hl[r,c] = d_logit[r] * wy[c];  g_wy[c] = sum_r hl[r,c] * d_logit[r]
+    let mut g_hl = vec![0.0f32; b * hl_dim];
+    let mut g_wy = vec![0.0f64; hl_dim];
+    let mut g_by = 0.0f64;
+    for r in 0..b {
+        let d = out.d_logit[r];
+        g_by += d;
+        for c in 0..hl_dim {
+            g_hl[r * hl_dim + c] = (d * wy64[c]) as f32;
+            g_wy[c] += hl.at(r, c) * d;
+        }
+    }
+    Ok(vec![
+        TensorOut::F32(out.p.iter().map(|&v| v as f32).collect()),
+        TensorOut::F32(vec![out.loss as f32]),
+        TensorOut::F32(g_hl),
+        TensorOut::F32(g_wy.iter().map(|&v| v as f32).collect()),
+        TensorOut::F32(vec![g_by as f32]),
+    ])
+}
+
+fn label_fwd(cfg: &ModelConfig, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let hl_dim = cfg.hl_dim();
+    let hl = f32_input(inputs, 0, "hl")?;
+    let wy = f32_input(inputs, 1, "wy")?;
+    let by = f32_input(inputs, 2, "by")?;
+    let b = rows_of(hl.len(), hl_dim, "hl")?;
+    if wy.len() != hl_dim || by.len() != 1 {
+        return Err(Error::Artifact("label_fwd: input shape mismatch".into()));
+    }
+    let hl = MatF64::from_f32(b, hl_dim, hl);
+    let mut p = Vec::with_capacity(b);
+    for r in 0..b {
+        let mut z = by[0] as f64;
+        for c in 0..hl_dim {
+            z += hl.at(r, c) * wy[c] as f64;
+        }
+        p.push(sigmoid(z) as f32);
+    }
+    Ok(vec![TensorOut::F32(p)])
+}
+
+fn nn_train(cfg: &ModelConfig, inputs: &[TensorIn]) -> Result<Vec<TensorOut>> {
+    let x = f32_input(inputs, 0, "x")?;
+    let y = f32_input(inputs, 1, "y")?;
+    let mask = f32_input(inputs, 2, "mask")?;
+    let theta0 = f32_input(inputs, 3, "theta0")?;
+    let b = y.len();
+    if x.len() != b * cfg.n_features || mask.len() != b {
+        return Err(Error::Artifact("nn_train: input shape mismatch".into()));
+    }
+    if theta0.len() != cfg.n_features * cfg.h1_dim {
+        return Err(Error::Artifact("nn_train: theta0 shape mismatch".into()));
+    }
+    let ns = 2 * cfg.server_dims.len();
+    let (ws, bs) = server_params(cfg, inputs, 4)?;
+    let wy = f32_input(inputs, 4 + ns, "wy")?;
+    let by = f32_input(inputs, 5 + ns, "by")?;
+    if wy.len() != cfg.hl_dim() || by.len() != 1 {
+        return Err(Error::Artifact("nn_train: label params shape mismatch".into()));
+    }
+
+    let x = MatF64::from_f32(b, cfg.n_features, x);
+    let theta0 = MatF64::from_f32(cfg.n_features, cfg.h1_dim, theta0);
+    let h1 = x.matmul(&theta0);
+    let acts = stack_forward(cfg, &h1, &ws, &bs);
+    let al = acts.last().unwrap();
+    let wy64: Vec<f64> = wy.iter().map(|&v| v as f64).collect();
+    let out = label_core(al, y, mask, &wy64, by[0] as f64);
+
+    // label-layer gradients, then backprop into the stack and theta0
+    let hl_dim = cfg.hl_dim();
+    let mut g_al = MatF64::zeros(b, hl_dim);
+    let mut g_wy = vec![0.0f64; hl_dim];
+    let mut g_by = 0.0f64;
+    for r in 0..b {
+        let d = out.d_logit[r];
+        g_by += d;
+        for c in 0..hl_dim {
+            g_al.data[r * hl_dim + c] = d * wy64[c];
+            g_wy[c] += al.at(r, c) * d;
+        }
+    }
+    let (g_h1, grads) = stack_backward(cfg, &acts, &ws, g_al);
+    let g_theta0 = x.transpose().matmul(&g_h1);
+
+    let mut outs = vec![
+        TensorOut::F32(vec![out.loss as f32]),
+        TensorOut::F32(out.p.iter().map(|&v| v as f32).collect()),
+        TensorOut::F32(g_theta0.to_f32()),
+    ];
+    for (g_w, g_b) in grads {
+        outs.push(TensorOut::F32(g_w.to_f32()));
+        outs.push(TensorOut::F32(g_b.iter().map(|&v| v as f32).collect()));
+    }
+    outs.push(TensorOut::F32(g_wy.iter().map(|&v| v as f32).collect()));
+    outs.push(TensorOut::F32(vec![g_by as f32]));
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FRAUD;
+    use crate::rng::Pcg64;
+
+    fn rand_f32(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+        use crate::rng::Rng64;
+        (0..n)
+            .map(|_| {
+                let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+                ((u as f32) - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn name_parsing_resolves_kind_and_config() {
+        let (kind, cfg) = parse_name("server_fwd_fraud_b256").unwrap();
+        assert_eq!(kind, "server_fwd");
+        assert_eq!(cfg.name, "fraud");
+        let (kind, cfg) = parse_name("ring_matmul_distress_b5000").unwrap();
+        assert_eq!(kind, "ring_matmul");
+        assert_eq!(cfg.name, "distress");
+        assert!(parse_name("garbage").is_err());
+        assert!(parse_name("server_fwd_mars_b256").is_err());
+        assert!(execute("ring_matmul_fraud_b256", &[]).is_err());
+    }
+
+    #[test]
+    fn server_fwd_shapes_and_range() {
+        let b = 16;
+        let h1 = vec![0.1f32; b * 8];
+        let w = vec![0.05f32; 64];
+        let bias = vec![0.0f32; 8];
+        let outs = execute(
+            "server_fwd_fraud_b256",
+            &[TensorIn::F32(&h1), TensorIn::F32(&w), TensorIn::F32(&bias)],
+        )
+        .unwrap();
+        let hl = outs.into_iter().next().unwrap().f32().unwrap();
+        assert_eq!(hl.len(), b * 8);
+        assert!(hl.iter().all(|&v| v > 0.0 && v < 1.0), "sigmoid range");
+        // wrong shapes are rejected
+        assert!(execute("server_fwd_fraud_b256", &[TensorIn::F32(&h1)]).is_err());
+        assert!(execute(
+            "server_fwd_fraud_b256",
+            &[TensorIn::F32(&h1[..5]), TensorIn::F32(&w), TensorIn::F32(&bias)]
+        )
+        .is_err());
+    }
+
+    /// Finite-difference check of every gradient the label graph returns.
+    #[test]
+    fn label_grad_matches_finite_differences() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let b = 6;
+        let hl_dim = 8;
+        let hl = rand_f32(&mut rng, b * hl_dim, 1.0);
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let mut mask = vec![1.0f32; b];
+        mask[b - 1] = 0.0; // one padded row
+        let wy = rand_f32(&mut rng, hl_dim, 0.5);
+        let by = vec![0.1f32];
+        let run = |hl: &[f32], wy: &[f32], by: &[f32]| -> (f64, Vec<f32>, Vec<f32>, f32) {
+            let outs = execute(
+                "label_grad_fraud_b256",
+                &[
+                    TensorIn::F32(hl),
+                    TensorIn::F32(&y),
+                    TensorIn::F32(&mask),
+                    TensorIn::F32(wy),
+                    TensorIn::F32(by),
+                ],
+            )
+            .unwrap();
+            let loss = outs[1].scalar().unwrap();
+            let g_hl = outs[2].clone().f32().unwrap();
+            let g_wy = outs[3].clone().f32().unwrap();
+            let g_by = outs[4].clone().f32().unwrap()[0];
+            (loss, g_hl, g_wy, g_by)
+        };
+        let (_, g_hl, g_wy, g_by) = run(&hl, &wy, &by);
+        let eps = 1e-3f32;
+        let fd = |plus: f64, minus: f64| (plus - minus) / (2.0 * eps as f64);
+        // spot-check several coordinates of each gradient
+        for idx in [0usize, 7, 13, b * hl_dim - 1] {
+            let mut hp = hl.clone();
+            hp[idx] += eps;
+            let mut hm = hl.clone();
+            hm[idx] -= eps;
+            let want = fd(run(&hp, &wy, &by).0, run(&hm, &wy, &by).0);
+            assert!(
+                (g_hl[idx] as f64 - want).abs() < 1e-3,
+                "g_hl[{idx}]: {} vs fd {want}",
+                g_hl[idx]
+            );
+        }
+        for idx in 0..hl_dim {
+            let mut wp = wy.clone();
+            wp[idx] += eps;
+            let mut wm = wy.clone();
+            wm[idx] -= eps;
+            let want = fd(run(&hl, &wp, &by).0, run(&hl, &wm, &by).0);
+            assert!(
+                (g_wy[idx] as f64 - want).abs() < 1e-3,
+                "g_wy[{idx}]: {} vs fd {want}",
+                g_wy[idx]
+            );
+        }
+        let want = fd(run(&hl, &wy, &[by[0] + eps]).0, run(&hl, &wy, &[by[0] - eps]).0);
+        assert!((g_by as f64 - want).abs() < 1e-3, "g_by: {g_by} vs fd {want}");
+        // the padded row contributes no gradient
+        let pad_start = (b - 1) * hl_dim;
+        assert!(g_hl[pad_start..].iter().all(|&g| g == 0.0), "masked row leaked gradient");
+    }
+
+    /// Finite-difference check of the server backward graph.
+    #[test]
+    fn server_bwd_matches_finite_differences() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let b = 5;
+        let h1 = rand_f32(&mut rng, b * 8, 1.0);
+        let w = rand_f32(&mut rng, 64, 0.5);
+        let bias = rand_f32(&mut rng, 8, 0.2);
+        let g_hl = rand_f32(&mut rng, b * 8, 1.0);
+        // scalar objective: sum(hL * g_hl) — its gradient w.r.t. any input
+        // equals the vjp the graph computes
+        let fwd = |h1: &[f32], w: &[f32], bias: &[f32]| -> f64 {
+            let outs = execute(
+                "server_fwd_fraud_b256",
+                &[TensorIn::F32(h1), TensorIn::F32(w), TensorIn::F32(bias)],
+            )
+            .unwrap();
+            let hl = outs.into_iter().next().unwrap().f32().unwrap();
+            hl.iter().zip(&g_hl).map(|(&a, &g)| a as f64 * g as f64).sum()
+        };
+        let outs = execute(
+            "server_bwd_fraud_b256",
+            &[
+                TensorIn::F32(&h1),
+                TensorIn::F32(&g_hl),
+                TensorIn::F32(&w),
+                TensorIn::F32(&bias),
+            ],
+        )
+        .unwrap();
+        assert_eq!(outs.len(), 3); // g_h1, g_W1, g_b1
+        let g_h1 = outs[0].clone().f32().unwrap();
+        let g_w = outs[1].clone().f32().unwrap();
+        let g_b = outs[2].clone().f32().unwrap();
+        let eps = 1e-3f32;
+        for idx in [0usize, 11, b * 8 - 1] {
+            let mut p = h1.clone();
+            p[idx] += eps;
+            let mut m = h1.clone();
+            m[idx] -= eps;
+            let want = (fwd(&p, &w, &bias) - fwd(&m, &w, &bias)) / (2.0 * eps as f64);
+            assert!(
+                (g_h1[idx] as f64 - want).abs() < 2e-3,
+                "g_h1[{idx}]: {} vs fd {want}",
+                g_h1[idx]
+            );
+        }
+        for idx in [0usize, 33, 63] {
+            let mut p = w.clone();
+            p[idx] += eps;
+            let mut m = w.clone();
+            m[idx] -= eps;
+            let want = (fwd(&h1, &p, &bias) - fwd(&h1, &m, &bias)) / (2.0 * eps as f64);
+            assert!(
+                (g_w[idx] as f64 - want).abs() < 2e-3,
+                "g_W[{idx}]: {} vs fd {want}",
+                g_w[idx]
+            );
+        }
+        for idx in [0usize, 7] {
+            let mut p = bias.clone();
+            p[idx] += eps;
+            let mut m = bias.clone();
+            m[idx] -= eps;
+            let want = (fwd(&h1, &w, &p) - fwd(&h1, &w, &m)) / (2.0 * eps as f64);
+            assert!(
+                (g_b[idx] as f64 - want).abs() < 2e-3,
+                "g_b[{idx}]: {} vs fd {want}",
+                g_b[idx]
+            );
+        }
+    }
+
+    /// nn_train's loss must drop under plain gradient descent, and its
+    /// gradient for theta0 must match finite differences.
+    #[test]
+    fn nn_train_descends_and_theta0_grad_checks() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let b = 12;
+        let x = rand_f32(&mut rng, b * FRAUD.n_features, 1.0);
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let mask = vec![1.0f32; b];
+        let mut theta0 = rand_f32(&mut rng, FRAUD.n_features * 8, 0.3);
+        let mut w1 = rand_f32(&mut rng, 64, 0.3);
+        let mut b1 = vec![0.0f32; 8];
+        let mut wy = rand_f32(&mut rng, 8, 0.3);
+        let mut by = vec![0.0f32];
+        let run = |theta0: &[f32], w1: &[f32], b1: &[f32], wy: &[f32], by: &[f32]| {
+            execute(
+                "nn_train_fraud_b256",
+                &[
+                    TensorIn::F32(&x),
+                    TensorIn::F32(&y),
+                    TensorIn::F32(&mask),
+                    TensorIn::F32(theta0),
+                    TensorIn::F32(w1),
+                    TensorIn::F32(b1),
+                    TensorIn::F32(wy),
+                    TensorIn::F32(by),
+                ],
+            )
+            .unwrap()
+        };
+        // finite-difference check on theta0
+        let outs = run(&theta0, &w1, &b1, &wy, &by);
+        assert_eq!(outs.len(), 7); // loss, p, g_theta0, g_W1, g_b1, g_wy, g_by
+        let g_theta0 = outs[2].clone().f32().unwrap();
+        let eps = 1e-3f32;
+        for idx in [0usize, 57, theta0.len() - 1] {
+            let mut p = theta0.clone();
+            p[idx] += eps;
+            let mut m = theta0.clone();
+            m[idx] -= eps;
+            let want =
+                (run(&p, &w1, &b1, &wy, &by)[0].scalar().unwrap()
+                    - run(&m, &w1, &b1, &wy, &by)[0].scalar().unwrap())
+                    / (2.0 * eps as f64);
+            assert!(
+                (g_theta0[idx] as f64 - want).abs() < 2e-3,
+                "g_theta0[{idx}]: {} vs fd {want}",
+                g_theta0[idx]
+            );
+        }
+        // a few SGD steps reduce the loss
+        let first_loss = outs[0].scalar().unwrap();
+        let mut last = first_loss;
+        for _ in 0..30 {
+            let outs = run(&theta0, &w1, &b1, &wy, &by);
+            last = outs[0].scalar().unwrap();
+            let lr = 0.5f32;
+            let step = |p: &mut [f32], g: &[f32]| {
+                for (pv, gv) in p.iter_mut().zip(g) {
+                    *pv -= lr * gv;
+                }
+            };
+            step(&mut theta0, &outs[2].clone().f32().unwrap());
+            step(&mut w1, &outs[3].clone().f32().unwrap());
+            step(&mut b1, &outs[4].clone().f32().unwrap());
+            step(&mut wy, &outs[5].clone().f32().unwrap());
+            step(&mut by, &outs[6].clone().f32().unwrap());
+        }
+        assert!(last < first_loss, "loss did not descend: {first_loss} -> {last}");
+    }
+}

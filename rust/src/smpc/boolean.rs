@@ -17,8 +17,9 @@
 //!    batched secure-AND round.
 //! 3. **B2A** via dealer daBits to get an arithmetic share of the bit.
 
-use crate::netsim::{NetPort, PartyId, Payload};
+use crate::netsim::{PartyId, Payload};
 use crate::rng::{ChaChaRng, Rng64};
+use crate::transport::Channel;
 use crate::Result;
 
 /// Words needed to pack `lanes` bits.
@@ -243,7 +244,7 @@ impl BoolDealer {
 /// Batched secure AND of packed bit words (GMW + Beaver-style triples).
 /// One round: open `d = x ⊕ a`, `e = y ⊕ b`.
 pub fn secure_and(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     x: &[u64],
@@ -285,7 +286,7 @@ pub fn secure_and(
 /// so OR == XOR): `b_{i+1} = g_i ⊕ (p_i ∧ b_i)`; Kogge–Stone prefix:
 /// `(g,p) ∘ (g',p') = (g ⊕ (p ∧ g'), p ∧ p')`.
 pub fn shared_msb_of_diff(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     c_pub: &[u64],
@@ -369,7 +370,7 @@ fn tail_mask_for(w: usize, wpl: usize, lanes: usize) -> u64 {
 /// Convert XOR-shared bits to additive shares of 0/1 values using daBits.
 /// One opening round: `t = β ⊕ b` is public; `β = t + b - 2·t·b` is local.
 pub fn b2a(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     bool_share: &[u64],
@@ -403,7 +404,7 @@ pub fn b2a(
 ///
 /// Cost per 64-lane word: 1 opening + 6 AND rounds + 1 daBit opening.
 pub fn drelu_arith(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     x_share: &[u64],

@@ -37,8 +37,9 @@ use super::boolean::{words_for, BitMat, BoolBundle, DaBits, EdaBits, TripleBank}
 use super::matmul::ElemTriple;
 use super::ring::RingMat;
 use super::triple::{expand_triple_shares, expand_uv, MatTriple};
-use crate::netsim::{NetPort, PartyId, Payload, Phase, NO_TAG};
+use crate::netsim::{PartyId, Payload, Phase, NO_TAG};
 use crate::rng::{ChaChaRng, Rng64};
+use crate::transport::Channel;
 use crate::{Error, Result};
 
 /// One preprocessing request (the wire strings in [`serve`]'s protocol).
@@ -55,7 +56,7 @@ pub enum Req {
 /// A-side: fire one tagged request without blocking for the reply
 /// (prefetch stage). The dealer echoes the tag on every reply message.
 pub fn send_request_tagged(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     dealer: PartyId,
     req: Req,
     tag: u64,
@@ -92,7 +93,7 @@ fn expand_vec(seed: [u8; 32], nonce: u64, n: usize) -> Vec<u64> {
 /// Every reply is tagged with the request's tag, so prefetched requests
 /// for several future batches can be outstanding at once and the parties
 /// reassemble them per batch with `recv_tagged`.
-pub fn serve(port: &mut NetPort, a: PartyId, b: PartyId, seed: u64) -> Result<()> {
+pub fn serve(port: &mut dyn Channel, a: PartyId, b: PartyId, seed: u64) -> Result<()> {
     let mut rng = ChaChaRng::seed_from_u64(seed);
     port.set_stage("dealer");
     loop {
@@ -214,115 +215,40 @@ fn parse_dims(s: &str, n: usize) -> Result<Vec<usize>> {
 // Party-side
 // ---------------------------------------------------------------------------
 
-/// A-side (role 0): receive one matrix triple previously requested with
-/// [`send_request_tagged`] (`Req::Mat`) under `tag`.
-pub fn recv_mat_triple_a(
-    port: &mut NetPort,
-    dealer: PartyId,
+/// A-side expansion of a matrix triple from its two reply payloads (the
+/// expensive part — exposed so pipelined parties can expand material the
+/// moment it is polled off the wire, inside their prefetch window).
+pub fn mat_triple_from_parts(
+    seed: [u8; 32],
+    w: Vec<u64>,
     m: usize,
     k: usize,
     n: usize,
-    tag: u64,
-) -> Result<MatTriple> {
-    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
-    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
+) -> MatTriple {
     let (u, v) = expand_uv(seed, m, k, n);
-    Ok(MatTriple { u, v, w: RingMat::from_data(m, n, w) })
+    MatTriple { u, v, w: RingMat::from_data(m, n, w) }
 }
 
-/// A-side (role 0): request + receive one matrix triple (lock-step path).
-pub fn request_mat_triple(
-    port: &mut NetPort,
-    dealer: PartyId,
-    m: usize,
-    k: usize,
-    n: usize,
-) -> Result<MatTriple> {
-    send_request_tagged(port, dealer, Req::Mat(m, k, n), NO_TAG)?;
-    recv_mat_triple_a(port, dealer, m, k, n, NO_TAG)
-}
-
-/// B-side (role 1): receive the matching matrix triple under `tag`.
-pub fn recv_mat_triple_b_tagged(
-    port: &mut NetPort,
-    dealer: PartyId,
-    m: usize,
-    k: usize,
-    n: usize,
-    tag: u64,
-) -> Result<MatTriple> {
-    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
-    Ok(expand_triple_shares(seed, m, k, n))
-}
-
-/// B-side (role 1): receive the matching matrix triple (lock-step path).
-pub fn recv_mat_triple_b(
-    port: &mut NetPort,
-    dealer: PartyId,
-    m: usize,
-    k: usize,
-    n: usize,
-) -> Result<MatTriple> {
-    recv_mat_triple_b_tagged(port, dealer, m, k, n, NO_TAG)
-}
-
-/// A-side: receive an elementwise triple requested under `tag`.
-pub fn recv_elem_triple_a(
-    port: &mut NetPort,
-    dealer: PartyId,
-    len: usize,
-    tag: u64,
-) -> Result<ElemTriple> {
-    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
-    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
-    Ok(ElemTriple {
+/// A-side expansion of an elementwise triple from its reply payloads.
+pub fn elem_triple_from_parts(seed: [u8; 32], w: Vec<u64>, len: usize) -> ElemTriple {
+    ElemTriple {
         u: expand_vec(seed, NONCE_ELEM_U, len),
         v: expand_vec(seed, NONCE_ELEM_V, len),
         w,
-    })
+    }
 }
 
-/// A-side: request + receive an elementwise triple (lock-step path).
-pub fn request_elem_triple(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
-    send_request_tagged(port, dealer, Req::Elem(len), NO_TAG)?;
-    recv_elem_triple_a(port, dealer, len, NO_TAG)
-}
-
-/// B-side: receive the matching elementwise triple under `tag`.
-pub fn recv_elem_triple_b_tagged(
-    port: &mut NetPort,
-    dealer: PartyId,
-    len: usize,
-    tag: u64,
-) -> Result<ElemTriple> {
-    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
-    Ok(ElemTriple {
-        u: expand_vec(seed, NONCE_ELEM_U, len),
-        v: expand_vec(seed, NONCE_ELEM_V, len),
-        w: expand_vec(seed, NONCE_ELEM_W, len),
-    })
-}
-
-/// B-side: receive the matching elementwise triple (lock-step path).
-pub fn recv_elem_triple_b(port: &mut NetPort, dealer: PartyId, len: usize) -> Result<ElemTriple> {
-    recv_elem_triple_b_tagged(port, dealer, len, NO_TAG)
-}
-
-/// A-side: receive a boolean bundle (edaBit + AND bank + daBits) requested
-/// under `tag`, sized for one DReLU batch over `lanes` values.
-pub fn recv_bool_bundle_a(
-    port: &mut NetPort,
-    dealer: PartyId,
+/// A-side expansion of a boolean bundle from its five reply payloads.
+pub fn bool_bundle_from_parts(
+    seed: [u8; 32],
+    eda_bits: Vec<u64>,
+    c: Vec<u64>,
+    dab_arith: Vec<u64>,
+    dab_bits: Vec<u64>,
     lanes: usize,
-    tag: u64,
 ) -> Result<BoolBundle> {
     let words = super::boolean::drelu_triple_words(lanes);
     let wpl = words_for(lanes);
-    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
-    let eda_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
-    let c = port.recv_tagged(dealer, tag)?.into_bits()?;
-    let dab_arith = port.recv_tagged(dealer, tag)?.into_u64s()?;
-    let dab_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
     if eda_bits.len() != 64 * wpl || c.len() != words || dab_arith.len() != lanes {
         return Err(Error::Protocol("bool bundle size mismatch".into()));
     }
@@ -340,8 +266,125 @@ pub fn recv_bool_bundle_a(
     })
 }
 
+/// A-side (role 0): receive one matrix triple previously requested with
+/// [`send_request_tagged`] (`Req::Mat`) under `tag`.
+pub fn recv_mat_triple_a(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+    tag: u64,
+) -> Result<MatTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
+    Ok(mat_triple_from_parts(seed, w, m, k, n))
+}
+
+/// A-side (role 0): request + receive one matrix triple (lock-step path).
+pub fn request_mat_triple(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<MatTriple> {
+    send_request_tagged(port, dealer, Req::Mat(m, k, n), NO_TAG)?;
+    recv_mat_triple_a(port, dealer, m, k, n, NO_TAG)
+}
+
+/// B-side (role 1): receive the matching matrix triple under `tag`.
+pub fn recv_mat_triple_b_tagged(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+    tag: u64,
+) -> Result<MatTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    Ok(expand_triple_shares(seed, m, k, n))
+}
+
+/// B-side (role 1): receive the matching matrix triple (lock-step path).
+pub fn recv_mat_triple_b(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<MatTriple> {
+    recv_mat_triple_b_tagged(port, dealer, m, k, n, NO_TAG)
+}
+
+/// A-side: receive an elementwise triple requested under `tag`.
+pub fn recv_elem_triple_a(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    len: usize,
+    tag: u64,
+) -> Result<ElemTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let w = port.recv_tagged(dealer, tag)?.into_u64s()?;
+    Ok(elem_triple_from_parts(seed, w, len))
+}
+
+/// A-side: request + receive an elementwise triple (lock-step path).
+pub fn request_elem_triple(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    len: usize,
+) -> Result<ElemTriple> {
+    send_request_tagged(port, dealer, Req::Elem(len), NO_TAG)?;
+    recv_elem_triple_a(port, dealer, len, NO_TAG)
+}
+
+/// B-side: receive the matching elementwise triple under `tag`.
+pub fn recv_elem_triple_b_tagged(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    len: usize,
+    tag: u64,
+) -> Result<ElemTriple> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    Ok(ElemTriple {
+        u: expand_vec(seed, NONCE_ELEM_U, len),
+        v: expand_vec(seed, NONCE_ELEM_V, len),
+        w: expand_vec(seed, NONCE_ELEM_W, len),
+    })
+}
+
+/// B-side: receive the matching elementwise triple (lock-step path).
+pub fn recv_elem_triple_b(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    len: usize,
+) -> Result<ElemTriple> {
+    recv_elem_triple_b_tagged(port, dealer, len, NO_TAG)
+}
+
+/// A-side: receive a boolean bundle (edaBit + AND bank + daBits) requested
+/// under `tag`, sized for one DReLU batch over `lanes` values.
+pub fn recv_bool_bundle_a(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    lanes: usize,
+    tag: u64,
+) -> Result<BoolBundle> {
+    let seed = port.recv_tagged(dealer, tag)?.into_seed()?;
+    let eda_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
+    let c = port.recv_tagged(dealer, tag)?.into_bits()?;
+    let dab_arith = port.recv_tagged(dealer, tag)?.into_u64s()?;
+    let dab_bits = port.recv_tagged(dealer, tag)?.into_bits()?;
+    bool_bundle_from_parts(seed, eda_bits, c, dab_arith, dab_bits, lanes)
+}
+
 /// A-side: request + receive a boolean bundle (lock-step path).
-pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+pub fn request_bool_bundle(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    lanes: usize,
+) -> Result<BoolBundle> {
     send_request_tagged(port, dealer, Req::Bool(lanes), NO_TAG)?;
     recv_bool_bundle_a(port, dealer, lanes, NO_TAG)
 }
@@ -349,7 +392,7 @@ pub fn request_bool_bundle(port: &mut NetPort, dealer: PartyId, lanes: usize) ->
 /// B-side: expand the matching boolean bundle from the dealer seed
 /// received under `tag`.
 pub fn recv_bool_bundle_b_tagged(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     dealer: PartyId,
     lanes: usize,
     tag: u64,
@@ -360,7 +403,11 @@ pub fn recv_bool_bundle_b_tagged(
 }
 
 /// B-side: expand the matching boolean bundle (lock-step path).
-pub fn recv_bool_bundle_b(port: &mut NetPort, dealer: PartyId, lanes: usize) -> Result<BoolBundle> {
+pub fn recv_bool_bundle_b(
+    port: &mut dyn Channel,
+    dealer: PartyId,
+    lanes: usize,
+) -> Result<BoolBundle> {
     recv_bool_bundle_b_tagged(port, dealer, lanes, NO_TAG)
 }
 
@@ -402,14 +449,14 @@ fn mask_tail(words: &mut [u64], wpl: usize, lanes: usize) {
 }
 
 /// Stop the dealer (protocol teardown).
-pub fn stop(port: &mut NetPort, dealer: PartyId) -> Result<()> {
+pub fn stop(port: &mut dyn Channel, dealer: PartyId) -> Result<()> {
     port.send_phase(dealer, Payload::Control("stop".into()), Phase::Offline)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::netsim::{full_mesh, LinkSpec};
+    use crate::netsim::{full_mesh, LinkSpec, NetPort};
     use crate::rng::Pcg64;
     use crate::smpc::boolean::drelu_arith;
     use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm};

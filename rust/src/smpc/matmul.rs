@@ -9,7 +9,8 @@
 
 use super::ring::RingMat;
 use super::triple::MatTriple;
-use crate::netsim::{NetPort, PartyId, Payload};
+use crate::netsim::{PartyId, Payload};
+use crate::transport::Channel;
 use crate::Result;
 
 /// Pluggable ring-matmul backend: the protocols call this for every local
@@ -29,7 +30,7 @@ pub fn native_mm(a: &RingMat, b: &RingMat) -> RingMat {
 /// `F_p = <Y>_p - <V>_p`; reconstruct `E, F`; combine locally:
 /// `<Z>_p = [p=0]·E·F + E·<V>_p + <U>_p·F + <W>_p`.
 pub fn beaver_matmul(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     x: &RingMat,
@@ -78,7 +79,7 @@ pub struct ElemTriple {
 
 /// Beaver elementwise (Hadamard) product of two shared vectors.
 pub fn beaver_mul_elem(
-    port: &mut NetPort,
+    port: &mut dyn Channel,
     peer: PartyId,
     role: u8,
     x: &[u64],

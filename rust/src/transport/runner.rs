@@ -1,0 +1,285 @@
+//! Multi-process deployment runner: the engine behind `spnn launch` and
+//! `spnn party`.
+//!
+//! * [`run_party`] — one worker process: join the session, rebuild the
+//!   deployment locally from the broadcast config (datasets re-synthesize
+//!   deterministically from the seed — private inputs never travel), run
+//!   this party's role body over a [`TcpPort`], ship the [`PartyOut`]
+//!   back to the coordinator, flush and exit.
+//! * [`run_launch`] — the coordinator process: host the rendezvous
+//!   (optionally spawning the other roles as child OS processes of the
+//!   same binary), run the coordinator role, collect every worker's
+//!   `PartyOut` over the wire, and assemble the final [`TrainReport`]
+//!   through the trainer's `finish` step — producing the same
+//!   `weight_digest` an in-process run reports (asserted by the
+//!   decentralized smoke test).
+//!
+//! Traffic accounting: each process counts the bytes *it* sends (the same
+//! sender-side accounting netsim uses) and reports them as metrics in its
+//! `PartyOut`; the coordinator sums them into whole-mesh totals. Virtual
+//! time still works — departure stamps ride the wire frames — so reports
+//! carry both sim-time and wall-clock numbers.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::session::{self, SessionSpec};
+use super::tcp::{port_from_streams, TcpPort};
+use crate::netsim::{NetStats, Phase};
+use crate::parties::{self, Deployment, NetSummary};
+use crate::protocols::{self, TrainReport};
+use crate::{Error, Result};
+
+/// Whole-session rendezvous deadline (covers process spawn + handshake).
+pub const SESSION_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn trainer_for(spec: &SessionSpec) -> Result<Box<dyn protocols::Trainer>> {
+    protocols::by_name(&spec.protocol)
+        .ok_or_else(|| Error::Config(format!("unknown protocol {:?}", spec.protocol)))
+}
+
+/// Trainer + deployment + the pieces `finish` needs later, so the
+/// (potentially large) synthetic dataset is derived exactly once.
+struct Prepared {
+    trainer: Box<dyn protocols::Trainer>,
+    dep: Deployment,
+    cfg: &'static crate::config::ModelConfig,
+    test: crate::data::Dataset,
+}
+
+fn build_deployment(spec: &SessionSpec) -> Result<Prepared> {
+    let trainer = trainer_for(spec)?;
+    let (cfg, train, test) = spec.datasets()?;
+    crate::exec::set_default_threads(spec.tc.exec_threads);
+    let dep = trainer.deployment(cfg, &spec.tc, &train, &test, spec.holders)?;
+    Ok(Prepared { trainer, dep, cfg, test })
+}
+
+/// Per-party sender-side byte totals, attached to the shipped `PartyOut`.
+fn traffic_metrics(stats: &NetStats, id: usize) -> Vec<(String, f64)> {
+    vec![
+        ("online_bytes_sent".into(), stats.bytes_sent_by(id, Phase::Online) as f64),
+        ("offline_bytes_sent".into(), stats.bytes_sent_by(id, Phase::Offline) as f64),
+    ]
+}
+
+/// Run one worker party: `spnn party --role <role> --connect <addr>`.
+pub fn run_party(connect: &str, role: &str, bind_host: &str) -> Result<()> {
+    let sess = session::join(connect, role, bind_host, SESSION_TIMEOUT)?;
+    let Prepared { dep, .. } = build_deployment(&sess.spec)?;
+    if dep.names.len() != sess.n {
+        return Err(Error::Protocol(format!(
+            "topology mismatch: local deployment has {} parties, session has {}",
+            dep.names.len(),
+            sess.n
+        )));
+    }
+    if dep.names.get(sess.id).map(|s| s.as_str()) != Some(role) {
+        return Err(Error::Protocol(format!(
+            "topology mismatch: session assigned id {} but local role table says {:?}",
+            sess.id,
+            dep.names.get(sess.id)
+        )));
+    }
+    eprintln!(
+        "spnn party: joined as {role} (party {}/{}) for {} on {}",
+        sess.id,
+        sess.n,
+        sess.spec.protocol,
+        sess.spec.dataset
+    );
+    let name_refs: Vec<&str> = dep.names.iter().map(|s| s.as_str()).collect();
+    let stats = Arc::new(NetStats::new(&name_refs));
+    let (port, writers) =
+        port_from_streams(sess.id, &name_refs, sess.streams, sess.spec.link(), stats.clone())?;
+    let mut port = TcpPort::new(port, writers, stats.clone());
+
+    let f = dep
+        .fns
+        .into_iter()
+        .nth(sess.id)
+        .ok_or_else(|| Error::Protocol("role body missing".into()))?;
+    let mut out = f(&mut port)?;
+    out.metrics.extend(traffic_metrics(&stats, sess.id));
+    parties::send_party_out(&mut port, 0, &out)?;
+    port.shutdown(); // join writers: the PartyOut is flushed before exit
+    eprintln!("spnn party: {role} done (sim {:.2}s)", out.sim_time);
+    Ok(())
+}
+
+/// Options for [`run_launch`].
+pub struct LaunchOpts {
+    /// Rendezvous bind address (`127.0.0.1:0` = ephemeral loopback).
+    pub listen: String,
+    /// Spawn the worker roles as child processes of this binary. When
+    /// false, the launcher prints the `spnn party` command lines and waits
+    /// for manual joins (multi-terminal / multi-host mode).
+    pub spawn: bool,
+}
+
+/// Kill-on-drop guard so a failed rendezvous never leaves orphan workers.
+struct ChildGuard(Vec<(String, Child)>);
+
+impl ChildGuard {
+    fn wait_all(&mut self) -> Result<()> {
+        for (role, child) in self.0.drain(..) {
+            let status = child.wait_with_output().map_err(Error::Io)?;
+            if !status.status.success() {
+                return Err(Error::Protocol(format!(
+                    "party process {role} exited with {:?}",
+                    status.status.code()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for (_, child) in self.0.iter_mut() {
+            let _ = child.kill();
+        }
+        for (_, mut child) in self.0.drain(..) {
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Host a full decentralized run: rendezvous + coordinator role + result
+/// collection + report assembly.
+pub fn run_launch(spec: &SessionSpec, opts: &LaunchOpts) -> Result<TrainReport> {
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| Error::Net(format!("bind {}: {e}", opts.listen)))?;
+    run_launch_on(listener, spec, opts)
+}
+
+/// [`run_launch`] on an already-bound rendezvous listener (lets callers
+/// learn the ephemeral port before the workers need it).
+pub fn run_launch_on(
+    listener: TcpListener,
+    spec: &SessionSpec,
+    opts: &LaunchOpts,
+) -> Result<TrainReport> {
+    let wall = Instant::now();
+    let Prepared { trainer, dep, cfg, test } = build_deployment(spec)?;
+    let n = dep.names.len();
+    let addr = listener.local_addr().map_err(Error::Io)?.to_string();
+
+    let mut guard = ChildGuard(Vec::new());
+    if opts.spawn {
+        let exe = std::env::current_exe().map_err(Error::Io)?;
+        for role in &dep.names[1..] {
+            let child = Command::new(&exe)
+                .args(["party", "--role", role.as_str(), "--connect", addr.as_str()])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null()) // keep the report stream clean
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(Error::Io)?;
+            guard.0.push((role.clone(), child));
+        }
+        eprintln!("spnn launch: spawned {} party processes, rendezvous on {addr}", n - 1);
+    } else {
+        eprintln!("spnn launch: waiting for {} manual joins; run in other terminals:", n - 1);
+        for role in &dep.names[1..] {
+            eprintln!("  spnn party --role {role} --connect {addr}");
+        }
+    }
+
+    let hosted = session::host(&listener, spec, &dep.names, SESSION_TIMEOUT)?;
+    let name_refs: Vec<&str> = dep.names.iter().map(|s| s.as_str()).collect();
+    let stats = Arc::new(NetStats::new(&name_refs));
+    let (port, writers) =
+        port_from_streams(0, &name_refs, hosted.streams, spec.link(), stats.clone())?;
+    let mut port = TcpPort::new(port, writers, stats.clone());
+
+    let mut fns = dep.fns;
+    let f0 = fns.remove(0);
+    let mut outs = vec![f0(&mut port)?];
+    for id in 1..n {
+        outs.push(parties::recv_party_out(&mut port, id)?);
+    }
+    port.shutdown();
+    guard.wait_all()?;
+
+    // whole-mesh totals = own sends + every worker's reported sends
+    let mut online = stats.bytes_phase(Phase::Online);
+    let mut offline = stats.bytes_phase(Phase::Offline);
+    for out in &outs[1..] {
+        online += out.metric("online_bytes_sent").unwrap_or(0.0) as usize;
+        offline += out.metric("offline_bytes_sent").unwrap_or(0.0) as usize;
+    }
+    let net =
+        NetSummary { online_bytes: online, offline_bytes: offline, stages: stats.stage_rows() };
+    trainer.finish(cfg, &spec.tc, &test, &outs, net, wall.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn spec(proto: &str) -> SessionSpec {
+        SessionSpec {
+            protocol: proto.into(),
+            dataset: "fraud".into(),
+            rows: 320,
+            holders: 2,
+            mbps: 100.0,
+            tc: TrainConfig { epochs: 1, batch: 128, ..Default::default() },
+        }
+    }
+
+    /// In-process version of the multi-process flow: the launcher hosts
+    /// with `spawn: false` while threads play the worker processes via
+    /// `run_party` against the same rendezvous — exercising the entire
+    /// session + runner + result-collection path without forking.
+    #[test]
+    fn launch_and_parties_in_threads_match_netsim_digest() {
+        let mut s = spec("secureml"); // artifact-free protocol, runs anywhere
+        s.tc.lr_override = Some(0.05);
+        // bind the rendezvous first so the "workers" know its port
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = LaunchOpts { listen: addr.clone(), spawn: false };
+
+        let roles = ["party0", "dealer", "party1"];
+        let mut workers = Vec::new();
+        for role in roles {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1")));
+        }
+        let rep = run_launch_on(listener, &s, &opts).unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        assert_ne!(rep.weight_digest, 0);
+        assert!(rep.online_bytes > 0, "worker traffic not aggregated");
+
+        // the same config through the ordinary in-process netsim path
+        // must produce the identical model
+        use crate::netsim::LinkSpec;
+        use crate::protocols::Trainer;
+        let (cfg, train, test) = s.datasets().unwrap();
+        let mut tc = s.tc.clone();
+        tc.transport = crate::config::TransportKind::Netsim;
+        let local = crate::protocols::secureml::SecureMl
+            .train(cfg, &tc, LinkSpec::from_mbps(s.mbps), &train, &test, 2)
+            .unwrap();
+        assert_eq!(
+            rep.weight_digest, local.weight_digest,
+            "distributed run diverged from the in-process run"
+        );
+        assert_eq!(rep.train_losses, local.train_losses);
+    }
+
+    #[test]
+    fn unknown_protocol_is_rejected_before_binding() {
+        let s = spec("quantum-ml");
+        let opts = LaunchOpts { listen: "127.0.0.1:0".into(), spawn: false };
+        assert!(run_launch(&s, &opts).is_err());
+    }
+}

@@ -1,0 +1,635 @@
+//! Session rendezvous for multi-process deployments: role claim, config +
+//! seed exchange, full-mesh bring-up and a topology check, all over the
+//! same [`wire`] framing the training traffic uses.
+//!
+//! ```text
+//! party                within the rendezvous           coordinator (host)
+//! -----                ---------------------           ------------------
+//! connect ------------------------------------------>  accept
+//! "spnn-hello v1 role=<role>" ---------------------->  claim role -> id
+//! <----------- "spnn-welcome v1 id=.. n=.. token=.. cfg=<config string>"
+//! bind peer listener
+//! "spnn-listen <addr>" ----------------------------->  collect all
+//! <--------------------------- "spnn-roster 1@a1;2@a2;..."  (broadcast)
+//! dial peers with lower id / accept peers with higher id
+//!   each new pair connection opens with "spnn-peer v1 id=.. token=.."
+//! "spnn-ready digest=<d>" -------------------------->  verify all equal
+//! <------------------------------------------------- "spnn-go"
+//! ```
+//!
+//! The coordinator is the single source of truth for the training
+//! configuration: it ships the canonical [`SessionSpec`] wire string in
+//! the welcome, every party re-derives its local state (dataset synthesis,
+//! batch plan, RNG seeds) from it, and echoes the config digest back in
+//! `ready` so drift is caught before any training traffic flows. The
+//! token (derived from the config and the rendezvous address) keeps a
+//! stray client of a *different* session from wiring into the mesh — it
+//! is a consistency check, not an authentication mechanism.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::tcp::connect_retry;
+use super::wire;
+use crate::config::{ModelConfig, TrainConfig, TransportKind};
+use crate::data::{synth_distress, synth_fraud, Dataset, SynthOpts};
+use crate::netsim::{LinkSpec, Msg, PartyId, Payload, Phase, NO_TAG};
+use crate::protocols::common::Fnv;
+use crate::{Error, Result};
+
+/// Handshake read deadline per step.
+pub const HANDSHAKE_STEP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Everything a party needs to reconstruct the full training setup
+/// locally: the canonical config record the coordinator broadcasts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    /// Protocol name (`protocols::by_name`).
+    pub protocol: String,
+    /// Dataset name (`ModelConfig::by_name`).
+    pub dataset: String,
+    /// Synthetic dataset rows before the train/test split.
+    pub rows: usize,
+    /// Data-holder count.
+    pub holders: usize,
+    /// Modeled link bandwidth (the virtual clock works across backends).
+    pub mbps: f64,
+    /// All remaining training knobs (seed, epochs, batch, crypto, depth).
+    pub tc: TrainConfig,
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "-".into(),
+    }
+}
+
+fn parse_opt(s: &str) -> Result<Option<f64>> {
+    if s == "-" {
+        return Ok(None);
+    }
+    s.parse::<f64>()
+        .map(Some)
+        .map_err(|_| Error::Config(format!("bad optional float {s:?}")))
+}
+
+impl SessionSpec {
+    /// Canonical wire string. `Display` for `f64` prints the shortest
+    /// representation that round-trips, so parse(to_wire()) is exact.
+    pub fn to_wire(&self) -> String {
+        let t = &self.tc;
+        format!(
+            "spnn-cfg v1 proto={} ds={} rows={} holders={} mbps={} epochs={} batch={} \
+             seed={} sgld={} lr={} noise={} pbits={} shortexp={} slot={} threads={} depth={}",
+            self.protocol,
+            self.dataset,
+            self.rows,
+            self.holders,
+            self.mbps,
+            t.epochs,
+            t.batch,
+            t.seed,
+            t.sgld as u8,
+            fmt_opt(t.lr_override),
+            fmt_opt(t.sgld_noise),
+            t.paillier_bits,
+            t.paillier_short_exp as u8,
+            t.slot_bits,
+            t.exec_threads,
+            t.pipeline_depth,
+        )
+    }
+
+    pub fn from_wire(s: &str) -> Result<Self> {
+        let mut words = s.split_whitespace();
+        if words.next() != Some("spnn-cfg") || words.next() != Some("v1") {
+            return Err(Error::Config(format!("not a session config: {s:?}")));
+        }
+        let mut kv = std::collections::HashMap::new();
+        for w in words {
+            let (k, v) = w
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("bad config field {w:?}")))?;
+            kv.insert(k, v);
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().ok_or_else(|| Error::Config(format!("config missing {k}")))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse().map_err(|_| Error::Config(format!("bad {k}={:?}", kv[k])))
+        };
+        let fnum = |k: &str| -> Result<f64> {
+            get(k)?.parse().map_err(|_| Error::Config(format!("bad {k}={:?}", kv[k])))
+        };
+        let tc = TrainConfig {
+            batch: num("batch")?,
+            epochs: num("epochs")?,
+            sgld: get("sgld")? == "1",
+            seed: get("seed")?
+                .parse()
+                .map_err(|_| Error::Config(format!("bad seed={:?}", kv["seed"])))?,
+            lr_override: parse_opt(get("lr")?)?,
+            paillier_bits: num("pbits")?,
+            paillier_short_exp: get("shortexp")? == "1",
+            sgld_noise: parse_opt(get("noise")?)?,
+            slot_bits: num("slot")?,
+            exec_threads: num("threads")?,
+            pipeline_depth: num("depth")?,
+            transport: TransportKind::Tcp,
+        };
+        Ok(SessionSpec {
+            protocol: get("proto")?.to_string(),
+            dataset: get("ds")?.to_string(),
+            rows: num("rows")?,
+            holders: num("holders")?,
+            mbps: fnum("mbps")?,
+            tc,
+        })
+    }
+
+    /// FNV digest over the canonical wire string (drift detection).
+    pub fn digest(&self) -> u64 {
+        let mut f = Fnv::new();
+        f.add_bytes(self.to_wire().as_bytes());
+        f.0
+    }
+
+    /// Modeled link for the virtual clock.
+    pub fn link(&self) -> LinkSpec {
+        LinkSpec::from_mbps(self.mbps)
+    }
+
+    /// Model config plus the deterministic synthetic train/test split —
+    /// every process re-derives identical data from the seed, so nothing
+    /// private ever travels through the coordinator.
+    pub fn datasets(&self) -> Result<(&'static ModelConfig, Dataset, Dataset)> {
+        let cfg = ModelConfig::by_name(&self.dataset)
+            .ok_or_else(|| Error::Config(format!("unknown dataset {:?}", self.dataset)))?;
+        let (ds, frac) = match self.dataset.as_str() {
+            "fraud" => (
+                synth_fraud(SynthOpts { rows: self.rows, seed: self.tc.seed, pos_boost: 10.0 }),
+                0.8,
+            ),
+            _ => (
+                synth_distress(SynthOpts { rows: self.rows, seed: self.tc.seed, pos_boost: 2.0 }),
+                0.7,
+            ),
+        };
+        let (train, test) = ds.split(frac, self.tc.seed);
+        Ok((cfg, train, test))
+    }
+
+    /// Session token: ties peer connections to this config + rendezvous.
+    pub fn token(&self, rendezvous: &str) -> u64 {
+        let mut f = Fnv::new();
+        f.add_bytes(self.to_wire().as_bytes());
+        f.add_bytes(rendezvous.as_bytes());
+        f.0 ^ 0x5e55_10f0_ba5e_d00d
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control-frame helpers
+// ---------------------------------------------------------------------------
+
+fn send_ctl(s: &mut TcpStream, from: PartyId, text: String) -> Result<()> {
+    let payload = Payload::Control(text);
+    let msg = Msg { from, tag: NO_TAG, payload, depart: 0.0, phase: Phase::Offline };
+    wire::write_msg(s, &msg).map_err(|e| Error::Net(format!("handshake write: {e}")))
+}
+
+fn recv_ctl(s: &mut TcpStream) -> Result<(PartyId, String)> {
+    match wire::read_msg(s)? {
+        Some(m) => {
+            let from = m.from;
+            let text = m.payload.into_control()?;
+            if let Some(e) = text.strip_prefix("spnn-err ") {
+                return Err(Error::Protocol(format!("rejected by peer: {e}")));
+            }
+            Ok((from, text))
+        }
+        None => Err(Error::Net("peer closed the connection during the handshake".into())),
+    }
+}
+
+fn field<'a>(text: &'a str, key: &str) -> Result<&'a str> {
+    // `cfg=` consumes the rest of the line (the config string has spaces)
+    if key == "cfg" {
+        return text
+            .split_once("cfg=")
+            .map(|(_, v)| v)
+            .ok_or_else(|| Error::Protocol(format!("missing cfg= in {text:?}")));
+    }
+    for w in text.split_whitespace() {
+        if let Some(v) = w.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
+            return Ok(v);
+        }
+    }
+    Err(Error::Protocol(format!("missing {key}= in {text:?}")))
+}
+
+fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Net(format!("set_nonblocking: {e}")))?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).map_err(|e| Error::Net(format!("unset nb: {e}")))?;
+                s.set_nodelay(true).ok();
+                s.set_read_timeout(Some(HANDSHAKE_STEP_TIMEOUT))
+                    .map_err(|e| Error::Net(format!("read timeout: {e}")))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Net(
+                        "rendezvous timed out waiting for parties to connect".into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(Error::Net(format!("accept: {e}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host (coordinator) side
+// ---------------------------------------------------------------------------
+
+/// An established session as seen by the coordinator: one stream per
+/// worker party (`streams[0]` is `None` — that is the host itself).
+pub struct HostedSession {
+    pub streams: Vec<Option<TcpStream>>,
+    pub token: u64,
+}
+
+/// Run the coordinator side of the rendezvous on an already-bound
+/// listener. `names[i]` is party `i`'s role name; the host itself is
+/// party 0. Returns when the full mesh is up and every party has
+/// confirmed the config digest.
+pub fn host(
+    listener: &TcpListener,
+    spec: &SessionSpec,
+    names: &[String],
+    timeout: Duration,
+) -> Result<HostedSession> {
+    let n = names.len();
+    let rendezvous = listener
+        .local_addr()
+        .map_err(|e| Error::Net(format!("local_addr: {e}")))?
+        .to_string();
+    let token = spec.token(&rendezvous);
+    let cfg_wire = spec.to_wire();
+    let deadline = Instant::now() + timeout;
+
+    // phase 1: role claims
+    let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut joined = 0usize;
+    while joined < n - 1 {
+        let mut s = accept_with_deadline(listener, deadline)?;
+        let hello = match recv_ctl(&mut s) {
+            Ok((_, t)) => t,
+            Err(_) => continue, // stray / broken connection: keep waiting
+        };
+        let Some(rest) = hello.strip_prefix("spnn-hello v1 ") else {
+            let _ = send_ctl(&mut s, 0, format!("spnn-err expected hello, got {hello:?}"));
+            continue;
+        };
+        // malformed hello (no role=): reject this client, keep hosting
+        let Ok(role) = field(rest, "role") else {
+            let _ = send_ctl(&mut s, 0, format!("spnn-err hello missing role=: {hello:?}"));
+            continue;
+        };
+        match names.iter().position(|r| r == role) {
+            Some(0) | None => {
+                let _ = send_ctl(
+                    &mut s,
+                    0,
+                    format!("spnn-err unknown role {role:?} (expected one of {:?})", &names[1..]),
+                );
+                continue;
+            }
+            Some(id) if streams[id].is_some() => {
+                let _ = send_ctl(&mut s, 0, format!("spnn-err role {role:?} already claimed"));
+                continue;
+            }
+            Some(id) => {
+                send_ctl(
+                    &mut s,
+                    0,
+                    format!("spnn-welcome v1 id={id} n={n} token={token} cfg={cfg_wire}"),
+                )?;
+                streams[id] = Some(s);
+                joined += 1;
+            }
+        }
+    }
+
+    // phase 2: collect peer-listener addresses
+    let mut addrs: Vec<String> = vec![String::new(); n];
+    for id in 1..n {
+        let s = streams[id].as_mut().unwrap();
+        let (_, t) = recv_ctl(s)?;
+        let addr = t
+            .strip_prefix("spnn-listen ")
+            .ok_or_else(|| Error::Protocol(format!("party {id}: expected listen, got {t:?}")))?;
+        addrs[id] = addr.to_string();
+    }
+
+    // phase 3: roster broadcast (id@addr for every worker party)
+    let roster: Vec<String> = (1..n).map(|id| format!("{id}@{}", addrs[id])).collect();
+    let roster = format!("spnn-roster {}", roster.join(";"));
+    for id in 1..n {
+        send_ctl(streams[id].as_mut().unwrap(), 0, roster.clone())?;
+    }
+
+    // phase 4: readiness + config-digest verification (topology check:
+    // every party proved it built the same deployment we did)
+    let want = spec.digest();
+    for id in 1..n {
+        let s = streams[id].as_mut().unwrap();
+        let (_, t) = recv_ctl(s)?;
+        let d = field(
+            t.strip_prefix("spnn-ready ")
+                .ok_or_else(|| Error::Protocol(format!("party {id}: expected ready, got {t:?}")))?,
+            "digest",
+        )?;
+        let d: u64 = d.parse().map_err(|_| Error::Protocol(format!("bad digest {d:?}")))?;
+        if d != want {
+            return Err(Error::Protocol(format!(
+                "party {id} ({}) derived config digest {d:#018x}, host has {want:#018x} — \
+                 config drift between processes",
+                names[id]
+            )));
+        }
+    }
+    for id in 1..n {
+        send_ctl(streams[id].as_mut().unwrap(), 0, "spnn-go".into())?;
+    }
+    Ok(HostedSession { streams, token })
+}
+
+// ---------------------------------------------------------------------------
+// Party side
+// ---------------------------------------------------------------------------
+
+/// An established session as seen by a worker party.
+pub struct JoinedSession {
+    /// This party's id (index into the deployment's role names).
+    pub id: PartyId,
+    /// Total party count (coordinator included).
+    pub n: usize,
+    /// The authoritative config received from the coordinator.
+    pub spec: SessionSpec,
+    /// One stream per peer party (`streams[id]` is `None` — self).
+    pub streams: Vec<Option<TcpStream>>,
+}
+
+/// Join a session hosted at `addr` under a role name, bringing up this
+/// party's slice of the full mesh. `bind_host` is the address peers dial
+/// back on (`127.0.0.1` for single-host runs, a routable address
+/// otherwise).
+pub fn join(addr: &str, role: &str, bind_host: &str, timeout: Duration) -> Result<JoinedSession> {
+    let deadline = Instant::now() + timeout;
+    let mut coord = connect_retry(addr, timeout)?;
+    coord.set_nodelay(true).ok();
+    coord
+        .set_read_timeout(Some(HANDSHAKE_STEP_TIMEOUT))
+        .map_err(|e| Error::Net(format!("read timeout: {e}")))?;
+    // provisional sender id — the handshake assigns the real one
+    send_ctl(&mut coord, usize::MAX, format!("spnn-hello v1 role={role}"))?;
+
+    let (_, welcome) = recv_ctl(&mut coord)?;
+    let rest = welcome
+        .strip_prefix("spnn-welcome v1 ")
+        .ok_or_else(|| Error::Protocol(format!("expected welcome, got {welcome:?}")))?;
+    let id: PartyId = field(rest, "id")?
+        .parse()
+        .map_err(|_| Error::Protocol("bad welcome id".into()))?;
+    let n: usize =
+        field(rest, "n")?.parse().map_err(|_| Error::Protocol("bad welcome n".into()))?;
+    let token: u64 = field(rest, "token")?
+        .parse()
+        .map_err(|_| Error::Protocol("bad welcome token".into()))?;
+    let spec = SessionSpec::from_wire(field(rest, "cfg")?)?;
+    if id == 0 || id >= n {
+        return Err(Error::Protocol(format!("welcome assigned invalid id {id} of {n}")));
+    }
+
+    // peer listener + address advertisement
+    let listener = TcpListener::bind((bind_host, 0))
+        .map_err(|e| Error::Net(format!("bind {bind_host}: {e}")))?;
+    let my_addr = listener.local_addr().map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+    send_ctl(&mut coord, id, format!("spnn-listen {my_addr}"))?;
+
+    let (_, roster) = recv_ctl(&mut coord)?;
+    let roster = roster
+        .strip_prefix("spnn-roster ")
+        .ok_or_else(|| Error::Protocol(format!("expected roster, got {roster:?}")))?;
+    let mut peer_addr: Vec<Option<String>> = vec![None; n];
+    for entry in roster.split(';').filter(|e| !e.is_empty()) {
+        let (pid, a) = entry
+            .split_once('@')
+            .ok_or_else(|| Error::Protocol(format!("bad roster entry {entry:?}")))?;
+        let pid: PartyId =
+            pid.parse().map_err(|_| Error::Protocol(format!("bad roster id {pid:?}")))?;
+        if pid == 0 || pid >= n {
+            return Err(Error::Protocol(format!("roster id {pid} out of range")));
+        }
+        peer_addr[pid] = Some(a.to_string());
+    }
+
+    let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+
+    // dial peers with lower ids (they accept from us)
+    for pid in 1..id {
+        let a = peer_addr[pid]
+            .as_deref()
+            .ok_or_else(|| Error::Protocol(format!("roster missing party {pid}")))?;
+        let mut s = connect_retry(a, timeout)?;
+        s.set_nodelay(true).ok();
+        s.set_read_timeout(Some(HANDSHAKE_STEP_TIMEOUT)).ok();
+        send_ctl(&mut s, id, format!("spnn-peer v1 id={id} token={token}"))?;
+        streams[pid] = Some(s);
+    }
+    // accept peers with higher ids; the listener may be on a routable
+    // address, so stray/malformed connections are rejected and waiting
+    // continues (only the session deadline aborts)
+    let mut accepted = 0usize;
+    while accepted < n.saturating_sub(id + 1) {
+        let mut s = accept_with_deadline(&listener, deadline)?;
+        let parsed = (|| -> Result<(PartyId, u64)> {
+            let (_, t) = recv_ctl(&mut s)?;
+            let rest = t
+                .strip_prefix("spnn-peer v1 ")
+                .ok_or_else(|| Error::Protocol(format!("expected peer hello, got {t:?}")))?;
+            let pid: PartyId = field(rest, "id")?
+                .parse()
+                .map_err(|_| Error::Protocol("bad peer id".into()))?;
+            let ptoken: u64 = field(rest, "token")?
+                .parse()
+                .map_err(|_| Error::Protocol("bad peer token".into()))?;
+            Ok((pid, ptoken))
+        })();
+        let (pid, ptoken) = match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("spnn-session: party {id}: dropping stray connection ({e})");
+                let _ = send_ctl(&mut s, id, format!("spnn-err {e}"));
+                continue;
+            }
+        };
+        if ptoken != token {
+            eprintln!(
+                "spnn-session: party {id}: peer {pid} presented a token for a \
+                 different session — dropping"
+            );
+            let _ = send_ctl(&mut s, id, "spnn-err wrong session token".into());
+            continue;
+        }
+        if pid <= id || pid >= n || streams[pid].is_some() {
+            eprintln!(
+                "spnn-session: party {id}: unexpected peer id {pid} (n {n}) — dropping"
+            );
+            let _ = send_ctl(&mut s, id, format!("spnn-err unexpected peer id {pid}"));
+            continue;
+        }
+        streams[pid] = Some(s);
+        accepted += 1;
+    }
+
+    send_ctl(&mut coord, id, format!("spnn-ready digest={}", spec.digest()))?;
+    let (_, go) = recv_ctl(&mut coord)?;
+    if go != "spnn-go" {
+        return Err(Error::Protocol(format!("expected go, got {go:?}")));
+    }
+    streams[0] = Some(coord);
+    Ok(JoinedSession { id, n, spec, streams })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SessionSpec {
+        SessionSpec {
+            protocol: "spnn-ss".into(),
+            dataset: "fraud".into(),
+            rows: 512,
+            holders: 2,
+            mbps: 100.0,
+            tc: TrainConfig { epochs: 1, batch: 256, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn session_spec_wire_roundtrip_is_exact() {
+        let mut s = spec();
+        s.tc.lr_override = Some(0.05);
+        s.tc.sgld = true;
+        s.tc.sgld_noise = Some(0.125);
+        s.mbps = 12.5;
+        let back = SessionSpec::from_wire(&s.to_wire()).unwrap();
+        assert_eq!(s.to_wire(), back.to_wire());
+        assert_eq!(s.digest(), back.digest());
+        assert_eq!(back.tc.lr_override, Some(0.05));
+        assert_eq!(back.tc.transport, TransportKind::Tcp);
+        // digest is sensitive to every field
+        let mut other = s.clone();
+        other.tc.seed += 1;
+        assert_ne!(s.digest(), other.digest());
+        assert!(SessionSpec::from_wire("nonsense").is_err());
+        assert!(SessionSpec::from_wire("spnn-cfg v1 proto=x").is_err());
+    }
+
+    #[test]
+    fn session_spec_datasets_are_deterministic() {
+        let s = spec();
+        let (cfg, tr1, te1) = s.datasets().unwrap();
+        let (_, tr2, te2) = s.datasets().unwrap();
+        assert_eq!(cfg.name, "fraud");
+        assert_eq!(tr1.x, tr2.x);
+        assert_eq!(te1.y, te2.y);
+        assert_eq!(tr1.len() + te1.len(), 512);
+    }
+
+    #[test]
+    fn rendezvous_brings_up_a_full_mesh() {
+        // 4 parties: host (0) + three workers that join over real sockets,
+        // then every pair exchanges one frame over its mesh connection
+        let names: Vec<String> =
+            ["coord", "server", "dealer", "holder0"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let mut joiners = Vec::new();
+        for role in ["server", "dealer", "holder0"] {
+            let addr = addr.clone();
+            joiners.push(std::thread::spawn(move || {
+                join(&addr, role, "127.0.0.1", Duration::from_secs(20)).unwrap()
+            }));
+        }
+        let hosted = host(&listener, &s, &names, Duration::from_secs(20)).unwrap();
+        let sessions: Vec<JoinedSession> =
+            joiners.into_iter().map(|h| h.join().unwrap()).collect();
+        // ids are assigned by role, config survives the trip
+        for sess in &sessions {
+            assert_eq!(sess.n, 4);
+            assert_eq!(sess.spec.digest(), s.digest());
+            assert!(sess.streams[sess.id].is_none());
+            let connected = sess.streams.iter().filter(|s| s.is_some()).count();
+            assert_eq!(connected, 3, "party {} mesh incomplete", sess.id);
+        }
+        assert_eq!(hosted.streams.iter().filter(|s| s.is_some()).count(), 3);
+        // ping over every worker<->worker pair to prove the wiring is real
+        let mut handles = Vec::new();
+        for sess in sessions {
+            handles.push(std::thread::spawn(move || {
+                let JoinedSession { id, mut streams, .. } = sess;
+                for pid in 1..4usize {
+                    if pid == id {
+                        continue;
+                    }
+                    let st = streams[pid].as_mut().unwrap();
+                    send_ctl(st, id, format!("ping {id}->{pid}")).unwrap();
+                }
+                let mut got = 0;
+                for pid in 1..4usize {
+                    if pid == id {
+                        continue;
+                    }
+                    let st = streams[pid].as_mut().unwrap();
+                    let (_, t) = recv_ctl(st).unwrap();
+                    assert!(t.starts_with("ping "), "{t}");
+                    got += 1;
+                }
+                got
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 2);
+        }
+    }
+
+    #[test]
+    fn wrong_role_is_rejected() {
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        // host runs in a thread; the bad role is rejected (and observed)
+        // BEFORE the good role joins, so the ordering is deterministic
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            move || host(&listener, &s, &names, Duration::from_secs(20))
+        });
+        let err = join(&addr, "astronaut", "127.0.0.1", Duration::from_secs(20)).unwrap_err();
+        assert!(format!("{err}").contains("unknown role"), "{err}");
+        join(&addr, "server", "127.0.0.1", Duration::from_secs(20)).unwrap();
+        let hosted = hoster.join().unwrap().unwrap();
+        assert!(hosted.streams[1].is_some());
+    }
+}

@@ -1,0 +1,404 @@
+//! Real-socket backend: `std::net::TcpStream` carrying the [`wire`]
+//! framing, presented to the protocols through the same session engine
+//! ([`NetPort`]) the simulator uses.
+//!
+//! Layering: every peer connection gets one **reader thread** (decodes
+//! frames into the port's per-peer `mpsc` inbox — exactly where the
+//! simulator's in-process channel would deliver) and one **writer thread**
+//! (drains an unbounded outbox queue into the socket). Sends therefore
+//! never block the protocol thread — the same non-blocking-send semantics
+//! as netsim — which rules out the classic both-sides-blocked-in-`write`
+//! TCP deadlock regardless of message size vs kernel buffer size.
+//!
+//! Shutdown is flush-safe: dropping the port closes the outbox queues, the
+//! writers drain whatever is queued, send a FIN (`shutdown(Write)`) and
+//! exit; the peer's reader sees a clean EOF at a frame boundary. A party
+//! that still expects traffic from a departed peer gets the port's
+//! descriptive disconnect error instead of a hang. [`TcpPort::shutdown`]
+//! additionally joins the writer threads so a process can exit without
+//! racing its own final flush.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::wire;
+use super::Channel;
+use crate::netsim::{LinkSpec, Msg, NetPort, NetStats, PartyId, Payload, Phase};
+use crate::{Error, Result};
+
+/// How long [`connect_retry`] keeps retrying a refused connection —
+/// covers peers whose listener is not bound yet (process startup races).
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Wire up one duplex peer connection: a reader thread feeding `inbox_tx`
+/// and a writer thread draining the returned outbox sender. Returns the
+/// outbox sender (to place in the port's tx map) and the writer's join
+/// handle (join it to guarantee the final flush).
+pub(crate) fn spawn_io(
+    stream: TcpStream,
+    me: PartyId,
+    peer: PartyId,
+    inbox_tx: mpsc::Sender<Msg>,
+) -> Result<(mpsc::Sender<Msg>, JoinHandle<()>)> {
+    stream.set_nodelay(true).map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
+    // the handshake may have left a read timeout installed; the reader
+    // thread must block indefinitely (deadlock detection lives in the port)
+    stream
+        .set_read_timeout(None)
+        .map_err(|e| Error::Net(format!("clear read timeout: {e}")))?;
+    let mut rd = stream.try_clone().map_err(|e| Error::Net(format!("clone stream: {e}")))?;
+    let mut wr = stream;
+
+    let reader = move || loop {
+        match wire::read_msg(&mut rd) {
+            Ok(Some(msg)) => {
+                if msg.from != peer {
+                    eprintln!(
+                        "spnn-tcp: party {me}: frame from {} on the link to peer {peer} — \
+                         dropping connection",
+                        msg.from
+                    );
+                    break;
+                }
+                if inbox_tx.send(msg).is_err() {
+                    break; // port dropped — nobody is listening anymore
+                }
+            }
+            Ok(None) => break, // clean FIN from the peer
+            Err(_) => break,   // reset/short read: surfaced as a port disconnect
+        }
+    };
+    // reader detaches; it exits on EOF or port drop
+    let _detached = std::thread::Builder::new()
+        .name(format!("spnn-rx-{me}-{peer}"))
+        .spawn(reader)
+        .map_err(Error::Io)?;
+
+    let (out_tx, out_rx) = mpsc::channel::<Msg>();
+    let writer = move || {
+        while let Ok(msg) = out_rx.recv() {
+            if wire::write_msg(&mut wr, &msg).is_err() {
+                break;
+            }
+        }
+        let _ = wr.shutdown(Shutdown::Write);
+    };
+    let wh = std::thread::Builder::new()
+        .name(format!("spnn-tx-{me}-{peer}"))
+        .spawn(writer)
+        .map_err(Error::Io)?;
+    Ok((out_tx, wh))
+}
+
+/// Build a [`NetPort`] (plus writer handles) from one established stream
+/// per peer (`streams[p]` = connection to party `p`, `None` for self and
+/// absent parties).
+pub(crate) fn port_from_streams(
+    me: PartyId,
+    names: &[&str],
+    streams: Vec<Option<TcpStream>>,
+    spec: LinkSpec,
+    stats: Arc<NetStats>,
+) -> Result<(NetPort, Vec<JoinHandle<()>>)> {
+    let mut txs: HashMap<PartyId, mpsc::Sender<Msg>> = HashMap::new();
+    let mut rxs: HashMap<PartyId, mpsc::Receiver<Msg>> = HashMap::new();
+    let mut writers = Vec::new();
+    for (peer, slot) in streams.into_iter().enumerate() {
+        let Some(stream) = slot else { continue };
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (out_tx, wh) = spawn_io(stream, me, peer, inbox_tx)?;
+        txs.insert(peer, out_tx);
+        rxs.insert(peer, inbox_rx);
+        writers.push(wh);
+    }
+    Ok((NetPort::new(me, names[me], spec, txs, rxs, stats), writers))
+}
+
+/// A socket-backed party endpoint: the shared session engine over TCP
+/// connections, plus the I/O-thread lifecycle. The second [`Channel`]
+/// backend next to the simulator's [`NetPort`].
+pub struct TcpPort {
+    port: Option<NetPort>,
+    writers: Vec<JoinHandle<()>>,
+    stats: Arc<NetStats>,
+}
+
+impl TcpPort {
+    pub(crate) fn new(port: NetPort, writers: Vec<JoinHandle<()>>, stats: Arc<NetStats>) -> Self {
+        TcpPort { port: Some(port), writers, stats }
+    }
+
+    /// This process's sender-side traffic counters.
+    pub fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    fn port(&mut self) -> &mut NetPort {
+        self.port.as_mut().expect("TcpPort used after shutdown")
+    }
+
+    /// Flush-and-close: drop the outbox queues (writers drain every queued
+    /// frame, FIN, exit) and join the writers, so queued messages are on
+    /// the wire before the caller proceeds to exit.
+    pub fn shutdown(mut self) {
+        self.port.take(); // drops the tx map -> writers drain + FIN
+        for wh in self.writers.drain(..) {
+            let _ = wh.join();
+        }
+    }
+}
+
+impl Channel for TcpPort {
+    fn id(&self) -> PartyId {
+        self.port.as_ref().expect("TcpPort used after shutdown").id
+    }
+
+    fn name(&self) -> &str {
+        &self.port.as_ref().expect("TcpPort used after shutdown").name
+    }
+
+    fn spec(&self) -> LinkSpec {
+        self.port.as_ref().expect("TcpPort used after shutdown").spec()
+    }
+
+    fn now(&mut self) -> f64 {
+        self.port().now()
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.port().advance(dt)
+    }
+
+    fn reset_clock(&mut self) {
+        self.port().reset_clock()
+    }
+
+    fn set_stage(&mut self, stage: &'static str) {
+        self.port().set_stage(stage)
+    }
+
+    fn set_recv_timeout(&mut self, d: Duration) {
+        self.port().set_recv_timeout(d)
+    }
+
+    fn send_tagged_phase(
+        &mut self,
+        to: PartyId,
+        tag: u64,
+        payload: Payload,
+        phase: Phase,
+    ) -> Result<()> {
+        self.port().send_tagged_phase(to, tag, payload, phase)
+    }
+
+    fn recv_any_tag(&mut self, from: PartyId) -> Result<(u64, Payload)> {
+        self.port().recv_any_tag(from)
+    }
+
+    fn recv_tagged(&mut self, from: PartyId, tag: u64) -> Result<Payload> {
+        self.port().recv_tagged(from, tag)
+    }
+
+    fn try_recv_tagged(&mut self, from: PartyId, tag: u64) -> Result<Option<Payload>> {
+        self.port().try_recv_tagged(from, tag)
+    }
+}
+
+/// Full mesh over loopback TCP: one listener per party (ephemeral ports),
+/// one socket pair per party pair, shared sender-side stats — a drop-in
+/// replacement for [`crate::netsim::full_mesh`] that pushes every message
+/// through real kernel sockets and the wire codec.
+///
+/// This is the `TrainConfig::transport = Tcp` backend: the transcript-
+/// parity tests run the trainers on it to prove the wire layer is
+/// bit-exact against the simulator.
+pub fn loopback_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
+    let n = names.len();
+    let stats = Arc::new(NetStats::new(names));
+    let mut listeners = Vec::with_capacity(n);
+    for _ in 0..n {
+        listeners
+            .push(TcpListener::bind("127.0.0.1:0").map_err(|e| Error::Net(format!("bind: {e}")))?);
+    }
+    let addrs: Vec<std::net::SocketAddr> = listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()
+        .map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+
+    // per-party channel maps under construction
+    let mut txs: Vec<HashMap<PartyId, mpsc::Sender<Msg>>> =
+        (0..n).map(|_| HashMap::new()).collect();
+    let mut rxs: Vec<HashMap<PartyId, mpsc::Receiver<Msg>>> =
+        (0..n).map(|_| HashMap::new()).collect();
+
+    for i in 0..n {
+        for j in (i + 1)..n {
+            // j dials i; the kernel backlog completes the connection, so a
+            // sequential connect-then-accept cannot deadlock
+            let sj = TcpStream::connect(addrs[i])
+                .map_err(|e| Error::Net(format!("connect {i}<-{j}: {e}")))?;
+            let (si, _) = listeners[i]
+                .accept()
+                .map_err(|e| Error::Net(format!("accept {i}<-{j}: {e}")))?;
+            let (inbox_tx_i, inbox_rx_i) = mpsc::channel();
+            let (out_tx_i, _wh_i) = spawn_io(si, i, j, inbox_tx_i)?;
+            txs[i].insert(j, out_tx_i);
+            rxs[i].insert(j, inbox_rx_i);
+            let (inbox_tx_j, inbox_rx_j) = mpsc::channel();
+            let (out_tx_j, _wh_j) = spawn_io(sj, j, i, inbox_tx_j)?;
+            txs[j].insert(i, out_tx_j);
+            rxs[j].insert(i, inbox_rx_j);
+        }
+    }
+    let ports = txs
+        .into_iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(id, (tx, rx))| NetPort::new(id, names[id], spec, tx, rx, stats.clone()))
+        .collect();
+    Ok((ports, stats))
+}
+
+/// `TcpStream::connect` with retry/backoff until `timeout` — rendezvous
+/// peers may not have bound their listener yet.
+pub(crate) fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = std::time::Instant::now() + timeout;
+    let mut wait = Duration::from_millis(20);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if std::time::Instant::now() + wait >= deadline {
+                    return Err(Error::Net(format!("connect {addr}: {e} (gave up retrying)")));
+                }
+                std::thread::sleep(wait);
+                wait = (wait * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_pair_reorders_tags_like_netsim() {
+        let (mut ports, stats) = loopback_mesh(&["A", "B"], LinkSpec::lan()).unwrap();
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            a.send_tagged(1, 5, Payload::U64s(vec![5, 5])).unwrap();
+            a.send_tagged(1, 6, Payload::F32s(vec![6.5])).unwrap();
+            a.send_tagged(1, 7, Payload::Control("seven".into())).unwrap();
+            // keep the port alive until B confirms, then reply
+            let done = b_ack(&mut a);
+            a.send(1, Payload::Seed([9; 32])).unwrap();
+            done
+        });
+        fn b_ack(a: &mut NetPort) -> u64 {
+            a.recv_tagged(1, 99).unwrap().into_u64s().unwrap()[0]
+        }
+        b.set_recv_timeout(Duration::from_secs(20));
+        // consume out of order across a real socket
+        assert_eq!(b.recv_tagged(0, 7).unwrap().into_control().unwrap(), "seven");
+        assert_eq!(b.recv_tagged(0, 6).unwrap().into_f32s().unwrap(), vec![6.5]);
+        assert_eq!(b.recv_tagged(0, 5).unwrap().into_u64s().unwrap(), vec![5, 5]);
+        b.send_tagged(0, 99, Payload::U64s(vec![1])).unwrap();
+        assert_eq!(b.recv(0).unwrap().into_seed().unwrap(), [9; 32]);
+        assert_eq!(h.join().unwrap(), 1);
+        // sender-side byte accounting matches the payload model
+        let want = Payload::U64s(vec![5, 5]).total_bytes()
+            + Payload::F32s(vec![6.5]).total_bytes()
+            + Payload::Control("seven".into()).total_bytes()
+            + Payload::Seed([9; 32]).total_bytes();
+        assert_eq!(stats.bytes_sent_by(0, Phase::Online), want);
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_as_disconnect_not_hang() {
+        let (mut ports, _) = loopback_mesh(&["A", "B"], LinkSpec::lan()).unwrap();
+        let b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        drop(b); // FIN both directions
+        a.set_recv_timeout(Duration::from_secs(5));
+        let err = a.recv(1).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("disconnected"), "{msg}");
+    }
+
+    #[test]
+    fn mid_frame_close_is_a_short_read() {
+        // raw socket: write half a frame, then close
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            use std::io::Write;
+            let mut s = TcpStream::connect(addr).unwrap();
+            let msg = Msg {
+                from: 0,
+                tag: 1,
+                payload: Payload::U64s(vec![1, 2, 3]),
+                depart: 0.0,
+                phase: Phase::Online,
+            };
+            let frame = wire::encode_msg(&msg);
+            s.write_all(&frame[..frame.len() / 2]).unwrap();
+            // drop: FIN mid-frame
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        h.join().unwrap();
+        let err = wire::read_msg(&mut s).unwrap_err();
+        assert!(format!("{err}").contains("short read"), "{err}");
+    }
+
+    #[test]
+    fn connect_retry_waits_for_late_listener() {
+        // bind, learn the port, close, rebind after a delay — the dialer
+        // must ride out the refused window
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let l = TcpListener::bind(addr).unwrap();
+            let _ = l.accept();
+        });
+        let got = connect_retry(&addr.to_string(), Duration::from_secs(10));
+        // the exact port may be racily taken by another process; only
+        // assert we did not give up instantly when it worked
+        if got.is_ok() {
+            h.join().unwrap();
+        } else {
+            let _ = h.join();
+        }
+    }
+
+    #[test]
+    fn three_party_loopback_mesh_routes_all_pairs() {
+        let (ports, _) = loopback_mesh(&["A", "B", "C"], LinkSpec::lan()).unwrap();
+        let mut it = ports.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let mut c = it.next().unwrap();
+        let hb = std::thread::spawn(move || {
+            let v = b.recv_u64s(0).unwrap();
+            b.send(2, Payload::U64s(vec![v[0] + 1])).unwrap();
+            b.recv_u64s(2).unwrap()
+        });
+        let hc = std::thread::spawn(move || {
+            let v = c.recv_u64s(1).unwrap();
+            c.send(0, Payload::U64s(vec![v[0] + 1])).unwrap();
+            c.send(1, Payload::U64s(vec![99])).unwrap();
+        });
+        a.send(1, Payload::U64s(vec![10])).unwrap();
+        assert_eq!(a.recv_u64s(2).unwrap(), vec![12]);
+        assert_eq!(hb.join().unwrap(), vec![99]);
+        hc.join().unwrap();
+    }
+}

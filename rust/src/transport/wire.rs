@@ -1,0 +1,575 @@
+//! Length-prefixed wire framing for the TCP backend.
+//!
+//! The netsim backend moves [`Payload`]s by ownership and only *accounts*
+//! their wire size; this module is the real serialization those byte
+//! counts model. One frame per [`Msg`]:
+//!
+//! ```text
+//! [len: u32 LE] [from: u32] [tag: u64] [depart: f64 bits] [phase: u8]
+//!               [kind: u8] [payload body...]
+//! ```
+//!
+//! Every variable-length field carries an explicit element count, so a
+//! truncated frame is always detected (`truncated frame` / `short read`
+//! errors) instead of being misparsed. Floats travel as raw IEEE-754 bit
+//! patterns — `decode(encode(m))` is bit-exact, which is what makes a TCP
+//! run train the same weights as a netsim run.
+//!
+//! The sender's virtual-clock departure stamp (`depart`) rides the frame,
+//! so the receiving port can model simulated arrival time across real
+//! sockets exactly as the simulator does in-process.
+
+use std::io::{Read, Write};
+
+use crate::netsim::{Msg, Payload, Phase};
+use crate::{Error, Result};
+
+/// Hard cap on one frame's body (defense against corrupt length prefixes).
+pub const FRAME_MAX: usize = 1 << 30;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::Net(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        // reserve the length prefix slot up front
+        Enc { buf: vec![0u8; 4] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let body = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&body.to_le_bytes());
+        self.buf
+    }
+}
+
+const KIND_U64S: u8 = 0;
+const KIND_F32S: u8 = 1;
+const KIND_F64S: u8 = 2;
+const KIND_CIPHER: u8 = 3;
+const KIND_CIPHER_BLOCK: u8 = 4;
+const KIND_SEED: u8 = 5;
+const KIND_BITS: u8 = 6;
+const KIND_CONTROL: u8 = 7;
+
+/// Serialize one message into a self-contained frame (length prefix
+/// included).
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(msg.from as u32);
+    e.u64(msg.tag);
+    e.u64(msg.depart.to_bits());
+    e.u8(match msg.phase {
+        Phase::Online => 0,
+        Phase::Offline => 1,
+    });
+    match &msg.payload {
+        Payload::U64s(v) => {
+            e.u8(KIND_U64S);
+            e.u64s(v);
+        }
+        Payload::F32s(v) => {
+            e.u8(KIND_F32S);
+            e.u32(v.len() as u32);
+            for &x in v {
+                e.bytes(&x.to_bits().to_le_bytes());
+            }
+        }
+        Payload::F64s(v) => {
+            e.u8(KIND_F64S);
+            e.u32(v.len() as u32);
+            for &x in v {
+                e.u64(x.to_bits());
+            }
+        }
+        Payload::Cipher(items) => {
+            e.u8(KIND_CIPHER);
+            e.u32(items.len() as u32);
+            for item in items {
+                e.u32(item.len() as u32);
+                e.bytes(item);
+            }
+        }
+        Payload::CipherBlock { data, ct_bytes, count } => {
+            e.u8(KIND_CIPHER_BLOCK);
+            e.u32(*ct_bytes as u32);
+            e.u32(*count as u32);
+            e.u32(data.len() as u32);
+            e.bytes(data);
+        }
+        Payload::Seed(s) => {
+            e.u8(KIND_SEED);
+            e.bytes(s);
+        }
+        Payload::Bits(v) => {
+            e.u8(KIND_BITS);
+            e.u64s(v);
+        }
+        Payload::Control(s) => {
+            e.u8(KIND_CONTROL);
+            e.u32(s.len() as u32);
+            e.bytes(s.as_bytes());
+        }
+    }
+    e.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, body is {} bytes",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// Element count that must still fit in the remaining body — rejects
+    /// absurd counts from corrupt frames before allocating.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.buf.len() - self.pos {
+            return Err(err(format!(
+                "truncated frame: {n} element(s) of {elem_bytes} byte(s) exceed \
+                 the {} remaining body byte(s)",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(err(format!(
+                "trailing garbage: frame body is {} bytes but decoding consumed {}",
+                self.buf.len(),
+                self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame *body* (the bytes after the length prefix).
+pub fn decode_msg(body: &[u8]) -> Result<Msg> {
+    let mut d = Dec { buf: body, pos: 0 };
+    let from = d.u32()? as usize;
+    let tag = d.u64()?;
+    let depart = f64::from_bits(d.u64()?);
+    let phase = match d.u8()? {
+        0 => Phase::Online,
+        1 => Phase::Offline,
+        other => return Err(err(format!("bad phase byte {other}"))),
+    };
+    let kind = d.u8()?;
+    let payload = match kind {
+        KIND_U64S => Payload::U64s(d.u64s()?),
+        KIND_F32S => {
+            let n = d.count(4)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let b = d.take(4)?;
+                v.push(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+            }
+            Payload::F32s(v)
+        }
+        KIND_F64S => {
+            let n = d.count(8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(f64::from_bits(d.u64()?));
+            }
+            Payload::F64s(v)
+        }
+        KIND_CIPHER => {
+            let n = d.count(4)?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let len = d.count(1)?;
+                items.push(d.take(len)?.to_vec());
+            }
+            Payload::Cipher(items)
+        }
+        KIND_CIPHER_BLOCK => {
+            let ct_bytes = d.u32()? as usize;
+            let count = d.u32()? as usize;
+            let len = d.count(1)?;
+            Payload::CipherBlock { data: d.take(len)?.to_vec(), ct_bytes, count }
+        }
+        KIND_SEED => {
+            let mut s = [0u8; 32];
+            s.copy_from_slice(d.take(32)?);
+            Payload::Seed(s)
+        }
+        KIND_BITS => Payload::Bits(d.u64s()?),
+        KIND_CONTROL => {
+            let len = d.count(1)?;
+            let s = String::from_utf8(d.take(len)?.to_vec())
+                .map_err(|_| err("control payload is not utf-8"))?;
+            Payload::Control(s)
+        }
+        other => return Err(err(format!("unknown payload kind {other}"))),
+    };
+    d.done()?;
+    Ok(Msg { from, tag, payload, depart, phase })
+}
+
+// ---------------------------------------------------------------------------
+// Stream I/O
+// ---------------------------------------------------------------------------
+
+/// Write one message as a single framed chunk.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+    w.write_all(&encode_msg(msg))
+}
+
+/// Read the next frame. Returns `Ok(None)` on a clean EOF at a frame
+/// boundary (orderly peer shutdown); EOF *inside* a frame is a short-read
+/// error, as is a length prefix beyond [`FRAME_MAX`].
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    let mut len_b = [0u8; 4];
+    match read_full(r, &mut len_b)? {
+        ReadOutcome::CleanEof => return Ok(None),
+        ReadOutcome::Short(got) => {
+            return Err(err(format!(
+                "short read: connection closed {got}/4 bytes into a frame header"
+            )))
+        }
+        ReadOutcome::Full => {}
+    }
+    let len = u32::from_le_bytes(len_b) as usize;
+    if len > FRAME_MAX {
+        return Err(err(format!("frame length {len} exceeds cap {FRAME_MAX}")));
+    }
+    let mut body = vec![0u8; len];
+    match read_full(r, &mut body)? {
+        ReadOutcome::Full => decode_msg(&body).map(Some),
+        ReadOutcome::CleanEof | ReadOutcome::Short(_) => Err(err(format!(
+            "short read: connection closed inside a {len}-byte frame body"
+        ))),
+    }
+}
+
+enum ReadOutcome {
+    Full,
+    CleanEof,
+    Short(usize),
+}
+
+/// `read_exact` that distinguishes EOF-before-any-byte from EOF-mid-buffer.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Ok(if got == 0 {
+                    ReadOutcome::CleanEof
+                } else {
+                    ReadOutcome::Short(got)
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(err(format!("socket read failed: {e}"))),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NO_TAG;
+    use crate::rng::{Pcg64, Rng64};
+    use crate::testutil::prop_check;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let frame = encode_msg(msg);
+        let body_len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+        assert_eq!(body_len + 4, frame.len(), "length prefix disagrees with frame");
+        decode_msg(&frame[4..]).expect("decode")
+    }
+
+    fn assert_msg_eq(a: &Msg, b: &Msg) {
+        assert_eq!(a.from, b.from);
+        assert_eq!(a.tag, b.tag);
+        assert_eq!(a.depart.to_bits(), b.depart.to_bits());
+        assert_eq!(a.phase, b.phase);
+        match (&a.payload, &b.payload) {
+            (Payload::U64s(x), Payload::U64s(y)) => assert_eq!(x, y),
+            (Payload::F32s(x), Payload::F32s(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (u, v) in x.iter().zip(y) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+            (Payload::F64s(x), Payload::F64s(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (u, v) in x.iter().zip(y) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+            (Payload::Cipher(x), Payload::Cipher(y)) => assert_eq!(x, y),
+            (
+                Payload::CipherBlock { data: d1, ct_bytes: c1, count: n1 },
+                Payload::CipherBlock { data: d2, ct_bytes: c2, count: n2 },
+            ) => {
+                assert_eq!(d1, d2);
+                assert_eq!(c1, c2);
+                assert_eq!(n1, n2);
+            }
+            (Payload::Seed(x), Payload::Seed(y)) => assert_eq!(x, y),
+            (Payload::Bits(x), Payload::Bits(y)) => assert_eq!(x, y),
+            (Payload::Control(x), Payload::Control(y)) => assert_eq!(x, y),
+            (x, y) => panic!("variant changed: {} vs {}", x.kind(), y.kind()),
+        }
+    }
+
+    fn random_payload(rng: &mut Pcg64) -> Payload {
+        let n = (rng.next_u64() % 17) as usize;
+        match rng.next_u64() % 8 {
+            0 => Payload::U64s((0..n).map(|_| rng.next_u64()).collect()),
+            1 => Payload::F32s(
+                (0..n).map(|_| f32::from_bits(rng.next_u64() as u32 & 0x7f7f_ffff)).collect(),
+            ),
+            2 => Payload::F64s((0..n).map(|_| (rng.next_u64() as f64) / 7.0).collect()),
+            3 => Payload::Cipher(
+                (0..n)
+                    .map(|_| {
+                        let l = (rng.next_u64() % 40) as usize;
+                        (0..l).map(|_| rng.next_u64() as u8).collect()
+                    })
+                    .collect(),
+            ),
+            4 => {
+                let ct_bytes = 1 + (rng.next_u64() % 33) as usize;
+                Payload::CipherBlock {
+                    data: (0..n * ct_bytes).map(|_| rng.next_u64() as u8).collect(),
+                    ct_bytes,
+                    count: n,
+                }
+            }
+            5 => {
+                let mut s = [0u8; 32];
+                for b in s.iter_mut() {
+                    *b = rng.next_u64() as u8;
+                }
+                Payload::Seed(s)
+            }
+            6 => Payload::Bits((0..n).map(|_| rng.next_u64()).collect()),
+            _ => Payload::Control(format!("ctl:{}", rng.next_u64())),
+        }
+    }
+
+    #[test]
+    fn every_payload_variant_roundtrips() {
+        // property: encode/decode is the identity on every variant, for
+        // random contents, tags (incl. NO_TAG), phases and depart stamps
+        prop_check("wire_roundtrip", 300, |rng| {
+            let msg = Msg {
+                from: (rng.next_u64() % 7) as usize,
+                tag: if rng.next_u64() % 4 == 0 { NO_TAG } else { rng.next_u64() },
+                payload: random_payload(rng),
+                depart: (rng.next_u64() as f64) / 1e6,
+                phase: if rng.next_u64() % 2 == 0 { Phase::Online } else { Phase::Offline },
+            };
+            let back = roundtrip(&msg);
+            assert_msg_eq(&msg, &back);
+        });
+    }
+
+    #[test]
+    fn empty_collections_roundtrip() {
+        for payload in [
+            Payload::U64s(vec![]),
+            Payload::F32s(vec![]),
+            Payload::F64s(vec![]),
+            Payload::Cipher(vec![]),
+            Payload::CipherBlock { data: vec![], ct_bytes: 0, count: 0 },
+            Payload::Bits(vec![]),
+            Payload::Control(String::new()),
+        ] {
+            let msg = Msg { from: 0, tag: 1, payload, depart: 0.0, phase: Phase::Online };
+            assert_msg_eq(&msg, &roundtrip(&msg));
+        }
+    }
+
+    #[test]
+    fn float_bit_patterns_survive_exactly() {
+        let msg = Msg {
+            from: 2,
+            tag: 9,
+            payload: Payload::F64s(vec![-0.0, f64::MIN_POSITIVE, 1.0 + f64::EPSILON, 3e300]),
+            depart: f64::MAX,
+            phase: Phase::Online,
+        };
+        assert_msg_eq(&msg, &roundtrip(&msg));
+    }
+
+    #[test]
+    fn every_truncation_of_a_frame_errors_cleanly() {
+        // property: decoding any strict prefix of a valid body must fail
+        // (explicit element counts make truncation always detectable), and
+        // must never panic
+        prop_check("wire_truncation", 60, |rng| {
+            let msg = Msg {
+                from: 1,
+                tag: rng.next_u64(),
+                payload: random_payload(rng),
+                depart: 0.5,
+                phase: Phase::Online,
+            };
+            let frame = encode_msg(&msg);
+            let body = &frame[4..];
+            for cut in 0..body.len() {
+                assert!(
+                    decode_msg(&body[..cut]).is_err(),
+                    "truncation to {cut}/{} bytes decoded successfully",
+                    body.len()
+                );
+            }
+            assert!(decode_msg(body).is_ok());
+        });
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        assert!(decode_msg(&[]).is_err());
+        let msg = Msg {
+            from: 0,
+            tag: 0,
+            payload: Payload::U64s(vec![1]),
+            depart: 0.0,
+            phase: Phase::Online,
+        };
+        let frame = encode_msg(&msg);
+        // bad phase byte
+        let mut bad = frame[4..].to_vec();
+        bad[20] = 9;
+        assert!(decode_msg(&bad).is_err());
+        // bad kind byte
+        let mut bad = frame[4..].to_vec();
+        bad[21] = 200;
+        assert!(decode_msg(&bad).is_err());
+        // absurd element count must not allocate or succeed
+        let mut bad = frame[4..].to_vec();
+        bad[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_msg(&bad).is_err());
+        // trailing garbage after a valid message
+        let mut bad = frame[4..].to_vec();
+        bad.push(0);
+        assert!(decode_msg(&bad).is_err());
+    }
+
+    #[test]
+    fn stream_io_roundtrips_and_reports_eof() {
+        let msgs: Vec<Msg> = (0..3)
+            .map(|i| Msg {
+                from: i,
+                tag: i as u64,
+                payload: Payload::U64s(vec![i as u64; i + 1]),
+                depart: i as f64,
+                phase: Phase::Online,
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            let got = read_msg(&mut r).unwrap().expect("message");
+            assert_msg_eq(m, &got);
+        }
+        // clean EOF at the frame boundary
+        assert!(read_msg(&mut r).unwrap().is_none());
+        // EOF inside the header and inside the body are short reads
+        let mut short = &buf[..2];
+        assert!(read_msg(&mut short).is_err());
+        let mut short = &buf[..10];
+        let e = read_msg(&mut short).unwrap_err();
+        assert!(format!("{e}").contains("short read"), "{e}");
+        // oversized length prefix is rejected before allocation
+        let huge = (FRAME_MAX as u32 + 1).to_le_bytes();
+        let mut r = &huge[..];
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn encoded_size_tracks_accounted_wire_bytes() {
+        // the frame is within a small constant of the netsim accounting
+        // (the simulator's HEADER_BYTES models exactly this envelope)
+        let payload = Payload::U64s(vec![7; 100]);
+        let accounted = payload.total_bytes();
+        let msg = Msg { from: 0, tag: 3, payload, depart: 1.0, phase: Phase::Online };
+        let frame = encode_msg(&msg);
+        let diff = (frame.len() as i64 - accounted as i64).abs();
+        assert!(diff <= 16, "frame {} vs accounted {accounted}", frame.len());
+    }
+}

@@ -1,0 +1,65 @@
+//! End-to-end decentralized runtime test: `spnn launch` really forks one
+//! OS process per party (server, dealer, holder0, holder1) over localhost
+//! TCP, and the resulting model is bit-identical to the single-process
+//! run of `spnn train` with the same flags — at pipeline depths 1 and 4.
+//!
+//! This is the multi-*process* leg of the ISSUE 3 acceptance criteria;
+//! the in-process loopback-TCP legs live in the unit tests
+//! (`*_transports_are_transcript_equal`). Uses the spnn-ss protocol: the
+//! engine's native graph fallback makes it runnable without `make
+//! artifacts`, so this exercises the same binary CI ships.
+
+use std::process::Command;
+
+fn digest_of(output: &std::process::Output, what: &str) -> u64 {
+    assert!(
+        output.status.success(),
+        "{what} failed (status {:?})\nstdout:\n{}\nstderr:\n{}",
+        output.status.code(),
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("weight_digest=0x"))
+        .unwrap_or_else(|| panic!("{what}: no weight_digest line in\n{stdout}"));
+    u64::from_str_radix(line.trim(), 16)
+        .unwrap_or_else(|e| panic!("{what}: bad digest {line:?}: {e}"))
+}
+
+#[test]
+fn launch_processes_match_in_process_train() {
+    let exe = env!("CARGO_BIN_EXE_spnn");
+    for depth in ["1", "4"] {
+        let common = [
+            "--protocol",
+            "spnn-ss",
+            "--rows",
+            "384",
+            "--epochs",
+            "1",
+            "--batch",
+            "128",
+            "--pipeline-depth",
+            depth,
+        ];
+        let launch = Command::new(exe)
+            .arg("launch")
+            .args(common)
+            .output()
+            .expect("spawn spnn launch");
+        let train = Command::new(exe)
+            .arg("train")
+            .args(common)
+            .output()
+            .expect("spawn spnn train");
+        let d_launch = digest_of(&launch, "spnn launch");
+        let d_train = digest_of(&train, "spnn train");
+        assert_ne!(d_launch, 0);
+        assert_eq!(
+            d_launch, d_train,
+            "4-process TCP run diverged from the in-process netsim run at depth {depth}"
+        );
+    }
+}
