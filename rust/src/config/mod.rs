@@ -116,21 +116,30 @@ pub enum TransportKind {
     /// weights to [`TransportKind::Netsim`] (asserted by the transport
     /// parity tests); sim-time is still modeled from the configured link.
     Tcp,
+    /// Unix-domain socketpairs (`std::os::unix::net::UnixStream`), the
+    /// cheapest real IPC for co-located parties: same wire framing as
+    /// TCP, no ports or TCP/IP stack. In-process only (unix platforms);
+    /// multi-process deployments use TCP. Bit-identical weights as well.
+    Uds,
 }
 
 impl TransportKind {
+    /// Parse a CLI name (`--transport netsim|tcp|uds`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "netsim" | "sim" => Some(TransportKind::Netsim),
             "tcp" => Some(TransportKind::Tcp),
+            "uds" | "unix" => Some(TransportKind::Uds),
             _ => None,
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             TransportKind::Netsim => "netsim",
             TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
         }
     }
 }
@@ -170,9 +179,16 @@ pub struct TrainConfig {
     /// order). 0 is coerced to 1.
     pub pipeline_depth: usize,
     /// Transport backend for the party mesh: the in-process netsim
-    /// simulator (default) or real loopback TCP sockets. Multi-process
-    /// deployments (`spnn party` / `spnn launch`) always use TCP.
+    /// simulator (default), real loopback TCP sockets, or Unix-domain
+    /// socketpairs. Multi-process deployments (`spnn party` /
+    /// `spnn launch`) always use TCP.
     pub transport: TransportKind,
+    /// Path to a pre-shared-key file for the multi-process rendezvous
+    /// (`spnn launch --psk-file`): mutual HMAC authentication of every
+    /// role claim (see [`crate::transport::auth`]). `None` = the
+    /// unauthenticated consistency-token handshake. Never serialized
+    /// into the session config broadcast.
+    pub psk_file: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -190,6 +206,7 @@ impl Default for TrainConfig {
             exec_threads: 0,
             pipeline_depth: 1,
             transport: TransportKind::Netsim,
+            psk_file: None,
         }
     }
 }
@@ -233,8 +250,9 @@ mod tests {
         assert_eq!(tc.exec_threads, 0);
         // depth 1 = strict lock-step, the reference schedule
         assert_eq!(tc.pipeline_depth, 1);
-        // the simulator stays the default transport
+        // the simulator stays the default transport, auth is opt-in
         assert_eq!(tc.transport, TransportKind::Netsim);
+        assert!(tc.psk_file.is_none());
     }
 
     #[test]
@@ -242,8 +260,11 @@ mod tests {
         assert_eq!(TransportKind::parse("netsim"), Some(TransportKind::Netsim));
         assert_eq!(TransportKind::parse("sim"), Some(TransportKind::Netsim));
         assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("unix"), Some(TransportKind::Uds));
         assert_eq!(TransportKind::parse("quic"), None);
         assert_eq!(TransportKind::Tcp.name(), "tcp");
+        assert_eq!(TransportKind::Uds.name(), "uds");
         assert_eq!(TransportKind::default(), TransportKind::Netsim);
     }
 

@@ -4,7 +4,7 @@
 //! The paper evaluates on the Kaggle credit-card-fraud dataset
 //! (284,807 x 28, 0.173% positives) and the Kaggle financial-distress
 //! dataset (3,672 x 83 -> 556 one-hot). Neither is redistributable and this
-//! environment has no network, so [`synth`] generates seeded synthetic
+//! environment has no network, so `synth` generates seeded synthetic
 //! equivalents with matched dimensionality, class imbalance, and — for the
 //! Table 2 property attack — an `amount`-like feature whose signal is
 //! carried by the same features the network consumes (DESIGN.md §3).

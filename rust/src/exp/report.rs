@@ -103,14 +103,14 @@ mod tests {
         let rows = vec![
             StageRow {
                 phase: Phase::Online,
-                stage: "server-fwd",
+                stage: "server-fwd".into(),
                 bytes: 2_000_000,
                 msgs: 12,
                 wire_s: 0.25,
             },
             StageRow {
                 phase: Phase::Offline,
-                stage: "dealer",
+                stage: "dealer".into(),
                 bytes: 500_000,
                 msgs: 3,
                 wire_s: 0.0,

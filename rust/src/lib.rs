@@ -17,9 +17,11 @@
 //!
 //! * **Layer 3 (this crate)** — the decentralized coordinator: party actors
 //!   ([`parties`]), a pluggable [`transport`] layer (the deterministic
-//!   [`netsim`] simulator and a real-TCP backend with session rendezvous
-//!   behind one `Channel` trait, so the same roles run in-process or as
-//!   separate OS processes via `spnn launch` / `spnn party`), the MPC
+//!   [`netsim`] simulator, a real-TCP backend with PSK-authenticated
+//!   session rendezvous and journaled reconnect/resume links, and a
+//!   Unix-socketpair backend, all behind one `Channel` trait, so the same
+//!   roles run in-process or as separate OS processes via `spnn launch` /
+//!   `spnn party`), the MPC
 //!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack (with
 //!   plaintext packing, [`paillier::pack`]), the chunked [`exec`] thread
 //!   pool that fans the crypto hot paths out across cores, the PJRT

@@ -21,6 +21,7 @@ use spnn::config::{TrainConfig, TransportKind, DISTRESS, FRAUD};
 use spnn::exp::{self, ExpOpts};
 use spnn::protocols;
 use spnn::runtime::Engine;
+use spnn::transport::auth::Psk;
 use spnn::transport::runner::{run_launch, run_party, LaunchOpts};
 use spnn::transport::session::SessionSpec;
 
@@ -76,13 +77,18 @@ USAGE:
               [--dataset fraud|distress] [--rows N] [--epochs E]
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
               [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
-              [--pipeline-depth D] [--transport netsim|tcp]
+              [--pipeline-depth D] [--transport netsim|tcp|uds]
   spnn launch [same training flags as train]
-              [--listen HOST:PORT] [--no-spawn]
+              [--listen HOST:PORT] [--no-spawn] [--psk-file PATH]
+              [--chaos ROLE:N]
               runs every role as its own OS process over real TCP;
               --no-spawn prints the `spnn party` commands instead of
-              forking (join them from other terminals or hosts)
+              forking (join them from other terminals or hosts);
+              --psk-file authenticates every role claim against a shared
+              key; --chaos makes ROLE sever a connection after N frames
+              (reconnect drill)
   spnn party  --role <name> --connect HOST:PORT [--bind HOST]
+              [--psk-file PATH] [--chaos-kill N]
               join a hosted session as one role (e.g. server, dealer,
               holder0, holder1 — role names come from the protocol)
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
@@ -149,6 +155,7 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
             .map(|v| TransportKind::parse(v).ok_or_else(|| err(format!("unknown transport {v:?}"))))
             .transpose()?
             .unwrap_or(TransportKind::Netsim),
+        psk_file: flags.get("psk-file").cloned(),
     };
     Ok(SessionSpec {
         protocol: proto.to_string(),
@@ -164,6 +171,12 @@ fn print_report(rep: &spnn::protocols::TrainReport) {
     println!("{}", rep.summary());
     println!("train losses: {:?}", rep.train_losses);
     println!("epoch times (sim s): {:?}", rep.epoch_times);
+    // Table-3b style per-stage traffic breakdown; in a `spnn launch` run
+    // the rows are merged from every party process's shipped counters
+    let breakdown = spnn::exp::report::stage_breakdown("traffic by stage", &rep.stages);
+    if !breakdown.is_empty() {
+        println!("{breakdown}");
+    }
     // machine-readable digest line (scripted parity checks grep this)
     println!("weight_digest=0x{:016x}", rep.weight_digest);
 }
@@ -189,13 +202,31 @@ fn cmd_train(flags: &HashMap<String, String>) -> CliResult<()> {
 
 fn cmd_launch(flags: &HashMap<String, String>) -> CliResult<()> {
     let spec = spec_from_flags(flags)?;
+    let chaos = flags
+        .get("chaos")
+        .map(|v| -> CliResult<(String, u64)> {
+            let (role, n) = v
+                .split_once(':')
+                .ok_or_else(|| err(format!("--chaos wants ROLE:N, got {v:?}")))?;
+            let n: u64 =
+                n.parse().map_err(|_| err(format!("bad --chaos frame count {n:?}")))?;
+            if n == 0 {
+                return Err(err("--chaos frame count must be >= 1".into()));
+            }
+            Ok((role.to_string(), n))
+        })
+        .transpose()?;
     let opts = LaunchOpts {
         listen: flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".into()),
         spawn: !flags.contains_key("no-spawn"),
+        chaos,
     };
     eprintln!(
-        "launching {} on {} decentralized ({} holders, multi-process TCP)",
-        spec.protocol, spec.dataset, spec.holders
+        "launching {} on {} decentralized ({} holders, multi-process TCP{})",
+        spec.protocol,
+        spec.dataset,
+        spec.holders,
+        if spec.tc.psk_file.is_some() { ", PSK-authenticated" } else { "" },
     );
     let rep = run_launch(&spec, &opts)?;
     print_report(&rep);
@@ -208,7 +239,18 @@ fn cmd_party(flags: &HashMap<String, String>) -> CliResult<()> {
         .get("connect")
         .ok_or_else(|| err("party needs --connect HOST:PORT".into()))?;
     let bind = flags.get("bind").map(|s| s.as_str()).unwrap_or("127.0.0.1");
-    run_party(connect, role, bind)?;
+    let psk = flags
+        .get("psk-file")
+        .map(|p| Psk::from_file(std::path::Path::new(p)))
+        .transpose()?;
+    let chaos_kill = flags
+        .get("chaos-kill")
+        .map(|v| v.parse::<u64>().map_err(|_| err(format!("bad --chaos-kill count {v:?}"))))
+        .transpose()?;
+    if chaos_kill == Some(0) {
+        return Err(err("--chaos-kill count must be >= 1 (the kill fires after N frames)".into()));
+    }
+    run_party(connect, role, bind, psk.as_ref(), chaos_kill)?;
     Ok(())
 }
 

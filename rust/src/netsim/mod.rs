@@ -30,7 +30,7 @@ mod stats;
 
 pub use payload::Payload;
 pub use port::{Msg, NetPort, NO_TAG};
-pub use stats::{NetStats, StageRow};
+pub use stats::{merge_stage_rows, NetStats, StageRow};
 
 use std::collections::HashMap;
 use std::sync::mpsc;

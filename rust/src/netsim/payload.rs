@@ -37,9 +37,11 @@ pub enum Payload {
 }
 
 impl Payload {
-    /// Fixed per-message framing overhead (type tag, lengths, routing) —
-    /// roughly a gRPC/HTTP2 frame header.
-    pub const HEADER_BYTES: usize = 16;
+    /// Fixed per-message framing overhead, matching the real socket
+    /// envelope in [`crate::transport::wire`]: length prefix (4) +
+    /// frame type (1) + seq (8) + ack (8) + from (4) + tag (8) +
+    /// depart stamp (8) + phase (1) + payload kind (1).
+    pub const HEADER_BYTES: usize = 43;
 
     /// Per-item length framing for the legacy [`Payload::Cipher`] variant:
     /// variable-size byte strings each need their own u32 length prefix.

@@ -6,13 +6,19 @@ use std::sync::Mutex;
 
 use super::{PartyId, Phase};
 
-/// One row of the per-phase / per-stage traffic breakdown.
-#[derive(Clone, Copy, Debug)]
+/// One row of the per-phase / per-stage traffic breakdown. Owned
+/// strings so rows can be shipped across process boundaries in a
+/// [`PartyOut`](crate::parties::PartyOut) and re-aggregated by the
+/// collecting coordinator ([`merge_stage_rows`]).
+#[derive(Clone, Debug, PartialEq)]
 pub struct StageRow {
+    /// Online or offline traffic.
     pub phase: Phase,
     /// Protocol-stage label ([`super::NetPort::set_stage`]).
-    pub stage: &'static str,
+    pub stage: String,
+    /// Accounted wire bytes sent in this stage.
     pub bytes: u64,
+    /// Messages sent in this stage.
     pub msgs: u64,
     /// Estimated wire seconds (latency + serialization) for the online
     /// phase; 0 for offline traffic (which never delays the online clock).
@@ -103,17 +109,13 @@ impl NetStats {
             .iter()
             .map(|(&(phase, stage), e)| StageRow {
                 phase,
-                stage,
+                stage: stage.to_string(),
                 bytes: e.bytes,
                 msgs: e.msgs,
                 wire_s: e.wire_s,
             })
             .collect();
-        rows.sort_by(|a, b| {
-            let pa = (a.phase == Phase::Offline) as u8;
-            let pb = (b.phase == Phase::Offline) as u8;
-            pa.cmp(&pb).then(b.bytes.cmp(&a.bytes)).then(a.stage.cmp(b.stage))
-        });
+        sort_stage_rows(&mut rows);
         rows
     }
 
@@ -202,6 +204,48 @@ impl NetStats {
     }
 }
 
+/// Canonical stage-row ordering: online first, largest first.
+fn sort_stage_rows(rows: &mut [StageRow]) {
+    rows.sort_by(|a, b| {
+        let pa = (a.phase == Phase::Offline) as u8;
+        let pb = (b.phase == Phase::Offline) as u8;
+        pa.cmp(&pb).then(b.bytes.cmp(&a.bytes)).then(a.stage.cmp(&b.stage))
+    });
+}
+
+/// Merge per-process stage rows into one whole-mesh breakdown: rows with
+/// the same `(phase, stage)` key are summed, then re-sorted canonically.
+/// The multi-process runner feeds this with the coordinator's own rows
+/// plus every worker's shipped rows, producing the same Table-3b
+/// breakdown an in-process run reports.
+pub fn merge_stage_rows<I>(row_sets: I) -> Vec<StageRow>
+where
+    I: IntoIterator,
+    I::Item: IntoIterator<Item = StageRow>,
+{
+    let mut map: HashMap<(Phase, String), StageEntry> = HashMap::new();
+    for rows in row_sets {
+        for r in rows {
+            let e = map.entry((r.phase, r.stage)).or_default();
+            e.bytes += r.bytes;
+            e.msgs += r.msgs;
+            e.wire_s += r.wire_s;
+        }
+    }
+    let mut rows: Vec<StageRow> = map
+        .into_iter()
+        .map(|((phase, stage), e)| StageRow {
+            phase,
+            stage,
+            bytes: e.bytes,
+            msgs: e.msgs,
+            wire_s: e.wire_s,
+        })
+        .collect();
+    sort_stage_rows(&mut rows);
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,12 +284,40 @@ mod tests {
         let rows = s.stage_rows();
         assert_eq!(rows.len(), 3);
         // online first, largest first; offline last
-        assert_eq!((rows[0].stage, rows[0].bytes, rows[0].msgs), ("bwd", 400, 1));
-        assert_eq!((rows[1].stage, rows[1].bytes, rows[1].msgs), ("fwd", 150, 2));
+        assert_eq!((rows[0].stage.as_str(), rows[0].bytes, rows[0].msgs), ("bwd", 400, 1));
+        assert_eq!((rows[1].stage.as_str(), rows[1].bytes, rows[1].msgs), ("fwd", 150, 2));
         assert!((rows[1].wire_s - 0.75).abs() < 1e-12);
         assert_eq!(rows[2].phase, Phase::Offline);
         assert_eq!(rows[2].bytes, 9000);
         s.reset();
         assert!(s.stage_rows().is_empty());
+    }
+
+    #[test]
+    fn merge_stage_rows_sums_across_processes() {
+        let row = |phase, stage: &str, bytes, msgs, wire_s| StageRow {
+            phase,
+            stage: stage.into(),
+            bytes,
+            msgs,
+            wire_s,
+        };
+        let a = vec![
+            row(Phase::Online, "fwd", 100, 2, 0.5),
+            row(Phase::Offline, "triple", 10, 1, 0.0),
+        ];
+        let b = vec![
+            row(Phase::Online, "fwd", 50, 1, 0.25),
+            row(Phase::Online, "bwd", 400, 1, 1.0),
+        ];
+        let merged = merge_stage_rows([a, b]);
+        assert_eq!(merged.len(), 3);
+        assert_eq!((merged[0].stage.as_str(), merged[0].bytes), ("bwd", 400));
+        assert_eq!((merged[1].stage.as_str(), merged[1].bytes, merged[1].msgs), ("fwd", 150, 3));
+        assert!((merged[1].wire_s - 0.75).abs() < 1e-12);
+        assert_eq!(merged[2].phase, Phase::Offline);
+        // merging one process's rows is the identity
+        let solo = merge_stage_rows([vec![merged[2].clone()]]);
+        assert_eq!(solo, vec![merged[2].clone()]);
     }
 }

@@ -25,7 +25,7 @@
 use std::sync::Arc;
 
 use crate::config::TransportKind;
-use crate::netsim::{full_mesh, LinkSpec, NetStats, PartyId, Payload, Phase, StageRow};
+use crate::netsim::{full_mesh, LinkSpec, NetPort, NetStats, PartyId, Payload, Phase, StageRow};
 use crate::transport::{tcp, Channel};
 use crate::{Error, Result};
 
@@ -71,6 +71,11 @@ pub struct PartyOut {
     /// evaluation harness (bit-exact f64s; assembled by the trainer's
     /// `finish` step on whichever process collects the outputs).
     pub params: Vec<(String, Vec<f64>)>,
+    /// This party's sender-side per-stage traffic rows (multi-process
+    /// mode ships them to the coordinator, which merges all parties'
+    /// rows into the whole-mesh Table-3b breakdown via
+    /// [`crate::netsim::merge_stage_rows`]).
+    pub stages: Vec<StageRow>,
 }
 
 impl PartyOut {
@@ -130,6 +135,7 @@ pub fn run_parties(
     let (ports, stats): (Vec<_>, Arc<NetStats>) = match kind {
         TransportKind::Netsim => full_mesh(&name_refs, spec),
         TransportKind::Tcp => tcp::loopback_mesh(&name_refs, spec)?,
+        TransportKind::Uds => uds_mesh(&name_refs, spec)?,
     };
     let mut handles = Vec::new();
     for ((mut port, f), name) in ports.into_iter().zip(fns).zip(&names) {
@@ -161,6 +167,18 @@ pub fn run_parties(
         Some(e) => Err(e),
         None => Ok((outs, NetSummary::from_stats(&stats))),
     }
+}
+
+/// Unix-domain socketpair mesh (co-located parties).
+#[cfg(unix)]
+fn uds_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
+    crate::transport::uds::pair_mesh(names, spec)
+}
+
+/// The uds transport is a unix-only backend.
+#[cfg(not(unix))]
+fn uds_mesh(_names: &[&str], _spec: LinkSpec) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
+    Err(Error::Config("the uds transport requires a unix platform".into()))
 }
 
 // ---------------------------------------------------------------------------
@@ -230,9 +248,10 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
     port.send_phase(
         to,
         Payload::Control(format!(
-            "partyout {} {} {} {}",
+            "partyout {} {} {} {} {}",
             out.metrics.len(),
             out.params.len(),
+            out.stages.len(),
             out.weight_digest,
             out.sim_time,
         )),
@@ -248,6 +267,21 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
         port.send_phase(to, Payload::Control(name.clone()), Phase::Offline)?;
         port.send_phase(to, Payload::F64s(data.clone()), Phase::Offline)?;
     }
+    for r in &out.stages {
+        let phase = match r.phase {
+            Phase::Online => "on",
+            Phase::Offline => "off",
+        };
+        // stage name last: it is the only free-form field
+        port.send_phase(
+            to,
+            Payload::Control(format!(
+                "stage {phase} {} {} {} {}",
+                r.bytes, r.msgs, r.wire_s, r.stage
+            )),
+            Phase::Offline,
+        )?;
+    }
     Ok(())
 }
 
@@ -255,7 +289,7 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
 pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut> {
     let header = port.recv(from)?.into_control()?;
     let fields: Vec<&str> = header.split_whitespace().collect();
-    if fields.len() != 5 || fields[0] != "partyout" {
+    if fields.len() != 6 || fields[0] != "partyout" {
         return Err(Error::Protocol(format!("bad partyout header {header:?}")));
     }
     let parse = |s: &str| -> Result<usize> {
@@ -263,12 +297,13 @@ pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut>
     };
     let n_metrics = parse(fields[1])?;
     let n_params = parse(fields[2])?;
-    let weight_digest: u64 = fields[3]
+    let n_stages = parse(fields[3])?;
+    let weight_digest: u64 = fields[4]
         .parse()
-        .map_err(|_| Error::Protocol(format!("bad partyout digest {:?}", fields[3])))?;
-    let sim_time: f64 = fields[4]
+        .map_err(|_| Error::Protocol(format!("bad partyout digest {:?}", fields[4])))?;
+    let sim_time: f64 = fields[5]
         .parse()
-        .map_err(|_| Error::Protocol(format!("bad partyout sim_time {:?}", fields[4])))?;
+        .map_err(|_| Error::Protocol(format!("bad partyout sim_time {:?}", fields[5])))?;
     let epoch_times = port.recv(from)?.into_f64s()?;
     let epoch_losses = port.recv(from)?.into_f64s()?;
     let mut metrics = Vec::with_capacity(n_metrics);
@@ -282,7 +317,26 @@ pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut>
         let name = port.recv(from)?.into_control()?;
         params.push((name, port.recv(from)?.into_f64s()?));
     }
-    Ok(PartyOut { sim_time, epoch_times, epoch_losses, weight_digest, metrics, params })
+    let mut stages = Vec::with_capacity(n_stages);
+    for _ in 0..n_stages {
+        let row = port.recv(from)?.into_control()?;
+        let rest = row
+            .strip_prefix("stage ")
+            .ok_or_else(|| Error::Protocol(format!("bad stage row {row:?}")))?;
+        let mut it = rest.splitn(5, ' ');
+        let bad = || Error::Protocol(format!("bad stage row {row:?}"));
+        let phase = match it.next().ok_or_else(bad)? {
+            "on" => Phase::Online,
+            "off" => Phase::Offline,
+            _ => return Err(bad()),
+        };
+        let bytes: u64 = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let msgs: u64 = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let wire_s: f64 = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let stage = it.next().ok_or_else(bad)?.to_string();
+        stages.push(StageRow { phase, stage, bytes, msgs, wire_s });
+    }
+    Ok(PartyOut { sim_time, epoch_times, epoch_losses, weight_digest, metrics, params, stages })
 }
 
 #[cfg(test)]
@@ -295,7 +349,7 @@ mod tests {
 
     #[test]
     fn harness_runs_and_collects() {
-        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+        for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
             let dep = two_party_dep(
                 Box::new(|p: &mut dyn Channel| {
                     p.send(1, Payload::Control("hi".into()))?;
@@ -356,6 +410,22 @@ mod tests {
             weight_digest: 0xdead_beef_cafe_f00d,
             metrics: vec![("auc".into(), 0.91), ("bytes".into(), 123.0)],
             params: vec![("theta".into(), vec![1.5, -2.5]), ("by".into(), vec![])],
+            stages: vec![
+                StageRow {
+                    phase: Phase::Online,
+                    stage: "fwd".into(),
+                    bytes: 9,
+                    msgs: 2,
+                    wire_s: 0.5,
+                },
+                StageRow {
+                    phase: Phase::Offline,
+                    stage: "triple".into(),
+                    bytes: 4,
+                    msgs: 1,
+                    wire_s: 0.0,
+                },
+            ],
         };
         let expect = sent.clone();
         let dep = two_party_dep(
@@ -373,6 +443,7 @@ mod tests {
         assert_eq!(got.weight_digest, expect.weight_digest);
         assert_eq!(got.metrics, expect.metrics);
         assert_eq!(got.params, expect.params);
+        assert_eq!(got.stages, expect.stages);
         assert_eq!(got.need_param("theta").unwrap(), &[1.5, -2.5]);
         assert!(got.need_param("nope").is_err());
         // result collection is offline traffic

@@ -7,7 +7,7 @@
 //!
 //! Per layer, per batch:
 //! * linear: Beaver matrix multiply + SecureML truncation + shared bias,
-//! * sigmoid ≈ piecewise `f(x) = 0 | x+1/2 | 1` — two [`drelu`] comparisons
+//! * sigmoid ≈ piecewise `f(x) = 0 | x+1/2 | 1` — two [`crate::smpc::boolean::drelu_arith`] comparisons
 //!   (bit-sliced Kogge–Stone over boolean shares) + one Beaver Hadamard,
 //! * relu: one comparison + one Hadamard; derivative bits are reused by
 //!   the backward pass (`f'(x) = b1 - b2` is linear in the bits).
@@ -18,7 +18,7 @@
 //!
 //! **Pipelining**: the party loops run on the shared
 //! [`run_pipeline`] batch-stage state machine. The dealer material a batch
-//! needs is fully determined by the layer plan ([`batch_script`]), so A
+//! needs is fully determined by the layer plan (`batch_script`), so A
 //! fires the whole script as tagged requests from `Prefetch` — up to
 //! `pipeline_depth - 1` batches ahead — and both parties pull the replies
 //! with `recv_tagged` at point of use: the dealer's triple generation
@@ -916,7 +916,7 @@ mod tests {
         let (train, test) = ds.split(0.8, 13);
         for depth in [1usize, 4] {
             let mut digests = Vec::new();
-            for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
                 let tc = TrainConfig {
                     batch: 64,
                     epochs: 1,
@@ -934,6 +934,10 @@ mod tests {
             assert_eq!(
                 digests[0], digests[1],
                 "SecureML over TCP diverged from netsim at depth {depth}"
+            );
+            assert_eq!(
+                digests[0], digests[2],
+                "SecureML over UDS diverged from netsim at depth {depth}"
             );
         }
     }

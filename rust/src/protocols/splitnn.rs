@@ -429,7 +429,7 @@ mod tests {
         let ds = synth_fraud(SynthOpts::small(400));
         let (train, test) = ds.split(0.8, 31);
         let mut digests = Vec::new();
-        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+        for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
             let tc = TrainConfig {
                 batch: 128,
                 epochs: 2,
@@ -444,6 +444,7 @@ mod tests {
             digests.push(rep.weight_digest);
         }
         assert_eq!(digests[0], digests[1], "SplitNN over TCP diverged from netsim");
+        assert_eq!(digests[0], digests[2], "SplitNN over UDS diverged from netsim");
     }
 
     #[test]

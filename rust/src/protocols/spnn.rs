@@ -777,7 +777,7 @@ mod tests {
         let (train, test) = ds.split(0.8, 21);
         for depth in [1usize, 4] {
             let mut digests = Vec::new();
-            for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
                 let tc = TrainConfig {
                     batch: 128,
                     epochs: 1,
@@ -796,6 +796,10 @@ mod tests {
                 digests[0], digests[1],
                 "TCP transport diverged from netsim at depth {depth}"
             );
+            assert_eq!(
+                digests[0], digests[2],
+                "UDS transport diverged from netsim at depth {depth}"
+            );
         }
     }
 
@@ -806,7 +810,7 @@ mod tests {
         let ds = synth_fraud(SynthOpts::small(200));
         let (train, test) = ds.split(0.8, 22);
         let mut digests = Vec::new();
-        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+        for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
             let tc = TrainConfig {
                 batch: 128,
                 epochs: 1,
@@ -822,6 +826,7 @@ mod tests {
             digests.push(rep.weight_digest);
         }
         assert_eq!(digests[0], digests[1], "HE over TCP diverged from netsim");
+        assert_eq!(digests[0], digests[2], "HE over UDS diverged from netsim");
     }
 
     #[test]

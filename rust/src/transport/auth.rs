@@ -1,0 +1,489 @@
+//! Pre-shared-key authentication for the session rendezvous: a
+//! hand-rolled SHA-256 / HMAC-SHA-256 (FIPS 180-4 / RFC 2104, zero
+//! dependencies like the rest of the [`bignum`](crate::bignum)-style
+//! crypto substrate) plus the challenge/response proofs the handshake
+//! exchanges.
+//!
+//! # Threat model
+//!
+//! The PR-3 session token is a *consistency* check: it keeps a stray
+//! client of a different session from wiring into the mesh, but anyone
+//! who can reach the rendezvous port can claim a role. With a PSK
+//! (`spnn launch --psk-file` / `spnn party --psk-file`) the rendezvous
+//! becomes mutually authenticated:
+//!
+//! * the party's `hello` carries a fresh nonce `Na`;
+//! * the coordinator answers with its own nonce `Nb` **and a proof**
+//!   `HMAC(psk, "spnn-auth-host" ‖ Na ‖ Nb ‖ role)` — so a party with the
+//!   key never talks to an impostor coordinator;
+//! * the party answers `HMAC(psk, "spnn-auth-party" ‖ Na ‖ Nb ‖ role)` —
+//!   so the coordinator aborts the whole session (naming the role) when
+//!   any joiner holds a wrong or missing key;
+//! * the peer-mesh session token is re-derived as an HMAC of the config
+//!   wire string under the PSK, so direct party-to-party connections are
+//!   tied to the key as well.
+//!
+//! The nonces make the proofs non-replayable across sessions. What the
+//! PSK does **not** provide is confidentiality or integrity of the
+//! subsequent traffic (no TLS in a zero-dependency build): run the mesh
+//! on a trusted network or through an external tunnel — see
+//! `docs/DEPLOYMENT.md`.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4)
+// ---------------------------------------------------------------------------
+
+const SHA256_K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+const SHA256_H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// Incremental SHA-256 hasher (streaming `update` + `finalize`).
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Partial block awaiting 64 accumulated bytes.
+    buf: [u8; 64],
+    buf_len: usize,
+    /// Total message length so far, in bytes.
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    /// Fresh hasher in the FIPS 180-4 initial state.
+    pub fn new() -> Self {
+        Sha256 { state: SHA256_H0, buf: [0u8; 64], buf_len: 0, total: 0 }
+    }
+
+    fn compress(state: &mut [u32; 8], block: &[u8]) {
+        debug_assert_eq!(block.len(), 64);
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(SHA256_K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        state[0] = state[0].wrapping_add(a);
+        state[1] = state[1].wrapping_add(b);
+        state[2] = state[2].wrapping_add(c);
+        state[3] = state[3].wrapping_add(d);
+        state[4] = state[4].wrapping_add(e);
+        state[5] = state[5].wrapping_add(f);
+        state[6] = state[6].wrapping_add(g);
+        state[7] = state[7].wrapping_add(h);
+    }
+
+    /// Absorb `data` (callable any number of times, any chunking).
+    pub fn update(&mut self, data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        let mut rest = data;
+        if self.buf_len > 0 {
+            let want = 64 - self.buf_len;
+            let take = want.min(rest.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&rest[..take]);
+            self.buf_len += take;
+            rest = &rest[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                Self::compress(&mut self.state, &block);
+                self.buf_len = 0;
+            }
+        }
+        let mut chunks = rest.chunks_exact(64);
+        for block in &mut chunks {
+            Self::compress(&mut self.state, block);
+        }
+        let tail = chunks.remainder();
+        self.buf[..tail.len()].copy_from_slice(tail);
+        self.buf_len = tail.len();
+    }
+
+    /// Apply the FIPS padding and return the 32-byte digest.
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0x00]);
+        }
+        // length update must not re-count the pad: write the block directly
+        self.buf[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        let block = self.buf;
+        Self::compress(&mut self.state, &block);
+        let mut out = [0u8; 32];
+        for (i, word) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// HMAC-SHA-256 (RFC 2104): keys longer than the 64-byte block are
+/// hashed first, shorter ones zero-padded.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0u8; 64];
+    let mut opad = [0u8; 64];
+    for ((ib, ob), &kb) in ipad.iter_mut().zip(opad.iter_mut()).zip(k.iter()) {
+        *ib = kb ^ 0x36;
+        *ob = kb ^ 0x5c;
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    inner.update(msg);
+    let inner = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner);
+    outer.finalize()
+}
+
+/// Lowercase hex encoding.
+pub fn to_hex(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(DIGITS[(b >> 4) as usize] as char);
+        s.push(DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Decode lowercase/uppercase hex (even length required).
+pub fn from_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Protocol(format!("odd-length hex string ({} chars)", s.len())));
+    }
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::Protocol(format!("bad hex digit {:?}", c as char))),
+        }
+    };
+    let b = s.as_bytes();
+    (0..s.len() / 2).map(|i| Ok((nib(b[2 * i])? << 4) | nib(b[2 * i + 1])?)).collect()
+}
+
+/// Constant-time byte-slice equality (no early exit on mismatch).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
+/// Fresh 16-byte handshake nonce: unique, not secret (nonces travel in
+/// the clear; only the HMAC proofs depend on the key). Mixes wall time,
+/// the process id and a process-local counter through SHA-256.
+pub fn fresh_nonce() -> [u8; 16] {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let mut h = Sha256::new();
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    h.update(&t.to_le_bytes());
+    h.update(&std::process::id().to_le_bytes());
+    h.update(&COUNTER.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+    let d = h.finalize();
+    let mut out = [0u8; 16];
+    out.copy_from_slice(&d[..16]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pre-shared key
+// ---------------------------------------------------------------------------
+
+/// A loaded pre-shared key. `Debug` prints a redacted placeholder so the
+/// secret can never leak through diagnostics.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Psk(Vec<u8>);
+
+impl fmt::Debug for Psk {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Psk(<{} bytes, redacted>)", self.0.len())
+    }
+}
+
+/// Domain-separation label for the coordinator-side handshake proof.
+const CTX_HOST: &str = "spnn-auth-host";
+/// Domain-separation label for the party-side handshake proof.
+const CTX_PARTY: &str = "spnn-auth-party";
+
+impl Psk {
+    /// Wrap raw key bytes (tests; operators use [`Psk::from_file`]).
+    pub fn from_bytes(bytes: &[u8]) -> Psk {
+        Psk(bytes.to_vec())
+    }
+
+    /// Load the key from a file, trimming trailing ASCII whitespace (so
+    /// `echo secret > key` and binary key files both work). Empty files
+    /// are rejected.
+    pub fn from_file(path: &Path) -> Result<Psk> {
+        let mut bytes = std::fs::read(path)
+            .map_err(|e| Error::Config(format!("psk file {}: {e}", path.display())))?;
+        while bytes.last().is_some_and(|b| b.is_ascii_whitespace()) {
+            bytes.pop();
+        }
+        if bytes.is_empty() {
+            return Err(Error::Config(format!(
+                "psk file {} is empty after trimming whitespace",
+                path.display()
+            )));
+        }
+        Ok(Psk(bytes))
+    }
+
+    fn proof(&self, ctx: &str, nonce_a: &[u8], nonce_b: &[u8], role: &str) -> [u8; 32] {
+        // unambiguous framing: fixed label, length-prefixed fields
+        let cap = ctx.len() + nonce_a.len() + nonce_b.len() + role.len() + 16;
+        let mut msg = Vec::with_capacity(cap);
+        msg.extend_from_slice(ctx.as_bytes());
+        for field in [nonce_a, nonce_b, role.as_bytes()] {
+            msg.extend_from_slice(&(field.len() as u32).to_le_bytes());
+            msg.extend_from_slice(field);
+        }
+        hmac_sha256(&self.0, &msg)
+    }
+
+    /// Coordinator-side proof over both nonces and the claimed role (hex).
+    pub fn host_proof(&self, nonce_a: &[u8], nonce_b: &[u8], role: &str) -> String {
+        to_hex(&self.proof(CTX_HOST, nonce_a, nonce_b, role))
+    }
+
+    /// Party-side proof over both nonces and the claimed role (hex).
+    pub fn party_proof(&self, nonce_a: &[u8], nonce_b: &[u8], role: &str) -> String {
+        to_hex(&self.proof(CTX_PARTY, nonce_a, nonce_b, role))
+    }
+
+    /// Verify a hex proof in constant time.
+    pub fn verify_host(&self, proof_hex: &str, nonce_a: &[u8], nonce_b: &[u8], role: &str) -> bool {
+        match from_hex(proof_hex) {
+            Ok(p) => ct_eq(&p, &self.proof(CTX_HOST, nonce_a, nonce_b, role)),
+            Err(_) => false,
+        }
+    }
+
+    /// Verify a hex proof in constant time.
+    pub fn verify_party(
+        &self,
+        proof_hex: &str,
+        nonce_a: &[u8],
+        nonce_b: &[u8],
+        role: &str,
+    ) -> bool {
+        match from_hex(proof_hex) {
+            Ok(p) => ct_eq(&p, &self.proof(CTX_PARTY, nonce_a, nonce_b, role)),
+            Err(_) => false,
+        }
+    }
+
+    /// Keyed session token for the peer mesh: replaces the unauthenticated
+    /// config-digest token when a PSK is in force, so party-to-party
+    /// connections also require the key.
+    pub fn mesh_token(&self, cfg_wire: &str, rendezvous: &str) -> u64 {
+        let mut msg = Vec::with_capacity(cfg_wire.len() + rendezvous.len() + 16);
+        msg.extend_from_slice(b"spnn-mesh-token");
+        for field in [cfg_wire.as_bytes(), rendezvous.as_bytes()] {
+            msg.extend_from_slice(&(field.len() as u32).to_le_bytes());
+            msg.extend_from_slice(field);
+        }
+        let d = hmac_sha256(&self.0, &msg);
+        u64::from_le_bytes([d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_fips_vectors() {
+        assert_eq!(
+            to_hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            to_hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            to_hex(&sha256(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn sha256_streaming_matches_one_shot_at_any_chunking() {
+        // includes lengths that straddle the 55/56/64-byte padding edges
+        let data: Vec<u8> = (0u32..300).map(|i| (i * 7 + 3) as u8).collect();
+        for len in [0, 1, 55, 56, 57, 63, 64, 65, 127, 128, 129, 300] {
+            let one = sha256(&data[..len]);
+            for chunk in [1, 3, 7, 64, 300] {
+                let mut h = Sha256::new();
+                for c in data[..len].chunks(chunk) {
+                    h.update(c);
+                }
+                assert_eq!(h.finalize(), one, "len {len} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn hmac_rfc4231_vectors() {
+        // case 1
+        assert_eq!(
+            to_hex(&hmac_sha256(&[0x0b; 20], b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // case 2
+        assert_eq!(
+            to_hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // long key (> block size) takes the hashed-key path
+        let long_key = [0xaa; 131];
+        let got = hmac_sha256(&long_key, b"Test Using Larger Than Block-Size Key - Hash Key First");
+        assert_eq!(
+            to_hex(&got),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn hex_roundtrip_and_errors() {
+        let bytes = [0x00, 0x7f, 0x80, 0xff, 0x3c];
+        assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes);
+        assert_eq!(from_hex("0AfF").unwrap(), vec![0x0a, 0xff]);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn ct_eq_semantics() {
+        assert!(ct_eq(b"abc", b"abc"));
+        assert!(!ct_eq(b"abc", b"abd"));
+        assert!(!ct_eq(b"abc", b"ab"));
+        assert!(ct_eq(b"", b""));
+    }
+
+    #[test]
+    fn nonces_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            assert!(seen.insert(fresh_nonce()));
+        }
+    }
+
+    #[test]
+    fn proofs_verify_and_bind_every_field() {
+        let k = Psk::from_bytes(b"correct horse battery staple");
+        let (na, nb) = (fresh_nonce(), fresh_nonce());
+        let hp = k.host_proof(&na, &nb, "server");
+        let pp = k.party_proof(&na, &nb, "server");
+        assert_ne!(hp, pp, "host/party proofs must be domain-separated");
+        assert!(k.verify_host(&hp, &na, &nb, "server"));
+        assert!(k.verify_party(&pp, &na, &nb, "server"));
+        // any changed field invalidates
+        assert!(!k.verify_host(&hp, &nb, &na, "server"));
+        assert!(!k.verify_host(&hp, &na, &nb, "dealer"));
+        assert!(!k.verify_party(&hp, &na, &nb, "server"), "proof contexts must not cross");
+        let other = Psk::from_bytes(b"wrong key");
+        assert!(!other.verify_host(&hp, &na, &nb, "server"));
+        // garbage proofs are rejected, not panicked on
+        assert!(!k.verify_host("not hex", &na, &nb, "server"));
+    }
+
+    #[test]
+    fn mesh_token_depends_on_key_config_and_address() {
+        let a = Psk::from_bytes(b"alpha");
+        let b = Psk::from_bytes(b"beta");
+        let t = a.mesh_token("cfg v1", "127.0.0.1:7000");
+        assert_ne!(t, b.mesh_token("cfg v1", "127.0.0.1:7000"));
+        assert_ne!(t, a.mesh_token("cfg v2", "127.0.0.1:7000"));
+        assert_ne!(t, a.mesh_token("cfg v1", "127.0.0.1:7001"));
+        assert_eq!(t, a.mesh_token("cfg v1", "127.0.0.1:7000"));
+    }
+
+    #[test]
+    fn psk_file_loads_trimmed_and_rejects_empty() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("spnn-psk-test-{}", std::process::id()));
+        std::fs::write(&path, "sekrit\n").unwrap();
+        let k = Psk::from_file(&path).unwrap();
+        assert_eq!(k, Psk::from_bytes(b"sekrit"));
+        // Debug must never print the key material
+        let dbg = format!("{k:?}");
+        assert!(!dbg.contains("sekrit"), "{dbg}");
+        std::fs::write(&path, "  \n\n").unwrap();
+        assert!(Psk::from_file(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+        assert!(Psk::from_file(Path::new("/nonexistent/psk")).is_err());
+    }
+}

@@ -20,17 +20,33 @@
 //!   deployment rendezvoused by the [`session`] handshake and driven by
 //!   the [`runner`] (`spnn party` / `spnn launch`).
 //!
-//! Both backends share one session engine (`netsim::NetPort`: reorder
+//! * Backend (c): **UDS** ([`uds`], unix only) — Unix-domain socketpairs
+//!   for co-located parties, same framing, no TCP/IP stack
+//!   (`--transport uds`).
+//!
+//! All backends share one session engine (`netsim::NetPort`: reorder
 //! buffers, virtual clock, stats, deadlock diagnostics); they differ only
 //! in what carries the messages — in-process `mpsc` channels vs socket
 //! reader/writer threads. Because the sender's virtual-clock departure
 //! stamp travels inside the wire frame, the simulated-time model works
 //! identically across backends, and the trained weights are bit-identical
 //! (asserted by the `*_transports_are_transcript_equal` tests).
+//!
+//! Multi-process hardening lives in two further modules: [`auth`]
+//! (pre-shared-key mutual authentication of the rendezvous, hand-rolled
+//! SHA-256/HMAC) and [`relink`] (journaled resilient links — a dropped
+//! `TcpStream` is re-dialed and the unacked tail replayed, so training
+//! survives mid-epoch connection kills bit-identically).
 
+#![warn(missing_docs)]
+
+pub mod auth;
+pub mod relink;
 pub mod runner;
 pub mod session;
 pub mod tcp;
+#[cfg(unix)]
+pub mod uds;
 pub mod wire;
 
 use std::time::Duration;
@@ -117,6 +133,7 @@ pub trait Channel: Send {
         self.recv(from)?.into_u64s()
     }
 
+    /// Receive and assert the f32 variant.
     fn recv_f32s(&mut self, from: PartyId) -> Result<Vec<f32>> {
         self.recv(from)?.into_f32s()
     }

@@ -1,0 +1,1030 @@
+//! Resilient socket links: mid-training reconnect/resume for the
+//! multi-process TCP backend.
+//!
+//! A plain socket link dies with its `TcpStream`: one RST mid-epoch and
+//! the whole training run is lost. This module wraps each peer connection
+//! of a multi-process deployment in a **journaled link**:
+//!
+//! * every data frame carries a per-link sequence number
+//!   ([`wire::encode_frame`]); the sender keeps each frame in a journal
+//!   until the peer acknowledges it — acks piggyback on reverse-direction
+//!   data frames, and an idle-tick [`wire::FT_ACK`] frame covers
+//!   one-directional phases so the journal stays bounded;
+//! * when the connection drops, the link's fixed **dialer** side re-dials
+//!   the peer's listener and the two sides exchange
+//!   `spnn-relink v1 id=… token=… last=…` / `spnn-relink-ok last=…`
+//!   control frames naming the highest sequence number each has
+//!   delivered; both sides prune their journals to that point and replay
+//!   the rest over the fresh socket;
+//! * the receiver drops frames it has already delivered (replay
+//!   duplicates) and insists on gap-free sequence numbers, so the stream
+//!   the protocol observes is **exactly once, in order** — which is what
+//!   keeps the trained weights bit-identical through a reconnect;
+//! * an orderly shutdown sends a goodbye marker ([`wire::FT_BYE`]), so a
+//!   clean peer exit is distinguishable from a dropped link and never
+//!   triggers a reconnect storm.
+//!
+//! Deadlock freedom: no thread ever blocks in a socket write while
+//! holding the link lock. The writer journals under the lock but writes
+//! through a cached clone of the socket outside it, and journal replay
+//! after a reconnect runs on a dedicated worker thread while the link's
+//! reader keeps draining inbound frames — so bidirectional bulk traffic
+//! (and simultaneous two-sided recovery) cannot wedge on full kernel
+//! buffers.
+//!
+//! Dialer/acceptor roles are fixed by the session topology: every party
+//! re-dials the coordinator's rendezvous listener, and within the peer
+//! mesh the higher-id party re-dials the lower-id party's listener
+//! (mirroring the original bring-up). The acceptor keeps its listener
+//! open for the lifetime of the session behind a small accept hub that
+//! routes `spnn-relink` connections to the right link.
+//!
+//! Chaos hook: a link set can be told to sever one connection after N
+//! sent frames (`spnn party --chaos-kill N` / `spnn launch --chaos
+//! ROLE:N`), which is how the reconnect path stays honest in CI — see
+//! the chaos tests here and in `rust/tests/decentralized.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::tcp::connect_retry;
+use super::wire;
+use crate::netsim::{LinkSpec, Msg, NetPort, NetStats, PartyId, Payload, Phase, NO_TAG};
+use crate::{Error, Result};
+
+/// Per-step deadline for the relink control exchange on a fresh socket.
+const RELINK_STEP_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Writer idle tick: after this long with nothing to send, flush a
+/// standalone ack so an idle reverse direction still prunes the peer's
+/// journal.
+const ACK_IDLE_TICK: Duration = Duration::from_millis(100);
+
+/// Frames cloned out of the journal per locked batch during a replay
+/// (bounds lock hold time while the reader is busy).
+const REPLAY_CHUNK: usize = 16;
+
+/// Default window in which a dropped connection must be re-established
+/// before the link gives up and surfaces a disconnect error.
+pub const RECONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How a broken connection gets a replacement socket.
+#[derive(Clone, Debug)]
+pub(crate) enum Redial {
+    /// This side re-dials the peer's listener at the given address.
+    Dial(String),
+    /// The peer re-dials us; our accept hub installs the new socket.
+    Accept,
+}
+
+/// Knobs for a resilient link set.
+pub(crate) struct RelinkOpts {
+    /// Session token relink connections must present.
+    pub(crate) token: u64,
+    /// Reconnect window per outage.
+    pub(crate) reconnect_timeout: Duration,
+    /// Chaos: sever the first link that has sent this many data frames.
+    pub(crate) chaos_kill_after: Option<u64>,
+}
+
+impl Default for RelinkOpts {
+    fn default() -> Self {
+        RelinkOpts { token: 0, reconnect_timeout: RECONNECT_TIMEOUT, chaos_kill_after: None }
+    }
+}
+
+/// Mutable link state shared by the reader, writer, replay-worker and
+/// hub threads.
+struct Inner {
+    /// Current socket; `None` while the link is down.
+    stream: Option<TcpStream>,
+    /// Bumped on every socket install (stale-handle detection).
+    epoch: u64,
+    /// Sent-but-unacked frames, encoded, contiguous by sequence number.
+    journal: VecDeque<(u64, Vec<u8>)>,
+    /// Next sequence number to assign (data frames start at 1).
+    next_seq: u64,
+    /// Highest in-order sequence number delivered from the peer.
+    delivered: u64,
+    /// Highest own sequence number the peer has acknowledged.
+    acked: u64,
+    /// Highest `delivered` value we have sent to the peer (piggybacked
+    /// or standalone) — drives the idle-tick ack.
+    last_ack_sent: u64,
+    /// Peer sent its goodbye marker: EOF is clean, stop reconnecting.
+    peer_bye: bool,
+    /// Our side shut down (port dropped / outbox closed).
+    closed: bool,
+    /// Our goodbye went out (exactly once).
+    bye_sent: bool,
+    /// Epoch of the replay worker currently owning the write side
+    /// (`None` = the writer thread owns it).
+    replaying: Option<u64>,
+    /// Data frames written on this link (chaos trigger).
+    frames_sent: u64,
+}
+
+/// One resilient link's shared state.
+struct Shared {
+    me: PartyId,
+    peer: PartyId,
+    token: u64,
+    reconnect_timeout: Duration,
+    chaos_after: Option<u64>,
+    /// Set once the chaos kill fired anywhere in the link set.
+    chaos_fired: Arc<AtomicBool>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+fn prune_journal(g: &mut Inner, ack: u64) {
+    if ack > g.acked {
+        g.acked = ack;
+    }
+    while g.journal.front().is_some_and(|(s, _)| *s <= g.acked) {
+        g.journal.pop_front();
+    }
+}
+
+fn drop_stream(g: &mut Inner) {
+    if let Some(s) = g.stream.take() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+fn ctl_msg(from: PartyId, text: String) -> Msg {
+    Msg { from, tag: NO_TAG, payload: Payload::Control(text), depart: 0.0, phase: Phase::Offline }
+}
+
+/// Point `cache` at the link's current socket; `None` while the link is
+/// down or a replay worker owns the write side.
+fn refresh_cache(g: &Inner, cache: &mut Option<(TcpStream, u64)>) {
+    if g.replaying.is_some() {
+        *cache = None;
+        return;
+    }
+    match g.stream.as_ref() {
+        Some(s) => {
+            if cache.as_ref().map(|c| c.1) != Some(g.epoch) {
+                *cache = s.try_clone().ok().map(|c| (c, g.epoch));
+            }
+        }
+        None => *cache = None,
+    }
+}
+
+/// Write one frame through the cached handle **without holding the link
+/// lock** (the frame is already journaled, so a failure just marks the
+/// link down and lets the reconnect path replay it). Returns true on a
+/// completed write.
+fn write_unlocked(sh: &Shared, cache: &mut Option<(TcpStream, u64)>, frame: &[u8]) -> bool {
+    let Some((s, ep)) = cache.as_ref() else { return false };
+    let mut w: &TcpStream = s;
+    if std::io::Write::write_all(&mut w, frame).is_ok() {
+        return true;
+    }
+    let mut g = sh.inner.lock().unwrap();
+    if g.epoch == *ep {
+        drop_stream(&mut g);
+    }
+    *cache = None;
+    false
+}
+
+/// Probe-write the goodbye on the current socket (one small frame; safe
+/// under the lock). Marks the stream down on failure so the caller can
+/// fall back to a reconnect.
+fn send_bye_locked(g: &mut Inner) -> bool {
+    let Some(s) = g.stream.as_ref() else { return false };
+    let bye = wire::encode_bye(g.next_seq - 1, g.delivered);
+    let mut w: &TcpStream = s;
+    if std::io::Write::write_all(&mut w, &bye).is_ok() {
+        g.bye_sent = true;
+        let _ = s.shutdown(Shutdown::Write);
+        true
+    } else {
+        drop_stream(g);
+        false
+    }
+}
+
+/// Block (bounded by the reconnect window) until no replay worker owns
+/// the link's write side.
+fn wait_replay<'a>(
+    sh: &'a Shared,
+    mut g: std::sync::MutexGuard<'a, Inner>,
+) -> std::sync::MutexGuard<'a, Inner> {
+    let deadline = Instant::now() + sh.reconnect_timeout;
+    while g.replaying.is_some() && Instant::now() < deadline {
+        let (g2, _) = sh.cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+        g = g2;
+    }
+    g
+}
+
+fn maybe_chaos(sh: &Shared, g: &mut Inner) {
+    if let Some(n) = sh.chaos_after {
+        if g.frames_sent == n && !sh.chaos_fired.swap(true, Ordering::SeqCst) {
+            eprintln!(
+                "spnn-relink: CHAOS severing link {} -> {} after {n} data frames",
+                sh.me, sh.peer
+            );
+            if let Some(s) = g.stream.as_ref() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket install + background journal replay
+// ---------------------------------------------------------------------------
+
+/// Install a fresh socket (lock held) and hand the write side to a
+/// replay worker: the journal tail streams to the peer on its own
+/// thread while this link's reader resumes immediately, so neither side
+/// of a two-way recovery ever stops draining its inbound direction.
+fn install_and_replay(sh: &Arc<Shared>, g: &mut Inner, stream: TcpStream) -> bool {
+    let wr = match stream.try_clone() {
+        Ok(c) => c,
+        Err(_) => return false,
+    };
+    g.stream = Some(stream);
+    g.epoch += 1;
+    let epoch = g.epoch;
+    g.replaying = Some(epoch);
+    let sh2 = sh.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("spnn-replay-{}-{}", sh.me, sh.peer))
+        .spawn(move || replay_worker(sh2, wr, epoch));
+    if spawned.is_err() {
+        g.replaying = None;
+        drop_stream(g);
+        return false;
+    }
+    sh.cv.notify_all();
+    true
+}
+
+/// Stream the unacked journal (and anything appended mid-replay) to the
+/// peer in sequence order, in small locked batches, then hand the write
+/// side back to the writer thread. Sends the goodbye itself when the
+/// link closed while the replay was in flight.
+fn replay_worker(sh: Arc<Shared>, stream: TcpStream, epoch: u64) {
+    let mut last_seq = 0u64;
+    let mut replayed = 0usize;
+    loop {
+        let batch = {
+            let mut g = sh.inner.lock().unwrap();
+            if g.epoch != epoch || g.replaying != Some(epoch) {
+                if g.replaying == Some(epoch) {
+                    g.replaying = None;
+                }
+                sh.cv.notify_all();
+                return; // superseded by a newer socket
+            }
+            let delivered = g.delivered;
+            let mut batch: Vec<Vec<u8>> = Vec::new();
+            for (s, f) in g.journal.iter_mut() {
+                if *s <= last_seq {
+                    continue;
+                }
+                if batch.len() == REPLAY_CHUNK {
+                    break;
+                }
+                wire::patch_ack(f, delivered);
+                last_seq = *s;
+                batch.push(f.clone());
+            }
+            if batch.is_empty() {
+                // drained: atomically hand the write side back (and say
+                // goodbye if the link closed while we were replaying)
+                g.replaying = None;
+                g.last_ack_sent = g.last_ack_sent.max(delivered);
+                if g.closed && !g.bye_sent {
+                    send_bye_locked(&mut g);
+                }
+                sh.cv.notify_all();
+                if replayed > 0 {
+                    eprintln!(
+                        "spnn-relink: party {} replayed {replayed} frame(s) to peer {}",
+                        sh.me, sh.peer
+                    );
+                }
+                return;
+            }
+            batch
+        };
+        for f in &batch {
+            let mut w: &TcpStream = &stream;
+            if std::io::Write::write_all(&mut w, f).is_err() {
+                let mut g = sh.inner.lock().unwrap();
+                if g.epoch == epoch {
+                    drop_stream(&mut g);
+                }
+                if g.replaying == Some(epoch) {
+                    g.replaying = None;
+                }
+                sh.cv.notify_all();
+                return; // the next reconnect replays from the journal
+            }
+        }
+        replayed += batch.len();
+    }
+}
+
+/// Dialer-side recovery, run with the link lock held: re-dial, exchange
+/// `spnn-relink`, prune the journal and kick off the background replay.
+/// Returns false when the reconnect window elapsed.
+fn reconnect_locked(sh: &Arc<Shared>, g: &mut Inner, addr: &str) -> bool {
+    let deadline = Instant::now() + sh.reconnect_timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            eprintln!(
+                "spnn-relink: party {} gave up re-dialing {} (peer {}) after {:?}",
+                sh.me, addr, sh.peer, sh.reconnect_timeout
+            );
+            return false;
+        }
+        let stream = match connect_retry(addr, remaining) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("spnn-relink: party {} could not re-dial peer {}: {e}", sh.me, sh.peer);
+                return false;
+            }
+        };
+        stream.set_nodelay(true).ok();
+        if stream.set_read_timeout(Some(RELINK_STEP_TIMEOUT)).is_err() {
+            continue;
+        }
+        let hello = ctl_msg(
+            sh.me,
+            format!("spnn-relink v1 id={} token={} last={}", sh.me, sh.token, g.delivered),
+        );
+        let mut w: &TcpStream = &stream;
+        if wire::write_msg(&mut w, &hello).is_err() {
+            continue;
+        }
+        let mut r: &TcpStream = &stream;
+        let reply = match wire::read_msg(&mut r) {
+            Ok(Some(m)) => match m.payload.into_control() {
+                Ok(t) => t,
+                Err(_) => continue,
+            },
+            _ => continue,
+        };
+        let Some(rest) = reply.strip_prefix("spnn-relink-ok last=") else {
+            eprintln!(
+                "spnn-relink: party {} relink to peer {} rejected: {reply:?}",
+                sh.me, sh.peer
+            );
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        };
+        let Ok(peer_last) = rest.trim().parse::<u64>() else { continue };
+        prune_journal(g, peer_last);
+        if stream.set_read_timeout(None).is_err() {
+            continue;
+        }
+        if !install_and_replay(sh, g, stream) {
+            continue;
+        }
+        eprintln!(
+            "spnn-relink: party {} re-established link to peer {} ({} unacked frame(s) \
+             to replay)",
+            sh.me,
+            sh.peer,
+            g.journal.len()
+        );
+        return true;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer / reader threads
+// ---------------------------------------------------------------------------
+
+fn writer_loop(sh: Arc<Shared>, out_rx: mpsc::Receiver<Msg>, redial: Redial) {
+    // cached clone of the current socket, tagged with its epoch; writes
+    // happen through it OUTSIDE the link lock (see module docs)
+    let mut cache: Option<(TcpStream, u64)> = None;
+    loop {
+        match out_rx.recv_timeout(ACK_IDLE_TICK) {
+            Ok(msg) => {
+                let (frame, ack) = {
+                    let mut g = sh.inner.lock().unwrap();
+                    let seq = g.next_seq;
+                    g.next_seq += 1;
+                    let ack = g.delivered;
+                    let frame = wire::encode_frame(&msg, seq, ack);
+                    g.journal.push_back((seq, frame.clone()));
+                    refresh_cache(&g, &mut cache);
+                    (frame, ack)
+                };
+                if write_unlocked(&sh, &mut cache, &frame) {
+                    let mut g = sh.inner.lock().unwrap();
+                    g.last_ack_sent = g.last_ack_sent.max(ack);
+                    g.frames_sent += 1;
+                    maybe_chaos(&sh, &mut g);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // idle reverse direction: flush a standalone ack so the
+                // peer's journal stays bounded on one-way traffic phases
+                let frame = {
+                    let mut g = sh.inner.lock().unwrap();
+                    refresh_cache(&g, &mut cache);
+                    if cache.is_some() && g.delivered > g.last_ack_sent {
+                        g.last_ack_sent = g.delivered;
+                        Some(wire::encode_ack(g.delivered))
+                    } else {
+                        None
+                    }
+                };
+                if let Some(f) = frame {
+                    write_unlocked(&sh, &mut cache, &f);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // outbox closed: the port is gone. Let an in-flight replay finish
+    // (it says goodbye itself when it drains), otherwise say goodbye —
+    // the bye write doubles as a liveness probe, and the dialing side
+    // runs one reconnect cycle so an unacked tail is not silently
+    // swallowed by a dead link.
+    let mut g = sh.inner.lock().unwrap();
+    g.closed = true;
+    g = wait_replay(&sh, g);
+    if !g.bye_sent && !send_bye_locked(&mut g) && !g.journal.is_empty() && !g.peer_bye {
+        if let Redial::Dial(addr) = &redial {
+            if reconnect_locked(&sh, &mut g, addr) {
+                g = wait_replay(&sh, g); // worker sends the bye on drain
+                if !g.bye_sent {
+                    send_bye_locked(&mut g);
+                }
+            }
+        }
+    }
+    sh.cv.notify_all();
+}
+
+fn reader_loop(sh: Arc<Shared>, inbox_tx: mpsc::Sender<Msg>, redial: Redial) {
+    'outer: loop {
+        // acquire a handle on the current socket, reconnecting (dialer)
+        // or waiting for the hub (acceptor) when the link is down
+        let (mut rd, my_epoch) = {
+            let mut g = sh.inner.lock().unwrap();
+            loop {
+                if g.closed || g.peer_bye {
+                    return;
+                }
+                if let Some(s) = g.stream.as_ref() {
+                    match s.try_clone() {
+                        Ok(c) => break (c, g.epoch),
+                        Err(_) => {
+                            drop_stream(&mut g);
+                            continue;
+                        }
+                    }
+                }
+                match &redial {
+                    Redial::Dial(addr) => {
+                        if !reconnect_locked(&sh, &mut g, addr) {
+                            return; // inbox drops -> port reports disconnect
+                        }
+                    }
+                    Redial::Accept => {
+                        let deadline = Instant::now() + sh.reconnect_timeout;
+                        while g.stream.is_none() && !g.closed && !g.peer_bye {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                eprintln!(
+                                    "spnn-relink: party {} gave up waiting for peer {} \
+                                     to re-dial after {:?}",
+                                    sh.me, sh.peer, sh.reconnect_timeout
+                                );
+                                return;
+                            }
+                            let (g2, _) = sh.cv.wait_timeout(g, deadline - now).unwrap();
+                            g = g2;
+                        }
+                    }
+                }
+            }
+        };
+        loop {
+            match wire::read_frame(&mut rd) {
+                Ok(Some(f)) => {
+                    let mut g = sh.inner.lock().unwrap();
+                    prune_journal(&mut g, f.ack);
+                    match f.msg {
+                        None if f.ftype == wire::FT_ACK => continue,
+                        None => {
+                            // goodbye: peer is done; any later EOF is clean
+                            g.peer_bye = true;
+                            sh.cv.notify_all();
+                            return;
+                        }
+                        Some(msg) => {
+                            if msg.from != sh.peer {
+                                eprintln!(
+                                    "spnn-relink: party {}: frame from {} on the link to \
+                                     peer {} — dropping link",
+                                    sh.me, msg.from, sh.peer
+                                );
+                                return;
+                            }
+                            if f.seq <= g.delivered {
+                                continue; // replay duplicate
+                            }
+                            if f.seq != g.delivered + 1 {
+                                eprintln!(
+                                    "spnn-relink: party {}: sequence gap from peer {} \
+                                     (got {}, expected {}) — dropping link",
+                                    sh.me,
+                                    sh.peer,
+                                    f.seq,
+                                    g.delivered + 1
+                                );
+                                return;
+                            }
+                            g.delivered = f.seq;
+                            drop(g);
+                            if inbox_tx.send(msg).is_err() {
+                                let mut g = sh.inner.lock().unwrap();
+                                g.closed = true;
+                                sh.cv.notify_all();
+                                return;
+                            }
+                        }
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    // EOF without a goodbye, or a torn frame: link dropped
+                    let mut g = sh.inner.lock().unwrap();
+                    if g.closed || g.peer_bye {
+                        return;
+                    }
+                    if g.epoch == my_epoch {
+                        drop_stream(&mut g);
+                    }
+                    continue 'outer;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept hub (acceptor-side listener for the session lifetime)
+// ---------------------------------------------------------------------------
+
+/// Handle to the background accept loop that serves `spnn-relink`
+/// connections on the acceptor's listener.
+pub(crate) struct Hub {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Hub {
+    /// Stop the accept loop and join its thread.
+    pub(crate) fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Hub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_relink(stream: TcpStream, links: &[(PartyId, Arc<Shared>)], me: PartyId, token: u64) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(RELINK_STEP_TIMEOUT)).is_err() {
+        return;
+    }
+    let reject = |s: &TcpStream, why: String| {
+        eprintln!("spnn-relink: party {me}: dropping stray connection ({why})");
+        let mut w: &TcpStream = s;
+        let _ = wire::write_msg(&mut w, &ctl_msg(me, format!("spnn-err {why}")));
+    };
+    let mut r: &TcpStream = &stream;
+    let text = match wire::read_msg(&mut r) {
+        Ok(Some(m)) => match m.payload.into_control() {
+            Ok(t) => t,
+            Err(_) => return reject(&stream, "relink hello is not a control frame".into()),
+        },
+        _ => return,
+    };
+    let Some(rest) = text.strip_prefix("spnn-relink v1 ") else {
+        return reject(&stream, format!("expected relink hello, got {text:?}"));
+    };
+    let field = |key: &str| -> Option<u64> {
+        rest.split_whitespace()
+            .find_map(|w| w.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+            .and_then(|v| v.parse().ok())
+    };
+    let (Some(pid), Some(ptoken), Some(peer_last)) =
+        (field("id"), field("token"), field("last"))
+    else {
+        return reject(&stream, format!("malformed relink hello {text:?}"));
+    };
+    if ptoken != token {
+        return reject(&stream, "wrong session token".into());
+    }
+    let Some((_, sh)) = links.iter().find(|(p, _)| *p as u64 == pid) else {
+        return reject(&stream, format!("no acceptor-side link for peer {pid}"));
+    };
+    let mut g = sh.inner.lock().unwrap();
+    if g.peer_bye {
+        return reject(&stream, "peer already said goodbye on this link".into());
+    }
+    // kick the old socket (wakes our reader if it is still blocked on it)
+    drop_stream(&mut g);
+    let mut w: &TcpStream = &stream;
+    let ok = ctl_msg(me, format!("spnn-relink-ok last={}", g.delivered));
+    if wire::write_msg(&mut w, &ok).is_err() {
+        return;
+    }
+    prune_journal(&mut g, peer_last);
+    if stream.set_read_timeout(None).is_err() {
+        return;
+    }
+    // the replay worker streams the tail (and, if we already shut down,
+    // the goodbye the peer never received) while our reader — woken by
+    // the install — resumes draining inbound frames
+    if install_and_replay(sh, &mut g, stream) {
+        eprintln!(
+            "spnn-relink: party {me} re-accepted link from peer {pid} ({} unacked \
+             frame(s) to replay)",
+            g.journal.len()
+        );
+    }
+}
+
+fn spawn_hub(
+    listener: TcpListener,
+    links: Vec<(PartyId, Arc<Shared>)>,
+    me: PartyId,
+    token: u64,
+) -> Result<Hub> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let links = Arc::new(links);
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Net(format!("hub set_nonblocking: {e}")))?;
+    let handle = std::thread::Builder::new()
+        .name(format!("spnn-hub-{me}"))
+        .spawn(move || loop {
+            if stop2.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if s.set_nonblocking(false).is_ok() {
+                        // one detached thread per connection: a stray or
+                        // stalled client blocking in its 10 s handshake
+                        // read must never starve a genuine re-dial (the
+                        // listener may be on a routable address)
+                        let links = links.clone();
+                        let _ = std::thread::Builder::new()
+                            .name(format!("spnn-relink-accept-{me}"))
+                            .spawn(move || handle_relink(s, &links, me, token));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        })
+        .map_err(Error::Io)?;
+    Ok(Hub { stop, handle: Some(handle) })
+}
+
+// ---------------------------------------------------------------------------
+// Link-set assembly
+// ---------------------------------------------------------------------------
+
+/// The thread handles and shared state behind one party's resilient
+/// links (owned by `super::tcp::TcpPort`).
+pub(crate) struct LinkSet {
+    pub(crate) writers: Vec<JoinHandle<()>>,
+    pub(crate) hub: Option<Hub>,
+    shareds: Vec<(PartyId, Arc<Shared>)>,
+}
+
+impl LinkSet {
+    /// Chaos/ops hook: sever every live connection of this party once
+    /// (simulates a network cut; the links re-establish themselves).
+    pub(crate) fn sever_all(&self) {
+        for (_, sh) in &self.shareds {
+            let g = sh.inner.lock().unwrap();
+            if let Some(s) = g.stream.as_ref() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// Build a `NetPort` whose peer connections are resilient links:
+/// `streams[p]` is the established socket to party `p`, `redials[p]`
+/// names the recovery role for that link, and `listener` (required when
+/// any link is [`Redial::Accept`]) stays open behind the accept hub.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn resilient_port(
+    me: PartyId,
+    names: &[&str],
+    streams: Vec<Option<TcpStream>>,
+    redials: Vec<Option<Redial>>,
+    listener: Option<TcpListener>,
+    opts: RelinkOpts,
+    spec: LinkSpec,
+    stats: Arc<NetStats>,
+) -> Result<(NetPort, LinkSet)> {
+    assert_eq!(streams.len(), redials.len());
+    let chaos_fired = Arc::new(AtomicBool::new(false));
+    let mut txs: HashMap<PartyId, mpsc::Sender<Msg>> = HashMap::new();
+    let mut rxs: HashMap<PartyId, mpsc::Receiver<Msg>> = HashMap::new();
+    let mut writers = Vec::new();
+    let mut shareds: Vec<(PartyId, Arc<Shared>)> = Vec::new();
+    let mut acceptors: Vec<(PartyId, Arc<Shared>)> = Vec::new();
+    for (peer, (slot, redial)) in streams.into_iter().zip(redials).enumerate() {
+        let Some(stream) = slot else { continue };
+        let redial = redial.ok_or_else(|| {
+            Error::Net(format!("party {me}: no redial role for the link to peer {peer}"))
+        })?;
+        stream.set_nodelay(true).map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
+        // the handshake may have left a read timeout installed; the reader
+        // must block indefinitely (deadlock detection lives in the port)
+        stream
+            .set_read_timeout(None)
+            .map_err(|e| Error::Net(format!("clear read timeout: {e}")))?;
+        let sh = Arc::new(Shared {
+            me,
+            peer,
+            token: opts.token,
+            reconnect_timeout: opts.reconnect_timeout,
+            chaos_after: opts.chaos_kill_after,
+            chaos_fired: chaos_fired.clone(),
+            inner: Mutex::new(Inner {
+                stream: Some(stream),
+                epoch: 1,
+                journal: VecDeque::new(),
+                next_seq: 1,
+                delivered: 0,
+                acked: 0,
+                last_ack_sent: 0,
+                peer_bye: false,
+                closed: false,
+                bye_sent: false,
+                replaying: None,
+                frames_sent: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        if matches!(redial, Redial::Accept) {
+            acceptors.push((peer, sh.clone()));
+        }
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel::<Msg>();
+        let wh = std::thread::Builder::new()
+            .name(format!("spnn-tx-{me}-{peer}"))
+            .spawn({
+                let sh = sh.clone();
+                let redial = redial.clone();
+                move || writer_loop(sh, out_rx, redial)
+            })
+            .map_err(Error::Io)?;
+        // reader detaches; it exits on goodbye, close, or reconnect give-up
+        let _detached = std::thread::Builder::new()
+            .name(format!("spnn-rx-{me}-{peer}"))
+            .spawn({
+                let sh = sh.clone();
+                move || reader_loop(sh, inbox_tx, redial)
+            })
+            .map_err(Error::Io)?;
+        txs.insert(peer, out_tx);
+        rxs.insert(peer, inbox_rx);
+        writers.push(wh);
+        shareds.push((peer, sh));
+    }
+    let hub = match listener {
+        Some(l) if !acceptors.is_empty() => Some(spawn_hub(l, acceptors, me, opts.token)?),
+        _ => None,
+    };
+    let port = NetPort::new(me, names[me], spec, txs, rxs, stats);
+    Ok((port, LinkSet { writers, hub, shareds }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Payload;
+
+    /// Two resilient endpoints over a real socket: A (id 0) accepts
+    /// relinks on its listener, B (id 1) re-dials. Also returns the hub
+    /// listener's address for stray-connection probes.
+    fn pair(
+        chaos_b: Option<u64>,
+        timeout: Duration,
+    ) -> (NetPort, LinkSet, NetPort, LinkSet, String) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sb = TcpStream::connect(&addr).unwrap();
+        let (sa, _) = listener.accept().unwrap();
+        let stats_a = Arc::new(NetStats::new(&["A", "B"]));
+        let stats_b = Arc::new(NetStats::new(&["A", "B"]));
+        let (pa, la) = resilient_port(
+            0,
+            &["A", "B"],
+            vec![None, Some(sa)],
+            vec![None, Some(Redial::Accept)],
+            Some(listener),
+            RelinkOpts { token: 99, reconnect_timeout: timeout, chaos_kill_after: None },
+            LinkSpec::lan(),
+            stats_a,
+        )
+        .unwrap();
+        let (pb, lb) = resilient_port(
+            1,
+            &["A", "B"],
+            vec![Some(sb), None],
+            vec![Some(Redial::Dial(addr.clone())), None],
+            None,
+            RelinkOpts { token: 99, reconnect_timeout: timeout, chaos_kill_after: chaos_b },
+            LinkSpec::lan(),
+            stats_b,
+        )
+        .unwrap();
+        (pa, la, pb, lb, addr)
+    }
+
+    fn drain_n(port: &mut NetPort, from: PartyId, n: u64, label: &str) {
+        for want in 0..n {
+            let got = port.recv_u64s(from).unwrap_or_else(|e| panic!("{label} at {want}: {e}"));
+            assert_eq!(got, vec![want], "{label}: out of order or lost");
+        }
+    }
+
+    #[test]
+    fn severed_links_replay_and_deliver_exactly_once_in_order() {
+        let (mut pa, la, mut pb, lb, _addr) = pair(None, Duration::from_secs(20));
+        pa.set_recv_timeout(Duration::from_secs(30));
+        pb.set_recv_timeout(Duration::from_secs(30));
+        // B -> A with two cuts initiated from either side of the wire
+        let hb = std::thread::spawn(move || {
+            for i in 0..120u64 {
+                pb.send(0, Payload::U64s(vec![i])).unwrap();
+                if i == 40 {
+                    lb.sever_all(); // cut from the dialer side
+                }
+                if i == 80 {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+            // A -> B leg afterwards, over whatever socket is now live
+            for i in 0..40u64 {
+                let got = pb.recv_u64s(0).unwrap();
+                assert_eq!(got, vec![i]);
+            }
+            (pb, lb)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        la.sever_all(); // cut from the acceptor side while B is sending
+        drain_n(&mut pa, 1, 120, "A<-B");
+        for i in 0..40u64 {
+            pa.send(1, Payload::U64s(vec![i])).unwrap();
+        }
+        let (_pb, _lb) = hb.join().unwrap();
+    }
+
+    #[test]
+    fn goodbye_shutdown_is_clean_and_final() {
+        let (mut pa, _la, mut pb, lb, _addr) = pair(None, Duration::from_millis(600));
+        pa.set_recv_timeout(Duration::from_secs(10));
+        for i in 0..5u64 {
+            pb.send(0, Payload::U64s(vec![i])).unwrap();
+        }
+        // orderly shutdown: outboxes close, writers say goodbye
+        drop(pb);
+        for wh in lb.writers {
+            wh.join().unwrap();
+        }
+        drain_n(&mut pa, 1, 5, "A<-B");
+        // after the goodbye the link must NOT reconnect: the next receive
+        // reports a disconnect instead of hanging for the timeout window
+        let err = pa.recv(1).unwrap_err();
+        assert!(format!("{err}").contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn idle_links_prune_their_journal_via_standalone_acks() {
+        // one-directional traffic: B streams, A never sends a data frame
+        // back, so only the idle-tick FT_ACK can shrink B's journal
+        let (mut pa, _la, mut pb, lb, _addr) = pair(None, Duration::from_secs(20));
+        pa.set_recv_timeout(Duration::from_secs(10));
+        for i in 0..50u64 {
+            pb.send(0, Payload::U64s(vec![i])).unwrap();
+        }
+        drain_n(&mut pa, 1, 50, "A<-B");
+        // a few idle ticks later the journal must be (close to) empty
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let len = lb.shareds[0].1.inner.lock().unwrap().journal.len();
+            if len == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "journal never pruned ({len} frames left)");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        drop(pb);
+    }
+
+    #[test]
+    fn acceptor_gives_up_when_nobody_redials() {
+        // B is a bare socket that dies without a goodbye and never relinks
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sb = TcpStream::connect(&addr).unwrap();
+        let (sa, _) = listener.accept().unwrap();
+        let stats = Arc::new(NetStats::new(&["A", "B"]));
+        let (mut pa, _la) = resilient_port(
+            0,
+            &["A", "B"],
+            vec![None, Some(sa)],
+            vec![None, Some(Redial::Accept)],
+            Some(listener),
+            RelinkOpts {
+                token: 1,
+                reconnect_timeout: Duration::from_millis(300),
+                chaos_kill_after: None,
+            },
+            LinkSpec::lan(),
+            stats,
+        )
+        .unwrap();
+        drop(sb); // FIN with no goodbye marker = dropped link
+        pa.set_recv_timeout(Duration::from_secs(10));
+        let t0 = Instant::now();
+        let err = pa.recv(1).unwrap_err();
+        assert!(format!("{err}").contains("disconnected"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(8), "gave up too slowly");
+    }
+
+    #[test]
+    fn chaos_kill_fires_once_and_recovers() {
+        let (mut pa, _la, mut pb, lb, _addr) = pair(Some(10), Duration::from_secs(20));
+        pa.set_recv_timeout(Duration::from_secs(30));
+        pb.set_recv_timeout(Duration::from_secs(30));
+        let hb = std::thread::spawn(move || {
+            for i in 0..40u64 {
+                pb.send(0, Payload::U64s(vec![i])).unwrap();
+            }
+            pb.recv_u64s(0).unwrap();
+            (pb, lb)
+        });
+        drain_n(&mut pa, 1, 40, "A<-B under chaos");
+        pa.send(1, Payload::U64s(vec![7])).unwrap();
+        let (_pb, lb) = hb.join().unwrap();
+        assert!(
+            lb.shareds[0].1.chaos_fired.load(Ordering::SeqCst),
+            "chaos kill never triggered"
+        );
+    }
+
+    #[test]
+    fn hub_rejects_stray_and_wrong_token_connections() {
+        let (mut pa, _la, mut pb, _lb, addr) = pair(None, Duration::from_secs(20));
+        pa.set_recv_timeout(Duration::from_secs(20));
+        // wrong session token: named rejection
+        let s = TcpStream::connect(&addr).unwrap();
+        let mut w: &TcpStream = &s;
+        wire::write_msg(&mut w, &ctl_msg(1, "spnn-relink v1 id=1 token=7 last=0".into()))
+            .unwrap();
+        let mut r: &TcpStream = &s;
+        let reply = wire::read_msg(&mut r).unwrap().unwrap().payload.into_control().unwrap();
+        assert!(reply.contains("spnn-err") && reply.contains("token"), "{reply}");
+        // complete garbage: rejected without disturbing the session
+        let s = TcpStream::connect(&addr).unwrap();
+        let mut w: &TcpStream = &s;
+        wire::write_msg(&mut w, &ctl_msg(9, "GET / HTTP/1.1".into())).unwrap();
+        let mut r: &TcpStream = &s;
+        let reply = wire::read_msg(&mut r).unwrap().unwrap().payload.into_control().unwrap();
+        assert!(reply.contains("spnn-err"), "{reply}");
+        // regular traffic keeps flowing around the strays
+        pb.send(0, Payload::U64s(vec![1])).unwrap();
+        assert_eq!(pa.recv_u64s(1).unwrap(), vec![1]);
+    }
+}

@@ -1,33 +1,41 @@
 //! Multi-process deployment runner: the engine behind `spnn launch` and
 //! `spnn party`.
 //!
-//! * [`run_party`] — one worker process: join the session, rebuild the
+//! * [`run_party`] — one worker process: join the session (presenting
+//!   the PSK when the deployment is authenticated), rebuild the
 //!   deployment locally from the broadcast config (datasets re-synthesize
 //!   deterministically from the seed — private inputs never travel), run
-//!   this party's role body over a [`TcpPort`], ship the [`PartyOut`]
-//!   back to the coordinator, flush and exit.
+//!   this party's role body over a [`TcpPort`] backed by resilient
+//!   relink-capable connections, ship the [`PartyOut`](crate::parties::PartyOut) back to the
+//!   coordinator, flush and exit.
 //! * [`run_launch`] — the coordinator process: host the rendezvous
 //!   (optionally spawning the other roles as child OS processes of the
 //!   same binary), run the coordinator role, collect every worker's
 //!   `PartyOut` over the wire, and assemble the final [`TrainReport`]
 //!   through the trainer's `finish` step — producing the same
 //!   `weight_digest` an in-process run reports (asserted by the
-//!   decentralized smoke test).
+//!   decentralized smoke test, including a run with a connection killed
+//!   mid-epoch).
 //!
 //! Traffic accounting: each process counts the bytes *it* sends (the same
-//! sender-side accounting netsim uses) and reports them as metrics in its
-//! `PartyOut`; the coordinator sums them into whole-mesh totals. Virtual
-//! time still works — departure stamps ride the wire frames — so reports
-//! carry both sim-time and wall-clock numbers.
+//! sender-side accounting netsim uses) and reports them — totals as
+//! metrics, the per-stage rows verbatim — in its `PartyOut`; the
+//! coordinator sums the totals and merges the stage rows
+//! ([`crate::netsim::merge_stage_rows`]) into the whole-mesh Table-3b
+//! breakdown, so `spnn launch` prints the same per-stage traffic table a
+//! netsim run does. Virtual time still works — departure stamps ride the
+//! wire frames — so reports carry both sim-time and wall-clock numbers.
 
 use std::net::TcpListener;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::auth::Psk;
+use super::relink::{self, Redial, RelinkOpts};
 use super::session::{self, SessionSpec};
-use super::tcp::{port_from_streams, TcpPort};
-use crate::netsim::{NetStats, Phase};
+use super::tcp::TcpPort;
+use crate::netsim::{merge_stage_rows, NetStats, Phase};
 use crate::parties::{self, Deployment, NetSummary};
 use crate::protocols::{self, TrainReport};
 use crate::{Error, Result};
@@ -65,9 +73,17 @@ fn traffic_metrics(stats: &NetStats, id: usize) -> Vec<(String, f64)> {
     ]
 }
 
-/// Run one worker party: `spnn party --role <role> --connect <addr>`.
-pub fn run_party(connect: &str, role: &str, bind_host: &str) -> Result<()> {
-    let sess = session::join(connect, role, bind_host, SESSION_TIMEOUT)?;
+/// Run one worker party: `spnn party --role <role> --connect <addr>`,
+/// plus `--psk-file` for authenticated sessions and `--chaos-kill N`
+/// (sever one connection after N sent frames) for reconnect drills.
+pub fn run_party(
+    connect: &str,
+    role: &str,
+    bind_host: &str,
+    psk: Option<&Psk>,
+    chaos_kill_after: Option<u64>,
+) -> Result<()> {
+    let sess = session::join(connect, role, bind_host, SESSION_TIMEOUT, psk)?;
     let Prepared { dep, .. } = build_deployment(&sess.spec)?;
     if dep.names.len() != sess.n {
         return Err(Error::Protocol(format!(
@@ -92,9 +108,40 @@ pub fn run_party(connect: &str, role: &str, bind_host: &str) -> Result<()> {
     );
     let name_refs: Vec<&str> = dep.names.iter().map(|s| s.as_str()).collect();
     let stats = Arc::new(NetStats::new(&name_refs));
-    let (port, writers) =
-        port_from_streams(sess.id, &name_refs, sess.streams, sess.spec.link(), stats.clone())?;
-    let mut port = TcpPort::new(port, writers, stats.clone());
+    // link recovery roles mirror the bring-up topology: we re-dial the
+    // coordinator and lower-id peers; higher-id peers re-dial us through
+    // the kept listener
+    let mut redials: Vec<Option<Redial>> = vec![None; sess.n];
+    for p in 0..sess.n {
+        if p == sess.id {
+            continue;
+        }
+        redials[p] = Some(if p == 0 {
+            Redial::Dial(sess.coordinator_addr.clone())
+        } else if p < sess.id {
+            Redial::Dial(sess.peer_addrs[p].clone().ok_or_else(|| {
+                Error::Protocol(format!("roster missing the re-dial address of party {p}"))
+            })?)
+        } else {
+            Redial::Accept
+        });
+    }
+    let opts = RelinkOpts {
+        token: sess.token,
+        reconnect_timeout: relink::RECONNECT_TIMEOUT,
+        chaos_kill_after,
+    };
+    let (port, links) = relink::resilient_port(
+        sess.id,
+        &name_refs,
+        sess.streams,
+        redials,
+        Some(sess.listener),
+        opts,
+        sess.spec.link(),
+        stats.clone(),
+    )?;
+    let mut port = TcpPort::new(port, links, stats.clone());
 
     let f = dep
         .fns
@@ -103,6 +150,7 @@ pub fn run_party(connect: &str, role: &str, bind_host: &str) -> Result<()> {
         .ok_or_else(|| Error::Protocol("role body missing".into()))?;
     let mut out = f(&mut port)?;
     out.metrics.extend(traffic_metrics(&stats, sess.id));
+    out.stages = stats.stage_rows();
     parties::send_party_out(&mut port, 0, &out)?;
     port.shutdown(); // join writers: the PartyOut is flushed before exit
     eprintln!("spnn party: {role} done (sim {:.2}s)", out.sim_time);
@@ -117,6 +165,10 @@ pub struct LaunchOpts {
     /// false, the launcher prints the `spnn party` command lines and waits
     /// for manual joins (multi-terminal / multi-host mode).
     pub spawn: bool,
+    /// Chaos drill: spawn the named role with `--chaos-kill N` so it
+    /// severs one of its connections after N sent frames mid-training
+    /// (spawn mode only).
+    pub chaos: Option<(String, u64)>,
 }
 
 /// Kill-on-drop guard so a failed rendezvous never leaves orphan workers.
@@ -149,7 +201,8 @@ impl Drop for ChildGuard {
 }
 
 /// Host a full decentralized run: rendezvous + coordinator role + result
-/// collection + report assembly.
+/// collection + report assembly. The PSK (if any) comes from
+/// `spec.tc.psk_file` and is loaded by each process independently.
 pub fn run_launch(spec: &SessionSpec, opts: &LaunchOpts) -> Result<TrainReport> {
     let listener = TcpListener::bind(&opts.listen)
         .map_err(|e| Error::Net(format!("bind {}: {e}", opts.listen)))?;
@@ -164,16 +217,44 @@ pub fn run_launch_on(
     opts: &LaunchOpts,
 ) -> Result<TrainReport> {
     let wall = Instant::now();
+    let psk = match &spec.tc.psk_file {
+        Some(path) => Some(Psk::from_file(std::path::Path::new(path))?),
+        None => None,
+    };
     let Prepared { trainer, dep, cfg, test } = build_deployment(spec)?;
     let n = dep.names.len();
     let addr = listener.local_addr().map_err(Error::Io)?.to_string();
+    if let Some((role, _)) = &opts.chaos {
+        if !opts.spawn {
+            return Err(Error::Config(
+                "--chaos only works in spawn mode (it rides the spawned command line); \
+                 for manual joins pass --chaos-kill N to the party itself"
+                    .into(),
+            ));
+        }
+        if !dep.names[1..].iter().any(|r| r == role) {
+            return Err(Error::Config(format!(
+                "--chaos names unknown role {role:?} (worker roles: {:?})",
+                &dep.names[1..]
+            )));
+        }
+    }
 
     let mut guard = ChildGuard(Vec::new());
     if opts.spawn {
         let exe = std::env::current_exe().map_err(Error::Io)?;
         for role in &dep.names[1..] {
-            let child = Command::new(&exe)
-                .args(["party", "--role", role.as_str(), "--connect", addr.as_str()])
+            let mut cmd = Command::new(&exe);
+            cmd.args(["party", "--role", role.as_str(), "--connect", addr.as_str()]);
+            if let Some(path) = &spec.tc.psk_file {
+                cmd.args(["--psk-file", path.as_str()]);
+            }
+            if let Some((chaos_role, n_frames)) = &opts.chaos {
+                if chaos_role == role {
+                    cmd.args(["--chaos-kill", &n_frames.to_string()]);
+                }
+            }
+            let child = cmd
                 .stdin(Stdio::null())
                 .stdout(Stdio::null()) // keep the report stream clean
                 .stderr(Stdio::inherit())
@@ -183,18 +264,40 @@ pub fn run_launch_on(
         }
         eprintln!("spnn launch: spawned {} party processes, rendezvous on {addr}", n - 1);
     } else {
+        let psk_arg = match &spec.tc.psk_file {
+            Some(path) => format!(" --psk-file {path}"),
+            None => String::new(),
+        };
         eprintln!("spnn launch: waiting for {} manual joins; run in other terminals:", n - 1);
         for role in &dep.names[1..] {
-            eprintln!("  spnn party --role {role} --connect {addr}");
+            eprintln!("  spnn party --role {role} --connect {addr}{psk_arg}");
         }
     }
 
-    let hosted = session::host(&listener, spec, &dep.names, SESSION_TIMEOUT)?;
+    let hosted = session::host(&listener, spec, &dep.names, SESSION_TIMEOUT, psk.as_ref())?;
     let name_refs: Vec<&str> = dep.names.iter().map(|s| s.as_str()).collect();
     let stats = Arc::new(NetStats::new(&name_refs));
-    let (port, writers) =
-        port_from_streams(0, &name_refs, hosted.streams, spec.link(), stats.clone())?;
-    let mut port = TcpPort::new(port, writers, stats.clone());
+    // the coordinator accepts relinks from every party on the rendezvous
+    // listener it already owns
+    let redials: Vec<Option<Redial>> = (0..n)
+        .map(|p| if p == 0 { None } else { Some(Redial::Accept) })
+        .collect();
+    let relink_opts = RelinkOpts {
+        token: hosted.token,
+        reconnect_timeout: relink::RECONNECT_TIMEOUT,
+        chaos_kill_after: None,
+    };
+    let (port, links) = relink::resilient_port(
+        0,
+        &name_refs,
+        hosted.streams,
+        redials,
+        Some(listener),
+        relink_opts,
+        spec.link(),
+        stats.clone(),
+    )?;
+    let mut port = TcpPort::new(port, links, stats.clone());
 
     let mut fns = dep.fns;
     let f0 = fns.remove(0);
@@ -205,15 +308,19 @@ pub fn run_launch_on(
     port.shutdown();
     guard.wait_all()?;
 
-    // whole-mesh totals = own sends + every worker's reported sends
+    // whole-mesh totals = own sends + every worker's reported sends;
+    // stage rows merge the same way, so the Table-3b breakdown is
+    // complete even though every process only sees its own links
     let mut online = stats.bytes_phase(Phase::Online);
     let mut offline = stats.bytes_phase(Phase::Offline);
     for out in &outs[1..] {
         online += out.metric("online_bytes_sent").unwrap_or(0.0) as usize;
         offline += out.metric("offline_bytes_sent").unwrap_or(0.0) as usize;
     }
-    let net =
-        NetSummary { online_bytes: online, offline_bytes: offline, stages: stats.stage_rows() };
+    let stages = merge_stage_rows(
+        std::iter::once(stats.stage_rows()).chain(outs[1..].iter().map(|o| o.stages.clone())),
+    );
+    let net = NetSummary { online_bytes: online, offline_bytes: offline, stages };
     trainer.finish(cfg, &spec.tc, &test, &outs, net, wall.elapsed().as_secs_f64())
 }
 
@@ -233,6 +340,18 @@ mod tests {
         }
     }
 
+    fn netsim_digest(s: &SessionSpec) -> (u64, Vec<f64>) {
+        use crate::netsim::LinkSpec;
+        use crate::protocols::Trainer;
+        let (cfg, train, test) = s.datasets().unwrap();
+        let mut tc = s.tc.clone();
+        tc.transport = crate::config::TransportKind::Netsim;
+        let local = crate::protocols::secureml::SecureMl
+            .train(cfg, &tc, LinkSpec::from_mbps(s.mbps), &train, &test, 2)
+            .unwrap();
+        (local.weight_digest, local.train_losses.clone())
+    }
+
     /// In-process version of the multi-process flow: the launcher hosts
     /// with `spawn: false` while threads play the worker processes via
     /// `run_party` against the same rendezvous — exercising the entire
@@ -244,13 +363,14 @@ mod tests {
         // bind the rendezvous first so the "workers" know its port
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = LaunchOpts { listen: addr.clone(), spawn: false };
+        let opts = LaunchOpts { listen: addr.clone(), spawn: false, chaos: None };
 
         let roles = ["party0", "dealer", "party1"];
         let mut workers = Vec::new();
         for role in roles {
             let addr = addr.clone();
-            workers.push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1")));
+            workers
+                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None)));
         }
         let rep = run_launch_on(listener, &s, &opts).unwrap();
         for w in workers {
@@ -258,28 +378,121 @@ mod tests {
         }
         assert_ne!(rep.weight_digest, 0);
         assert!(rep.online_bytes > 0, "worker traffic not aggregated");
+        // the per-stage breakdown now covers the whole mesh, not just the
+        // coordinator's own links: worker-side stages must appear
+        assert!(!rep.stages.is_empty(), "stage rows not aggregated");
+        let stage_bytes: u64 = rep.stages.iter().map(|r| r.bytes).sum();
+        assert_eq!(
+            stage_bytes as usize,
+            rep.online_bytes + rep.offline_bytes,
+            "merged stage rows disagree with the aggregated totals"
+        );
 
         // the same config through the ordinary in-process netsim path
         // must produce the identical model
-        use crate::netsim::LinkSpec;
-        use crate::protocols::Trainer;
-        let (cfg, train, test) = s.datasets().unwrap();
-        let mut tc = s.tc.clone();
-        tc.transport = crate::config::TransportKind::Netsim;
-        let local = crate::protocols::secureml::SecureMl
-            .train(cfg, &tc, LinkSpec::from_mbps(s.mbps), &train, &test, 2)
-            .unwrap();
+        let (digest, losses) = netsim_digest(&s);
         assert_eq!(
-            rep.weight_digest, local.weight_digest,
+            rep.weight_digest, digest,
             "distributed run diverged from the in-process run"
         );
-        assert_eq!(rep.train_losses, local.train_losses);
+        assert_eq!(rep.train_losses, losses);
+    }
+
+    /// The reconnect drill: one worker severs its sockets mid-training
+    /// (chaos kill); the resilient links re-dial and replay, and the
+    /// trained weights stay bit-identical to the in-process run.
+    #[test]
+    fn launch_survives_a_connection_killed_mid_training() {
+        let mut s = spec("secureml");
+        s.tc.lr_override = Some(0.05);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = LaunchOpts { listen: addr.clone(), spawn: false, chaos: None };
+        let mut workers = Vec::new();
+        for (role, chaos) in [("party0", Some(25u64)), ("dealer", None), ("party1", None)] {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || {
+                run_party(&addr, role, "127.0.0.1", None, chaos)
+            }));
+        }
+        let rep = run_launch_on(listener, &s, &opts).unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        let (digest, _) = netsim_digest(&s);
+        assert_eq!(
+            rep.weight_digest, digest,
+            "training diverged after a mid-run connection kill + replay"
+        );
+    }
+
+    /// A wrong key on one party aborts the whole launch with a
+    /// diagnostic naming the offending role (acceptance criterion).
+    #[test]
+    fn launch_aborts_on_wrong_psk_naming_the_role() {
+        let dir = std::env::temp_dir();
+        let good = dir.join(format!("spnn-psk-good-{}", std::process::id()));
+        let bad = dir.join(format!("spnn-psk-bad-{}", std::process::id()));
+        std::fs::write(&good, "the real key\n").unwrap();
+        std::fs::write(&bad, "an impostor key\n").unwrap();
+        let mut s = spec("secureml");
+        s.tc.psk_file = Some(good.to_string_lossy().into_owned());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = LaunchOpts { listen: addr.clone(), spawn: false, chaos: None };
+        let good_psk = Psk::from_file(&good).unwrap();
+        let bad_psk = Psk::from_file(&bad).unwrap();
+        let mut workers = Vec::new();
+        for (role, key) in
+            [("party0", good_psk.clone()), ("dealer", bad_psk), ("party1", good_psk)]
+        {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || {
+                run_party(&addr, role, "127.0.0.1", Some(&key), None)
+            }));
+        }
+        let err = run_launch_on(listener, &s, &opts).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("PSK authentication"), "{msg}");
+        assert!(msg.contains("dealer"), "diagnostic must name the role: {msg}");
+        // the workers all fail one way or another once the host aborts
+        for w in workers {
+            assert!(w.join().unwrap().is_err());
+        }
+        let _ = std::fs::remove_file(&good);
+        let _ = std::fs::remove_file(&bad);
     }
 
     #[test]
     fn unknown_protocol_is_rejected_before_binding() {
         let s = spec("quantum-ml");
-        let opts = LaunchOpts { listen: "127.0.0.1:0".into(), spawn: false };
+        let opts = LaunchOpts { listen: "127.0.0.1:0".into(), spawn: false, chaos: None };
         assert!(run_launch(&s, &opts).is_err());
+    }
+
+    #[test]
+    fn chaos_role_must_exist() {
+        let s = spec("secureml");
+        let opts = LaunchOpts {
+            listen: "127.0.0.1:0".into(),
+            spawn: true,
+            chaos: Some(("astronaut".into(), 5)),
+        };
+        let err = run_launch(&s, &opts).unwrap_err();
+        assert!(format!("{err}").contains("astronaut"), "{err}");
+    }
+
+    #[test]
+    fn chaos_is_rejected_in_no_spawn_mode() {
+        // silently ignoring the drill would let an operator believe the
+        // reconnect path was exercised when it never was
+        let s = spec("secureml");
+        let opts = LaunchOpts {
+            listen: "127.0.0.1:0".into(),
+            spawn: false,
+            chaos: Some(("dealer".into(), 5)),
+        };
+        let err = run_launch(&s, &opts).unwrap_err();
+        assert!(format!("{err}").contains("spawn mode"), "{err}");
     }
 }

@@ -1,12 +1,16 @@
-//! Session rendezvous for multi-process deployments: role claim, config +
-//! seed exchange, full-mesh bring-up and a topology check, all over the
-//! same [`wire`] framing the training traffic uses.
+//! Session rendezvous for multi-process deployments: role claim,
+//! optional PSK challenge/response authentication, config + seed
+//! exchange, full-mesh bring-up and a topology check, all over the same
+//! [`wire`] framing the training traffic uses.
 //!
 //! ```text
 //! party                within the rendezvous           coordinator (host)
 //! -----                ---------------------           ------------------
 //! connect ------------------------------------------>  accept
-//! "spnn-hello v1 role=<role>" ---------------------->  claim role -> id
+//! "spnn-hello v1 role=<role> nonce=<Na>" ----------->  claim role -> id
+//! [PSK only] <------------- "spnn-auth v1 nonce=<Nb> proof=<HMAC(host)>"
+//! [PSK only] verify host proof
+//! [PSK only] "spnn-auth-proof v1 proof=<HMAC(party)>" -> verify or ABORT
 //! <----------- "spnn-welcome v1 id=.. n=.. token=.. cfg=<config string>"
 //! bind peer listener
 //! "spnn-listen <addr>" ----------------------------->  collect all
@@ -21,14 +25,25 @@
 //! configuration: it ships the canonical [`SessionSpec`] wire string in
 //! the welcome, every party re-derives its local state (dataset synthesis,
 //! batch plan, RNG seeds) from it, and echoes the config digest back in
-//! `ready` so drift is caught before any training traffic flows. The
-//! token (derived from the config and the rendezvous address) keeps a
-//! stray client of a *different* session from wiring into the mesh — it
-//! is a consistency check, not an authentication mechanism.
+//! `ready` so drift is caught before any training traffic flows.
+//!
+//! Without a PSK, the token (derived from the config and the rendezvous
+//! address) keeps a stray client of a *different* session from wiring
+//! into the mesh — a consistency check, not auth. With `--psk-file` on
+//! both sides the rendezvous is mutually authenticated by the HMAC
+//! proofs ([`super::auth`]), a wrong or missing key on any party aborts
+//! the whole session with a diagnostic naming the role, and the mesh
+//! token itself becomes an HMAC under the key so peer connections
+//! require it too.
+//!
+//! After `go`, the [`JoinedSession`] keeps its peer listener and the
+//! roster alive: the resilient links ([`super::relink`]) use them to
+//! re-accept / re-dial dropped connections mid-training.
 
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use super::auth::{self, Psk};
 use super::tcp::connect_retry;
 use super::wire;
 use crate::config::{ModelConfig, TrainConfig, TransportKind};
@@ -77,6 +92,9 @@ fn parse_opt(s: &str) -> Result<Option<f64>> {
 impl SessionSpec {
     /// Canonical wire string. `Display` for `f64` prints the shortest
     /// representation that round-trips, so parse(to_wire()) is exact.
+    /// The PSK path (`tc.psk_file`) deliberately does **not** appear:
+    /// each process loads its own key material locally and proves
+    /// possession through the handshake instead of shipping anything.
     pub fn to_wire(&self) -> String {
         let t = &self.tc;
         format!(
@@ -101,6 +119,8 @@ impl SessionSpec {
         )
     }
 
+    /// Parse the canonical wire string back into a spec (the party side
+    /// of the config broadcast).
     pub fn from_wire(s: &str) -> Result<Self> {
         let mut words = s.split_whitespace();
         if words.next() != Some("spnn-cfg") || words.next() != Some("v1") {
@@ -137,6 +157,7 @@ impl SessionSpec {
             exec_threads: num("threads")?,
             pipeline_depth: num("depth")?,
             transport: TransportKind::Tcp,
+            psk_file: None,
         };
         Ok(SessionSpec {
             protocol: get("proto")?.to_string(),
@@ -180,12 +201,23 @@ impl SessionSpec {
         Ok((cfg, train, test))
     }
 
-    /// Session token: ties peer connections to this config + rendezvous.
+    /// Unauthenticated session token: ties peer connections to this
+    /// config + rendezvous (consistency check). With a PSK the keyed
+    /// [`Psk::mesh_token`] replaces it.
     pub fn token(&self, rendezvous: &str) -> u64 {
         let mut f = Fnv::new();
         f.add_bytes(self.to_wire().as_bytes());
         f.add_bytes(rendezvous.as_bytes());
         f.0 ^ 0x5e55_10f0_ba5e_d00d
+    }
+
+    /// The session token in force for this spec: keyed when a PSK is
+    /// given, the config-digest consistency token otherwise.
+    pub fn session_token(&self, rendezvous: &str, psk: Option<&Psk>) -> u64 {
+        match psk {
+            Some(k) => k.mesh_token(&self.to_wire(), rendezvous),
+            None => self.token(rendezvous),
+        }
     }
 }
 
@@ -262,30 +294,77 @@ fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> Result<Tcp
 /// An established session as seen by the coordinator: one stream per
 /// worker party (`streams[0]` is `None` — that is the host itself).
 pub struct HostedSession {
+    /// One stream per worker party (`streams[0]` is `None` — the host).
     pub streams: Vec<Option<TcpStream>>,
+    /// The session token in force (keyed under the PSK when one is set).
     pub token: u64,
+}
+
+/// Run the PSK challenge/response for one accepted role claim.
+/// `Ok(())` = authenticated; `Err` = the whole session must abort,
+/// naming the offending role.
+fn host_authenticate(
+    s: &mut TcpStream,
+    psk: &Psk,
+    role: &str,
+    nonce_a_hex: Option<&str>,
+) -> Result<()> {
+    let fail = |why: String| {
+        Error::Protocol(format!(
+            "party {role:?} failed PSK authentication ({why}) — wrong or missing \
+             --psk-file on that party; aborting the session"
+        ))
+    };
+    let nonce_a = nonce_a_hex
+        .and_then(|h| auth::from_hex(h).ok())
+        .ok_or_else(|| fail("hello carried no usable nonce".into()))?;
+    let nonce_b = auth::fresh_nonce();
+    send_ctl(
+        s,
+        0,
+        format!(
+            "spnn-auth v1 nonce={} proof={}",
+            auth::to_hex(&nonce_b),
+            psk.host_proof(&nonce_a, &nonce_b, role)
+        ),
+    )?;
+    let reply = match recv_ctl(s) {
+        Ok((_, t)) => t,
+        Err(e) => return Err(fail(format!("{e}"))),
+    };
+    let rest = reply
+        .strip_prefix("spnn-auth-proof v1 ")
+        .ok_or_else(|| fail(format!("expected auth proof, got {reply:?}")))?;
+    let proof = field(rest, "proof").map_err(|e| fail(format!("{e}")))?;
+    if !psk.verify_party(proof, &nonce_a, &nonce_b, role) {
+        let _ = send_ctl(s, 0, "spnn-err psk proof rejected by coordinator".into());
+        return Err(fail("proof did not verify".into()));
+    }
+    Ok(())
 }
 
 /// Run the coordinator side of the rendezvous on an already-bound
 /// listener. `names[i]` is party `i`'s role name; the host itself is
 /// party 0. Returns when the full mesh is up and every party has
-/// confirmed the config digest.
+/// confirmed the config digest. With `psk` set, every role claim must
+/// pass the challenge/response — one wrong key aborts the whole session.
 pub fn host(
     listener: &TcpListener,
     spec: &SessionSpec,
     names: &[String],
     timeout: Duration,
+    psk: Option<&Psk>,
 ) -> Result<HostedSession> {
     let n = names.len();
     let rendezvous = listener
         .local_addr()
         .map_err(|e| Error::Net(format!("local_addr: {e}")))?
         .to_string();
-    let token = spec.token(&rendezvous);
+    let token = spec.session_token(&rendezvous, psk);
     let cfg_wire = spec.to_wire();
     let deadline = Instant::now() + timeout;
 
-    // phase 1: role claims
+    // phase 1: role claims (+ PSK auth)
     let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
     let mut joined = 0usize;
     while joined < n - 1 {
@@ -317,6 +396,11 @@ pub fn host(
                 continue;
             }
             Some(id) => {
+                if let Some(psk) = psk {
+                    // a failed proof aborts the session — a party with the
+                    // wrong key would otherwise hang the deployment later
+                    host_authenticate(&mut s, psk, role, field(rest, "nonce").ok())?;
+                }
                 send_ctl(
                     &mut s,
                     0,
@@ -376,7 +460,10 @@ pub fn host(
 // Party side
 // ---------------------------------------------------------------------------
 
-/// An established session as seen by a worker party.
+/// An established session as seen by a worker party. Carries everything
+/// the resilient links need to survive mid-training connection drops:
+/// the peer listener (kept open behind the relink accept hub), the
+/// roster addresses (re-dial targets) and the session token.
 pub struct JoinedSession {
     /// This party's id (index into the deployment's role names).
     pub id: PartyId,
@@ -386,13 +473,29 @@ pub struct JoinedSession {
     pub spec: SessionSpec,
     /// One stream per peer party (`streams[id]` is `None` — self).
     pub streams: Vec<Option<TcpStream>>,
+    /// The session token in force (keyed under the PSK when one is set).
+    pub token: u64,
+    /// This party's peer listener, still bound (relink accept hub).
+    pub listener: TcpListener,
+    /// Roster: `peer_addrs[p]` is party `p`'s listener address
+    /// (`None` for self and the coordinator).
+    pub peer_addrs: Vec<Option<String>>,
+    /// The coordinator's rendezvous address (re-dial target for link 0).
+    pub coordinator_addr: String,
 }
 
 /// Join a session hosted at `addr` under a role name, bringing up this
 /// party's slice of the full mesh. `bind_host` is the address peers dial
 /// back on (`127.0.0.1` for single-host runs, a routable address
-/// otherwise).
-pub fn join(addr: &str, role: &str, bind_host: &str, timeout: Duration) -> Result<JoinedSession> {
+/// otherwise). With `psk` set, the coordinator must prove possession of
+/// the same key before this party reveals anything beyond its role name.
+pub fn join(
+    addr: &str,
+    role: &str,
+    bind_host: &str,
+    timeout: Duration,
+    psk: Option<&Psk>,
+) -> Result<JoinedSession> {
     let deadline = Instant::now() + timeout;
     let mut coord = connect_retry(addr, timeout)?;
     coord.set_nodelay(true).ok();
@@ -400,9 +503,51 @@ pub fn join(addr: &str, role: &str, bind_host: &str, timeout: Duration) -> Resul
         .set_read_timeout(Some(HANDSHAKE_STEP_TIMEOUT))
         .map_err(|e| Error::Net(format!("read timeout: {e}")))?;
     // provisional sender id — the handshake assigns the real one
-    send_ctl(&mut coord, usize::MAX, format!("spnn-hello v1 role={role}"))?;
+    let nonce_a = auth::fresh_nonce();
+    send_ctl(
+        &mut coord,
+        usize::MAX,
+        format!("spnn-hello v1 role={role} nonce={}", auth::to_hex(&nonce_a)),
+    )?;
 
-    let (_, welcome) = recv_ctl(&mut coord)?;
+    // the coordinator either challenges (PSK sessions) or welcomes directly
+    let (_, first) = recv_ctl(&mut coord)?;
+    let welcome = if let Some(rest) = first.strip_prefix("spnn-auth v1 ") {
+        let Some(psk) = psk else {
+            let _ = send_ctl(&mut coord, usize::MAX, "spnn-err party holds no psk".into());
+            return Err(Error::Protocol(format!(
+                "session at {addr} requires a pre-shared key: start this party with \
+                 --psk-file pointing at the launcher's key"
+            )));
+        };
+        let nonce_b = auth::from_hex(field(rest, "nonce")?)?;
+        let proof = field(rest, "proof")?;
+        if !psk.verify_host(proof, &nonce_a, &nonce_b, role) {
+            let _ = send_ctl(
+                &mut coord,
+                usize::MAX,
+                format!("spnn-err psk proof rejected by party {role}"),
+            );
+            return Err(Error::Protocol(format!(
+                "PSK mismatch joining as {role:?}: the coordinator's proof does not \
+                 verify — this party's --psk-file differs from the launcher's"
+            )));
+        }
+        send_ctl(
+            &mut coord,
+            usize::MAX,
+            format!("spnn-auth-proof v1 proof={}", psk.party_proof(&nonce_a, &nonce_b, role)),
+        )?;
+        recv_ctl(&mut coord)?.1
+    } else {
+        if psk.is_some() {
+            return Err(Error::Protocol(format!(
+                "session at {addr} is not PSK-authenticated but this party was \
+                 given --psk-file — refusing to join an unauthenticated session"
+            )));
+        }
+        first
+    };
     let rest = welcome
         .strip_prefix("spnn-welcome v1 ")
         .ok_or_else(|| Error::Protocol(format!("expected welcome, got {welcome:?}")))?;
@@ -507,7 +652,16 @@ pub fn join(addr: &str, role: &str, bind_host: &str, timeout: Duration) -> Resul
         return Err(Error::Protocol(format!("expected go, got {go:?}")));
     }
     streams[0] = Some(coord);
-    Ok(JoinedSession { id, n, spec, streams })
+    Ok(JoinedSession {
+        id,
+        n,
+        spec,
+        streams,
+        token,
+        listener,
+        peer_addrs: peer_addr,
+        coordinator_addr: addr.to_string(),
+    })
 }
 
 #[cfg(test)]
@@ -543,6 +697,12 @@ mod tests {
         assert_ne!(s.digest(), other.digest());
         assert!(SessionSpec::from_wire("nonsense").is_err());
         assert!(SessionSpec::from_wire("spnn-cfg v1 proto=x").is_err());
+        // the psk path never leaks into the broadcast config
+        let mut k = s.clone();
+        k.tc.psk_file = Some("/secret/key".into());
+        assert_eq!(k.to_wire(), s.to_wire());
+        assert_eq!(k.digest(), s.digest());
+        assert!(SessionSpec::from_wire(&k.to_wire()).unwrap().tc.psk_file.is_none());
     }
 
     #[test]
@@ -554,6 +714,17 @@ mod tests {
         assert_eq!(tr1.x, tr2.x);
         assert_eq!(te1.y, te2.y);
         assert_eq!(tr1.len() + te1.len(), 512);
+    }
+
+    #[test]
+    fn session_token_is_keyed_under_a_psk() {
+        let s = spec();
+        let plain = s.session_token("127.0.0.1:7000", None);
+        assert_eq!(plain, s.token("127.0.0.1:7000"));
+        let k = Psk::from_bytes(b"key");
+        let keyed = s.session_token("127.0.0.1:7000", Some(&k));
+        assert_ne!(plain, keyed);
+        assert_ne!(keyed, s.session_token("127.0.0.1:7000", Some(&Psk::from_bytes(b"other"))));
     }
 
     #[test]
@@ -569,19 +740,29 @@ mod tests {
         for role in ["server", "dealer", "holder0"] {
             let addr = addr.clone();
             joiners.push(std::thread::spawn(move || {
-                join(&addr, role, "127.0.0.1", Duration::from_secs(20)).unwrap()
+                join(&addr, role, "127.0.0.1", Duration::from_secs(20), None).unwrap()
             }));
         }
-        let hosted = host(&listener, &s, &names, Duration::from_secs(20)).unwrap();
+        let hosted = host(&listener, &s, &names, Duration::from_secs(20), None).unwrap();
         let sessions: Vec<JoinedSession> =
             joiners.into_iter().map(|h| h.join().unwrap()).collect();
         // ids are assigned by role, config survives the trip
         for sess in &sessions {
             assert_eq!(sess.n, 4);
             assert_eq!(sess.spec.digest(), s.digest());
+            assert_eq!(sess.token, hosted.token);
+            assert_eq!(sess.coordinator_addr, addr);
             assert!(sess.streams[sess.id].is_none());
             let connected = sess.streams.iter().filter(|s| s.is_some()).count();
             assert_eq!(connected, 3, "party {} mesh incomplete", sess.id);
+            // the roster names every worker peer, and the kept listener
+            // still answers on its advertised address (relink hub input)
+            for pid in 1..4usize {
+                if pid != sess.id {
+                    assert!(sess.peer_addrs[pid].is_some(), "roster missing {pid}");
+                }
+            }
+            assert!(sess.listener.local_addr().is_ok());
         }
         assert_eq!(hosted.streams.iter().filter(|s| s.is_some()).count(), 3);
         // ping over every worker<->worker pair to prove the wiring is real
@@ -624,12 +805,152 @@ mod tests {
         // BEFORE the good role joins, so the ordering is deterministic
         let hoster = std::thread::spawn({
             let names = names.clone();
-            move || host(&listener, &s, &names, Duration::from_secs(20))
+            move || host(&listener, &s, &names, Duration::from_secs(20), None)
         });
-        let err = join(&addr, "astronaut", "127.0.0.1", Duration::from_secs(20)).unwrap_err();
+        let err =
+            join(&addr, "astronaut", "127.0.0.1", Duration::from_secs(20), None).unwrap_err();
         assert!(format!("{err}").contains("unknown role"), "{err}");
-        join(&addr, "server", "127.0.0.1", Duration::from_secs(20)).unwrap();
+        join(&addr, "server", "127.0.0.1", Duration::from_secs(20), None).unwrap();
         let hosted = hoster.join().unwrap().unwrap();
         assert!(hosted.streams[1].is_some());
+    }
+
+    #[test]
+    fn duplicate_role_claim_is_rejected_with_diagnostic() {
+        // a hand-rolled first claimant lets the test control ordering
+        // exactly: claim "server", then watch the second claim bounce,
+        // then finish the session so the host returns cleanly
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let digest = s.digest();
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            move || host(&listener, &s, &names, Duration::from_secs(20), None)
+        });
+        let mut first = connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_ctl(&mut first, usize::MAX, "spnn-hello v1 role=server nonce=00".into()).unwrap();
+        let (_, welcome) = recv_ctl(&mut first).unwrap();
+        assert!(welcome.starts_with("spnn-welcome v1 id=1"), "{welcome}");
+        // second claim on the same role: named rejection, host keeps going
+        let err =
+            join(&addr, "server", "127.0.0.1", Duration::from_secs(20), None).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("already claimed") && msg.contains("server"), "{msg}");
+        // the first claimant completes the remaining handshake phases
+        send_ctl(&mut first, 1, "spnn-listen 127.0.0.1:1".into()).unwrap();
+        let (_, roster) = recv_ctl(&mut first).unwrap();
+        assert!(roster.starts_with("spnn-roster "), "{roster}");
+        send_ctl(&mut first, 1, format!("spnn-ready digest={digest}")).unwrap();
+        let (_, go) = recv_ctl(&mut first).unwrap();
+        assert_eq!(go, "spnn-go");
+        hoster.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn config_digest_mismatch_aborts_with_drift_diagnostic() {
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            move || host(&listener, &s, &names, Duration::from_secs(20), None)
+        });
+        // a party that completes the handshake but derived a different
+        // config (seed drift, version skew, …) must be caught at ready
+        let mut p = connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        p.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_ctl(&mut p, usize::MAX, "spnn-hello v1 role=server nonce=00".into()).unwrap();
+        let (_, welcome) = recv_ctl(&mut p).unwrap();
+        assert!(welcome.starts_with("spnn-welcome"), "{welcome}");
+        send_ctl(&mut p, 1, "spnn-listen 127.0.0.1:1".into()).unwrap();
+        let (_, _roster) = recv_ctl(&mut p).unwrap();
+        send_ctl(&mut p, 1, "spnn-ready digest=12345".into()).unwrap();
+        let err = hoster.join().unwrap().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("config drift"), "{msg}");
+        assert!(msg.contains("server"), "diagnostic must name the role: {msg}");
+    }
+
+    #[test]
+    fn psk_sessions_authenticate_mutually() {
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let key = Psk::from_bytes(b"shared secret");
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            let (s, key) = (s.clone(), key.clone());
+            move || host(&listener, &s, &names, Duration::from_secs(20), Some(&key))
+        });
+        let sess =
+            join(&addr, "server", "127.0.0.1", Duration::from_secs(20), Some(&key)).unwrap();
+        let hosted = hoster.join().unwrap().unwrap();
+        // the mesh token is the keyed one on both sides
+        assert_eq!(sess.token, hosted.token);
+        assert_eq!(sess.token, s.session_token(&addr, Some(&key)));
+        assert_ne!(sess.token, s.token(&addr));
+    }
+
+    #[test]
+    fn wrong_psk_aborts_the_session_naming_the_role() {
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let good = Psk::from_bytes(b"right key");
+        let bad = Psk::from_bytes(b"wrong key");
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            let (s, good) = (s.clone(), good.clone());
+            move || host(&listener, &s, &names, Duration::from_secs(20), Some(&good))
+        });
+        let perr =
+            join(&addr, "server", "127.0.0.1", Duration::from_secs(20), Some(&bad)).unwrap_err();
+        let pmsg = format!("{perr}");
+        assert!(pmsg.contains("PSK mismatch"), "{pmsg}");
+        let herr = hoster.join().unwrap().unwrap_err();
+        let hmsg = format!("{herr}");
+        assert!(hmsg.contains("PSK authentication"), "{hmsg}");
+        assert!(hmsg.contains("server"), "diagnostic must name the role: {hmsg}");
+    }
+
+    #[test]
+    fn keyless_party_cannot_join_a_psk_session_and_vice_versa() {
+        // case 1: host requires a key, party has none -> both sides abort
+        let names: Vec<String> = ["coord", "server"].iter().map(|s| s.to_string()).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let s = spec();
+        let key = Psk::from_bytes(b"the key");
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            let (s, key) = (s.clone(), key.clone());
+            move || host(&listener, &s, &names, Duration::from_secs(20), Some(&key))
+        });
+        let perr =
+            join(&addr, "server", "127.0.0.1", Duration::from_secs(20), None).unwrap_err();
+        assert!(format!("{perr}").contains("requires a pre-shared key"), "{perr}");
+        let herr = hoster.join().unwrap().unwrap_err();
+        assert!(format!("{herr}").contains("server"), "{herr}");
+
+        // case 2: party has a key, host does not -> the party refuses
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hoster = std::thread::spawn({
+            let names = names.clone();
+            let s = s.clone();
+            move || host(&listener, &s, &names, Duration::from_secs(20), None)
+        });
+        let perr = join(&addr, "server", "127.0.0.1", Duration::from_secs(20), Some(&key))
+            .unwrap_err();
+        assert!(format!("{perr}").contains("not PSK-authenticated"), "{perr}");
+        // the refusing party had already claimed the role and then hung
+        // up, so the host aborts when the handshake stream dies
+        assert!(hoster.join().unwrap().is_err());
     }
 }

@@ -10,13 +10,22 @@
 //! as netsim — which rules out the classic both-sides-blocked-in-`write`
 //! TCP deadlock regardless of message size vs kernel buffer size.
 //!
-//! Shutdown is flush-safe: dropping the port closes the outbox queues, the
-//! writers drain whatever is queued, send a FIN (`shutdown(Write)`) and
-//! exit; the peer's reader sees a clean EOF at a frame boundary. A party
-//! that still expects traffic from a departed peer gets the port's
-//! descriptive disconnect error instead of a hang. [`TcpPort::shutdown`]
-//! additionally joins the writer threads so a process can exit without
-//! racing its own final flush.
+//! Two link flavors share this layout:
+//!
+//! * **simple links** (`spawn_io`, used by the in-process
+//!   [`loopback_mesh`] and the UDS pair mesh in [`super::uds`]): the
+//!   socket *is* the link — a drop kills the run. Shutdown is
+//!   flush-safe: dropping the port closes the outbox queues, the writers
+//!   drain whatever is queued, send a FIN and exit; the peer's reader
+//!   sees a clean EOF at a frame boundary.
+//! * **resilient links** ([`super::relink`], used by the multi-process
+//!   runner behind [`TcpPort`]): every data frame is journaled and
+//!   sequence-numbered, a dropped `TcpStream` is re-dialed and the
+//!   unacked tail replayed, so training survives mid-epoch connection
+//!   kills bit-identically.
+//!
+//! [`TcpPort::shutdown`] joins the writer threads so a process can exit
+//! without racing its own final flush.
 
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -25,32 +34,65 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::relink::LinkSet;
 use super::wire;
 use super::Channel;
 use crate::netsim::{LinkSpec, Msg, NetPort, NetStats, PartyId, Payload, Phase};
 use crate::{Error, Result};
 
-/// How long [`connect_retry`] keeps retrying a refused connection —
+/// How long `connect_retry` keeps retrying a refused connection —
 /// covers peers whose listener is not bound yet (process startup races).
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Wire up one duplex peer connection: a reader thread feeding `inbox_tx`
-/// and a writer thread draining the returned outbox sender. Returns the
-/// outbox sender (to place in the port's tx map) and the writer's join
-/// handle (join it to guarantee the final flush).
-pub(crate) fn spawn_io(
-    stream: TcpStream,
+/// The stream operations the simple-link I/O threads need, so one
+/// implementation serves both `TcpStream` and `UnixStream`.
+pub(crate) trait Duplex: std::io::Read + std::io::Write + Send + Sized + 'static {
+    /// Second handle on the same socket (reader half).
+    fn try_clone_stream(&self) -> std::io::Result<Self>;
+    /// Half-close the write direction (FIN after the final flush).
+    fn shutdown_write(&self);
+    /// Remove any read timeout a handshake may have left installed.
+    fn clear_read_timeout(&self) -> std::io::Result<()>;
+    /// Disable Nagle where the transport has it (no-op otherwise).
+    fn set_nodelay_opt(&self);
+}
+
+impl Duplex for TcpStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn shutdown_write(&self) {
+        let _ = TcpStream::shutdown(self, Shutdown::Write);
+    }
+
+    fn clear_read_timeout(&self) -> std::io::Result<()> {
+        self.set_read_timeout(None)
+    }
+
+    fn set_nodelay_opt(&self) {
+        let _ = self.set_nodelay(true);
+    }
+}
+
+/// Wire up one duplex peer connection as a **simple link**: a reader
+/// thread feeding `inbox_tx` and a writer thread draining the returned
+/// outbox sender. Returns the outbox sender (to place in the port's tx
+/// map) and the writer's join handle (join it to guarantee the final
+/// flush).
+pub(crate) fn spawn_io<S: Duplex>(
+    stream: S,
     me: PartyId,
     peer: PartyId,
     inbox_tx: mpsc::Sender<Msg>,
 ) -> Result<(mpsc::Sender<Msg>, JoinHandle<()>)> {
-    stream.set_nodelay(true).map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
+    stream.set_nodelay_opt();
     // the handshake may have left a read timeout installed; the reader
     // thread must block indefinitely (deadlock detection lives in the port)
     stream
-        .set_read_timeout(None)
+        .clear_read_timeout()
         .map_err(|e| Error::Net(format!("clear read timeout: {e}")))?;
-    let mut rd = stream.try_clone().map_err(|e| Error::Net(format!("clone stream: {e}")))?;
+    let mut rd = stream.try_clone_stream().map_err(|e| Error::Net(format!("clone stream: {e}")))?;
     let mut wr = stream;
 
     let reader = move || loop {
@@ -85,7 +127,7 @@ pub(crate) fn spawn_io(
                 break;
             }
         }
-        let _ = wr.shutdown(Shutdown::Write);
+        wr.shutdown_write();
     };
     let wh = std::thread::Builder::new()
         .name(format!("spnn-tx-{me}-{peer}"))
@@ -94,42 +136,19 @@ pub(crate) fn spawn_io(
     Ok((out_tx, wh))
 }
 
-/// Build a [`NetPort`] (plus writer handles) from one established stream
-/// per peer (`streams[p]` = connection to party `p`, `None` for self and
-/// absent parties).
-pub(crate) fn port_from_streams(
-    me: PartyId,
-    names: &[&str],
-    streams: Vec<Option<TcpStream>>,
-    spec: LinkSpec,
-    stats: Arc<NetStats>,
-) -> Result<(NetPort, Vec<JoinHandle<()>>)> {
-    let mut txs: HashMap<PartyId, mpsc::Sender<Msg>> = HashMap::new();
-    let mut rxs: HashMap<PartyId, mpsc::Receiver<Msg>> = HashMap::new();
-    let mut writers = Vec::new();
-    for (peer, slot) in streams.into_iter().enumerate() {
-        let Some(stream) = slot else { continue };
-        let (inbox_tx, inbox_rx) = mpsc::channel();
-        let (out_tx, wh) = spawn_io(stream, me, peer, inbox_tx)?;
-        txs.insert(peer, out_tx);
-        rxs.insert(peer, inbox_rx);
-        writers.push(wh);
-    }
-    Ok((NetPort::new(me, names[me], spec, txs, rxs, stats), writers))
-}
-
-/// A socket-backed party endpoint: the shared session engine over TCP
-/// connections, plus the I/O-thread lifecycle. The second [`Channel`]
-/// backend next to the simulator's [`NetPort`].
+/// A socket-backed party endpoint: the shared session engine over
+/// resilient TCP links ([`super::relink`]), plus the I/O-thread
+/// lifecycle. The real-socket [`Channel`] backend the multi-process
+/// runner deploys.
 pub struct TcpPort {
     port: Option<NetPort>,
-    writers: Vec<JoinHandle<()>>,
+    links: Option<LinkSet>,
     stats: Arc<NetStats>,
 }
 
 impl TcpPort {
-    pub(crate) fn new(port: NetPort, writers: Vec<JoinHandle<()>>, stats: Arc<NetStats>) -> Self {
-        TcpPort { port: Some(port), writers, stats }
+    pub(crate) fn new(port: NetPort, links: LinkSet, stats: Arc<NetStats>) -> Self {
+        TcpPort { port: Some(port), links: Some(links), stats }
     }
 
     /// This process's sender-side traffic counters.
@@ -137,17 +156,32 @@ impl TcpPort {
         &self.stats
     }
 
+    /// Chaos/ops hook: sever every live peer connection once (simulating
+    /// a network cut). The resilient links re-establish themselves and
+    /// replay unacked traffic; training continues bit-identically.
+    pub fn sever_links(&self) {
+        if let Some(links) = &self.links {
+            links.sever_all();
+        }
+    }
+
     fn port(&mut self) -> &mut NetPort {
         self.port.as_mut().expect("TcpPort used after shutdown")
     }
 
     /// Flush-and-close: drop the outbox queues (writers drain every queued
-    /// frame, FIN, exit) and join the writers, so queued messages are on
-    /// the wire before the caller proceeds to exit.
+    /// frame, say goodbye, FIN, exit), join the writers so queued messages
+    /// are on the wire before the caller proceeds to exit, then stop the
+    /// relink accept hub.
     pub fn shutdown(mut self) {
-        self.port.take(); // drops the tx map -> writers drain + FIN
-        for wh in self.writers.drain(..) {
-            let _ = wh.join();
+        self.port.take(); // drops the tx map -> writers drain + goodbye
+        if let Some(mut links) = self.links.take() {
+            for wh in links.writers.drain(..) {
+                let _ = wh.join();
+            }
+            if let Some(mut hub) = links.hub.take() {
+                hub.shutdown();
+            }
         }
     }
 }
@@ -215,10 +249,11 @@ impl Channel for TcpPort {
 ///
 /// This is the `TrainConfig::transport = Tcp` backend: the transcript-
 /// parity tests run the trainers on it to prove the wire layer is
-/// bit-exact against the simulator.
+/// bit-exact against the simulator. Links are **simple** (not resilient):
+/// all parties live in one process, so a socket can only die with the
+/// process itself.
 pub fn loopback_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
     let n = names.len();
-    let stats = Arc::new(NetStats::new(names));
     let mut listeners = Vec::with_capacity(n);
     for _ in 0..n {
         listeners
@@ -229,7 +264,29 @@ pub fn loopback_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Ar
         .map(|l| l.local_addr())
         .collect::<std::io::Result<_>>()
         .map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+    assemble_mesh(names, spec, |i, j| {
+        // j dials i; the kernel backlog completes the connection, so a
+        // sequential connect-then-accept cannot deadlock
+        let sj = TcpStream::connect(addrs[i])
+            .map_err(|e| Error::Net(format!("connect {i}<-{j}: {e}")))?;
+        let (si, _) = listeners[i]
+            .accept()
+            .map_err(|e| Error::Net(format!("accept {i}<-{j}: {e}")))?;
+        Ok((si, sj))
+    })
+}
 
+/// Shared mesh-assembly loop for the simple-link backends: for every
+/// party pair `(i, j)` with `i < j`, `connect(i, j)` yields the
+/// connected `(i-side, j-side)` stream pair, and each side gets its
+/// reader/writer threads and per-peer channels.
+pub(crate) fn assemble_mesh<S: Duplex>(
+    names: &[&str],
+    spec: LinkSpec,
+    mut connect: impl FnMut(usize, usize) -> Result<(S, S)>,
+) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
+    let n = names.len();
+    let stats = Arc::new(NetStats::new(names));
     // per-party channel maps under construction
     let mut txs: Vec<HashMap<PartyId, mpsc::Sender<Msg>>> =
         (0..n).map(|_| HashMap::new()).collect();
@@ -238,13 +295,7 @@ pub fn loopback_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Ar
 
     for i in 0..n {
         for j in (i + 1)..n {
-            // j dials i; the kernel backlog completes the connection, so a
-            // sequential connect-then-accept cannot deadlock
-            let sj = TcpStream::connect(addrs[i])
-                .map_err(|e| Error::Net(format!("connect {i}<-{j}: {e}")))?;
-            let (si, _) = listeners[i]
-                .accept()
-                .map_err(|e| Error::Net(format!("accept {i}<-{j}: {e}")))?;
+            let (si, sj) = connect(i, j)?;
             let (inbox_tx_i, inbox_rx_i) = mpsc::channel();
             let (out_tx_i, _wh_i) = spawn_io(si, i, j, inbox_tx_i)?;
             txs[i].insert(j, out_tx_i);
@@ -265,7 +316,8 @@ pub fn loopback_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Ar
 }
 
 /// `TcpStream::connect` with retry/backoff until `timeout` — rendezvous
-/// peers may not have bound their listener yet.
+/// peers may not have bound their listener yet, and a re-dialed peer may
+/// take a moment to notice its side of an outage.
 pub(crate) fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let deadline = std::time::Instant::now() + timeout;
     let mut wait = Duration::from_millis(20);

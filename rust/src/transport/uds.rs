@@ -1,0 +1,114 @@
+//! Unix-domain-socket backend for co-located parties
+//! (`TrainConfig::transport = Uds`, `spnn train --transport uds`).
+//!
+//! Same [`wire`](super::wire) framing and I/O-thread layout as the TCP
+//! loopback mesh, but over `std::os::unix::net::UnixStream` socketpairs:
+//! no ports, no listeners, no TCP/IP stack — the kernel moves the bytes
+//! through a local pipe-like channel, which is both the cheapest real
+//! IPC for parties sharing a host and a second, independent proof that
+//! the protocols only depend on the [`Channel`](super::Channel) contract.
+//! Weights are bit-identical to the netsim and TCP backends (asserted by
+//! the `*_transports_are_transcript_equal` tests and
+//! `rust/tests/decentralized.rs`).
+//!
+//! The mesh is strictly in-process (socketpairs have no address to
+//! rendezvous on); multi-process deployments use TCP, where the session
+//! handshake and the resilient relink layer live.
+
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+use super::tcp::{assemble_mesh, Duplex};
+use crate::netsim::{LinkSpec, NetPort, NetStats};
+use crate::{Error, Result};
+
+impl Duplex for UnixStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn shutdown_write(&self) {
+        let _ = UnixStream::shutdown(self, Shutdown::Write);
+    }
+
+    fn clear_read_timeout(&self) -> std::io::Result<()> {
+        self.set_read_timeout(None)
+    }
+
+    fn set_nodelay_opt(&self) {
+        // no Nagle on unix sockets — nothing to disable
+    }
+}
+
+/// Full mesh over Unix-domain socketpairs: one `UnixStream::pair()` per
+/// party pair, shared sender-side stats — the co-located-parties
+/// counterpart of [`super::tcp::loopback_mesh`], assembled by the same
+/// shared loop.
+pub fn pair_mesh(names: &[&str], spec: LinkSpec) -> Result<(Vec<NetPort>, Arc<NetStats>)> {
+    assemble_mesh(names, spec, |i, j| {
+        UnixStream::pair().map_err(|e| Error::Net(format!("socketpair {i}<->{j}: {e}")))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Payload, Phase};
+    use std::time::Duration;
+
+    #[test]
+    fn uds_pair_reorders_tags_and_accounts_bytes() {
+        let (mut ports, stats) = pair_mesh(&["A", "B"], LinkSpec::lan()).unwrap();
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            a.send_tagged(1, 5, Payload::U64s(vec![5, 5])).unwrap();
+            a.send_tagged(1, 6, Payload::F32s(vec![6.5])).unwrap();
+            // keep the port alive until B confirms
+            a.recv_tagged(1, 99).unwrap().into_u64s().unwrap()
+        });
+        b.set_recv_timeout(Duration::from_secs(20));
+        assert_eq!(b.recv_tagged(0, 6).unwrap().into_f32s().unwrap(), vec![6.5]);
+        assert_eq!(b.recv_tagged(0, 5).unwrap().into_u64s().unwrap(), vec![5, 5]);
+        b.send_tagged(0, 99, Payload::U64s(vec![1])).unwrap();
+        assert_eq!(h.join().unwrap(), vec![1]);
+        let want = Payload::U64s(vec![5, 5]).total_bytes()
+            + Payload::F32s(vec![6.5]).total_bytes();
+        assert_eq!(stats.bytes_sent_by(0, Phase::Online), want);
+    }
+
+    #[test]
+    fn uds_dropped_peer_surfaces_as_disconnect() {
+        let (mut ports, _) = pair_mesh(&["A", "B"], LinkSpec::lan()).unwrap();
+        let b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        drop(b);
+        a.set_recv_timeout(Duration::from_secs(5));
+        let err = a.recv(1).unwrap_err();
+        assert!(format!("{err}").contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn uds_three_party_mesh_routes_all_pairs() {
+        let (ports, _) = pair_mesh(&["A", "B", "C"], LinkSpec::lan()).unwrap();
+        let mut it = ports.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let mut c = it.next().unwrap();
+        let hb = std::thread::spawn(move || {
+            let v = b.recv_u64s(0).unwrap();
+            b.send(2, Payload::U64s(vec![v[0] + 1])).unwrap();
+            b.recv_u64s(2).unwrap()
+        });
+        let hc = std::thread::spawn(move || {
+            let v = c.recv_u64s(1).unwrap();
+            c.send(0, Payload::U64s(vec![v[0] + 1])).unwrap();
+            c.send(1, Payload::U64s(vec![99])).unwrap();
+        });
+        a.send(1, Payload::U64s(vec![10])).unwrap();
+        assert_eq!(a.recv_u64s(2).unwrap(), vec![12]);
+        assert_eq!(hb.join().unwrap(), vec![99]);
+        hc.join().unwrap();
+    }
+}

@@ -1,19 +1,31 @@
-//! Length-prefixed wire framing for the TCP backend.
+//! Length-prefixed wire framing for the socket backends (TCP and UDS).
 //!
 //! The netsim backend moves [`Payload`]s by ownership and only *accounts*
 //! their wire size; this module is the real serialization those byte
 //! counts model. One frame per [`Msg`]:
 //!
 //! ```text
-//! [len: u32 LE] [from: u32] [tag: u64] [depart: f64 bits] [phase: u8]
+//! [len: u32 LE] [ftype: u8] [seq: u64] [ack: u64]
+//!               [from: u32] [tag: u64] [depart: f64 bits] [phase: u8]
 //!               [kind: u8] [payload body...]
 //! ```
+//!
+//! The first envelope row is the **resilient-link header** added for
+//! mid-training reconnect ([`super::relink`]): `seq` numbers every data
+//! frame on a link (1, 2, 3, … — `0` marks pre-session handshake
+//! traffic, which is never journaled), `ack` piggybacks the highest
+//! sequence number the sender has delivered from its peer (journal
+//! pruning), and `ftype` distinguishes payload-carrying [`FT_DATA`]
+//! frames from the [`FT_BYE`] goodbye marker that makes an orderly
+//! shutdown distinguishable from a dropped connection, and from the
+//! standalone [`FT_ACK`] frames that keep journals bounded when the
+//! reverse direction is idle.
 //!
 //! Every variable-length field carries an explicit element count, so a
 //! truncated frame is always detected (`truncated frame` / `short read`
 //! errors) instead of being misparsed. Floats travel as raw IEEE-754 bit
-//! patterns — `decode(encode(m))` is bit-exact, which is what makes a TCP
-//! run train the same weights as a netsim run.
+//! patterns — `decode(encode(m))` is bit-exact, which is what makes a
+//! socket run train the same weights as a netsim run.
 //!
 //! The sender's virtual-clock departure stamp (`depart`) rides the frame,
 //! so the receiving port can model simulated arrival time across real
@@ -26,6 +38,21 @@ use crate::{Error, Result};
 
 /// Hard cap on one frame's body (defense against corrupt length prefixes).
 pub const FRAME_MAX: usize = 1 << 30;
+
+/// Frame type: an ordinary payload-carrying message.
+pub const FT_DATA: u8 = 0;
+/// Frame type: goodbye marker — the sender is done and the following EOF
+/// is an orderly shutdown, not a dropped link (see [`super::relink`]).
+pub const FT_BYE: u8 = 1;
+/// Frame type: standalone acknowledgment — carries only the `ack` field,
+/// so a link whose reverse direction is idle still prunes its peer's
+/// send journal (see [`super::relink`]).
+pub const FT_ACK: u8 = 2;
+
+/// Byte offset of the `ack` field within a whole frame (length prefix
+/// included) — lets the reconnect journal patch a stored frame's ack
+/// just before (re)transmission instead of re-encoding the payload.
+pub(crate) const ACK_OFFSET: usize = 4 + 1 + 8;
 
 fn err(msg: impl Into<String>) -> Error {
     Error::Net(msg.into())
@@ -84,10 +111,13 @@ const KIND_SEED: u8 = 5;
 const KIND_BITS: u8 = 6;
 const KIND_CONTROL: u8 = 7;
 
-/// Serialize one message into a self-contained frame (length prefix
-/// included).
-pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+/// Serialize one data frame (length prefix included) with explicit
+/// resilient-link sequence and ack numbers.
+pub fn encode_frame(msg: &Msg, seq: u64, ack: u64) -> Vec<u8> {
     let mut e = Enc::new();
+    e.u8(FT_DATA);
+    e.u64(seq);
+    e.u64(ack);
     e.u32(msg.from as u32);
     e.u64(msg.tag);
     e.u64(msg.depart.to_bits());
@@ -146,9 +176,54 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
     e.finish()
 }
 
+/// Serialize one message as an unjournaled frame (`seq = ack = 0`) —
+/// the form all pre-session handshake traffic uses.
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    encode_frame(msg, 0, 0)
+}
+
+/// Serialize a goodbye marker: `seq` is the highest sequence number the
+/// sender assigned, `ack` the highest it delivered.
+pub fn encode_bye(seq: u64, ack: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(FT_BYE);
+    e.u64(seq);
+    e.u64(ack);
+    e.finish()
+}
+
+/// Serialize a standalone acknowledgment (`seq` is unused and 0).
+pub fn encode_ack(ack: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(FT_ACK);
+    e.u64(0);
+    e.u64(ack);
+    e.finish()
+}
+
+/// Patch the ack field of an already-encoded frame in place (see
+/// [`ACK_OFFSET`]).
+pub(crate) fn patch_ack(frame: &mut [u8], ack: u64) {
+    frame[ACK_OFFSET..ACK_OFFSET + 8].copy_from_slice(&ack.to_le_bytes());
+}
+
 // ---------------------------------------------------------------------------
 // Decoding
 // ---------------------------------------------------------------------------
+
+/// A decoded frame: the resilient-link envelope plus the message
+/// (`None` for the payload-less [`FT_BYE`] / [`FT_ACK`] frames).
+#[derive(Debug)]
+pub struct Frame {
+    /// Frame type ([`FT_DATA`] / [`FT_BYE`] / [`FT_ACK`]).
+    pub ftype: u8,
+    /// Link sequence number (0 = unjournaled handshake-era frame).
+    pub seq: u64,
+    /// Highest peer sequence number the sender had delivered.
+    pub ack: u64,
+    /// The carried message; `None` for goodbye and ack frames.
+    pub msg: Option<Msg>,
+}
 
 struct Dec<'a> {
     buf: &'a [u8],
@@ -217,82 +292,102 @@ impl<'a> Dec<'a> {
 }
 
 /// Decode one frame *body* (the bytes after the length prefix).
-pub fn decode_msg(body: &[u8]) -> Result<Msg> {
+pub fn decode_frame(body: &[u8]) -> Result<Frame> {
     let mut d = Dec { buf: body, pos: 0 };
-    let from = d.u32()? as usize;
-    let tag = d.u64()?;
-    let depart = f64::from_bits(d.u64()?);
-    let phase = match d.u8()? {
-        0 => Phase::Online,
-        1 => Phase::Offline,
-        other => return Err(err(format!("bad phase byte {other}"))),
-    };
-    let kind = d.u8()?;
-    let payload = match kind {
-        KIND_U64S => Payload::U64s(d.u64s()?),
-        KIND_F32S => {
-            let n = d.count(4)?;
-            let mut v = Vec::with_capacity(n);
-            for _ in 0..n {
-                let b = d.take(4)?;
-                v.push(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
-            }
-            Payload::F32s(v)
+    let ftype = d.u8()?;
+    let seq = d.u64()?;
+    let ack = d.u64()?;
+    match ftype {
+        FT_BYE | FT_ACK => {
+            d.done()?;
+            Ok(Frame { ftype, seq, ack, msg: None })
         }
-        KIND_F64S => {
-            let n = d.count(8)?;
-            let mut v = Vec::with_capacity(n);
-            for _ in 0..n {
-                v.push(f64::from_bits(d.u64()?));
-            }
-            Payload::F64s(v)
+        FT_DATA => {
+            let from = d.u32()? as usize;
+            let tag = d.u64()?;
+            let depart = f64::from_bits(d.u64()?);
+            let phase = match d.u8()? {
+                0 => Phase::Online,
+                1 => Phase::Offline,
+                other => return Err(err(format!("bad phase byte {other}"))),
+            };
+            let kind = d.u8()?;
+            let payload = match kind {
+                KIND_U64S => Payload::U64s(d.u64s()?),
+                KIND_F32S => {
+                    let n = d.count(4)?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let b = d.take(4)?;
+                        v.push(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+                    }
+                    Payload::F32s(v)
+                }
+                KIND_F64S => {
+                    let n = d.count(8)?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(f64::from_bits(d.u64()?));
+                    }
+                    Payload::F64s(v)
+                }
+                KIND_CIPHER => {
+                    let n = d.count(4)?;
+                    let mut items = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let len = d.count(1)?;
+                        items.push(d.take(len)?.to_vec());
+                    }
+                    Payload::Cipher(items)
+                }
+                KIND_CIPHER_BLOCK => {
+                    let ct_bytes = d.u32()? as usize;
+                    let count = d.u32()? as usize;
+                    let len = d.count(1)?;
+                    Payload::CipherBlock { data: d.take(len)?.to_vec(), ct_bytes, count }
+                }
+                KIND_SEED => {
+                    let mut s = [0u8; 32];
+                    s.copy_from_slice(d.take(32)?);
+                    Payload::Seed(s)
+                }
+                KIND_BITS => Payload::Bits(d.u64s()?),
+                KIND_CONTROL => {
+                    let len = d.count(1)?;
+                    let s = String::from_utf8(d.take(len)?.to_vec())
+                        .map_err(|_| err("control payload is not utf-8"))?;
+                    Payload::Control(s)
+                }
+                other => return Err(err(format!("unknown payload kind {other}"))),
+            };
+            d.done()?;
+            Ok(Frame { ftype, seq, ack, msg: Some(Msg { from, tag, payload, depart, phase }) })
         }
-        KIND_CIPHER => {
-            let n = d.count(4)?;
-            let mut items = Vec::with_capacity(n);
-            for _ in 0..n {
-                let len = d.count(1)?;
-                items.push(d.take(len)?.to_vec());
-            }
-            Payload::Cipher(items)
-        }
-        KIND_CIPHER_BLOCK => {
-            let ct_bytes = d.u32()? as usize;
-            let count = d.u32()? as usize;
-            let len = d.count(1)?;
-            Payload::CipherBlock { data: d.take(len)?.to_vec(), ct_bytes, count }
-        }
-        KIND_SEED => {
-            let mut s = [0u8; 32];
-            s.copy_from_slice(d.take(32)?);
-            Payload::Seed(s)
-        }
-        KIND_BITS => Payload::Bits(d.u64s()?),
-        KIND_CONTROL => {
-            let len = d.count(1)?;
-            let s = String::from_utf8(d.take(len)?.to_vec())
-                .map_err(|_| err("control payload is not utf-8"))?;
-            Payload::Control(s)
-        }
-        other => return Err(err(format!("unknown payload kind {other}"))),
-    };
-    d.done()?;
-    Ok(Msg { from, tag, payload, depart, phase })
+        other => Err(err(format!("unknown frame type {other}"))),
+    }
+}
+
+/// Decode one frame body that must carry a message (handshake traffic —
+/// a goodbye marker here is a protocol violation).
+pub fn decode_msg(body: &[u8]) -> Result<Msg> {
+    decode_frame(body)?
+        .msg
+        .ok_or_else(|| err("unexpected goodbye frame where a message was required"))
 }
 
 // ---------------------------------------------------------------------------
 // Stream I/O
 // ---------------------------------------------------------------------------
 
-/// Write one message as a single framed chunk.
+/// Write one message as a single framed chunk (unjournaled, `seq = 0`).
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
     w.write_all(&encode_msg(msg))
 }
 
-/// Read the next frame. Returns `Ok(None)` on a clean EOF at a frame
-/// boundary (orderly peer shutdown); EOF *inside* a frame is a short-read
-/// error, as is a length prefix beyond [`FRAME_MAX`].
-pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+/// Read the next frame (envelope included). Returns `Ok(None)` on a clean
+/// EOF at a frame boundary; EOF *inside* a frame is a short-read error,
+/// as is a length prefix beyond [`FRAME_MAX`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     let mut len_b = [0u8; 4];
     match read_full(r, &mut len_b)? {
         ReadOutcome::CleanEof => return Ok(None),
@@ -309,10 +404,22 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
     }
     let mut body = vec![0u8; len];
     match read_full(r, &mut body)? {
-        ReadOutcome::Full => decode_msg(&body).map(Some),
+        ReadOutcome::Full => decode_frame(&body).map(Some),
         ReadOutcome::CleanEof | ReadOutcome::Short(_) => Err(err(format!(
             "short read: connection closed inside a {len}-byte frame body"
         ))),
+    }
+}
+
+/// Read the next message, treating a clean EOF and the payload-less
+/// frame types as end-of-stream (`Ok(None)`). The handshake and the
+/// simple (non-resilient) loopback links use this — neither ever
+/// receives ack frames; resilient links read the envelope through
+/// [`read_frame`] instead.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some(Frame { msg, .. }) => Ok(msg),
     }
 }
 
@@ -348,6 +455,13 @@ mod tests {
     use crate::netsim::NO_TAG;
     use crate::rng::{Pcg64, Rng64};
     use crate::testutil::prop_check;
+
+    // body offsets after the length prefix: ftype(1) seq(8) ack(8)
+    const MSG_AT: usize = 17;
+    // then from(4) tag(8) depart(8) -> phase, kind, first count
+    const PHASE_AT: usize = MSG_AT + 20;
+    const KIND_AT: usize = PHASE_AT + 1;
+    const COUNT_AT: usize = KIND_AT + 1;
 
     fn roundtrip(msg: &Msg) -> Msg {
         let frame = encode_msg(msg);
@@ -430,7 +544,8 @@ mod tests {
     #[test]
     fn every_payload_variant_roundtrips() {
         // property: encode/decode is the identity on every variant, for
-        // random contents, tags (incl. NO_TAG), phases and depart stamps
+        // random contents, tags (incl. NO_TAG), phases, depart stamps and
+        // seq/ack envelopes
         prop_check("wire_roundtrip", 300, |rng| {
             let msg = Msg {
                 from: (rng.next_u64() % 7) as usize,
@@ -439,8 +554,12 @@ mod tests {
                 depart: (rng.next_u64() as f64) / 1e6,
                 phase: if rng.next_u64() % 2 == 0 { Phase::Online } else { Phase::Offline },
             };
-            let back = roundtrip(&msg);
-            assert_msg_eq(&msg, &back);
+            let (seq, ack) = (rng.next_u64(), rng.next_u64());
+            let frame = encode_frame(&msg, seq, ack);
+            let f = decode_frame(&frame[4..]).expect("decode");
+            assert_eq!(f.seq, seq);
+            assert_eq!(f.ack, ack);
+            assert_msg_eq(&msg, f.msg.as_ref().expect("data frame"));
         });
     }
 
@@ -473,6 +592,34 @@ mod tests {
     }
 
     #[test]
+    fn bye_frames_roundtrip_and_patch_ack_works() {
+        let frame = encode_bye(41, 7);
+        let f = decode_frame(&frame[4..]).unwrap();
+        assert_eq!((f.ftype, f.seq, f.ack), (FT_BYE, 41, 7));
+        assert!(f.msg.is_none());
+        let frame = encode_ack(19);
+        let f = decode_frame(&frame[4..]).unwrap();
+        assert_eq!((f.ftype, f.seq, f.ack), (FT_ACK, 0, 19));
+        assert!(f.msg.is_none());
+        // a bye where a message is required is a protocol violation
+        assert!(decode_msg(&frame[4..]).is_err());
+        // patch_ack rewrites only the ack field, on any frame type
+        let msg = Msg {
+            from: 1,
+            tag: 3,
+            payload: Payload::U64s(vec![9]),
+            depart: 0.25,
+            phase: Phase::Online,
+        };
+        let mut frame = encode_frame(&msg, 17, 0);
+        patch_ack(&mut frame, 0xdead_beef);
+        let f = decode_frame(&frame[4..]).unwrap();
+        assert_eq!(f.seq, 17);
+        assert_eq!(f.ack, 0xdead_beef);
+        assert_msg_eq(&msg, f.msg.as_ref().unwrap());
+    }
+
+    #[test]
     fn every_truncation_of_a_frame_errors_cleanly() {
         // property: decoding any strict prefix of a valid body must fail
         // (explicit element counts make truncation always detectable), and
@@ -485,22 +632,28 @@ mod tests {
                 depart: 0.5,
                 phase: Phase::Online,
             };
-            let frame = encode_msg(&msg);
+            let frame = encode_frame(&msg, rng.next_u64(), rng.next_u64());
             let body = &frame[4..];
             for cut in 0..body.len() {
                 assert!(
-                    decode_msg(&body[..cut]).is_err(),
+                    decode_frame(&body[..cut]).is_err(),
                     "truncation to {cut}/{} bytes decoded successfully",
                     body.len()
                 );
             }
-            assert!(decode_msg(body).is_ok());
+            assert!(decode_frame(body).is_ok());
         });
+        // goodbye / ack frames too
+        for frame in [encode_bye(3, 4), encode_ack(9)] {
+            for cut in 0..frame.len() - 4 {
+                assert!(decode_frame(&frame[4..4 + cut]).is_err());
+            }
+        }
     }
 
     #[test]
     fn corrupt_frames_are_rejected() {
-        assert!(decode_msg(&[]).is_err());
+        assert!(decode_frame(&[]).is_err());
         let msg = Msg {
             from: 0,
             tag: 0,
@@ -509,22 +662,30 @@ mod tests {
             phase: Phase::Online,
         };
         let frame = encode_msg(&msg);
+        // bad frame type byte
+        let mut bad = frame[4..].to_vec();
+        bad[0] = 77;
+        assert!(decode_frame(&bad).is_err());
         // bad phase byte
         let mut bad = frame[4..].to_vec();
-        bad[20] = 9;
-        assert!(decode_msg(&bad).is_err());
+        bad[PHASE_AT] = 9;
+        assert!(decode_frame(&bad).is_err());
         // bad kind byte
         let mut bad = frame[4..].to_vec();
-        bad[21] = 200;
-        assert!(decode_msg(&bad).is_err());
+        bad[KIND_AT] = 200;
+        assert!(decode_frame(&bad).is_err());
         // absurd element count must not allocate or succeed
         let mut bad = frame[4..].to_vec();
-        bad[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(decode_msg(&bad).is_err());
+        bad[COUNT_AT..COUNT_AT + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
         // trailing garbage after a valid message
         let mut bad = frame[4..].to_vec();
         bad.push(0);
-        assert!(decode_msg(&bad).is_err());
+        assert!(decode_frame(&bad).is_err());
+        // trailing garbage after a goodbye
+        let mut bad = encode_bye(0, 0)[4..].to_vec();
+        bad.push(0);
+        assert!(decode_frame(&bad).is_err());
     }
 
     #[test]
@@ -559,6 +720,16 @@ mod tests {
         let huge = (FRAME_MAX as u32 + 1).to_le_bytes();
         let mut r = &huge[..];
         assert!(read_msg(&mut r).is_err());
+        // goodbye / ack markers read as end-of-stream through read_msg
+        // but as explicit frames through read_frame
+        for (frame, ftype) in [(encode_bye(9, 2), FT_BYE), (encode_ack(2), FT_ACK)] {
+            let mut r = &frame[..];
+            assert!(read_msg(&mut r).unwrap().is_none());
+            let mut r = &frame[..];
+            let f = read_frame(&mut r).unwrap().unwrap();
+            assert_eq!((f.ftype, f.ack), (ftype, 2));
+            assert!(f.msg.is_none());
+        }
     }
 
     #[test]
@@ -568,7 +739,7 @@ mod tests {
         let payload = Payload::U64s(vec![7; 100]);
         let accounted = payload.total_bytes();
         let msg = Msg { from: 0, tag: 3, payload, depart: 1.0, phase: Phase::Online };
-        let frame = encode_msg(&msg);
+        let frame = encode_frame(&msg, 1, 1);
         let diff = (frame.len() as i64 - accounted as i64).abs();
         assert!(diff <= 16, "frame {} vs accounted {accounted}", frame.len());
     }

@@ -1,10 +1,12 @@
-//! End-to-end decentralized runtime test: `spnn launch` really forks one
+//! End-to-end decentralized runtime tests: `spnn launch` really forks one
 //! OS process per party (server, dealer, holder0, holder1) over localhost
 //! TCP, and the resulting model is bit-identical to the single-process
-//! run of `spnn train` with the same flags — at pipeline depths 1 and 4.
+//! run of `spnn train` with the same flags — at pipeline depths 1 and 4,
+//! through every transport backend, with PSK authentication on, and with
+//! one TCP connection killed and resumed mid-epoch (`--chaos`).
 //!
-//! This is the multi-*process* leg of the ISSUE 3 acceptance criteria;
-//! the in-process loopback-TCP legs live in the unit tests
+//! This is the multi-*process* leg of the ISSUE 3 + ISSUE 4 acceptance
+//! criteria; the in-process loopback-TCP/UDS legs live in the unit tests
 //! (`*_transports_are_transcript_equal`). Uses the spnn-ss protocol: the
 //! engine's native graph fallback makes it runnable without `make
 //! artifacts`, so this exercises the same binary CI ships.
@@ -28,30 +30,45 @@ fn digest_of(output: &std::process::Output, what: &str) -> u64 {
         .unwrap_or_else(|e| panic!("{what}: bad digest {line:?}: {e}"))
 }
 
+fn common_flags(depth: &str) -> Vec<&str> {
+    vec![
+        "--protocol",
+        "spnn-ss",
+        "--rows",
+        "384",
+        "--epochs",
+        "1",
+        "--batch",
+        "128",
+        "--pipeline-depth",
+        depth,
+    ]
+}
+
 #[test]
 fn launch_processes_match_in_process_train() {
     let exe = env!("CARGO_BIN_EXE_spnn");
+    // PSK for the authenticated depth-1 leg
+    let psk_path = std::env::temp_dir().join(format!("spnn-psk-itest-{}", std::process::id()));
+    std::fs::write(&psk_path, "decentralized-itest-key\n").unwrap();
+    let psk = psk_path.to_string_lossy().into_owned();
+
     for depth in ["1", "4"] {
-        let common = [
-            "--protocol",
-            "spnn-ss",
-            "--rows",
-            "384",
-            "--epochs",
-            "1",
-            "--batch",
-            "128",
-            "--pipeline-depth",
-            depth,
-        ];
-        let launch = Command::new(exe)
-            .arg("launch")
-            .args(common)
-            .output()
-            .expect("spawn spnn launch");
+        let common = common_flags(depth);
+        let mut launch = Command::new(exe);
+        launch.arg("launch").args(&common);
+        if depth == "1" {
+            // authenticated rendezvous: every spawned role presents the key
+            launch.args(["--psk-file", &psk]);
+        } else {
+            // chaos drill: holder0 severs a connection mid-epoch; the
+            // resilient links must re-dial, replay, and finish bit-exact
+            launch.args(["--chaos", "holder0:6"]);
+        }
+        let launch = launch.output().expect("spawn spnn launch");
         let train = Command::new(exe)
             .arg("train")
-            .args(common)
+            .args(&common)
             .output()
             .expect("spawn spnn train");
         let d_launch = digest_of(&launch, "spnn launch");
@@ -61,5 +78,107 @@ fn launch_processes_match_in_process_train() {
             d_launch, d_train,
             "4-process TCP run diverged from the in-process netsim run at depth {depth}"
         );
+        if depth == "4" {
+            // the drill must actually have fired (stderr carries the note)
+            let stderr = String::from_utf8_lossy(&launch.stderr);
+            assert!(
+                stderr.contains("CHAOS severing"),
+                "chaos kill never triggered; stderr:\n{stderr}"
+            );
+            assert!(
+                stderr.contains("re-established") || stderr.contains("re-accepted"),
+                "no relink after the chaos kill; stderr:\n{stderr}"
+            );
+        }
     }
+    let _ = std::fs::remove_file(&psk_path);
+}
+
+#[test]
+fn uds_transport_matches_netsim_digest() {
+    // third backend: the same run over unix-domain socketpairs
+    let exe = env!("CARGO_BIN_EXE_spnn");
+    let common = common_flags("1");
+    let uds = Command::new(exe)
+        .arg("train")
+        .args(&common)
+        .args(["--transport", "uds"])
+        .output()
+        .expect("spawn spnn train --transport uds");
+    let netsim = Command::new(exe)
+        .arg("train")
+        .args(&common)
+        .output()
+        .expect("spawn spnn train");
+    assert_eq!(
+        digest_of(&uds, "spnn train --transport uds"),
+        digest_of(&netsim, "spnn train"),
+        "uds transport diverged from netsim"
+    );
+}
+
+#[test]
+fn wrong_psk_party_aborts_the_whole_launch_naming_the_role() {
+    // acceptance criterion: `spnn launch` with a wrong --psk-file on one
+    // party aborts the whole session with a diagnostic naming the role.
+    // The launcher runs in --no-spawn mode; the test plays the four
+    // parties, one of them holding the wrong key.
+    use std::io::BufRead;
+    let exe = env!("CARGO_BIN_EXE_spnn");
+    let dir = std::env::temp_dir();
+    let good = dir.join(format!("spnn-psk-good-itest-{}", std::process::id()));
+    let bad = dir.join(format!("spnn-psk-bad-itest-{}", std::process::id()));
+    std::fs::write(&good, "the launch key\n").unwrap();
+    std::fs::write(&bad, "not the launch key\n").unwrap();
+
+    let mut launcher = Command::new(exe)
+        .arg("launch")
+        .args(common_flags("1"))
+        .args(["--no-spawn", "--listen", "127.0.0.1:0"])
+        .args(["--psk-file", &good.to_string_lossy()])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn spnn launch --no-spawn");
+
+    // the launcher prints one join line per role; parse the rendezvous
+    // address from the first of them
+    let stderr = launcher.stderr.take().unwrap();
+    let mut reader = std::io::BufReader::new(stderr);
+    let mut addr = None;
+    let mut captured = String::new();
+    while addr.is_none() {
+        let mut line = String::new();
+        if reader.read_line(&mut line).expect("read launcher stderr") == 0 {
+            panic!("launcher exited before printing join commands:\n{captured}");
+        }
+        if let Some(pos) = line.find("--connect ") {
+            let rest = &line[pos + "--connect ".len()..];
+            addr = Some(rest.split_whitespace().next().unwrap().to_string());
+        }
+        captured.push_str(&line);
+    }
+    let addr = addr.unwrap();
+
+    // one party presents the wrong key: the whole session must die
+    let party = Command::new(exe)
+        .args(["party", "--role", "holder0", "--connect", &addr])
+        .args(["--psk-file", &bad.to_string_lossy()])
+        .output()
+        .expect("spawn spnn party");
+    assert!(!party.status.success(), "wrong-psk party unexpectedly succeeded");
+    let pmsg = String::from_utf8_lossy(&party.stderr);
+    assert!(pmsg.contains("PSK"), "party diagnostic missing: {pmsg}");
+
+    let status = launcher.wait().expect("wait launcher");
+    let mut rest = String::new();
+    std::io::Read::read_to_string(&mut reader, &mut rest).unwrap();
+    captured.push_str(&rest);
+    assert!(!status.success(), "launcher must abort; stderr:\n{captured}");
+    assert!(
+        captured.contains("PSK authentication") && captured.contains("holder0"),
+        "launcher diagnostic must name the offending role; stderr:\n{captured}"
+    );
+    let _ = std::fs::remove_file(&good);
+    let _ = std::fs::remove_file(&bad);
 }
