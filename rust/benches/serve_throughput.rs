@@ -1,0 +1,98 @@
+//! Serve-throughput sweep: rows/sec and per-row wire bytes of the
+//! private-inference serving runtime (`spnn serve`) as a function of the
+//! request **coalescing** size, emitted as machine-readable
+//! `BENCH_serve.json` (CI artifact).
+//!
+//! Coalescing is the serving analogue of the training batch: bigger
+//! batches amortize the per-batch crypto — share exchanges, Beaver triple
+//! round-trips, truncations — across more request rows, so `coalesce 64`
+//! should beat `coalesce 1` on both axes. The per-row wire cost is
+//! isolated by differencing against a baseline session that serves zero
+//! timed requests (training traffic cancels out).
+//!
+//! Runs artifact-free (the native graph fallback) on a 1-core CI runner.
+
+use std::time::Instant;
+
+use spnn::bench_harness::JsonObj;
+use spnn::config::{TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+use spnn::protocols::common::Fnv;
+use spnn::serve::{serve, ServeOpts};
+
+/// Rows per timed request.
+const REQ_ROWS: u32 = 96;
+
+/// One serve session: train, warm up (waits out training), then answer
+/// `n_requests` identical 96-row requests. Returns (timed seconds,
+/// whole-session online bytes, score digest).
+fn run_once(coalesce: usize, n_requests: usize) -> (f64, usize, String) {
+    let ds = synth_fraud(SynthOpts::small(600));
+    let (train, test) = ds.split(0.8, 7);
+    let tc = TrainConfig {
+        batch: 128,
+        epochs: 1,
+        lr_override: Some(0.05),
+        ..Default::default()
+    };
+    let trainer = protocols::by_name("spnn-ss").expect("known trainer");
+    let opts = ServeOpts { coalesce, depth: 2 };
+    let h = serve(trainer, &FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2, &opts)
+        .expect("serve session");
+    let rows: Vec<u32> = (0..REQ_ROWS).collect();
+    // warmup request: blocks until training finishes, so the timed window
+    // below measures serving only
+    let _ = h.infer(&[0]).expect("warmup");
+    let t0 = Instant::now();
+    let mut digest = Fnv::new();
+    for _ in 0..n_requests {
+        let scores = h.infer(&rows).expect("infer");
+        for s in &scores {
+            digest.add_bytes(&s.to_bits().to_le_bytes());
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let rep = h.shutdown().expect("shutdown");
+    (secs, rep.online_bytes, format!("{:016x}", digest.0))
+}
+
+fn main() {
+    let mut out = JsonObj::new().str("bench", "serve_throughput").str(
+        "config",
+        "spnn-ss, fraud, 1 epoch, batch 128, 100 Mbps, 2 holders, 96-row requests",
+    );
+    for &coalesce in &[1usize, 16, 64] {
+        // baseline session (same training + warmup, zero timed requests)
+        // isolates the serve traffic by differencing
+        let (_, base_bytes, _) = run_once(coalesce, 0);
+        let n_requests = 2usize;
+        let (secs, total_bytes, digest) = run_once(coalesce, n_requests);
+        let rows_scored = REQ_ROWS as usize * n_requests;
+        let serve_bytes = total_bytes.saturating_sub(base_bytes);
+        let rows_per_sec = rows_scored as f64 / secs.max(1e-9);
+        let bytes_per_row = serve_bytes as f64 / rows_scored as f64;
+        println!(
+            "coalesce {coalesce:>3}: {rows_per_sec:>9.1} rows/s, \
+             {bytes_per_row:>9.1} wire B/row ({rows_scored} rows in {secs:.3}s)"
+        );
+        out = out.obj(
+            &format!("coalesce_{coalesce}"),
+            JsonObj::new()
+                .num("rows_per_sec", rows_per_sec)
+                .num("wire_bytes_per_row", bytes_per_row)
+                .int("serve_online_bytes", serve_bytes as u64)
+                .num("seconds", secs)
+                .int("rows_scored", rows_scored as u64)
+                // score digest is informational: SS truncation noise makes
+                // it batching-dependent (HE/SplitNN scores are not)
+                .str("score_digest", &digest),
+        );
+    }
+    let json = out.render();
+    match std::fs::write("BENCH_serve.json", format!("{json}\n")) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -21,7 +21,9 @@
 //!   session rendezvous and journaled reconnect/resume links, and a
 //!   Unix-socketpair backend, all behind one `Channel` trait, so the same
 //!   roles run in-process or as separate OS processes via `spnn launch` /
-//!   `spnn party`), the MPC
+//!   `spnn party`), the protocol-agnostic forward-pass layer
+//!   ([`protocols::fwd`]) and the private-inference serving runtime built
+//!   on it ([`serve`], `spnn serve` / `spnn infer`), the MPC
 //!   engine ([`smpc`]), a from-scratch [`bignum`]/[`paillier`] stack (with
 //!   plaintext packing, [`paillier::pack`]), the chunked [`exec`] thread
 //!   pool that fans the crypto hot paths out across cores, the PJRT
@@ -52,6 +54,7 @@ pub mod parties;
 pub mod protocols;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod smpc;
 pub mod testutil;
 pub mod transport;

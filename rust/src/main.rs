@@ -7,6 +7,11 @@
 //!             and spawn every role as its own OS process over TCP
 //!   party   — join a hosted session as one role (multi-terminal /
 //!             multi-host deployments)
+//!   serve   — train, then keep the parties resident and answer streaming
+//!             inference requests on a TCP front door (in-process parties
+//!             by default; --launch for one OS process per role)
+//!   infer   — client for `spnn serve`: score rows of the held-out table
+//!             (--local runs an in-process reference serve session)
 //!   repro   — regenerate one (or all) of the paper's tables/figures
 //!   attack  — run the Table 2 property-inference attack standalone
 //!   info    — list loaded AOT artifacts
@@ -21,8 +26,9 @@ use spnn::config::{TrainConfig, TransportKind, DISTRESS, FRAUD};
 use spnn::exp::{self, ExpOpts};
 use spnn::protocols;
 use spnn::runtime::Engine;
+use spnn::serve::{self, ServeOpts};
 use spnn::transport::auth::Psk;
-use spnn::transport::runner::{run_launch, run_party, LaunchOpts};
+use spnn::transport::runner::{run_launch, run_party, run_serve, LaunchOpts};
 use spnn::transport::session::SessionSpec;
 
 type CliError = Box<dyn std::error::Error>;
@@ -54,6 +60,8 @@ fn run(args: &[String]) -> CliResult<()> {
         "train" => cmd_train(&flags),
         "launch" => cmd_launch(&flags),
         "party" => cmd_party(&flags),
+        "serve" => cmd_serve(&flags),
+        "infer" => cmd_infer(&flags),
         "repro" => cmd_repro(&args[1..], &flags),
         "attack" => cmd_attack(&flags),
         "info" => cmd_info(),
@@ -91,6 +99,21 @@ USAGE:
               [--psk-file PATH] [--chaos-kill N]
               join a hosted session as one role (e.g. server, dealer,
               holder0, holder1 — role names come from the protocol)
+  spnn serve  [same training flags as train] [--listen HOST:PORT]
+              [--coalesce N] [--serve-depth D] [--serve-requests N]
+              [--launch [--rendezvous HOST:PORT] [--no-spawn]]
+              train, then stay resident: a TCP front door coalesces
+              inference requests into crypto-amortized batches the
+              trained parties answer; --serve-requests N exits after N
+              requests (smoke tests); --launch runs every role as its
+              own OS process (workers join via `spnn party` as usual)
+  spnn infer  --connect HOST:PORT [--ids 1,2,3 | --count N [--offset K]]
+              | --local [training flags]
+              score rows of the held-out table against a running
+              `spnn serve` (prints the scores and a bit-exact
+              infer_digest); --local trains in this process instead and
+              scores through an in-process serve session (the parity
+              reference the serve smoke test compares against)
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
@@ -164,6 +187,7 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
         holders: flag(flags, "holders", 2usize),
         mbps: flag(flags, "mbps", 100.0),
         tc,
+        serve: None,
     })
 }
 
@@ -251,6 +275,154 @@ fn cmd_party(flags: &HashMap<String, String>) -> CliResult<()> {
         return Err(err("--chaos-kill count must be >= 1 (the kill fires after N frames)".into()));
     }
     run_party(connect, role, bind, psk.as_ref(), chaos_kill)?;
+    Ok(())
+}
+
+/// The serve knobs, defaulting to [`ServeOpts::default`] — one source of
+/// truth shared by `spnn serve` and the `spnn infer --local` parity
+/// reference (divergent defaults would silently break the parity check
+/// for batching-sensitive protocols).
+fn serve_opts_from_flags(flags: &HashMap<String, String>) -> ServeOpts {
+    let d = ServeOpts::default();
+    ServeOpts {
+        coalesce: flag(flags, "coalesce", d.coalesce),
+        depth: flag(flags, "serve-depth", d.depth),
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
+    let mut spec = spec_from_flags(flags)?;
+    let opts = serve_opts_from_flags(flags);
+    spec.serve = Some(opts.clone());
+    let max_requests = flag(flags, "serve-requests", 0usize);
+    let listen = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7450".into());
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| err(format!("bind front door {listen}: {e}")))?;
+    let addr = listener.local_addr().map_err(|e| err(format!("{e}")))?;
+    eprintln!(
+        "spnn serve: training {} on {} ({} rows, {} holders), then serving the \
+         held-out table on {addr} (coalesce {}, depth {}{})",
+        spec.protocol,
+        spec.dataset,
+        spec.rows,
+        spec.holders,
+        opts.coalesce,
+        opts.depth,
+        if max_requests > 0 {
+            format!(", exiting after {max_requests} request(s)")
+        } else {
+            String::new()
+        },
+    );
+    let rep = if flags.contains_key("launch") {
+        // one OS process per role: host the rendezvous here, front door
+        // feeds the coordinator's request queue
+        let (tx, rx) = std::sync::mpsc::channel();
+        let lopts = LaunchOpts {
+            listen: flags
+                .get("rendezvous")
+                .cloned()
+                .unwrap_or_else(|| "127.0.0.1:0".into()),
+            spawn: !flags.contains_key("no-spawn"),
+            chaos: None,
+        };
+        let spec2 = spec.clone();
+        let host = std::thread::spawn(move || run_serve(&spec2, &lopts, rx));
+        serve::frontdoor::run(listener, tx, max_requests)?;
+        host.join().map_err(|_| err("serve host panicked".into()))??
+    } else {
+        // in-process parties over the selected transport
+        let (cfg, train, test) = spec.datasets()?;
+        let trainer = protocols::by_name(&spec.protocol)
+            .ok_or_else(|| err(format!("unknown protocol {:?}", spec.protocol)))?;
+        let handle = serve::serve(
+            trainer,
+            cfg,
+            &spec.tc,
+            spec.link(),
+            &train,
+            &test,
+            spec.holders,
+            &opts,
+        )?;
+        serve::frontdoor::run(listener, handle.sender(), max_requests)?;
+        handle.shutdown()?
+    };
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
+    // rows to score: --ids 1,2,3 or --count N [--offset K]. (`--rows`
+    // stays the dataset-size training flag, so `--local` can combine both.)
+    let rows: Vec<u32> = if let Some(list) = flags.get("ids") {
+        list.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<u32>()
+                    .map_err(|_| err(format!("bad row id {s:?}")))
+            })
+            .collect::<CliResult<_>>()?
+    } else {
+        let count = flag(flags, "count", 16u32);
+        let offset = flag(flags, "offset", 0u32);
+        let end = offset
+            .checked_add(count)
+            .ok_or_else(|| err("--offset + --count overflows the u32 row-id space".into()))?;
+        (offset..end).collect()
+    };
+    let scores = if flags.contains_key("local") {
+        // parity reference: train + serve entirely in this process, same
+        // seeds — must score bit-identically to a remote `spnn serve` of
+        // the same config (the serve-smoke CI job asserts it)
+        let spec = spec_from_flags(flags)?;
+        let opts = serve_opts_from_flags(flags);
+        let (cfg, train, test) = spec.datasets()?;
+        let trainer = protocols::by_name(&spec.protocol)
+            .ok_or_else(|| err(format!("unknown protocol {:?}", spec.protocol)))?;
+        eprintln!(
+            "spnn infer --local: training {} in-process, then scoring {} row(s)",
+            spec.protocol,
+            rows.len()
+        );
+        let h = serve::serve(
+            trainer,
+            cfg,
+            &spec.tc,
+            spec.link(),
+            &train,
+            &test,
+            spec.holders,
+            &opts,
+        )?;
+        let scores = h.infer(&rows)?;
+        let rep = h.shutdown()?;
+        println!("weight_digest=0x{:016x}", rep.weight_digest);
+        scores
+    } else {
+        let connect = flags
+            .get("connect")
+            .ok_or_else(|| err("infer needs --connect HOST:PORT (or --local)".into()))?;
+        let timeout = std::time::Duration::from_secs(flag(flags, "connect-timeout", 30u64));
+        serve::frontdoor::infer_once(connect, &rows, timeout)?
+    };
+    if scores.len() <= 32 {
+        for (r, s) in rows.iter().zip(&scores) {
+            println!("row {r}: {s:.6}");
+        }
+    } else {
+        println!("{} scores (first 4: {:?})", scores.len(), &scores[..4]);
+    }
+    // bit-exact digest over the score stream (scripted parity checks)
+    let mut f = spnn::protocols::common::Fnv::new();
+    for s in &scores {
+        f.add_bytes(&s.to_bits().to_le_bytes());
+    }
+    println!("infer_digest=0x{:016x}", f.0);
     Ok(())
 }
 

@@ -34,6 +34,13 @@ pub enum Payload {
     Bits(Vec<u64>),
     /// Control messages (coordinator orders, acks).
     Control(String),
+    /// Serving: one coalesced inference batch — row ids into the parties'
+    /// aligned private feature tables (the serve coordinator broadcasts
+    /// these, tagged with the batch index; see [`crate::serve`]).
+    InferReq(Vec<u32>),
+    /// Serving: the scoring party's reply — one probability per requested
+    /// row, in request order, tagged with the batch index.
+    InferResp(Vec<f32>),
 }
 
 impl Payload {
@@ -64,6 +71,8 @@ impl Payload {
             Payload::Seed(_) => 32,
             Payload::Bits(v) => v.len() * 8,
             Payload::Control(s) => s.len(),
+            Payload::InferReq(v) => v.len() * 4,
+            Payload::InferResp(v) => v.len() * 4,
         }
     }
 
@@ -147,6 +156,24 @@ impl Payload {
         }
     }
 
+    pub fn into_infer_req(self) -> crate::Result<Vec<u32>> {
+        match self {
+            Payload::InferReq(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected InferReq, got {}", other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_infer_resp(self) -> crate::Result<Vec<f32>> {
+        match self {
+            Payload::InferResp(v) => Ok(v),
+            other => Err(crate::Error::Protocol(format!(
+                "expected InferResp, got {}", other.kind()
+            ))),
+        }
+    }
+
     pub fn kind(&self) -> &'static str {
         match self {
             Payload::U64s(_) => "U64s",
@@ -157,6 +184,8 @@ impl Payload {
             Payload::Seed(_) => "Seed",
             Payload::Bits(_) => "Bits",
             Payload::Control(_) => "Control",
+            Payload::InferReq(_) => "InferReq",
+            Payload::InferResp(_) => "InferResp",
         }
     }
 }
@@ -173,6 +202,8 @@ mod tests {
         assert_eq!(Payload::Seed([0; 32]).wire_bytes(), 32);
         assert_eq!(Payload::Bits(vec![0; 4]).wire_bytes(), 32);
         assert_eq!(Payload::Control("go".into()).wire_bytes(), 2);
+        assert_eq!(Payload::InferReq(vec![0; 6]).wire_bytes(), 24);
+        assert_eq!(Payload::InferResp(vec![0.0; 6]).wire_bytes(), 24);
     }
 
     #[test]
@@ -202,6 +233,10 @@ mod tests {
     fn unwrap_helpers_enforce_variant() {
         assert!(Payload::U64s(vec![1]).into_u64s().is_ok());
         assert!(Payload::U64s(vec![1]).into_f32s().is_err());
+        assert_eq!(Payload::InferReq(vec![3, 9]).into_infer_req().unwrap(), vec![3, 9]);
+        assert!(Payload::InferReq(vec![3]).into_infer_resp().is_err());
+        assert_eq!(Payload::InferResp(vec![0.5]).into_infer_resp().unwrap(), vec![0.5]);
+        assert!(Payload::InferResp(vec![0.5]).into_infer_req().is_err());
         assert!(Payload::Control("x".into()).into_control().is_ok());
         assert!(Payload::Seed([1; 32]).into_seed().is_ok());
         let blk = Payload::CipherBlock { data: vec![7; 12], ct_bytes: 4, count: 3 };

@@ -66,6 +66,24 @@ impl BatchCtx {
     }
 }
 
+/// Batch boundaries shared by every party (deterministic schedule): the
+/// row stream `0..n` cut into `(start, rows)` pieces of at most `batch`
+/// rows. Handles ragged tails uniformly — when `n % batch != 0` the final
+/// entry simply carries the remainder (never an empty or oversized batch),
+/// so both the train loops and the serve runtime's request coalescing
+/// (`crate::serve`) run the same plan for any `n`.
+pub fn batch_plan(n: usize, batch: usize) -> Vec<(usize, usize)> {
+    let batch = batch.max(1);
+    let mut out = Vec::new();
+    let mut s = 0;
+    while s < n {
+        let rows = batch.min(n - s);
+        out.push((s, rows));
+        s += rows;
+    }
+    out
+}
+
 /// Drive one party's per-epoch batch loop with up to `depth` mini-batches
 /// in flight.
 ///
@@ -303,6 +321,10 @@ pub struct TrainReport {
     /// Bit-exact digest of the final model weights — equal digests mean
     /// transcript-equal training (used by the pipeline-depth tests).
     pub weight_digest: u64,
+    /// The assembled final parameter blocks (same naming as the parties'
+    /// `PartyOut::params`), so callers can run reference forward passes on
+    /// the trained weights (the serve parity tests do).
+    pub params: Vec<(String, Vec<f64>)>,
     /// Wall-clock seconds for the whole run (this harness, not the paper's).
     pub wall_seconds: f64,
 }
@@ -329,10 +351,55 @@ impl TrainReport {
     }
 }
 
+impl TrainReport {
+    /// Look up an assembled final-parameter block by name.
+    pub fn param(&self, name: &str) -> Option<&[f64]> {
+        self.params.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::FRAUD;
+    use crate::rng::{Pcg64, Rng64};
+
+    #[test]
+    fn batch_plan_covers_everything() {
+        assert_eq!(batch_plan(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(batch_plan(4, 4), vec![(0, 4)]);
+        assert_eq!(batch_plan(3, 10), vec![(0, 3)]);
+        assert!(batch_plan(0, 4).is_empty());
+        // batch 0 coerces to 1 instead of looping forever
+        assert_eq!(batch_plan(2, 0), vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn batch_plan_properties() {
+        // property sweep: exact cover, contiguity, no empty batches, every
+        // batch but the last full, expected batch count
+        let mut rng = Pcg64::seed_from_u64(42);
+        for _ in 0..300 {
+            let n = (rng.next_u64() % 5000) as usize + 1;
+            let batch = (rng.next_u64() % 600) as usize + 1;
+            let plan = batch_plan(n, batch);
+            let mut cursor = 0usize;
+            for &(s, rows) in &plan {
+                assert_eq!(s, cursor, "gap or overlap at n={n} batch={batch}");
+                assert!(rows >= 1, "empty batch at n={n} batch={batch}");
+                assert!(rows <= batch, "oversized batch at n={n} batch={batch}");
+                cursor += rows;
+            }
+            assert_eq!(cursor, n, "plan does not cover n={n} batch={batch}");
+            for &(_, rows) in &plan[..plan.len() - 1] {
+                assert_eq!(rows, batch, "non-final partial batch n={n} batch={batch}");
+            }
+            assert_eq!(plan.len(), n.div_ceil(batch));
+            // last batch is the remainder (or a full batch)
+            let want_last = if n % batch == 0 { batch } else { n % batch };
+            assert_eq!(plan.last().unwrap().1, want_last);
+        }
+    }
 
     #[test]
     fn pipeline_depth1_is_lockstep() {

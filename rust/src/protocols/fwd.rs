@@ -1,0 +1,1728 @@
+//! The protocol-agnostic **forward-pass layer**: every trainer's per-batch
+//! forward computation, factored out of the train loops so the same code
+//! serves predictions after training (`crate::serve`).
+//!
+//! # Why a separate layer
+//!
+//! SPNN's deployment story is *inference on isolated private features*
+//! (fraud scoring): train once, then answer a stream of prediction
+//! requests while every party keeps its inputs private. Before this
+//! module, each protocol's forward math lived welded inside its
+//! monolithic train loop; the pieces here are the exact same computations
+//! — the train loops in [`super::spnn`], [`super::secureml`] and
+//! [`super::splitnn`] now call them, so there is no duplicated math and
+//! the trained weight digests are bit-identical to the pre-refactor code
+//! (guarded by the `*_transports_are_transcript_equal` and
+//! `*_depths_are_transcript_equal` tests).
+//!
+//! # Shape
+//!
+//! Each (protocol, role) pair gets a forward **state machine** owning the
+//! role's long-lived forward state — keys, packing geometry, nonce pools,
+//! dealer feeds, mask RNGs, engines, and the weights themselves (training
+//! mutates them through the struct between batches; serving reads them):
+//!
+//! | protocol | holder side | server side | scoring role |
+//! |---|---|---|---|
+//! | SPNN-SS / SPNN-HE | [`SpnnHolderFwd`] (Alg. 2 / Alg. 3) | [`SpnnServerFwd`] | holder A via [`SpnnHeadFwd`] |
+//! | SecureML | [`MlpMpcFwd`] (A/B), [`MlpExtraFwd`] (extra holders) | — (no server) | party A (opens `p`) |
+//! | SplitNN | [`SplitHolderFwd`] | [`SplitServerFwd`] | the server (owns the head) |
+//!
+//! The [`ForwardPass`] trait is the uniform surface the serve runtime
+//! drives (`prefetch` / `forward` mirror the train pipeline's
+//! value-independent vs critical-path split); its impls delegate to the
+//! same inherent methods the train loops call.
+//!
+//! Batch inputs come from a [`FeatureSource`]: contiguous mini-batch
+//! slices of the training matrix while training, gathered request rows of
+//! the held-out table while serving — the math downstream is identical.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::common::{BatchCtx, ModelParams, TrainReport};
+use crate::config::{Act, ModelConfig, TrainConfig};
+use crate::data::{Dataset, VerticalSplit};
+use crate::exec::{self, ExecPool};
+use crate::netsim::Payload;
+use crate::nn::MatF64;
+use crate::paillier::pack::{self, Packing};
+use crate::paillier::{NoncePool, PublicKey, SecretKey};
+use crate::parties::ids;
+use crate::rng::ChaChaRng;
+use crate::runtime::{Engine, TensorIn};
+use crate::smpc::dealer::{self, DealerFeed, Material, Req};
+use crate::smpc::matmul::{beaver_mul_elem, native_mm, ElemTriple};
+use crate::smpc::{
+    beaver_matmul, share2_from_mask, trunc_share_mat, MatTriple, RingMat,
+};
+use crate::transport::Channel;
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// The protocol-agnostic surface
+// ---------------------------------------------------------------------------
+
+/// One role's slice of a protocol forward pass, drivable batch-by-batch.
+///
+/// Training calls the impls' inherent methods (which return the richer
+/// per-role products the backward pass needs); the serve runtime drives
+/// this uniform surface. Both paths execute the identical math.
+pub trait ForwardPass {
+    /// Role label for diagnostics.
+    fn role(&self) -> &'static str;
+
+    /// Stage the gathered request rows for an announced batch (holders
+    /// resolve them against their private feature tables; roles without
+    /// private features ignore them).
+    fn stage_rows(&mut self, _index: u64, _ids: &[u32]) {}
+
+    /// Value-independent lookahead work for batch `b` — the `Prefetch`
+    /// stage of the train pipeline, reused verbatim while serving
+    /// (Paillier nonce exponentiations, dealer requests, share masks,
+    /// input encodes).
+    fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()>;
+
+    /// Run this role's critical-path forward for batch `b`. The scoring
+    /// role returns the per-row probabilities; every other role returns
+    /// `None` after playing its part.
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>>;
+}
+
+// ---------------------------------------------------------------------------
+// Feature sources
+// ---------------------------------------------------------------------------
+
+/// Where a holder's per-batch feature block comes from.
+///
+/// Both variants hold the party's **private vertical slice** (row-major,
+/// `d` columns); they differ only in how a [`BatchCtx`] selects rows.
+pub enum FeatureSource {
+    /// Contiguous mini-batches of the training matrix: batch `b` covers
+    /// rows `b.start .. b.start + b.rows` (the train loops).
+    Slice {
+        /// The slice data, row-major.
+        x: Vec<f32>,
+        /// Columns per row.
+        d: usize,
+    },
+    /// Gathered request rows keyed by batch index (the serve runtime):
+    /// [`FeatureSource::stage`] parks each announced batch's row ids, and
+    /// the first [`FeatureSource::block`] call for that batch gathers
+    /// them.
+    Gather {
+        /// The full held-out table slice, row-major.
+        x: Vec<f32>,
+        /// Columns per row.
+        d: usize,
+        /// Announced-but-unconsumed row ids per batch index.
+        staged: HashMap<u64, Vec<u32>>,
+    },
+}
+
+impl FeatureSource {
+    /// Training source: contiguous mini-batches of `x`.
+    pub fn slice(x: Vec<f32>, d: usize) -> Self {
+        FeatureSource::Slice { x, d }
+    }
+
+    /// Serving source: per-batch gathered rows of `x`.
+    pub fn gather(x: Vec<f32>, d: usize) -> Self {
+        FeatureSource::Gather { x, d, staged: HashMap::new() }
+    }
+
+    /// Columns per row.
+    pub fn width(&self) -> usize {
+        match self {
+            FeatureSource::Slice { d, .. } | FeatureSource::Gather { d, .. } => *d,
+        }
+    }
+
+    /// Park the row ids of an announced batch (gather mode; no-op for
+    /// slice mode).
+    pub fn stage(&mut self, index: u64, ids: &[u32]) {
+        if let FeatureSource::Gather { staged, .. } = self {
+            staged.insert(index, ids.to_vec());
+        }
+    }
+
+    /// The feature block for batch `b` (consumed once per batch).
+    pub fn block(&mut self, b: &BatchCtx) -> Result<MatF64> {
+        match self {
+            FeatureSource::Slice { x, d } => {
+                let (s, rows) = (b.start, b.rows);
+                if (s + rows) * *d > x.len() {
+                    return Err(Error::Protocol(format!(
+                        "feature source: batch rows {s}..{} beyond the table",
+                        s + rows
+                    )));
+                }
+                Ok(MatF64::from_f32(rows, *d, &x[s * *d..(s + rows) * *d]))
+            }
+            FeatureSource::Gather { x, d, staged } => {
+                let ids = staged.remove(&(b.index as u64)).ok_or_else(|| {
+                    Error::Protocol(format!(
+                        "feature source: batch {} has no staged rows",
+                        b.index
+                    ))
+                })?;
+                if ids.len() != b.rows {
+                    return Err(Error::Protocol(format!(
+                        "feature source: staged {} row(s) for a {}-row batch",
+                        ids.len(),
+                        b.rows
+                    )));
+                }
+                let n = x.len() / *d;
+                let mut out = Vec::with_capacity(ids.len() * *d);
+                for &id in &ids {
+                    let id = id as usize;
+                    if id >= n {
+                        return Err(Error::Protocol(format!(
+                            "feature source: row {id} out of range (table has {n} rows)"
+                        )));
+                    }
+                    out.extend_from_slice(&x[id * *d..(id + 1) * *d]);
+                }
+                Ok(MatF64::from_f32(b.rows, *d, &out))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SPNN holder (Algorithms 2 and 3)
+// ---------------------------------------------------------------------------
+
+/// Value-independent SS material staged by the `Prefetch` step: the encoded
+/// feature block and the pre-drawn share masks (drawn in schedule order, so
+/// the RNG transcript is depth-invariant).
+struct SsPre {
+    xblk: MatF64,
+    x_ring: RingMat,
+    r_x: RingMat,
+    r_t: RingMat,
+}
+
+/// Variant-specific holder state.
+enum HolderMode {
+    /// Algorithm 3: Paillier chain (packed + pool-parallel).
+    He { pk: PublicKey, pool: NoncePool, packing: Packing },
+    /// Algorithm 2: arithmetic sharing + one Beaver matmul on A/B.
+    Ss {
+        pre: VecDeque<SsPre>,
+        /// A-side opportunistic dealer feed (triples expand inside the
+        /// prefetch window — the SecureML `DealerFeed` pattern extended
+        /// to SPNN-SS's A role).
+        feed: Option<DealerFeed>,
+        /// Ring-matmul engine (compute holders A and B only).
+        engine: Option<Engine>,
+        ring_art: String,
+    },
+}
+
+/// Holder `j`'s private-feature forward (paper §4.3): jointly compute
+/// `h1 = X·theta0` without revealing `X` or `theta0`, via SS (Algorithm 2)
+/// or HE (Algorithm 3). Owns this holder's `theta` block — training's
+/// backward pass updates it in place between batches.
+pub struct SpnnHolderFwd {
+    /// Holder index (0 = A, the label holder).
+    pub j: usize,
+    /// Where per-batch feature blocks come from (swapped to a gather
+    /// source over the held-out table when serving starts).
+    pub src: FeatureSource,
+    /// This holder's rows of `theta0` (trained in place).
+    pub theta: MatF64,
+    n_holders: usize,
+    split: VerticalSplit,
+    h: usize,
+    total_d: usize,
+    rng: ChaChaRng,
+    exec: ExecPool,
+    mode: HolderMode,
+}
+
+impl SpnnHolderFwd {
+    #[allow(clippy::too_many_arguments)]
+    fn base(
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        j: usize,
+        n_holders: usize,
+        split: VerticalSplit,
+        src: FeatureSource,
+        theta: MatF64,
+        mode: HolderMode,
+    ) -> Self {
+        SpnnHolderFwd {
+            j,
+            src,
+            theta,
+            n_holders,
+            split,
+            h: cfg.h1_dim,
+            total_d: cfg.n_features,
+            rng: ChaChaRng::seed_from_u64(tc.seed ^ (0x401d + j as u64)),
+            exec: exec::pool(),
+            mode,
+        }
+    }
+
+    /// Algorithm 2 holder. A and B (j 0/1) carry the Beaver engine; A also
+    /// runs the opportunistic dealer feed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_ss(
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        j: usize,
+        n_holders: usize,
+        split: VerticalSplit,
+        src: FeatureSource,
+        theta: MatF64,
+    ) -> Result<Self> {
+        let engine = if j <= 1 { Some(Engine::load_default()?) } else { None };
+        let cap = ModelConfig::pick_batch(tc.batch);
+        let ring_art = cfg.artifact("ring_matmul", cap);
+        let feed = if j == 0 { Some(DealerFeed::new(ids::DEALER)) } else { None };
+        let mode = HolderMode::Ss { pre: VecDeque::new(), feed, engine, ring_art };
+        Ok(Self::base(cfg, tc, j, n_holders, split, src, theta, mode))
+    }
+
+    /// Algorithm 3 holder: `pk` is the server's broadcast public key; the
+    /// packing geometry is re-derived locally (nothing extra travels).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_he(
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        j: usize,
+        n_holders: usize,
+        split: VerticalSplit,
+        src: FeatureSource,
+        theta: MatF64,
+        pk: PublicKey,
+    ) -> Result<Self> {
+        let pool = NoncePool::new(&pk, tc.paillier_short_exp);
+        let packing = Packing::new(&pk, tc.slot_bits, n_holders)?;
+        let mode = HolderMode::He { pk, pool, packing };
+        Ok(Self::base(cfg, tc, j, n_holders, split, src, theta, mode))
+    }
+
+    /// `Step::Prefetch` body: HE refills the Paillier nonce pool for this
+    /// batch (the dominant, value-independent holder cost); SS encodes the
+    /// feature block, pre-draws the share masks, and (on A) fires the
+    /// dealer triple request and pumps already-landed replies so triple
+    /// expansion runs inside the prefetch window.
+    pub fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        p.set_stage("prefetch");
+        let rows = b.rows;
+        let h = self.h;
+        let total_d = self.total_d;
+        let exec = self.exec;
+        let Self { mode, src, rng, .. } = self;
+        match mode {
+            HolderMode::He { pool, packing, .. } => {
+                let n_cts = packing.ct_count(rows * h);
+                pool.refill_parallel(rng, n_cts, &exec);
+            }
+            HolderMode::Ss { pre, feed, .. } => {
+                let xblk = src.block(b)?;
+                let dj = xblk.cols;
+                let x_ring = RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
+                let r_x = RingMat::random(rng, rows, dj);
+                let r_t = RingMat::random(rng, dj, h);
+                if let Some(feed) = feed.as_mut() {
+                    feed.request(p, Req::Mat(rows, total_d, h), b.tag())?;
+                    feed.pump(p)?;
+                }
+                pre.push_back(SsPre { xblk, x_ring, r_x, r_t });
+            }
+        }
+        Ok(())
+    }
+
+    /// `Step::Submit` body: the Algorithm 2 / Algorithm 3 private-feature
+    /// forward, up to this holder's last send (product shares or the
+    /// ciphertext-chain hop toward the server). Returns the plaintext
+    /// feature block — training's local first-layer backward needs it.
+    pub fn submit(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<MatF64> {
+        let rows = b.rows;
+        let tag = b.tag();
+        let j = self.j;
+        let n_holders = self.n_holders;
+        let h = self.h;
+        let total_d = self.total_d;
+        let exec = self.exec;
+        let Self { mode, src, theta, split, .. } = self;
+        match mode {
+            HolderMode::He { pk, pool, packing } => {
+                // ---- Algorithm 3 (packed + pool-parallel) ----
+                p.set_stage("he-chain");
+                let xblk = src.block(b)?;
+                // local plaintext product, fixed-point encoded and packed
+                // `slots` values per Paillier plaintext
+                let prod = xblk.matmul(theta); // rows x h
+                let vals: Vec<i64> = prod
+                    .data
+                    .iter()
+                    .map(|&v| crate::fixed::encode(v) as i64)
+                    .collect();
+                let n_cts = packing.ct_count(vals.len());
+                let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
+                let out_cts = if j == 0 {
+                    mine
+                } else {
+                    // running ciphertext sum from holder j-1
+                    let (data, ct_bytes, count) = p
+                        .recv_tagged(ids::holder(j - 1), tag)?
+                        .into_cipher_block()?;
+                    if count != n_cts {
+                        return Err(Error::Protocol(format!(
+                            "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
+                        )));
+                    }
+                    let prev = pack::block_to_cts(&data, ct_bytes, count)?;
+                    pack::add_batch(pk, &prev, &mine, &exec)?
+                };
+                let next =
+                    if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
+                let ct_bytes = pk.ciphertext_bytes();
+                let data = pack::cts_to_block(&out_cts, ct_bytes);
+                p.send_tagged(
+                    next,
+                    tag,
+                    Payload::CipherBlock { data, ct_bytes, count: n_cts },
+                )?;
+                Ok(xblk)
+            }
+            HolderMode::Ss { pre, feed, engine, ring_art } => {
+                // ---- Algorithm 2 ----
+                p.set_stage("share-mm");
+                let SsPre { xblk, x_ring, r_x, r_t } =
+                    pre.pop_front().expect("prefetch before submit");
+                let dj = xblk.cols;
+                let is_a = j == 0;
+                let is_b = j == 1;
+                let role: u8 = if is_a { 0 } else { 1 };
+                let peer = if is_a { ids::holder(1) } else { ids::holder(0) };
+                let t_ring = RingMat::encode_f64_with(&exec, dj, h, &theta.data);
+                if is_a || is_b {
+                    // 1) own block shares (masks pre-drawn)
+                    let (x_mine, x_theirs) = share2_from_mask(&x_ring, r_x);
+                    let (t_mine, t_theirs) = share2_from_mask(&t_ring, r_t);
+                    let mut buf = x_theirs.data;
+                    buf.extend_from_slice(&t_theirs.data);
+                    p.send_tagged(peer, tag, Payload::U64s(buf))?;
+                    let theirs = p.recv_tagged(peer, tag)?.into_u64s()?;
+                    let dpeer = split.width(if is_a { 1 } else { 0 });
+                    if theirs.len() != rows * dpeer + dpeer * h {
+                        return Err(Error::Protocol("holder: peer share size".into()));
+                    }
+                    let x_peer =
+                        RingMat::from_data(rows, dpeer, theirs[..rows * dpeer].to_vec());
+                    let t_peer =
+                        RingMat::from_data(dpeer, h, theirs[rows * dpeer..].to_vec());
+
+                    // 2) shares of the extra holders' blocks (j >= 2)
+                    let mut x_parts: Vec<(usize, RingMat)> = vec![
+                        (j, x_mine),
+                        (if is_a { 1 } else { 0 }, x_peer),
+                    ];
+                    let mut t_parts: Vec<(usize, RingMat)> = vec![
+                        (j, t_mine),
+                        (if is_a { 1 } else { 0 }, t_peer),
+                    ];
+                    for extra in 2..n_holders {
+                        let dx = split.width(extra);
+                        let buf =
+                            p.recv_tagged(ids::holder(extra), tag)?.into_u64s()?;
+                        if buf.len() != rows * dx + dx * h {
+                            return Err(Error::Protocol(
+                                "holder: extra share size".into(),
+                            ));
+                        }
+                        x_parts.push((
+                            extra,
+                            RingMat::from_data(rows, dx, buf[..rows * dx].to_vec()),
+                        ));
+                        t_parts.push((
+                            extra,
+                            RingMat::from_data(dx, h, buf[rows * dx..].to_vec()),
+                        ));
+                    }
+                    // concat in holder order (theta rows stack the same)
+                    x_parts.sort_by_key(|(i, _)| *i);
+                    t_parts.sort_by_key(|(i, _)| *i);
+                    let mut x_share = x_parts.remove(0).1;
+                    for (_, m) in x_parts {
+                        x_share = x_share.concat_cols(&m);
+                    }
+                    let mut t_share = t_parts.remove(0).1;
+                    for (_, m) in t_parts {
+                        t_share = t_share.concat_rows(&m);
+                    }
+                    debug_assert_eq!(x_share.shape(), (rows, total_d));
+                    debug_assert_eq!(t_share.shape(), (total_d, h));
+
+                    // 3) triple (requested at prefetch; A consumes its
+                    // possibly pre-expanded feed material, B expands its
+                    // seed at point of use) + Beaver matmul through the
+                    // Pallas kernel
+                    let triple = match feed.as_mut() {
+                        Some(feed) => match feed.next(p, tag)? {
+                            Material::Mat(t)
+                                if t.u.shape() == (rows, total_d)
+                                    && t.v.shape() == (total_d, h) =>
+                            {
+                                t
+                            }
+                            Material::Mat(t) => {
+                                return Err(Error::Protocol(format!(
+                                    "dealer feed shape drift: wanted \
+                                     ({rows},{total_d})x({total_d},{h}), got {:?}x{:?}",
+                                    t.u.shape(),
+                                    t.v.shape()
+                                )))
+                            }
+                            _ => {
+                                return Err(Error::Protocol(
+                                    "dealer feed kind drift: wanted Mat".into(),
+                                ))
+                            }
+                        },
+                        None => dealer::recv_mat_triple_b_tagged(
+                            p, ids::DEALER, rows, total_d, h, tag,
+                        )?,
+                    };
+                    let eng = engine.as_mut().unwrap();
+                    // engine is behind &mut — wrap in RefCell for the closure
+                    let eng_cell = std::cell::RefCell::new(eng);
+                    let art = ring_art.clone();
+                    // the AOT Pallas kernel is the default hot path; the
+                    // §Perf pass measured a 3.5-5.5x interpret-mode CPU
+                    // overhead vs the native ring matmul, selectable via
+                    // SPNN_NATIVE_MM=1 (EXPERIMENTS.md §Perf)
+                    let native = std::env::var("SPNN_NATIVE_MM").is_ok();
+                    let mm = move |x: &RingMat, w: &RingMat| -> RingMat {
+                        if native {
+                            x.matmul(w)
+                        } else {
+                            eng_cell
+                                .borrow_mut()
+                                .ring_matmul(&art, x, w)
+                                .expect("ring matmul artifact")
+                        }
+                    };
+                    let mut z = beaver_matmul(
+                        p, peer, role, &x_share, &t_share, &triple, &mm,
+                    )?;
+                    // 4) truncate my share, ship to the server
+                    trunc_share_mat(&mut z, role);
+                    p.send_tagged(ids::SERVER, tag, Payload::U64s(z.data))?;
+                } else {
+                    // extra holder: share my block to A and B
+                    let (xa, xb) = share2_from_mask(&x_ring, r_x);
+                    let (ta, tb) = share2_from_mask(&t_ring, r_t);
+                    let mut buf_a = xa.data;
+                    buf_a.extend_from_slice(&ta.data);
+                    p.send_tagged(ids::holder(0), tag, Payload::U64s(buf_a))?;
+                    let mut buf_b = xb.data;
+                    buf_b.extend_from_slice(&tb.data);
+                    p.send_tagged(ids::holder(1), tag, Payload::U64s(buf_b))?;
+                }
+                Ok(xblk)
+            }
+        }
+    }
+}
+
+impl ForwardPass for SpnnHolderFwd {
+    fn role(&self) -> &'static str {
+        "spnn-holder"
+    }
+
+    fn stage_rows(&mut self, index: u64, ids: &[u32]) {
+        self.src.stage(index, ids);
+    }
+
+    fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        SpnnHolderFwd::prefetch(self, p, b)
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        self.submit(p, b)?;
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SPNN server
+// ---------------------------------------------------------------------------
+
+/// The server's hidden-layer forward (paper §4.4): reconstruct `h1` from
+/// the holders' contributions (decrypt the packed Paillier chain or sum
+/// the truncated product shares), run the AOT `server_fwd` graph, and ship
+/// `hL` to the label holder. Owns the server parameter stack (trained in
+/// place) and — under HE — the Paillier secret key.
+pub struct SpnnServerFwd {
+    /// The server's hidden-stack parameters (trained in place).
+    pub params: ModelParams,
+    /// The AOT/native graph engine (training's backward uses it too).
+    pub engine: Engine,
+    sk: Option<SecretKey>,
+    packing: Option<Packing>,
+    n_holders: usize,
+    cap: usize,
+    h1_dim: usize,
+    hl_dim: usize,
+    cfg: ModelConfig,
+    exec: ExecPool,
+}
+
+impl SpnnServerFwd {
+    /// `sk` is the Paillier keypair's secret half under HE (`None` = SS);
+    /// the packing geometry is derived from it exactly as the holders
+    /// derive theirs from the broadcast public key.
+    pub fn new(
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        params: ModelParams,
+        sk: Option<SecretKey>,
+        n_holders: usize,
+    ) -> Result<Self> {
+        let packing = match &sk {
+            Some(sk) => Some(Packing::new(&sk.pk, tc.slot_bits, n_holders)?),
+            None => None,
+        };
+        Ok(SpnnServerFwd {
+            params,
+            engine: Engine::load_default()?,
+            sk,
+            packing,
+            n_holders,
+            cap: ModelConfig::pick_batch(tc.batch),
+            h1_dim: cfg.h1_dim,
+            hl_dim: cfg.hl_dim(),
+            cfg: cfg.clone(),
+            exec: exec::pool(),
+        })
+    }
+
+    /// The server's per-batch forward: receive/reconstruct `h1`, run the
+    /// hidden stack, send `hL` (real rows only) to the label holder.
+    /// Returns the padded `h1` block — training's backward needs it.
+    pub fn run(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Vec<f32>> {
+        let rows = b.rows;
+        let tag = b.tag();
+        p.set_stage("server-fwd");
+        if rows > self.cap {
+            // a ragged/oversized batch must fail loudly, not panic mid-copy
+            return Err(Error::Protocol(format!(
+                "server: batch of {rows} rows exceeds the artifact cap {}",
+                self.cap
+            )));
+        }
+        let a = ids::holder(0);
+        // ---- receive h1 (reconstruct from shares or decrypt) ----
+        let h1_f32: Vec<f32> = if let Some(sk) = self.sk.as_ref() {
+            let packing = self.packing.as_ref().unwrap();
+            let last_holder = ids::holder(self.n_holders - 1);
+            let (data, ct_bytes, count) =
+                p.recv_tagged(last_holder, tag)?.into_cipher_block()?;
+            let expect = packing.ct_count(rows * self.h1_dim);
+            if count != expect {
+                return Err(Error::Protocol(format!(
+                    "server: expected {expect} packed ciphertexts, got {count}"
+                )));
+            }
+            let cts = pack::block_to_cts(&data, ct_bytes, count)?;
+            // parallel CRT decryptions, then per-slot k-holder sums
+            let sums = pack::decrypt_batch(
+                sk,
+                packing,
+                &cts,
+                rows * self.h1_dim,
+                self.n_holders,
+                &self.exec,
+            )?;
+            sums.iter().map(|&s| crate::fixed::decode(s as u64) as f32).collect()
+        } else {
+            let sa = p.recv_tagged(a, tag)?.into_u64s()?;
+            let sb = p.recv_tagged(ids::holder(1), tag)?.into_u64s()?;
+            if sa.len() != rows * self.h1_dim || sb.len() != sa.len() {
+                return Err(Error::Protocol("server: h1 share size".into()));
+            }
+            sa.iter()
+                .zip(&sb)
+                .map(|(x, y)| crate::fixed::decode(x.wrapping_add(*y)) as f32)
+                .collect()
+        };
+
+        // ---- forward through the hidden stack (AOT graph) ----
+        let mut h1_pad = vec![0.0f32; self.cap * self.h1_dim];
+        h1_pad[..rows * self.h1_dim].copy_from_slice(&h1_f32);
+        let server_f32 = self.params.server_f32();
+        let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+        for sp in &server_f32 {
+            inputs.push(TensorIn::F32(sp));
+        }
+        let hl = self
+            .engine
+            .execute(&self.cfg.artifact("server_fwd", self.cap), &inputs)?
+            .remove(0)
+            .f32()?;
+        // send hL (only the real rows) to the label holder
+        p.send_tagged(a, tag, Payload::F32s(hl[..rows * self.hl_dim].to_vec()))?;
+        Ok(h1_pad)
+    }
+}
+
+impl ForwardPass for SpnnServerFwd {
+    fn role(&self) -> &'static str {
+        "spnn-server"
+    }
+
+    fn prefetch(&mut self, _p: &mut dyn Channel, _b: &BatchCtx) -> Result<()> {
+        // the server has no value-independent lookahead work: its entire
+        // per-batch load depends on the holders' h1
+        Ok(())
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        self.run(p, b)?;
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Label-layer scoring (shared by every scoring role + the direct forwards)
+// ---------------------------------------------------------------------------
+
+/// Run the forward-only `label_fwd(hL, wy, by)` graph at `cap` padding and
+/// slice the `rows` real scores.
+fn label_scores(
+    engine: &mut Engine,
+    cfg: &ModelConfig,
+    cap: usize,
+    hl_pad: &[f32],
+    wy: &[f32],
+    by: &[f32],
+    rows: usize,
+) -> Result<Vec<f32>> {
+    let outs = engine.execute(
+        &cfg.artifact("label_fwd", cap),
+        &[TensorIn::F32(hl_pad), TensorIn::F32(wy), TensorIn::F32(by)],
+    )?;
+    let p = outs
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Protocol("label_fwd: missing output".into()))?
+        .f32()?;
+    Ok(p[..rows].to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// SPNN label head (holder A)
+// ---------------------------------------------------------------------------
+
+/// Holder A's label layer (paper §4.5). Training receives `hL` through
+/// [`SpnnHeadFwd::recv_hidden`] and runs the `label_grad` graph (loss +
+/// gradients); serving runs the forward-only `label_fwd` graph via
+/// [`SpnnHeadFwd::score`]. Owns the label-layer parameters (trained in
+/// place).
+pub struct SpnnHeadFwd {
+    /// Label-layer weights (trained in place).
+    pub wy: MatF64,
+    /// Label-layer bias (trained in place).
+    pub by: MatF64,
+    /// Graph engine for `label_grad` / `label_fwd`.
+    pub engine: Engine,
+    cap: usize,
+    hl_dim: usize,
+    cfg: ModelConfig,
+}
+
+impl SpnnHeadFwd {
+    /// Paper-style label-layer initialization from the shared seed.
+    pub fn new(cfg: &ModelConfig, tc: &TrainConfig) -> Result<Self> {
+        let init = ModelParams::init(cfg, tc.seed);
+        Ok(SpnnHeadFwd {
+            wy: init.wy,
+            by: init.by,
+            engine: Engine::load_default()?,
+            cap: ModelConfig::pick_batch(tc.batch),
+            hl_dim: cfg.hl_dim(),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// The artifact batch cap (padding width).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Receive batch `b`'s `hL` rows from the server, zero-padded to the
+    /// artifact cap (the receive both training and serving start from).
+    pub fn recv_hidden(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Vec<f32>> {
+        let hl = p.recv_tagged(ids::SERVER, b.tag())?.into_f32s()?;
+        if b.rows > self.cap || hl.len() != b.rows * self.hl_dim {
+            return Err(Error::Protocol(format!(
+                "holder: hL block of {} values for {} rows (cap {})",
+                hl.len(),
+                b.rows,
+                self.cap
+            )));
+        }
+        let mut hl_pad = vec![0.0f32; self.cap * self.hl_dim];
+        hl_pad[..b.rows * self.hl_dim].copy_from_slice(&hl);
+        Ok(hl_pad)
+    }
+
+    /// Score a padded `hL` block: `label_fwd(hL, wy, by)` — one
+    /// probability per real row.
+    pub fn score(&mut self, hl_pad: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let wy = self.wy.to_f32();
+        let by = self.by.to_f32();
+        label_scores(&mut self.engine, &self.cfg, self.cap, hl_pad, &wy, &by, rows)
+    }
+}
+
+/// Holder A's serving role: the Algorithm 2/3 holder forward composed with
+/// the label head — the party that turns `hL` into client-visible scores.
+pub struct SpnnLabelFwd<'a> {
+    /// A's private-feature forward.
+    pub holder: &'a mut SpnnHolderFwd,
+    /// A's label layer.
+    pub head: &'a mut SpnnHeadFwd,
+}
+
+impl ForwardPass for SpnnLabelFwd<'_> {
+    fn role(&self) -> &'static str {
+        "spnn-label-holder"
+    }
+
+    fn stage_rows(&mut self, index: u64, ids: &[u32]) {
+        self.holder.src.stage(index, ids);
+    }
+
+    fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        self.holder.prefetch(p, b)
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        self.holder.submit(p, b)?;
+        let hl_pad = self.head.recv_hidden(p, b)?;
+        Ok(Some(self.head.score(&hl_pad, b.rows)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SecureML (whole-network 2-party MPC)
+// ---------------------------------------------------------------------------
+
+/// One shared layer: weight / optional bias shares.
+#[derive(Clone)]
+pub struct LayerShare {
+    /// Weight-matrix share.
+    pub w: RingMat,
+    /// Bias-vector share (layers with a bias).
+    pub b: Option<Vec<u64>>,
+}
+
+/// Fixed-point encode of a public constant.
+pub(crate) fn enc_const(v: f64) -> u64 {
+    crate::fixed::encode(v)
+}
+
+/// Add a public constant to a share vector (role 0 only).
+pub(crate) fn add_const(share: &mut [u64], c: u64, role: u8) {
+    if role == 0 {
+        for v in share.iter_mut() {
+            *v = v.wrapping_add(c);
+        }
+    }
+}
+
+/// The dealer-material sequence one mini-batch's **forward** pass
+/// consumes, in consumption order: one matrix triple per layer plus the
+/// activation material (two comparisons + a Hadamard for the piecewise
+/// sigmoid, one comparison + a Hadamard for relu).
+pub fn mpc_fwd_script(dims: &[usize], acts: &[Act], rows: usize) -> Vec<Req> {
+    let n_layers = dims.len() - 1;
+    let mut script = Vec::new();
+    for l in 0..n_layers {
+        let lanes = rows * dims[l + 1];
+        script.push(Req::Mat(rows, dims[l], dims[l + 1]));
+        match acts[l] {
+            Act::Sigmoid => {
+                script.push(Req::Bool(lanes));
+                script.push(Req::Bool(lanes));
+                script.push(Req::Elem(lanes));
+            }
+            Act::Relu => {
+                script.push(Req::Bool(lanes));
+                script.push(Req::Elem(lanes));
+            }
+            Act::Identity => {}
+        }
+    }
+    script
+}
+
+/// The full forward + backward dealer script one training mini-batch
+/// consumes ([`mpc_fwd_script`] followed by the backward material, in
+/// reverse layer order). `Prefetch` fires these as tagged requests; the
+/// forward/backward code pulls the replies in the same order, so the two
+/// MUST stay in sync (guarded by `secureml_depths_are_transcript_equal`
+/// and the tiny end-to-end test).
+pub fn mpc_batch_script(dims: &[usize], acts: &[Act], rows: usize) -> Vec<Req> {
+    let mut script = mpc_fwd_script(dims, acts, rows);
+    let n_layers = dims.len() - 1;
+    for l in (0..n_layers).rev() {
+        let lanes = rows * dims[l + 1];
+        if acts[l] != Act::Identity {
+            script.push(Req::Elem(lanes));
+        }
+        script.push(Req::Mat(dims[l], rows, dims[l + 1]));
+        if l > 0 {
+            script.push(Req::Mat(rows, dims[l + 1], dims[l]));
+        }
+    }
+    script
+}
+
+/// The layer activations a SecureML forward pass hands to the backward
+/// stage (or to score opening, when serving).
+pub struct MpcActs {
+    /// Per-layer activation shares; `[0]` is the input share, the last
+    /// entry is the output-probability share.
+    pub act_shares: Vec<RingMat>,
+    /// Per-layer activation-derivative shares (empty vec = identity).
+    pub deriv_shares: Vec<Vec<u64>>,
+}
+
+/// A SecureML compute party's (A or B) forward state: the shared layer
+/// stack (trained in place), the A-side dealer feed, the input-mask RNG
+/// and the feature source. `train` selects the dealer script (forward +
+/// backward vs forward-only) and whether labels are shared.
+pub struct MlpMpcFwd {
+    /// 0 = A (fires dealer requests, owns labels), 1 = B.
+    pub role: u8,
+    /// Shared layer stack (trained in place by the backward pass).
+    pub layers: Vec<LayerShare>,
+    /// Where per-batch feature blocks come from.
+    pub src: FeatureSource,
+    /// A's labels (train mode only).
+    pub y: Option<Vec<f32>>,
+    a_id: usize,
+    b_id: usize,
+    dealer: usize,
+    extra_ids: Vec<usize>,
+    split: VerticalSplit,
+    dims: Vec<usize>,
+    acts: Vec<Act>,
+    feed: Option<DealerFeed>,
+    rng: ChaChaRng,
+    train: bool,
+    masks: VecDeque<(RingMat, Option<RingMat>)>,
+}
+
+impl MlpMpcFwd {
+    /// Build a compute party's forward state. `rng` must be the party's
+    /// input-mask RNG positioned after weight-initialization sharing (the
+    /// draws continue in schedule order). `extra_ids` are the party ids of
+    /// holders 2.. in holder order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        role: u8,
+        a_id: usize,
+        b_id: usize,
+        dealer: usize,
+        extra_ids: Vec<usize>,
+        split: VerticalSplit,
+        dims: Vec<usize>,
+        acts: Vec<Act>,
+        layers: Vec<LayerShare>,
+        src: FeatureSource,
+        y: Option<Vec<f32>>,
+        rng: ChaChaRng,
+        train: bool,
+    ) -> Self {
+        let feed = if role == 0 { Some(DealerFeed::new(dealer)) } else { None };
+        MlpMpcFwd {
+            role,
+            layers,
+            src,
+            y,
+            a_id,
+            b_id,
+            dealer,
+            extra_ids,
+            split,
+            dims,
+            acts,
+            feed,
+            rng,
+            train,
+            masks: VecDeque::new(),
+        }
+    }
+
+    /// Switch between the training script (fwd + bwd dealer material,
+    /// label sharing) and the serving script (forward-only).
+    pub fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    fn peer(&self) -> usize {
+        if self.role == 0 {
+            self.b_id
+        } else {
+            self.a_id
+        }
+    }
+
+    /// `Step::Prefetch`: A streams the batch's whole dealer script ahead
+    /// of demand and pumps already-landed replies (expansion inside the
+    /// prefetch window); both parties pre-draw their input-share masks in
+    /// schedule order.
+    pub fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        p.set_stage("prefetch");
+        if let Some(feed) = self.feed.as_mut() {
+            let script = if self.train {
+                mpc_batch_script(&self.dims, &self.acts, b.rows)
+            } else {
+                mpc_fwd_script(&self.dims, &self.acts, b.rows)
+            };
+            for req in script {
+                feed.request(p, req, b.tag())?;
+            }
+            feed.pump(p)?;
+        }
+        // input-share masks, drawn in schedule order
+        let dj = self.src.width();
+        let r_x = RingMat::random(&mut self.rng, b.rows, dj);
+        let r_y = if self.train && self.role == 0 {
+            Some(RingMat::random(&mut self.rng, b.rows, 1))
+        } else {
+            None
+        };
+        self.masks.push_back((r_x, r_y));
+        Ok(())
+    }
+
+    /// Input sharing: exchange feature-block shares with the peer, absorb
+    /// the extra holders' shares, and (train mode) share the labels.
+    /// Returns the full input share `(rows x D)` and A/B's label share.
+    pub fn share_inputs(
+        &mut self,
+        p: &mut dyn Channel,
+        b: &BatchCtx,
+    ) -> Result<(RingMat, Option<Vec<u64>>)> {
+        let rows = b.rows;
+        let tag = b.tag();
+        let me_is_a = self.role == 0;
+        let peer = self.peer();
+        let (r_x, r_y) = self.masks.pop_front().expect("prefetch before submit");
+        let xblk = self.src.block(b)?;
+        let xr = RingMat::encode_f64(rows, xblk.cols, &xblk.data);
+        let (mine, theirs) = share2_from_mask(&xr, r_x);
+        p.send_tagged(peer, tag, Payload::U64s(theirs.data))?;
+        let peer_share = p.recv_tagged(peer, tag)?.into_u64s()?;
+        let dpeer = self.split.width(if me_is_a { 1 } else { 0 });
+        if peer_share.len() != rows * dpeer {
+            return Err(Error::Protocol("secureml: peer share size".into()));
+        }
+        let peer_mat = RingMat::from_data(rows, dpeer, peer_share);
+        // column order: holder 0 block, holder 1 block, extras...
+        let mut x_share = if me_is_a {
+            mine.concat_cols(&peer_mat)
+        } else {
+            peer_mat.concat_cols(&mine)
+        };
+        for (i, &id) in self.extra_ids.iter().enumerate() {
+            let blk = p.recv_tagged(id, tag)?.into_u64s()?;
+            let w = self.split.width(2 + i);
+            if blk.len() != rows * w {
+                return Err(Error::Protocol("secureml: extra block size".into()));
+            }
+            x_share = x_share.concat_cols(&RingMat::from_data(rows, w, blk));
+        }
+        // labels: A shares y (train mode only; serving has no labels)
+        let y_share = if self.train {
+            Some(if me_is_a {
+                let yv: Vec<f64> = self.y.as_ref().expect("A holds labels")
+                    [b.start..b.start + rows]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect();
+                let yr = RingMat::encode_f64(rows, 1, &yv);
+                let (ya, yb) = share2_from_mask(&yr, r_y.expect("A drew a label mask"));
+                p.send_tagged(peer, tag, Payload::U64s(yb.data))?;
+                ya.data
+            } else {
+                p.recv_tagged(peer, tag)?.into_u64s()?
+            })
+        } else {
+            None
+        };
+        Ok((x_share, y_share))
+    }
+
+    /// The shared-network forward: per layer, Beaver matmul + truncation +
+    /// shared bias, then the MPC-friendly piecewise activation. Returns
+    /// every activation/derivative share (backward or score opening).
+    pub fn forward_layers(
+        &mut self,
+        p: &mut dyn Channel,
+        b: &BatchCtx,
+        x_share: RingMat,
+    ) -> Result<MpcActs> {
+        use crate::fixed::SCALE;
+        let rows = b.rows;
+        let tag = b.tag();
+        let n_layers = self.dims.len() - 1;
+        let peer = self.peer();
+        let role = self.role;
+        let mut act_shares: Vec<RingMat> = vec![x_share];
+        let mut deriv_shares: Vec<Vec<u64>> = Vec::new(); // per layer
+        for l in 0..n_layers {
+            let a_in = act_shares.last().unwrap().clone();
+            let (m, k, n) = (rows, self.dims[l], self.dims[l + 1]);
+            let triple = self.mat_triple(p, m, k, n, tag)?;
+            let mut z =
+                beaver_matmul(p, peer, role, &a_in, &self.layers[l].w, &triple, &native_mm)?;
+            trunc_share_mat(&mut z, role);
+            if let Some(bv) = &self.layers[l].b {
+                for r in 0..m {
+                    for c in 0..n {
+                        let v = &mut z.data[r * n + c];
+                        *v = v.wrapping_add(bv[c]);
+                    }
+                }
+            }
+            // activation
+            let lanes = m * n;
+            match self.acts[l] {
+                Act::Sigmoid => {
+                    // piecewise: f = (b1-b2)(z+1/2) + b2
+                    let mut u = z.data.clone();
+                    add_const(&mut u, enc_const(0.5), role);
+                    let b1 = self.drelu(p, &u, tag)?;
+                    let mut v = z.data.clone();
+                    add_const(&mut v, enc_const(-0.5), role);
+                    let b2 = self.drelu(p, &v, tag)?;
+                    let d: Vec<u64> = b1
+                        .iter()
+                        .zip(&b2)
+                        .map(|(x, yv)| x.wrapping_sub(*yv))
+                        .collect();
+                    let et = self.elem_triple(p, lanes, tag)?;
+                    let prod = beaver_mul_elem(p, peer, role, &d, &u, &et)?;
+                    let f: Vec<u64> = prod
+                        .iter()
+                        .zip(&b2)
+                        .map(|(x, yv)| x.wrapping_add(yv.wrapping_mul(SCALE as u64)))
+                        .collect();
+                    deriv_shares.push(d);
+                    act_shares.push(RingMat::from_data(m, n, f));
+                }
+                Act::Relu => {
+                    let bb = self.drelu(p, &z.data, tag)?;
+                    let et = self.elem_triple(p, lanes, tag)?;
+                    let f = beaver_mul_elem(p, peer, role, &bb, &z.data, &et)?;
+                    deriv_shares.push(bb);
+                    act_shares.push(RingMat::from_data(m, n, f));
+                }
+                Act::Identity => {
+                    deriv_shares.push(vec![]);
+                    act_shares.push(z);
+                }
+            }
+        }
+        Ok(MpcActs { act_shares, deriv_shares })
+    }
+
+    /// Pull a matrix triple requested at prefetch under `tag`: A consumes
+    /// its (possibly pre-expanded) feed material, B expands its seed at
+    /// point of use.
+    pub fn mat_triple(
+        &mut self,
+        p: &mut dyn Channel,
+        m: usize,
+        k: usize,
+        n: usize,
+        tag: u64,
+    ) -> Result<MatTriple> {
+        match self.feed.as_mut() {
+            Some(feed) => match feed.next(p, tag)? {
+                Material::Mat(t) if t.u.shape() == (m, k) && t.v.shape() == (k, n) => Ok(t),
+                Material::Mat(t) => Err(Error::Protocol(format!(
+                    "dealer feed shape drift: wanted ({m},{k})x({k},{n}), got {:?}x{:?}",
+                    t.u.shape(),
+                    t.v.shape()
+                ))),
+                _ => Err(Error::Protocol("dealer feed kind drift: wanted Mat".into())),
+            },
+            None => {
+                debug_assert_ne!(self.role, 0);
+                dealer::recv_mat_triple_b_tagged(p, self.dealer, m, k, n, tag)
+            }
+        }
+    }
+
+    /// Pull an elementwise triple requested at prefetch under `tag`.
+    pub fn elem_triple(
+        &mut self,
+        p: &mut dyn Channel,
+        len: usize,
+        tag: u64,
+    ) -> Result<ElemTriple> {
+        match self.feed.as_mut() {
+            Some(feed) => match feed.next(p, tag)? {
+                Material::Elem(t) if t.u.len() == len => Ok(t),
+                Material::Elem(t) => Err(Error::Protocol(format!(
+                    "dealer feed shape drift: wanted {len} lanes, got {}",
+                    t.u.len()
+                ))),
+                _ => Err(Error::Protocol("dealer feed kind drift: wanted Elem".into())),
+            },
+            None => {
+                debug_assert_ne!(self.role, 0);
+                dealer::recv_elem_triple_b_tagged(p, self.dealer, len, tag)
+            }
+        }
+    }
+
+    /// DReLU over a share vector via a prefetched dealer bundle.
+    pub fn drelu(&mut self, p: &mut dyn Channel, x: &[u64], tag: u64) -> Result<Vec<u64>> {
+        use crate::smpc::boolean::drelu_arith;
+        let lanes = x.len();
+        let mut bundle = match self.feed.as_mut() {
+            Some(feed) => match feed.next(p, tag)? {
+                Material::Bool(b) if b.eda.r_arith.len() == lanes => b,
+                Material::Bool(b) => {
+                    return Err(Error::Protocol(format!(
+                        "dealer feed shape drift: wanted {lanes} lanes, got {}",
+                        b.eda.r_arith.len()
+                    )))
+                }
+                _ => return Err(Error::Protocol("dealer feed kind drift: wanted Bool".into())),
+            },
+            None => dealer::recv_bool_bundle_b_tagged(p, self.dealer, lanes, tag)?,
+        };
+        let peer = self.peer();
+        drelu_arith(p, peer, self.role, x, &bundle.eda, &mut bundle.bank, &bundle.dab)
+    }
+
+    /// Open the output-probability shares toward A: B contributes its
+    /// share, A reconstructs and decodes the client-visible scores.
+    pub fn open_scores(
+        &mut self,
+        p: &mut dyn Channel,
+        b: &BatchCtx,
+        p_share: &RingMat,
+    ) -> Result<Option<Vec<f32>>> {
+        let tag = b.tag();
+        if self.role == 0 {
+            let p_peer = p.recv_tagged(self.b_id, tag)?.into_u64s()?;
+            if p_peer.len() != p_share.data.len() {
+                return Err(Error::Protocol("secureml: score share size".into()));
+            }
+            Ok(Some(
+                p_share
+                    .data
+                    .iter()
+                    .zip(&p_peer)
+                    .map(|(a, q)| {
+                        crate::fixed::decode(a.wrapping_add(*q)).clamp(0.0, 1.0) as f32
+                    })
+                    .collect(),
+            ))
+        } else {
+            p.send_tagged(self.a_id, tag, Payload::U64s(p_share.data.clone()))?;
+            Ok(None)
+        }
+    }
+}
+
+impl ForwardPass for MlpMpcFwd {
+    fn role(&self) -> &'static str {
+        if self.role == 0 {
+            "secureml-A"
+        } else {
+            "secureml-B"
+        }
+    }
+
+    fn stage_rows(&mut self, index: u64, ids: &[u32]) {
+        self.src.stage(index, ids);
+    }
+
+    fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        MlpMpcFwd::prefetch(self, p, b)
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        p.set_stage("fwd");
+        let (x_share, _) = self.share_inputs(p, b)?;
+        let acts = self.forward_layers(p, b, x_share)?;
+        let p_share = acts.act_shares.last().unwrap().clone();
+        self.open_scores(p, b, &p_share)
+    }
+}
+
+/// A SecureML extra data holder (holder 2..): shares its feature block
+/// into the two compute parties each batch. The block encode and the mask
+/// draw are value-independent, so both stage in the prefetch window.
+pub struct MlpExtraFwd {
+    /// Where per-batch feature blocks come from.
+    pub src: FeatureSource,
+    a_id: usize,
+    b_id: usize,
+    rng: ChaChaRng,
+    staged: VecDeque<(RingMat, RingMat)>,
+}
+
+impl MlpExtraFwd {
+    /// `rng` is the holder's mask RNG (seeded per the deployment).
+    pub fn new(a_id: usize, b_id: usize, src: FeatureSource, rng: ChaChaRng) -> Self {
+        MlpExtraFwd { src, a_id, b_id, rng, staged: VecDeque::new() }
+    }
+
+    /// Encode the block and pre-draw the mask (schedule order).
+    pub fn prefetch(&mut self, b: &BatchCtx) -> Result<()> {
+        let xblk = self.src.block(b)?;
+        let xr = RingMat::encode_f64(b.rows, xblk.cols, &xblk.data);
+        let r = RingMat::random(&mut self.rng, b.rows, xblk.cols);
+        self.staged.push_back((xr, r));
+        Ok(())
+    }
+
+    /// Ship the two shares to A and B.
+    pub fn submit(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        let (xr, r) = self.staged.pop_front().expect("prefetch before submit");
+        let (sa, sb) = share2_from_mask(&xr, r);
+        p.send_tagged(self.a_id, b.tag(), Payload::U64s(sa.data))?;
+        p.send_tagged(self.b_id, b.tag(), Payload::U64s(sb.data))?;
+        Ok(())
+    }
+}
+
+impl ForwardPass for MlpExtraFwd {
+    fn role(&self) -> &'static str {
+        "secureml-holder"
+    }
+
+    fn stage_rows(&mut self, index: u64, ids: &[u32]) {
+        self.src.stage(index, ids);
+    }
+
+    fn prefetch(&mut self, _p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        MlpExtraFwd::prefetch(self, b)
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        self.submit(p, b)?;
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SplitNN
+// ---------------------------------------------------------------------------
+
+/// A SplitNN data holder's bottom encoder: `z = X_j · enc`, sent to the
+/// server as this holder's cut-layer block (plaintext — the baseline's
+/// privacy weakness is the point of comparison).
+pub struct SplitHolderFwd {
+    /// The private bottom encoder (trained in place).
+    pub enc: MatF64,
+    /// Where per-batch feature blocks come from.
+    pub src: FeatureSource,
+    staged: VecDeque<MatF64>,
+}
+
+impl SplitHolderFwd {
+    /// Holder with encoder `enc` over feature source `src`.
+    pub fn new(enc: MatF64, src: FeatureSource) -> Self {
+        SplitHolderFwd { enc, src, staged: VecDeque::new() }
+    }
+
+    /// Stage the decoded feature block (value-independent).
+    pub fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        p.set_stage("prefetch");
+        self.staged.push_back(self.src.block(b)?);
+        Ok(())
+    }
+
+    /// Encoder forward: send the pre-activation cut-layer units (the
+    /// server applies the activation). Returns the feature block for the
+    /// training backward.
+    pub fn submit(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<MatF64> {
+        p.set_stage("cut-fwd");
+        let x = self.staged.pop_front().expect("prefetch before submit");
+        let z = x.matmul(&self.enc);
+        p.send_tagged(ids::SERVER, b.tag(), Payload::F32s(z.to_f32()))?;
+        Ok(x)
+    }
+}
+
+impl ForwardPass for SplitHolderFwd {
+    fn role(&self) -> &'static str {
+        "splitnn-holder"
+    }
+
+    fn stage_rows(&mut self, index: u64, ids: &[u32]) {
+        self.src.stage(index, ids);
+    }
+
+    fn prefetch(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<()> {
+        SplitHolderFwd::prefetch(self, p, b)
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        self.submit(p, b)?;
+        Ok(None)
+    }
+}
+
+/// The SplitNN server: concatenates the holders' cut-layer blocks, runs
+/// the hidden stack, and — since SplitNN's server owns the labels — also
+/// the label head. While serving, the server is the scoring role.
+pub struct SplitServerFwd {
+    /// Server stack + label layer (trained in place; `theta0` unused —
+    /// SplitNN never trains it).
+    pub params: ModelParams,
+    /// Graph engine (training's backward uses it too).
+    pub engine: Engine,
+    n_holders: usize,
+    usplit: VerticalSplit,
+    cap: usize,
+    h1_dim: usize,
+    hl_dim: usize,
+    cfg: ModelConfig,
+}
+
+impl SplitServerFwd {
+    /// `usplit` is the cut-layer unit split across holders.
+    pub fn new(
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        params: ModelParams,
+        n_holders: usize,
+        usplit: VerticalSplit,
+    ) -> Result<Self> {
+        Ok(SplitServerFwd {
+            params,
+            engine: Engine::load_default()?,
+            n_holders,
+            usplit,
+            cap: ModelConfig::pick_batch(tc.batch),
+            h1_dim: cfg.h1_dim,
+            hl_dim: cfg.hl_dim(),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// The artifact batch cap (padding width).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Gather the holders' cut-layer blocks and run the hidden stack.
+    /// Returns `(h1_pad, hL)` — training continues with `label_grad` and
+    /// the backward; serving continues with [`SplitServerFwd::score`].
+    pub fn hidden(
+        &mut self,
+        p: &mut dyn Channel,
+        b: &BatchCtx,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let rows = b.rows;
+        let tag = b.tag();
+        p.set_stage("server");
+        if rows > self.cap {
+            return Err(Error::Protocol(format!(
+                "server: batch of {rows} rows exceeds the artifact cap {}",
+                self.cap
+            )));
+        }
+        // gather cut-layer blocks from every holder, concat by unit range
+        let h1 = self.h1_dim;
+        let mut h1_pad = vec![0.0f32; self.cap * h1];
+        for j in 0..self.n_holders {
+            let blk = p.recv_tagged(ids::holder(j), tag)?.into_f32s()?;
+            let (us, ue) = self.usplit.ranges[j];
+            let w = ue - us;
+            if blk.len() != rows * w {
+                return Err(Error::Protocol("splitnn: cut block size".into()));
+            }
+            for r in 0..rows {
+                h1_pad[r * h1 + us..r * h1 + ue]
+                    .copy_from_slice(&blk[r * w..(r + 1) * w]);
+            }
+        }
+        let server_f32 = self.params.server_f32();
+        let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+        for sp in &server_f32 {
+            inputs.push(TensorIn::F32(sp));
+        }
+        let hl_act = self
+            .engine
+            .execute(&self.cfg.artifact("server_fwd", self.cap), &inputs)?
+            .remove(0)
+            .f32()?;
+        Ok((h1_pad, hl_act))
+    }
+
+    /// Score a padded `hL` block through the server-held label layer
+    /// (`label_fwd`): one probability per real row.
+    pub fn score(&mut self, hl_pad: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let wy = self.params.wy_f32();
+        let by = self.params.by_f32();
+        label_scores(&mut self.engine, &self.cfg, self.cap, hl_pad, &wy, &by, rows)
+    }
+}
+
+impl ForwardPass for SplitServerFwd {
+    fn role(&self) -> &'static str {
+        "splitnn-server"
+    }
+
+    fn prefetch(&mut self, _p: &mut dyn Channel, _b: &BatchCtx) -> Result<()> {
+        Ok(())
+    }
+
+    fn forward(&mut self, p: &mut dyn Channel, b: &BatchCtx) -> Result<Option<Vec<f32>>> {
+        let (_, hl) = self.hidden(p, b)?;
+        Ok(Some(self.score(&hl, b.rows)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct (channel-free) reference forward passes
+// ---------------------------------------------------------------------------
+
+/// Copy one named block of a report into a parameter buffer (validated).
+fn copy_block(rep: &TrainReport, name: &str, dst: &mut [f64]) -> Result<()> {
+    let blk = rep
+        .param(name)
+        .ok_or_else(|| Error::Protocol(format!("report missing param block {name:?}")))?;
+    if blk.len() != dst.len() {
+        return Err(Error::Protocol(format!(
+            "report param {name:?}: {} values, wanted {}",
+            blk.len(),
+            dst.len()
+        )));
+    }
+    dst.copy_from_slice(blk);
+    Ok(())
+}
+
+/// Copy a report's `server{i}` / `wy` / `by` blocks into `mp` (the pieces
+/// every protocol's report carries; SPNN additionally has `theta0`).
+fn copy_server_head(rep: &TrainReport, mp: &mut ModelParams) -> Result<()> {
+    for i in 0..mp.server.len() {
+        let name = format!("server{i}");
+        copy_block(rep, &name, &mut mp.server[i].data)?;
+    }
+    copy_block(rep, "wy", &mut mp.wy.data)?;
+    copy_block(rep, "by", &mut mp.by.data)
+}
+
+/// Rebuild a full [`ModelParams`] from a [`TrainReport`]'s assembled
+/// parameter blocks (`theta0`, `server{i}`, `wy`, `by`).
+pub fn params_from_report(cfg: &ModelConfig, rep: &TrainReport) -> Result<ModelParams> {
+    let mut mp = ModelParams::init(cfg, 0);
+    copy_block(rep, "theta0", &mut mp.theta0.data)?;
+    copy_server_head(rep, &mut mp)?;
+    Ok(mp)
+}
+
+/// Direct single-process SPNN forward on trained weights, replicating the
+/// **fixed-point pipeline** of the private protocols: per holder
+/// `encode(X_j · theta_j)`, wrapping-sum across holders, decode, then the
+/// `server_fwd` + `label_fwd` graphs.
+///
+/// For SPNN-**HE** this is bit-exact against the served predictions
+/// (Paillier decryption of a packed sum is exactly the slot-wise sum of
+/// encodes). For SPNN-**SS** the served path additionally carries the
+/// SecureML truncation's probabilistic low-order-bit error, so agreement
+/// is within fixed-point tolerance rather than bit-exact.
+pub fn spnn_direct_scores(
+    cfg: &ModelConfig,
+    params: &ModelParams,
+    n_holders: usize,
+    table: &Dataset,
+    rows: &[u32],
+) -> Result<Vec<f32>> {
+    let split = VerticalSplit::even(cfg.n_features, n_holders);
+    let n = rows.len();
+    let h1_dim = cfg.h1_dim;
+    let mut h1_fix = vec![0u64; n * h1_dim];
+    for j in 0..n_holders {
+        let (s, e) = split.ranges[j];
+        let dj = e - s;
+        let mut xb = Vec::with_capacity(n * dj);
+        for &r in rows {
+            let row = &table.x[r as usize * cfg.n_features..(r as usize + 1) * cfg.n_features];
+            for c in s..e {
+                xb.push(row[c]);
+            }
+        }
+        let theta_j = MatF64::from_data(
+            dj,
+            h1_dim,
+            params.theta0.data[s * h1_dim..e * h1_dim].to_vec(),
+        );
+        let prod = MatF64::from_f32(n, dj, &xb).matmul(&theta_j);
+        for (cell, &v) in h1_fix.iter_mut().zip(prod.data.iter()) {
+            *cell = cell.wrapping_add(crate::fixed::encode(v));
+        }
+    }
+    let h1: Vec<f32> = h1_fix.iter().map(|&u| crate::fixed::decode(u) as f32).collect();
+
+    let cap = ModelConfig::pick_batch(n);
+    let mut engine = Engine::load_default()?;
+    let mut h1_pad = vec![0.0f32; cap * h1_dim];
+    h1_pad[..n * h1_dim].copy_from_slice(&h1);
+    let server_f32 = params.server_f32();
+    let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+    for sp in &server_f32 {
+        inputs.push(TensorIn::F32(sp));
+    }
+    let hl = engine
+        .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+        .remove(0)
+        .f32()?;
+    let wy = params.wy_f32();
+    let by = params.by_f32();
+    label_scores(&mut engine, cfg, cap, &hl, &wy, &by, n)
+}
+
+/// Direct single-process SplitNN forward on trained weights (encoders from
+/// the report's `enc{j}` blocks + server stack + label layer) — bit-exact
+/// against the served predictions: the cut-layer traffic is plaintext f32
+/// and every graph runs row-independently.
+pub fn splitnn_direct_scores(
+    cfg: &ModelConfig,
+    rep: &TrainReport,
+    n_holders: usize,
+    table: &Dataset,
+    rows: &[u32],
+) -> Result<Vec<f32>> {
+    let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
+    let usplit = VerticalSplit::even(cfg.h1_dim, n_holders);
+    // theta0 is untrained in SplitNN; only server/wy/by blocks exist
+    let mut params = ModelParams::init(cfg, 0);
+    copy_server_head(rep, &mut params)?;
+    let n = rows.len();
+    let h1 = cfg.h1_dim;
+    let cap = ModelConfig::pick_batch(n);
+    let mut h1_pad = vec![0.0f32; cap * h1];
+    for j in 0..n_holders {
+        let name = format!("enc{j}");
+        let blk = rep
+            .param(&name)
+            .ok_or_else(|| Error::Protocol(format!("report missing param block {name:?}")))?;
+        let (fs, fe) = fsplit.ranges[j];
+        let dj = fe - fs;
+        let (us, ue) = usplit.ranges[j];
+        let uj = ue - us;
+        if blk.len() != dj * uj {
+            return Err(Error::Protocol(format!("report param {name:?}: size mismatch")));
+        }
+        let enc = MatF64::from_data(dj, uj, blk.to_vec());
+        let mut xb = Vec::with_capacity(n * dj);
+        for &r in rows {
+            let row = &table.x[r as usize * cfg.n_features..(r as usize + 1) * cfg.n_features];
+            for c in fs..fe {
+                xb.push(row[c]);
+            }
+        }
+        // the holder sends z as f32 — replicate the f64->f32 boundary
+        let z = MatF64::from_f32(n, dj, &xb).matmul(&enc).to_f32();
+        for r in 0..n {
+            h1_pad[r * h1 + us..r * h1 + ue].copy_from_slice(&z[r * uj..(r + 1) * uj]);
+        }
+    }
+    let mut engine = Engine::load_default()?;
+    let server_f32 = params.server_f32();
+    let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
+    for sp in &server_f32 {
+        inputs.push(TensorIn::F32(sp));
+    }
+    let hl = engine
+        .execute(&cfg.artifact("server_fwd", cap), &inputs)?
+        .remove(0)
+        .f32()?;
+    let wy = params.wy_f32();
+    let by = params.by_f32();
+    label_scores(&mut engine, cfg, cap, &hl, &wy, &by, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FRAUD;
+
+    #[test]
+    fn feature_source_slice_cuts_contiguous_batches() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 6 rows x 2 cols
+        let mut src = FeatureSource::slice(x, 2);
+        assert_eq!(src.width(), 2);
+        let b = BatchCtx { index: 0, start: 2, rows: 3 };
+        let m = src.block(&b).unwrap();
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.data, vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        // beyond the table errors instead of panicking
+        let bad = BatchCtx { index: 1, start: 5, rows: 3 };
+        assert!(src.block(&bad).is_err());
+    }
+
+    #[test]
+    fn feature_source_gather_resolves_staged_rows_once() {
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // 4 rows x 2 cols
+        let mut src = FeatureSource::gather(x, 2);
+        src.stage(7, &[3, 0, 3]);
+        let b = BatchCtx { index: 7, start: 0, rows: 3 };
+        let m = src.block(&b).unwrap();
+        assert_eq!(m.data, vec![6.0, 7.0, 0.0, 1.0, 6.0, 7.0]);
+        // consumed: a second block() for the same batch fails
+        assert!(src.block(&b).is_err());
+        // row count mismatch and out-of-range ids are protocol errors
+        src.stage(8, &[1]);
+        let wrong = BatchCtx { index: 8, start: 0, rows: 2 };
+        assert!(src.block(&wrong).is_err());
+        src.stage(9, &[99]);
+        let oob = BatchCtx { index: 9, start: 0, rows: 1 };
+        assert!(src.block(&oob).is_err());
+    }
+
+    #[test]
+    fn fwd_script_is_a_prefix_of_the_batch_script() {
+        let dims = vec![28usize, 8, 8, 1];
+        let acts = vec![Act::Sigmoid, Act::Sigmoid, Act::Sigmoid];
+        let fwd = mpc_fwd_script(&dims, &acts, 64);
+        let full = mpc_batch_script(&dims, &acts, 64);
+        assert!(fwd.len() < full.len());
+        assert_eq!(&full[..fwd.len()], &fwd[..], "forward script must prefix training's");
+        // per sigmoid layer: Mat + Bool + Bool + Elem
+        assert_eq!(fwd.len(), 3 * 4);
+    }
+
+    #[test]
+    fn params_from_report_roundtrips() {
+        let mp = ModelParams::init(&FRAUD, 9);
+        let mut rep = TrainReport::default();
+        rep.params.push(("theta0".into(), mp.theta0.data.clone()));
+        for (i, m) in mp.server.iter().enumerate() {
+            rep.params.push((format!("server{i}"), m.data.clone()));
+        }
+        rep.params.push(("wy".into(), mp.wy.data.clone()));
+        rep.params.push(("by".into(), mp.by.data.clone()));
+        let got = params_from_report(&FRAUD, &rep).unwrap();
+        assert_eq!(got.digest(), mp.digest());
+        // a missing block is an error, not a silent default
+        rep.params.retain(|(n, _)| n != "wy");
+        assert!(params_from_report(&FRAUD, &rep).is_err());
+    }
+}

@@ -29,12 +29,14 @@
 //! pipeline depths (transcript tests assert both).
 
 pub mod common;
+pub mod fwd;
 pub mod plaintext;
 pub mod secureml;
 pub mod splitnn;
 pub mod spnn;
 
-pub use common::{run_pipeline, BatchCtx, ModelParams, Step, TrainReport};
+pub use common::{batch_plan, run_pipeline, BatchCtx, ModelParams, Step, TrainReport};
+pub use fwd::ForwardPass;
 
 use std::time::Instant;
 
@@ -61,6 +63,32 @@ pub trait Trainer {
         test: &Dataset,
         n_holders: usize,
     ) -> Result<Deployment>;
+
+    /// Like [`Trainer::deployment`], but the parties stay resident after
+    /// training and answer streaming inference requests against the
+    /// held-out `test` table: the coordinator role becomes the request
+    /// front (coalescing client rows into crypto-amortized batches from
+    /// `queue`), every forward-capable role runs
+    /// [`crate::serve::party_serve_loop`] over the same
+    /// [`fwd::ForwardPass`] objects training used, and the scoring role
+    /// returns the predictions. Protocols without a serving story (the
+    /// single-party plaintext baseline) keep the default error.
+    #[allow(unused_variables, clippy::too_many_arguments)]
+    fn serve_deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+        opts: &crate::serve::ServeOpts,
+        queue: crate::serve::ServeQueue,
+    ) -> Result<Deployment> {
+        Err(crate::Error::Config(format!(
+            "{} does not support serving",
+            self.name()
+        )))
+    }
 
     /// Assemble the final report from the collected party outputs
     /// (`outs[i]` = party `i`): reconstruct the model from the returned

@@ -149,6 +149,7 @@ impl Trainer for PlainNn {
             offline_bytes: 0,
             stages: net.stages,
             weight_digest: outs[1].weight_digest,
+            params: Vec::new(),
             wall_seconds,
         })
     }

@@ -16,41 +16,42 @@
 //! holders secret-share their feature blocks into the two compute parties
 //! (accuracy is unchanged — Fig 5's flat SecureML line).
 //!
+//! The shared-network **forward** (input sharing, per-layer Beaver matmul +
+//! piecewise activations, A's opportunistic dealer feed) lives in the
+//! forward layer ([`super::fwd::MlpMpcFwd`] / [`super::fwd::MlpExtraFwd`]);
+//! the role bodies here add the training-only pieces — label sharing, the
+//! loss gradient, the backward pass and the share updates — and reuse the
+//! identical forward objects to answer inference requests when built
+//! through [`Trainer::serve_deployment`] (the output-probability shares are
+//! opened to A, which returns the scores).
+//!
 //! **Pipelining**: the party loops run on the shared
 //! [`run_pipeline`] batch-stage state machine. The dealer material a batch
-//! needs is fully determined by the layer plan (`batch_script`), so A
-//! fires the whole script as tagged requests from `Prefetch` — up to
-//! `pipeline_depth - 1` batches ahead — and both parties pull the replies
-//! with `recv_tagged` at point of use: the dealer's triple generation
-//! streams ahead of demand instead of serializing a request round-trip
-//! into every Beaver multiplication.
+//! needs is fully determined by the layer plan
+//! ([`super::fwd::mpc_batch_script`]), so A fires the whole script as
+//! tagged requests from `Prefetch` — up to `pipeline_depth - 1` batches
+//! ahead — and both parties pull the replies with `recv_tagged` at point
+//! of use: the dealer's triple generation streams ahead of demand instead
+//! of serializing a request round-trip into every Beaver multiplication.
 
-use std::collections::{HashMap, VecDeque};
-
-use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport};
+use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport};
+use super::fwd::{enc_const, FeatureSource, LayerShare, MlpExtraFwd, MlpMpcFwd, MpcActs};
 use super::Trainer;
 use crate::config::{Act, ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
-use crate::fixed::{self, SCALE};
+use crate::fixed;
 use crate::netsim::Payload;
 use crate::nn::MatF64;
 use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::ChaChaRng;
-use crate::smpc::boolean::{drelu_arith, BoolBundle};
-use crate::smpc::dealer::{self, Req};
-use crate::smpc::matmul::{beaver_matmul, beaver_mul_elem, native_mm, ElemTriple};
-use crate::smpc::{share2_from_mask, trunc_share_mat, MatTriple, RingMat};
+use crate::serve::{self, ServeOpts, ServeQueue, ServeRole};
+use crate::smpc::dealer;
+use crate::smpc::matmul::{beaver_mul_elem, native_mm};
+use crate::smpc::{beaver_matmul, trunc_share_mat, RingMat};
 use crate::transport::Channel;
 use crate::{Error, Result};
 
 pub struct SecureMl;
-
-/// One shared layer: weight / optional bias shares.
-#[derive(Clone)]
-struct LayerShare {
-    w: RingMat,
-    b: Option<Vec<u64>>,
-}
 
 /// Layer schedule derived from the model config:
 /// dims `[D, h1, server..., 1]`, acts `[first, server..., output-sigmoid]`.
@@ -66,60 +67,21 @@ fn layer_plan(cfg: &ModelConfig) -> (Vec<usize>, Vec<Act>, Vec<bool>) {
     (dims, acts, bias)
 }
 
-/// The exact dealer-material sequence one mini-batch consumes, in
-/// consumption order. `Prefetch` fires these as tagged requests; the
-/// forward/backward code pulls the replies in the same order, so the two
-/// MUST stay in sync (guarded by `secureml_depths_are_transcript_equal`
-/// and the tiny end-to-end test).
-fn batch_script(dims: &[usize], acts: &[Act], rows: usize) -> Vec<Req> {
-    let n_layers = dims.len() - 1;
-    let mut script = Vec::new();
-    // forward: one matrix triple per layer + activation material
-    for l in 0..n_layers {
-        let lanes = rows * dims[l + 1];
-        script.push(Req::Mat(rows, dims[l], dims[l + 1]));
-        match acts[l] {
-            Act::Sigmoid => {
-                script.push(Req::Bool(lanes));
-                script.push(Req::Bool(lanes));
-                script.push(Req::Elem(lanes));
-            }
-            Act::Relu => {
-                script.push(Req::Bool(lanes));
-                script.push(Req::Elem(lanes));
-            }
-            Act::Identity => {}
-        }
-    }
-    // backward, in reverse layer order
-    for l in (0..n_layers).rev() {
-        let lanes = rows * dims[l + 1];
-        if acts[l] != Act::Identity {
-            script.push(Req::Elem(lanes));
-        }
-        script.push(Req::Mat(dims[l], rows, dims[l + 1]));
-        if l > 0 {
-            script.push(Req::Mat(rows, dims[l + 1], dims[l]));
-        }
-    }
-    script
-}
-
-impl Trainer for SecureMl {
-    fn name(&self) -> &'static str {
-        "SecureML"
-    }
-
-    fn deployment(
+impl SecureMl {
+    /// Build the party roster; with `serve` set, the compute parties (and
+    /// extra holders) stay resident after training and run forward-only
+    /// MPC over the held-out table, opening the scores to A.
+    fn build(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
         train: &Dataset,
-        _test: &Dataset,
+        test: &Dataset,
         n_holders: usize,
+        serve: Option<(ServeOpts, ServeQueue)>,
     ) -> Result<Deployment> {
         let split = VerticalSplit::even(cfg.n_features, n_holders.max(2));
-        let plan = super::spnn::batch_plan(train.len(), tc.batch);
+        let plan = batch_plan(train.len(), tc.batch);
 
         let mut names = vec!["coord".to_string(), "party0".to_string(), "dealer".to_string()];
         names.push("party1".into());
@@ -132,14 +94,23 @@ impl Trainer for SecureMl {
         let a_id = 1usize;
         let b_id = 3usize;
 
+        let role_serve = serve.as_ref().map(|(o, _)| ServeRole { depth: o.depth });
+
         let mut fns: Vec<PartyFn> = Vec::new();
         {
             // every party (incl. the dealer) takes start/stop orders
             let workers: Vec<usize> = (1..names.len()).collect();
-            let epochs = tc.epochs;
-            fns.push(Box::new(move |p: &mut dyn Channel| {
-                parties::coordinator_run(p, &workers, a_id, epochs)
-            }));
+            let mut serve_workers = vec![a_id, b_id];
+            serve_workers.extend((2..n_holders).map(|j| 2 + j));
+            fns.push(serve::coordinator_role(
+                tc,
+                workers,
+                a_id,
+                serve_workers,
+                a_id,
+                test.len(),
+                serve,
+            ));
         }
         {
             // party A (role 0): owns X_A block and the labels
@@ -148,15 +119,23 @@ impl Trainer for SecureMl {
             let plan = plan.clone();
             let split = split.clone();
             let xa = split.slice_x(&train.x, cfg.n_features, 0);
+            let serve_xa = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, 0));
             let y = train.y.clone();
+            let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                mpc_party(p, &cfg, &tc, &plan, 0, a_id, b_id, &split, xa, Some(y), n_holders)
+                mpc_party(
+                    p, &cfg, &tc, &plan, 0, a_id, b_id, &split, xa, Some(y), n_holders,
+                    srv, serve_xa,
+                )
             }));
         }
         {
             let seed = tc.seed ^ 0x5ec;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 parties::await_start(p)?;
+                // under serving, A keeps the dealer alive through the serve
+                // phase (dealer::idle relaxes its timeout) and stops it on
+                // shutdown
                 dealer::serve(p, a_id, b_id, seed)?;
                 parties::await_stop(p)?;
                 Ok(PartyOut::default())
@@ -169,58 +148,79 @@ impl Trainer for SecureMl {
             let plan = plan.clone();
             let split = split.clone();
             let xb = split.slice_x(&train.x, cfg.n_features, 1);
+            let serve_xb = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, 1));
+            let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                mpc_party(p, &cfg, &tc, &plan, 1, a_id, b_id, &split, xb, None, n_holders)
+                mpc_party(
+                    p, &cfg, &tc, &plan, 1, a_id, b_id, &split, xb, None, n_holders, srv,
+                    serve_xb,
+                )
             }));
         }
         // extra data holders: share their block into A and B each batch
         // (the block and the mask are value-independent, so both stage in
-        // the prefetch window)
+        // the prefetch window — MlpExtraFwd)
         for j in 2..n_holders {
             let plan = plan.clone();
             let split = split.clone();
             let xj = split.slice_x(&train.x, cfg.n_features, j);
+            let serve_xj = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, j));
             let dj = split.width(j);
             let tc = tc.clone();
             let me = 2 + j; // ids 4..
+            let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 let epochs = parties::await_start(p)?;
-                let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
+                let rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
+                let mut fwd =
+                    MlpExtraFwd::new(a_id, b_id, FeatureSource::slice(xj, dj), rng);
                 for _ in 0..epochs {
-                    let mut staged: VecDeque<(RingMat, RingMat)> = VecDeque::new();
-                    run_pipeline(&plan, tc.pipeline_depth, |step, b| {
-                        let (s, rows) = (b.start, b.rows);
-                        match step {
-                            Step::Prefetch => {
-                                let xr = RingMat::encode_f64(
-                                    rows,
-                                    dj,
-                                    &xj[s * dj..(s + rows) * dj]
-                                        .iter()
-                                        .map(|&v| v as f64)
-                                        .collect::<Vec<_>>(),
-                                );
-                                let r = RingMat::random(&mut rng, rows, dj);
-                                staged.push_back((xr, r));
-                                Ok(())
-                            }
-                            Step::Submit => {
-                                let (xr, r) =
-                                    staged.pop_front().expect("prefetch before submit");
-                                let (sa, sb) = share2_from_mask(&xr, r);
-                                p.send_tagged(a_id, b.tag(), Payload::U64s(sa.data))?;
-                                p.send_tagged(b_id, b.tag(), Payload::U64s(sb.data))?;
-                                Ok(())
-                            }
-                            Step::Complete => Ok(()),
-                        }
+                    run_pipeline(&plan, tc.pipeline_depth, |step, b| match step {
+                        Step::Prefetch => fwd.prefetch(b),
+                        Step::Submit => fwd.submit(p, b),
+                        Step::Complete => Ok(()),
                     })?;
                 }
                 parties::await_stop(p)?;
+                if let Some(sr) = srv {
+                    fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+                    serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
+                }
                 Ok(PartyOut::default())
             }));
         }
         Ok(Deployment { names, fns })
+    }
+}
+
+impl Trainer for SecureMl {
+    fn name(&self) -> &'static str {
+        "SecureML"
+    }
+
+    fn deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<Deployment> {
+        self.build(cfg, tc, train, test, n_holders, None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn serve_deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+        opts: &ServeOpts,
+        queue: ServeQueue,
+    ) -> Result<Deployment> {
+        self.build(cfg, tc, train, test, n_holders, Some((opts.clone(), queue)))
     }
 
     fn finish(
@@ -254,10 +254,13 @@ impl Trainer for SecureMl {
         // activations MPC used (the approximation is part of the accuracy)
         let (a, test_loss) = eval_piecewise(cfg, &finals, test);
         let mut digest = Fnv::new();
-        for (w, b) in &finals {
+        let mut params_out: Vec<(String, Vec<f64>)> = Vec::new();
+        for (l, (w, b)) in finals.iter().enumerate() {
             digest.add_f64s(&w.data);
+            params_out.push((format!("w{l}"), w.data.clone()));
             if let Some(b) = b {
                 digest.add_f64s(b);
+                params_out.push((format!("b{l}"), b.clone()));
             }
         }
 
@@ -272,143 +275,17 @@ impl Trainer for SecureMl {
             offline_bytes: net.offline_bytes,
             stages: net.stages,
             weight_digest: digest.0,
+            params: params_out,
             wall_seconds,
         })
-    }
-}
-
-/// Shared-constant helpers.
-fn enc_const(v: f64) -> u64 {
-    fixed::encode(v)
-}
-
-/// Add a public constant to a share vector (role 0 only).
-fn add_const(share: &mut [u64], c: u64, role: u8) {
-    if role == 0 {
-        for v in share.iter_mut() {
-            *v = v.wrapping_add(c);
-        }
     }
 }
 
 /// Per-batch state handed from the `Submit` (forward) stage to the
 /// `Complete` (backward) stage.
 struct InFlight {
-    act_shares: Vec<RingMat>,
-    deriv_shares: Vec<Vec<u64>>,
+    acts: MpcActs,
     g_out: RingMat,
-}
-
-/// Expanded A-side dealer material, ready for consumption.
-enum Material {
-    Mat(MatTriple),
-    Elem(ElemTriple),
-    Bool(BoolBundle),
-}
-
-/// A-side dealer feed with **opportunistic expansion**: requests are fired
-/// from `Prefetch` ([`Self::request`]); [`Self::pump`] then polls the
-/// dealer link without blocking (`try_recv_tagged`) and expands whatever
-/// replies have already landed — so the PRG expansion of `(U, V)` shares
-/// and boolean bundles happens inside the prefetch window instead of
-/// blocking in `Submit`/`Complete` on the critical path. [`Self::next`]
-/// falls back to blocking receives for anything not pumped yet.
-///
-/// Correctness leans on two FIFO facts: A fires requests in consumption
-/// order (the batch script), and the dealer answers its single request
-/// stream in arrival order — so the global reply stream matches
-/// `outstanding` front-to-back, and per-tag `recv_tagged` order equals
-/// per-request reply order. Expansion is pure (seeded PRG), so *when* it
-/// runs cannot change the transcript — guarded by
-/// `secureml_depths_are_transcript_equal`.
-struct DealerFeed {
-    /// Requests awaiting full reply, in fire order, with parts collected
-    /// so far.
-    outstanding: VecDeque<(u64, Req, Vec<Payload>)>,
-    /// Expanded material per batch tag, in request order.
-    ready: HashMap<u64, VecDeque<Material>>,
-}
-
-impl DealerFeed {
-    fn new() -> Self {
-        DealerFeed { outstanding: VecDeque::new(), ready: HashMap::new() }
-    }
-
-    fn parts_needed(req: &Req) -> usize {
-        match req {
-            Req::Mat(..) | Req::Elem(_) => 2, // Seed + correction
-            Req::Bool(_) => 5,                // Seed + 4 explicit payloads
-        }
-    }
-
-    fn expand(req: Req, mut parts: Vec<Payload>) -> Result<Material> {
-        let mut rest = parts.split_off(1);
-        let seed = parts.pop().expect("seed part").into_seed()?;
-        Ok(match req {
-            Req::Mat(m, k, n) => Material::Mat(dealer::mat_triple_from_parts(
-                seed,
-                rest.pop().expect("w part").into_u64s()?,
-                m,
-                k,
-                n,
-            )),
-            Req::Elem(len) => Material::Elem(dealer::elem_triple_from_parts(
-                seed,
-                rest.pop().expect("w part").into_u64s()?,
-                len,
-            )),
-            Req::Bool(lanes) => {
-                let dab_bits = rest.pop().expect("dab bits").into_bits()?;
-                let dab_arith = rest.pop().expect("dab arith").into_u64s()?;
-                let c = rest.pop().expect("and c").into_bits()?;
-                let eda_bits = rest.pop().expect("eda bits").into_bits()?;
-                Material::Bool(dealer::bool_bundle_from_parts(
-                    seed, eda_bits, c, dab_arith, dab_bits, lanes,
-                )?)
-            }
-        })
-    }
-
-    /// Fire one tagged request (prefetch stage).
-    fn request(&mut self, p: &mut dyn Channel, req: Req, tag: u64) -> Result<()> {
-        dealer::send_request_tagged(p, ids::DEALER, req, tag)?;
-        self.outstanding.push_back((tag, req, Vec::new()));
-        Ok(())
-    }
-
-    /// Non-blocking drain: pull every already-delivered reply off the
-    /// dealer link and expand completed requests, front to back.
-    fn pump(&mut self, p: &mut dyn Channel) -> Result<()> {
-        while let Some(front) = self.outstanding.front_mut() {
-            while front.2.len() < Self::parts_needed(&front.1) {
-                match p.try_recv_tagged(ids::DEALER, front.0)? {
-                    Some(payload) => front.2.push(payload),
-                    None => return Ok(()), // nothing more on the wire yet
-                }
-            }
-            let (tag, req, parts) = self.outstanding.pop_front().expect("front exists");
-            self.ready.entry(tag).or_default().push_back(Self::expand(req, parts)?);
-        }
-        Ok(())
-    }
-
-    /// Next material for `tag`, blocking on the wire only for whatever the
-    /// prefetch-window pumping did not get to.
-    fn next(&mut self, p: &mut dyn Channel, tag: u64) -> Result<Material> {
-        loop {
-            if let Some(m) = self.ready.get_mut(&tag).and_then(|q| q.pop_front()) {
-                return Ok(m);
-            }
-            let front = self.outstanding.front_mut().ok_or_else(|| {
-                Error::Protocol(format!("dealer feed empty while awaiting material for tag {tag}"))
-            })?;
-            while front.2.len() < Self::parts_needed(&front.1) {
-                front.2.push(p.recv_tagged(ids::DEALER, front.0)?);
-            }
-            let (t, req, parts) = self.outstanding.pop_front().expect("front exists");
-            self.ready.entry(t).or_default().push_back(Self::expand(req, parts)?);
-        }
-    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -424,14 +301,12 @@ fn mpc_party(
     x_mine: Vec<f32>,
     y: Option<Vec<f32>>,
     n_holders: usize,
+    srv: Option<ServeRole>,
+    serve_x: Option<Vec<f32>>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
-    // A-side dealer feed: requests stream from Prefetch, replies are
-    // pumped opportunistically so triple expansion lands in the prefetch
-    // window (ROADMAP pipeline follow-up)
-    let mut feed = if role == 0 { Some(DealerFeed::new()) } else { None };
-    let peer = if role == 0 { b_id } else { a_id };
     let me_is_a = role == 0;
+    let peer = if me_is_a { b_id } else { a_id };
     let (dims, acts, with_bias) = layer_plan(cfg);
     let n_layers = dims.len() - 1;
     let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0x11ec + role as u64));
@@ -495,151 +370,49 @@ fn mpc_party(
     }
 
     let dj = split.width(if me_is_a { 0 } else { 1 });
+    // hand the layer stack, the mask RNG (positioned after the init
+    // sharing draws), the dealer feed and the feature source to the shared
+    // forward layer; the backward below trains fwd.layers in place
+    let extra_ids: Vec<usize> = (2..n_holders).map(|j| 2 + j).collect();
+    let mut fwd = MlpMpcFwd::new(
+        role,
+        a_id,
+        b_id,
+        ids::DEALER,
+        extra_ids,
+        split.clone(),
+        dims.clone(),
+        acts.clone(),
+        layers,
+        FeatureSource::slice(x_mine, dj),
+        y,
+        rng,
+        true,
+    );
     let mut epoch_times = Vec::new();
     let mut epoch_losses = Vec::new();
 
     for _ in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        // pre-drawn input-share masks (x, and y for A), FIFO by batch
-        let mut masks: std::collections::VecDeque<(RingMat, Option<RingMat>)> =
-            std::collections::VecDeque::new();
         let mut inflight: Option<InFlight> = None;
         run_pipeline(plan, tc.pipeline_depth, |step, b| {
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
             match step {
-                Step::Prefetch => {
-                    p.set_stage("prefetch");
-                    // A streams the whole batch's dealer script ahead of
-                    // demand; the dealer computes inside our wait windows.
-                    // Replies already on the wire are drained and expanded
-                    // HERE (opportunistic try_recv) so the PRG expansion
-                    // also moves off the critical path.
-                    if let Some(feed) = feed.as_mut() {
-                        for req in batch_script(&dims, &acts, rows) {
-                            feed.request(p, req, tag)?;
-                        }
-                        feed.pump(p)?;
-                    }
-                    // input-share masks, drawn in schedule order
-                    let r_x = RingMat::random(&mut rng, rows, dj);
-                    let r_y = if me_is_a {
-                        Some(RingMat::random(&mut rng, rows, 1))
-                    } else {
-                        None
-                    };
-                    masks.push_back((r_x, r_y));
-                    Ok(())
-                }
+                // A streams the whole batch's dealer script ahead of
+                // demand and pumps replies opportunistically; both parties
+                // pre-draw their input-share masks in schedule order
+                Step::Prefetch => fwd.prefetch(p, b),
                 Step::Submit => {
                     p.set_stage("fwd");
-                    let (r_x, r_y) = masks.pop_front().expect("prefetch before submit");
-                    // ---- input sharing ----
-                    let xr = RingMat::encode_f64(
-                        rows,
-                        dj,
-                        &x_mine[s * dj..(s + rows) * dj]
-                            .iter()
-                            .map(|&v| v as f64)
-                            .collect::<Vec<_>>(),
-                    );
-                    let (mine, theirs) = share2_from_mask(&xr, r_x);
-                    p.send_tagged(peer, tag, Payload::U64s(theirs.data))?;
-                    let peer_share = p.recv_tagged(peer, tag)?.into_u64s()?;
-                    let dpeer = split.width(if me_is_a { 1 } else { 0 });
-                    let peer_mat = RingMat::from_data(rows, dpeer, peer_share);
-                    // column order: holder 0 block, holder 1 block, extras...
-                    let mut x_share = if me_is_a {
-                        mine.concat_cols(&peer_mat)
-                    } else {
-                        peer_mat.concat_cols(&mine)
-                    };
-                    for j in 2..n_holders {
-                        let blk = p.recv_tagged(2 + j, tag)?.into_u64s()?;
-                        let w = split.width(j);
-                        if blk.len() != rows * w {
-                            return Err(Error::Protocol("secureml: extra block size".into()));
-                        }
-                        x_share = x_share.concat_cols(&RingMat::from_data(rows, w, blk));
-                    }
-                    // labels: A shares y
-                    let y_share: Vec<u64> = if me_is_a {
-                        let yv: Vec<f64> = y.as_ref().unwrap()[s..s + rows]
-                            .iter()
-                            .map(|&v| v as f64)
-                            .collect();
-                        let yr = RingMat::encode_f64(rows, 1, &yv);
-                        let (ya, yb) = share2_from_mask(&yr, r_y.unwrap());
-                        p.send_tagged(peer, tag, Payload::U64s(yb.data))?;
-                        ya.data
-                    } else {
-                        p.recv_tagged(peer, tag)?.into_u64s()?
-                    };
-
-                    // ---- forward ----
-                    let mut act_shares: Vec<RingMat> = vec![x_share];
-                    let mut deriv_shares: Vec<Vec<u64>> = Vec::new(); // per layer
-                    for l in 0..n_layers {
-                        let a_in = act_shares.last().unwrap().clone();
-                        let (m, k, n) = (rows, dims[l], dims[l + 1]);
-                        let triple = get_triple(p, &mut feed, role, m, k, n, tag)?;
-                        let mut z = beaver_matmul(
-                            p, peer, role, &a_in, &layers[l].w, &triple, &native_mm,
-                        )?;
-                        trunc_share_mat(&mut z, role);
-                        if let Some(bv) = &layers[l].b {
-                            for r in 0..m {
-                                for c in 0..n {
-                                    let v = &mut z.data[r * n + c];
-                                    *v = v.wrapping_add(bv[c]);
-                                }
-                            }
-                        }
-                        // activation
-                        let lanes = m * n;
-                        match acts[l] {
-                            Act::Sigmoid => {
-                                // piecewise: f = (b1-b2)(z+1/2) + b2
-                                let mut u = z.data.clone();
-                                add_const(&mut u, enc_const(0.5), role);
-                                let b1 = drelu(p, &mut feed, role, &u, tag)?;
-                                let mut v = z.data.clone();
-                                add_const(&mut v, enc_const(-0.5), role);
-                                let b2 = drelu(p, &mut feed, role, &v, tag)?;
-                                let d: Vec<u64> = b1
-                                    .iter()
-                                    .zip(&b2)
-                                    .map(|(x, yv)| x.wrapping_sub(*yv))
-                                    .collect();
-                                let et = get_elem_triple(p, &mut feed, role, lanes, tag)?;
-                                let prod = beaver_mul_elem(p, peer, role, &d, &u, &et)?;
-                                let f: Vec<u64> = prod
-                                    .iter()
-                                    .zip(&b2)
-                                    .map(|(x, yv)| {
-                                        x.wrapping_add(yv.wrapping_mul(SCALE as u64))
-                                    })
-                                    .collect();
-                                deriv_shares.push(d);
-                                act_shares.push(RingMat::from_data(m, n, f));
-                            }
-                            Act::Relu => {
-                                let bb = drelu(p, &mut feed, role, &z.data, tag)?;
-                                let et = get_elem_triple(p, &mut feed, role, lanes, tag)?;
-                                let f = beaver_mul_elem(p, peer, role, &bb, &z.data, &et)?;
-                                deriv_shares.push(bb);
-                                act_shares.push(RingMat::from_data(m, n, f));
-                            }
-                            Act::Identity => {
-                                deriv_shares.push(vec![]);
-                                act_shares.push(z);
-                            }
-                        }
-                    }
+                    // ---- input sharing + shared-network forward ----
+                    let (x_share, y_share) = fwd.share_inputs(p, b)?;
+                    let y_share = y_share.expect("train mode shares labels");
+                    let acts_out = fwd.forward_layers(p, b, x_share)?;
 
                     // ---- loss gradient: g = (p - y) / rows ----
-                    let p_share = act_shares.last().unwrap().clone(); // (rows x 1)
+                    let p_share = acts_out.act_shares.last().unwrap().clone(); // (rows x 1)
                     let mut g: Vec<u64> = p_share
                         .data
                         .iter()
@@ -656,7 +429,7 @@ fn mpc_party(
                     // loss monitoring: open p to A (A owns y anyway)
                     if me_is_a {
                         let p_peer = p.recv_tagged(peer, tag)?.into_u64s()?;
-                        let yv = &y.as_ref().unwrap()[s..s + rows];
+                        let yv = &fwd.y.as_ref().unwrap()[s..s + rows];
                         let mut loss = 0.0;
                         for i in 0..rows {
                             let pi = fixed::decode(p_share.data[i].wrapping_add(p_peer[i]))
@@ -668,21 +441,22 @@ fn mpc_party(
                     } else {
                         p.send_tagged(peer, tag, Payload::U64s(p_share.data.clone()))?;
                     }
-                    inflight = Some(InFlight { act_shares, deriv_shares, g_out: g });
+                    inflight = Some(InFlight { acts: acts_out, g_out: g });
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("bwd");
                     let fl = inflight.take().expect("submit before complete");
                     // g_out: gradient w.r.t. the current layer's output
-                    let InFlight { act_shares, deriv_shares, mut g_out } = fl;
+                    let InFlight { acts: MpcActs { act_shares, deriv_shares }, mut g_out } =
+                        fl;
                     for l in (0..n_layers).rev() {
                         let (m, k, n) = (rows, dims[l], dims[l + 1]);
                         // through the activation
                         let g_z = if deriv_shares[l].is_empty() {
                             g_out.clone()
                         } else {
-                            let et = get_elem_triple(p, &mut feed, role, m * n, tag)?;
+                            let et = fwd.elem_triple(p, m * n, tag)?;
                             let gz = beaver_mul_elem(
                                 p, peer, role, &deriv_shares[l], &g_out.data, &et,
                             )?;
@@ -690,13 +464,13 @@ fn mpc_party(
                         };
                         // g_W = a_in^T @ g_z
                         let a_in_t = act_shares[l].transpose();
-                        let triple = get_triple(p, &mut feed, role, k, m, n, tag)?;
+                        let triple = fwd.mat_triple(p, k, m, n, tag)?;
                         let mut g_w = beaver_matmul(
                             p, peer, role, &a_in_t, &g_z, &triple, &native_mm,
                         )?;
                         trunc_share_mat(&mut g_w, role);
                         // g_b = column sums (local)
-                        let g_b: Option<Vec<u64>> = layers[l].b.as_ref().map(|_| {
+                        let g_b: Option<Vec<u64>> = fwd.layers[l].b.as_ref().map(|_| {
                             let mut out = vec![0u64; n];
                             for r in 0..m {
                                 for c in 0..n {
@@ -707,8 +481,8 @@ fn mpc_party(
                         });
                         // g_in = g_z @ W^T (skip for the first layer)
                         if l > 0 {
-                            let w_t = layers[l].w.transpose();
-                            let triple = get_triple(p, &mut feed, role, m, n, k, tag)?;
+                            let w_t = fwd.layers[l].w.transpose();
+                            let triple = fwd.mat_triple(p, m, n, k, tag)?;
                             let mut g_in = beaver_matmul(
                                 p, peer, role, &g_z, &w_t, &triple, &native_mm,
                             )?;
@@ -716,8 +490,8 @@ fn mpc_party(
                             g_out = g_in;
                         }
                         // updates: W -= lr * g_W (public lr: local mult + trunc)
-                        apply_update(&mut layers[l].w.data, &g_w.data, lr_enc, role);
-                        if let (Some(bv), Some(gb)) = (&mut layers[l].b, g_b) {
+                        apply_update(&mut fwd.layers[l].w.data, &g_w.data, lr_enc, role);
+                        if let (Some(bv), Some(gb)) = (&mut fwd.layers[l].b, g_b) {
                             apply_update(bv, &gb, lr_enc, role);
                         }
                     }
@@ -731,10 +505,27 @@ fn mpc_party(
             parties::report_epoch(p, loss_sum / plan.len() as f64)?;
         }
     }
-    if me_is_a {
+    if me_is_a && srv.is_none() {
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
     parties::await_stop(p)?;
+
+    // ---- serving: forward-only MPC over the held-out table; the output
+    // probability shares are opened to A, which returns the scores ----
+    if let Some(sr) = srv {
+        if me_is_a {
+            // requests may be arbitrarily far apart from here on — relax
+            // the dealer's training-era deadlock timeout
+            dealer::idle(p, ids::DEALER)?;
+        }
+        fwd.set_train(false);
+        fwd.src = FeatureSource::gather(serve_x.expect("serve slice"), dj);
+        serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
+        if me_is_a {
+            // the dealer served forward triples through the serve phase
+            dealer::stop(p, ids::DEALER)?;
+        }
+    }
 
     // reconstruct final weights for evaluation: B sends shares to A,
     // A decodes and returns them as named parameter blocks (harness-only
@@ -743,7 +534,7 @@ fn mpc_party(
     if me_is_a {
         for l in 0..n_layers {
             let wb = p.recv_u64s(peer)?;
-            let w: Vec<f64> = layers[l]
+            let w: Vec<f64> = fwd.layers[l]
                 .w
                 .data
                 .iter()
@@ -751,7 +542,7 @@ fn mpc_party(
                 .map(|(a, b)| fixed::decode(a.wrapping_add(*b)))
                 .collect();
             params.push((format!("w{l}"), w));
-            if let Some(b) = &layers[l].b {
+            if let Some(b) = &fwd.layers[l].b {
                 let bb = p.recv_u64s(peer)?;
                 let bias: Vec<f64> = b
                     .iter()
@@ -763,8 +554,8 @@ fn mpc_party(
         }
     } else {
         for l in 0..n_layers {
-            p.send(peer, Payload::U64s(layers[l].w.data.clone()))?;
-            if let Some(b) = &layers[l].b {
+            p.send(peer, Payload::U64s(fwd.layers[l].w.data.clone()))?;
+            if let Some(b) = &fwd.layers[l].b {
                 p.send(peer, Payload::U64s(b.clone()))?;
             }
         }
@@ -786,84 +577,6 @@ fn apply_update(param: &mut [u64], grad: &[u64], lr_enc: u64, role: u8) {
         let scaled = trunc_share_val(gv.wrapping_mul(lr_enc), role);
         *pv = pv.wrapping_sub(scaled);
     }
-}
-
-/// Pull a matrix triple requested at prefetch under `tag`: A consumes its
-/// (possibly pre-expanded) feed material, B expands its seed at point of
-/// use.
-fn get_triple(
-    p: &mut dyn Channel,
-    feed: &mut Option<DealerFeed>,
-    role: u8,
-    m: usize,
-    k: usize,
-    n: usize,
-    tag: u64,
-) -> Result<MatTriple> {
-    match feed {
-        Some(feed) => match feed.next(p, tag)? {
-            Material::Mat(t) if t.u.shape() == (m, k) && t.v.shape() == (k, n) => Ok(t),
-            Material::Mat(t) => Err(Error::Protocol(format!(
-                "dealer feed shape drift: wanted ({m},{k})x({k},{n}), got {:?}x{:?}",
-                t.u.shape(),
-                t.v.shape()
-            ))),
-            _ => Err(Error::Protocol("dealer feed kind drift: wanted Mat".into())),
-        },
-        None => {
-            debug_assert_ne!(role, 0);
-            dealer::recv_mat_triple_b_tagged(p, ids::DEALER, m, k, n, tag)
-        }
-    }
-}
-
-fn get_elem_triple(
-    p: &mut dyn Channel,
-    feed: &mut Option<DealerFeed>,
-    role: u8,
-    len: usize,
-    tag: u64,
-) -> Result<ElemTriple> {
-    match feed {
-        Some(feed) => match feed.next(p, tag)? {
-            Material::Elem(t) if t.u.len() == len => Ok(t),
-            Material::Elem(t) => Err(Error::Protocol(format!(
-                "dealer feed shape drift: wanted {len} lanes, got {}",
-                t.u.len()
-            ))),
-            _ => Err(Error::Protocol("dealer feed kind drift: wanted Elem".into())),
-        },
-        None => {
-            debug_assert_ne!(role, 0);
-            dealer::recv_elem_triple_b_tagged(p, ids::DEALER, len, tag)
-        }
-    }
-}
-
-/// DReLU over a share vector via a prefetched dealer bundle.
-fn drelu(
-    p: &mut dyn Channel,
-    feed: &mut Option<DealerFeed>,
-    role: u8,
-    x: &[u64],
-    tag: u64,
-) -> Result<Vec<u64>> {
-    let lanes = x.len();
-    let mut bundle = match feed {
-        Some(feed) => match feed.next(p, tag)? {
-            Material::Bool(b) if b.eda.r_arith.len() == lanes => b,
-            Material::Bool(b) => {
-                return Err(Error::Protocol(format!(
-                    "dealer feed shape drift: wanted {lanes} lanes, got {}",
-                    b.eda.r_arith.len()
-                )))
-            }
-            _ => return Err(Error::Protocol("dealer feed kind drift: wanted Bool".into())),
-        },
-        None => dealer::recv_bool_bundle_b_tagged(p, ids::DEALER, lanes, tag)?,
-    };
-    let peer = if role == 0 { 3 } else { 1 };
-    drelu_arith(p, peer, role, x, &bundle.eda, &mut bundle.bank, &bundle.dab)
 }
 
 /// Plaintext forward with the MPC piecewise activations (evaluation).
@@ -906,6 +619,8 @@ mod tests {
     use crate::config::{TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
     use crate::netsim::LinkSpec;
+    use crate::protocols::fwd::mpc_batch_script;
+    use crate::smpc::dealer::Req;
 
     #[test]
     fn secureml_transports_are_transcript_equal() {
@@ -953,7 +668,7 @@ mod tests {
     #[test]
     fn batch_script_matches_layer_plan() {
         let (dims, acts, _) = layer_plan(&FRAUD);
-        let script = batch_script(&dims, &acts, 64);
+        let script = mpc_batch_script(&dims, &acts, 64);
         // fraud = 3 sigmoid layers: fwd (mat + 2 bool + elem) * 3,
         // bwd per layer: elem + g_W mat (+ g_in mat above layer 0)
         let mats = script.iter().filter(|r| matches!(r, Req::Mat(..))).count();

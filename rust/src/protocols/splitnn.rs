@@ -10,15 +10,20 @@
 //! Cut-layer width is `h1_dim` split evenly across holders, so the server
 //! stack reuses the same AOT graphs as SPNN.
 //!
+//! The per-batch forward lives in the shared forward layer
+//! ([`super::fwd::SplitHolderFwd`] / [`super::fwd::SplitServerFwd`]); the
+//! role bodies here add the training-only label gradients / backward, and
+//! the same forward objects answer inference requests after training
+//! (the **server** is the scoring role — it owns the label layer).
+//!
 //! The party loops run on the shared [`run_pipeline`] batch-stage state
 //! machine: holders stage their (value-independent) feature-block decode
 //! in `Prefetch`, send cut-layer activations in `Submit` and consume the
 //! server's gradients in `Complete`, so the knob sweep in the pipeline
 //! bench covers this baseline too.
 
-use std::collections::VecDeque;
-
-use super::common::{run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
+use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
+use super::fwd::{FeatureSource, SplitHolderFwd, SplitServerFwd};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, Dataset, VerticalSplit};
@@ -27,6 +32,7 @@ use crate::nn::MatF64;
 use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, TensorIn};
+use crate::serve::{self, ServeOpts, ServeQueue, ServeRole};
 use crate::transport::Channel;
 use crate::{Error, Result};
 
@@ -35,6 +41,83 @@ pub struct SplitNn;
 /// Cut-layer split: how many h1 units each holder produces.
 fn unit_split(h1: usize, k: usize) -> VerticalSplit {
     VerticalSplit::even(h1, k)
+}
+
+impl SplitNn {
+    /// Build the party roster; with `serve` set the holders + server stay
+    /// resident and score request rows of the held-out table (the server
+    /// is the responder — it owns the label layer by design).
+    fn build(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+        serve: Option<(ServeOpts, ServeQueue)>,
+    ) -> Result<Deployment> {
+        let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
+        let usplit = unit_split(cfg.h1_dim, n_holders);
+        let plan = batch_plan(train.len(), tc.batch);
+        let params = ModelParams::init(cfg, tc.seed);
+
+        let mut names = vec!["coord".to_string(), "server".to_string(), "dealer".to_string()];
+        for j in 0..n_holders {
+            names.push(format!("holder{j}"));
+        }
+        let role_serve = serve.as_ref().map(|(o, _)| ServeRole { depth: o.depth });
+        let mut fns: Vec<PartyFn> = Vec::new();
+
+        // coordinator (the serve request front when serving; SplitNN's
+        // responder is the server — it owns the label layer)
+        {
+            let workers: Vec<usize> =
+                (1..names.len()).filter(|&i| i != ids::DEALER).collect();
+            let serve_workers: Vec<usize> = std::iter::once(ids::SERVER)
+                .chain((0..n_holders).map(ids::holder))
+                .collect();
+            fns.push(serve::coordinator_role(
+                tc,
+                workers,
+                ids::SERVER,
+                serve_workers,
+                ids::SERVER,
+                test.len(),
+                serve,
+            ));
+        }
+        // server (owns labels in SplitNN!)
+        {
+            let cfg = cfg.clone();
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let y = train.y.clone();
+            let srv = role_serve;
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                server_role(p, &cfg, &tc, &plan, &y, params, n_holders, srv)
+            }));
+        }
+        // dealer: unused in SplitNN — parks until the process ends
+        fns.push(Box::new(move |_p: &mut dyn Channel| Ok(PartyOut::default())));
+        // holders: encoder init derived from the seed (holder j maps its
+        // d_j features to its u_j cut-layer units)
+        for j in 0..n_holders {
+            let tc = tc.clone();
+            let plan = plan.clone();
+            let xj = fsplit.slice_x(&train.x, cfg.n_features, j);
+            let serve_xj =
+                role_serve.map(|_| fsplit.slice_x(&test.x, cfg.n_features, j));
+            let dj = fsplit.width(j);
+            let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
+            let enc = MatF64::xavier(&mut rng, dj, usplit.width(j));
+            let cfg = cfg.clone();
+            let srv = role_serve;
+            fns.push(Box::new(move |p: &mut dyn Channel| {
+                holder_role(p, &cfg, &tc, &plan, j, xj, dj, enc, srv, serve_xj)
+            }));
+        }
+        Ok(Deployment { names, fns })
+    }
 }
 
 impl Trainer for SplitNn {
@@ -47,55 +130,24 @@ impl Trainer for SplitNn {
         cfg: &ModelConfig,
         tc: &TrainConfig,
         train: &Dataset,
-        _test: &Dataset,
+        test: &Dataset,
         n_holders: usize,
     ) -> Result<Deployment> {
-        let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
-        let usplit = unit_split(cfg.h1_dim, n_holders);
-        let plan = super::spnn::batch_plan(train.len(), tc.batch);
-        let params = ModelParams::init(cfg, tc.seed);
+        self.build(cfg, tc, train, test, n_holders, None)
+    }
 
-        let mut names = vec!["coord".to_string(), "server".to_string(), "dealer".to_string()];
-        for j in 0..n_holders {
-            names.push(format!("holder{j}"));
-        }
-        let mut fns: Vec<PartyFn> = Vec::new();
-
-        // coordinator
-        {
-            let workers: Vec<usize> = (1..names.len()).filter(|&i| i != ids::DEALER).collect();
-            let epochs = tc.epochs;
-            fns.push(Box::new(move |p: &mut dyn Channel| {
-                parties::coordinator_run(p, &workers, ids::SERVER, epochs)
-            }));
-        }
-        // server (owns labels in SplitNN!)
-        {
-            let cfg = cfg.clone();
-            let tc = tc.clone();
-            let plan = plan.clone();
-            let y = train.y.clone();
-            fns.push(Box::new(move |p: &mut dyn Channel| {
-                server_role(p, &cfg, &tc, &plan, &y, params, n_holders)
-            }));
-        }
-        // dealer: unused in SplitNN — parks until the process ends
-        fns.push(Box::new(move |_p: &mut dyn Channel| Ok(PartyOut::default())));
-        // holders: encoder init derived from the seed (holder j maps its
-        // d_j features to its u_j cut-layer units)
-        for j in 0..n_holders {
-            let tc = tc.clone();
-            let plan = plan.clone();
-            let xj = fsplit.slice_x(&train.x, cfg.n_features, j);
-            let dj = fsplit.width(j);
-            let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
-            let enc = MatF64::xavier(&mut rng, dj, usplit.width(j));
-            let cfg = cfg.clone();
-            fns.push(Box::new(move |p: &mut dyn Channel| {
-                holder_role(p, &cfg, &tc, &plan, j, xj, dj, enc)
-            }));
-        }
-        Ok(Deployment { names, fns })
+    #[allow(clippy::too_many_arguments)]
+    fn serve_deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+        opts: &ServeOpts,
+        queue: ServeQueue,
+    ) -> Result<Deployment> {
+        self.build(cfg, tc, train, test, n_holders, Some((opts.clone(), queue)))
     }
 
     fn finish(
@@ -142,10 +194,17 @@ impl Trainer for SplitNn {
         // digest over everything the composite model trains: the holders'
         // encoders plus the server stack and label layer
         let mut digest = Fnv::new();
-        for enc in &encoders {
+        let mut params_out: Vec<(String, Vec<f64>)> = Vec::new();
+        for (j, enc) in encoders.iter().enumerate() {
             digest.add_f64s(&enc.data);
+            params_out.push((format!("enc{j}"), enc.data.clone()));
         }
         digest.add_u64(sp.digest());
+        for (i, m) in sp.server.iter().enumerate() {
+            params_out.push((format!("server{i}"), m.data.clone()));
+        }
+        params_out.push(("wy".to_string(), sp.wy.data.clone()));
+        params_out.push(("by".to_string(), sp.by.data.clone()));
 
         Ok(TrainReport {
             protocol: self.name().into(),
@@ -158,6 +217,7 @@ impl Trainer for SplitNn {
             offline_bytes: net.offline_bytes,
             stages: net.stages,
             weight_digest: digest.0,
+            params: params_out,
             wall_seconds,
         })
     }
@@ -170,16 +230,19 @@ fn server_role(
     tc: &TrainConfig,
     plan: &[(usize, usize)],
     y: &[f32],
-    mut params: ModelParams,
+    params: ModelParams,
     n_holders: usize,
+    srv: Option<ServeRole>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
-    let mut engine = Engine::load_default()?;
     let mut up = Updater::new(tc, cfg, tc.seed ^ 0x3e7);
     let cap = ModelConfig::pick_batch(tc.batch);
     let h1 = cfg.h1_dim;
     let hl = cfg.hl_dim();
     let usplit = unit_split(h1, n_holders);
+    // the forward layer owns the server stack + label layer and the cut
+    // concatenation; training below updates fwd.params in place
+    let mut fwd = SplitServerFwd::new(cfg, tc, params, n_holders, usplit.clone())?;
     let mut times = Vec::new();
     let mut losses = Vec::new();
 
@@ -194,30 +257,8 @@ fn server_role(
             }
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
-            p.set_stage("server");
-            // gather cut-layer blocks from every holder, concat by unit range
-            let mut h1_pad = vec![0.0f32; cap * h1];
-            for j in 0..n_holders {
-                let blk = p.recv_tagged(ids::holder(j), tag)?.into_f32s()?;
-                let (us, ue) = usplit.ranges[j];
-                let w = ue - us;
-                if blk.len() != rows * w {
-                    return Err(Error::Protocol("splitnn: cut block size".into()));
-                }
-                for r in 0..rows {
-                    h1_pad[r * h1 + us..r * h1 + ue]
-                        .copy_from_slice(&blk[r * w..(r + 1) * w]);
-                }
-            }
-            let server_f32 = params.server_f32();
-            let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
-            for sp in &server_f32 {
-                inputs.push(TensorIn::F32(sp));
-            }
-            let hl_act = engine
-                .execute(&cfg.artifact("server_fwd", cap), &inputs)?
-                .remove(0)
-                .f32()?;
+            // gather cut-layer blocks + hidden stack (the forward layer)
+            let (h1_pad, hl_act) = fwd.hidden(p, b)?;
             // label layer runs on the SERVER (labels leaked by design)
             let mut y_pad = vec![0.0f32; cap];
             y_pad[..rows].copy_from_slice(&y[s..s + rows]);
@@ -225,9 +266,9 @@ fn server_role(
             for m in mask.iter_mut().take(rows) {
                 *m = 1.0;
             }
-            let wy = params.wy_f32();
-            let by = params.by_f32();
-            let outs = engine.execute(
+            let wy = fwd.params.wy_f32();
+            let by = fwd.params.by_f32();
+            let outs = fwd.engine.execute(
                 &cfg.artifact("label_grad", cap),
                 &[
                     TensorIn::F32(&hl_act),
@@ -241,25 +282,26 @@ fn server_role(
             let g_hl = outs[2].clone().f32()?;
             let g_wy = outs[3].clone().f32()?;
             let g_by = outs[4].clone().f32()?;
-            up.step_mat_f32(&mut params.wy, &g_wy);
-            up.step_mat_f32(&mut params.by, &g_by);
+            up.step_mat_f32(&mut fwd.params.wy, &g_wy);
+            up.step_mat_f32(&mut fwd.params.by, &g_by);
 
             // backward through the server stack
             let mut g_hl_pad = vec![0.0f32; cap * hl];
             g_hl_pad.copy_from_slice(&g_hl);
+            let server_f32 = fwd.params.server_f32();
             let mut inputs: Vec<TensorIn> =
                 vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl_pad)];
             for sp in &server_f32 {
                 inputs.push(TensorIn::F32(sp));
             }
-            let mut outs = engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
+            let mut outs = fwd.engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
             let g_params: Vec<Vec<f32>> = outs
                 .split_off(1)
                 .into_iter()
                 .map(|t| t.f32())
                 .collect::<Result<_>>()?;
             let g_h1 = outs.remove(0).f32()?;
-            for (m, g) in params.server.iter_mut().zip(&g_params) {
+            for (m, g) in fwd.params.server.iter_mut().zip(&g_params) {
                 up.step_mat_f32(m, g);
             }
             up.tick();
@@ -281,14 +323,21 @@ fn server_role(
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
     }
     parties::await_stop(p)?;
-    let mut out_params: Vec<(String, Vec<f64>)> = params
+
+    // ---- serving: the server is the scoring role (owns the head) ----
+    if let Some(sr) = srv {
+        serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
+    }
+
+    let mut out_params: Vec<(String, Vec<f64>)> = fwd
+        .params
         .server
         .iter()
         .enumerate()
         .map(|(i, m)| (format!("server{i}"), m.data.clone()))
         .collect();
-    out_params.push(("wy".to_string(), params.wy.data));
-    out_params.push(("by".to_string(), params.by.data));
+    out_params.push(("wy".to_string(), fwd.params.wy.data.clone()));
+    out_params.push(("by".to_string(), fwd.params.by.data.clone()));
     Ok(PartyOut {
         sim_time: p.now(),
         epoch_times: times,
@@ -307,42 +356,31 @@ fn holder_role(
     j: usize,
     xj: Vec<f32>,
     dj: usize,
-    mut w: MatF64,
+    enc: MatF64,
+    srv: Option<ServeRole>,
+    serve_xj: Option<Vec<f32>>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x591 + j as u64));
+    // the forward layer owns the encoder; the backward updates it in place
+    let mut fwd = SplitHolderFwd::new(enc, FeatureSource::slice(xj, dj));
     for _ in 0..epochs {
-        // decoded feature blocks staged ahead; in-flight block for backward
-        let mut staged: VecDeque<MatF64> = VecDeque::new();
+        // in-flight block for backward
         let mut inflight: Option<MatF64> = None;
         run_pipeline(plan, tc.pipeline_depth, |step, b| {
-            let (s, rows) = (b.start, b.rows);
             match step {
-                Step::Prefetch => {
-                    p.set_stage("prefetch");
-                    staged.push_back(MatF64::from_f32(
-                        rows,
-                        dj,
-                        &xj[s * dj..(s + rows) * dj],
-                    ));
-                    Ok(())
-                }
+                Step::Prefetch => fwd.prefetch(p, b),
                 Step::Submit => {
-                    p.set_stage("cut-fwd");
-                    let x = staged.pop_front().expect("prefetch before submit");
-                    // encoder forward: pre-activation units (server applies act)
-                    let z = x.matmul(&w);
-                    p.send_tagged(ids::SERVER, b.tag(), Payload::F32s(z.to_f32()))?;
-                    inflight = Some(x);
+                    inflight = Some(fwd.submit(p, b)?);
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("cut-bwd");
                     let x = inflight.take().expect("submit before complete");
                     let g = p.recv_tagged(ids::SERVER, b.tag())?.into_f32s()?;
-                    let g_m = MatF64::from_f32(rows, w.cols, &g);
+                    let g_m = MatF64::from_f32(b.rows, fwd.enc.cols, &g);
                     let g_w = x.transpose().matmul(&g_m);
-                    up.step_mat_f32(&mut w, &g_w.to_f32());
+                    up.step_mat_f32(&mut fwd.enc, &g_w.to_f32());
                     up.tick();
                     Ok(())
                 }
@@ -350,9 +388,16 @@ fn holder_role(
         })?;
     }
     parties::await_stop(p)?;
+
+    // ---- serving: score requests against the held-out table ----
+    if let Some(sr) = srv {
+        fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+        serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
+    }
+
     Ok(PartyOut {
         sim_time: p.now(),
-        params: vec![("enc".to_string(), w.data)],
+        params: vec![("enc".to_string(), fwd.enc.data)],
         ..Default::default()
     })
 }

@@ -29,31 +29,38 @@
 //!    `g_theta_j = X_j^T · g_h1` *locally in plaintext* (both operands are
 //!    known to it) and updates with SGD or SGLD.
 //!
+//! The per-batch **forward** computations live in the shared forward layer
+//! ([`super::fwd`]): the role bodies here wrap [`SpnnHolderFwd`] /
+//! [`SpnnServerFwd`] / [`SpnnHeadFwd`] with the training-only pieces
+//! (label gradients, backward passes, weight updates). The same forward
+//! objects answer inference requests after training when the deployment
+//! is built through [`Trainer::serve_deployment`] (`crate::serve`).
+//!
 //! **Pipelining** (`TrainConfig::pipeline_depth`): every party loop runs on
 //! the shared [`run_pipeline`] batch-stage state machine. The holders'
 //! value-independent crypto — Paillier nonce exponentiations (HE), share
 //! masks / input encodes / dealer triple requests (SS) — runs in the
 //! `Prefetch` stage up to `depth - 1` batches ahead, inside the window
 //! where the holder otherwise idle-waits on `server_fwd`/`server_bwd`.
+//! On SPNN-SS, A's dealer replies are additionally pumped and expanded
+//! inside the prefetch window (the SecureML `DealerFeed` pattern).
 //! Weight updates themselves stay in schedule order, so the trained model
 //! is bit-identical at any depth (see `spnn_depths_are_transcript_equal`).
 
-use std::collections::VecDeque;
-
-use super::common::{evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
+use super::common::{batch_plan, evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
+use super::fwd::{FeatureSource, SpnnHeadFwd, SpnnHolderFwd, SpnnLabelFwd, SpnnServerFwd};
 use super::Trainer;
 use crate::bignum::BigUint;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{Dataset, VerticalSplit};
-use crate::exec;
 use crate::netsim::Payload;
 use crate::nn::MatF64;
-use crate::paillier::pack::{self, Packing};
-use crate::paillier::{keygen, NoncePool, PublicKey};
+use crate::paillier::{keygen, PublicKey};
 use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
 use crate::rng::ChaChaRng;
-use crate::runtime::{Engine, TensorIn};
-use crate::smpc::{beaver_matmul, dealer, share2_from_mask, trunc_share_mat, RingMat};
+use crate::runtime::TensorIn;
+use crate::serve::{self, ServeOpts, ServeQueue, ServeRole};
+use crate::smpc::dealer;
 use crate::transport::Channel;
 use crate::{Error, Result};
 
@@ -62,34 +69,18 @@ pub struct Spnn {
     pub he: bool,
 }
 
-/// Batch boundaries shared by every party (deterministic schedule).
-pub(crate) fn batch_plan(n: usize, batch: usize) -> Vec<(usize, usize)> {
-    let mut out = Vec::new();
-    let mut s = 0;
-    while s < n {
-        let rows = batch.min(n - s);
-        out.push((s, rows));
-        s += rows;
-    }
-    out
-}
-
-impl Trainer for Spnn {
-    fn name(&self) -> &'static str {
-        if self.he {
-            "SPNN-HE"
-        } else {
-            "SPNN-SS"
-        }
-    }
-
-    fn deployment(
+impl Spnn {
+    /// Build the party roster; with `serve` set, every role stays resident
+    /// after training and answers streaming inference requests against the
+    /// held-out table (the coordinator becomes the request front).
+    fn build(
         &self,
         cfg: &ModelConfig,
         tc: &TrainConfig,
         train: &Dataset,
-        _test: &Dataset,
+        test: &Dataset,
         n_holders: usize,
+        serve: Option<(ServeOpts, ServeQueue)>,
     ) -> Result<Deployment> {
         if n_holders < 2 {
             return Err(Error::Config("SPNN needs >= 2 data holders".into()));
@@ -104,15 +95,25 @@ impl Trainer for Spnn {
             names.push(format!("holder{i}"));
         }
 
+        let role_serve = serve.as_ref().map(|(o, _)| ServeRole { depth: o.depth });
+
         let mut fns: Vec<PartyFn> = Vec::new();
 
-        // --- coordinator ---
+        // --- coordinator (the serve request front when serving) ---
         {
             let workers: Vec<usize> = (1..n_parties).collect();
-            let epochs = tc.epochs;
-            fns.push(Box::new(move |p: &mut dyn Channel| {
-                parties::coordinator_run(p, &workers, ids::SERVER, epochs)
-            }));
+            let serve_workers: Vec<usize> = std::iter::once(ids::SERVER)
+                .chain((0..n_holders).map(ids::holder))
+                .collect();
+            fns.push(serve::coordinator_role(
+                tc,
+                workers,
+                ids::SERVER,
+                serve_workers,
+                ids::holder(0),
+                test.len(),
+                serve,
+            ));
         }
 
         // --- server ---
@@ -122,8 +123,9 @@ impl Trainer for Spnn {
             let plan = plan.clone();
             let params = params.clone();
             let he = self.he;
+            let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                server_role(p, &cfg, &tc, &plan, params, he, n_holders)
+                server_role(p, &cfg, &tc, &plan, params, he, n_holders, srv)
             }));
         }
 
@@ -138,6 +140,9 @@ impl Trainer for Spnn {
                     parties::await_stop(p)?;
                 } else {
                     parties::await_start(p)?;
+                    // under serving, A keeps the dealer alive through the
+                    // serve phase (dealer::idle relaxes its timeout) and
+                    // stops it on shutdown
                     dealer::serve(p, ids::holder(0), ids::holder(1), seed)?;
                     parties::await_stop(p)?;
                 }
@@ -155,6 +160,10 @@ impl Trainer for Spnn {
             // holder j's private inputs
             let xj = split.slice_x(&train.x, cfg.n_features, j);
             let yj = if j == 0 { Some(train.y.clone()) } else { None };
+            // while serving, requests address the held-out table — each
+            // holder derives its private slice of it locally
+            let serve_xj =
+                role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, j));
             // holder j's theta block: rows [s, e) of theta0
             let (s, e) = split.ranges[j];
             let h = cfg.h1_dim;
@@ -163,12 +172,51 @@ impl Trainer for Spnn {
                 h,
                 params.theta0.data[s * h..e * h].to_vec(),
             );
+            let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                holder_role(p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, he)
+                holder_role(
+                    p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, he, srv,
+                    serve_xj,
+                )
             }));
         }
 
         Ok(Deployment { names, fns })
+    }
+}
+
+impl Trainer for Spnn {
+    fn name(&self) -> &'static str {
+        if self.he {
+            "SPNN-HE"
+        } else {
+            "SPNN-SS"
+        }
+    }
+
+    fn deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+    ) -> Result<Deployment> {
+        self.build(cfg, tc, train, test, n_holders, None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn serve_deployment(
+        &self,
+        cfg: &ModelConfig,
+        tc: &TrainConfig,
+        train: &Dataset,
+        test: &Dataset,
+        n_holders: usize,
+        opts: &ServeOpts,
+        queue: ServeQueue,
+    ) -> Result<Deployment> {
+        self.build(cfg, tc, train, test, n_holders, Some((opts.clone(), queue)))
     }
 
     fn finish(
@@ -210,8 +258,17 @@ impl Trainer for Spnn {
         fp.wy.data.copy_from_slice(wy);
         fp.by.data.copy_from_slice(by);
 
-        let mut engine = Engine::load_default()?;
+        let mut engine = crate::runtime::Engine::load_default()?;
         let (auc, test_loss) = evaluate(&mut engine, cfg, &fp, test)?;
+
+        // expose the assembled blocks so callers can run reference forward
+        // passes on the trained weights (serve parity tests)
+        let mut params_out = vec![("theta0".to_string(), fp.theta0.data.clone())];
+        for (i, m) in fp.server.iter().enumerate() {
+            params_out.push((format!("server{i}"), m.data.clone()));
+        }
+        params_out.push(("wy".to_string(), fp.wy.data.clone()));
+        params_out.push(("by".to_string(), fp.by.data.clone()));
 
         Ok(TrainReport {
             protocol: self.name().to_string(),
@@ -224,6 +281,7 @@ impl Trainer for Spnn {
             offline_bytes: net.offline_bytes,
             stages: net.stages,
             weight_digest: fp.digest(),
+            params: params_out,
             wall_seconds,
         })
     }
@@ -239,16 +297,14 @@ fn server_role(
     cfg: &ModelConfig,
     tc: &TrainConfig,
     plan: &[(usize, usize)],
-    mut params: ModelParams,
+    params: ModelParams,
     he: bool,
     n_holders: usize,
+    srv: Option<ServeRole>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
-    let mut engine = Engine::load_default()?;
     let mut up = Updater::new(tc, cfg, tc.seed ^ 0x5e7);
-    let exec = exec::pool();
     let a = ids::holder(0);
-    let last_holder = ids::holder(n_holders - 1);
 
     // HE setup: the server generates the keypair and broadcasts pk (§3.4)
     let sk = if he {
@@ -262,12 +318,10 @@ fn server_role(
     } else {
         None
     };
-    // packing geometry is derived from (pk, slot_bits, holder count) on
-    // both sides — nothing extra travels on the wire
-    let packing = match &sk {
-        Some(sk) => Some(Packing::new(&sk.pk, tc.slot_bits, n_holders)?),
-        None => None,
-    };
+    // the forward layer owns the hidden stack, the graph engine and (under
+    // HE) the secret key + packing; the backward below trains fwd.params in
+    // place, so the serve phase reads the final weights
+    let mut fwd = SpnnServerFwd::new(cfg, tc, params, sk, n_holders)?;
 
     let cap = crate::config::ModelConfig::pick_batch(tc.batch);
     let h1_dim = cfg.h1_dim;
@@ -287,58 +341,9 @@ fn server_role(
                 // the server has no value-independent lookahead work: its
                 // entire per-batch load depends on the holders' h1
                 Step::Prefetch => Ok(()),
+                // ---- receive h1, hidden stack forward, hL to A ----
                 Step::Submit => {
-                    p.set_stage("server-fwd");
-                    // ---- receive h1 (reconstruct from shares or decrypt) ----
-                    let h1_f32: Vec<f32> = if he {
-                        let sk = sk.as_ref().unwrap();
-                        let packing = packing.as_ref().unwrap();
-                        let (data, ct_bytes, count) =
-                            p.recv_tagged(last_holder, tag)?.into_cipher_block()?;
-                        let expect = packing.ct_count(rows * h1_dim);
-                        if count != expect {
-                            return Err(Error::Protocol(format!(
-                                "server: expected {expect} packed ciphertexts, got {count}"
-                            )));
-                        }
-                        let cts = pack::block_to_cts(&data, ct_bytes, count)?;
-                        // parallel CRT decryptions, then per-slot k-holder sums
-                        let sums = pack::decrypt_batch(
-                            sk,
-                            packing,
-                            &cts,
-                            rows * h1_dim,
-                            n_holders,
-                            &exec,
-                        )?;
-                        sums.iter().map(|&s| crate::fixed::decode(s as u64) as f32).collect()
-                    } else {
-                        let sa = p.recv_tagged(a, tag)?.into_u64s()?;
-                        let sb = p.recv_tagged(ids::holder(1), tag)?.into_u64s()?;
-                        if sa.len() != rows * h1_dim || sb.len() != sa.len() {
-                            return Err(Error::Protocol("server: h1 share size".into()));
-                        }
-                        sa.iter()
-                            .zip(&sb)
-                            .map(|(x, y)| crate::fixed::decode(x.wrapping_add(*y)) as f32)
-                            .collect()
-                    };
-
-                    // ---- forward through the hidden stack (AOT graph) ----
-                    let mut h1_pad = vec![0.0f32; cap * h1_dim];
-                    h1_pad[..rows * h1_dim].copy_from_slice(&h1_f32);
-                    let server_f32 = params.server_f32();
-                    let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1_pad)];
-                    for sp in &server_f32 {
-                        inputs.push(TensorIn::F32(sp));
-                    }
-                    let hl = engine
-                        .execute(&cfg.artifact("server_fwd", cap), &inputs)?
-                        .remove(0)
-                        .f32()?;
-                    // send hL (only the real rows) to the label holder
-                    p.send_tagged(a, tag, Payload::F32s(hl[..rows * hl_dim].to_vec()))?;
-                    inflight_h1 = Some(h1_pad);
+                    inflight_h1 = Some(fwd.run(p, b)?);
                     Ok(())
                 }
                 Step::Complete => {
@@ -348,14 +353,14 @@ fn server_role(
                     let g_hl_rows = p.recv_tagged(a, tag)?.into_f32s()?;
                     let mut g_hl = vec![0.0f32; cap * hl_dim];
                     g_hl[..rows * hl_dim].copy_from_slice(&g_hl_rows);
-                    let server_f32 = params.server_f32();
+                    let server_f32 = fwd.params.server_f32();
                     let mut inputs: Vec<TensorIn> =
                         vec![TensorIn::F32(&h1_pad), TensorIn::F32(&g_hl)];
                     for sp in &server_f32 {
                         inputs.push(TensorIn::F32(sp));
                     }
                     let mut outs =
-                        engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
+                        fwd.engine.execute(&cfg.artifact("server_bwd", cap), &inputs)?;
                     let g_params: Vec<Vec<f32>> = outs
                         .split_off(1)
                         .into_iter()
@@ -364,7 +369,7 @@ fn server_role(
                     let g_h1 = outs.remove(0).f32()?;
 
                     // update server params, broadcast g_h1 to all holders
-                    for (m, g) in params.server.iter_mut().zip(&g_params) {
+                    for (m, g) in fwd.params.server.iter_mut().zip(&g_params) {
                         up.step_mat_f32(m, g);
                     }
                     up.tick();
@@ -384,9 +389,16 @@ fn server_role(
         parties::report_epoch(p, loss_sum / plan.len() as f64)?;
     }
     parties::await_stop(p)?;
+
+    // ---- serving: stay resident and answer inference request batches ----
+    if let Some(sr) = srv {
+        serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
+    }
+
     // hand the trained hidden stack to whichever process assembles the
     // final model (bit-exact f64 blocks; crosses the wire in launch mode)
-    out.params = params
+    out.params = fwd
+        .params
         .server
         .iter()
         .enumerate()
@@ -401,16 +413,6 @@ fn server_role(
 // Holder role
 // ---------------------------------------------------------------------------
 
-/// Value-independent SS material staged by the `Prefetch` step: the encoded
-/// feature block and the pre-drawn share masks (drawn in schedule order, so
-/// the RNG transcript is depth-invariant).
-struct SsPre {
-    xblk: MatF64,
-    x_ring: RingMat,
-    r_x: RingMat,
-    r_t: RingMat,
-}
-
 #[allow(clippy::too_many_arguments)]
 fn holder_role(
     p: &mut dyn Channel,
@@ -422,263 +424,58 @@ fn holder_role(
     split: &VerticalSplit,
     xj: Vec<f32>,
     yj: Option<Vec<f32>>,
-    mut theta_j: MatF64,
+    theta_j: MatF64,
     he: bool,
+    srv: Option<ServeRole>,
+    serve_xj: Option<Vec<f32>>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
     let dj = split.width(j);
     let h = cfg.h1_dim;
     let is_a = j == 0;
-    let is_b = j == 1;
-    let role: u8 = if is_a { 0 } else { 1 };
-    let _me = ids::holder(j);
-    let peer = if is_a { ids::holder(1) } else { ids::holder(0) };
-    let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0x401d + j as u64));
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x901 + j as u64));
-    let mut engine = if is_a || is_b || he {
-        Some(Engine::load_default()?)
-    } else {
-        None
-    };
 
-    let exec = exec::pool();
-
-    // HE setup: receive pk, derive the packing geometry, build a nonce pool
-    let (pk, mut pool, packing) = if he {
+    // the forward layer owns this holder's crypto state (HE: pk + packing +
+    // nonce pool; SS: mask RNG, staged material, A's dealer feed, Beaver
+    // engine) and the theta block, trained in place below
+    let src = FeatureSource::slice(xj, dj);
+    let mut fwd = if he {
+        // HE setup: receive pk; the forward layer derives the packing
+        // geometry and nonce pool from it (nothing extra travels)
         let n_bytes = p.recv(ids::SERVER)?.into_cipher()?.remove(0);
         let pk = PublicKey::from_n(BigUint::from_bytes_le(&n_bytes));
-        let pool = NoncePool::new(&pk, tc.paillier_short_exp);
-        let packing = Packing::new(&pk, tc.slot_bits, n_holders)?;
-        (Some(pk), Some(pool), Some(packing))
+        SpnnHolderFwd::new_he(cfg, tc, j, n_holders, split.clone(), src, theta_j, pk)?
     } else {
-        (None, None, None)
+        SpnnHolderFwd::new_ss(cfg, tc, j, n_holders, split.clone(), src, theta_j)?
     };
 
     // label-layer state (A only)
     let hl_dim = cfg.hl_dim();
-    let mut wy = MatF64::zeros(hl_dim, 1);
-    let mut by = MatF64::zeros(1, 1);
-    if is_a {
-        let init = ModelParams::init(cfg, tc.seed);
-        wy = init.wy;
-        by = init.by;
-    }
-    let total_d = cfg.n_features;
+    let mut head = if is_a { Some(SpnnHeadFwd::new(cfg, tc)?) } else { None };
     let cap = crate::config::ModelConfig::pick_batch(tc.batch);
-    let ring_art = cfg.artifact("ring_matmul", cap);
     let mut train_losses = Vec::new();
 
     for _epoch in 0..epochs {
         p.reset_clock();
         let mut loss_sum = 0.0;
-        // staged SS material (FIFO by batch index) and the in-flight
-        // feature block handed from Submit to Complete
-        let mut pre: VecDeque<SsPre> = VecDeque::new();
+        // the in-flight feature block handed from Submit to Complete
         let mut inflight: Option<MatF64> = None;
         run_pipeline(plan, tc.pipeline_depth, |step, b| {
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
             match step {
-                Step::Prefetch => {
-                    p.set_stage("prefetch");
-                    if he {
-                        // the Paillier nonce exponentiations are the
-                        // dominant holder cost and value-independent:
-                        // refill for this batch ahead of demand
-                        let packing = packing.as_ref().unwrap();
-                        let n_cts = packing.ct_count(rows * h);
-                        pool.as_mut().unwrap().refill_parallel(&mut rng, n_cts, &exec);
-                    } else {
-                        // encode the feature block and pre-draw the share
-                        // masks; A also fires the dealer triple request so
-                        // the dealer's matmul overlaps the online path
-                        let xblk =
-                            MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
-                        let x_ring =
-                            RingMat::encode_f64_with(&exec, rows, dj, &xblk.data);
-                        let r_x = RingMat::random(&mut rng, rows, dj);
-                        let r_t = RingMat::random(&mut rng, dj, h);
-                        if is_a {
-                            dealer::send_request_tagged(
-                                p,
-                                ids::DEALER,
-                                dealer::Req::Mat(rows, total_d, h),
-                                tag,
-                            )?;
-                        }
-                        pre.push_back(SsPre { xblk, x_ring, r_x, r_t });
-                    }
-                    Ok(())
-                }
+                Step::Prefetch => fwd.prefetch(p, b),
+                // ---- Algorithm 2 / 3 private-feature forward ----
                 Step::Submit => {
-                    let xblk = if he {
-                        // ---- Algorithm 3 (packed + pool-parallel) ----
-                        p.set_stage("he-chain");
-                        let xblk =
-                            MatF64::from_f32(rows, dj, &xj[s * dj..(s + rows) * dj]);
-                        let pk = pk.as_ref().unwrap();
-                        let pool = pool.as_mut().unwrap();
-                        let packing = packing.as_ref().unwrap();
-                        // local plaintext product, fixed-point encoded and
-                        // packed `slots` values per Paillier plaintext
-                        let prod = xblk.matmul(&theta_j); // rows x h
-                        let vals: Vec<i64> = prod
-                            .data
-                            .iter()
-                            .map(|&v| crate::fixed::encode(v) as i64)
-                            .collect();
-                        let n_cts = packing.ct_count(vals.len());
-                        let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
-                        let out_cts = if j == 0 {
-                            mine
-                        } else {
-                            // running ciphertext sum from holder j-1
-                            let (data, ct_bytes, count) = p
-                                .recv_tagged(ids::holder(j - 1), tag)?
-                                .into_cipher_block()?;
-                            if count != n_cts {
-                                return Err(Error::Protocol(format!(
-                                    "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
-                                )));
-                            }
-                            let prev = pack::block_to_cts(&data, ct_bytes, count)?;
-                            pack::add_batch(pk, &prev, &mine, &exec)?
-                        };
-                        let next =
-                            if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
-                        let ct_bytes = pk.ciphertext_bytes();
-                        let data = pack::cts_to_block(&out_cts, ct_bytes);
-                        p.send_tagged(
-                            next,
-                            tag,
-                            Payload::CipherBlock { data, ct_bytes, count: n_cts },
-                        )?;
-                        xblk
-                    } else {
-                        // ---- Algorithm 2 ----
-                        p.set_stage("share-mm");
-                        let SsPre { xblk, x_ring, r_x, r_t } =
-                            pre.pop_front().expect("prefetch before submit");
-                        let t_ring =
-                            RingMat::encode_f64_with(&exec, dj, h, &theta_j.data);
-                        if is_a || is_b {
-                            // 1) own block shares (masks pre-drawn)
-                            let (x_mine, x_theirs) = share2_from_mask(&x_ring, r_x);
-                            let (t_mine, t_theirs) = share2_from_mask(&t_ring, r_t);
-                            let mut buf = x_theirs.data;
-                            buf.extend_from_slice(&t_theirs.data);
-                            p.send_tagged(peer, tag, Payload::U64s(buf))?;
-                            let theirs = p.recv_tagged(peer, tag)?.into_u64s()?;
-                            let dpeer = split.width(if is_a { 1 } else { 0 });
-                            if theirs.len() != rows * dpeer + dpeer * h {
-                                return Err(Error::Protocol("holder: peer share size".into()));
-                            }
-                            let x_peer =
-                                RingMat::from_data(rows, dpeer, theirs[..rows * dpeer].to_vec());
-                            let t_peer =
-                                RingMat::from_data(dpeer, h, theirs[rows * dpeer..].to_vec());
-
-                            // 2) shares of the extra holders' blocks (j >= 2)
-                            let mut x_parts: Vec<(usize, RingMat)> = vec![
-                                (j, x_mine),
-                                (if is_a { 1 } else { 0 }, x_peer),
-                            ];
-                            let mut t_parts: Vec<(usize, RingMat)> = vec![
-                                (j, t_mine),
-                                (if is_a { 1 } else { 0 }, t_peer),
-                            ];
-                            for extra in 2..n_holders {
-                                let dx = split.width(extra);
-                                let buf =
-                                    p.recv_tagged(ids::holder(extra), tag)?.into_u64s()?;
-                                if buf.len() != rows * dx + dx * h {
-                                    return Err(Error::Protocol(
-                                        "holder: extra share size".into(),
-                                    ));
-                                }
-                                x_parts.push((
-                                    extra,
-                                    RingMat::from_data(rows, dx, buf[..rows * dx].to_vec()),
-                                ));
-                                t_parts.push((
-                                    extra,
-                                    RingMat::from_data(dx, h, buf[rows * dx..].to_vec()),
-                                ));
-                            }
-                            // concat in holder order (theta rows stack the same)
-                            x_parts.sort_by_key(|(i, _)| *i);
-                            t_parts.sort_by_key(|(i, _)| *i);
-                            let mut x_share = x_parts.remove(0).1;
-                            for (_, m) in x_parts {
-                                x_share = x_share.concat_cols(&m);
-                            }
-                            let mut t_share = t_parts.remove(0).1;
-                            for (_, m) in t_parts {
-                                t_share = t_share.concat_rows(&m);
-                            }
-                            debug_assert_eq!(x_share.shape(), (rows, total_d));
-                            debug_assert_eq!(t_share.shape(), (total_d, h));
-
-                            // 3) triple (requested at prefetch) + Beaver
-                            // matmul through the Pallas kernel
-                            let triple = if is_a {
-                                dealer::recv_mat_triple_a(
-                                    p, ids::DEALER, rows, total_d, h, tag,
-                                )?
-                            } else {
-                                dealer::recv_mat_triple_b_tagged(
-                                    p, ids::DEALER, rows, total_d, h, tag,
-                                )?
-                            };
-                            let eng = engine.as_mut().unwrap();
-                            // engine is behind &mut — wrap in RefCell for the closure
-                            let eng_cell = std::cell::RefCell::new(eng);
-                            let art = ring_art.clone();
-                            // the AOT Pallas kernel is the default hot path; the
-                            // §Perf pass measured a 3.5-5.5x interpret-mode CPU
-                            // overhead vs the native ring matmul, selectable via
-                            // SPNN_NATIVE_MM=1 (EXPERIMENTS.md §Perf)
-                            let native = std::env::var("SPNN_NATIVE_MM").is_ok();
-                            let mm = move |x: &RingMat, w: &RingMat| -> RingMat {
-                                if native {
-                                    x.matmul(w)
-                                } else {
-                                    eng_cell
-                                        .borrow_mut()
-                                        .ring_matmul(&art, x, w)
-                                        .expect("ring matmul artifact")
-                                }
-                            };
-                            let mut z = beaver_matmul(
-                                p, peer, role, &x_share, &t_share, &triple, &mm,
-                            )?;
-                            // 4) truncate my share, ship to the server
-                            trunc_share_mat(&mut z, role);
-                            p.send_tagged(ids::SERVER, tag, Payload::U64s(z.data))?;
-                        } else {
-                            // extra holder: share my block to A and B
-                            let (xa, xb) = share2_from_mask(&x_ring, r_x);
-                            let (ta, tb) = share2_from_mask(&t_ring, r_t);
-                            let mut buf_a = xa.data;
-                            buf_a.extend_from_slice(&ta.data);
-                            p.send_tagged(ids::holder(0), tag, Payload::U64s(buf_a))?;
-                            let mut buf_b = xb.data;
-                            buf_b.extend_from_slice(&tb.data);
-                            p.send_tagged(ids::holder(1), tag, Payload::U64s(buf_b))?;
-                        }
-                        xblk
-                    };
-                    inflight = Some(xblk);
+                    inflight = Some(fwd.submit(p, b)?);
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("label-bwd");
                     let xblk = inflight.take().expect("submit before complete");
                     // ---- label computations on A (§4.5) ----
-                    if is_a {
-                        let hl = p.recv_tagged(ids::SERVER, tag)?.into_f32s()?;
-                        let mut hl_pad = vec![0.0f32; cap * hl_dim];
-                        hl_pad[..rows * hl_dim].copy_from_slice(&hl);
+                    if let Some(head) = head.as_mut() {
+                        let hl_pad = head.recv_hidden(p, b)?;
                         let y = yj.as_ref().unwrap();
                         let mut y_pad = vec![0.0f32; cap];
                         y_pad[..rows].copy_from_slice(&y[s..s + rows]);
@@ -686,10 +483,9 @@ fn holder_role(
                         for m in mask.iter_mut().take(rows) {
                             *m = 1.0;
                         }
-                        let wy_f32 = wy.to_f32();
-                        let by_f32 = by.to_f32();
-                        let eng = engine.as_mut().unwrap();
-                        let outs = eng.execute(
+                        let wy_f32 = head.wy.to_f32();
+                        let by_f32 = head.by.to_f32();
+                        let outs = head.engine.execute(
                             &cfg.artifact("label_grad", cap),
                             &[
                                 TensorIn::F32(&hl_pad),
@@ -703,8 +499,8 @@ fn holder_role(
                         let g_hl = outs[2].clone().f32()?;
                         let g_wy = outs[3].clone().f32()?;
                         let g_by = outs[4].clone().f32()?;
-                        up.step_mat_f32(&mut wy, &g_wy);
-                        up.step_mat_f32(&mut by, &g_by);
+                        up.step_mat_f32(&mut head.wy, &g_wy);
+                        up.step_mat_f32(&mut head.by, &g_by);
                         p.send_tagged(
                             ids::SERVER,
                             tag,
@@ -724,7 +520,7 @@ fn holder_role(
                     }
                     let g_h1_m = MatF64::from_f32(rows, h, &g_h1);
                     let g_theta = xblk.transpose().matmul(&g_h1_m);
-                    up.step_mat_f32(&mut theta_j, &g_theta.to_f32());
+                    up.step_mat_f32(&mut fwd.theta, &g_theta.to_f32());
                     up.tick();
                     Ok(())
                 }
@@ -734,17 +530,38 @@ fn holder_role(
             train_losses.push(loss_sum / plan.len() as f64);
         }
     }
-    if is_a && !he {
+    if is_a && !he && srv.is_none() {
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
     parties::await_stop(p)?;
 
+    // ---- serving: swap to the held-out table and stay resident ----
+    if let Some(sr) = srv {
+        if is_a && !he {
+            // requests may be arbitrarily far apart from here on — relax
+            // the dealer's training-era deadlock timeout
+            dealer::idle(p, ids::DEALER)?;
+        }
+        fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+        match head.as_mut() {
+            Some(head) => {
+                let mut role = SpnnLabelFwd { holder: &mut fwd, head };
+                serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut role)?;
+            }
+            None => serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?,
+        }
+        if is_a && !he {
+            // the dealer served Beaver triples through the serve phase
+            dealer::stop(p, ids::DEALER)?;
+        }
+    }
+
     // hand the final blocks to the evaluation harness: this holder's
     // theta0 rows, plus the label layer from A
-    let mut params = vec![("theta".to_string(), theta_j.data)];
-    if is_a {
-        params.push(("wy".to_string(), wy.data));
-        params.push(("by".to_string(), by.data));
+    let mut params = vec![("theta".to_string(), fwd.theta.data)];
+    if let Some(head) = head {
+        params.push(("wy".to_string(), head.wy.data));
+        params.push(("by".to_string(), head.by.data));
     }
     Ok(PartyOut {
         sim_time: p.now(),
@@ -760,7 +577,7 @@ mod tests {
     use crate::config::{TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
     use crate::netsim::LinkSpec;
-    use crate::rng::{Pcg64, Rng64};
+    use crate::paillier::pack::Packing;
 
     fn artifacts_ready() -> bool {
         crate::runtime::default_artifact_dir().join("manifest.txt").exists()
@@ -827,40 +644,6 @@ mod tests {
         }
         assert_eq!(digests[0], digests[1], "HE over TCP diverged from netsim");
         assert_eq!(digests[0], digests[2], "HE over UDS diverged from netsim");
-    }
-
-    #[test]
-    fn batch_plan_covers_everything() {
-        assert_eq!(batch_plan(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
-        assert_eq!(batch_plan(4, 4), vec![(0, 4)]);
-        assert_eq!(batch_plan(3, 10), vec![(0, 3)]);
-    }
-
-    #[test]
-    fn batch_plan_properties() {
-        // property sweep: exact cover, contiguity, no empty batches, every
-        // batch but the last full, expected batch count
-        let mut rng = Pcg64::seed_from_u64(42);
-        for _ in 0..300 {
-            let n = (rng.next_u64() % 5000) as usize + 1;
-            let batch = (rng.next_u64() % 600) as usize + 1;
-            let plan = batch_plan(n, batch);
-            let mut cursor = 0usize;
-            for &(s, rows) in &plan {
-                assert_eq!(s, cursor, "gap or overlap at n={n} batch={batch}");
-                assert!(rows >= 1, "empty batch at n={n} batch={batch}");
-                assert!(rows <= batch, "oversized batch at n={n} batch={batch}");
-                cursor += rows;
-            }
-            assert_eq!(cursor, n, "plan does not cover n={n} batch={batch}");
-            for &(_, rows) in &plan[..plan.len() - 1] {
-                assert_eq!(rows, batch, "non-final partial batch n={n} batch={batch}");
-            }
-            assert_eq!(plan.len(), n.div_ceil(batch));
-            // last batch is the remainder (or a full batch)
-            let want_last = if n % batch == 0 { batch } else { n % batch };
-            assert_eq!(plan.last().unwrap().1, want_last);
-        }
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! The TCP **front door** of a serve session: `spnn serve` listens here
+//! for `spnn infer` clients.
+//!
+//! The protocol is deliberately minimal and rides the existing
+//! [`wire`](crate::transport::wire) framing: a client connects, writes one
+//! frame per request carrying a [`Payload::InferReq`] (its `tag` is the
+//! client's request id, echoed back), and reads one reply frame per
+//! request — [`Payload::InferResp`] with the scores, or a
+//! `Control("spnn-err ...")` frame naming the rejection. Connections
+//! stream: a client may keep the socket open and send many requests.
+//!
+//! Each accepted connection gets its own thread feeding the shared
+//! [`Request`] queue, so concurrent clients **coalesce** into shared
+//! crypto batches inside [`coordinator_serve`](super::coordinator_serve).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::{request_scores, Request};
+use crate::netsim::{Msg, Payload, Phase};
+use crate::transport::wire;
+use crate::{Error, Result};
+
+/// How long an idle client connection may sit between requests once the
+/// front door is draining toward a request quota (keeps the final join
+/// bounded).
+const CLIENT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Run the front door on an already-bound listener, feeding `tx`.
+///
+/// `max_requests > 0` makes the door close after that many requests have
+/// been answered (deterministic smoke tests / CI); `0` serves until the
+/// process dies. All queue senders are dropped before returning, so a
+/// caller that then drops its own handle stands the whole session down.
+pub fn run(
+    listener: TcpListener,
+    tx: mpsc::Sender<Request>,
+    max_requests: usize,
+) -> Result<()> {
+    let served = Arc::new(AtomicUsize::new(0));
+    let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Net(format!("front door set_nonblocking: {e}")))?;
+    loop {
+        if max_requests > 0 && served.load(Ordering::SeqCst) >= max_requests {
+            break;
+        }
+        // reap finished client threads so a long-lived door (the
+        // max_requests = 0 production mode) does not accumulate a
+        // JoinHandle per connect/disconnect cycle forever
+        clients.retain(|c| !c.is_finished());
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                let tx = tx.clone();
+                let served = served.clone();
+                eprintln!("spnn serve: client {addr} connected");
+                clients.push(std::thread::spawn(move || {
+                    if let Err(e) = client_loop(stream, tx, served, max_requests) {
+                        eprintln!("spnn serve: client {addr}: {e}");
+                    }
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(Error::Net(format!("front door accept: {e}"))),
+        }
+    }
+    // drop our sender before joining so no request can outlive the quota,
+    // then wait for the per-client threads (bounded by their idle timeout)
+    drop(tx);
+    for c in clients {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn client_loop(
+    mut stream: TcpStream,
+    tx: mpsc::Sender<Request>,
+    served: Arc<AtomicUsize>,
+    max_requests: usize,
+) -> Result<()> {
+    // the listener polls nonblocking; the accepted stream must block
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| Error::Net(format!("client unset nonblocking: {e}")))?;
+    stream.set_nodelay(true).ok();
+    if max_requests > 0 {
+        // bound the final join: an idle streaming client is disconnected
+        stream
+            .set_read_timeout(Some(CLIENT_IDLE_TIMEOUT))
+            .map_err(|e| Error::Net(format!("client read timeout: {e}")))?;
+    }
+    loop {
+        let Some(msg) = wire::read_msg(&mut stream)? else {
+            return Ok(()); // clean disconnect
+        };
+        let rows = msg.payload.into_infer_req()?;
+        // reserve a quota slot BEFORE serving, so racing clients cannot
+        // push the session past --serve-requests
+        let slot = if max_requests > 0 {
+            let prior = served.fetch_add(1, Ordering::SeqCst);
+            if prior >= max_requests {
+                return Ok(()); // quota fully reserved — drop the connection
+            }
+            prior + 1
+        } else {
+            0
+        };
+        let reply = match request_scores(&tx, &rows) {
+            Ok(scores) => Payload::InferResp(scores),
+            Err(e) => Payload::Control(format!("spnn-err {e}")),
+        };
+        wire::write_msg(
+            &mut stream,
+            &Msg { from: 0, tag: msg.tag, payload: reply, depart: 0.0, phase: Phase::Online },
+        )
+        .map_err(|e| Error::Net(format!("client write: {e}")))?;
+        if max_requests > 0 && slot >= max_requests {
+            return Ok(());
+        }
+    }
+}
+
+/// One-shot inference client (`spnn infer`): connect to a front door —
+/// retrying while the server is still coming up — send the row ids, and
+/// block until the scores arrive (the first request of a session waits for
+/// training to finish).
+pub fn infer_once(connect: &str, rows: &[u32], connect_timeout: Duration) -> Result<Vec<f32>> {
+    let deadline = Instant::now() + connect_timeout;
+    let mut stream = loop {
+        match TcpStream::connect(connect) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Net(format!("connect {connect}: {e}")));
+                }
+                std::thread::sleep(Duration::from_millis(250));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    wire::write_msg(
+        &mut stream,
+        &Msg {
+            from: 0,
+            tag: 1,
+            payload: Payload::InferReq(rows.to_vec()),
+            depart: 0.0,
+            phase: Phase::Online,
+        },
+    )
+    .map_err(|e| Error::Net(format!("infer send: {e}")))?;
+    match wire::read_msg(&mut stream)? {
+        Some(Msg { payload: Payload::InferResp(scores), .. }) => Ok(scores),
+        Some(Msg { payload: Payload::Control(e), .. }) => {
+            Err(Error::Protocol(match e.strip_prefix("spnn-err ") {
+                Some(r) => r.to_string(),
+                None => e,
+            }))
+        }
+        Some(m) => Err(Error::Protocol(format!(
+            "infer: unexpected reply payload {}",
+            m.payload.kind()
+        ))),
+        None => Err(Error::Net("server closed the connection before replying".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end through real sockets: a front door backed by a stub
+    /// scorer thread (no training needed) must round-trip requests,
+    /// reject errors as spnn-err frames, and honor the request quota.
+    #[test]
+    fn front_door_roundtrips_and_honors_the_quota() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (tx, rx) = mpsc::channel::<Request>();
+        // stub scorer: score = row id / 100; row 99 is rejected
+        let scorer = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                let reply = if req.rows.contains(&99) {
+                    Err(Error::Config("row 99 out of range".into()))
+                } else {
+                    Ok(req.rows.iter().map(|&r| r as f32 / 100.0).collect())
+                };
+                let _ = req.reply.send(reply);
+            }
+        });
+        let door = std::thread::spawn(move || run(listener, tx, 3));
+
+        let t = Duration::from_secs(10);
+        let got = infer_once(&addr, &[1, 2, 3], t).unwrap();
+        assert_eq!(got, vec![0.01, 0.02, 0.03]);
+        let err = infer_once(&addr, &[99], t).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        let got = infer_once(&addr, &[50], t).unwrap();
+        assert_eq!(got, vec![0.5]);
+
+        // quota of 3 reached: the door closes, its queue senders drop, the
+        // scorer drains and exits
+        door.join().unwrap().unwrap();
+        scorer.join().unwrap();
+        // new connections are refused (or time out) once the door is shut
+        assert!(infer_once(&addr, &[1], Duration::from_millis(400)).is_err());
+    }
+}

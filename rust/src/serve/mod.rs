@@ -1,0 +1,747 @@
+//! Private-inference **serving runtime**: after training, the parties stay
+//! resident and answer streaming prediction requests on isolated private
+//! features — the paper system's deployment story (fraud scoring on live
+//! traffic) rather than another epoch.
+//!
+//! # Shape
+//!
+//! A serve session is an ordinary protocol deployment built through
+//! [`Trainer::serve_deployment`]: training runs exactly as always (same
+//! transcripts, same weight digests), and when the coordinator's stop
+//! order has been consumed every forward-capable role enters
+//! [`party_serve_loop`] over the same [`ForwardPass`] objects the train
+//! loop just drove — the trained weights never move.
+//!
+//! * The **coordinator** becomes the request front ([`coordinator_serve`]):
+//!   it drains client requests from a [`ServeQueue`], **coalesces** every
+//!   queued request's rows into one stream, cuts it with the shared
+//!   [`batch_plan`] (ragged tails included) so crypto costs amortize
+//!   across requests, and announces each batch to the serving parties as a
+//!   tagged [`Payload::InferReq`]. Up to `ServeOpts::depth` batches are
+//!   announced ahead of the one being answered.
+//! * Each **party** receives announcements in tag order, stages the row
+//!   ids into its [`FeatureSource`](crate::protocols::fwd::FeatureSource)
+//!   (its private slice of the held-out table), runs the forward-pass
+//!   `prefetch` for announced-but-unanswered batches — Paillier nonces,
+//!   dealer triples, share masks land inside the wait window, exactly like
+//!   the train pipeline — and then the critical-path `forward`.
+//! * The **scoring role** (SPNN: the label holder A; SplitNN: the server;
+//!   SecureML: A after the probability shares are opened to it) returns a
+//!   tagged [`Payload::InferResp`], which the coordinator splits back per
+//!   request.
+//!
+//! Everything is multiplexed over the existing `Channel` transports, so a
+//! serve session runs on netsim, loopback TCP, UDS, or as separate OS
+//! processes (`spnn serve --launch`, via `transport::runner`) — and the
+//! predictions are bit-identical across all of them and across pipeline
+//! depths (the serve parity tests).
+//!
+//! The in-process entry point is [`serve`], which returns a
+//! [`ServeHandle`]; `spnn serve` additionally opens a TCP front door for
+//! `spnn infer` clients ([`frontdoor`]).
+
+pub mod frontdoor;
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::data::Dataset;
+use crate::netsim::{LinkSpec, PartyId, Payload};
+use crate::parties::{self, run_parties, PartyFn, PartyOut};
+use crate::protocols::common::{batch_plan, BatchCtx};
+use crate::protocols::fwd::ForwardPass;
+use crate::protocols::{TrainReport, Trainer};
+use crate::transport::Channel;
+use crate::{Error, Result};
+
+/// Receive deadline while a serving party is parked waiting for the next
+/// request batch: effectively "wait forever" (the training default of ten
+/// minutes would kill an idle but healthy serve session).
+pub const IDLE_TIMEOUT: Duration = Duration::from_secs(7 * 24 * 3600);
+
+/// The training-era receive deadline, restored after the serve loop so
+/// teardown deadlocks still surface as diagnostics.
+const TEARDOWN_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Serving knobs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeOpts {
+    /// Maximum rows coalesced into one crypto batch (clamped to the
+    /// artifact batch cap by each protocol's `serve_deployment`). Bigger
+    /// batches amortize per-batch crypto — Paillier packing, dealer
+    /// round-trips, share exchanges — across more requests.
+    pub coalesce: usize,
+    /// Request batches announced ahead of the one being answered (the
+    /// parties prefetch value-independent crypto for announced batches,
+    /// mirroring `TrainConfig::pipeline_depth`).
+    pub depth: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { coalesce: 256, depth: 2 }
+    }
+}
+
+/// The per-role slice of the serve configuration threaded through a
+/// protocol's `serve_deployment` role bodies (`None` = train-only).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeRole {
+    /// Request batches prefetched ahead (see [`ServeOpts::depth`]).
+    pub depth: usize,
+}
+
+/// One client inference request: row ids into the held-out table, plus the
+/// reply slot the coordinator answers into.
+pub struct Request {
+    /// Rows of the serve table to score (duplicates allowed; order is the
+    /// reply order).
+    pub rows: Vec<u32>,
+    /// Where the scores (or the rejection) go.
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// The request queue handed to the coordinator's serve role. Worker
+/// processes in a multi-process deployment build their (never-run)
+/// coordinator closure with [`ServeQueue::detached`].
+pub struct ServeQueue(Option<mpsc::Receiver<Request>>);
+
+impl ServeQueue {
+    /// A live queue around the receiving end of a request channel.
+    pub fn new(rx: mpsc::Receiver<Request>) -> Self {
+        ServeQueue(Some(rx))
+    }
+
+    /// A placeholder for deployments whose coordinator role never runs
+    /// locally (worker processes of `spnn serve --launch`).
+    pub fn detached() -> Self {
+        ServeQueue(None)
+    }
+
+    fn into_receiver(self) -> Result<mpsc::Receiver<Request>> {
+        self.0.ok_or_else(|| {
+            Error::Config(
+                "this process has no serve request queue (detached coordinator role)"
+                    .into(),
+            )
+        })
+    }
+}
+
+/// One blocking request round-trip through a serve queue sender. Clients
+/// on other threads clone [`ServeHandle::sender`] and call this.
+pub fn request_scores(tx: &mpsc::Sender<Request>, rows: &[u32]) -> Result<Vec<f32>> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request { rows: rows.to_vec(), reply: rtx })
+        .map_err(|_| Error::Protocol("serve session is gone (parties exited)".into()))?;
+    rrx.recv().map_err(|_| {
+        Error::Protocol(
+            "serve session ended before replying (a party likely errored)".into(),
+        )
+    })?
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator serve role
+// ---------------------------------------------------------------------------
+
+/// Build a protocol's coordinator role body: the ordinary training
+/// coordinator, or — when `serve` is given — the serving request front
+/// ([`coordinator_serve`]), with the coalesce size clamped to the
+/// artifact batch cap the parties pad to. Shared by every protocol's
+/// `build()` so the clamp and the stand-down protocol live in one place.
+pub fn coordinator_role(
+    tc: &TrainConfig,
+    workers: Vec<PartyId>,
+    reporter: PartyId,
+    serve_workers: Vec<PartyId>,
+    responder: PartyId,
+    max_row: usize,
+    serve: Option<(ServeOpts, ServeQueue)>,
+) -> PartyFn {
+    let epochs = tc.epochs;
+    match serve {
+        Some((mut opts, queue)) => {
+            // never coalesce past the artifact cap the parties pad to
+            opts.coalesce = opts.coalesce.clamp(1, ModelConfig::pick_batch(tc.batch));
+            Box::new(move |p: &mut dyn Channel| {
+                coordinator_serve(
+                    p,
+                    &workers,
+                    reporter,
+                    &serve_workers,
+                    responder,
+                    epochs,
+                    queue,
+                    &opts,
+                    max_row,
+                )
+            })
+        }
+        None => Box::new(move |p: &mut dyn Channel| {
+            parties::coordinator_run(p, &workers, reporter, epochs)
+        }),
+    }
+}
+
+/// The coordinator's full serve role body: run the ordinary training
+/// control protocol ([`parties::coordinator_run`]), then turn into the
+/// request front — coalesce queued requests into crypto-amortized batches,
+/// announce up to `opts.depth` of them ahead to `serve_workers`, collect
+/// the scoring role's replies, and fan the scores back per request. When
+/// the queue closes (every sender dropped), broadcast the stand-down order
+/// and return.
+#[allow(clippy::too_many_arguments)]
+pub fn coordinator_serve(
+    p: &mut dyn Channel,
+    workers: &[PartyId],
+    reporter: PartyId,
+    serve_workers: &[PartyId],
+    responder: PartyId,
+    epochs: usize,
+    queue: ServeQueue,
+    opts: &ServeOpts,
+    max_row: usize,
+) -> Result<PartyOut> {
+    let queue = queue.into_receiver()?;
+    // 1) training, unchanged (same transcripts and digests as train-only)
+    let mut out = parties::coordinator_run(p, workers, reporter, epochs)?;
+
+    // 2) the serve loop
+    p.set_stage("serve");
+    let depth = opts.depth.max(1);
+    let coalesce = opts.coalesce.max(1);
+    let mut next_tag = 0u64;
+    let mut served_rows = 0u64;
+    let mut served_batches = 0u64;
+    loop {
+        // block for the next request; a closed queue is the shutdown order
+        let first = match queue.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        // coalesce whatever else is already queued into this round
+        let mut round = vec![first];
+        while let Ok(r) = queue.try_recv() {
+            round.push(r);
+        }
+        // validate and flatten the round's rows into one stream
+        let mut good: Vec<(Request, usize)> = Vec::new();
+        let mut all: Vec<u32> = Vec::new();
+        for r in round {
+            if let Some(&bad) = r.rows.iter().find(|&&id| id as usize >= max_row) {
+                let _ = r.reply.send(Err(Error::Config(format!(
+                    "inference request row {bad} out of range (serve table has \
+                     {max_row} rows)"
+                ))));
+                continue;
+            }
+            if r.rows.is_empty() {
+                let _ = r.reply.send(Ok(Vec::new()));
+                continue;
+            }
+            let start = all.len();
+            all.extend_from_slice(&r.rows);
+            good.push((r, start));
+        }
+        if all.is_empty() {
+            continue;
+        }
+        // the shared batch plan handles the ragged tail uniformly
+        let plan = batch_plan(all.len(), coalesce);
+        let mut scores: Vec<f32> = Vec::with_capacity(all.len());
+        let mut announced = 0usize;
+        let mut completed = 0usize;
+        while completed < plan.len() {
+            // announce up to `depth` batches ahead of the awaited one —
+            // the parties prefetch their crypto for announced batches
+            while announced < plan.len() && announced < completed + depth {
+                let (s, rows) = plan[announced];
+                let ids = all[s..s + rows].to_vec();
+                let tag = next_tag + announced as u64;
+                for &w in serve_workers {
+                    p.send_tagged(w, tag, Payload::InferReq(ids.clone()))?;
+                }
+                announced += 1;
+            }
+            let tag = next_tag + completed as u64;
+            let got = p.recv_tagged(responder, tag)?.into_infer_resp()?;
+            if got.len() != plan[completed].1 {
+                return Err(Error::Protocol(format!(
+                    "serve: responder returned {} score(s) for a {}-row batch",
+                    got.len(),
+                    plan[completed].1
+                )));
+            }
+            scores.extend_from_slice(&got);
+            completed += 1;
+        }
+        next_tag += plan.len() as u64;
+        served_batches += plan.len() as u64;
+        served_rows += all.len() as u64;
+        // fan the scores back out per request
+        for (r, start) in good {
+            let n = r.rows.len();
+            let _ = r.reply.send(Ok(scores[start..start + n].to_vec()));
+        }
+    }
+
+    // 3) stand-down: every serving party is parked on tag `next_tag`
+    for &w in serve_workers {
+        p.send_tagged(w, next_tag, Payload::Control("serve-stop".into()))?;
+    }
+    out.metrics.push(("served_rows".into(), served_rows as f64));
+    out.metrics.push(("served_batches".into(), served_batches as f64));
+    out.sim_time = p.now();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Party serve loop
+// ---------------------------------------------------------------------------
+
+enum Announce {
+    Batch(Vec<u32>),
+    Stop,
+}
+
+fn parse_announce(payload: Payload) -> Result<Announce> {
+    match payload {
+        Payload::InferReq(ids) => Ok(Announce::Batch(ids)),
+        Payload::Control(s) if s == "serve-stop" => Ok(Announce::Stop),
+        other => Err(Error::Protocol(format!(
+            "serve: expected an InferReq or serve-stop announcement, got {}",
+            other.kind()
+        ))),
+    }
+}
+
+/// Drive one serving party's request loop over its [`ForwardPass`].
+///
+/// Announcements arrive from the coordinator tagged with consecutive batch
+/// indexes. For every announced batch the party stages the row ids and
+/// runs the value-independent `prefetch` immediately (in tag order, so RNG
+/// transcripts stay deterministic); up to `depth` batches are held
+/// announced-but-unanswered, which places the prefetch work of future
+/// batches inside the wait for the current batch's remote results — the
+/// same overlap the train pipeline exploits. The critical-path `forward`
+/// then runs per batch; the scoring role's result is shipped back as a
+/// tagged [`Payload::InferResp`].
+pub fn party_serve_loop(
+    p: &mut dyn Channel,
+    coord: PartyId,
+    depth: usize,
+    fwd: &mut dyn ForwardPass,
+) -> Result<()> {
+    let depth = depth.max(1);
+    // an idle-but-healthy serve session must not trip the training-era
+    // deadlock detector while parked between requests
+    p.set_recv_timeout(IDLE_TIMEOUT);
+    let mut next = 0u64;
+    let mut pending: VecDeque<BatchCtx> = VecDeque::new();
+    let mut stopped = false;
+    loop {
+        // block for the next announcement when nothing is in flight
+        while !stopped && pending.is_empty() {
+            match parse_announce(p.recv_tagged(coord, next)?)? {
+                Announce::Batch(ids) => {
+                    let b = BatchCtx { index: next as usize, start: 0, rows: ids.len() };
+                    fwd.stage_rows(next, &ids);
+                    fwd.prefetch(p, &b)?;
+                    pending.push_back(b);
+                    next += 1;
+                }
+                Announce::Stop => stopped = true,
+            }
+        }
+        // opportunistically extend the prefetch window up to `depth`
+        while !stopped && pending.len() < depth {
+            match p.try_recv_tagged(coord, next)? {
+                None => break,
+                Some(payload) => match parse_announce(payload)? {
+                    Announce::Batch(ids) => {
+                        let b =
+                            BatchCtx { index: next as usize, start: 0, rows: ids.len() };
+                        fwd.stage_rows(next, &ids);
+                        fwd.prefetch(p, &b)?;
+                        pending.push_back(b);
+                        next += 1;
+                    }
+                    Announce::Stop => stopped = true,
+                },
+            }
+        }
+        let Some(b) = pending.pop_front() else { break };
+        if let Some(scores) = fwd.forward(p, &b)? {
+            p.set_stage("serve");
+            p.send_tagged(coord, b.tag(), Payload::InferResp(scores))?;
+        }
+    }
+    p.set_recv_timeout(TEARDOWN_TIMEOUT);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// In-process serve runtime
+// ---------------------------------------------------------------------------
+
+/// What the background session thread resolves to: every party's output
+/// plus the whole-mesh traffic summary (exactly `run_parties`' result).
+type SessionJoin = std::thread::JoinHandle<Result<(Vec<PartyOut>, parties::NetSummary)>>;
+
+/// A live in-process serve session: training + serving run on background
+/// threads (one per party, over `tc.transport`); requests go through
+/// [`ServeHandle::infer`] / [`ServeHandle::sender`]. Dropping the handle
+/// (or calling [`ServeHandle::shutdown`]) closes the queue, which stands
+/// the parties down and ends the session.
+pub struct ServeHandle {
+    tx: Option<mpsc::Sender<Request>>,
+    join: Option<SessionJoin>,
+    trainer: Box<dyn Trainer>,
+    cfg: &'static ModelConfig,
+    tc: TrainConfig,
+    test: Dataset,
+    wall: Instant,
+}
+
+/// Start an in-process serve session: build the trainer's serve deployment
+/// and run every party on its own thread over `tc.transport`. Returns
+/// immediately — training proceeds in the background, and the first
+/// [`ServeHandle::infer`] call blocks until the model is trained and the
+/// scores come back.
+#[allow(clippy::too_many_arguments)]
+pub fn serve(
+    trainer: Box<dyn Trainer>,
+    cfg: &'static ModelConfig,
+    tc: &TrainConfig,
+    spec: LinkSpec,
+    train: &Dataset,
+    test: &Dataset,
+    n_holders: usize,
+    opts: &ServeOpts,
+) -> Result<ServeHandle> {
+    crate::exec::set_default_threads(tc.exec_threads);
+    let (tx, rx) = mpsc::channel();
+    let dep =
+        trainer.serve_deployment(cfg, tc, train, test, n_holders, opts, ServeQueue::new(rx))?;
+    let kind = tc.transport;
+    let join = std::thread::Builder::new()
+        .name("spnn-serve".into())
+        .spawn(move || run_parties(spec, kind, dep))
+        .map_err(Error::Io)?;
+    Ok(ServeHandle {
+        tx: Some(tx),
+        join: Some(join),
+        trainer,
+        cfg,
+        tc: tc.clone(),
+        test: test.clone(),
+        wall: Instant::now(),
+    })
+}
+
+impl ServeHandle {
+    /// A clonable sender into the request queue (for concurrent clients /
+    /// the TCP front door). Each extra sender keeps the session alive —
+    /// drop them all (plus the handle) to stand the parties down.
+    pub fn sender(&self) -> mpsc::Sender<Request> {
+        self.tx.as_ref().expect("live serve handle").clone()
+    }
+
+    /// Score `rows` of the held-out serve table (blocking round-trip).
+    pub fn infer(&self, rows: &[u32]) -> Result<Vec<f32>> {
+        request_scores(self.tx.as_ref().expect("live serve handle"), rows)
+    }
+
+    /// End the session: close the queue (the coordinator broadcasts the
+    /// stand-down), join every party, and assemble the final
+    /// [`TrainReport`] — the same report (same `weight_digest`) a plain
+    /// training run of this config produces.
+    pub fn shutdown(mut self) -> Result<TrainReport> {
+        self.tx = None;
+        let join = self.join.take().expect("live serve handle");
+        let (outs, net) = join
+            .join()
+            .map_err(|_| Error::Protocol("serve session panicked".into()))??;
+        self.trainer.finish(
+            self.cfg,
+            &self.tc,
+            &self.test,
+            &outs,
+            net,
+            self.wall.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{TransportKind, FRAUD};
+    use crate::data::{synth_fraud, SynthOpts};
+    use crate::protocols;
+    use crate::protocols::fwd::{params_from_report, splitnn_direct_scores, spnn_direct_scores};
+
+    /// Train + serve one session and score every request in order.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_session(
+        proto: &str,
+        rows_total: usize,
+        kind: TransportKind,
+        depth: usize,
+        coalesce: usize,
+        batch: usize,
+        holders: usize,
+        reqs: &[Vec<u32>],
+    ) -> (Vec<Vec<f32>>, TrainReport, Dataset) {
+        let ds = synth_fraud(SynthOpts::small(rows_total));
+        let (train, test) = ds.split(0.8, 77);
+        let tc = TrainConfig {
+            batch,
+            epochs: 1,
+            lr_override: Some(0.05),
+            paillier_bits: 256, // test-size keys
+            pipeline_depth: depth,
+            transport: kind,
+            ..Default::default()
+        };
+        let trainer = protocols::by_name(proto).expect("known trainer");
+        let opts = ServeOpts { coalesce, depth };
+        let h = serve(
+            trainer,
+            &FRAUD,
+            &tc,
+            LinkSpec::lan(),
+            &train,
+            &test,
+            holders,
+            &opts,
+        )
+        .unwrap();
+        let scores: Vec<Vec<f32>> = reqs.iter().map(|r| h.infer(r).unwrap()).collect();
+        let rep = h.shutdown().unwrap();
+        (scores, rep, test)
+    }
+
+    fn bits(scores: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        scores
+            .iter()
+            .map(|v| v.iter().map(|s| s.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn spnn_ss_serving_is_bit_identical_across_transports_and_depths() {
+        // the acceptance criterion: `infer` answers are bit-identical over
+        // netsim / TCP / UDS and across serve pipeline depths — including
+        // a ragged request (25 rows through coalesce 16 = 16 + 9)
+        let reqs = vec![(0..25u32).collect::<Vec<_>>(), vec![3, 1, 4, 1, 5]];
+        let mut all = Vec::new();
+        for kind in [TransportKind::Netsim, TransportKind::Tcp, TransportKind::Uds] {
+            let (scores, rep, _) =
+                serve_session("spnn-ss", 240, kind, 1, 16, 64, 2, &reqs);
+            assert_eq!(scores[0].len(), 25);
+            assert_eq!(scores[1].len(), 5);
+            assert!(
+                scores.iter().flatten().all(|s| (0.0..=1.0).contains(s)),
+                "scores out of range"
+            );
+            assert_ne!(rep.weight_digest, 0);
+            all.push((bits(&scores), rep.weight_digest));
+        }
+        // a deeper serve pipeline must not change a single bit
+        let (scores_d2, rep_d2, _) =
+            serve_session("spnn-ss", 240, TransportKind::Netsim, 2, 16, 64, 2, &reqs);
+        all.push((bits(&scores_d2), rep_d2.weight_digest));
+        for w in all.windows(2) {
+            assert_eq!(w[0], w[1], "served predictions diverged across backends/depths");
+        }
+        // serving must not have perturbed training: same digest as a plain
+        // training run of the identical config
+        let ds = synth_fraud(SynthOpts::small(240));
+        let (train, test) = ds.split(0.8, 77);
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            paillier_bits: 256,
+            ..Default::default()
+        };
+        use crate::protocols::Trainer;
+        let plain = crate::protocols::spnn::Spnn { he: false }
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert_eq!(plain.weight_digest, all[0].1, "serving changed the trained model");
+        // SS agrees with the direct fixed-point forward up to the
+        // truncation's probabilistic low-order bit
+        let params = params_from_report(&FRAUD, &rep_d2).unwrap();
+        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0]).unwrap();
+        for (got, want) in scores_d2[0].iter().zip(&direct) {
+            assert!(
+                (got - want).abs() < 1e-2,
+                "SS served {got} vs direct {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn spnn_he_serving_matches_the_direct_forward_bit_exactly() {
+        // Paillier decryption of a packed sum is exactly the slot-wise sum
+        // of fixed-point encodes, so the served predictions must equal the
+        // channel-free reference forward bit for bit
+        let reqs = vec![(0..20u32).collect::<Vec<_>>()];
+        let (scores, rep, test) =
+            serve_session("spnn-he", 200, TransportKind::Netsim, 2, 8, 64, 2, &reqs);
+        let params = params_from_report(&FRAUD, &rep).unwrap();
+        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0]).unwrap();
+        assert_eq!(scores[0].len(), direct.len());
+        for (i, (got, want)) in scores[0].iter().zip(&direct).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "row {i}: served {got} vs direct {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn splitnn_serving_matches_direct_forward_and_coalesces_concurrent_clients() {
+        // SplitNN's forward is plaintext and row-independent, so (a) the
+        // served scores equal the channel-free reference bit for bit, and
+        // (b) coalescing concurrent clients into shared batches must not
+        // change anyone's answer
+        let ds = synth_fraud(SynthOpts::small(300));
+        let (train, test) = ds.split(0.8, 41);
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.3),
+            ..Default::default()
+        };
+        let trainer = protocols::by_name("splitnn").unwrap();
+        let opts = ServeOpts { coalesce: 16, depth: 2 };
+        let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
+            .unwrap();
+        // sequential reference answers, one row per request
+        let rows: Vec<u32> = (0..12).collect();
+        let reference: Vec<f32> =
+            rows.iter().map(|&r| h.infer(&[r]).unwrap()[0]).collect();
+        // four concurrent clients over overlapping row sets: their requests
+        // coalesce into shared crypto batches, answers must not change
+        let mut threads = Vec::new();
+        for t in 0..4u32 {
+            let tx = h.sender();
+            let rows = rows.clone();
+            threads.push(std::thread::spawn(move || {
+                let mine: Vec<u32> =
+                    rows.iter().copied().filter(|r| r % 2 == (t % 2)).collect();
+                let scores = request_scores(&tx, &mine).unwrap();
+                (mine, scores)
+            }));
+        }
+        for t in threads {
+            let (mine, scores) = t.join().unwrap();
+            for (r, s) in mine.iter().zip(&scores) {
+                assert_eq!(
+                    s.to_bits(),
+                    reference[*r as usize].to_bits(),
+                    "row {r} changed under coalescing"
+                );
+            }
+        }
+        let rep = h.shutdown().unwrap();
+        assert_ne!(rep.weight_digest, 0);
+        let direct = splitnn_direct_scores(&FRAUD, &rep, 2, &test, &rows).unwrap();
+        for (r, want) in rows.iter().zip(&direct) {
+            assert_eq!(
+                reference[*r as usize].to_bits(),
+                want.to_bits(),
+                "row {r}: served vs direct forward"
+            );
+        }
+    }
+
+    #[test]
+    fn secureml_serving_is_bit_identical_across_transports() {
+        // forward-only MPC with the probability shares opened to A: same
+        // request stream over netsim and real sockets must score
+        // bit-identically (same mask RNG schedule, same truncations)
+        let reqs = vec![(0..10u32).collect::<Vec<_>>(), vec![7, 7, 0]];
+        let mut all = Vec::new();
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let (scores, rep, _) =
+                serve_session("secureml", 200, kind, 2, 8, 64, 2, &reqs);
+            assert_eq!(scores[0].len(), 10);
+            assert_eq!(scores[1].len(), 3);
+            assert!(scores.iter().flatten().all(|s| (0.0..=1.0).contains(s)));
+            assert_ne!(rep.weight_digest, 0);
+            all.push(bits(&scores));
+        }
+        assert_eq!(all[0], all[1], "SecureML served scores diverged over TCP");
+    }
+
+    #[test]
+    fn ragged_train_and_serve_sizes_do_not_panic() {
+        // regression (ISSUE 5 satellite): a training set with
+        // n % batch != 0 AND requests whose row counts do not divide the
+        // coalesce size must flow through the shared batch_plan cleanly
+        let ds = synth_fraud(SynthOpts::small(150)); // 120 train (64+56), 30 test
+        let (train, test) = ds.split(0.8, 19);
+        assert_ne!(train.len() % 64, 0, "test setup: want a ragged train tail");
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            ..Default::default()
+        };
+        let trainer = protocols::by_name("spnn-ss").unwrap();
+        let opts = ServeOpts { coalesce: 8, depth: 2 };
+        let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
+            .unwrap();
+        // 23 rows through coalesce 8 = 8 + 8 + 7 (ragged tail)
+        let rows: Vec<u32> = (0..23).collect();
+        let scores = h.infer(&rows).unwrap();
+        assert_eq!(scores.len(), 23);
+        // an empty request is answered, not announced
+        assert_eq!(h.infer(&[]).unwrap(), Vec::<f32>::new());
+        // an out-of-range row is rejected without killing the session
+        let err = h.infer(&[9_999]).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        // ...and the session still answers afterwards
+        let again = h.infer(&rows).unwrap();
+        assert_eq!(again.len(), 23);
+        let rep = h.shutdown().unwrap();
+        assert_ne!(rep.weight_digest, 0);
+    }
+
+    #[test]
+    fn plaintext_nn_has_no_serving_story() {
+        let ds = synth_fraud(SynthOpts::small(120));
+        let (train, test) = ds.split(0.8, 3);
+        let tc = TrainConfig { batch: 64, epochs: 1, ..Default::default() };
+        let trainer = protocols::by_name("nn").unwrap();
+        let err = serve(
+            trainer,
+            &FRAUD,
+            &tc,
+            LinkSpec::lan(),
+            &train,
+            &test,
+            2,
+            &ServeOpts::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("does not support serving"), "{err}");
+    }
+}

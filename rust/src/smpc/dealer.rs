@@ -16,6 +16,8 @@
 //! A -> D: Control("bool:lanes")    D -> A: Seed, Bits(eda bits), Bits(c),
 //!                                          U64s(dab arith), Bits(dab bits)
 //!                                  D -> B: Seed
+//! A -> D: Control("idle")          (dealer may now park arbitrarily long
+//!                                   between requests — serving phase)
 //! A -> D: Control("stop")          (dealer thread exits)
 //! ```
 //!
@@ -32,6 +34,8 @@
 //! online critical path runs, and its early departure stamps let the
 //! netsim clock absorb the preprocessing into the parties' wait windows
 //! instead of serializing a request round-trip into every batch.
+
+use std::collections::{HashMap, VecDeque};
 
 use super::boolean::{words_for, BitMat, BoolBundle, DaBits, EdaBits, TripleBank};
 use super::matmul::ElemTriple;
@@ -102,6 +106,10 @@ pub fn serve(port: &mut dyn Channel, a: PartyId, b: PartyId, seed: u64) -> Resul
         let (kind, args) = req.split_once(':').unwrap_or((req.as_str(), ""));
         match kind {
             "stop" => return Ok(()),
+            // the requester entered its serving phase: requests may now be
+            // arbitrarily far apart, so the training-era deadlock timeout
+            // must not fire while everyone is healthily idle
+            "idle" => port.set_recv_timeout(crate::serve::IDLE_TIMEOUT),
             "mat" => {
                 let d: Vec<usize> = parse_dims(args, 3)?;
                 let (m, k, n) = (d[0], d[1], d[2]);
@@ -451,6 +459,144 @@ fn mask_tail(words: &mut [u64], wpl: usize, lanes: usize) {
 /// Stop the dealer (protocol teardown).
 pub fn stop(port: &mut dyn Channel, dealer: PartyId) -> Result<()> {
     port.send_phase(dealer, Payload::Control("stop".into()), Phase::Offline)
+}
+
+/// Tell the dealer the requester entered its serving phase (requests may
+/// now be arbitrarily far apart; see [`serve`]'s wire protocol).
+pub fn idle(port: &mut dyn Channel, dealer: PartyId) -> Result<()> {
+    port.send_phase(dealer, Payload::Control("idle".into()), Phase::Offline)
+}
+
+// ---------------------------------------------------------------------------
+// A-side opportunistic feed
+// ---------------------------------------------------------------------------
+
+/// Expanded A-side dealer material, ready for consumption.
+pub enum Material {
+    /// A matrix triple (`Req::Mat`).
+    Mat(MatTriple),
+    /// An elementwise triple (`Req::Elem`).
+    Elem(ElemTriple),
+    /// A boolean bundle (`Req::Bool`).
+    Bool(BoolBundle),
+}
+
+/// A-side dealer feed with **opportunistic expansion**: requests are fired
+/// from `Prefetch` ([`Self::request`]); [`Self::pump`] then polls the
+/// dealer link without blocking (`try_recv_tagged`) and expands whatever
+/// replies have already landed — so the PRG expansion of `(U, V)` shares
+/// and boolean bundles happens inside the prefetch window instead of
+/// blocking in `Submit`/`Complete` on the critical path. [`Self::next`]
+/// falls back to blocking receives for anything not pumped yet.
+///
+/// Correctness leans on two FIFO facts: A fires requests in consumption
+/// order (the batch script), and the dealer answers its single request
+/// stream in arrival order — so the global reply stream matches
+/// `outstanding` front-to-back, and per-tag `recv_tagged` order equals
+/// per-request reply order. Expansion is pure (seeded PRG), so *when* it
+/// runs cannot change the transcript — guarded by the
+/// `*_depths_are_transcript_equal` tests of every trainer that uses it
+/// (SecureML since PR 3; SPNN-SS's A role since the serving PR).
+pub struct DealerFeed {
+    dealer: PartyId,
+    /// Requests awaiting full reply, in fire order, with parts collected
+    /// so far.
+    outstanding: VecDeque<(u64, Req, Vec<Payload>)>,
+    /// Expanded material per batch tag, in request order.
+    ready: HashMap<u64, VecDeque<Material>>,
+}
+
+impl DealerFeed {
+    /// An empty feed talking to the dealer at party id `dealer`.
+    pub fn new(dealer: PartyId) -> Self {
+        DealerFeed { dealer, outstanding: VecDeque::new(), ready: HashMap::new() }
+    }
+
+    fn parts_needed(req: &Req) -> usize {
+        match req {
+            Req::Mat(..) | Req::Elem(_) => 2, // Seed + correction
+            Req::Bool(_) => 5,                // Seed + 4 explicit payloads
+        }
+    }
+
+    fn expand(req: Req, mut parts: Vec<Payload>) -> Result<Material> {
+        let mut rest = parts.split_off(1);
+        let seed = parts.pop().expect("seed part").into_seed()?;
+        Ok(match req {
+            Req::Mat(m, k, n) => Material::Mat(mat_triple_from_parts(
+                seed,
+                rest.pop().expect("w part").into_u64s()?,
+                m,
+                k,
+                n,
+            )),
+            Req::Elem(len) => Material::Elem(elem_triple_from_parts(
+                seed,
+                rest.pop().expect("w part").into_u64s()?,
+                len,
+            )),
+            Req::Bool(lanes) => {
+                let dab_bits = rest.pop().expect("dab bits").into_bits()?;
+                let dab_arith = rest.pop().expect("dab arith").into_u64s()?;
+                let c = rest.pop().expect("and c").into_bits()?;
+                let eda_bits = rest.pop().expect("eda bits").into_bits()?;
+                Material::Bool(bool_bundle_from_parts(
+                    seed, eda_bits, c, dab_arith, dab_bits, lanes,
+                )?)
+            }
+        })
+    }
+
+    /// Fire one tagged request (prefetch stage).
+    pub fn request(&mut self, p: &mut dyn Channel, req: Req, tag: u64) -> Result<()> {
+        send_request_tagged(p, self.dealer, req, tag)?;
+        self.outstanding.push_back((tag, req, Vec::new()));
+        Ok(())
+    }
+
+    /// Non-blocking drain: pull every already-delivered reply off the
+    /// dealer link and expand completed requests, front to back.
+    pub fn pump(&mut self, p: &mut dyn Channel) -> Result<()> {
+        while let Some(front) = self.outstanding.front_mut() {
+            while front.2.len() < Self::parts_needed(&front.1) {
+                match p.try_recv_tagged(self.dealer, front.0)? {
+                    Some(payload) => front.2.push(payload),
+                    None => return Ok(()), // nothing more on the wire yet
+                }
+            }
+            let (tag, req, parts) = self.outstanding.pop_front().expect("front exists");
+            self.ready.entry(tag).or_default().push_back(Self::expand(req, parts)?);
+        }
+        Ok(())
+    }
+
+    /// Next material for `tag`, blocking on the wire only for whatever the
+    /// prefetch-window pumping did not get to.
+    pub fn next(&mut self, p: &mut dyn Channel, tag: u64) -> Result<Material> {
+        loop {
+            // take the tag's queue out entirely: a drained queue must not
+            // linger in the map (serve sessions run an unbounded monotonic
+            // tag stream — leftover empties would leak one entry per batch)
+            if let Some(mut q) = self.ready.remove(&tag) {
+                if let Some(m) = q.pop_front() {
+                    if !q.is_empty() {
+                        self.ready.insert(tag, q);
+                    }
+                    return Ok(m);
+                }
+            }
+            let front = self.outstanding.front_mut().ok_or_else(|| {
+                Error::Protocol(format!(
+                    "dealer feed empty while awaiting material for tag {tag}"
+                ))
+            })?;
+            while front.2.len() < Self::parts_needed(&front.1) {
+                front.2.push(p.recv_tagged(self.dealer, front.0)?);
+            }
+            let (t, req, parts) = self.outstanding.pop_front().expect("front exists");
+            self.ready.entry(t).or_default().push_back(Self::expand(req, parts)?);
+        }
+    }
 }
 
 #[cfg(test)]

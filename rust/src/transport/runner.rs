@@ -38,6 +38,7 @@ use super::tcp::TcpPort;
 use crate::netsim::{merge_stage_rows, NetStats, Phase};
 use crate::parties::{self, Deployment, NetSummary};
 use crate::protocols::{self, TrainReport};
+use crate::serve::{Request, ServeQueue};
 use crate::{Error, Result};
 
 /// Whole-session rendezvous deadline (covers process spawn + handshake).
@@ -57,11 +58,18 @@ struct Prepared {
     test: crate::data::Dataset,
 }
 
-fn build_deployment(spec: &SessionSpec) -> Result<Prepared> {
+/// Build the (train or serve) deployment for this process. `queue` feeds
+/// the coordinator's serve role when `spec.serve` is set; worker processes
+/// pass [`ServeQueue::detached`] (their coordinator closure never runs).
+fn build_deployment(spec: &SessionSpec, queue: ServeQueue) -> Result<Prepared> {
     let trainer = trainer_for(spec)?;
     let (cfg, train, test) = spec.datasets()?;
     crate::exec::set_default_threads(spec.tc.exec_threads);
-    let dep = trainer.deployment(cfg, &spec.tc, &train, &test, spec.holders)?;
+    let dep = match &spec.serve {
+        Some(opts) => trainer
+            .serve_deployment(cfg, &spec.tc, &train, &test, spec.holders, opts, queue)?,
+        None => trainer.deployment(cfg, &spec.tc, &train, &test, spec.holders)?,
+    };
     Ok(Prepared { trainer, dep, cfg, test })
 }
 
@@ -84,7 +92,7 @@ pub fn run_party(
     chaos_kill_after: Option<u64>,
 ) -> Result<()> {
     let sess = session::join(connect, role, bind_host, SESSION_TIMEOUT, psk)?;
-    let Prepared { dep, .. } = build_deployment(&sess.spec)?;
+    let Prepared { dep, .. } = build_deployment(&sess.spec, ServeQueue::detached())?;
     if dep.names.len() != sess.n {
         return Err(Error::Protocol(format!(
             "topology mismatch: local deployment has {} parties, session has {}",
@@ -216,12 +224,60 @@ pub fn run_launch_on(
     spec: &SessionSpec,
     opts: &LaunchOpts,
 ) -> Result<TrainReport> {
+    if spec.serve.is_some() {
+        return Err(Error::Config(
+            "serve sessions need a request queue — launch them through run_serve"
+                .into(),
+        ));
+    }
+    launch_on(listener, spec, opts, ServeQueue::detached())
+}
+
+/// Host a decentralized **serve** session (`spnn serve --launch`): like
+/// [`run_launch`], but after training the workers stay resident and the
+/// coordinator answers inference requests drained from `queue` (fed by the
+/// TCP front door or any in-process producer). Returns when every queue
+/// sender is dropped, with the same report a train-only run assembles.
+pub fn run_serve(
+    spec: &SessionSpec,
+    opts: &LaunchOpts,
+    queue: std::sync::mpsc::Receiver<Request>,
+) -> Result<TrainReport> {
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| Error::Net(format!("bind {}: {e}", opts.listen)))?;
+    run_serve_on(listener, spec, opts, queue)
+}
+
+/// [`run_serve`] on an already-bound rendezvous listener.
+pub fn run_serve_on(
+    listener: TcpListener,
+    spec: &SessionSpec,
+    opts: &LaunchOpts,
+    queue: std::sync::mpsc::Receiver<Request>,
+) -> Result<TrainReport> {
+    if spec.serve.is_none() {
+        return Err(Error::Config(
+            "run_serve needs spec.serve set (the workers must build serve \
+             deployments too)"
+                .into(),
+        ));
+    }
+    launch_on(listener, spec, opts, ServeQueue::new(queue))
+}
+
+/// The shared launch engine behind [`run_launch_on`] / [`run_serve_on`].
+fn launch_on(
+    listener: TcpListener,
+    spec: &SessionSpec,
+    opts: &LaunchOpts,
+    queue: ServeQueue,
+) -> Result<TrainReport> {
     let wall = Instant::now();
     let psk = match &spec.tc.psk_file {
         Some(path) => Some(Psk::from_file(std::path::Path::new(path))?),
         None => None,
     };
-    let Prepared { trainer, dep, cfg, test } = build_deployment(spec)?;
+    let Prepared { trainer, dep, cfg, test } = build_deployment(spec, queue)?;
     let n = dep.names.len();
     let addr = listener.local_addr().map_err(Error::Io)?.to_string();
     if let Some((role, _)) = &opts.chaos {
@@ -337,6 +393,7 @@ mod tests {
             holders: 2,
             mbps: 100.0,
             tc: TrainConfig { epochs: 1, batch: 128, ..Default::default() },
+            serve: None,
         }
     }
 
@@ -461,6 +518,72 @@ mod tests {
         }
         let _ = std::fs::remove_file(&good);
         let _ = std::fs::remove_file(&bad);
+    }
+
+    /// Serve-mode launch, in-thread: the coordinator hosts a serve session
+    /// (`spec.serve` rides the config broadcast, so the thread "processes"
+    /// build serve deployments from it), a client scores rows through the
+    /// queue mid-session, and the answers are bit-identical to an
+    /// in-process netsim serve of the same config.
+    #[test]
+    fn serve_launch_in_threads_scores_like_netsim() {
+        use crate::serve::{request_scores, ServeOpts};
+        let mut s = spec("spnn-ss");
+        s.tc.lr_override = Some(0.05);
+        s.serve = Some(ServeOpts { coalesce: 16, depth: 2 });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = LaunchOpts { listen: addr.clone(), spawn: false, chaos: None };
+
+        let mut workers = Vec::new();
+        for role in ["server", "dealer", "holder0", "holder1"] {
+            let addr = addr.clone();
+            workers
+                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None)));
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        let rows: Vec<u32> = (0..21).collect(); // ragged through coalesce 16
+        let client = std::thread::spawn({
+            let rows = rows.clone();
+            move || {
+                let scores = request_scores(&tx, &rows);
+                // dropping tx ends the session
+                scores
+            }
+        });
+        let rep = run_serve_on(listener, &s, &opts, rx).unwrap();
+        let scores = client.join().unwrap().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        assert_eq!(scores.len(), rows.len());
+        assert_ne!(rep.weight_digest, 0);
+
+        // reference: the identical config served fully in-process (netsim)
+        let (cfg, train, test) = s.datasets().unwrap();
+        let mut tc = s.tc.clone();
+        tc.transport = crate::config::TransportKind::Netsim;
+        let h = crate::serve::serve(
+            crate::protocols::by_name("spnn-ss").unwrap(),
+            cfg,
+            &tc,
+            crate::netsim::LinkSpec::from_mbps(s.mbps),
+            &train,
+            &test,
+            2,
+            s.serve.as_ref().unwrap(),
+        )
+        .unwrap();
+        let want = h.infer(&rows).unwrap();
+        let ref_rep = h.shutdown().unwrap();
+        assert_eq!(rep.weight_digest, ref_rep.weight_digest);
+        for (i, (got, w)) in scores.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                w.to_bits(),
+                "row {i}: multi-process serve diverged from netsim"
+            );
+        }
     }
 
     #[test]

@@ -71,6 +71,10 @@ pub struct SessionSpec {
     pub mbps: f64,
     /// All remaining training knobs (seed, epochs, batch, crypto, depth).
     pub tc: TrainConfig,
+    /// Serve mode (`spnn serve --launch`): after training, the parties
+    /// stay resident and answer inference requests with these knobs.
+    /// `None` = ordinary train-and-exit session.
+    pub serve: Option<crate::serve::ServeOpts>,
 }
 
 fn fmt_opt(v: Option<f64>) -> String {
@@ -97,7 +101,7 @@ impl SessionSpec {
     /// possession through the handshake instead of shipping anything.
     pub fn to_wire(&self) -> String {
         let t = &self.tc;
-        format!(
+        let mut s = format!(
             "spnn-cfg v1 proto={} ds={} rows={} holders={} mbps={} epochs={} batch={} \
              seed={} sgld={} lr={} noise={} pbits={} shortexp={} slot={} threads={} depth={}",
             self.protocol,
@@ -116,7 +120,14 @@ impl SessionSpec {
             t.slot_bits,
             t.exec_threads,
             t.pipeline_depth,
-        )
+        );
+        // serve mode rides the config broadcast so every worker process
+        // builds the serve deployment (field absent = train-and-exit,
+        // keeping old wire strings parseable)
+        if let Some(sv) = &self.serve {
+            s.push_str(&format!(" serve={},{}", sv.coalesce, sv.depth));
+        }
+        s
     }
 
     /// Parse the canonical wire string back into a spec (the party side
@@ -159,6 +170,21 @@ impl SessionSpec {
             transport: TransportKind::Tcp,
             psk_file: None,
         };
+        let serve = match kv.get("serve") {
+            None => None,
+            Some(v) => {
+                let (c, d) = v.split_once(',').ok_or_else(|| {
+                    Error::Config(format!("bad serve={v:?} (want COALESCE,DEPTH)"))
+                })?;
+                let coalesce: usize = c
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad serve coalesce {c:?}")))?;
+                let depth: usize = d
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad serve depth {d:?}")))?;
+                Some(crate::serve::ServeOpts { coalesce, depth })
+            }
+        };
         Ok(SessionSpec {
             protocol: get("proto")?.to_string(),
             dataset: get("ds")?.to_string(),
@@ -166,6 +192,7 @@ impl SessionSpec {
             holders: num("holders")?,
             mbps: fnum("mbps")?,
             tc,
+            serve,
         })
     }
 
@@ -676,6 +703,7 @@ mod tests {
             holders: 2,
             mbps: 100.0,
             tc: TrainConfig { epochs: 1, batch: 256, ..Default::default() },
+            serve: None,
         }
     }
 
@@ -703,6 +731,13 @@ mod tests {
         assert_eq!(k.to_wire(), s.to_wire());
         assert_eq!(k.digest(), s.digest());
         assert!(SessionSpec::from_wire(&k.to_wire()).unwrap().tc.psk_file.is_none());
+        // serve mode rides the config broadcast and roundtrips exactly
+        let mut sv = s.clone();
+        sv.serve = Some(crate::serve::ServeOpts { coalesce: 48, depth: 3 });
+        assert_ne!(sv.digest(), s.digest(), "serve mode must change the digest");
+        let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
+        assert_eq!(back.serve, sv.serve);
+        assert!(SessionSpec::from_wire(&format!("{} serve=oops", s.to_wire())).is_err());
     }
 
     #[test]

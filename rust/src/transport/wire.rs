@@ -110,6 +110,8 @@ const KIND_CIPHER_BLOCK: u8 = 4;
 const KIND_SEED: u8 = 5;
 const KIND_BITS: u8 = 6;
 const KIND_CONTROL: u8 = 7;
+const KIND_INFER_REQ: u8 = 8;
+const KIND_INFER_RESP: u8 = 9;
 
 /// Serialize one data frame (length prefix included) with explicit
 /// resilient-link sequence and ack numbers.
@@ -171,6 +173,20 @@ pub fn encode_frame(msg: &Msg, seq: u64, ack: u64) -> Vec<u8> {
             e.u8(KIND_CONTROL);
             e.u32(s.len() as u32);
             e.bytes(s.as_bytes());
+        }
+        Payload::InferReq(v) => {
+            e.u8(KIND_INFER_REQ);
+            e.u32(v.len() as u32);
+            for &x in v {
+                e.u32(x);
+            }
+        }
+        Payload::InferResp(v) => {
+            e.u8(KIND_INFER_RESP);
+            e.u32(v.len() as u32);
+            for &x in v {
+                e.bytes(&x.to_bits().to_le_bytes());
+            }
         }
     }
     e.finish()
@@ -358,6 +374,19 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
                         .map_err(|_| err("control payload is not utf-8"))?;
                     Payload::Control(s)
                 }
+                KIND_INFER_REQ => {
+                    let n = d.count(4)?;
+                    (0..n).map(|_| d.u32()).collect::<Result<Vec<u32>>>().map(Payload::InferReq)?
+                }
+                KIND_INFER_RESP => {
+                    let n = d.count(4)?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let b = d.take(4)?;
+                        v.push(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+                    }
+                    Payload::InferResp(v)
+                }
                 other => return Err(err(format!("unknown payload kind {other}"))),
             };
             d.done()?;
@@ -501,13 +530,20 @@ mod tests {
             (Payload::Seed(x), Payload::Seed(y)) => assert_eq!(x, y),
             (Payload::Bits(x), Payload::Bits(y)) => assert_eq!(x, y),
             (Payload::Control(x), Payload::Control(y)) => assert_eq!(x, y),
+            (Payload::InferReq(x), Payload::InferReq(y)) => assert_eq!(x, y),
+            (Payload::InferResp(x), Payload::InferResp(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (u, v) in x.iter().zip(y) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
             (x, y) => panic!("variant changed: {} vs {}", x.kind(), y.kind()),
         }
     }
 
     fn random_payload(rng: &mut Pcg64) -> Payload {
         let n = (rng.next_u64() % 17) as usize;
-        match rng.next_u64() % 8 {
+        match rng.next_u64() % 10 {
             0 => Payload::U64s((0..n).map(|_| rng.next_u64()).collect()),
             1 => Payload::F32s(
                 (0..n).map(|_| f32::from_bits(rng.next_u64() as u32 & 0x7f7f_ffff)).collect(),
@@ -537,6 +573,10 @@ mod tests {
                 Payload::Seed(s)
             }
             6 => Payload::Bits((0..n).map(|_| rng.next_u64()).collect()),
+            7 => Payload::InferReq((0..n).map(|_| rng.next_u64() as u32).collect()),
+            8 => Payload::InferResp(
+                (0..n).map(|_| f32::from_bits(rng.next_u64() as u32 & 0x7f7f_ffff)).collect(),
+            ),
             _ => Payload::Control(format!("ctl:{}", rng.next_u64())),
         }
     }
@@ -573,6 +613,8 @@ mod tests {
             Payload::CipherBlock { data: vec![], ct_bytes: 0, count: 0 },
             Payload::Bits(vec![]),
             Payload::Control(String::new()),
+            Payload::InferReq(vec![]),
+            Payload::InferResp(vec![]),
         ] {
             let msg = Msg { from: 0, tag: 1, payload, depart: 0.0, phase: Phase::Online };
             assert_msg_eq(&msg, &roundtrip(&msg));
