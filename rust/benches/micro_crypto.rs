@@ -1,51 +1,173 @@
 //! Microbenchmarks of the cryptographic substrates: bignum modpow, Paillier
 //! enc/dec (full vs DJN short-exponent), ring matmul (native vs AOT Pallas
-//! kernel), Beaver matmul, and the bit-sliced DReLU. These are the §Perf
-//! primitives behind every table.
+//! kernel), and the packed batch pipeline. These are the §Perf primitives
+//! behind every table.
+//!
+//! Besides the human-readable numbers, this bench emits
+//! `BENCH_crypto.json`: median ns/op for the pre-PR arithmetic (plain
+//! binary square-and-multiply + wire-form chains, reproduced via the
+//! in-tree `Montgomery::pow_binary` oracle) vs the current path
+//! (fixed-base tables, sliding windows, Montgomery-resident chains) at
+//! test-size (256-bit) and experiments-default (1024-bit) keys. Both paths
+//! compute bit-identical values — the ratio is pure arithmetic speedup.
 
-use spnn::bench_harness::bench;
-use spnn::bignum::{modpow, BigUint};
+use spnn::bench_harness::{bench, BenchStats, JsonObj};
+use spnn::bignum::{modpow, BigUint, Montgomery};
 use spnn::exec::ExecPool;
 use spnn::paillier::pack::{self, Packing};
-use spnn::paillier::{keygen, NoncePool};
+use spnn::paillier::{keygen, KeyPair, NoncePool, PublicKey};
 use spnn::rng::{ChaChaRng, Pcg64};
 use spnn::runtime::Engine;
 use spnn::smpc::RingMat;
 
+/// Mirrors `NoncePool`'s DJN short-exponent width.
+const SHORT_EXP_BITS: usize = 400;
+
+/// Rebuild the deterministic DJN base `h_s = h^n mod n^2` exactly as
+/// `NoncePool` derives it (the formula depends only on the public `n`).
+fn djn_hs(pk: &PublicKey) -> BigUint {
+    let y = pk.n.shr_bits(2).add_u64(3);
+    let y2 = y.square().rem(&pk.n);
+    let h = pk.n.sub(&y2);
+    modpow(&h, &pk.n, &pk.n2)
+}
+
+/// Median ns/op for the old and new paths plus the speedup ratio, printed
+/// and packed for `BENCH_crypto.json`.
+fn compare(old: &BenchStats, new: &BenchStats, ops_per_iter: f64) -> JsonObj {
+    let old_ns = old.median_s / ops_per_iter * 1e9;
+    let new_ns = new.median_s / ops_per_iter * 1e9;
+    let speedup = old_ns / new_ns;
+    println!("    -> speedup {speedup:.2}x ({old_ns:.0} ns -> {new_ns:.0} ns)");
+    JsonObj::new()
+        .num("old_ns", old_ns)
+        .num("new_ns", new_ns)
+        .num("speedup", speedup)
+}
+
+/// Pre-PR vs current crypto hot paths at one key size: nonce generation,
+/// encryption, CRT decryption, and the packed chain-add hop.
+fn crypto_ops(kp: &KeyPair, label: &str, iters: usize) -> JsonObj {
+    let pk = &kp.pk;
+    let sk = &kp.sk;
+    let mut rng = ChaChaRng::seed_from_u64(0xbe9c);
+    let mont_n2 = Montgomery::new(&pk.n2);
+    let serial = ExecPool::serial();
+
+    // nonce generation: binary pow over h_s vs the fixed-base window table
+    let hs = djn_hs(pk);
+    let exps: Vec<BigUint> = (0..16)
+        .map(|_| BigUint::random_bits(&mut rng, SHORT_EXP_BITS))
+        .collect();
+    let mut i = 0;
+    let nonce_old = bench(&format!("{label}/nonce_old_binary"), 1, iters, || {
+        i += 1;
+        std::hint::black_box(mont_n2.pow_binary(&hs, &exps[i % exps.len()]));
+    });
+    let mut pool = NoncePool::new(pk, true); // table built here, amortized
+    let nonce_new = bench(&format!("{label}/nonce_new_fixed_base"), 1, iters, || {
+        pool.refill(&mut rng, 1);
+        std::hint::black_box(pool.take());
+    });
+
+    // encryption with a ready nonce: wire-form multiply (with the pre-PR
+    // redundant reduction) vs the resident pipeline
+    let msg = BigUint::from_u64(123_456_789);
+    let rn_wire = modpow(&hs, &exps[0], &pk.n2);
+    let enc_old = bench(&format!("{label}/encrypt_old_wire"), 1, iters, || {
+        let gm = msg.mul(&pk.n).add_u64(1).rem(&pk.n2);
+        std::hint::black_box(mont_n2.mul(&gm, &rn_wire));
+    });
+    pool.refill(&mut rng, iters + 4);
+    let enc_new = bench(&format!("{label}/encrypt_new_pooled"), 1, iters, || {
+        std::hint::black_box(pk.encrypt_with_pool(&msg, &mut pool));
+    });
+
+    // CRT decryption: two binary half-size pows (the pre-PR dominant cost;
+    // the old loop omits the cheap L/CRT tail, understating the speedup)
+    // vs the full current decrypt
+    let ct = pk.encrypt(&msg, &mut rng);
+    let p2 = sk.p.square();
+    let q2 = sk.q.square();
+    let mont_p2 = Montgomery::new(&p2);
+    let mont_q2 = Montgomery::new(&q2);
+    let p1 = sk.p.sub_u64(1);
+    let q1 = sk.q.sub_u64(1);
+    let dec_old = bench(&format!("{label}/decrypt_old_binary"), 1, iters, || {
+        let cp = mont_p2.pow_binary(&ct.0.rem(&p2), &p1);
+        let cq = mont_q2.pow_binary(&ct.0.rem(&q2), &q1);
+        std::hint::black_box((cp, cq));
+    });
+    let dec_new = bench(&format!("{label}/decrypt_new_windowed"), 1, iters, || {
+        std::hint::black_box(sk.decrypt(&ct));
+    });
+
+    // the packed chain-add hop (holder j > 0): parse incoming block, add
+    // elementwise, serialize — wire-form ciphertexts vs Montgomery-resident
+    let packing = Packing::new(pk, 48, 2).unwrap();
+    let vals: Vec<i64> = (0..512i64).map(|v| (v - 256) << 8).collect();
+    let n_cts = packing.ct_count(vals.len());
+    pool.refill(&mut rng, 2 * n_cts);
+    let mine = pack::encrypt_batch(pk, &packing, &vals, &mut pool, &serial);
+    let mine_res: Vec<_> = mine.iter().map(|c| pk.to_resident(c)).collect();
+    let ct_bytes = pk.ciphertext_bytes();
+    let in_block = {
+        let mut theirs_pool = NoncePool::new(pk, true);
+        theirs_pool.refill(&mut rng, n_cts);
+        let theirs = pack::encrypt_batch(pk, &packing, &vals, &mut theirs_pool, &serial);
+        pack::cts_to_block(&theirs, ct_bytes)
+    };
+    let chain_old = bench(&format!("{label}/chain_add_old_wire"), 1, iters, || {
+        let prev = pack::block_to_cts(&in_block, ct_bytes, n_cts).unwrap();
+        let sum = pack::add_batch(pk, &prev, &mine, &serial).unwrap();
+        std::hint::black_box(pack::cts_to_block(&sum, ct_bytes));
+    });
+    let chain_new = bench(&format!("{label}/chain_add_new_resident"), 1, iters, || {
+        let prev = pack::block_to_resident(pk, &in_block, ct_bytes, n_cts, &serial).unwrap();
+        let sum = pack::add_batch_resident(pk, &prev, &mine_res, &serial).unwrap();
+        std::hint::black_box(pack::resident_to_block(pk, &sum, ct_bytes, &serial));
+    });
+
+    JsonObj::new()
+        .int("key_bits", pk.n.bits() as u64)
+        .int("chain_cts", n_cts as u64)
+        .obj("nonce_gen", compare(&nonce_old, &nonce_new, 1.0))
+        .obj("encrypt", compare(&enc_old, &enc_new, 1.0))
+        .obj("decrypt_crt", compare(&dec_old, &dec_new, 1.0))
+        .obj("chain_add", compare(&chain_old, &chain_new, n_cts as f64))
+}
+
 fn main() {
     let mut rng = ChaChaRng::seed_from_u64(1);
 
-    // bignum: 1024-bit modpow (the Paillier inner loop)
+    // bignum: 1024-bit modpow (the Paillier inner loop), binary vs windowed
     let m = BigUint::random_bits(&mut rng, 1024).add_u64(1);
     let m = if m.is_even() { m.add_u64(1) } else { m };
     let b = BigUint::random_below(&mut rng, &m);
     let e = BigUint::random_bits(&mut rng, 1024);
-    bench("bignum/modpow_1024", 2, 10, || {
-        std::hint::black_box(modpow(&b, &e, &m));
+    let mont = Montgomery::new(&m);
+    let pow_old = bench("bignum/modpow1024_binary", 2, 10, || {
+        std::hint::black_box(mont.pow_binary(&b, &e));
     });
+    let pow_new = bench("bignum/modpow1024_window", 2, 10, || {
+        std::hint::black_box(mont.pow(&b, &e));
+    });
+    let modpow_cmp = compare(&pow_old, &pow_new, 1.0);
 
-    // Paillier 1024-bit: keygen, enc (full + pooled short-exp), dec
-    let kp = keygen(&mut rng, 1024);
-    let msg = BigUint::from_u64(123_456_789);
-    bench("paillier1024/encrypt_full", 1, 5, || {
-        std::hint::black_box(kp.pk.encrypt(&msg, &mut rng));
-    });
-    let mut pool = NoncePool::new(&kp.pk, true);
-    bench("paillier1024/nonce_short_exp", 1, 5, || {
-        pool.refill(&mut rng, 1);
-        pool.take();
-    });
-    pool.refill(&mut rng, 40);
-    bench("paillier1024/encrypt_pooled", 2, 30, || {
-        if pool.remaining() == 0 {
-            pool.refill(&mut rng, 30);
-        }
-        std::hint::black_box(kp.pk.encrypt_with_pool(&msg, &mut pool));
-    });
-    let ct = kp.pk.encrypt(&msg, &mut rng);
-    bench("paillier1024/decrypt_crt", 1, 10, || {
-        std::hint::black_box(kp.sk.decrypt(&ct));
-    });
+    // old-vs-new crypto substrate at test-size and experiments-default keys
+    let kp256 = keygen(&mut rng, 256);
+    let key_256 = crypto_ops(&kp256, "crypto256", 30);
+    let kp1024 = keygen(&mut rng, 1024);
+    let key_1024 = crypto_ops(&kp1024, "crypto1024", 10);
+
+    let crypto = JsonObj::new()
+        .str("bench", "micro_crypto")
+        .obj("modpow_1024", modpow_cmp)
+        .obj("key_256", key_256)
+        .obj("key_1024", key_1024);
+    std::fs::write("BENCH_crypto.json", format!("{}\n", crypto.render()))
+        .expect("write BENCH_crypto.json");
+    println!("wrote BENCH_crypto.json");
 
     // Paillier plaintext packing + exec-pool batching (the Algorithm 3 hot
     // path): unpacked per-element encryption (the seed loop) vs packed

@@ -125,6 +125,23 @@ impl BigUint {
         self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
     }
 
+    /// The `width`-bit window starting at bit `lo` (LSB-first), as a `u64`.
+    /// Bits past the top of the number read as zero. `1 <= width <= 64`.
+    pub fn bits_range(&self, lo: usize, width: usize) -> u64 {
+        debug_assert!((1..=64).contains(&width), "bits_range width {width}");
+        let (limb, off) = (lo / 64, lo % 64);
+        let mut v = self.limbs.get(limb).map_or(0, |l| l >> off);
+        if off != 0 {
+            if let Some(&hi) = self.limbs.get(limb + 1) {
+                v |= hi << (64 - off);
+            }
+        }
+        if width < 64 {
+            v &= (1u64 << width) - 1;
+        }
+        v
+    }
+
     pub fn to_u64(&self) -> Option<u64> {
         match self.limbs.len() {
             0 => Some(0),
@@ -425,6 +442,22 @@ mod tests {
             let diff = BigUint::from_u128(hi).sub(&BigUint::from_u128(lo));
             assert_eq!(diff.to_u128(), Some(hi - lo));
         }
+    }
+
+    #[test]
+    fn bits_range_matches_per_bit_reads() {
+        let mut rng = Pcg64::seed_from_u64(17);
+        let v = BigUint::random_bits(&mut rng, 400);
+        for lo in [0usize, 1, 5, 63, 64, 65, 127, 350, 396, 399, 500] {
+            for width in [1usize, 3, 6, 17, 63, 64] {
+                let mut want = 0u64;
+                for k in (0..width).rev() {
+                    want = (want << 1) | v.bit(lo + k) as u64;
+                }
+                assert_eq!(v.bits_range(lo, width), want, "lo={lo} width={width}");
+            }
+        }
+        assert_eq!(BigUint::zero().bits_range(0, 64), 0);
     }
 
     #[test]

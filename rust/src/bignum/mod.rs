@@ -9,7 +9,10 @@
 //!   multiplication,
 //! * Knuth Algorithm D division ([`div`]),
 //! * Montgomery-form modular exponentiation ([`monty`]) for odd moduli
-//!   (Paillier's `n` and `n^2` are odd by construction),
+//!   (Paillier's `n` and `n^2` are odd by construction): sliding-window
+//!   [`Montgomery::pow`], a resident-form value type ([`MontElem`]) for
+//!   conversion-free op chains, and fixed-base window tables
+//!   ([`FixedBaseTable`]) for the DJN nonce base,
 //! * extended-Euclid modular inverse and binary GCD ([`modular`]),
 //! * Miller–Rabin primality and random prime generation ([`prime`]).
 
@@ -21,5 +24,5 @@ mod prime;
 
 pub use biguint::BigUint;
 pub use modular::{gcd, lcm, modinv};
-pub use monty::{modpow, Montgomery};
+pub use monty::{modpow, FixedBaseTable, MontElem, Montgomery};
 pub use prime::{gen_prime, is_prime};

@@ -4,8 +4,34 @@
 //! decryption) and `n^2` (encryption); both moduli are odd, which is all
 //! Montgomery reduction needs. CIOS (coarsely integrated operand scanning)
 //! multiplication keeps everything in one pass over the limbs.
+//!
+//! Three layers, slowest to fastest:
+//! * [`Montgomery::pow`] / [`Montgomery::mul`] — `BigUint` in, `BigUint`
+//!   out, converting through Montgomery form per call. `pow` uses a
+//!   sliding window (odd-power table, width picked from the exponent
+//!   length), cutting multiplies from ~bits/2 to ~bits/(w+1), with a
+//!   dedicated squaring routine for the bits-many squarings.
+//! * [`MontElem`] + [`Montgomery::enter`]/[`Montgomery::exit`] — values
+//!   *resident* in Montgomery form. Chains of [`Montgomery::mul_elem`] /
+//!   [`Montgomery::pow_elem`] pay the two conversions once per chain
+//!   instead of once per op; the Paillier batch pipeline lives here.
+//! * [`FixedBaseTable`] — radix-2^w precomputed powers of one immutable
+//!   base (the DJN nonce base `h_s`), dropping a 400-bit exponentiation
+//!   from ~600 multiplies to ~`bits/w` table multiplies.
+//!
+//! All paths produce canonical (`< m`) values, so results are bit-identical
+//! to the plain square-and-multiply reference ([`Montgomery::pow_binary`],
+//! kept as the property-test oracle and benchmark baseline).
 
 use super::{modinv, BigUint};
+
+/// A value resident in Montgomery form: exactly `n` limbs, `< m`, equal to
+/// `v·R mod m` for the context that created it. Produced by
+/// [`Montgomery::enter`]; only meaningful with that same context.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MontElem {
+    limbs: Vec<u64>,
+}
 
 /// Precomputed Montgomery context for an odd modulus.
 pub struct Montgomery {
@@ -15,8 +41,11 @@ pub struct Montgomery {
     n: usize,
     /// `-m^-1 mod 2^64` (the CIOS per-limb factor).
     m_inv_neg: u64,
-    /// `R^2 mod m` where `R = 2^(64n)` — converts into Montgomery form.
-    r2: BigUint,
+    /// `R^2 mod m` where `R = 2^(64n)`, padded to n limbs — converts into
+    /// Montgomery form.
+    r2: Vec<u64>,
+    /// `R mod m` padded to n limbs — the Montgomery form of 1.
+    r1: Vec<u64>,
 }
 
 impl Montgomery {
@@ -31,9 +60,12 @@ impl Montgomery {
         }
         debug_assert_eq!(m0.wrapping_mul(inv), 1);
         let m_inv_neg = inv.wrapping_neg();
-        // R^2 mod m via shifting (R = 2^(64n))
-        let r2 = BigUint::one().shl_bits(2 * 64 * n).rem(m);
-        Montgomery { m: m.clone(), n, m_inv_neg, r2 }
+        // R^2 and R mod m via shifting (R = 2^(64n))
+        let mut r2 = BigUint::one().shl_bits(2 * 64 * n).rem(m).limbs;
+        r2.resize(n, 0);
+        let mut r1 = BigUint::one().shl_bits(64 * n).rem(m).limbs;
+        r1.resize(n, 0);
+        Montgomery { m: m.clone(), n, m_inv_neg, r2, r1 }
     }
 
     /// CIOS Montgomery multiplication: returns `a * b * R^-1 mod m`
@@ -77,43 +109,311 @@ impl Montgomery {
         t
     }
 
-    fn to_mont(&self, a: &BigUint) -> Vec<u64> {
-        let mut al = a.rem(&self.m).limbs;
-        al.resize(self.n, 0);
-        let mut r2 = self.r2.limbs.clone();
-        r2.resize(self.n, 0);
-        self.mont_mul(&al, &r2)
+    /// Dedicated Montgomery squaring: the cross products `a[i]·a[j]` (i<j)
+    /// are computed once and doubled, then the diagonal added, then a
+    /// separate REDC pass — ~25% fewer limb multiplies than `mont_mul(a,a)`.
+    /// Exponentiation is squaring-dominated, so this is the single biggest
+    /// lever on `pow`.
+    fn mont_sqr(&self, a: &[u64]) -> Vec<u64> {
+        let n = self.n;
+        let m = &self.m.limbs;
+        // full 2n-limb product: cross terms first
+        let mut t = vec![0u64; 2 * n + 2];
+        for i in 0..n {
+            let ai = a[i] as u128;
+            if ai == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in (i + 1)..n {
+                let cur = t[i + j] as u128 + ai * a[j] as u128 + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + n;
+            while carry > 0 {
+                let cur = t[k] as u128 + carry;
+                t[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        // double the cross terms (shift the whole accumulator left one bit)
+        let mut prev = 0u64;
+        for limb in t.iter_mut() {
+            let cur = *limb;
+            *limb = (cur << 1) | (prev >> 63);
+            prev = cur;
+        }
+        // add the diagonal a[i]^2
+        let mut carry = 0u128;
+        for i in 0..n {
+            let sq = a[i] as u128 * a[i] as u128;
+            let lo = t[2 * i] as u128 + (sq as u64) as u128 + carry;
+            t[2 * i] = lo as u64;
+            let hi = t[2 * i + 1] as u128 + ((sq >> 64) as u64) as u128 + (lo >> 64);
+            t[2 * i + 1] = hi as u64;
+            carry = hi >> 64;
+        }
+        let mut k = 2 * n;
+        while carry > 0 {
+            let cur = t[k] as u128 + carry;
+            t[k] = cur as u64;
+            carry = cur >> 64;
+            k += 1;
+        }
+        // REDC: n rounds of t += (t[i]·m' mod 2^64)·m·2^{64i}, then t /= R.
+        // a < m keeps a^2 < m·R, so one conditional subtract suffices.
+        for i in 0..n {
+            let u = t[i].wrapping_mul(self.m_inv_neg) as u128;
+            let mut carry = 0u128;
+            for j in 0..n {
+                let cur = t[i + j] as u128 + u * m[j] as u128 + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + n;
+            while carry > 0 {
+                let cur = t[k] as u128 + carry;
+                t[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        let mut out = t[n..=2 * n].to_vec();
+        if out[n] != 0 || ge(&out[..n], m) {
+            sub_in_place(&mut out, m);
+        }
+        out.truncate(n);
+        out
     }
 
-    fn from_mont(&self, a: &[u64]) -> BigUint {
+    /// Convert into Montgomery form. Skips the division when the input is
+    /// already reduced (`a < m`) — the common case in the resident pipeline.
+    pub fn enter(&self, a: &BigUint) -> MontElem {
+        let mut al = if *a < self.m {
+            a.limbs.clone()
+        } else {
+            a.rem(&self.m).limbs
+        };
+        al.resize(self.n, 0);
+        MontElem { limbs: self.mont_mul(&al, &self.r2) }
+    }
+
+    /// Convert out of Montgomery form (canonical `< m` value).
+    pub fn exit(&self, a: &MontElem) -> BigUint {
         let mut one = vec![0u64; self.n];
         one[0] = 1;
-        BigUint::from_limbs(self.mont_mul(a, &one))
+        BigUint::from_limbs(self.mont_mul(&a.limbs, &one))
     }
 
-    /// `base^exp mod m` (left-to-right square-and-multiply in Montgomery
-    /// form). Not constant-time — the threat model is semi-honest, no
-    /// side-channel adversary (DESIGN.md §7).
+    /// The Montgomery form of 1 (`R mod m`).
+    pub fn one_elem(&self) -> MontElem {
+        MontElem { limbs: self.r1.clone() }
+    }
+
+    /// Resident multiply: one CIOS pass, no conversions.
+    pub fn mul_elem(&self, a: &MontElem, b: &MontElem) -> MontElem {
+        MontElem { limbs: self.mont_mul(&a.limbs, &b.limbs) }
+    }
+
+    /// Resident squaring via the dedicated squaring routine.
+    pub fn sqr_elem(&self, a: &MontElem) -> MontElem {
+        MontElem { limbs: self.mont_sqr(&a.limbs) }
+    }
+
+    /// Resident exponentiation: left-to-right sliding window over an
+    /// odd-power table (`base^1, base^3, …, base^(2^w - 1)`), window width
+    /// picked from the exponent length. ~bits squarings plus ~bits/(w+1)
+    /// multiplies, vs bits/2 multiplies for plain square-and-multiply.
+    /// Not constant-time — the threat model is semi-honest, no side-channel
+    /// adversary (DESIGN.md §7).
+    pub fn pow_elem(&self, base: &MontElem, exp: &BigUint) -> MontElem {
+        let bits = exp.bits();
+        if bits == 0 {
+            return self.one_elem();
+        }
+        let w = window_for(bits);
+        if w == 1 {
+            // tiny exponent: the table would cost more than it saves
+            let mut acc = base.clone();
+            for i in (0..bits - 1).rev() {
+                acc = self.sqr_elem(&acc);
+                if exp.bit(i) {
+                    acc = self.mul_elem(&acc, base);
+                }
+            }
+            return acc;
+        }
+        // odd powers: tbl[k] = base^(2k+1)
+        let b2 = self.sqr_elem(base);
+        let mut tbl = Vec::with_capacity(1usize << (w - 1));
+        tbl.push(base.clone());
+        for _ in 1..(1usize << (w - 1)) {
+            let next = self.mul_elem(tbl.last().expect("non-empty"), &b2);
+            tbl.push(next);
+        }
+        let mut acc: Option<MontElem> = None;
+        let mut i = bits as isize - 1;
+        while i >= 0 {
+            if !exp.bit(i as usize) {
+                if let Some(a) = acc.as_mut() {
+                    *a = self.sqr_elem(a);
+                }
+                i -= 1;
+                continue;
+            }
+            // widest window ending at a set low bit, at most w bits
+            let mut j = (i + 1 - w as isize).max(0);
+            while !exp.bit(j as usize) {
+                j += 1;
+            }
+            let width = (i - j + 1) as usize;
+            if let Some(a) = acc.as_mut() {
+                for _ in 0..width {
+                    *a = self.sqr_elem(a);
+                }
+            }
+            let digit = exp.bits_range(j as usize, width);
+            let entry = &tbl[(digit >> 1) as usize];
+            acc = Some(match acc.take() {
+                Some(a) => self.mul_elem(&a, entry),
+                None => entry.clone(),
+            });
+            i = j - 1;
+        }
+        acc.expect("bits > 0 leaves at least one window")
+    }
+
+    /// `base^exp mod m` through the sliding-window resident path.
     pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
         if exp.is_zero() {
             return BigUint::one().rem(&self.m);
         }
-        let bm = self.to_mont(base);
-        let mut acc = self.to_mont(&BigUint::one());
+        self.exit(&self.pow_elem(&self.enter(base), exp))
+    }
+
+    /// Plain left-to-right binary square-and-multiply (the pre-windowed
+    /// implementation). Kept public as the property-test oracle and the
+    /// benchmark baseline; produces bit-identical results to [`Self::pow`].
+    pub fn pow_binary(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&self.m);
+        }
+        let bm = self.enter(base);
+        let mut acc = MontElem { limbs: self.r1.clone() };
         for i in (0..exp.bits()).rev() {
-            acc = self.mont_mul(&acc, &acc);
+            acc = MontElem { limbs: self.mont_mul(&acc.limbs, &acc.limbs) };
             if exp.bit(i) {
-                acc = self.mont_mul(&acc, &bm);
+                acc = MontElem { limbs: self.mont_mul(&acc.limbs, &bm.limbs) };
             }
         }
-        self.from_mont(&acc)
+        self.exit(&acc)
     }
 
     /// Modular multiplication through Montgomery form.
     pub fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
-        let am = self.to_mont(a);
-        let bm = self.to_mont(b);
-        self.from_mont(&self.mont_mul(&am, &bm))
+        self.exit(&self.mul_elem(&self.enter(a), &self.enter(b)))
+    }
+}
+
+/// Sliding-window width for an exponent of `bits` bits (standard
+/// table-cost/savings crossovers for 64-bit limb arithmetic).
+fn window_for(bits: usize) -> usize {
+    match bits {
+        0..=23 => 1,
+        24..=79 => 3,
+        80..=239 => 4,
+        240..=767 => 5,
+        _ => 6,
+    }
+}
+
+/// Radix-2^w fixed-base exponentiation table: `rows[i][j-1] = b^(j·2^(w·i))`
+/// for `j in 1..2^w`. One table per (context, base) pair amortizes across
+/// every exponentiation of that base — the DJN nonce base `h_s` is fixed
+/// per key, so [`crate::paillier::NoncePool`] builds this once and each
+/// 400-bit nonce costs ~`bits/w` multiplies and **zero squarings**.
+///
+/// Immutable after construction; share by reference across exec-pool
+/// workers.
+pub struct FixedBaseTable {
+    window: usize,
+    max_bits: usize,
+    rows: Vec<Vec<MontElem>>,
+}
+
+impl FixedBaseTable {
+    /// Precompute windows for exponents up to `max_exp_bits` bits.
+    /// Table size: `ceil(max_exp_bits/window) · (2^window - 1)` residues.
+    pub fn new(mont: &Montgomery, base: &BigUint, max_exp_bits: usize, window: usize) -> Self {
+        assert!((1..=12).contains(&window), "fixed-base window {window} out of range");
+        assert!(max_exp_bits >= 1, "fixed-base table needs max_exp_bits >= 1");
+        let digits = max_exp_bits.div_ceil(window);
+        let mut rows = Vec::with_capacity(digits);
+        let mut row_base = mont.enter(base); // b^(2^(w·i)) for the current row
+        for i in 0..digits {
+            let mut row = Vec::with_capacity((1usize << window) - 1);
+            row.push(row_base.clone());
+            for _ in 2..(1usize << window) {
+                row.push(mont.mul_elem(row.last().expect("non-empty"), &row_base));
+            }
+            if i + 1 < digits {
+                // b^(2^(w·(i+1))) = last entry (b^((2^w - 1)·2^(w·i))) · row_base
+                row_base = mont.mul_elem(row.last().expect("non-empty"), &row_base);
+            }
+            rows.push(row);
+        }
+        FixedBaseTable { window, max_bits: digits * window, rows }
+    }
+
+    /// Pick a window width from the exponent budget and build the table.
+    pub fn for_bits(mont: &Montgomery, base: &BigUint, max_exp_bits: usize) -> Self {
+        let window = match max_exp_bits {
+            0..=63 => 2,
+            64..=255 => 4,
+            256..=1023 => 6,
+            _ => 7,
+        };
+        Self::new(mont, base, max_exp_bits, window)
+    }
+
+    /// `base^exp` in resident form: one table lookup + multiply per nonzero
+    /// w-bit digit of `exp`. Panics if `exp` exceeds the table's range.
+    pub fn pow(&self, mont: &Montgomery, exp: &BigUint) -> MontElem {
+        assert!(
+            exp.bits() <= self.max_bits,
+            "fixed-base table covers {} bits, exponent has {}",
+            self.max_bits,
+            exp.bits()
+        );
+        let mut acc: Option<MontElem> = None;
+        for (i, row) in self.rows.iter().enumerate() {
+            let lo = i * self.window;
+            if lo >= exp.bits() {
+                break;
+            }
+            let digit = exp.bits_range(lo, self.window) as usize;
+            if digit == 0 {
+                continue;
+            }
+            let entry = &row[digit - 1];
+            acc = Some(match acc {
+                Some(a) => mont.mul_elem(&a, entry),
+                None => entry.clone(),
+            });
+        }
+        acc.unwrap_or_else(|| mont.one_elem())
+    }
+
+    /// Window width in bits.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Largest exponent bit-length the table covers.
+    pub fn max_bits(&self) -> usize {
+        self.max_bits
     }
 }
 
@@ -186,6 +486,14 @@ mod tests {
         acc
     }
 
+    fn odd_modulus(rng: &mut Pcg64, bits: usize) -> BigUint {
+        let m = BigUint::random_bits(rng, bits);
+        if m.is_even() {
+            return m.add_u64(1);
+        }
+        m
+    }
+
     #[test]
     fn matches_u128_oracle() {
         let mut rng = Pcg64::seed_from_u64(40);
@@ -219,10 +527,7 @@ mod tests {
     #[test]
     fn large_operand_algebra() {
         let mut rng = Pcg64::seed_from_u64(42);
-        let mut m = BigUint::random_bits(&mut rng, 1024);
-        if m.is_even() {
-            m = m.add_u64(1);
-        }
+        let m = odd_modulus(&mut rng, 1024);
         let mont = Montgomery::new(&m);
         let a = BigUint::random_below(&mut rng, &m);
         let b = BigUint::random_below(&mut rng, &m);
@@ -231,10 +536,7 @@ mod tests {
         // (a^x)^y == a^(x*y)
         let x = BigUint::from_u64(rng.next_u64() % 1000 + 2);
         let y = BigUint::from_u64(rng.next_u64() % 1000 + 2);
-        assert_eq!(
-            mont.pow(&mont.pow(&a, &x), &y),
-            mont.pow(&a, &x.mul(&y))
-        );
+        assert_eq!(mont.pow(&mont.pow(&a, &x), &y), mont.pow(&a, &x.mul(&y)));
         // a^x * a^y == a^(x+y)
         assert_eq!(
             mont.mul(&mont.pow(&a, &x), &mont.pow(&a, &y)),
@@ -285,5 +587,151 @@ mod tests {
         let got = mont.pow(&g, &x);
         let want = n.mul(&x).add_u64(1).rem(&n2);
         assert_eq!(got, want);
+    }
+
+    // ---- sliding-window / resident-form property tests ----
+
+    #[test]
+    fn windowed_pow_matches_binary_oracle_across_widths() {
+        // exponent widths straddling every window_for() breakpoint,
+        // including 0, 1, 64, 400 (DJN) and the full modulus width
+        let mut rng = Pcg64::seed_from_u64(45);
+        for m_bits in [64usize, 256, 1024] {
+            let m = odd_modulus(&mut rng, m_bits);
+            let mont = Montgomery::new(&m);
+            for e_bits in [0usize, 1, 2, 23, 24, 64, 79, 80, 239, 240, 400, 767, 768, 1024] {
+                let base = BigUint::random_below(&mut rng, &m);
+                let exp = if e_bits == 0 {
+                    BigUint::zero()
+                } else {
+                    BigUint::random_bits(&mut rng, e_bits)
+                };
+                assert_eq!(
+                    mont.pow(&base, &exp),
+                    mont.pow_binary(&base, &exp),
+                    "m_bits={m_bits} e_bits={e_bits}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_pow_handles_degenerate_bases() {
+        let mut rng = Pcg64::seed_from_u64(46);
+        let m = odd_modulus(&mut rng, 256);
+        let mont = Montgomery::new(&m);
+        let e = BigUint::random_bits(&mut rng, 400);
+        for base in [BigUint::zero(), BigUint::one(), m.sub_u64(1), m.clone(), m.mul_u64(3)] {
+            assert_eq!(mont.pow(&base, &e), mont.pow_binary(&base, &e));
+        }
+    }
+
+    #[test]
+    fn sqr_elem_matches_mul_elem() {
+        let mut rng = Pcg64::seed_from_u64(47);
+        for m_bits in [64usize, 192, 512, 1024, 2048] {
+            let m = odd_modulus(&mut rng, m_bits);
+            let mont = Montgomery::new(&m);
+            for _ in 0..20 {
+                let a = mont.enter(&BigUint::random_below(&mut rng, &m));
+                assert_eq!(mont.sqr_elem(&a), mont.mul_elem(&a, &a), "m_bits={m_bits}");
+            }
+            // edge values: 0, 1, m-1
+            for v in [BigUint::zero(), BigUint::one(), m.sub_u64(1)] {
+                let a = mont.enter(&v);
+                assert_eq!(mont.sqr_elem(&a), mont.mul_elem(&a, &a));
+            }
+        }
+    }
+
+    #[test]
+    fn enter_exit_roundtrip_and_fast_path() {
+        let mut rng = Pcg64::seed_from_u64(48);
+        let m = odd_modulus(&mut rng, 512);
+        let mont = Montgomery::new(&m);
+        let a = BigUint::random_below(&mut rng, &m);
+        // a < m takes the no-division fast path; a + m needs the rem
+        assert_eq!(mont.exit(&mont.enter(&a)), a);
+        assert_eq!(mont.exit(&mont.enter(&a.add(&m))), a);
+        assert_eq!(mont.exit(&mont.one_elem()), BigUint::one());
+    }
+
+    #[test]
+    fn resident_chain_matches_naive_mul_rem_chain() {
+        // a long add-chain (ciphertext aggregation shape): stay resident
+        // for the whole chain, exit once, compare against mul+rem per hop
+        let mut rng = Pcg64::seed_from_u64(49);
+        let m = odd_modulus(&mut rng, 512);
+        let mont = Montgomery::new(&m);
+        let vals: Vec<BigUint> =
+            (0..16).map(|_| BigUint::random_below(&mut rng, &m)).collect();
+        let mut resident = mont.enter(&vals[0]);
+        let mut naive = vals[0].clone();
+        for v in &vals[1..] {
+            resident = mont.mul_elem(&resident, &mont.enter(v));
+            naive = naive.mul(v).rem(&m);
+        }
+        assert_eq!(mont.exit(&resident), naive);
+    }
+
+    #[test]
+    fn fixed_base_matches_oracle_across_windows() {
+        let mut rng = Pcg64::seed_from_u64(50);
+        let m = odd_modulus(&mut rng, 384);
+        let mont = Montgomery::new(&m);
+        let base = BigUint::random_below(&mut rng, &m);
+        for window in 1..=8usize {
+            let tbl = FixedBaseTable::new(&mont, &base, 400, window);
+            for e_bits in [0usize, 1, 64, 400] {
+                let exp = if e_bits == 0 {
+                    BigUint::zero()
+                } else {
+                    BigUint::random_bits(&mut rng, e_bits)
+                };
+                assert_eq!(
+                    mont.exit(&tbl.pow(&mont, &exp)),
+                    mont.pow_binary(&base, &exp),
+                    "window={window} e_bits={e_bits}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_base_covers_full_digit_range() {
+        // every table entry of a small window gets exercised: exponents
+        // 0..2^w across digit boundaries
+        let mut rng = Pcg64::seed_from_u64(51);
+        let m = odd_modulus(&mut rng, 128);
+        let mont = Montgomery::new(&m);
+        let base = BigUint::random_below(&mut rng, &m);
+        let tbl = FixedBaseTable::new(&mont, &base, 16, 3);
+        for e in 0u64..256 {
+            let exp = BigUint::from_u64(e);
+            assert_eq!(
+                mont.exit(&tbl.pow(&mont, &exp)),
+                mont.pow_binary(&base, &exp),
+                "e={e}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fixed-base table covers")]
+    fn fixed_base_rejects_oversized_exponent() {
+        let m = BigUint::from_u64(101);
+        let mont = Montgomery::new(&m);
+        let tbl = FixedBaseTable::new(&mont, &BigUint::from_u64(7), 8, 2);
+        let _ = tbl.pow(&mont, &BigUint::from_u64(1 << 20));
+    }
+
+    #[test]
+    fn for_bits_picks_sane_windows() {
+        let m = BigUint::from_u64(101);
+        let mont = Montgomery::new(&m);
+        let b = BigUint::from_u64(7);
+        assert_eq!(FixedBaseTable::for_bits(&mont, &b, 32).window(), 2);
+        assert_eq!(FixedBaseTable::for_bits(&mont, &b, 400).window(), 6);
+        assert!(FixedBaseTable::for_bits(&mont, &b, 400).max_bits() >= 400);
     }
 }

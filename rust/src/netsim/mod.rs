@@ -9,6 +9,9 @@
 //!   between its netsim calls is accumulated as compute time, and a received
 //!   message forwards the clock to
 //!   `max(local, sender_depart + latency + bytes/bandwidth)`,
+//! * each party's **uplink is a shared link**: concurrent online sends
+//!   serialize (`depart = max(clock, uplink_free)`), so back-to-back bulk
+//!   messages contend for bandwidth instead of each seeing the full link,
 //! * per-link statistics (bytes, messages, per [`Phase`]) feed the
 //!   experiment reports.
 //!
@@ -20,9 +23,9 @@
 //! Pipelined protocols tag messages with a batch / stream id and receive
 //! them out of order through [`NetPort::recv_tagged`] (per-peer reorder
 //! buffers, FIFO within a tag); blocked wall time never counts as compute
-//! and each message's arrival stamp depends only on its own departure and
-//! size, so work done ahead of demand is absorbed into the wait for slower
-//! remote results (overlap credit).
+//! and each message's arrival stamp depends only on its own (queued)
+//! departure and size, so work done ahead of demand is absorbed into the
+//! wait for slower remote results (overlap credit).
 
 mod payload;
 mod port;
@@ -313,21 +316,65 @@ mod tests {
 
     #[test]
     fn out_of_order_clock_uses_per_message_arrival() {
-        // a big tag-1 message sent first and consumed second must not
-        // inherit the later consumption point: each message's arrival stamp
-        // depends only on its own departure time and size.
+        // a big tag-2 message consumed first must not drag the clock past
+        // the earlier small tag-1 message's own arrival: arrival stamps are
+        // per message (departure + size), not per consumption point.
         let spec = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 };
         let (mut ports, _) = full_mesh(&["A", "B"], spec);
         let mut b = ports.pop().unwrap();
         let mut a = ports.pop().unwrap();
-        // 1 MB at 1 Mbps = 8 s; the small message ~0 s
-        a.send_tagged(1, 1, Payload::U64s(vec![0u64; 125_000])).unwrap();
-        a.send_tagged(1, 2, Payload::U64s(vec![1])).unwrap();
-        assert_eq!(b.recv_tagged(0, 2).unwrap().into_u64s().unwrap(), vec![1]);
-        let after_small = b.now();
-        assert!(after_small < 1.0, "small message delayed by big one: {after_small}");
-        b.recv_tagged(0, 1).unwrap();
+        // small first (arrives ~0 s), then 1 MB at 1 Mbps = 8 s
+        a.send_tagged(1, 1, Payload::U64s(vec![1])).unwrap();
+        a.send_tagged(1, 2, Payload::U64s(vec![0u64; 125_000])).unwrap();
+        b.recv_tagged(0, 2).unwrap();
         let after_big = b.now();
         assert!((8.0..9.0).contains(&after_big), "clock {after_big}");
+        assert_eq!(b.recv_tagged(0, 1).unwrap().into_u64s().unwrap(), vec![1]);
+        let after_small = b.now();
+        // the small message's own arrival is ~0 s: consuming it after the
+        // big one must not advance the clock further
+        assert!(
+            (after_small - after_big).abs() < 1e-6,
+            "small message re-advanced the clock: {after_small} vs {after_big}"
+        );
+    }
+
+    #[test]
+    fn uplink_contention_serializes_concurrent_sends() {
+        // two 1 MB online messages pushed back to back share the sender's
+        // uplink: the second departs when the first finishes, so arrivals
+        // land at ~8 s and ~16 s — not both at 8 s.
+        let spec = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 };
+        let (mut ports, _) = full_mesh(&["A", "B", "C"], spec);
+        let mut c = ports.pop().unwrap();
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        let blob = || Payload::U64s(vec![0u64; 125_000]); // 1 MB
+        a.send(1, blob()).unwrap();
+        a.send(2, blob()).unwrap(); // different peer, same shared uplink
+        b.recv(0).unwrap();
+        assert!((8.0..9.0).contains(&b.now()), "first transfer: {}", b.now());
+        c.recv(0).unwrap();
+        assert!((16.0..17.0).contains(&c.now()), "second transfer queued: {}", c.now());
+    }
+
+    #[test]
+    fn uplink_contention_skips_offline_and_resets() {
+        // offline traffic neither queues on the uplink nor occupies it
+        let spec = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 };
+        let (mut ports, _) = full_mesh(&["A", "B"], spec);
+        let mut b = ports.pop().unwrap();
+        let mut a = ports.pop().unwrap();
+        a.send_phase(1, Payload::U64s(vec![0u64; 125_000]), Phase::Offline).unwrap();
+        a.send(1, Payload::U64s(vec![1])).unwrap();
+        b.recv(0).unwrap();
+        b.recv(0).unwrap();
+        assert!(b.now() < 1.0, "offline send occupied the uplink: {}", b.now());
+        // reset_clock clears the contention cursor along with the clock
+        a.reset_clock();
+        a.send(1, Payload::U64s(vec![2])).unwrap();
+        b.reset_clock();
+        b.recv(0).unwrap();
+        assert!(b.now() < 1.0, "uplink cursor survived reset: {}", b.now());
     }
 }

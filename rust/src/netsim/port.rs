@@ -14,6 +14,17 @@
 //! arrival stamp depends only on its departure time and size — so work done
 //! ahead of demand (prefetched crypto material) is absorbed into the wait
 //! for slower remote results instead of extending the critical path.
+//!
+//! The sender's **uplink is a shared resource**: concurrent in-flight
+//! online messages from one party serialize on it, so a message's
+//! departure is `max(clock, uplink_free)` and the uplink stays busy for
+//! the message's transfer time. Without this, k messages pushed back to
+//! back would each see the full link bandwidth and the sim would credit a
+//! k-times-too-fast network (see `EXPERIMENTS.md` §Crypto substrate —
+//! honest accounting matters most once crypto stops dominating). Latency
+//! still overlaps across messages (propagation is not a shared resource),
+//! and offline-phase traffic is excluded, mirroring its exclusion from the
+//! online clock.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -34,7 +45,8 @@ pub struct Msg {
     /// Batch / stream id for out-of-order matching ([`NO_TAG`] = untagged).
     pub tag: u64,
     pub payload: Payload,
-    /// Sender's virtual clock at departure.
+    /// Sender's virtual clock at departure — after queueing for the
+    /// sender's shared uplink (online phase).
     pub depart: f64,
     pub phase: Phase,
 }
@@ -59,6 +71,9 @@ pub struct NetPort {
     /// reported by deadlock diagnostics.
     stage: &'static str,
     now_s: f64,
+    /// Virtual time at which this party's uplink finishes its current
+    /// transfer — the bandwidth-contention cursor for online sends.
+    uplink_free_s: f64,
     last_wall: Instant,
     recv_timeout: Duration,
 }
@@ -87,6 +102,7 @@ impl NetPort {
             stats,
             stage: "run",
             now_s: 0.0,
+            uplink_free_s: 0.0,
             last_wall: Instant::now(),
             recv_timeout: Duration::from_secs(600),
         }
@@ -114,6 +130,7 @@ impl NetPort {
     /// Reset the clock (e.g. between timed epochs).
     pub fn reset_clock(&mut self) {
         self.now_s = 0.0;
+        self.uplink_free_s = 0.0;
         self.last_wall = Instant::now();
     }
 
@@ -149,12 +166,24 @@ impl NetPort {
         self.absorb_compute();
         let bytes = payload.total_bytes();
         self.stats.record(self.id, to, bytes, phase);
+        // per-message wire time for the stage breakdown (queueing behind
+        // earlier sends shows up in the clock, not here)
         let wire_s = match phase {
             Phase::Online => self.spec.latency_s + self.spec.transfer_time(bytes),
             Phase::Offline => 0.0,
         };
         self.stats.record_stage(phase, self.stage, bytes, wire_s);
-        let msg = Msg { from: self.id, tag, payload, depart: self.now_s, phase };
+        // online sends queue on this party's shared uplink: departure waits
+        // for the previous transfer to drain, then occupies the link
+        let depart = match phase {
+            Phase::Online => {
+                let depart = self.now_s.max(self.uplink_free_s);
+                self.uplink_free_s = depart + self.spec.transfer_time(bytes);
+                depart
+            }
+            Phase::Offline => self.now_s,
+        };
+        let msg = Msg { from: self.id, tag, payload, depart, phase };
         self.txs
             .get(&to)
             .ok_or_else(|| Error::Net(format!("{}: unknown peer {to}", self.name)))?

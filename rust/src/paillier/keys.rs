@@ -2,14 +2,22 @@
 
 use std::sync::Arc;
 
-use crate::bignum::{gen_prime, modinv, BigUint, Montgomery};
+use crate::bignum::{gen_prime, modinv, BigUint, MontElem, Montgomery};
 use crate::rng::Rng64;
 
 use super::NoncePool;
 
-/// A Paillier ciphertext: an element of `Z_{n^2}^*`.
+/// A Paillier ciphertext: an element of `Z_{n^2}^*` in canonical (wire)
+/// form.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Ciphertext(pub BigUint);
+
+/// A ciphertext resident in Montgomery form of `n^2`. The batched pipeline
+/// ([`crate::paillier::pack`]) keeps whole encrypt→add chains in this
+/// representation and converts to [`Ciphertext`] only at the wire boundary,
+/// saving two conversions plus a division per homomorphic op.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CtElem(pub(crate) MontElem);
 
 /// Public key. `g = n + 1` is implicit.
 #[derive(Clone)]
@@ -31,6 +39,10 @@ pub struct SecretKey {
     pub q: BigUint,
     p2: BigUint,
     q2: BigUint,
+    /// `p - 1` / `q - 1`: the CRT decryption exponents, cached so the hot
+    /// path does zero subtractions/allocations before each pow.
+    p1: BigUint,
+    q1: BigUint,
     mont_p2: Arc<Montgomery>,
     mont_q2: Arc<Montgomery>,
     /// `h_p = L_p(g^{p-1} mod p^2)^{-1} mod p`
@@ -77,11 +89,13 @@ pub fn keygen<R: Rng64>(rng: &mut R, n_bits: usize) -> KeyPair {
         //   L_p(g^{p-1} mod p^2) = (g^{p-1} mod p^2 - 1)/p,  hp = its inverse mod p
         let p2 = p.square();
         let q2 = q.square();
+        let p1 = p.sub_u64(1);
+        let q1 = q.sub_u64(1);
         let mont_p2 = Arc::new(Montgomery::new(&p2));
         let mont_q2 = Arc::new(Montgomery::new(&q2));
         let g = pk.n.add_u64(1);
-        let lp = l_func(&mont_p2.pow(&g, &p.sub_u64(1)), &p);
-        let lq = l_func(&mont_q2.pow(&g, &q.sub_u64(1)), &q);
+        let lp = l_func(&mont_p2.pow(&g, &p1), &p);
+        let lq = l_func(&mont_q2.pow(&g, &q1), &q);
         let (hp, hq) = match (modinv(&lp, &p), modinv(&lq, &q)) {
             (Some(a), Some(b)) => (a, b),
             _ => continue, // pathological primes; retry
@@ -95,6 +109,8 @@ pub fn keygen<R: Rng64>(rng: &mut R, n_bits: usize) -> KeyPair {
             q,
             p2,
             q2,
+            p1,
+            q1,
             mont_p2,
             mont_q2,
             hp,
@@ -127,22 +143,46 @@ impl PublicKey {
     /// Encrypt with a fresh random nonce (`r^n` exponentiation inline).
     pub fn encrypt<R: Rng64>(&self, m: &BigUint, rng: &mut R) -> Ciphertext {
         let r = self.sample_unit(rng);
-        let rn = self.mont_n2.pow(&r, &self.n);
-        self.encrypt_with_rn(m, &rn)
+        let rn = self.mont_n2.pow_elem(&self.mont_n2.enter(&r), &self.n);
+        self.from_resident(&self.encrypt_resident(m, &rn))
     }
 
     /// Encrypt consuming a precomputed `r^n` from a [`NoncePool`]
     /// — the hot-path entry point (zero exponentiations).
     pub fn encrypt_with_pool(&self, m: &BigUint, pool: &mut NoncePool) -> Ciphertext {
         let rn = pool.take();
-        self.encrypt_with_rn(m, &rn)
+        self.from_resident(&self.encrypt_resident(m, &rn))
     }
 
-    /// `c = (1 + m·n) · rn  mod n^2` (binomial shortcut for `g^m`).
-    pub(crate) fn encrypt_with_rn(&self, m: &BigUint, rn: &BigUint) -> Ciphertext {
+    /// `c = (1 + m·n) · rn  mod n^2` in resident form, with `rn` a
+    /// Montgomery-form `r^n`. The binomial shortcut for `g^m` needs no
+    /// reduction — `m < n` keeps `1 + m·n < n^2` — so this is one
+    /// conversion multiply plus one Montgomery multiply, zero divisions.
+    pub(crate) fn encrypt_resident(&self, m: &BigUint, rn: &MontElem) -> CtElem {
         debug_assert!(m < &self.n, "plaintext out of range");
-        let gm = m.mul(&self.n).add_u64(1).rem(&self.n2);
-        Ciphertext(self.mont_n2.mul(&gm, rn))
+        let gm = m.mul(&self.n).add_u64(1);
+        CtElem(self.mont_n2.mul_elem(&self.mont_n2.enter(&gm), rn))
+    }
+
+    /// Convert a wire-form ciphertext into Montgomery-resident form.
+    pub fn to_resident(&self, c: &Ciphertext) -> CtElem {
+        CtElem(self.mont_n2.enter(&c.0))
+    }
+
+    /// Convert a resident ciphertext back to the canonical wire form.
+    pub fn from_resident(&self, c: &CtElem) -> Ciphertext {
+        Ciphertext(self.mont_n2.exit(&c.0))
+    }
+
+    /// Homomorphic addition in resident form: one Montgomery multiply
+    /// (vs two conversions + multiply + conversion for wire-form [`Self::add`]).
+    pub fn add_resident(&self, a: &CtElem, b: &CtElem) -> CtElem {
+        CtElem(self.mont_n2.mul_elem(&a.0, &b.0))
+    }
+
+    /// Plaintext scalar multiply in resident form: `c^k` (sliding window).
+    pub fn mul_plain_resident(&self, c: &CtElem, k: &BigUint) -> CtElem {
+        CtElem(self.mont_n2.pow_elem(&c.0, k))
     }
 
     /// Sample `r` in `[1, n)` with `gcd(r, n) = 1` (whp for RSA-like n).
@@ -162,7 +202,8 @@ impl PublicKey {
 
     /// Add a plaintext constant: `c · g^k = c · (1 + k·n)`.
     pub fn add_plain(&self, c: &Ciphertext, k: &BigUint) -> Ciphertext {
-        let gk = k.rem(&self.n).mul(&self.n).add_u64(1).rem(&self.n2);
+        // k mod n < n keeps 1 + (k mod n)·n < n^2: no outer reduction
+        let gk = k.rem(&self.n).mul(&self.n).add_u64(1);
         Ciphertext(self.mont_n2.mul(&c.0, &gk))
     }
 
@@ -187,7 +228,7 @@ impl PublicKey {
 
     /// Encrypt a signed value using pool randomness.
     pub fn encrypt_i64_with_pool(&self, v: i64, pool: &mut NoncePool) -> Ciphertext {
-        self.encrypt_with_rn(&self.encode_i64(v), &pool.take())
+        self.encrypt_with_pool(&self.encode_i64(v), pool)
     }
 
     /// Wire size of one ciphertext (bytes) for network accounting.
@@ -197,12 +238,13 @@ impl PublicKey {
 }
 
 impl SecretKey {
-    /// CRT decryption.
+    /// CRT decryption: two half-size sliding-window exponentiations with
+    /// cached `p-1` / `q-1` exponents.
     pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
         // m_p = L_p(c^{p-1} mod p^2) · hp mod p
-        let cp = self.mont_p2.pow(&c.0.rem(&self.p2), &self.p.sub_u64(1));
+        let cp = self.mont_p2.pow(&c.0.rem(&self.p2), &self.p1);
         let mp = l_func(&cp, &self.p).mul(&self.hp).rem(&self.p);
-        let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q.sub_u64(1));
+        let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q1);
         let mq = l_func(&cq, &self.q).mul(&self.hq).rem(&self.q);
         // CRT: m = mq + q * ((mp - mq) * q^{-1} mod p)
         let diff = if mp >= mq {

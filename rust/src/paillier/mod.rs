@@ -14,7 +14,13 @@
 //!   from a [`NoncePool`] so the hot loop does zero exponentiations; the
 //!   pool can also be filled with **short-exponent** randomizers
 //!   (Damgård–Jurik–Nielsen style `h_s^{r'}` with a 400-bit `r'`), the main
-//!   lever found in the §Perf pass.
+//!   lever found in the §Perf pass. `h_s` is fixed per key, so refills run
+//!   through a fixed-base window table (zero squarings per nonce).
+//! * Exponentiation is sliding-window Montgomery throughout, and the batch
+//!   pipeline keeps ciphertexts **Montgomery-resident** ([`CtElem`]) across
+//!   encrypt→add chains, converting to canonical wire form once per chain.
+//!   All of this is value-preserving: transcripts are bit-identical to the
+//!   plain square-and-multiply implementation.
 //! * Ring payloads (`Z_{2^64}` fixed-point, two's complement) are embedded
 //!   as signed integers: non-negative as-is, negative as `n - |x|`. Sums
 //!   stay ≪ `n/2`, so decoding is unambiguous.
@@ -27,7 +33,7 @@ mod keys;
 mod nonce;
 pub mod pack;
 
-pub use keys::{keygen, Ciphertext, KeyPair, PublicKey, SecretKey};
+pub use keys::{keygen, Ciphertext, CtElem, KeyPair, PublicKey, SecretKey};
 pub use nonce::NoncePool;
 pub use pack::Packing;
 

@@ -7,15 +7,24 @@
 //! same distinction for triples).
 //!
 //! Two refill strategies:
-//! * `full`:  `r ← [1,n)`, `r^n mod n^2` — textbook, 1 `n_bits`-bit exponent.
+//! * `full`:  `r ← [1,n)`, `r^n mod n^2` — textbook, 1 `n_bits`-bit exponent
+//!   (sliding-window).
 //! * `short` (Damgård–Jurik–Nielsen): precompute `h_s = h^n mod n^2` once
 //!   for a random quadratic non-residue-ish `h`, then each nonce is
 //!   `h_s^{r'}` with a 400-bit `r'` — ~2.5x less exponent work at the same
-//!   decisional-composite-residuosity hardness (DJN03 §4.2).
+//!   decisional-composite-residuosity hardness (DJN03 §4.2). Because `h_s`
+//!   is **fixed per key**, the pool builds a [`FixedBaseTable`] over it once
+//!   and every refill nonce is ~`400/w` table multiplies with zero
+//!   squarings — the classic 4–8x on top of the short exponent.
+//!
+//! Pool entries are stored in Montgomery-resident form ([`MontElem`]): the
+//! encryption path consumes them with a single `mont_mul` and never pays a
+//! conversion (the ciphertext itself stays resident through the batch
+//! pipeline — see [`super::pack`]).
 
 use std::collections::VecDeque;
 
-use crate::bignum::BigUint;
+use crate::bignum::{BigUint, FixedBaseTable, MontElem};
 use crate::exec::ExecPool;
 use crate::rng::Rng64;
 
@@ -25,12 +34,14 @@ use super::PublicKey;
 /// ~128-bit security at 2048-bit moduli; conservative for smaller ones).
 const SHORT_EXP_BITS: usize = 400;
 
-/// Pool of ready-to-use `r^n mod n^2` values.
+/// Pool of ready-to-use `r^n mod n^2` values (Montgomery-resident).
 pub struct NoncePool {
     pk: PublicKey,
-    /// `h^n mod n^2` base for the short-exponent scheme (None = full).
-    hs: Option<BigUint>,
-    pool: VecDeque<BigUint>,
+    /// Fixed-base window table over `h_s = h^n mod n^2` for the
+    /// short-exponent scheme (None = full strategy). Built once per key;
+    /// shared by reference across the exec-pool refill workers.
+    hs: Option<FixedBaseTable>,
+    pool: VecDeque<MontElem>,
 }
 
 impl NoncePool {
@@ -52,7 +63,8 @@ impl NoncePool {
             let y = self.pk.n.shr_bits(2).add_u64(3);
             let y2 = y.square().rem(&self.pk.n);
             let h = self.pk.n.sub(&y2); // -y^2 mod n
-            self.hs = Some(self.pk.mont_n2.pow(&h, &self.pk.n));
+            let hs = self.pk.mont_n2.pow(&h, &self.pk.n);
+            self.hs = Some(FixedBaseTable::for_bits(&self.pk.mont_n2, &hs, SHORT_EXP_BITS));
         }
         self
     }
@@ -61,13 +73,13 @@ impl NoncePool {
     pub fn refill<R: Rng64>(&mut self, rng: &mut R, count: usize) {
         for _ in 0..count {
             let rn = match &self.hs {
-                Some(hs) => {
+                Some(tbl) => {
                     let rp = BigUint::random_bits(rng, SHORT_EXP_BITS);
-                    self.pk.mont_n2.pow(hs, &rp)
+                    tbl.pow(&self.pk.mont_n2, &rp)
                 }
                 None => {
                     let r = self.pk.sample_unit(rng);
-                    self.pk.mont_n2.pow(&r, &self.pk.n)
+                    self.pk.mont_n2.pow_elem(&self.pk.mont_n2.enter(&r), &self.pk.n)
                 }
             };
             self.pool.push_back(rn);
@@ -87,17 +99,17 @@ impl NoncePool {
             })
             .collect();
         let pk = &self.pk;
-        let hs = self.hs.as_ref();
-        let rns = exec.par_map(&exps, 1, |e| match hs {
-            Some(hs) => pk.mont_n2.pow(hs, e),
-            None => pk.mont_n2.pow(e, &pk.n),
+        let tbl = self.hs.as_ref();
+        let rns = exec.par_map(&exps, 1, |e| match tbl {
+            Some(tbl) => tbl.pow(&pk.mont_n2, e),
+            None => pk.mont_n2.pow_elem(&pk.mont_n2.enter(e), &pk.n),
         });
         self.pool.extend(rns);
     }
 
-    /// Take one nonce; panics if the pool ran dry (a protocol bug: refill
-    /// sizing is deterministic per batch).
-    pub fn take(&mut self) -> BigUint {
+    /// Take one nonce (a Montgomery-resident `r^n`); panics if the pool ran
+    /// dry (a protocol bug: refill sizing is deterministic per batch).
+    pub fn take(&mut self) -> MontElem {
         self.pool
             .pop_front()
             .expect("NoncePool exhausted — refill sizing bug")

@@ -27,12 +27,19 @@
 //!
 //! Layout: little-endian slot order, `slot_bits/8` bytes per slot, so
 //! packing/unpacking is pure byte movement (no bignum shifts).
+//!
+//! The batch pipeline has two levels: the `*_resident` functions keep
+//! ciphertexts in Montgomery form ([`CtElem`]) across whole
+//! encrypt→add→…→add chains, converting to wire bytes once per chain
+//! ([`resident_to_block`]); the [`Ciphertext`]-level wrappers
+//! ([`encrypt_batch`], [`add_batch`]) convert per call and exist for
+//! call sites that need canonical values immediately.
 
-use crate::bignum::BigUint;
+use crate::bignum::{BigUint, MontElem};
 use crate::exec::ExecPool;
 use crate::{Error, Result};
 
-use super::{Ciphertext, NoncePool, PublicKey, SecretKey};
+use super::{Ciphertext, CtElem, NoncePool, PublicKey, SecretKey};
 
 /// Default per-slot width in bits (`TrainConfig::slot_bits`): 21 slots per
 /// 1024-bit plaintext, 5 per test-size 256-bit plaintext.
@@ -185,9 +192,26 @@ impl Packing {
     }
 }
 
-/// Pack and encrypt `vals`: one [`NoncePool`] nonce per ciphertext (drawn
-/// serially — the pool order is part of the deterministic transcript), the
-/// modular multiplications fanned out over `exec`.
+/// Pack and encrypt `vals` into **Montgomery-resident** ciphertexts: one
+/// [`NoncePool`] nonce per ciphertext (drawn serially — the pool order is
+/// part of the deterministic transcript), the modular multiplications fanned
+/// out over `exec`. The result stays resident for chain-adds; convert at
+/// the wire boundary with [`resident_to_block`].
+pub fn encrypt_batch_resident(
+    pk: &PublicKey,
+    packing: &Packing,
+    vals: &[i64],
+    pool: &mut NoncePool,
+    exec: &ExecPool,
+) -> Vec<CtElem> {
+    let plains = packing.pack(vals);
+    let jobs: Vec<(BigUint, MontElem)> =
+        plains.into_iter().map(|m| (m, pool.take())).collect();
+    exec.par_map(&jobs, PAR_MIN_OPS, |(m, rn)| pk.encrypt_resident(m, rn))
+}
+
+/// Pack and encrypt `vals` into wire-form ciphertexts (the resident path
+/// plus one conversion per ciphertext).
 pub fn encrypt_batch(
     pk: &PublicKey,
     packing: &Packing,
@@ -195,10 +219,8 @@ pub fn encrypt_batch(
     pool: &mut NoncePool,
     exec: &ExecPool,
 ) -> Vec<Ciphertext> {
-    let plains = packing.pack(vals);
-    let jobs: Vec<(BigUint, BigUint)> =
-        plains.into_iter().map(|m| (m, pool.take())).collect();
-    exec.par_map(&jobs, PAR_MIN_OPS, |(m, rn)| pk.encrypt_with_rn(m, rn))
+    let res = encrypt_batch_resident(pk, packing, vals, pool, exec);
+    exec.par_map(&res, PAR_MIN_OPS, |c| pk.from_resident(c))
 }
 
 /// Decrypt a batch of packed ciphertexts (parallel CRT decryptions) and
@@ -232,6 +254,50 @@ pub fn add_batch(
     }
     let idx: Vec<usize> = (0..a.len()).collect();
     Ok(exec.par_map(&idx, PAR_MIN_OPS, |&i| pk.add(&a[i], &b[i])))
+}
+
+/// Elementwise homomorphic addition of two equal-length **resident**
+/// ciphertext batches: one Montgomery multiply per element, no conversions.
+pub fn add_batch_resident(
+    pk: &PublicKey,
+    a: &[CtElem],
+    b: &[CtElem],
+    exec: &ExecPool,
+) -> Result<Vec<CtElem>> {
+    if a.len() != b.len() {
+        return Err(Error::Protocol(format!(
+            "add_batch: {} vs {} ciphertexts",
+            a.len(),
+            b.len()
+        )));
+    }
+    let idx: Vec<usize> = (0..a.len()).collect();
+    Ok(exec.par_map(&idx, PAR_MIN_OPS, |&i| pk.add_resident(&a[i], &b[i])))
+}
+
+/// Parse a flat wire block straight into Montgomery-resident form (one
+/// conversion multiply per ciphertext, fanned out over `exec`).
+pub fn block_to_resident(
+    pk: &PublicKey,
+    data: &[u8],
+    ct_bytes: usize,
+    count: usize,
+    exec: &ExecPool,
+) -> Result<Vec<CtElem>> {
+    let cts = block_to_cts(data, ct_bytes, count)?;
+    Ok(exec.par_map(&cts, PAR_MIN_OPS, |c| pk.to_resident(c)))
+}
+
+/// Flatten resident ciphertexts to the `Payload::CipherBlock` wire format —
+/// the only point a resident chain leaves Montgomery form.
+pub fn resident_to_block(
+    pk: &PublicKey,
+    cts: &[CtElem],
+    ct_bytes: usize,
+    exec: &ExecPool,
+) -> Vec<u8> {
+    let wire = exec.par_map(cts, PAR_MIN_OPS, |c| pk.from_resident(c));
+    cts_to_block(&wire, ct_bytes)
 }
 
 /// Flatten ciphertexts into one contiguous buffer, each padded to
@@ -458,5 +524,121 @@ mod tests {
         assert!(p.unpack_sum(&plains, 3, 3).is_err(), "past headroom");
         assert!(p.unpack_sum(&plains, 3, 0).is_err());
         assert!(p.unpack_sum(&plains, 99, 1).is_err(), "length mismatch");
+    }
+
+    #[test]
+    fn resident_chain_matches_wire_form_chain() {
+        // the full SPNN-HE hop both ways: resident encrypt→add→…→exit must
+        // produce byte-identical wire blocks to the Ciphertext-level chain
+        let (pk, sk) = keys_256();
+        let exec = ExecPool::new(2);
+        let k = 3;
+        let p = Packing::new(&pk, 48, k).unwrap();
+        let count = 23;
+        let vals: Vec<Vec<i64>> = (0..k)
+            .map(|h| (0..count as i64).map(|i| (i - 11) * (h as i64 + 1)).collect())
+            .collect();
+        let run = |resident: bool| -> Vec<u8> {
+            let mut rng = ChaChaRng::seed_from_u64(7);
+            let ct_bytes = pk.ciphertext_bytes();
+            if resident {
+                let mut acc: Option<Vec<CtElem>> = None;
+                for v in &vals {
+                    let mut pool = NoncePool::new(&pk, true);
+                    pool.refill_parallel(&mut rng, p.ct_count(count), &exec);
+                    let mine = encrypt_batch_resident(&pk, &p, v, &mut pool, &exec);
+                    acc = Some(match acc {
+                        None => mine,
+                        Some(prev) => add_batch_resident(&pk, &prev, &mine, &exec).unwrap(),
+                    });
+                }
+                resident_to_block(&pk, &acc.unwrap(), ct_bytes, &exec)
+            } else {
+                let mut acc: Option<Vec<Ciphertext>> = None;
+                for v in &vals {
+                    let mut pool = NoncePool::new(&pk, true);
+                    pool.refill_parallel(&mut rng, p.ct_count(count), &exec);
+                    let mine = encrypt_batch(&pk, &p, v, &mut pool, &exec);
+                    acc = Some(match acc {
+                        None => mine,
+                        Some(prev) => add_batch(&pk, &prev, &mine, &exec).unwrap(),
+                    });
+                }
+                cts_to_block(&acc.unwrap(), ct_bytes)
+            }
+        };
+        let res_block = run(true);
+        let wire_block = run(false);
+        assert_eq!(res_block, wire_block, "resident chain diverged from wire chain");
+        // and it decrypts to the right sums
+        let ct_bytes = pk.ciphertext_bytes();
+        let cts = block_to_cts(&res_block, ct_bytes, p.ct_count(count)).unwrap();
+        let got = decrypt_batch(&sk, &p, &cts, count, k, &exec).unwrap();
+        let want: Vec<i64> = (0..count as i64).map(|i| (i - 11) * 6).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn block_to_resident_roundtrips() {
+        let (pk, _) = keys_256();
+        let p = Packing::new(&pk, 48, 2).unwrap();
+        let exec = ExecPool::serial();
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        let mut pool = NoncePool::new(&pk, true);
+        pool.refill(&mut rng, 2);
+        let res = encrypt_batch_resident(&pk, &p, &[5, -7, 11, 0, 1, 2], &mut pool, &exec);
+        let ct_bytes = pk.ciphertext_bytes();
+        let block = resident_to_block(&pk, &res, ct_bytes, &exec);
+        let back = block_to_resident(&pk, &block, ct_bytes, res.len(), &exec).unwrap();
+        assert_eq!(back, res, "wire round-trip changed the resident values");
+        assert!(block_to_resident(&pk, &block[1..], ct_bytes, res.len(), &exec).is_err());
+    }
+
+    #[test]
+    fn resident_scalar_mul_matches_naive_chain() {
+        // mul_plain_resident vs the BigUint mul-rem oracle (per ISSUE:
+        // resident add/scalar-mul chains against the naive chain)
+        let (pk, sk) = keys_256();
+        let mut rng = ChaChaRng::seed_from_u64(9);
+        let m = BigUint::from_u64(1234);
+        let c = pk.encrypt(&m, &mut rng);
+        for k in [0u64, 1, 2, 5, 1000] {
+            let res = pk.mul_plain_resident(&pk.to_resident(&c), &BigUint::from_u64(k));
+            let got = pk.from_resident(&res);
+            assert_eq!(got, pk.mul_plain(&c, &BigUint::from_u64(k)), "k={k}");
+            // naive oracle: c^k by repeated mul+rem on raw BigUints
+            let mut naive = BigUint::one().rem(&pk.n2);
+            for _ in 0..k {
+                naive = naive.mul(&c.0).rem(&pk.n2);
+            }
+            assert_eq!(got.0, naive, "k={k}");
+            if k > 0 {
+                assert_eq!(sk.decrypt(&got), m.mul_u64(k).rem(&pk.n), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_base_refill_deterministic_across_thread_counts() {
+        // the FixedBaseTable is shared by reference across refill workers;
+        // pool contents must be identical for any exec width
+        let (pk, _) = keys_256();
+        let vals: Vec<i64> = (0..30).collect();
+        let p = Packing::new(&pk, 48, 2).unwrap();
+        let mk = |threads: usize| -> Vec<Ciphertext> {
+            let exec = if threads == 0 {
+                ExecPool::serial()
+            } else {
+                ExecPool::new(threads)
+            };
+            let mut rng = ChaChaRng::seed_from_u64(10);
+            let mut pool = NoncePool::new(&pk, true);
+            pool.refill_parallel(&mut rng, p.ct_count(vals.len()), &exec);
+            encrypt_batch(&pk, &p, &vals, &mut pool, &exec)
+        };
+        let base = mk(0);
+        for threads in [1usize, 2, 7] {
+            assert_eq!(mk(threads), base, "threads={threads}");
+        }
     }
 }

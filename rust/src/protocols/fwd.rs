@@ -366,7 +366,10 @@ impl SpnnHolderFwd {
                     .map(|&v| crate::fixed::encode(v) as i64)
                     .collect();
                 let n_cts = packing.ct_count(vals.len());
-                let mine = pack::encrypt_batch(pk, packing, &vals, pool, &exec);
+                // Montgomery-resident hop: encrypt and chain-add stay in
+                // Montgomery form; the only conversions are parsing the
+                // incoming block and serializing the outgoing one.
+                let mine = pack::encrypt_batch_resident(pk, packing, &vals, pool, &exec);
                 let out_cts = if j == 0 {
                     mine
                 } else {
@@ -379,13 +382,13 @@ impl SpnnHolderFwd {
                             "holder{j}: expected {n_cts} packed ciphertexts, got {count}"
                         )));
                     }
-                    let prev = pack::block_to_cts(&data, ct_bytes, count)?;
-                    pack::add_batch(pk, &prev, &mine, &exec)?
+                    let prev = pack::block_to_resident(pk, &data, ct_bytes, count, &exec)?;
+                    pack::add_batch_resident(pk, &prev, &mine, &exec)?
                 };
                 let next =
                     if j + 1 < n_holders { ids::holder(j + 1) } else { ids::SERVER };
                 let ct_bytes = pk.ciphertext_bytes();
-                let data = pack::cts_to_block(&out_cts, ct_bytes);
+                let data = pack::resident_to_block(pk, &out_cts, ct_bytes, &exec);
                 p.send_tagged(
                     next,
                     tag,
