@@ -1,0 +1,28 @@
+# Convenience targets for the SPNN reproduction. Everything defers to
+# cargo (workspace root Cargo.toml); the crate is dependency-free.
+
+.PHONY: build test bench artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Perf trajectory: run every bench and copy the machine-readable
+# BENCH_*.json artifacts into the repo root (the layout the CI bench job
+# uploads): pipeline-depth, serve-throughput, crypto substrate, and the
+# feature-compression sweep.
+bench:
+	cd rust && cargo bench --bench pipeline_depth \
+	        && cargo bench --bench serve_throughput \
+	        && cargo bench --bench micro_crypto \
+	        && cargo bench --bench compress_sweep
+	cp rust/BENCH_pipeline.json rust/BENCH_serve.json \
+	   rust/BENCH_crypto.json rust/BENCH_compress.json .
+
+# AOT-lower the JAX/Pallas graphs (python half; needs a JAX environment).
+# Without artifacts the rust engine transparently uses its native graph
+# fallback, so this target is optional.
+artifacts:
+	python3 python/compile/aot.py

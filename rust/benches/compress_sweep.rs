@@ -1,0 +1,120 @@
+//! Feature-compression sweep: end-to-end wire bytes + sim-time + AUC per
+//! trainer at `--compress` 1.0 / 0.5 / 0.25 (DCT basis), emitted as
+//! machine-readable `BENCH_compress.json` for the perf trajectory (CI
+//! bench job).
+//!
+//! Honest-measurement notes baked into the output:
+//!
+//! * **SS share traffic and dealer triples scale with the feature width**
+//!   — the `X·theta` share exchange moves `rows×d + d×h` ring elements
+//!   and SecureML's first-layer backward triple is `d×h1`-shaped, so
+//!   compressing `d` shrinks them proportionally. That is where the >=3x
+//!   reductions at ratio 0.25 come from.
+//! * **SPNN-HE's online ciphertext count does NOT scale with `d`**: each
+//!   holder encrypts its local product `X_j·theta_j` (`rows×h1` values,
+//!   packed), so the packed-ciphertext count is invariant to feature
+//!   compression. Compression still shrinks the holder's plaintext
+//!   matmul and the SS-side phases, but anyone claiming an HE-ciphertext
+//!   reduction from feature compression is measuring something else —
+//!   the JSON records the measured bytes so the invariance is visible.
+//!
+//! SPNN-HE / SPNN-SS need the AOT artifacts (`make artifacts`); without
+//! them those trainers are recorded as `"skipped"` and SecureML
+//! (artifact-free) still produces real numbers.
+
+use spnn::bench_harness::JsonObj;
+use spnn::config::{CompressCfg, TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+
+/// `None` = the uncompressed baseline; ratios are the ISSUE's sweep.
+const RATIOS: [Option<&str>; 4] = [None, Some("dct:1.0"), Some("dct:0.5"), Some("dct:0.25")];
+
+fn ratio_key(spec: Option<&str>) -> String {
+    match spec {
+        None => "baseline".into(),
+        Some(s) => s.replace(':', "_").replace('.', "_"),
+    }
+}
+
+fn run_sweep(proto: &str, rows: usize, batch: usize, seed: u64) -> JsonObj {
+    let ds = synth_fraud(SynthOpts::small(rows));
+    let (train, test) = ds.split(0.8, seed);
+    let t = protocols::by_name(proto).expect("known trainer");
+    let mut obj = JsonObj::new().str("trainer", proto);
+    let mut baseline: Option<(usize, usize)> = None;
+    for spec in RATIOS {
+        let tc = TrainConfig {
+            batch,
+            epochs: 1,
+            seed,
+            paillier_bits: 256, // bench-size keys; experiments use 512/1024
+            lr_override: Some(0.05),
+            compress: spec.map(|s| CompressCfg::parse(s).expect("valid sweep spec")),
+            ..Default::default()
+        };
+        let key = ratio_key(spec);
+        match t.train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2) {
+            Ok(rep) => {
+                let sim = rep.mean_epoch_time();
+                println!(
+                    "{proto:<10} {key:<10}: sim {sim:.4}s, online {} B, offline {} B, \
+                     AUC {:.4}",
+                    rep.online_bytes, rep.offline_bytes, rep.auc
+                );
+                let mut entry = JsonObj::new()
+                    .num("sim_s", sim)
+                    .num("auc", rep.auc)
+                    .int("online_bytes", rep.online_bytes as u64)
+                    .int("offline_bytes", rep.offline_bytes as u64)
+                    // hex string: u64 digests overflow JSON doubles
+                    .str("weight_digest", &format!("{:016x}", rep.weight_digest));
+                if let Some((on, off)) = baseline {
+                    // measured reduction factors vs the uncompressed run
+                    entry = entry
+                        .num("online_reduction", on as f64 / rep.online_bytes.max(1) as f64)
+                        .num(
+                            "offline_reduction",
+                            off as f64 / rep.offline_bytes.max(1) as f64,
+                        );
+                } else {
+                    baseline = Some((rep.online_bytes, rep.offline_bytes));
+                }
+                obj = obj.obj(&key, entry);
+            }
+            Err(e) => {
+                println!("{proto:<10} {key:<10}: skipped ({e})");
+                obj = obj.obj(&key, JsonObj::new().str("skipped", &format!("{e}")));
+            }
+        }
+    }
+    obj
+}
+
+fn main() {
+    // modest sizes: the bench must finish on a 1-core CI runner
+    let out = JsonObj::new()
+        .str("bench", "compress_sweep")
+        .str("config", "fraud, 1 epoch, 100 Mbps, 2 holders, DCT basis")
+        .str(
+            "note_ss",
+            "share exchanges and dealer triples scale with the feature width; \
+             ratio 0.25 shrinks them ~4x analytically (measured factors in \
+             online_reduction / offline_reduction include width-invariant phases)",
+        )
+        .str(
+            "note_he",
+            "SPNN-HE's packed ciphertext count covers X_j*theta_j (rows x h1) and \
+             is invariant to feature compression by construction; only the \
+             share-exchange and holder-compute phases shrink",
+        )
+        .obj("secureml", run_sweep("secureml", 240, 64, 7))
+        .obj("spnn_ss", run_sweep("spnn-ss", 1200, 256, 7))
+        .obj("spnn_he", run_sweep("spnn-he", 1200, 256, 7));
+    let json = out.render();
+    match std::fs::write("BENCH_compress.json", format!("{json}\n")) {
+        Ok(()) => println!("wrote BENCH_compress.json"),
+        Err(e) => eprintln!("could not write BENCH_compress.json: {e}"),
+    }
+}

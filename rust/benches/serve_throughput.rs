@@ -38,7 +38,7 @@ fn run_once(coalesce: usize, n_requests: usize) -> (f64, usize, String) {
         ..Default::default()
     };
     let trainer = protocols::by_name("spnn-ss").expect("known trainer");
-    let opts = ServeOpts { coalesce, depth: 2 };
+    let opts = ServeOpts { coalesce, depth: 2, ..Default::default() };
     let h = serve(trainer, &FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2, &opts)
         .expect("serve session");
     let rows: Vec<u32> = (0..REQ_ROWS).collect();

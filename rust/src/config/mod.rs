@@ -103,6 +103,94 @@ impl ModelConfig {
     }
 }
 
+/// Orthogonal basis for the holder-side feature transform
+/// (see [`crate::data::FeatureTransform`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CompressBasis {
+    /// Truncated orthonormal DCT-II basis (frequency-domain compression:
+    /// keep the `k` lowest-frequency components of each feature block).
+    #[default]
+    Dct,
+    /// Seeded random-orthogonal sketch (Gaussian columns orthonormalized
+    /// by serial modified Gram-Schmidt; thread-count independent).
+    Sketch,
+}
+
+impl CompressBasis {
+    /// Canonical CLI / wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressBasis::Dct => "dct",
+            CompressBasis::Sketch => "sketch",
+        }
+    }
+}
+
+/// How many columns the feature transform keeps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressK {
+    /// Keep `ratio * d_p` columns per holder block (clamped to `[1, d_p]`).
+    Ratio(f64),
+    /// Keep an absolute total of `k` columns across all holders
+    /// (split evenly, like the feature split itself).
+    Cols(usize),
+}
+
+/// The `--compress` knob: a seeded, deterministic orthogonal projection
+/// every data holder applies to its private feature block *before* any
+/// encryption or secret sharing, shrinking `rows x d_p` to `rows x k_p`.
+/// `None` on [`TrainConfig::compress`] = the seed behavior (bit-identical
+/// transcripts and wire strings).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressCfg {
+    /// Projection basis.
+    pub basis: CompressBasis,
+    /// Kept-column budget.
+    pub k: CompressK,
+}
+
+impl CompressCfg {
+    /// Parse the CLI / wire form: `[dct:|sketch:]<k>` where `<k>` is an
+    /// absolute column count (integer `>= 1`) or a ratio in `(0, 1]`
+    /// (must contain a `.`, e.g. `0.5` or `1.0`). No prefix = `dct`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (basis, rest) = if let Some(r) = s.strip_prefix("dct:") {
+            (CompressBasis::Dct, r)
+        } else if let Some(r) = s.strip_prefix("sketch:") {
+            (CompressBasis::Sketch, r)
+        } else {
+            (CompressBasis::Dct, s)
+        };
+        if let Ok(cols) = rest.parse::<usize>() {
+            if cols == 0 {
+                return None;
+            }
+            return Some(CompressCfg { basis, k: CompressK::Cols(cols) });
+        }
+        let ratio: f64 = rest.parse().ok()?;
+        if !(ratio > 0.0 && ratio <= 1.0) {
+            return None;
+        }
+        Some(CompressCfg { basis, k: CompressK::Ratio(ratio) })
+    }
+
+    /// Canonical form: `parse(canonical()) == Some(self)` exactly. Ratios
+    /// render via `{:?}` so they always carry a `.` (`1.0`, not `1`) and
+    /// round-trip bit-exactly; the basis prefix is always explicit.
+    pub fn canonical(&self) -> String {
+        match self.k {
+            CompressK::Ratio(r) => format!("{}:{:?}", self.basis.name(), r),
+            CompressK::Cols(c) => format!("{}:{}", self.basis.name(), c),
+        }
+    }
+}
+
+impl std::fmt::Display for CompressCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
 /// Which transport backend carries the parties' traffic
 /// (see [`crate::transport`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -145,7 +233,7 @@ impl TransportKind {
 }
 
 /// Training-run options shared by all protocols.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// Mini-batch size.
     pub batch: usize,
@@ -189,6 +277,12 @@ pub struct TrainConfig {
     /// unauthenticated consistency-token handshake. Never serialized
     /// into the session config broadcast.
     pub psk_file: Option<String>,
+    /// Holder-side feature transform (`--compress`): a seeded orthogonal
+    /// projection applied to each private feature block before any
+    /// encryption / secret sharing, shrinking every ciphertext, dealer
+    /// triple, and share matrix at the source
+    /// (see [`crate::data::CompressPlan`]). `None` = seed behavior.
+    pub compress: Option<CompressCfg>,
 }
 
 impl Default for TrainConfig {
@@ -207,6 +301,7 @@ impl Default for TrainConfig {
             pipeline_depth: 1,
             transport: TransportKind::Netsim,
             psk_file: None,
+            compress: None,
         }
     }
 }
@@ -253,6 +348,49 @@ mod tests {
         // the simulator stays the default transport, auth is opt-in
         assert_eq!(tc.transport, TransportKind::Netsim);
         assert!(tc.psk_file.is_none());
+        // no feature transform by default: seed-identical transcripts
+        assert!(tc.compress.is_none());
+    }
+
+    #[test]
+    fn compress_cfg_parses_and_roundtrips() {
+        // bare values default to the DCT basis
+        assert_eq!(
+            CompressCfg::parse("0.5"),
+            Some(CompressCfg { basis: CompressBasis::Dct, k: CompressK::Ratio(0.5) })
+        );
+        assert_eq!(
+            CompressCfg::parse("7"),
+            Some(CompressCfg { basis: CompressBasis::Dct, k: CompressK::Cols(7) })
+        );
+        assert_eq!(
+            CompressCfg::parse("sketch:0.25"),
+            Some(CompressCfg { basis: CompressBasis::Sketch, k: CompressK::Ratio(0.25) })
+        );
+        assert_eq!(
+            CompressCfg::parse("dct:14"),
+            Some(CompressCfg { basis: CompressBasis::Dct, k: CompressK::Cols(14) })
+        );
+        // 1.0 is a (no-op-sized) ratio, 1 is an absolute column count
+        assert_eq!(
+            CompressCfg::parse("1.0").unwrap().k,
+            CompressK::Ratio(1.0)
+        );
+        assert_eq!(CompressCfg::parse("1").unwrap().k, CompressK::Cols(1));
+        // rejects: zero, out-of-range ratios, junk
+        assert_eq!(CompressCfg::parse("0"), None);
+        assert_eq!(CompressCfg::parse("0.0"), None);
+        assert_eq!(CompressCfg::parse("1.5"), None);
+        assert_eq!(CompressCfg::parse("-0.5"), None);
+        assert_eq!(CompressCfg::parse("dct:"), None);
+        assert_eq!(CompressCfg::parse("fft:0.5"), None);
+        // canonical form round-trips exactly (wire/digest stability)
+        for s in ["dct:0.5", "sketch:0.25", "dct:7", "sketch:1", "dct:1.0"] {
+            let c = CompressCfg::parse(s).unwrap();
+            assert_eq!(c.canonical(), s, "canonical of {s:?}");
+            assert_eq!(CompressCfg::parse(&c.canonical()), Some(c));
+        }
+        assert_eq!(CompressCfg::parse("0.5").unwrap().canonical(), "dct:0.5");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 mod auc;
 mod dataset;
 mod synth;
+mod transform;
 
 pub use auc::auc;
 pub use dataset::{Batch, Dataset, VerticalSplit};
 pub use synth::{synth_distress, synth_fraud, SynthOpts};
+pub use transform::{CompressPlan, FeatureTransform};

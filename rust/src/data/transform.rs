@@ -1,0 +1,387 @@
+//! Holder-side feature transforms: seeded, deterministic **orthogonal
+//! projections** applied to each private feature block *before* any
+//! encryption or secret sharing (ROADMAP item 3, DCT-CryptoNets-style
+//! frequency-domain compression).
+//!
+//! Each data holder maps its `rows x d_p` private block to `rows x k_p`
+//! with an orthonormal matrix `Q_p` (`Q_pᵀ Q_p = I_k`), so everything
+//! downstream of the holder — Paillier plaintexts, secret shares, Beaver
+//! triple shapes, dealer scripts, wire bytes — shrinks proportionally to
+//! `k_p / d_p`. Two bases are available
+//! ([`crate::config::CompressBasis`]):
+//!
+//! * **DCT** — the `k` lowest-frequency columns of the orthonormal DCT-II
+//!   basis. Deterministic (no randomness at all), the classic
+//!   energy-compaction choice.
+//! * **Sketch** — seeded Gaussian columns orthonormalized by *serial*
+//!   modified Gram–Schmidt, so the matrix is a function of the seed alone
+//!   (bit-identical at any `exec` thread count).
+//!
+//! Both are pure `f64` linear algebra on the holder's own plaintext: the
+//! transform never touches a ciphertext or a share, and because `Q` is
+//! derived from the broadcast session seed, every process derives the
+//! identical matrix — transcript determinism is preserved (the digest
+//! tests pin the *compressed* transcript across transports and depths).
+
+use crate::config::{CompressBasis, CompressCfg, CompressK};
+use crate::nn::MatF64;
+use crate::rng::{splitmix64, ChaChaRng, Rng64};
+use crate::{Error, Result};
+
+use super::dataset::{Dataset, VerticalSplit};
+
+/// One holder's orthogonal projection `Q` (`d x k`, orthonormal columns).
+#[derive(Clone, Debug)]
+pub struct FeatureTransform {
+    /// Input width (the holder's raw feature count `d_p`).
+    pub d: usize,
+    /// Output width (kept columns, `k_p <= d_p`).
+    pub k: usize,
+    /// The projection matrix, `d x k` with `QᵀQ = I_k`.
+    pub q: MatF64,
+}
+
+impl FeatureTransform {
+    /// The `k` lowest-frequency columns of the orthonormal DCT-II basis:
+    /// `Q[i][j] = c_j * cos(pi * (i + 0.5) * j / d)` with
+    /// `c_0 = sqrt(1/d)`, `c_j = sqrt(2/d)` otherwise.
+    pub fn dct(d: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= d, "bad transform {d} -> {k}");
+        let mut data = vec![0.0f64; d * k];
+        for i in 0..d {
+            for j in 0..k {
+                let c = if j == 0 { (1.0 / d as f64).sqrt() } else { (2.0 / d as f64).sqrt() };
+                data[i * k + j] =
+                    c * (std::f64::consts::PI * (i as f64 + 0.5) * j as f64 / d as f64).cos();
+            }
+        }
+        FeatureTransform { d, k, q: MatF64::from_data(d, k, data) }
+    }
+
+    /// Seeded random-orthogonal sketch: `k` standard-Gaussian columns,
+    /// orthonormalized by serial modified Gram–Schmidt. All randomness
+    /// comes from one ChaCha stream drawn in a fixed order, so the result
+    /// is a pure function of `(d, k, seed)` — independent of thread count.
+    pub fn sketch(d: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1 && k <= d, "bad transform {d} -> {k}");
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            // redraw a column if it lands (numerically) in the span of the
+            // previous ones — probability ~0 for Gaussian draws, but the
+            // guard keeps the constructor total
+            loop {
+                let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                for c in &cols {
+                    let dot: f64 = c.iter().zip(&v).map(|(a, b)| a * b).sum();
+                    for (vi, ci) in v.iter_mut().zip(c) {
+                        *vi -= dot * ci;
+                    }
+                }
+                let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm > 1e-6 {
+                    for vi in v.iter_mut() {
+                        *vi /= norm;
+                    }
+                    cols.push(v);
+                    break;
+                }
+            }
+        }
+        let mut data = vec![0.0f64; d * k];
+        for (j, c) in cols.iter().enumerate() {
+            for i in 0..d {
+                data[i * k + j] = c[i];
+            }
+        }
+        FeatureTransform { d, k, q: MatF64::from_data(d, k, data) }
+    }
+
+    /// Build from a [`CompressCfg`] basis choice.
+    pub fn build(basis: CompressBasis, d: usize, k: usize, seed: u64) -> Self {
+        match basis {
+            CompressBasis::Dct => Self::dct(d, k),
+            CompressBasis::Sketch => Self::sketch(d, k, seed),
+        }
+    }
+
+    /// Project a `rows x d` block to `rows x k`: `X · Q`. Row-banded over
+    /// the `exec` pool with bit-identical results at any width.
+    pub fn apply(&self, x: &MatF64) -> MatF64 {
+        assert_eq!(x.cols, self.d, "transform width mismatch");
+        x.matmul(&self.q)
+    }
+}
+
+/// Per-holder transform seed: a splitmix64 chain over the session seed and
+/// the holder index (decorrelated from every other seed-derived stream).
+fn holder_transform_seed(seed: u64, holder: usize) -> u64 {
+    let mut s = seed ^ 0xfea7_0c0d_ec11_ab1e ^ (holder as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// The full compression layout for one training/serving session: the raw
+/// `d`-domain vertical split (how private columns are sliced from the
+/// table), the compressed `k`-domain split (how shares / theta blocks /
+/// dealer shapes are sized), and one [`FeatureTransform`] per holder.
+///
+/// Built identically by every party from the broadcast `(compress, seed)`
+/// pair, exactly like the model init.
+#[derive(Clone, Debug)]
+pub struct CompressPlan {
+    /// Raw feature split (`d` columns across the holders).
+    pub raw: VerticalSplit,
+    /// Compressed split (`k_total` columns across the holders) — the
+    /// split every crypto shape downstream is sized by.
+    pub csplit: VerticalSplit,
+    /// One projection per holder (`tfs[j]` maps `raw.width(j)` columns to
+    /// `csplit.width(j)`).
+    pub tfs: Vec<FeatureTransform>,
+    /// Total raw feature count `d`.
+    pub d_total: usize,
+}
+
+impl CompressPlan {
+    /// Build the plan for `parts` holders over `d` raw features.
+    pub fn build(cc: &CompressCfg, d: usize, parts: usize, seed: u64) -> Result<CompressPlan> {
+        let raw = VerticalSplit::even(d, parts);
+        let widths: Vec<usize> = match cc.k {
+            CompressK::Ratio(r) => {
+                if !(r > 0.0 && r <= 1.0) {
+                    return Err(Error::Config(format!("compress ratio {r} not in (0, 1]")));
+                }
+                (0..parts)
+                    .map(|j| {
+                        let dj = raw.width(j);
+                        ((dj as f64 * r).round() as usize).clamp(1, dj)
+                    })
+                    .collect()
+            }
+            CompressK::Cols(k) => {
+                if k < parts || k > d {
+                    return Err(Error::Config(format!(
+                        "compress k={k} out of range for {d} features across {parts} holders \
+                         (need {parts} <= k <= {d})"
+                    )));
+                }
+                let ks = VerticalSplit::even(k, parts);
+                (0..parts).map(|j| ks.width(j)).collect()
+            }
+        };
+        let mut ranges = Vec::with_capacity(parts);
+        let mut start = 0;
+        for &w in &widths {
+            ranges.push((start, start + w));
+            start += w;
+        }
+        let csplit = VerticalSplit { ranges };
+        let tfs = (0..parts)
+            .map(|j| {
+                FeatureTransform::build(
+                    cc.basis,
+                    raw.width(j),
+                    widths[j],
+                    holder_transform_seed(seed, j),
+                )
+            })
+            .collect();
+        Ok(CompressPlan { raw, csplit, tfs, d_total: d })
+    }
+
+    /// `None`-transparent builder: `compress = None` yields `Ok(None)`
+    /// (the seed behavior, no transform anywhere).
+    pub fn maybe(
+        cc: Option<&CompressCfg>,
+        d: usize,
+        parts: usize,
+        seed: u64,
+    ) -> Result<Option<CompressPlan>> {
+        cc.map(|c| Self::build(c, d, parts, seed)).transpose()
+    }
+
+    /// Total compressed width `k = sum_p k_p` (the first model layer's
+    /// input dimension under compression).
+    pub fn k_total(&self) -> usize {
+        self.csplit.ranges.last().map(|&(_, e)| e).unwrap_or(0)
+    }
+
+    /// Holder `j`'s transform (cloned for the holder's `FeatureSource`).
+    pub fn tf(&self, j: usize) -> FeatureTransform {
+        self.tfs[j].clone()
+    }
+
+    /// Apply the block-diagonal transform to a full-width row-major table
+    /// (`n x d` -> `n x k_total`) — used to build the compressed held-out
+    /// evaluation set.
+    pub fn apply_table(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.d_total;
+        let rows = x.len() / d;
+        let k_total = self.k_total();
+        let mut out = vec![0.0f32; rows * k_total];
+        for j in 0..self.tfs.len() {
+            let xj = self.raw.slice_x(x, d, j);
+            let xm = MatF64::from_f32(rows, self.raw.width(j), &xj);
+            let z = self.tfs[j].apply(&xm).to_f32();
+            let (s, e) = self.csplit.ranges[j];
+            let kj = e - s;
+            for r in 0..rows {
+                out[r * k_total + s..r * k_total + e]
+                    .copy_from_slice(&z[r * kj..(r + 1) * kj]);
+            }
+        }
+        out
+    }
+
+    /// The compressed twin of a dataset: same rows/labels, `k_total`
+    /// feature columns (feeds the unchanged evaluation paths, which size
+    /// themselves by `Dataset::n_features`).
+    pub fn transform_dataset(&self, ds: &Dataset) -> Dataset {
+        Dataset { n_features: self.k_total(), x: self.apply_table(&ds.x), y: ds.y.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompressBasis;
+    use crate::data::{synth_fraud, SynthOpts};
+
+    fn assert_orthonormal(t: &FeatureTransform, tol: f64) {
+        // QᵀQ = I_k
+        let qtq = t.q.transpose().matmul(&t.q);
+        for i in 0..t.k {
+            for j in 0..t.k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                let got = qtq.at(i, j);
+                assert!(
+                    (got - want).abs() < tol,
+                    "QᵀQ[{i}][{j}] = {got} (want {want}) for d={} k={}",
+                    t.d,
+                    t.k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dct_columns_are_orthonormal() {
+        for (d, k) in [(1, 1), (14, 7), (14, 14), (28, 7), (278, 70)] {
+            assert_orthonormal(&FeatureTransform::dct(d, k), 1e-9);
+        }
+    }
+
+    #[test]
+    fn sketch_columns_are_orthonormal() {
+        for (d, k) in [(1, 1), (14, 4), (14, 14), (28, 7), (278, 70)] {
+            assert_orthonormal(&FeatureTransform::sketch(d, k, 0xabc), 1e-9);
+        }
+    }
+
+    #[test]
+    fn transforms_are_seed_deterministic() {
+        // the sketch is a pure function of (d, k, seed): two builds are
+        // bit-identical (the serial Gram-Schmidt never touches the exec
+        // pool), and different seeds give different matrices
+        let a = FeatureTransform::sketch(14, 7, 42);
+        let b = FeatureTransform::sketch(14, 7, 42);
+        assert_eq!(a.q.data, b.q.data);
+        let c = FeatureTransform::sketch(14, 7, 43);
+        assert_ne!(a.q.data, c.q.data);
+        // apply() is row-banded over the exec pool with deterministic
+        // banding: two applications are bit-identical
+        let x = MatF64::from_data(5, 14, (0..70).map(|i| i as f64 * 0.1).collect());
+        assert_eq!(a.apply(&x).data, b.apply(&x).data);
+        // and the DCT has no randomness at all
+        let d1 = FeatureTransform::dct(28, 7);
+        let d2 = FeatureTransform::dct(28, 7);
+        assert_eq!(d1.q.data, d2.q.data);
+    }
+
+    #[test]
+    fn plan_budgets_ratio_and_cols() {
+        use crate::config::{CompressCfg, CompressK};
+        // ratio 0.5 on fraud (28 features, 2 holders): 7 + 7 kept
+        let cc = CompressCfg { basis: CompressBasis::Dct, k: CompressK::Ratio(0.5) };
+        let p = CompressPlan::build(&cc, 28, 2, 7).unwrap();
+        assert_eq!(p.k_total(), 14);
+        assert_eq!(p.csplit.ranges, vec![(0, 7), (7, 14)]);
+        assert_eq!(p.raw.ranges, vec![(0, 14), (14, 28)]);
+        assert_eq!(p.tfs[0].d, 14);
+        assert_eq!(p.tfs[0].k, 7);
+        // absolute k = 7 across 3 holders: 3 + 2 + 2
+        let cc = CompressCfg { basis: CompressBasis::Dct, k: CompressK::Cols(7) };
+        let p = CompressPlan::build(&cc, 28, 3, 7).unwrap();
+        assert_eq!(p.k_total(), 7);
+        let ws: Vec<usize> = (0..3).map(|j| p.csplit.width(j)).collect();
+        assert_eq!(ws, vec![3, 2, 2]);
+        for j in 0..3 {
+            assert!(p.csplit.width(j) <= p.raw.width(j));
+        }
+        // tiny ratios clamp to >= 1 column per holder
+        let cc = CompressCfg { basis: CompressBasis::Dct, k: CompressK::Ratio(0.001) };
+        let p = CompressPlan::build(&cc, 28, 2, 7).unwrap();
+        assert_eq!(p.k_total(), 2);
+        // out-of-range absolute k is rejected
+        let cc = CompressCfg { basis: CompressBasis::Dct, k: CompressK::Cols(29) };
+        assert!(CompressPlan::build(&cc, 28, 2, 7).is_err());
+        let cc = CompressCfg { basis: CompressBasis::Dct, k: CompressK::Cols(1) };
+        assert!(CompressPlan::build(&cc, 28, 2, 7).is_err());
+        // None passes through
+        assert!(CompressPlan::maybe(None, 28, 2, 7).unwrap().is_none());
+    }
+
+    #[test]
+    fn transform_dataset_preserves_rows_and_energy() {
+        let ds = synth_fraud(SynthOpts::small(64));
+        let cc = crate::config::CompressCfg {
+            basis: CompressBasis::Dct,
+            k: crate::config::CompressK::Ratio(1.0),
+        };
+        // ratio 1.0: a full orthonormal rotation — row count, labels, and
+        // per-holder-block row energy are all preserved exactly
+        let p = CompressPlan::build(&cc, ds.n_features, 2, 7).unwrap();
+        let t = p.transform_dataset(&ds);
+        assert_eq!(t.len(), ds.len());
+        assert_eq!(t.n_features, ds.n_features);
+        assert_eq!(t.y, ds.y);
+        for r in 0..4 {
+            let e0: f64 = ds.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let e1: f64 = t.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            assert!((e0 - e1).abs() < 1e-6 * (1.0 + e0), "row {r}: {e0} vs {e1}");
+        }
+        // ratio 0.5 halves the width
+        let cc = crate::config::CompressCfg {
+            basis: CompressBasis::Sketch,
+            k: crate::config::CompressK::Ratio(0.5),
+        };
+        let p = CompressPlan::build(&cc, ds.n_features, 2, 7).unwrap();
+        let t = p.transform_dataset(&ds);
+        assert_eq!(t.n_features, 14);
+        assert_eq!(t.x.len(), ds.len() * 14);
+    }
+
+    #[test]
+    fn transformed_features_stay_in_fixed_point_range() {
+        // orthogonal projections bound each output by the row norm:
+        // |z_i| <= ||x_row||_2 <= sqrt(d) * max|x|. The synthetic features
+        // are O(10), d <= 556, so transformed values sit far below the
+        // 2^46 encode guard — asserted here through fixed::encode itself
+        // (which debug_asserts the headroom) and an explicit margin.
+        let ds = synth_fraud(SynthOpts::small(128));
+        for basis in [CompressBasis::Dct, CompressBasis::Sketch] {
+            let cc = crate::config::CompressCfg {
+                basis,
+                k: crate::config::CompressK::Ratio(0.5),
+            };
+            let p = CompressPlan::build(&cc, ds.n_features, 2, 7).unwrap();
+            let t = p.transform_dataset(&ds);
+            let max = t.x.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()));
+            // far inside the paper's fixed-point product headroom
+            assert!(max < crate::fixed::product_headroom(), "max |z| = {max}");
+            for &v in t.x.iter().take(4 * t.n_features) {
+                let enc = crate::fixed::encode(v as f64);
+                assert!((crate::fixed::decode(enc) - v as f64).abs() < 1e-4);
+            }
+        }
+    }
+}

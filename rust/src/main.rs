@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 
 use spnn::attack::{property_attack, AttackOpts};
-use spnn::config::{TrainConfig, TransportKind, DISTRESS, FRAUD};
+use spnn::config::{CompressCfg, TrainConfig, TransportKind, DISTRESS, FRAUD};
 use spnn::exp::{self, ExpOpts};
 use spnn::protocols;
 use spnn::runtime::Engine;
@@ -86,6 +86,10 @@ USAGE:
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
               [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
               [--pipeline-depth D] [--transport netsim|tcp|uds]
+              [--compress [dct:|sketch:]K]  K = kept-column ratio in (0,1]
+              (write the dot: 0.5) or an absolute column total >= holders;
+              every holder projects its private feature block through a
+              seeded orthogonal basis before any encryption or sharing
   spnn launch [same training flags as train]
               [--listen HOST:PORT] [--no-spawn] [--psk-file PATH]
               [--chaos ROLE:N]
@@ -101,7 +105,9 @@ USAGE:
               holder0, holder1 — role names come from the protocol)
   spnn serve  [same training flags as train] [--listen HOST:PORT]
               [--coalesce N] [--serve-depth D] [--serve-requests N]
-              [--launch [--rendezvous HOST:PORT] [--no-spawn]]
+              [--request-timeout MS] [--launch [--rendezvous HOST:PORT]
+              [--no-spawn]]  --request-timeout fails requests that sat
+              queued longer than MS milliseconds (0 = never, the default)
               train, then stay resident: a TCP front door coalesces
               inference requests into crypto-amortized batches the
               trained parties answer; --serve-requests N exits after N
@@ -179,6 +185,17 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
             .transpose()?
             .unwrap_or(TransportKind::Netsim),
         psk_file: flags.get("psk-file").cloned(),
+        compress: flags
+            .get("compress")
+            .map(|v| {
+                CompressCfg::parse(v).ok_or_else(|| {
+                    err(format!(
+                        "bad --compress {v:?} (want [dct:|sketch:]<ratio in (0,1] \
+                         with a dot, or columns >= 1>)"
+                    ))
+                })
+            })
+            .transpose()?,
     };
     Ok(SessionSpec {
         protocol: proto.to_string(),
@@ -287,6 +304,7 @@ fn serve_opts_from_flags(flags: &HashMap<String, String>) -> ServeOpts {
     ServeOpts {
         coalesce: flag(flags, "coalesce", d.coalesce),
         depth: flag(flags, "serve-depth", d.depth),
+        request_timeout_ms: flag(flags, "request-timeout", d.request_timeout_ms),
     }
 }
 

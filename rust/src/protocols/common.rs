@@ -165,8 +165,18 @@ pub struct ModelParams {
 impl ModelParams {
     /// Paper-style initialization (Xavier weights, zero biases).
     pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        Self::init_with_input(cfg, seed, cfg.n_features)
+    }
+
+    /// Initialization with an explicit first-layer input width — the
+    /// compressed-feature runs (`TrainConfig::compress`) train
+    /// `theta0: k x h1` instead of `d x h1`. With `d_in == cfg.n_features`
+    /// this is exactly [`ModelParams::init`] (same RNG stream, bit-identical
+    /// parameters). Every party MUST use the same `d_in`: the theta0 draw
+    /// count shifts the positions of all later draws (`wy` in particular).
+    pub fn init_with_input(cfg: &ModelConfig, seed: u64, d_in: usize) -> Self {
         let mut rng = Pcg64::seed_from_u64(seed);
-        let theta0 = MatF64::xavier(&mut rng, cfg.n_features, cfg.h1_dim);
+        let theta0 = MatF64::xavier(&mut rng, d_in, cfg.h1_dim);
         let mut server = Vec::new();
         let mut dims = vec![cfg.h1_dim];
         dims.extend_from_slice(cfg.server_dims);
@@ -270,8 +280,10 @@ pub fn evaluate(
     let mut scores: Vec<f32> = Vec::with_capacity(test.len());
     let mut losses = Vec::new();
     for batch in test.batches(cap, cap) {
-        // h1 = X @ theta0 (plaintext eval path)
-        let x = MatF64::from_f32(batch.cap, cfg.n_features, &batch.x);
+        // h1 = X @ theta0 (plaintext eval path). Sized by the dataset's
+        // own width, not cfg.n_features: compressed-feature runs evaluate
+        // on the transformed table (k columns, theta0 is k x h1).
+        let x = MatF64::from_f32(batch.cap, test.n_features, &batch.x);
         let h1 = x.matmul(&params.theta0).to_f32();
         let mut inputs: Vec<TensorIn> = vec![TensorIn::F32(&h1)];
         for s in &server_f32 {
@@ -534,6 +546,24 @@ mod tests {
         assert_eq!(p.server[0].shape(), (8, 8));
         assert_eq!(p.server[1].shape(), (1, 8));
         assert_eq!(p.wy.shape(), (8, 1));
+    }
+
+    #[test]
+    fn init_with_input_matches_init_at_full_width() {
+        // d_in == n_features must be the exact seed behavior (same RNG
+        // stream, bit-identical digest) — the compress=None guarantee
+        let a = ModelParams::init(&FRAUD, 9);
+        let b = ModelParams::init_with_input(&FRAUD, 9, FRAUD.n_features);
+        assert_eq!(a.digest(), b.digest());
+        // a narrower input only changes theta0's shape (and, through the
+        // shared RNG stream, downstream draw values — consistently so for
+        // every party that uses the same d_in)
+        let c = ModelParams::init_with_input(&FRAUD, 9, 14);
+        assert_eq!(c.theta0.shape(), (14, 8));
+        assert_eq!(c.server[0].shape(), (8, 8));
+        assert_eq!(c.wy.shape(), (8, 1));
+        let d = ModelParams::init_with_input(&FRAUD, 9, 14);
+        assert_eq!(c.digest(), d.digest());
     }
 
     #[test]

@@ -41,7 +41,7 @@ use std::collections::{HashMap, VecDeque};
 
 use super::common::{BatchCtx, ModelParams, TrainReport};
 use crate::config::{Act, ModelConfig, TrainConfig};
-use crate::data::{Dataset, VerticalSplit};
+use crate::data::{CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::exec::{self, ExecPool};
 use crate::netsim::Payload;
 use crate::nn::MatF64;
@@ -92,11 +92,11 @@ pub trait ForwardPass {
 // Feature sources
 // ---------------------------------------------------------------------------
 
-/// Where a holder's per-batch feature block comes from.
+/// How a [`FeatureSource`] selects rows for a [`BatchCtx`].
 ///
 /// Both variants hold the party's **private vertical slice** (row-major,
-/// `d` columns); they differ only in how a [`BatchCtx`] selects rows.
-pub enum FeatureSource {
+/// `d` columns); they differ only in how a batch picks its rows.
+enum SourceRows {
     /// Contiguous mini-batches of the training matrix: batch `b` covers
     /// rows `b.start .. b.start + b.rows` (the train loops).
     Slice {
@@ -119,36 +119,70 @@ pub enum FeatureSource {
     },
 }
 
+/// Where a holder's per-batch feature block comes from, plus the optional
+/// holder-side **feature transform** (seeded orthogonal projection,
+/// `d → k` columns) applied to every block before any crypto touches it.
+/// With a transform attached, [`FeatureSource::width`] reports the
+/// *compressed* width `k` — downstream share/ciphertext sizing follows
+/// automatically.
+pub struct FeatureSource {
+    rows: SourceRows,
+    tf: Option<FeatureTransform>,
+}
+
 impl FeatureSource {
     /// Training source: contiguous mini-batches of `x`.
     pub fn slice(x: Vec<f32>, d: usize) -> Self {
-        FeatureSource::Slice { x, d }
+        FeatureSource { rows: SourceRows::Slice { x, d }, tf: None }
     }
 
     /// Serving source: per-batch gathered rows of `x`.
     pub fn gather(x: Vec<f32>, d: usize) -> Self {
-        FeatureSource::Gather { x, d, staged: HashMap::new() }
+        FeatureSource {
+            rows: SourceRows::Gather { x, d, staged: HashMap::new() },
+            tf: None,
+        }
     }
 
-    /// Columns per row.
+    /// Attach (or clear) the holder's feature transform. The transform's
+    /// input width must match the raw column count.
+    pub fn with_transform(mut self, tf: Option<FeatureTransform>) -> Self {
+        if let Some(t) = &tf {
+            debug_assert_eq!(t.d, self.raw_width(), "transform input width");
+        }
+        self.tf = tf;
+        self
+    }
+
+    /// Raw (pre-transform) columns per row of the backing table.
+    pub fn raw_width(&self) -> usize {
+        match &self.rows {
+            SourceRows::Slice { d, .. } | SourceRows::Gather { d, .. } => *d,
+        }
+    }
+
+    /// Columns per emitted block: the transform's `k` when one is
+    /// attached, the raw width otherwise.
     pub fn width(&self) -> usize {
-        match self {
-            FeatureSource::Slice { d, .. } | FeatureSource::Gather { d, .. } => *d,
+        match &self.tf {
+            Some(t) => t.k,
+            None => self.raw_width(),
         }
     }
 
     /// Park the row ids of an announced batch (gather mode; no-op for
     /// slice mode).
     pub fn stage(&mut self, index: u64, ids: &[u32]) {
-        if let FeatureSource::Gather { staged, .. } = self {
+        if let SourceRows::Gather { staged, .. } = &mut self.rows {
             staged.insert(index, ids.to_vec());
         }
     }
 
-    /// The feature block for batch `b` (consumed once per batch).
+    /// The feature block for batch `b` (consumed once per batch), with
+    /// the transform (if any) already applied — `b.rows x width()`.
     pub fn block(&mut self, b: &BatchCtx) -> Result<MatF64> {
-        match self {
-            FeatureSource::Slice { x, d } => {
+        let raw = match &mut self.rows {
+            SourceRows::Slice { x, d } => {
                 let (s, rows) = (b.start, b.rows);
                 if (s + rows) * *d > x.len() {
                     return Err(Error::Protocol(format!(
@@ -156,9 +190,9 @@ impl FeatureSource {
                         s + rows
                     )));
                 }
-                Ok(MatF64::from_f32(rows, *d, &x[s * *d..(s + rows) * *d]))
+                MatF64::from_f32(rows, *d, &x[s * *d..(s + rows) * *d])
             }
-            FeatureSource::Gather { x, d, staged } => {
+            SourceRows::Gather { x, d, staged } => {
                 let ids = staged.remove(&(b.index as u64)).ok_or_else(|| {
                     Error::Protocol(format!(
                         "feature source: batch {} has no staged rows",
@@ -183,9 +217,13 @@ impl FeatureSource {
                     }
                     out.extend_from_slice(&x[id * *d..(id + 1) * *d]);
                 }
-                Ok(MatF64::from_f32(b.rows, *d, &out))
+                MatF64::from_f32(b.rows, *d, &out)
             }
-        }
+        };
+        Ok(match &self.tf {
+            Some(t) => t.apply(&raw),
+            None => raw,
+        })
     }
 }
 
@@ -253,6 +291,10 @@ impl SpnnHolderFwd {
         theta: MatF64,
         mode: HolderMode,
     ) -> Self {
+        // the split is over *post-transform* columns when compression is
+        // on, so the triple/share sizing below follows the compressed
+        // widths automatically
+        let total_d = split.ranges.last().map(|&(_, e)| e).unwrap_or(0);
         SpnnHolderFwd {
             j,
             src,
@@ -260,7 +302,7 @@ impl SpnnHolderFwd {
             n_holders,
             split,
             h: cfg.h1_dim,
-            total_d: cfg.n_features,
+            total_d,
             rng: ChaChaRng::seed_from_u64(tc.seed ^ (0x401d + j as u64)),
             exec: exec::pool(),
             mode,
@@ -745,8 +787,12 @@ pub struct SpnnHeadFwd {
 
 impl SpnnHeadFwd {
     /// Paper-style label-layer initialization from the shared seed.
-    pub fn new(cfg: &ModelConfig, tc: &TrainConfig) -> Result<Self> {
-        let init = ModelParams::init(cfg, tc.seed);
+    /// `d_in` is the first layer's input width (`cfg.n_features`, or the
+    /// compressed `k_total` when a feature transform is active) — the
+    /// `theta0` draw count shifts every later draw, so all parties must
+    /// agree on it.
+    pub fn new(cfg: &ModelConfig, tc: &TrainConfig, d_in: usize) -> Result<Self> {
+        let init = ModelParams::init_with_input(cfg, tc.seed, d_in);
         Ok(SpnnHeadFwd {
             wy: init.wy,
             by: init.by,
@@ -1532,9 +1578,21 @@ fn copy_server_head(rep: &TrainReport, mp: &mut ModelParams) -> Result<()> {
 }
 
 /// Rebuild a full [`ModelParams`] from a [`TrainReport`]'s assembled
-/// parameter blocks (`theta0`, `server{i}`, `wy`, `by`).
+/// parameter blocks (`theta0`, `server{i}`, `wy`, `by`). The first
+/// layer's input width is inferred from the `theta0` block, so reports
+/// from compressed runs (`theta0` is `k_total x h1`) round-trip too.
 pub fn params_from_report(cfg: &ModelConfig, rep: &TrainReport) -> Result<ModelParams> {
-    let mut mp = ModelParams::init(cfg, 0);
+    let t0 = rep
+        .param("theta0")
+        .ok_or_else(|| Error::Protocol("report missing param block \"theta0\"".into()))?;
+    let h = cfg.h1_dim;
+    if t0.is_empty() || t0.len() % h != 0 {
+        return Err(Error::Protocol(format!(
+            "report param \"theta0\": {} values is not a multiple of h1_dim {h}",
+            t0.len()
+        )));
+    }
+    let mut mp = ModelParams::init_with_input(cfg, 0, t0.len() / h);
     copy_block(rep, "theta0", &mut mp.theta0.data)?;
     copy_server_head(rep, &mut mp)?;
     Ok(mp)
@@ -1556,13 +1614,23 @@ pub fn spnn_direct_scores(
     n_holders: usize,
     table: &Dataset,
     rows: &[u32],
+    compress: Option<&CompressPlan>,
 ) -> Result<Vec<f32>> {
-    let split = VerticalSplit::even(cfg.n_features, n_holders);
+    // raw split gathers the private columns; the weight split follows the
+    // post-transform widths (identical when no transform is active)
+    let raw_split = match compress {
+        Some(plan) => plan.raw.clone(),
+        None => VerticalSplit::even(cfg.n_features, n_holders),
+    };
+    let wsplit = match compress {
+        Some(plan) => plan.csplit.clone(),
+        None => raw_split.clone(),
+    };
     let n = rows.len();
     let h1_dim = cfg.h1_dim;
     let mut h1_fix = vec![0u64; n * h1_dim];
     for j in 0..n_holders {
-        let (s, e) = split.ranges[j];
+        let (s, e) = raw_split.ranges[j];
         let dj = e - s;
         let mut xb = Vec::with_capacity(n * dj);
         for &r in rows {
@@ -1571,12 +1639,17 @@ pub fn spnn_direct_scores(
                 xb.push(row[c]);
             }
         }
+        let mut xm = MatF64::from_f32(n, dj, &xb);
+        if let Some(plan) = compress {
+            xm = plan.tfs[j].apply(&xm);
+        }
+        let (ws, we) = wsplit.ranges[j];
         let theta_j = MatF64::from_data(
-            dj,
+            we - ws,
             h1_dim,
-            params.theta0.data[s * h1_dim..e * h1_dim].to_vec(),
+            params.theta0.data[ws * h1_dim..we * h1_dim].to_vec(),
         );
-        let prod = MatF64::from_f32(n, dj, &xb).matmul(&theta_j);
+        let prod = xm.matmul(&theta_j);
         for (cell, &v) in h1_fix.iter_mut().zip(prod.data.iter()) {
             *cell = cell.wrapping_add(crate::fixed::encode(v));
         }
@@ -1611,8 +1684,12 @@ pub fn splitnn_direct_scores(
     n_holders: usize,
     table: &Dataset,
     rows: &[u32],
+    compress: Option<&CompressPlan>,
 ) -> Result<Vec<f32>> {
-    let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
+    let fsplit = match compress {
+        Some(plan) => plan.raw.clone(),
+        None => VerticalSplit::even(cfg.n_features, n_holders),
+    };
     let usplit = VerticalSplit::even(cfg.h1_dim, n_holders);
     // theta0 is untrained in SplitNN; only server/wy/by blocks exist
     let mut params = ModelParams::init(cfg, 0);
@@ -1628,12 +1705,20 @@ pub fn splitnn_direct_scores(
             .ok_or_else(|| Error::Protocol(format!("report missing param block {name:?}")))?;
         let (fs, fe) = fsplit.ranges[j];
         let dj = fe - fs;
+        // the encoder consumes post-transform columns when compression is on
+        let kj = match compress {
+            Some(plan) => {
+                let (cs, ce) = plan.csplit.ranges[j];
+                ce - cs
+            }
+            None => dj,
+        };
         let (us, ue) = usplit.ranges[j];
         let uj = ue - us;
-        if blk.len() != dj * uj {
+        if blk.len() != kj * uj {
             return Err(Error::Protocol(format!("report param {name:?}: size mismatch")));
         }
-        let enc = MatF64::from_data(dj, uj, blk.to_vec());
+        let enc = MatF64::from_data(kj, uj, blk.to_vec());
         let mut xb = Vec::with_capacity(n * dj);
         for &r in rows {
             let row = &table.x[r as usize * cfg.n_features..(r as usize + 1) * cfg.n_features];
@@ -1641,8 +1726,12 @@ pub fn splitnn_direct_scores(
                 xb.push(row[c]);
             }
         }
+        let mut xm = MatF64::from_f32(n, dj, &xb);
+        if let Some(plan) = compress {
+            xm = plan.tfs[j].apply(&xm);
+        }
         // the holder sends z as f32 — replicate the f64->f32 boundary
-        let z = MatF64::from_f32(n, dj, &xb).matmul(&enc).to_f32();
+        let z = xm.matmul(&enc).to_f32();
         for r in 0..n {
             h1_pad[r * h1 + us..r * h1 + ue].copy_from_slice(&z[r * uj..(r + 1) * uj]);
         }
@@ -1698,6 +1787,33 @@ mod tests {
         src.stage(9, &[99]);
         let oob = BatchCtx { index: 9, start: 0, rows: 1 };
         assert!(src.block(&oob).is_err());
+    }
+
+    #[test]
+    fn feature_source_applies_attached_transform() {
+        use crate::config::CompressBasis;
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 3 rows x 4 cols
+        let tf = FeatureTransform::build(CompressBasis::Dct, 4, 2, 123);
+        let mut src = FeatureSource::slice(x.clone(), 4).with_transform(Some(tf.clone()));
+        assert_eq!(src.raw_width(), 4);
+        assert_eq!(src.width(), 2);
+        let b = BatchCtx { index: 0, start: 0, rows: 3 };
+        let m = src.block(&b).unwrap();
+        assert_eq!(m.shape(), (3, 2));
+        // bit-identical to applying the transform to the raw block directly
+        let want = tf.apply(&MatF64::from_f32(3, 4, &x));
+        assert_eq!(m.data, want.data);
+        // gather mode transforms too
+        let mut g = FeatureSource::gather(x.clone(), 4).with_transform(Some(tf.clone()));
+        g.stage(0, &[2, 0]);
+        let gb = BatchCtx { index: 0, start: 0, rows: 2 };
+        let gm = g.block(&gb).unwrap();
+        assert_eq!(gm.shape(), (2, 2));
+        let mut picked = Vec::new();
+        picked.extend_from_slice(&x[8..12]);
+        picked.extend_from_slice(&x[0..4]);
+        let gwant = tf.apply(&MatF64::from_f32(2, 4, &picked));
+        assert_eq!(gm.data, gwant.data);
     }
 
     #[test]

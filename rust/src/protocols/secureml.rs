@@ -38,7 +38,7 @@ use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainRepor
 use super::fwd::{enc_const, FeatureSource, LayerShare, MlpExtraFwd, MlpMpcFwd, MpcActs};
 use super::Trainer;
 use crate::config::{Act, ModelConfig, TrainConfig};
-use crate::data::{auc, Dataset, VerticalSplit};
+use crate::data::{auc, CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::fixed;
 use crate::netsim::Payload;
 use crate::nn::MatF64;
@@ -56,7 +56,14 @@ pub struct SecureMl;
 /// Layer schedule derived from the model config:
 /// dims `[D, h1, server..., 1]`, acts `[first, server..., output-sigmoid]`.
 fn layer_plan(cfg: &ModelConfig) -> (Vec<usize>, Vec<Act>, Vec<bool>) {
-    let mut dims = vec![cfg.n_features, cfg.h1_dim];
+    layer_plan_with(cfg, cfg.n_features)
+}
+
+/// [`layer_plan`] with an explicit first-layer input width (`d0` is the
+/// compressed `k_total` when a feature transform is active) — every dealer
+/// triple, share matrix and weight shape downstream follows it.
+fn layer_plan_with(cfg: &ModelConfig, d0: usize) -> (Vec<usize>, Vec<Act>, Vec<bool>) {
+    let mut dims = vec![d0, cfg.h1_dim];
     dims.extend_from_slice(cfg.server_dims);
     dims.push(1);
     let mut acts = vec![cfg.first_act];
@@ -80,7 +87,16 @@ impl SecureMl {
         n_holders: usize,
         serve: Option<(ServeOpts, ServeQueue)>,
     ) -> Result<Deployment> {
-        let split = VerticalSplit::even(cfg.n_features, n_holders.max(2));
+        let parts = n_holders.max(2);
+        let split = VerticalSplit::even(cfg.n_features, parts);
+        // optional holder-side feature compression: the compute parties'
+        // share matrices, triples and first-layer weights all follow the
+        // compressed split; raw table slices stay per-holder private
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, parts, tc.seed)?;
+        let csplit = match &cplan {
+            Some(p) => p.csplit.clone(),
+            None => split.clone(),
+        };
         let plan = batch_plan(train.len(), tc.batch);
 
         let mut names = vec!["coord".to_string(), "party0".to_string(), "dealer".to_string()];
@@ -117,15 +133,17 @@ impl SecureMl {
             let cfg = cfg.clone();
             let tc = tc.clone();
             let plan = plan.clone();
-            let split = split.clone();
+            let csplit = csplit.clone();
+            let raw_dj = split.width(0);
+            let tf = cplan.as_ref().map(|p| p.tf(0));
             let xa = split.slice_x(&train.x, cfg.n_features, 0);
             let serve_xa = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, 0));
             let y = train.y.clone();
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 mpc_party(
-                    p, &cfg, &tc, &plan, 0, a_id, b_id, &split, xa, Some(y), n_holders,
-                    srv, serve_xa,
+                    p, &cfg, &tc, &plan, 0, a_id, b_id, &csplit, raw_dj, tf, xa, Some(y),
+                    n_holders, srv, serve_xa,
                 )
             }));
         }
@@ -146,14 +164,16 @@ impl SecureMl {
             let cfg = cfg.clone();
             let tc = tc.clone();
             let plan = plan.clone();
-            let split = split.clone();
+            let csplit = csplit.clone();
+            let raw_dj = split.width(1);
+            let tf = cplan.as_ref().map(|p| p.tf(1));
             let xb = split.slice_x(&train.x, cfg.n_features, 1);
             let serve_xb = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, 1));
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 mpc_party(
-                    p, &cfg, &tc, &plan, 1, a_id, b_id, &split, xb, None, n_holders, srv,
-                    serve_xb,
+                    p, &cfg, &tc, &plan, 1, a_id, b_id, &csplit, raw_dj, tf, xb, None,
+                    n_holders, srv, serve_xb,
                 )
             }));
         }
@@ -162,18 +182,18 @@ impl SecureMl {
         // the prefetch window — MlpExtraFwd)
         for j in 2..n_holders {
             let plan = plan.clone();
-            let split = split.clone();
             let xj = split.slice_x(&train.x, cfg.n_features, j);
             let serve_xj = role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, j));
             let dj = split.width(j);
+            let tf = cplan.as_ref().map(|p| p.tf(j));
             let tc = tc.clone();
             let me = 2 + j; // ids 4..
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 let epochs = parties::await_start(p)?;
                 let rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
-                let mut fwd =
-                    MlpExtraFwd::new(a_id, b_id, FeatureSource::slice(xj, dj), rng);
+                let src = FeatureSource::slice(xj, dj).with_transform(tf.clone());
+                let mut fwd = MlpExtraFwd::new(a_id, b_id, src, rng);
                 for _ in 0..epochs {
                     run_pipeline(&plan, tc.pipeline_depth, |step, b| match step {
                         Step::Prefetch => fwd.prefetch(b),
@@ -183,7 +203,8 @@ impl SecureMl {
                 }
                 parties::await_stop(p)?;
                 if let Some(sr) = srv {
-                    fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+                    fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj)
+                        .with_transform(tf);
                     serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
                 }
                 Ok(PartyOut::default())
@@ -226,15 +247,20 @@ impl Trainer for SecureMl {
     fn finish(
         &self,
         cfg: &ModelConfig,
-        _tc: &TrainConfig,
+        tc: &TrainConfig,
         test: &Dataset,
         outs: &[PartyOut],
         net: NetSummary,
         wall_seconds: f64,
     ) -> Result<TrainReport> {
         let a_id = 1usize;
+        // rebuild the seed-derived compression plan the parties trained
+        // under (party roster: coord, A, dealer, B, extra holders 2..)
+        let parts = outs.len() - 2;
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, parts, tc.seed)?;
+        let d_in = cplan.as_ref().map(|p| p.k_total()).unwrap_or(cfg.n_features);
         // A returned the reconstructed plaintext layers as parameter blocks
-        let (dims, _, with_bias) = layer_plan(cfg);
+        let (dims, _, with_bias) = layer_plan_with(cfg, d_in);
         let n_layers = dims.len() - 1;
         let mut finals: Vec<(MatF64, Option<Vec<f64>>)> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
@@ -251,8 +277,17 @@ impl Trainer for SecureMl {
         }
 
         // evaluate the reconstructed model with the SAME piecewise
-        // activations MPC used (the approximation is part of the accuracy)
-        let (a, test_loss) = eval_piecewise(cfg, &finals, test);
+        // activations MPC used (the approximation is part of the accuracy),
+        // on the identically-transformed held-out table when compressed
+        let transformed;
+        let eval_test: &Dataset = match &cplan {
+            Some(plan) => {
+                transformed = plan.transform_dataset(test);
+                &transformed
+            }
+            None => test,
+        };
+        let (a, test_loss) = eval_piecewise(cfg, &finals, eval_test);
         let mut digest = Fnv::new();
         let mut params_out: Vec<(String, Vec<f64>)> = Vec::new();
         for (l, (w, b)) in finals.iter().enumerate() {
@@ -297,7 +332,9 @@ fn mpc_party(
     role: u8,
     a_id: usize,
     b_id: usize,
-    split: &VerticalSplit,
+    csplit: &VerticalSplit,
+    raw_dj: usize,
+    tf: Option<FeatureTransform>,
     x_mine: Vec<f32>,
     y: Option<Vec<f32>>,
     n_holders: usize,
@@ -307,7 +344,10 @@ fn mpc_party(
     let epochs = parties::await_start(p)?;
     let me_is_a = role == 0;
     let peer = if me_is_a { b_id } else { a_id };
-    let (dims, acts, with_bias) = layer_plan(cfg);
+    // the network's first layer consumes post-transform columns; with no
+    // transform the csplit equals the raw split and nothing changes
+    let d_in = csplit.ranges.last().map(|&(_, e)| e).unwrap_or(0);
+    let (dims, acts, with_bias) = layer_plan_with(cfg, d_in);
     let n_layers = dims.len() - 1;
     let mut rng = ChaChaRng::seed_from_u64(tc.seed ^ (0x11ec + role as u64));
     let lr = tc.lr_override.unwrap_or(cfg.lr);
@@ -316,7 +356,7 @@ fn mpc_party(
     // ---- weight initialization: A creates plaintext init and shares ----
     let mut layers: Vec<LayerShare> = Vec::with_capacity(n_layers);
     if me_is_a {
-        let mut init = ModelParams::init(cfg, tc.seed);
+        let mut init = ModelParams::init_with_input(cfg, tc.seed, d_in);
         // the hard-clipping piecewise sigmoid kills gradients outside
         // |z| < 1/2; scale the init down so pre-activations start inside
         // the linear zone (SecureML tunes its init the same way)
@@ -369,10 +409,11 @@ fn mpc_party(
         }
     }
 
-    let dj = split.width(if me_is_a { 0 } else { 1 });
     // hand the layer stack, the mask RNG (positioned after the init
     // sharing draws), the dealer feed and the feature source to the shared
-    // forward layer; the backward below trains fwd.layers in place
+    // forward layer; the backward below trains fwd.layers in place. The
+    // source slices the *raw* private columns and carries the optional
+    // transform, so the share widths MlpMpcFwd sizes by `csplit` match.
     let extra_ids: Vec<usize> = (2..n_holders).map(|j| 2 + j).collect();
     let mut fwd = MlpMpcFwd::new(
         role,
@@ -380,11 +421,11 @@ fn mpc_party(
         b_id,
         ids::DEALER,
         extra_ids,
-        split.clone(),
+        csplit.clone(),
         dims.clone(),
         acts.clone(),
         layers,
-        FeatureSource::slice(x_mine, dj),
+        FeatureSource::slice(x_mine, raw_dj).with_transform(tf.clone()),
         y,
         rng,
         true,
@@ -519,7 +560,8 @@ fn mpc_party(
             dealer::idle(p, ids::DEALER)?;
         }
         fwd.set_train(false);
-        fwd.src = FeatureSource::gather(serve_x.expect("serve slice"), dj);
+        fwd.src =
+            FeatureSource::gather(serve_x.expect("serve slice"), raw_dj).with_transform(tf);
         serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
         if me_is_a {
             // the dealer served forward triples through the serve phase
@@ -589,7 +631,8 @@ fn eval_piecewise(
         return (0.5, f64::NAN);
     }
     let (_, acts, _) = layer_plan(cfg);
-    let x = MatF64::from_f32(test.len(), cfg.n_features, &test.x);
+    // width follows the dataset (post-transform columns on compressed runs)
+    let x = MatF64::from_f32(test.len(), test.n_features, &test.x);
     let mut a = x;
     for (l, (w, b)) in layers.iter().enumerate() {
         let mut z = a.matmul(w);
@@ -663,6 +706,52 @@ mod tests {
         assert_eq!(dims, vec![28, 8, 8, 1]);
         assert_eq!(acts.len(), 3);
         assert_eq!(bias, vec![false, true, true]);
+        // an explicit first-layer width reshapes only the input layer
+        let (cdims, cacts, cbias) = layer_plan_with(&FRAUD, 7);
+        assert_eq!(cdims, vec![7, 8, 8, 1]);
+        assert_eq!(cacts.len(), acts.len());
+        assert_eq!(cbias, bias);
+    }
+
+    #[test]
+    fn secureml_compressed_netsim_tcp_parity_and_smaller_triples() {
+        use crate::config::CompressCfg;
+        let ds = synth_fraud(SynthOpts::small(160));
+        let (train, test) = ds.split(0.8, 14);
+        let base = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let full = SecureMl
+            .train(&FRAUD, &base, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        let mut digests = Vec::new();
+        let mut offline = 0u64;
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let tc = TrainConfig {
+                transport: kind,
+                compress: Some(CompressCfg::parse("0.5").unwrap()),
+                ..base.clone()
+            };
+            let rep = SecureMl
+                .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                .unwrap();
+            assert_ne!(rep.weight_digest, 0);
+            digests.push(rep.weight_digest);
+            offline = rep.offline_bytes;
+        }
+        assert_eq!(digests[0], digests[1], "compressed SecureML TCP diverged from netsim");
+        // first-layer triples scale with D, so halving the columns must
+        // shrink the dealer stream
+        assert!(
+            offline < full.offline_bytes,
+            "offline {} !< {}",
+            offline,
+            full.offline_bytes
+        );
     }
 
     #[test]

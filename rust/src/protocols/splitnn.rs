@@ -26,7 +26,7 @@ use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainRepor
 use super::fwd::{FeatureSource, SplitHolderFwd, SplitServerFwd};
 use super::Trainer;
 use crate::config::{ModelConfig, TrainConfig};
-use crate::data::{auc, Dataset, VerticalSplit};
+use crate::data::{auc, CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::netsim::Payload;
 use crate::nn::MatF64;
 use crate::parties::{self, ids, Deployment, NetSummary, PartyFn, PartyOut};
@@ -58,6 +58,9 @@ impl SplitNn {
     ) -> Result<Deployment> {
         let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
         let usplit = unit_split(cfg.h1_dim, n_holders);
+        // optional holder-side feature compression: each encoder consumes
+        // its holder's post-transform columns (`k_j x u_j`)
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, n_holders, tc.seed)?;
         let plan = batch_plan(train.len(), tc.batch);
         let params = ModelParams::init(cfg, tc.seed);
 
@@ -108,12 +111,16 @@ impl SplitNn {
             let serve_xj =
                 role_serve.map(|_| fsplit.slice_x(&test.x, cfg.n_features, j));
             let dj = fsplit.width(j);
+            let tf = cplan.as_ref().map(|p| p.tf(j));
+            // the encoder consumes post-transform columns (k_j == dj when
+            // no transform is active, so the init draws are unchanged)
+            let kj = tf.as_ref().map(|t| t.k).unwrap_or(dj);
             let mut rng = Pcg64::seed_from_u64(tc.seed ^ (77 + j as u64));
-            let enc = MatF64::xavier(&mut rng, dj, usplit.width(j));
+            let enc = MatF64::xavier(&mut rng, kj, usplit.width(j));
             let cfg = cfg.clone();
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                holder_role(p, &cfg, &tc, &plan, j, xj, dj, enc, srv, serve_xj)
+                holder_role(p, &cfg, &tc, &plan, j, xj, dj, tf, enc, srv, serve_xj)
             }));
         }
         Ok(Deployment { names, fns })
@@ -162,15 +169,21 @@ impl Trainer for SplitNn {
         let n_holders = outs.len() - ids::HOLDER0;
         let fsplit = VerticalSplit::even(cfg.n_features, n_holders);
         let usplit = unit_split(cfg.h1_dim, n_holders);
-        // encoders from the holders, server stack + label layer from the
-        // server (theta0 stays at init — SplitNN never trains it)
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, n_holders, tc.seed)?;
+        // encoders from the holders (k_j x u_j in the post-transform column
+        // space), server stack + label layer from the server (theta0 stays
+        // at init — SplitNN never trains it)
         let mut encoders = Vec::with_capacity(n_holders);
         for j in 0..n_holders {
             let data = outs[ids::holder(j)].need_param("enc")?;
-            if data.len() != fsplit.width(j) * usplit.width(j) {
+            let kj = match &cplan {
+                Some(p) => p.csplit.width(j),
+                None => fsplit.width(j),
+            };
+            if data.len() != kj * usplit.width(j) {
                 return Err(Error::Protocol(format!("holder{j}: encoder size")));
             }
-            encoders.push(MatF64::from_data(fsplit.width(j), usplit.width(j), data.to_vec()));
+            encoders.push(MatF64::from_data(kj, usplit.width(j), data.to_vec()));
         }
         let mut sp = ModelParams::init(cfg, tc.seed);
         for (i, m) in sp.server.iter_mut().enumerate() {
@@ -189,8 +202,18 @@ impl Trainer for SplitNn {
         sp.by.data.copy_from_slice(by);
 
         let mut engine = Engine::load_default()?;
+        // on compressed runs, evaluate over the transformed table with the
+        // compressed column split (the encoders consume k_j columns)
+        let transformed;
+        let (eval_test, esplit): (&Dataset, &VerticalSplit) = match &cplan {
+            Some(plan) => {
+                transformed = plan.transform_dataset(test);
+                (&transformed, &plan.csplit)
+            }
+            None => (test, &fsplit),
+        };
         let (a, test_loss) =
-            eval_splitnn(&mut engine, cfg, &fsplit, &usplit, &encoders, &sp, test)?;
+            eval_splitnn(&mut engine, cfg, esplit, &usplit, &encoders, &sp, eval_test)?;
         // digest over everything the composite model trains: the holders'
         // encoders plus the server stack and label layer
         let mut digest = Fnv::new();
@@ -356,14 +379,18 @@ fn holder_role(
     j: usize,
     xj: Vec<f32>,
     dj: usize,
+    tf: Option<FeatureTransform>,
     enc: MatF64,
     srv: Option<ServeRole>,
     serve_xj: Option<Vec<f32>>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x591 + j as u64));
-    // the forward layer owns the encoder; the backward updates it in place
-    let mut fwd = SplitHolderFwd::new(enc, FeatureSource::slice(xj, dj));
+    // the forward layer owns the encoder; the backward updates it in place.
+    // The source carries the optional transform, so the encoder (and its
+    // gradient, x^T . g) sees post-transform columns throughout.
+    let src = FeatureSource::slice(xj, dj).with_transform(tf.clone());
+    let mut fwd = SplitHolderFwd::new(enc, src);
     for _ in 0..epochs {
         // in-flight block for backward
         let mut inflight: Option<MatF64> = None;
@@ -391,7 +418,8 @@ fn holder_role(
 
     // ---- serving: score requests against the held-out table ----
     if let Some(sr) = srv {
-        fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+        fwd.src =
+            FeatureSource::gather(serve_xj.expect("serve slice"), dj).with_transform(tf);
         serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
     }
 
@@ -419,7 +447,7 @@ fn eval_splitnn(
     for b in test.batches(cap, cap) {
         let mut h1_pad = vec![0.0f32; cap * h1];
         for (j, w) in encoders.iter().enumerate() {
-            let xj = fsplit.slice_x(&b.x, cfg.n_features, j);
+            let xj = fsplit.slice_x(&b.x, test.n_features, j);
             let x = MatF64::from_f32(cap, fsplit.width(j), &xj);
             let z = x.matmul(w);
             let (us, ue) = usplit.ranges[j];
@@ -490,6 +518,33 @@ mod tests {
         }
         assert_eq!(digests[0], digests[1], "SplitNN over TCP diverged from netsim");
         assert_eq!(digests[0], digests[2], "SplitNN over UDS diverged from netsim");
+    }
+
+    #[test]
+    fn splitnn_compressed_netsim_tcp_parity() {
+        use crate::config::CompressCfg;
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 32);
+        let mut digests = Vec::new();
+        for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+            let tc = TrainConfig {
+                batch: 128,
+                epochs: 1,
+                lr_override: Some(0.3),
+                transport: kind,
+                compress: Some(CompressCfg::parse("dct:0.5").unwrap()),
+                ..Default::default()
+            };
+            let rep = SplitNn
+                .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                .unwrap();
+            assert_ne!(rep.weight_digest, 0);
+            // fraud 28 cols / 2 holders at 0.5 -> each encoder is 7 x u_j
+            let enc0 = rep.param("enc0").expect("enc0 block");
+            assert_eq!(enc0.len(), 7 * 4, "compressed encoder shape");
+            digests.push(rep.weight_digest);
+        }
+        assert_eq!(digests[0], digests[1], "compressed SplitNN TCP diverged from netsim");
     }
 
     #[test]

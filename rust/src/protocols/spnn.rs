@@ -52,7 +52,7 @@ use super::fwd::{FeatureSource, SpnnHeadFwd, SpnnHolderFwd, SpnnLabelFwd, SpnnSe
 use super::Trainer;
 use crate::bignum::BigUint;
 use crate::config::{ModelConfig, TrainConfig};
-use crate::data::{Dataset, VerticalSplit};
+use crate::data::{CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::netsim::Payload;
 use crate::nn::MatF64;
 use crate::paillier::{keygen, PublicKey};
@@ -86,8 +86,17 @@ impl Spnn {
             return Err(Error::Config("SPNN needs >= 2 data holders".into()));
         }
         let split = VerticalSplit::even(cfg.n_features, n_holders);
+        // optional holder-side feature compression: every crypto shape
+        // downstream (shares, triples, theta blocks) follows the
+        // compressed split; `None` leaves everything bit-identical
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, n_holders, tc.seed)?;
+        let d_in = cplan.as_ref().map(|p| p.k_total()).unwrap_or(cfg.n_features);
+        let wsplit = match &cplan {
+            Some(p) => p.csplit.clone(),
+            None => split.clone(),
+        };
         let plan = batch_plan(train.len(), tc.batch);
-        let params = ModelParams::init(cfg, tc.seed);
+        let params = ModelParams::init_with_input(cfg, tc.seed, d_in);
 
         let n_parties = ids::HOLDER0 + n_holders;
         let mut names: Vec<String> = vec!["coord".into(), "server".into(), "dealer".into()];
@@ -155,28 +164,33 @@ impl Spnn {
             let cfg = cfg.clone();
             let tc = tc.clone();
             let plan = plan.clone();
-            let split = split.clone();
             let he = self.he;
-            // holder j's private inputs
+            // holder j's private inputs: the *raw* vertical slice; the
+            // seeded transform (if any) is applied inside the holder's
+            // FeatureSource before any crypto sees the block
+            let raw_dj = split.width(j);
             let xj = split.slice_x(&train.x, cfg.n_features, j);
             let yj = if j == 0 { Some(train.y.clone()) } else { None };
             // while serving, requests address the held-out table — each
             // holder derives its private slice of it locally
             let serve_xj =
                 role_serve.map(|_| split.slice_x(&test.x, cfg.n_features, j));
-            // holder j's theta block: rows [s, e) of theta0
-            let (s, e) = split.ranges[j];
+            let tf = cplan.as_ref().map(|p| p.tf(j));
+            // holder j's theta block: rows [s, e) of theta0, in the
+            // post-transform column space
+            let (s, e) = wsplit.ranges[j];
             let h = cfg.h1_dim;
             let block = MatF64::from_data(
                 e - s,
                 h,
                 params.theta0.data[s * h..e * h].to_vec(),
             );
+            let wsplit = wsplit.clone();
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 holder_role(
-                    p, &cfg, &tc, &plan, j, n_holders, &split, xj, yj, block, he, srv,
-                    serve_xj,
+                    p, &cfg, &tc, &plan, j, n_holders, &wsplit, raw_dj, tf.clone(), xj,
+                    yj, block, he, srv, serve_xj,
                 )
             }));
         }
@@ -232,12 +246,17 @@ impl Trainer for Spnn {
         // theta0 rows from every holder, label layer from A, hidden stack
         // from the server
         let n_holders = outs.len() - ids::HOLDER0;
-        let split = VerticalSplit::even(cfg.n_features, n_holders);
+        let cplan = CompressPlan::maybe(tc.compress.as_ref(), cfg.n_features, n_holders, tc.seed)?;
+        let d_in = cplan.as_ref().map(|p| p.k_total()).unwrap_or(cfg.n_features);
+        let wsplit = match &cplan {
+            Some(p) => p.csplit.clone(),
+            None => VerticalSplit::even(cfg.n_features, n_holders),
+        };
         let h = cfg.h1_dim;
-        let mut fp = ModelParams::init(cfg, tc.seed);
+        let mut fp = ModelParams::init_with_input(cfg, tc.seed, d_in);
         for j in 0..n_holders {
             let blk = outs[ids::holder(j)].need_param("theta")?;
-            let (s, e) = split.ranges[j];
+            let (s, e) = wsplit.ranges[j];
             if blk.len() != (e - s) * h {
                 return Err(Error::Protocol(format!("holder{j}: theta block size")));
             }
@@ -259,7 +278,12 @@ impl Trainer for Spnn {
         fp.by.data.copy_from_slice(by);
 
         let mut engine = crate::runtime::Engine::load_default()?;
-        let (auc, test_loss) = evaluate(&mut engine, cfg, &fp, test)?;
+        // the trained model consumes post-transform features — evaluate on
+        // the identically-transformed held-out table
+        let (auc, test_loss) = match &cplan {
+            Some(plan) => evaluate(&mut engine, cfg, &fp, &plan.transform_dataset(test))?,
+            None => evaluate(&mut engine, cfg, &fp, test)?,
+        };
 
         // expose the assembled blocks so callers can run reference forward
         // passes on the trained weights (serve parity tests)
@@ -421,7 +445,9 @@ fn holder_role(
     plan: &[(usize, usize)],
     j: usize,
     n_holders: usize,
-    split: &VerticalSplit,
+    wsplit: &VerticalSplit,
+    raw_dj: usize,
+    tf: Option<FeatureTransform>,
     xj: Vec<f32>,
     yj: Option<Vec<f32>>,
     theta_j: MatF64,
@@ -430,28 +456,31 @@ fn holder_role(
     serve_xj: Option<Vec<f32>>,
 ) -> Result<PartyOut> {
     let epochs = parties::await_start(p)?;
-    let dj = split.width(j);
     let h = cfg.h1_dim;
     let is_a = j == 0;
     let mut up = Updater::new(tc, cfg, tc.seed ^ (0x901 + j as u64));
 
     // the forward layer owns this holder's crypto state (HE: pk + packing +
     // nonce pool; SS: mask RNG, staged material, A's dealer feed, Beaver
-    // engine) and the theta block, trained in place below
-    let src = FeatureSource::slice(xj, dj);
+    // engine) and the theta block, trained in place below. The feature
+    // source carries the optional seeded projection, so every block the
+    // crypto sees is already compressed.
+    let src = FeatureSource::slice(xj, raw_dj).with_transform(tf.clone());
     let mut fwd = if he {
         // HE setup: receive pk; the forward layer derives the packing
         // geometry and nonce pool from it (nothing extra travels)
         let n_bytes = p.recv(ids::SERVER)?.into_cipher()?.remove(0);
         let pk = PublicKey::from_n(BigUint::from_bytes_le(&n_bytes));
-        SpnnHolderFwd::new_he(cfg, tc, j, n_holders, split.clone(), src, theta_j, pk)?
+        SpnnHolderFwd::new_he(cfg, tc, j, n_holders, wsplit.clone(), src, theta_j, pk)?
     } else {
-        SpnnHolderFwd::new_ss(cfg, tc, j, n_holders, split.clone(), src, theta_j)?
+        SpnnHolderFwd::new_ss(cfg, tc, j, n_holders, wsplit.clone(), src, theta_j)?
     };
 
-    // label-layer state (A only)
+    // label-layer state (A only); the first layer's input width follows
+    // the (possibly compressed) weight split
     let hl_dim = cfg.hl_dim();
-    let mut head = if is_a { Some(SpnnHeadFwd::new(cfg, tc)?) } else { None };
+    let d_in = wsplit.ranges.last().map(|&(_, e)| e).unwrap_or(0);
+    let mut head = if is_a { Some(SpnnHeadFwd::new(cfg, tc, d_in)?) } else { None };
     let cap = crate::config::ModelConfig::pick_batch(tc.batch);
     let mut train_losses = Vec::new();
 
@@ -542,7 +571,8 @@ fn holder_role(
             // the dealer's training-era deadlock timeout
             dealer::idle(p, ids::DEALER)?;
         }
-        fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj);
+        fwd.src =
+            FeatureSource::gather(serve_xj.expect("serve slice"), raw_dj).with_transform(tf);
         match head.as_mut() {
             Some(head) => {
                 let mut role = SpnnLabelFwd { holder: &mut fwd, head };
@@ -574,7 +604,7 @@ fn holder_role(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{TransportKind, FRAUD};
+    use crate::config::{CompressCfg, TransportKind, FRAUD};
     use crate::data::{synth_fraud, SynthOpts};
     use crate::netsim::LinkSpec;
     use crate::paillier::pack::Packing;
@@ -644,6 +674,75 @@ mod tests {
         }
         assert_eq!(digests[0], digests[1], "HE over TCP diverged from netsim");
         assert_eq!(digests[0], digests[2], "HE over UDS diverged from netsim");
+    }
+
+    #[test]
+    fn spnn_compressed_transports_are_transcript_equal() {
+        // the *compressed* transcript is itself pinned: with a feature
+        // transform active, netsim and real-socket runs still train
+        // bit-identical weights, for both bases and both variants
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 23);
+        for (he, spec) in [(false, "dct:0.5"), (false, "sketch:0.5"), (true, "dct:0.5")] {
+            let mut digests = Vec::new();
+            for kind in [TransportKind::Netsim, TransportKind::Tcp] {
+                let tc = TrainConfig {
+                    batch: 128,
+                    epochs: 1,
+                    paillier_bits: 256,
+                    pipeline_depth: 2,
+                    transport: kind,
+                    compress: Some(CompressCfg::parse(spec).unwrap()),
+                    ..Default::default()
+                };
+                let rep = Spnn { he }
+                    .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+                    .unwrap();
+                assert_ne!(rep.weight_digest, 0, "digest not populated ({spec}, he={he})");
+                // fraud 28 cols / 2 holders at 0.5 -> theta0 is 14 x h1
+                let t0 = rep.param("theta0").expect("theta0 block");
+                assert_eq!(t0.len(), 14 * FRAUD.h1_dim, "compressed theta0 shape");
+                digests.push(rep.weight_digest);
+            }
+            assert_eq!(
+                digests[0], digests[1],
+                "compressed TCP run diverged from netsim ({spec}, he={he})"
+            );
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_ss_traffic() {
+        // SPNN-SS share + triple traffic scales with the feature width, so
+        // a 4x column cut must show up in both byte counters
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 24);
+        let base = TrainConfig { batch: 128, epochs: 1, ..Default::default() };
+        let full = Spnn { he: false }
+            .train(&FRAUD, &base, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        let tc = TrainConfig {
+            compress: Some(CompressCfg::parse("0.25").unwrap()),
+            ..base
+        };
+        let comp = Spnn { he: false }
+            .train(&FRAUD, &tc, LinkSpec::lan(), &train, &test, 2)
+            .unwrap();
+        assert!(
+            comp.online_bytes < full.online_bytes,
+            "online {} !< {}",
+            comp.online_bytes,
+            full.online_bytes
+        );
+        assert!(
+            comp.offline_bytes < full.offline_bytes,
+            "offline {} !< {}",
+            comp.offline_bytes,
+            full.offline_bytes
+        );
+        // and the digest differs from the uncompressed run (it trains a
+        // genuinely different, smaller first layer)
+        assert_ne!(comp.weight_digest, full.weight_digest);
     }
 
     #[test]

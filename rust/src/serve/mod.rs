@@ -77,11 +77,18 @@ pub struct ServeOpts {
     /// parties prefetch value-independent crypto for announced batches,
     /// mirroring `TrainConfig::pipeline_depth`).
     pub depth: usize,
+    /// Maximum milliseconds a request may sit queued before the
+    /// coordinator rejects it with a clean error instead of scoring it
+    /// (`0` = never expire). Requests are checked when a round is
+    /// assembled, so a request stuck behind a long training phase or a
+    /// slow earlier round fails fast rather than holding its client
+    /// indefinitely.
+    pub request_timeout_ms: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { coalesce: 256, depth: 2 }
+        ServeOpts { coalesce: 256, depth: 2, request_timeout_ms: 0 }
     }
 }
 
@@ -101,6 +108,9 @@ pub struct Request {
     pub rows: Vec<u32>,
     /// Where the scores (or the rejection) go.
     pub reply: mpsc::Sender<Result<Vec<f32>>>,
+    /// When the request entered the queue — the reference point for
+    /// [`ServeOpts::request_timeout_ms`].
+    pub enqueued: Instant,
 }
 
 /// The request queue handed to the coordinator's serve role. Worker
@@ -134,7 +144,7 @@ impl ServeQueue {
 /// on other threads clone [`ServeHandle::sender`] and call this.
 pub fn request_scores(tx: &mpsc::Sender<Request>, rows: &[u32]) -> Result<Vec<f32>> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request { rows: rows.to_vec(), reply: rtx })
+    tx.send(Request { rows: rows.to_vec(), reply: rtx, enqueued: Instant::now() })
         .map_err(|_| Error::Protocol("serve session is gone (parties exited)".into()))?;
     rrx.recv().map_err(|_| {
         Error::Protocol(
@@ -228,9 +238,27 @@ pub fn coordinator_serve(
             round.push(r);
         }
         // validate and flatten the round's rows into one stream
+        let timeout = match opts.request_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
         let mut good: Vec<(Request, usize)> = Vec::new();
         let mut all: Vec<u32> = Vec::new();
         for r in round {
+            // expire stale requests before spending any crypto on them —
+            // a request stuck behind training or a slow round fails fast
+            if let Some(t) = timeout {
+                let waited = r.enqueued.elapsed();
+                if waited > t {
+                    let _ = r.reply.send(Err(Error::Protocol(format!(
+                        "inference request timed out after {}ms in the serve queue \
+                         (--request-timeout {}ms)",
+                        waited.as_millis(),
+                        t.as_millis()
+                    ))));
+                    continue;
+                }
+            }
             if let Some(&bad) = r.rows.iter().find(|&&id| id as usize >= max_row) {
                 let _ = r.reply.send(Err(Error::Config(format!(
                     "inference request row {bad} out of range (serve table has \
@@ -517,7 +545,7 @@ mod tests {
             ..Default::default()
         };
         let trainer = protocols::by_name(proto).expect("known trainer");
-        let opts = ServeOpts { coalesce, depth };
+        let opts = ServeOpts { coalesce, depth, ..Default::default() };
         let h = serve(
             trainer,
             &FRAUD,
@@ -586,7 +614,7 @@ mod tests {
         // SS agrees with the direct fixed-point forward up to the
         // truncation's probabilistic low-order bit
         let params = params_from_report(&FRAUD, &rep_d2).unwrap();
-        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0]).unwrap();
+        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0], None).unwrap();
         for (got, want) in scores_d2[0].iter().zip(&direct) {
             assert!(
                 (got - want).abs() < 1e-2,
@@ -604,7 +632,7 @@ mod tests {
         let (scores, rep, test) =
             serve_session("spnn-he", 200, TransportKind::Netsim, 2, 8, 64, 2, &reqs);
         let params = params_from_report(&FRAUD, &rep).unwrap();
-        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0]).unwrap();
+        let direct = spnn_direct_scores(&FRAUD, &params, 2, &test, &reqs[0], None).unwrap();
         assert_eq!(scores[0].len(), direct.len());
         for (i, (got, want)) in scores[0].iter().zip(&direct).enumerate() {
             assert_eq!(
@@ -630,7 +658,7 @@ mod tests {
             ..Default::default()
         };
         let trainer = protocols::by_name("splitnn").unwrap();
-        let opts = ServeOpts { coalesce: 16, depth: 2 };
+        let opts = ServeOpts { coalesce: 16, depth: 2, ..Default::default() };
         let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
             .unwrap();
         // sequential reference answers, one row per request
@@ -662,7 +690,7 @@ mod tests {
         }
         let rep = h.shutdown().unwrap();
         assert_ne!(rep.weight_digest, 0);
-        let direct = splitnn_direct_scores(&FRAUD, &rep, 2, &test, &rows).unwrap();
+        let direct = splitnn_direct_scores(&FRAUD, &rep, 2, &test, &rows, None).unwrap();
         for (r, want) in rows.iter().zip(&direct) {
             assert_eq!(
                 reference[*r as usize].to_bits(),
@@ -706,7 +734,7 @@ mod tests {
             ..Default::default()
         };
         let trainer = protocols::by_name("spnn-ss").unwrap();
-        let opts = ServeOpts { coalesce: 8, depth: 2 };
+        let opts = ServeOpts { coalesce: 8, depth: 2, ..Default::default() };
         let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
             .unwrap();
         // 23 rows through coalesce 8 = 8 + 8 + 7 (ragged tail)
@@ -721,6 +749,43 @@ mod tests {
         // ...and the session still answers afterwards
         let again = h.infer(&rows).unwrap();
         assert_eq!(again.len(), 23);
+        let rep = h.shutdown().unwrap();
+        assert_ne!(rep.weight_digest, 0);
+    }
+
+    #[test]
+    fn stale_requests_are_rejected_without_killing_the_session() {
+        // ISSUE 7 satellite: a request that sat queued past
+        // `request_timeout_ms` is failed cleanly at round assembly — no
+        // crypto is spent on it and the session keeps serving
+        let ds = synth_fraud(SynthOpts::small(150));
+        let (train, test) = ds.split(0.8, 19);
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            ..Default::default()
+        };
+        let trainer = protocols::by_name("spnn-ss").unwrap();
+        let opts = ServeOpts { coalesce: 8, depth: 1, request_timeout_ms: 2_000 };
+        let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
+            .unwrap();
+        // a fresh request scores normally under the timeout
+        let fresh = h.infer(&[0, 1, 2]).unwrap();
+        assert_eq!(fresh.len(), 3);
+        // forge a request that "entered the queue" ten seconds ago
+        let stale_at = Instant::now()
+            .checked_sub(Duration::from_secs(10))
+            .expect("clock supports a 10s rewind");
+        let (rtx, rrx) = mpsc::channel();
+        h.sender()
+            .send(Request { rows: vec![0, 1], reply: rtx, enqueued: stale_at })
+            .unwrap();
+        let err = rrx.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("timed out"), "{err}");
+        // ...and the session still answers afterwards
+        let again = h.infer(&[3, 4]).unwrap();
+        assert_eq!(again.len(), 2);
         let rep = h.shutdown().unwrap();
         assert_ne!(rep.weight_digest, 0);
     }

@@ -530,7 +530,7 @@ mod tests {
         use crate::serve::{request_scores, ServeOpts};
         let mut s = spec("spnn-ss");
         s.tc.lr_override = Some(0.05);
-        s.serve = Some(ServeOpts { coalesce: 16, depth: 2 });
+        s.serve = Some(ServeOpts { coalesce: 16, depth: 2, ..Default::default() });
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let opts = LaunchOpts { listen: addr.clone(), spawn: false, chaos: None };

@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 use super::auth::{self, Psk};
 use super::tcp::connect_retry;
 use super::wire;
-use crate::config::{ModelConfig, TrainConfig, TransportKind};
+use crate::config::{CompressCfg, ModelConfig, TrainConfig, TransportKind};
 use crate::data::{synth_distress, synth_fraud, Dataset, SynthOpts};
 use crate::netsim::{LinkSpec, Msg, PartyId, Payload, Phase, NO_TAG};
 use crate::protocols::common::Fnv;
@@ -121,11 +121,25 @@ impl SessionSpec {
             t.exec_threads,
             t.pipeline_depth,
         );
+        // the feature-compression knob rides the broadcast in its
+        // canonical form (field absent = uncompressed, keeping old wire
+        // strings parseable and their digests unchanged)
+        if let Some(cc) = &t.compress {
+            s.push_str(&format!(" compress={}", cc.canonical()));
+        }
         // serve mode rides the config broadcast so every worker process
         // builds the serve deployment (field absent = train-and-exit,
-        // keeping old wire strings parseable)
+        // keeping old wire strings parseable). The timeout field is only
+        // emitted when set, so pre-timeout wire strings stay identical.
         if let Some(sv) = &self.serve {
-            s.push_str(&format!(" serve={},{}", sv.coalesce, sv.depth));
+            if sv.request_timeout_ms == 0 {
+                s.push_str(&format!(" serve={},{}", sv.coalesce, sv.depth));
+            } else {
+                s.push_str(&format!(
+                    " serve={},{},{}",
+                    sv.coalesce, sv.depth, sv.request_timeout_ms
+                ));
+            }
         }
         s
     }
@@ -153,6 +167,12 @@ impl SessionSpec {
         let fnum = |k: &str| -> Result<f64> {
             get(k)?.parse().map_err(|_| Error::Config(format!("bad {k}={:?}", kv[k])))
         };
+        let compress = match kv.get("compress") {
+            None => None,
+            Some(v) => Some(CompressCfg::parse(v).ok_or_else(|| {
+                Error::Config(format!("bad compress={v:?} in session config"))
+            })?),
+        };
         let tc = TrainConfig {
             batch: num("batch")?,
             epochs: num("epochs")?,
@@ -169,20 +189,31 @@ impl SessionSpec {
             pipeline_depth: num("depth")?,
             transport: TransportKind::Tcp,
             psk_file: None,
+            compress,
         };
         let serve = match kv.get("serve") {
             None => None,
             Some(v) => {
-                let (c, d) = v.split_once(',').ok_or_else(|| {
-                    Error::Config(format!("bad serve={v:?} (want COALESCE,DEPTH)"))
+                // two fields predate --request-timeout; keep accepting them
+                let parts: Vec<&str> = v.split(',').collect();
+                if parts.len() != 2 && parts.len() != 3 {
+                    return Err(Error::Config(format!(
+                        "bad serve={v:?} (want COALESCE,DEPTH[,TIMEOUT_MS])"
+                    )));
+                }
+                let coalesce: usize = parts[0].parse().map_err(|_| {
+                    Error::Config(format!("bad serve coalesce {:?}", parts[0]))
                 })?;
-                let coalesce: usize = c
-                    .parse()
-                    .map_err(|_| Error::Config(format!("bad serve coalesce {c:?}")))?;
-                let depth: usize = d
-                    .parse()
-                    .map_err(|_| Error::Config(format!("bad serve depth {d:?}")))?;
-                Some(crate::serve::ServeOpts { coalesce, depth })
+                let depth: usize = parts[1].parse().map_err(|_| {
+                    Error::Config(format!("bad serve depth {:?}", parts[1]))
+                })?;
+                let request_timeout_ms: u64 = match parts.get(2) {
+                    None => 0,
+                    Some(t) => t.parse().map_err(|_| {
+                        Error::Config(format!("bad serve timeout {t:?}"))
+                    })?,
+                };
+                Some(crate::serve::ServeOpts { coalesce, depth, request_timeout_ms })
             }
         };
         Ok(SessionSpec {
@@ -733,11 +764,33 @@ mod tests {
         assert!(SessionSpec::from_wire(&k.to_wire()).unwrap().tc.psk_file.is_none());
         // serve mode rides the config broadcast and roundtrips exactly
         let mut sv = s.clone();
-        sv.serve = Some(crate::serve::ServeOpts { coalesce: 48, depth: 3 });
+        sv.serve =
+            Some(crate::serve::ServeOpts { coalesce: 48, depth: 3, request_timeout_ms: 0 });
         assert_ne!(sv.digest(), s.digest(), "serve mode must change the digest");
+        assert!(
+            sv.to_wire().ends_with("serve=48,3"),
+            "a zero timeout must keep the pre-timeout wire form: {}",
+            sv.to_wire()
+        );
         let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
         assert_eq!(back.serve, sv.serve);
+        sv.serve.as_mut().unwrap().request_timeout_ms = 1_500;
+        let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
+        assert_eq!(back.serve.as_ref().unwrap().request_timeout_ms, 1_500);
         assert!(SessionSpec::from_wire(&format!("{} serve=oops", s.to_wire())).is_err());
+        // the compression knob roundtrips in canonical form and moves the
+        // config digest; absent = uncompressed, as before this field
+        let mut cs = s.clone();
+        cs.tc.compress = CompressCfg::parse("dct:0.5");
+        assert!(cs.tc.compress.is_some());
+        assert_ne!(cs.digest(), s.digest(), "compression must change the digest");
+        let back = SessionSpec::from_wire(&cs.to_wire()).unwrap();
+        assert_eq!(back.tc.compress, cs.tc.compress);
+        assert!(SessionSpec::from_wire(&cs.to_wire()).unwrap().tc.compress.is_some());
+        assert!(SessionSpec::from_wire(&s.to_wire()).unwrap().tc.compress.is_none());
+        assert!(
+            SessionSpec::from_wire(&format!("{} compress=1.5", s.to_wire())).is_err()
+        );
     }
 
     #[test]
