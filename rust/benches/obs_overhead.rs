@@ -1,0 +1,82 @@
+//! Observability overhead check: trains the same SPNN-SS session with the
+//! obs layer enabled and disabled and reports the wall-clock delta as
+//! machine-readable `BENCH_obs.json` (CI artifact).
+//!
+//! The instrumentation is observe-only — atomic counters and log-bucketed
+//! histogram increments off the hot loop — so the enabled run should cost
+//! at most a couple percent. Both arms train bit-identical models (the
+//! digest parity is asserted here and in `tests/obs_e2e.rs`); the arms are
+//! interleaved and the minimum of several reps is compared, which filters
+//! most scheduler noise on a shared CI runner.
+//!
+//! Runs artifact-free (the native graph fallback) on a 1-core CI runner.
+
+use std::time::Instant;
+
+use spnn::bench_harness::JsonObj;
+use spnn::config::{TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+
+const REPS: usize = 3;
+
+/// One netsim training run. Returns (wall seconds, weight digest).
+fn train_once() -> (f64, u64) {
+    let ds = synth_fraud(SynthOpts::small(800));
+    let (train, test) = ds.split(0.8, 7);
+    let tc = TrainConfig {
+        batch: 128,
+        epochs: 2,
+        lr_override: Some(0.05),
+        ..Default::default()
+    };
+    let t = protocols::by_name("spnn-ss").expect("known trainer");
+    let t0 = Instant::now();
+    let rep = t
+        .train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2)
+        .expect("train");
+    (t0.elapsed().as_secs_f64(), rep.weight_digest)
+}
+
+fn main() {
+    let mut on = f64::INFINITY;
+    let mut off = f64::INFINITY;
+    let mut digest_on = 0u64;
+    let mut digest_off = 0u64;
+    for rep in 0..REPS {
+        spnn::obs::set_enabled(true);
+        let (t_on, d_on) = train_once();
+        spnn::obs::set_enabled(false);
+        let (t_off, d_off) = train_once();
+        spnn::obs::set_enabled(true);
+        println!("rep {rep}: enabled {t_on:.3}s, disabled {t_off:.3}s");
+        on = on.min(t_on);
+        off = off.min(t_off);
+        digest_on = d_on;
+        digest_off = d_off;
+    }
+    assert_eq!(
+        digest_on, digest_off,
+        "instrumentation must not perturb training"
+    );
+    let overhead_pct = (on / off.max(1e-9) - 1.0) * 100.0;
+    println!(
+        "min-of-{REPS}: enabled {on:.3}s, disabled {off:.3}s => overhead {overhead_pct:+.2}%"
+    );
+    let out = JsonObj::new()
+        .str("bench", "obs_overhead")
+        .str(
+            "config",
+            "spnn-ss, fraud 800 rows, 2 epochs, batch 128, netsim, min of 3 interleaved reps",
+        )
+        .num("enabled_secs", on)
+        .num("disabled_secs", off)
+        .num("overhead_pct", overhead_pct)
+        .str("weight_digest", &format!("{digest_on:016x}"));
+    let json = out.render();
+    match std::fs::write("BENCH_obs.json", format!("{json}\n")) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+}

@@ -45,6 +45,9 @@ fn run_once(coalesce: usize, n_requests: usize) -> (f64, usize, String) {
     // warmup request: blocks until training finishes, so the timed window
     // below measures serving only
     let _ = h.infer(&[0]).expect("warmup");
+    // drop the warmup's latency sample (it spans the whole training wait)
+    // so the percentiles below cover exactly this run's timed requests
+    spnn::obs::registry().reset();
     let t0 = Instant::now();
     let mut digest = Fnv::new();
     for _ in 0..n_requests {
@@ -73,9 +76,18 @@ fn main() {
         let serve_bytes = total_bytes.saturating_sub(base_bytes);
         let rows_per_sec = rows_scored as f64 / secs.max(1e-9);
         let bytes_per_row = serve_bytes as f64 / rows_scored as f64;
+        // end-to-end request latency distribution (enqueue -> scored),
+        // recorded by the serve runtime's obs histogram during the run
+        let lat = spnn::obs::registry().hist("serve_request_seconds");
+        let (p50, p95, p99) = (
+            lat.quantile_secs(0.5) * 1e3,
+            lat.quantile_secs(0.95) * 1e3,
+            lat.quantile_secs(0.99) * 1e3,
+        );
         println!(
             "coalesce {coalesce:>3}: {rows_per_sec:>9.1} rows/s, \
-             {bytes_per_row:>9.1} wire B/row ({rows_scored} rows in {secs:.3}s)"
+             {bytes_per_row:>9.1} wire B/row ({rows_scored} rows in {secs:.3}s, \
+             p50 {p50:.2} ms / p95 {p95:.2} ms / p99 {p99:.2} ms)"
         );
         out = out.obj(
             &format!("coalesce_{coalesce}"),
@@ -85,6 +97,9 @@ fn main() {
                 .int("serve_online_bytes", serve_bytes as u64)
                 .num("seconds", secs)
                 .int("rows_scored", rows_scored as u64)
+                .num("latency_p50_ms", p50)
+                .num("latency_p95_ms", p95)
+                .num("latency_p99_ms", p99)
                 // score digest is informational: SS truncation noise makes
                 // it batching-dependent (HE/SplitNN scores are not)
                 .str("score_digest", &digest),

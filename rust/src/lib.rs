@@ -28,7 +28,9 @@
 //!   plaintext packing, [`paillier::pack`]), the chunked [`exec`] thread
 //!   pool that fans the crypto hot paths out across cores, the PJRT
 //!   [`runtime`] (with a pure-rust graph fallback when artifacts are
-//!   absent) and the five training [`protocols`].
+//!   absent), the five training [`protocols`], and the zero-dependency
+//!   observability layer ([`obs`]: span timers, latency histograms, a
+//!   Prometheus-text endpoint and a structured JSONL trace).
 //! * **Layer 2** — JAX graphs (`python/compile/model.py`), AOT-lowered to
 //!   `artifacts/*.hlo.txt` once by `make artifacts`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the blocked
@@ -49,6 +51,7 @@ pub mod exp;
 pub mod fixed;
 pub mod netsim;
 pub mod nn;
+pub mod obs;
 pub mod paillier;
 pub mod parties;
 pub mod protocols;

@@ -56,14 +56,31 @@ fn run(args: &[String]) -> CliResult<()> {
         return Ok(());
     };
     let flags = parse_flags(&args[1..]);
-    match cmd.as_str() {
-        "train" => cmd_train(&flags),
-        "launch" => cmd_launch(&flags),
-        "party" => cmd_party(&flags),
-        "serve" => cmd_serve(&flags),
-        "infer" => cmd_infer(&flags),
-        "repro" => cmd_repro(&args[1..], &flags),
-        "attack" => cmd_attack(&flags),
+    // --trace-out works on every verb: open the JSONL sink before any
+    // party thread spawns so the whole run lands in one trace session
+    let tracing = if let Some(path) = flags.get("trace-out") {
+        spnn::obs::trace::init(path)?;
+        spnn::obs::trace::set_sid(spnn::obs::trace::alloc_sid());
+        true
+    } else {
+        false
+    };
+    let res = dispatch(cmd, &flags, args);
+    if tracing {
+        spnn::obs::trace::close();
+    }
+    res
+}
+
+fn dispatch(cmd: &str, flags: &HashMap<String, String>, args: &[String]) -> CliResult<()> {
+    match cmd {
+        "train" => cmd_train(flags),
+        "launch" => cmd_launch(flags),
+        "party" => cmd_party(flags),
+        "serve" => cmd_serve(flags),
+        "infer" => cmd_infer(flags),
+        "repro" => cmd_repro(&args[1..], flags),
+        "attack" => cmd_attack(flags),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -105,25 +122,37 @@ USAGE:
               holder0, holder1 — role names come from the protocol)
   spnn serve  [same training flags as train] [--listen HOST:PORT]
               [--coalesce N] [--serve-depth D] [--serve-requests N]
-              [--request-timeout MS] [--launch [--rendezvous HOST:PORT]
-              [--no-spawn]]  --request-timeout fails requests that sat
-              queued longer than MS milliseconds (0 = never, the default)
+              [--request-timeout MS] [--max-queue N]
+              [--metrics-listen HOST:PORT]
+              [--launch [--rendezvous HOST:PORT] [--no-spawn]]
+              --request-timeout fails requests that sat queued longer
+              than MS milliseconds (0 = never, the default); --max-queue
+              rejects requests beyond N queued per round before any
+              crypto runs (0 = unbounded); --metrics-listen exposes the
+              live Prometheus-text metrics endpoint (request latency
+              p50/p95/p99, queue depth, per-stage crypto timings)
               train, then stay resident: a TCP front door coalesces
               inference requests into crypto-amortized batches the
               trained parties answer; --serve-requests N exits after N
               requests (smoke tests); --launch runs every role as its
               own OS process (workers join via `spnn party` as usual)
   spnn infer  --connect HOST:PORT [--ids 1,2,3 | --count N [--offset K]]
-              | --local [training flags]
+              [--repeat R] | --local [training flags]
               score rows of the held-out table against a running
-              `spnn serve` (prints the scores and a bit-exact
-              infer_digest); --local trains in this process instead and
-              scores through an in-process serve session (the parity
+              `spnn serve` (prints the scores, per-request wall-clock
+              latency with a min/mean/max summary, and a bit-exact
+              infer_digest); --repeat sends the same request R times
+              (latency sampling); --local trains in this process instead
+              and scores through an in-process serve session (the parity
               reference the serve smoke test compares against)
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
   spnn info
+
+Every command also takes --trace-out FILE: append a structured JSONL
+event trace (spans, serve round lifecycle, epoch markers) for offline
+analysis; deterministic under netsim modulo timestamps.
 "
     );
 }
@@ -218,6 +247,13 @@ fn print_report(rep: &spnn::protocols::TrainReport) {
     if !breakdown.is_empty() {
         println!("{breakdown}");
     }
+    // process-global span histograms: where the wall-clock went, by
+    // layer (crypto, pipeline, transport) — workers in a `spnn launch`
+    // run ship their registries home, so this too covers the whole mesh
+    let timings = spnn::obs::time_table_md("time by stage");
+    if !timings.is_empty() {
+        println!("{timings}");
+    }
     // machine-readable digest line (scripted parity checks grep this)
     println!("weight_digest=0x{:016x}", rep.weight_digest);
 }
@@ -305,6 +341,7 @@ fn serve_opts_from_flags(flags: &HashMap<String, String>) -> ServeOpts {
         coalesce: flag(flags, "coalesce", d.coalesce),
         depth: flag(flags, "serve-depth", d.depth),
         request_timeout_ms: flag(flags, "request-timeout", d.request_timeout_ms),
+        max_queue: flag(flags, "max-queue", d.max_queue),
     }
 }
 
@@ -320,6 +357,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
     let listener = std::net::TcpListener::bind(&listen)
         .map_err(|e| err(format!("bind front door {listen}: {e}")))?;
     let addr = listener.local_addr().map_err(|e| err(format!("{e}")))?;
+    if let Some(maddr) = flags.get("metrics-listen") {
+        let ml = std::net::TcpListener::bind(maddr)
+            .map_err(|e| err(format!("bind metrics endpoint {maddr}: {e}")))?;
+        let got = ml.local_addr().map_err(|e| err(format!("{e}")))?;
+        eprintln!("spnn serve: Prometheus metrics endpoint on http://{got}/metrics");
+        let _exporter = spnn::obs::prom::spawn_exporter(ml);
+    }
     eprintln!(
         "spnn serve: training {} on {} ({} rows, {} holders), then serving the \
          held-out table on {addr} (coalesce {}, depth {}{})",
@@ -393,6 +437,8 @@ fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
             .ok_or_else(|| err("--offset + --count overflows the u32 row-id space".into()))?;
         (offset..end).collect()
     };
+    let repeat = flag(flags, "repeat", 1usize).max(1);
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(repeat);
     let scores = if flags.contains_key("local") {
         // parity reference: train + serve entirely in this process, same
         // seeds — must score bit-identically to a remote `spnn serve` of
@@ -417,7 +463,14 @@ fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
             spec.holders,
             &opts,
         )?;
-        let scores = h.infer(&rows)?;
+        let mut scores = Vec::new();
+        for k in 0..repeat {
+            let t0 = std::time::Instant::now();
+            scores = h.infer(&rows)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            eprintln!("request {k}: {} row(s) in {ms:.2} ms", scores.len());
+            lat_ms.push(ms);
+        }
         let rep = h.shutdown()?;
         println!("weight_digest=0x{:016x}", rep.weight_digest);
         scores
@@ -426,7 +479,15 @@ fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
             .get("connect")
             .ok_or_else(|| err("infer needs --connect HOST:PORT (or --local)".into()))?;
         let timeout = std::time::Duration::from_secs(flag(flags, "connect-timeout", 30u64));
-        serve::frontdoor::infer_once(connect, &rows, timeout)?
+        let mut scores = Vec::new();
+        for k in 0..repeat {
+            let t0 = std::time::Instant::now();
+            scores = serve::frontdoor::infer_once(connect, &rows, timeout)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            eprintln!("request {k}: {} row(s) in {ms:.2} ms", scores.len());
+            lat_ms.push(ms);
+        }
+        scores
     };
     if scores.len() <= 32 {
         for (r, s) in rows.iter().zip(&scores) {
@@ -441,6 +502,13 @@ fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
         f.add_bytes(&s.to_bits().to_le_bytes());
     }
     println!("infer_digest=0x{:016x}", f.0);
+    let min = lat_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = lat_ms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+    println!(
+        "latency_ms min={min:.2} mean={mean:.2} max={max:.2} over {} request(s)",
+        lat_ms.len()
+    );
     Ok(())
 }
 

@@ -34,6 +34,23 @@ use std::time::{Duration, Instant};
 use super::{LinkSpec, NetStats, PartyId, Payload, Phase};
 use crate::{Error, Result};
 
+/// Record a wall duration into a lazily-created per-peer transport
+/// histogram (`transport_<kind>_seconds{peer="N"}`). The `Arc` handles are
+/// cached in the port so the registry lock is not taken per message.
+fn record_peer_ns(
+    cache: &mut HashMap<PartyId, Arc<crate::obs::Hist>>,
+    kind: &str,
+    peer: PartyId,
+    ns: u64,
+) {
+    cache
+        .entry(peer)
+        .or_insert_with(|| {
+            crate::obs::registry().hist(&format!("transport_{kind}_seconds{{peer=\"{peer}\"}}"))
+        })
+        .record_ns(ns);
+}
+
 /// Tag carried by messages sent through the untagged [`NetPort::send`] /
 /// [`NetPort::send_phase`] API.
 pub const NO_TAG: u64 = u64::MAX;
@@ -76,6 +93,9 @@ pub struct NetPort {
     uplink_free_s: f64,
     last_wall: Instant,
     recv_timeout: Duration,
+    /// Cached per-peer send/recv latency histograms (observability).
+    obs_send: HashMap<PartyId, Arc<crate::obs::Hist>>,
+    obs_recv: HashMap<PartyId, Arc<crate::obs::Hist>>,
 }
 
 impl NetPort {
@@ -105,6 +125,8 @@ impl NetPort {
             uplink_free_s: 0.0,
             last_wall: Instant::now(),
             recv_timeout: Duration::from_secs(600),
+            obs_send: HashMap::new(),
+            obs_recv: HashMap::new(),
         }
     }
 
@@ -163,6 +185,7 @@ impl NetPort {
         payload: Payload,
         phase: Phase,
     ) -> Result<()> {
+        let t0 = crate::obs::enabled().then(Instant::now);
         self.absorb_compute();
         let bytes = payload.total_bytes();
         self.stats.record(self.id, to, bytes, phase);
@@ -184,11 +207,16 @@ impl NetPort {
             Phase::Offline => self.now_s,
         };
         let msg = Msg { from: self.id, tag, payload, depart, phase };
-        self.txs
+        let res = self
+            .txs
             .get(&to)
             .ok_or_else(|| Error::Net(format!("{}: unknown peer {to}", self.name)))?
             .send(msg)
-            .map_err(|_| Error::Net(format!("{}: peer {to} disconnected", self.name)))
+            .map_err(|_| Error::Net(format!("{}: peer {to} disconnected", self.name)));
+        if let Some(t0) = t0 {
+            record_peer_ns(&mut self.obs_send, "send", to, t0.elapsed().as_nanos() as u64);
+        }
+        res
     }
 
     /// Consume a delivered message: restart the wall anchor (blocked time
@@ -271,6 +299,15 @@ impl NetPort {
     /// Like [`Self::recv`] but also returns the message's tag (used by
     /// actors that echo tags, e.g. the dealer).
     pub fn recv_any_tag(&mut self, from: PartyId) -> Result<(u64, Payload)> {
+        let t0 = crate::obs::enabled().then(Instant::now);
+        let res = self.recv_any_tag_inner(from);
+        if let Some(t0) = t0 {
+            record_peer_ns(&mut self.obs_recv, "recv", from, t0.elapsed().as_nanos() as u64);
+        }
+        res
+    }
+
+    fn recv_any_tag_inner(&mut self, from: PartyId) -> Result<(u64, Payload)> {
         self.absorb_compute(); // compute up to the blocking point
         if let Some(msg) = self.pending.get_mut(&from).and_then(|q| q.pop_front()) {
             return Ok(self.accept(msg));
@@ -285,6 +322,15 @@ impl NetPort {
     /// reorder buffer (FIFO within each tag) and delivered by their own
     /// `recv_tagged` / [`Self::recv`] calls later.
     pub fn recv_tagged(&mut self, from: PartyId, tag: u64) -> Result<Payload> {
+        let t0 = crate::obs::enabled().then(Instant::now);
+        let res = self.recv_tagged_inner(from, tag);
+        if let Some(t0) = t0 {
+            record_peer_ns(&mut self.obs_recv, "recv", from, t0.elapsed().as_nanos() as u64);
+        }
+        res
+    }
+
+    fn recv_tagged_inner(&mut self, from: PartyId, tag: u64) -> Result<Payload> {
         self.absorb_compute();
         if let Some(q) = self.pending.get_mut(&from) {
             if let Some(pos) = q.iter().position(|m| m.tag == tag) {

@@ -1,0 +1,295 @@
+//! Log-bucketed latency histogram with exact count/sum and bounded-error
+//! quantiles.
+//!
+//! Values are nanosecond durations. Buckets follow the HDR scheme: the
+//! bucket index is derived from the value's most-significant bit plus the
+//! next two bits, giving four sub-buckets per octave — a worst-case
+//! relative quantile error of 25% of the bucket floor (one part in four),
+//! constant 252 slots covering the full `u64` range, and O(1) lock-free
+//! recording (`fetch_add` on one slot). Quantile extraction reports the
+//! *floor* of the bucket holding the requested rank, so a reported p99 is
+//! never an overestimate of the true p99's bucket.
+//!
+//! Histograms merge by bucketwise addition ([`Hist::merge_from`]), which is
+//! associative and commutative — the property the coordinator relies on
+//! when folding per-party snapshots shipped through
+//! [`crate::parties::PartyOut`] into one table.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: indices 0..4 are exact (values 0–3), then four
+/// sub-buckets per octave up to `u64::MAX` (msb 63 → index 251).
+pub const N_BUCKETS: usize = 252;
+
+/// Map a nanosecond value to its bucket index.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 2
+    let sub = ((v >> (msb - 2)) & 3) as usize;
+    (msb - 1) * 4 + sub
+}
+
+/// Smallest value mapping to bucket `i` (the value a quantile reports).
+pub fn bucket_floor(i: usize) -> u64 {
+    if i < 4 {
+        return i as u64;
+    }
+    let msb = i / 4 + 1;
+    let sub = (i % 4) as u64;
+    (1u64 << msb) | (sub << (msb - 2))
+}
+
+/// Concurrent log-bucketed histogram of nanosecond durations.
+pub struct Hist {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record_ns(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record one duration in (non-negative) seconds.
+    pub fn record_secs(&self, s: f64) {
+        self.record_ns(if s > 0.0 { (s * 1e9) as u64 } else { 0 });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact total of all recorded durations, in seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_secs() / n as f64
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]`: the floor (in ns) of the bucket holding
+    /// rank `ceil(q * count)`. Returns 0 for an empty histogram.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(N_BUCKETS - 1)
+    }
+
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 / 1e9
+    }
+
+    /// Sparse snapshot (non-empty buckets only), suitable for shipping
+    /// between parties and re-merging.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect();
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+
+    /// Fold another histogram's snapshot into this one (bucketwise add).
+    pub fn merge_from(&self, s: &HistSnapshot) {
+        for &(i, n) in &s.buckets {
+            if i < N_BUCKETS {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(s.count, Ordering::Relaxed);
+        self.sum_ns.fetch_add(s.sum_ns, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time sparse copy of a [`Hist`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    /// `(bucket index, count)` pairs, ascending by index, zeros omitted.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistSnapshot {
+    /// Flatten to the `PartyOut` wire layout:
+    /// `[count, sum_ns, idx0, n0, idx1, n1, ...]`.
+    pub fn to_row(&self) -> Vec<f64> {
+        let mut row = vec![self.count as f64, self.sum_ns as f64];
+        for &(i, n) in &self.buckets {
+            row.push(i as f64);
+            row.push(n as f64);
+        }
+        row
+    }
+
+    /// Inverse of [`Self::to_row`]; ignores trailing odd garbage.
+    pub fn from_row(row: &[f64]) -> Self {
+        if row.len() < 2 {
+            return HistSnapshot::default();
+        }
+        let buckets = row[2..]
+            .chunks_exact(2)
+            .map(|c| (c[0] as usize, c[1] as u64))
+            .collect();
+        HistSnapshot { count: row[0] as u64, sum_ns: row[1] as u64, buckets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64 stream for property tests.
+    fn xorshift(seed: u64) -> impl FnMut() -> u64 {
+        let mut x = seed | 1;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_roundtrip() {
+        // every bucket floor maps back to its own bucket, and the value
+        // just below the next floor still maps to this bucket
+        for i in 0..N_BUCKETS {
+            assert_eq!(bucket_index(bucket_floor(i)), i, "floor of bucket {i}");
+            if i + 1 < N_BUCKETS {
+                let below_next = bucket_floor(i + 1) - 1;
+                assert_eq!(bucket_index(below_next), i, "ceiling of bucket {i}");
+            }
+        }
+        // indices are monotone in the value
+        let mut rng = xorshift(7);
+        for _ in 0..10_000 {
+            let a = rng();
+            let b = rng();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(bucket_index(lo) <= bucket_index(hi), "{lo} vs {hi}");
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_match_sorted_oracle_bucket() {
+        // the histogram quantile must land in the same bucket as the true
+        // rank statistic of the raw stream, across value scales
+        let mut rng = xorshift(42);
+        for scale_bits in [8, 20, 40, 63] {
+            let h = Hist::new();
+            let mut vals: Vec<u64> = (0..5000).map(|_| rng() >> (64 - scale_bits)).collect();
+            for &v in &vals {
+                h.record_ns(v);
+            }
+            vals.sort_unstable();
+            for q in [0.01, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+                let oracle = vals[rank - 1];
+                let got = h.quantile_ns(q);
+                assert_eq!(
+                    got,
+                    bucket_floor(bucket_index(oracle)),
+                    "q={q} scale={scale_bits}: oracle {oracle} got {got}"
+                );
+                // bounded relative error: floor <= oracle < floor * 1.5
+                assert!(got <= oracle);
+            }
+        }
+        assert_eq!(Hist::new().quantile_ns(0.99), 0, "empty histogram");
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_concatenation() {
+        let mut rng = xorshift(1234);
+        let streams: Vec<Vec<u64>> =
+            (0..3).map(|_| (0..400).map(|_| rng() >> 34).collect()).collect();
+        let hist_of = |streams: &[&[u64]]| {
+            let h = Hist::new();
+            for s in streams {
+                for &v in *s {
+                    h.record_ns(v);
+                }
+            }
+            h
+        };
+        let [a, b, c] = [
+            hist_of(&[&streams[0]]),
+            hist_of(&[&streams[1]]),
+            hist_of(&[&streams[2]]),
+        ];
+        // (a + b) + c
+        let left = Hist::new();
+        left.merge_from(&a.snapshot());
+        left.merge_from(&b.snapshot());
+        left.merge_from(&c.snapshot());
+        // a + (b + c)  — built by merging into a fresh hist in other order
+        let bc = Hist::new();
+        bc.merge_from(&c.snapshot());
+        bc.merge_from(&b.snapshot());
+        let right = Hist::new();
+        right.merge_from(&bc.snapshot());
+        right.merge_from(&a.snapshot());
+        let direct = hist_of(&[&streams[0], &streams[1], &streams[2]]);
+        assert_eq!(left.snapshot(), right.snapshot());
+        assert_eq!(left.snapshot(), direct.snapshot());
+        assert_eq!(left.count(), 1200);
+    }
+
+    #[test]
+    fn snapshot_row_roundtrips() {
+        let h = Hist::new();
+        for v in [0, 3, 17, 1 << 30, u64::MAX] {
+            h.record_ns(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(HistSnapshot::from_row(&snap.to_row()), snap);
+        assert_eq!(HistSnapshot::from_row(&[]), HistSnapshot::default());
+    }
+}

@@ -1,0 +1,166 @@
+//! Prometheus text exposition for the metric registry.
+//!
+//! Hand-rolled (zero-dependency) renderer plus a minimal HTTP/1.1
+//! exporter thread, following the `serve/frontdoor.rs` pattern: the serve
+//! coordinator binds a `TcpListener` (`spnn serve --metrics-listen ADDR`)
+//! and every `GET` gets the full registry as `text/plain; version=0.0.4`.
+//!
+//! Histograms render as Prometheus *summaries* (`{quantile="..."}` series
+//! plus `_sum`/`_count`), since the log-bucket layout extracts p50/p95/p99
+//! directly. Registry names may carry a label suffix
+//! (`transport_send_seconds{peer="1"}`); the renderer splits it so the
+//! `# TYPE` header names the bare metric once.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry;
+
+/// Split `name{labels}` into `(name, Some(labels))`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(name[i + 1..].trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Join a base name, optional registry labels, and optional extra label.
+fn series(base: &str, labels: Option<&str>, extra: Option<&str>) -> String {
+    match (labels, extra) {
+        (None, None) => base.to_string(),
+        (Some(l), None) => format!("{base}{{{l}}}"),
+        (None, Some(e)) => format!("{base}{{{e}}}"),
+        (Some(l), Some(e)) => format!("{base}{{{l},{e}}}"),
+    }
+}
+
+/// Emit `# TYPE` once per metric base name.
+fn type_line(out: &mut String, seen: &mut Vec<String>, base: &str, kind: &str) {
+    if !seen.iter().any(|s| s == base) {
+        out.push_str(&format!("# TYPE {base} {kind}\n"));
+        seen.push(base.to_string());
+    }
+}
+
+/// Render the whole registry as Prometheus text exposition format.
+pub fn render() -> String {
+    let r = registry();
+    let mut out = String::new();
+    let mut seen = Vec::new();
+    for (name, v) in r.counter_values() {
+        let (base, labels) = split_labels(&name);
+        type_line(&mut out, &mut seen, base, "counter");
+        out.push_str(&format!("{} {v}\n", series(base, labels, None)));
+    }
+    for (name, v) in r.gauge_values() {
+        let (base, labels) = split_labels(&name);
+        type_line(&mut out, &mut seen, base, "gauge");
+        out.push_str(&format!("{} {v}\n", series(base, labels, None)));
+    }
+    for (name, h) in r.hist_handles() {
+        let (base, labels) = split_labels(&name);
+        type_line(&mut out, &mut seen, base, "summary");
+        for q in ["0.5", "0.95", "0.99"] {
+            let v = h.quantile_secs(q.parse().expect("static quantile"));
+            let label = format!("quantile=\"{q}\"");
+            out.push_str(&format!("{} {v}\n", series(base, labels, Some(&label))));
+        }
+        out.push_str(&format!(
+            "{} {}\n",
+            series(&format!("{base}_sum"), labels, None),
+            h.total_secs()
+        ));
+        out.push_str(&format!(
+            "{} {}\n",
+            series(&format!("{base}_count"), labels, None),
+            h.count()
+        ));
+    }
+    out
+}
+
+/// Answer one scrape: drain the request head, write the full registry,
+/// close. The request path is ignored — everything is `/metrics`.
+fn answer(mut s: TcpStream) {
+    let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut head = [0u8; 1024];
+    let _ = s.read(&mut head);
+    let body = render();
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\ncontent-type: text/plain; version=0.0.4; charset=utf-8\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = s.write_all(resp.as_bytes());
+}
+
+/// Serve scrapes on `listener` forever from a named background thread.
+/// The thread dies with the process — the exporter is pure observer, so
+/// no drain/shutdown protocol is needed.
+pub fn spawn_exporter(listener: TcpListener) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("spnn-metrics".into())
+        .spawn(move || {
+            for s in listener.incoming().flatten() {
+                answer(s);
+            }
+        })
+        .expect("spawn metrics exporter thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_summaries() {
+        let r = registry();
+        r.counter("prom_test_requests_total").add(4);
+        r.gauge("prom_test_depth").set(2.0);
+        let h = r.hist("prom_test_seconds");
+        for _ in 0..100 {
+            h.record_ns(1_000_000); // 1ms
+        }
+        let h2 = r.hist("prom_test_seconds{peer=\"1\"}");
+        h2.record_ns(2_000_000);
+        let text = render();
+        assert!(text.contains("# TYPE prom_test_requests_total counter"), "{text}");
+        assert!(text.contains("prom_test_requests_total 4"), "{text}");
+        assert!(text.contains("# TYPE prom_test_depth gauge"), "{text}");
+        assert!(text.contains("prom_test_depth 2"), "{text}");
+        assert!(text.contains("# TYPE prom_test_seconds summary"), "{text}");
+        assert!(
+            text.matches("# TYPE prom_test_seconds summary").count() == 1,
+            "one TYPE line per base name:\n{text}"
+        );
+        assert!(text.contains("prom_test_seconds{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("prom_test_seconds{peer=\"1\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("prom_test_seconds_count{peer=\"1\"} 1"), "{text}");
+        assert!(text.contains("prom_test_seconds_count 100"), "{text}");
+        // p50 of a hundred 1ms samples sits in the 1ms bucket (~25% floor error)
+        let p50 = text
+            .lines()
+            .find(|l| l.starts_with("prom_test_seconds{quantile=\"0.5\"}"))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse::<f64>().ok())
+            .expect("p50 line");
+        assert!(p50 > 0.0007 && p50 <= 0.001, "p50 {p50}");
+    }
+
+    #[test]
+    fn exporter_answers_http_scrapes() {
+        registry().hist("prom_test_http_seconds").record_ns(5_000);
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let _h = spawn_exporter(listener);
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"GET /metrics HTTP/1.0\r\nhost: x\r\n\r\n").expect("request");
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).expect("response");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain"), "{resp}");
+        assert!(resp.contains("prom_test_http_seconds_count"), "{resp}");
+    }
+}

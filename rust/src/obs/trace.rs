@@ -1,0 +1,203 @@
+//! Structured JSONL event trace.
+//!
+//! One process-wide sink (opened by `--trace-out FILE` on any CLI verb)
+//! receives events from every party thread. Each line is a flat JSON
+//! object:
+//!
+//! ```json
+//! {"sid":1,"party":0,"seq":4,"clock":"virt","t":0.812,"ev":"epoch","epoch":2,"loss":0.301}
+//! ```
+//!
+//! * `sid` — trace session id. Threads inherit the session id of whoever
+//!   spawned them ([`crate::parties::run_parties`] propagates it), so
+//!   concurrent sessions in one process (e.g. parallel tests) can be
+//!   separated after the fact.
+//! * `party`/`seq` — emitting party and its per-`(sid, party)` sequence
+//!   number. Together they give a stable total order per party.
+//! * `clock`/`t` — timestamp and which clock produced it: `"virt"` is the
+//!   channel's virtual clock (deterministic message schedule under netsim,
+//!   but the *value* folds in real wall time spent computing), `"wall"` is
+//!   plain wall clock (client-side events).
+//!
+//! Because `t` is the only wall-dependent field, [`canonical_digest`]
+//! hashes a canonical form — drop `sid`/`t`, sort by `(party, seq)` — and
+//! that digest is bit-stable across netsim runs (asserted in
+//! `tests/obs_e2e.rs`).
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static NEXT_SID: AtomicU64 = AtomicU64::new(1);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+struct Sink {
+    w: BufWriter<File>,
+    /// Next sequence number per (sid, party).
+    seq: HashMap<(u64, usize), u64>,
+}
+
+thread_local! {
+    static SID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Reserve a fresh trace session id (does not change this thread's id).
+pub fn alloc_sid() -> u64 {
+    NEXT_SID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Adopt `sid` as this thread's trace session id.
+pub fn set_sid(sid: u64) {
+    SID.with(|s| s.set(sid));
+}
+
+/// This thread's trace session id (0 until one is adopted).
+pub fn sid() -> u64 {
+    SID.with(|s| s.get())
+}
+
+/// Open (truncate) `path` as the process-wide trace sink.
+pub fn init(path: &str) -> Result<()> {
+    let f = File::create(path)
+        .map_err(|e| Error::Config(format!("--trace-out {path}: {e}")))?;
+    *SINK.lock().unwrap() = Some(Sink { w: BufWriter::new(f), seq: HashMap::new() });
+    ACTIVE.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Flush and close the sink; subsequent [`emit`] calls are no-ops.
+pub fn close() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    if let Some(mut sink) = SINK.lock().unwrap().take() {
+        let _ = sink.w.flush();
+    }
+}
+
+/// Cheap "is a sink open" probe — one relaxed atomic load.
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// An event field value.
+pub enum Val<'a> {
+    /// Float field.
+    F(f64),
+    /// Unsigned integer field.
+    U(u64),
+    /// String field (escaped on write).
+    S(&'a str),
+}
+
+/// Append one event line. No-op unless a sink is open.
+pub fn emit(party: usize, clock: &str, t: f64, ev: &str, fields: &[(&str, Val)]) {
+    if !active() {
+        return;
+    }
+    let sid = sid();
+    let mut g = SINK.lock().unwrap();
+    let Some(sink) = g.as_mut() else { return };
+    let seq = sink.seq.entry((sid, party)).or_insert(0);
+    let mut line = format!(
+        "{{\"sid\":{sid},\"party\":{party},\"seq\":{seq},\"clock\":\"{clock}\",\"t\":{t:.6},\"ev\":\"{ev}\""
+    );
+    *seq += 1;
+    for (k, v) in fields {
+        match v {
+            Val::F(x) if x.is_finite() => line.push_str(&format!(",\"{k}\":{x}")),
+            Val::F(_) => line.push_str(&format!(",\"{k}\":null")),
+            Val::U(x) => line.push_str(&format!(",\"{k}\":{x}")),
+            Val::S(s) => {
+                let esc = s.replace('\\', "\\\\").replace('"', "\\\"");
+                line.push_str(&format!(",\"{k}\":\"{esc}\""));
+            }
+        }
+    }
+    line.push('}');
+    let _ = writeln!(sink.w, "{line}");
+    let _ = sink.w.flush();
+}
+
+/// FNV-1a 64 over the canonical form of one trace session: keep only
+/// lines with this `sid`, drop the `sid` and `t` fields, sort by
+/// `(party, seq)`. Under netsim the result is bit-stable across runs.
+pub fn canonical_digest(path: &str, sid: u64) -> Result<u64> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("trace {path}: {e}")))?;
+    let mut rows: Vec<(u64, u64, String)> = Vec::new();
+    for line in text.lines() {
+        if field_u64(line, "sid") != Some(sid) {
+            continue;
+        }
+        let party = field_u64(line, "party").unwrap_or(u64::MAX);
+        let seq = field_u64(line, "seq").unwrap_or(u64::MAX);
+        let canon = strip_field(&strip_field(line, "t"), "sid");
+        rows.push((party, seq, canon));
+    }
+    rows.sort();
+    let mut h = 0xcbf29ce484222325u64;
+    for (_, _, line) in &rows {
+        for b in line.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok(h)
+}
+
+/// Extract an unsigned top-level field from a flat JSONL line.
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Remove `,"key":value` (a number-valued field) from a flat JSONL line.
+fn strip_field(line: &str, key: &str) -> String {
+    let pat = format!(",\"{key}\":");
+    let Some(start) = line.find(&pat) else {
+        // leading position: {"key":v, — drop "key":v,
+        let lead = format!("\"{key}\":");
+        let Some(s) = line.find(&lead) else { return line.to_string() };
+        let rest = &line[s + lead.len()..];
+        let end = rest
+            .find([',', '}'])
+            .map(|i| i + 1) // also eat the trailing comma
+            .unwrap_or(rest.len());
+        return format!("{}{}", &line[..s], &rest[end.min(rest.len())..]);
+    };
+    let rest = &line[start + pat.len()..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    format!("{}{}", &line[..start], &rest[end..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_parsing_and_stripping() {
+        let line = r#"{"sid":3,"party":1,"seq":9,"clock":"virt","t":1.250000,"ev":"epoch","loss":0.5}"#;
+        assert_eq!(field_u64(line, "sid"), Some(3));
+        assert_eq!(field_u64(line, "party"), Some(1));
+        assert_eq!(field_u64(line, "seq"), Some(9));
+        assert_eq!(field_u64(line, "missing"), None);
+        let canon = strip_field(&strip_field(line, "t"), "sid");
+        assert!(!canon.contains("\"t\":"), "{canon}");
+        assert!(!canon.contains("\"sid\":"), "{canon}");
+        assert!(canon.contains("\"party\":1"), "{canon}");
+        assert!(canon.contains("\"loss\":0.5"), "{canon}");
+        // stripping a leading field keeps the object well-formed-ish
+        let lead = strip_field(r#"{"sid":3,"party":1}"#, "sid");
+        assert_eq!(lead, r#"{"party":1}"#);
+    }
+}

@@ -71,6 +71,8 @@ impl NoncePool {
 
     /// Generate `count` nonces now (call off the critical path).
     pub fn refill<R: Rng64>(&mut self, rng: &mut R, count: usize) {
+        let _sp = crate::obs::span("crypto_nonce_refill_seconds");
+        crate::obs::counter_add("crypto_nonces_total", count as u64);
         for _ in 0..count {
             let rn = match &self.hs {
                 Some(tbl) => {
@@ -92,6 +94,8 @@ impl NoncePool {
     /// exponentiations fan out over `exec`. This is the dominant per-batch
     /// cost of SPNN-HE, now one exponentiation per *packed* ciphertext.
     pub fn refill_parallel<R: Rng64>(&mut self, rng: &mut R, count: usize, exec: &ExecPool) {
+        let _sp = crate::obs::span("crypto_nonce_refill_seconds");
+        crate::obs::counter_add("crypto_nonces_total", count as u64);
         let exps: Vec<BigUint> = (0..count)
             .map(|_| match &self.hs {
                 Some(_) => BigUint::random_bits(rng, SHORT_EXP_BITS),

@@ -204,9 +204,11 @@ pub fn encrypt_batch_resident(
     pool: &mut NoncePool,
     exec: &ExecPool,
 ) -> Vec<CtElem> {
+    let _sp = crate::obs::span("crypto_encrypt_batch_seconds");
     let plains = packing.pack(vals);
     let jobs: Vec<(BigUint, MontElem)> =
         plains.into_iter().map(|m| (m, pool.take())).collect();
+    crate::obs::counter_add("crypto_cts_encrypted_total", jobs.len() as u64);
     exec.par_map(&jobs, PAR_MIN_OPS, |(m, rn)| pk.encrypt_resident(m, rn))
 }
 
@@ -233,6 +235,8 @@ pub fn decrypt_batch(
     addends: usize,
     exec: &ExecPool,
 ) -> Result<Vec<i64>> {
+    let _sp = crate::obs::span("crypto_decrypt_batch_seconds");
+    crate::obs::counter_add("crypto_cts_decrypted_total", cts.len() as u64);
     let plains = exec.par_map(cts, PAR_MIN_OPS / 4, |c| sk.decrypt(c));
     packing.unpack_sum(&plains, count, addends)
 }
@@ -252,6 +256,7 @@ pub fn add_batch(
             b.len()
         )));
     }
+    let _sp = crate::obs::span("crypto_chain_add_seconds");
     let idx: Vec<usize> = (0..a.len()).collect();
     Ok(exec.par_map(&idx, PAR_MIN_OPS, |&i| pk.add(&a[i], &b[i])))
 }
@@ -271,6 +276,7 @@ pub fn add_batch_resident(
             b.len()
         )));
     }
+    let _sp = crate::obs::span("crypto_chain_add_seconds");
     let idx: Vec<usize> = (0..a.len()).collect();
     Ok(exec.par_map(&idx, PAR_MIN_OPS, |&i| pk.add_resident(&a[i], &b[i])))
 }

@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use crate::config::TransportKind;
 use crate::netsim::{full_mesh, LinkSpec, NetPort, NetStats, PartyId, Payload, Phase, StageRow};
+use crate::obs::trace;
 use crate::transport::{tcp, Channel};
 use crate::{Error, Result};
 
@@ -76,6 +77,12 @@ pub struct PartyOut {
     /// rows into the whole-mesh Table-3b breakdown via
     /// [`crate::netsim::merge_stage_rows`]).
     pub stages: Vec<StageRow>,
+    /// This party's observability snapshot ([`crate::obs::Registry::export`]
+    /// rows: counters, gauges, latency histograms). Multi-process mode
+    /// ships them home with the rest of the output and the coordinator
+    /// [`crate::obs::Registry::absorb`]s them — the timing sibling of
+    /// `stages`.
+    pub timings: Vec<(String, Vec<f64>)>,
 }
 
 impl PartyOut {
@@ -137,6 +144,10 @@ pub fn run_parties(
         TransportKind::Tcp => tcp::loopback_mesh(&name_refs, spec)?,
         TransportKind::Uds => uds_mesh(&name_refs, spec)?,
     };
+    // party threads inherit the caller's trace session id, so one
+    // process hosting several sessions (tests, benches) can split the
+    // trace per session afterwards
+    let sid = trace::sid();
     let mut handles = Vec::new();
     for ((mut port, f), name) in ports.into_iter().zip(fns).zip(&names) {
         let name = name.clone();
@@ -144,7 +155,10 @@ pub fn run_parties(
             name.clone(),
             std::thread::Builder::new()
                 .name(name)
-                .spawn(move || f(&mut port))
+                .spawn(move || {
+                    trace::set_sid(sid);
+                    f(&mut port)
+                })
                 .map_err(Error::Io)?,
         ));
     }
@@ -193,21 +207,39 @@ pub fn coordinator_run(
     reporter: PartyId,
     epochs: usize,
 ) -> Result<PartyOut> {
+    trace::emit(
+        port.id(),
+        "virt",
+        port.now(),
+        "run_start",
+        &[
+            ("epochs", trace::Val::U(epochs as u64)),
+            ("workers", trace::Val::U(workers.len() as u64)),
+        ],
+    );
     for &w in workers {
         port.send(w, Payload::Control(format!("start:{epochs}")))?;
     }
     let mut losses = Vec::with_capacity(epochs);
-    for _ in 0..epochs {
+    for e in 0..epochs {
         let status = port.recv(reporter)?.into_control()?;
         let loss = status
             .strip_prefix("epoch_done:")
             .and_then(|s| s.parse::<f64>().ok())
             .ok_or_else(|| Error::Protocol(format!("bad status {status:?}")))?;
+        trace::emit(
+            port.id(),
+            "virt",
+            port.now(),
+            "epoch",
+            &[("epoch", trace::Val::U(e as u64)), ("loss", trace::Val::F(loss))],
+        );
         losses.push(loss);
     }
     for &w in workers {
         port.send(w, Payload::Control("stop".into()))?;
     }
+    trace::emit(port.id(), "virt", port.now(), "run_stop", &[]);
     Ok(PartyOut {
         sim_time: port.now(),
         epoch_losses: losses,
@@ -248,10 +280,11 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
     port.send_phase(
         to,
         Payload::Control(format!(
-            "partyout {} {} {} {} {}",
+            "partyout {} {} {} {} {} {}",
             out.metrics.len(),
             out.params.len(),
             out.stages.len(),
+            out.timings.len(),
             out.weight_digest,
             out.sim_time,
         )),
@@ -264,6 +297,10 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
         port.send_phase(to, Payload::F64s(vec![*v]), Phase::Offline)?;
     }
     for (name, data) in &out.params {
+        port.send_phase(to, Payload::Control(name.clone()), Phase::Offline)?;
+        port.send_phase(to, Payload::F64s(data.clone()), Phase::Offline)?;
+    }
+    for (name, data) in &out.timings {
         port.send_phase(to, Payload::Control(name.clone()), Phase::Offline)?;
         port.send_phase(to, Payload::F64s(data.clone()), Phase::Offline)?;
     }
@@ -289,7 +326,7 @@ pub fn send_party_out(port: &mut dyn Channel, to: PartyId, out: &PartyOut) -> Re
 pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut> {
     let header = port.recv(from)?.into_control()?;
     let fields: Vec<&str> = header.split_whitespace().collect();
-    if fields.len() != 6 || fields[0] != "partyout" {
+    if fields.len() != 7 || fields[0] != "partyout" {
         return Err(Error::Protocol(format!("bad partyout header {header:?}")));
     }
     let parse = |s: &str| -> Result<usize> {
@@ -298,12 +335,13 @@ pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut>
     let n_metrics = parse(fields[1])?;
     let n_params = parse(fields[2])?;
     let n_stages = parse(fields[3])?;
-    let weight_digest: u64 = fields[4]
+    let n_timings = parse(fields[4])?;
+    let weight_digest: u64 = fields[5]
         .parse()
-        .map_err(|_| Error::Protocol(format!("bad partyout digest {:?}", fields[4])))?;
-    let sim_time: f64 = fields[5]
+        .map_err(|_| Error::Protocol(format!("bad partyout digest {:?}", fields[5])))?;
+    let sim_time: f64 = fields[6]
         .parse()
-        .map_err(|_| Error::Protocol(format!("bad partyout sim_time {:?}", fields[5])))?;
+        .map_err(|_| Error::Protocol(format!("bad partyout sim_time {:?}", fields[6])))?;
     let epoch_times = port.recv(from)?.into_f64s()?;
     let epoch_losses = port.recv(from)?.into_f64s()?;
     let mut metrics = Vec::with_capacity(n_metrics);
@@ -316,6 +354,11 @@ pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut>
     for _ in 0..n_params {
         let name = port.recv(from)?.into_control()?;
         params.push((name, port.recv(from)?.into_f64s()?));
+    }
+    let mut timings = Vec::with_capacity(n_timings);
+    for _ in 0..n_timings {
+        let name = port.recv(from)?.into_control()?;
+        timings.push((name, port.recv(from)?.into_f64s()?));
     }
     let mut stages = Vec::with_capacity(n_stages);
     for _ in 0..n_stages {
@@ -336,7 +379,16 @@ pub fn recv_party_out(port: &mut dyn Channel, from: PartyId) -> Result<PartyOut>
         let stage = it.next().ok_or_else(bad)?.to_string();
         stages.push(StageRow { phase, stage, bytes, msgs, wire_s });
     }
-    Ok(PartyOut { sim_time, epoch_times, epoch_losses, weight_digest, metrics, params, stages })
+    Ok(PartyOut {
+        sim_time,
+        epoch_times,
+        epoch_losses,
+        weight_digest,
+        metrics,
+        params,
+        stages,
+        timings,
+    })
 }
 
 #[cfg(test)]
@@ -426,6 +478,10 @@ mod tests {
                     wire_s: 0.0,
                 },
             ],
+            timings: vec![
+                ("c:serve_requests_total".into(), vec![7.0]),
+                ("h:serve_request_seconds".into(), vec![2.0, 3_000_000.0, 40.0, 2.0]),
+            ],
         };
         let expect = sent.clone();
         let dep = two_party_dep(
@@ -444,6 +500,7 @@ mod tests {
         assert_eq!(got.metrics, expect.metrics);
         assert_eq!(got.params, expect.params);
         assert_eq!(got.stages, expect.stages);
+        assert_eq!(got.timings, expect.timings);
         assert_eq!(got.need_param("theta").unwrap(), &[1.5, -2.5]);
         assert!(got.need_param("nope").is_err());
         // result collection is offline traffic

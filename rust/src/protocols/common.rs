@@ -98,18 +98,24 @@ where
 {
     let depth = depth.max(1);
     let ctx = |i: usize| BatchCtx { index: i, start: plan[i].0, rows: plan[i].1 };
+    // wall-clock step timers + in-flight gauge; inert when obs is disabled
+    let t_pre = crate::obs::timer("pipeline_prefetch_seconds");
+    let t_sub = crate::obs::timer("pipeline_submit_seconds");
+    let t_com = crate::obs::timer("pipeline_complete_seconds");
     let mut pre = 0usize;
     for t in 0..plan.len() {
         while pre <= t {
-            step(Step::Prefetch, &ctx(pre))?;
+            t_pre.observe(|| step(Step::Prefetch, &ctx(pre)))?;
             pre += 1;
         }
-        step(Step::Submit, &ctx(t))?;
+        t_sub.observe(|| step(Step::Submit, &ctx(t)))?;
         while pre < plan.len() && pre < t + depth {
-            step(Step::Prefetch, &ctx(pre))?;
+            t_pre.observe(|| step(Step::Prefetch, &ctx(pre)))?;
             pre += 1;
         }
-        step(Step::Complete, &ctx(t))?;
+        // batches prefetched beyond the one now completing = pipeline occupancy
+        crate::obs::gauge_set("pipeline_inflight", (pre - t) as f64);
+        t_com.observe(|| step(Step::Complete, &ctx(t)))?;
     }
     Ok(())
 }

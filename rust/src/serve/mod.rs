@@ -84,11 +84,17 @@ pub struct ServeOpts {
     /// slow earlier round fails fast rather than holding its client
     /// indefinitely.
     pub request_timeout_ms: u64,
+    /// Admission cap: the most requests accepted into one coalesced round
+    /// (`0` = unlimited). When a round is assembled, requests beyond the
+    /// cap are rejected with a clean "queue full" error before any crypto
+    /// is spent on them — load-shedding back-pressure for an overloaded
+    /// coordinator — and counted in `serve_rejected_queue_full_total`.
+    pub max_queue: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { coalesce: 256, depth: 2, request_timeout_ms: 0 }
+        ServeOpts { coalesce: 256, depth: 2, request_timeout_ms: 0, max_queue: 0 }
     }
 }
 
@@ -237,6 +243,28 @@ pub fn coordinator_serve(
         while let Ok(r) = queue.try_recv() {
             round.push(r);
         }
+        let queued = round.len();
+        crate::obs::gauge_set("serve_queue_depth", queued as f64);
+        crate::obs::counter_add("serve_requests_total", queued as u64);
+        // admission control: shed everything beyond the cap with a clean
+        // error before validation or crypto touches it (FIFO keeps the
+        // oldest requests)
+        if opts.max_queue > 0 && queued > opts.max_queue {
+            for r in round.drain(opts.max_queue..) {
+                crate::obs::counter_add("serve_rejected_queue_full_total", 1);
+                crate::obs::trace::emit(
+                    p.id(),
+                    "virt",
+                    p.now(),
+                    "serve_reject",
+                    &[("reason", crate::obs::trace::Val::S("queue_full"))],
+                );
+                let _ = r.reply.send(Err(Error::Protocol(format!(
+                    "serve queue full ({queued} request(s) queued, --max-queue {})",
+                    opts.max_queue
+                ))));
+            }
+        }
         // validate and flatten the round's rows into one stream
         let timeout = match opts.request_timeout_ms {
             0 => None,
@@ -250,6 +278,7 @@ pub fn coordinator_serve(
             if let Some(t) = timeout {
                 let waited = r.enqueued.elapsed();
                 if waited > t {
+                    crate::obs::counter_add("serve_rejected_timeout_total", 1);
                     let _ = r.reply.send(Err(Error::Protocol(format!(
                         "inference request timed out after {}ms in the serve queue \
                          (--request-timeout {}ms)",
@@ -260,6 +289,7 @@ pub fn coordinator_serve(
                 }
             }
             if let Some(&bad) = r.rows.iter().find(|&&id| id as usize >= max_row) {
+                crate::obs::counter_add("serve_rejected_range_total", 1);
                 let _ = r.reply.send(Err(Error::Config(format!(
                     "inference request row {bad} out of range (serve table has \
                      {max_row} rows)"
@@ -270,6 +300,8 @@ pub fn coordinator_serve(
                 let _ = r.reply.send(Ok(Vec::new()));
                 continue;
             }
+            let waited = r.enqueued.elapsed().as_secs_f64();
+            crate::obs::observe_secs("serve_queue_wait_seconds", waited);
             let start = all.len();
             all.extend_from_slice(&r.rows);
             good.push((r, start));
@@ -279,6 +311,22 @@ pub fn coordinator_serve(
         }
         // the shared batch plan handles the ragged tail uniformly
         let plan = batch_plan(all.len(), coalesce);
+        crate::obs::gauge_set(
+            "serve_coalesce_fill",
+            all.len() as f64 / (plan.len() * coalesce) as f64,
+        );
+        crate::obs::trace::emit(
+            p.id(),
+            "virt",
+            p.now(),
+            "serve_round",
+            &[
+                ("requests", crate::obs::trace::Val::U(good.len() as u64)),
+                ("rows", crate::obs::trace::Val::U(all.len() as u64)),
+                ("batches", crate::obs::trace::Val::U(plan.len() as u64)),
+            ],
+        );
+        let round_t0 = crate::obs::enabled().then(Instant::now);
         let mut scores: Vec<f32> = Vec::with_capacity(all.len());
         let mut announced = 0usize;
         let mut completed = 0usize;
@@ -295,7 +343,11 @@ pub fn coordinator_serve(
                 announced += 1;
             }
             let tag = next_tag + completed as u64;
+            let batch_t0 = crate::obs::enabled().then(Instant::now);
             let got = p.recv_tagged(responder, tag)?.into_infer_resp()?;
+            if let Some(t0) = batch_t0 {
+                crate::obs::observe_secs("serve_batch_seconds", t0.elapsed().as_secs_f64());
+            }
             if got.len() != plan[completed].1 {
                 return Err(Error::Protocol(format!(
                     "serve: responder returned {} score(s) for a {}-row batch",
@@ -309,11 +361,16 @@ pub fn coordinator_serve(
         next_tag += plan.len() as u64;
         served_batches += plan.len() as u64;
         served_rows += all.len() as u64;
+        if let Some(t0) = round_t0 {
+            crate::obs::observe_secs("serve_crypto_seconds", t0.elapsed().as_secs_f64());
+        }
         // fan the scores back out per request
         for (r, start) in good {
             let n = r.rows.len();
+            crate::obs::observe_secs("serve_request_seconds", r.enqueued.elapsed().as_secs_f64());
             let _ = r.reply.send(Ok(scores[start..start + n].to_vec()));
         }
+        crate::obs::gauge_set("serve_queue_depth", 0.0);
     }
 
     // 3) stand-down: every serving party is parked on tag `next_tag`
@@ -455,9 +512,15 @@ pub fn serve(
     let dep =
         trainer.serve_deployment(cfg, tc, train, test, n_holders, opts, ServeQueue::new(rx))?;
     let kind = tc.transport;
+    // the session thread inherits the caller's trace session id so its
+    // events stay attributable to this serve session
+    let sid = crate::obs::trace::sid();
     let join = std::thread::Builder::new()
         .name("spnn-serve".into())
-        .spawn(move || run_parties(spec, kind, dep))
+        .spawn(move || {
+            crate::obs::trace::set_sid(sid);
+            run_parties(spec, kind, dep)
+        })
         .map_err(Error::Io)?;
     Ok(ServeHandle {
         tx: Some(tx),
@@ -767,7 +830,8 @@ mod tests {
             ..Default::default()
         };
         let trainer = protocols::by_name("spnn-ss").unwrap();
-        let opts = ServeOpts { coalesce: 8, depth: 1, request_timeout_ms: 2_000 };
+        let opts =
+            ServeOpts { coalesce: 8, depth: 1, request_timeout_ms: 2_000, ..Default::default() };
         let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
             .unwrap();
         // a fresh request scores normally under the timeout
@@ -786,6 +850,46 @@ mod tests {
         // ...and the session still answers afterwards
         let again = h.infer(&[3, 4]).unwrap();
         assert_eq!(again.len(), 2);
+        let rep = h.shutdown().unwrap();
+        assert_ne!(rep.weight_digest, 0);
+    }
+
+    #[test]
+    fn excess_requests_are_rejected_when_the_queue_is_capped() {
+        // ISSUE 8 satellite: with --max-queue 1, a round assembled from a
+        // backlog keeps the oldest request and sheds the rest with a clean
+        // "queue full" error before any crypto is spent on them
+        let ds = synth_fraud(SynthOpts::small(150));
+        let (train, test) = ds.split(0.8, 19);
+        let tc = TrainConfig {
+            batch: 64,
+            epochs: 1,
+            lr_override: Some(0.05),
+            ..Default::default()
+        };
+        let trainer = protocols::by_name("spnn-ss").unwrap();
+        let opts = ServeOpts { coalesce: 8, depth: 1, max_queue: 1, ..Default::default() };
+        let h = serve(trainer, &FRAUD, &tc, LinkSpec::lan(), &train, &test, 2, &opts)
+            .unwrap();
+        // enqueue three requests while training still runs: the first
+        // round is assembled only after training, so all three are queued
+        // by then and FIFO admission keeps exactly the first
+        let mut replies = Vec::new();
+        for _ in 0..3 {
+            let (rtx, rrx) = mpsc::channel();
+            h.sender()
+                .send(Request { rows: vec![0, 1], reply: rtx, enqueued: Instant::now() })
+                .unwrap();
+            replies.push(rrx);
+        }
+        let first = replies.remove(0).recv().unwrap().unwrap();
+        assert_eq!(first.len(), 2);
+        for rrx in replies {
+            let err = rrx.recv().unwrap().unwrap_err();
+            assert!(format!("{err}").contains("queue full"), "{err}");
+        }
+        // the session still serves after shedding load
+        assert_eq!(h.infer(&[2, 3]).unwrap().len(), 2);
         let rep = h.shutdown().unwrap();
         assert_ne!(rep.weight_digest, 0);
     }

@@ -233,12 +233,14 @@ pub fn mat_triple_from_parts(
     k: usize,
     n: usize,
 ) -> MatTriple {
+    let _sp = crate::obs::span("crypto_triple_expand_seconds");
     let (u, v) = expand_uv(seed, m, k, n);
     MatTriple { u, v, w: RingMat::from_data(m, n, w) }
 }
 
 /// A-side expansion of an elementwise triple from its reply payloads.
 pub fn elem_triple_from_parts(seed: [u8; 32], w: Vec<u64>, len: usize) -> ElemTriple {
+    let _sp = crate::obs::span("crypto_triple_expand_seconds");
     ElemTriple {
         u: expand_vec(seed, NONCE_ELEM_U, len),
         v: expand_vec(seed, NONCE_ELEM_V, len),
@@ -255,6 +257,7 @@ pub fn bool_bundle_from_parts(
     dab_bits: Vec<u64>,
     lanes: usize,
 ) -> Result<BoolBundle> {
+    let _sp = crate::obs::span("crypto_triple_expand_seconds");
     let words = super::boolean::drelu_triple_words(lanes);
     let wpl = words_for(lanes);
     if eda_bits.len() != 64 * wpl || c.len() != words || dab_arith.len() != lanes {

@@ -341,6 +341,7 @@ fn replay_worker(sh: Arc<Shared>, stream: TcpStream, epoch: u64) {
 /// `spnn-relink`, prune the journal and kick off the background replay.
 /// Returns false when the reconnect window elapsed.
 fn reconnect_locked(sh: &Arc<Shared>, g: &mut Inner, addr: &str) -> bool {
+    let _sp = crate::obs::span("transport_relink_seconds");
     let deadline = Instant::now() + sh.reconnect_timeout;
     loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
@@ -401,6 +402,7 @@ fn reconnect_locked(sh: &Arc<Shared>, g: &mut Inner, addr: &str) -> bool {
             sh.peer,
             g.journal.len()
         );
+        crate::obs::counter_add("transport_relinks_total", 1);
         return true;
     }
 }

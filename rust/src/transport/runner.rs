@@ -159,6 +159,7 @@ pub fn run_party(
     let mut out = f(&mut port)?;
     out.metrics.extend(traffic_metrics(&stats, sess.id));
     out.stages = stats.stage_rows();
+    out.timings = crate::obs::registry().export();
     parties::send_party_out(&mut port, 0, &out)?;
     port.shutdown(); // join writers: the PartyOut is flushed before exit
     eprintln!("spnn party: {role} done (sim {:.2}s)", out.sim_time);
@@ -359,7 +360,11 @@ fn launch_on(
     let f0 = fns.remove(0);
     let mut outs = vec![f0(&mut port)?];
     for id in 1..n {
-        outs.push(parties::recv_party_out(&mut port, id)?);
+        let out = parties::recv_party_out(&mut port, id)?;
+        // fold worker timings into the local registry so the launcher's
+        // "time by stage" table covers the whole mesh, as with stage rows
+        crate::obs::registry().absorb(&out.timings);
+        outs.push(out);
     }
     port.shutdown();
     guard.wait_all()?;

@@ -129,16 +129,22 @@ impl SessionSpec {
         }
         // serve mode rides the config broadcast so every worker process
         // builds the serve deployment (field absent = train-and-exit,
-        // keeping old wire strings parseable). The timeout field is only
-        // emitted when set, so pre-timeout wire strings stay identical.
+        // keeping old wire strings parseable). The timeout and max-queue
+        // fields are only emitted when set, so earlier wire strings stay
+        // identical.
         if let Some(sv) = &self.serve {
-            if sv.request_timeout_ms == 0 {
-                s.push_str(&format!(" serve={},{}", sv.coalesce, sv.depth));
-            } else {
+            if sv.max_queue != 0 {
+                s.push_str(&format!(
+                    " serve={},{},{},{}",
+                    sv.coalesce, sv.depth, sv.request_timeout_ms, sv.max_queue
+                ));
+            } else if sv.request_timeout_ms != 0 {
                 s.push_str(&format!(
                     " serve={},{},{}",
                     sv.coalesce, sv.depth, sv.request_timeout_ms
                 ));
+            } else {
+                s.push_str(&format!(" serve={},{}", sv.coalesce, sv.depth));
             }
         }
         s
@@ -194,11 +200,12 @@ impl SessionSpec {
         let serve = match kv.get("serve") {
             None => None,
             Some(v) => {
-                // two fields predate --request-timeout; keep accepting them
+                // two fields predate --request-timeout, three predate
+                // --max-queue; keep accepting every vintage
                 let parts: Vec<&str> = v.split(',').collect();
-                if parts.len() != 2 && parts.len() != 3 {
+                if parts.len() < 2 || parts.len() > 4 {
                     return Err(Error::Config(format!(
-                        "bad serve={v:?} (want COALESCE,DEPTH[,TIMEOUT_MS])"
+                        "bad serve={v:?} (want COALESCE,DEPTH[,TIMEOUT_MS[,MAX_QUEUE]])"
                     )));
                 }
                 let coalesce: usize = parts[0].parse().map_err(|_| {
@@ -213,7 +220,13 @@ impl SessionSpec {
                         Error::Config(format!("bad serve timeout {t:?}"))
                     })?,
                 };
-                Some(crate::serve::ServeOpts { coalesce, depth, request_timeout_ms })
+                let max_queue: usize = match parts.get(3) {
+                    None => 0,
+                    Some(t) => t.parse().map_err(|_| {
+                        Error::Config(format!("bad serve max-queue {t:?}"))
+                    })?,
+                };
+                Some(crate::serve::ServeOpts { coalesce, depth, request_timeout_ms, max_queue })
             }
         };
         Ok(SessionSpec {
@@ -764,20 +777,38 @@ mod tests {
         assert!(SessionSpec::from_wire(&k.to_wire()).unwrap().tc.psk_file.is_none());
         // serve mode rides the config broadcast and roundtrips exactly
         let mut sv = s.clone();
-        sv.serve =
-            Some(crate::serve::ServeOpts { coalesce: 48, depth: 3, request_timeout_ms: 0 });
+        sv.serve = Some(crate::serve::ServeOpts {
+            coalesce: 48,
+            depth: 3,
+            request_timeout_ms: 0,
+            max_queue: 0,
+        });
         assert_ne!(sv.digest(), s.digest(), "serve mode must change the digest");
         assert!(
             sv.to_wire().ends_with("serve=48,3"),
-            "a zero timeout must keep the pre-timeout wire form: {}",
+            "zero timeout and max-queue must keep the two-field wire form: {}",
             sv.to_wire()
         );
         let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
         assert_eq!(back.serve, sv.serve);
         sv.serve.as_mut().unwrap().request_timeout_ms = 1_500;
+        assert!(
+            sv.to_wire().ends_with("serve=48,3,1500"),
+            "zero max-queue must keep the three-field wire form: {}",
+            sv.to_wire()
+        );
         let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
         assert_eq!(back.serve.as_ref().unwrap().request_timeout_ms, 1_500);
+        assert_eq!(back.serve.as_ref().unwrap().max_queue, 0);
+        // the admission cap rides as the fourth field and roundtrips
+        sv.serve.as_mut().unwrap().max_queue = 32;
+        assert!(sv.to_wire().ends_with("serve=48,3,1500,32"), "{}", sv.to_wire());
+        let back = SessionSpec::from_wire(&sv.to_wire()).unwrap();
+        assert_eq!(back.serve, sv.serve);
         assert!(SessionSpec::from_wire(&format!("{} serve=oops", s.to_wire())).is_err());
+        assert!(
+            SessionSpec::from_wire(&format!("{} serve=1,2,3,4,5", s.to_wire())).is_err()
+        );
         // the compression knob roundtrips in canonical form and moves the
         // config digest; absent = uncompressed, as before this field
         let mut cs = s.clone();

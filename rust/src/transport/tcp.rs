@@ -174,6 +174,7 @@ impl TcpPort {
     /// are on the wire before the caller proceeds to exit, then stop the
     /// relink accept hub.
     pub fn shutdown(mut self) {
+        let _sp = crate::obs::span("transport_flush_seconds");
         self.port.take(); // drops the tx map -> writers drain + goodbye
         if let Some(mut links) = self.links.take() {
             for wh in links.writers.drain(..) {

@@ -1,0 +1,71 @@
+//! End-to-end observability tests (ISSUE 8 acceptance):
+//!
+//! - the `--trace-out` JSONL trace is **deterministic** under netsim once
+//!   timestamps are stripped — two identical runs produce the same
+//!   canonical digest ([`spnn::obs::trace::canonical_digest`]), which is
+//!   what makes traces diffable across machines;
+//! - the instrumentation is **observe-only** — every trainer produces a
+//!   bit-identical weight digest with the obs layer enabled and disabled.
+//!
+//! Uses the native graph fallback (no `make artifacts` needed) and
+//! bench-size 256-bit Paillier keys, like the CI smoke jobs.
+
+use spnn::config::{TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::obs;
+use spnn::protocols;
+
+/// One small netsim training run; returns the weight digest.
+fn train_digest(proto: &str) -> u64 {
+    let ds = synth_fraud(SynthOpts::small(500));
+    let (train, test) = ds.split(0.8, 7);
+    let tc = TrainConfig {
+        batch: 128,
+        epochs: 1,
+        paillier_bits: 256, // bench-size keys; experiments use 512/1024
+        lr_override: Some(0.05),
+        ..Default::default()
+    };
+    let t = protocols::by_name(proto).expect("known trainer");
+    let rep = t
+        .train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2)
+        .expect("train");
+    rep.weight_digest
+}
+
+#[test]
+fn netsim_trace_is_deterministic_modulo_timestamps() {
+    let path = std::env::temp_dir().join(format!("spnn-trace-{}.jsonl", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    obs::trace::init(&path).expect("trace sink");
+    let sid1 = obs::trace::alloc_sid();
+    obs::trace::set_sid(sid1);
+    let d1 = train_digest("spnn-ss");
+    let sid2 = obs::trace::alloc_sid();
+    obs::trace::set_sid(sid2);
+    let d2 = train_digest("spnn-ss");
+    obs::trace::close();
+    obs::trace::set_sid(0);
+    assert_eq!(d1, d2, "same flags must train the same model");
+    let text = std::fs::read_to_string(&path).expect("trace file");
+    assert!(text.contains("\"ev\":\"run_start\""), "no run_start event in\n{text}");
+    assert!(text.contains("\"ev\":\"epoch\""), "no epoch event in\n{text}");
+    let t1 = obs::trace::canonical_digest(&path, sid1).expect("digest run 1");
+    let t2 = obs::trace::canonical_digest(&path, sid2).expect("digest run 2");
+    assert_eq!(t1, t2, "trace must be deterministic modulo timestamps");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn instrumentation_never_perturbs_training() {
+    for proto in ["splitnn", "secureml", "spnn-ss", "spnn-he"] {
+        obs::set_enabled(true);
+        let on = train_digest(proto);
+        obs::set_enabled(false);
+        let off = train_digest(proto);
+        obs::set_enabled(true);
+        assert_eq!(on, off, "{proto}: the obs layer must be observe-only");
+        assert_ne!(on, 0, "{proto}: degenerate weight digest");
+    }
+}
