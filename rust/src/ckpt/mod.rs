@@ -1,0 +1,602 @@
+//! Durable per-role checkpoints: each party persists **its own** trained
+//! parameter blocks (and the RNG cursors needed to resume serving
+//! deterministically) to `<dir>/<role>.ckpt`, mirroring the privacy split
+//! on disk — a holder's file holds only that holder's shares/weights, a
+//! server's only the server stack, and no file ever contains another
+//! party's secrets.
+//!
+//! ## On-disk format (version 1)
+//!
+//! Little-endian, length-prefixed, FNV-checksummed:
+//!
+//! ```text
+//! magic    8 B   "SPNNCKPT"
+//! version  4 B   u32 (currently 1)
+//! protocol 4+N B u32 length + utf-8 (e.g. "spnn-he")
+//! role     4+N B u32 length + utf-8 (e.g. "holder0")
+//! cfg      8 B   u64 config digest (see [`config_digest`])
+//! blocks   4 B   u32 count, then per block:
+//!                  name (u32 length + utf-8)
+//!                  tag  (1 B: 0 = f64, 1 = u64)
+//!                  len  (u64 element count)
+//!                  data (len * 8 B; f64 via to_bits)
+//! cursors  4 B   u32 count, then per cursor:
+//!                  name (u32 length + utf-8)
+//!                  counter (u64), pos (u64)   — see `ChaChaRng::cursor`
+//! checksum 8 B   u64 FNV-1a over every preceding byte
+//! ```
+//!
+//! Writes are atomic (`<role>.ckpt.tmp` + rename), so a crash mid-write
+//! leaves either the previous checkpoint or none. Loads verify magic,
+//! version and checksum and report a *specific* diagnostic for each
+//! failure mode (truncation, corruption, wrong version, wrong role /
+//! protocol / config) — the rejection tests below pin the wording.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::protocols::common::Fnv;
+
+/// Format version written by this build.
+pub const VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"SPNNCKPT";
+
+/// One named parameter block: either plaintext / share floats or raw
+/// `Z_{2^64}` ring words (SecureML layer shares live in the ring).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockData {
+    /// IEEE-754 doubles, stored via `to_bits` (bit-exact roundtrip).
+    F64(Vec<f64>),
+    /// Ring / raw words.
+    U64(Vec<u64>),
+}
+
+impl BlockData {
+    fn tag(&self) -> u8 {
+        match self {
+            BlockData::F64(_) => 0,
+            BlockData::U64(_) => 1,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            BlockData::F64(v) => v.len(),
+            BlockData::U64(v) => v.len(),
+        }
+    }
+}
+
+/// One role's durable state: parameter blocks + RNG cursors, tagged with
+/// the protocol/role/config they belong to so a mismatched load fails
+/// loudly instead of serving garbage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Trainer name (`spnn-he`, `spnn-ss`, `secureml`, `splitnn`).
+    pub protocol: String,
+    /// Role name from the deployment roster (`server`, `holder0`, ...).
+    pub role: String,
+    /// [`config_digest`] of the session that produced this checkpoint.
+    pub cfg_digest: u64,
+    /// Named parameter blocks, in a role-defined order.
+    pub blocks: Vec<(String, BlockData)>,
+    /// Named RNG / dealer-stream cursors (`(counter, pos)` pairs).
+    pub cursors: Vec<(String, (u64, u64))>,
+}
+
+impl Checkpoint {
+    /// Empty checkpoint shell for a role.
+    pub fn new(protocol: &str, role: &str, cfg_digest: u64) -> Self {
+        Checkpoint {
+            protocol: protocol.to_string(),
+            role: role.to_string(),
+            cfg_digest,
+            blocks: Vec::new(),
+            cursors: Vec::new(),
+        }
+    }
+
+    /// Append an f64 block.
+    pub fn push_f64(&mut self, name: &str, data: Vec<f64>) {
+        self.blocks.push((name.to_string(), BlockData::F64(data)));
+    }
+
+    /// Append a u64 (ring) block.
+    pub fn push_u64(&mut self, name: &str, data: Vec<u64>) {
+        self.blocks.push((name.to_string(), BlockData::U64(data)));
+    }
+
+    /// Append an RNG cursor.
+    pub fn push_cursor(&mut self, name: &str, cursor: (u64, u64)) {
+        self.cursors.push((name.to_string(), cursor));
+    }
+
+    /// Find an f64 block by name.
+    pub fn f64s(&self, name: &str) -> Result<&[f64]> {
+        match self.blocks.iter().find(|(n, _)| n == name) {
+            Some((_, BlockData::F64(v))) => Ok(v),
+            Some((_, BlockData::U64(_))) => Err(Error::Config(format!(
+                "checkpoint block {name:?} holds u64 ring words, expected f64"
+            ))),
+            None => Err(Error::Config(format!("checkpoint is missing block {name:?}"))),
+        }
+    }
+
+    /// Find a u64 (ring) block by name.
+    pub fn u64s(&self, name: &str) -> Result<&[u64]> {
+        match self.blocks.iter().find(|(n, _)| n == name) {
+            Some((_, BlockData::U64(v))) => Ok(v),
+            Some((_, BlockData::F64(_))) => Err(Error::Config(format!(
+                "checkpoint block {name:?} holds f64 values, expected u64"
+            ))),
+            None => Err(Error::Config(format!("checkpoint is missing block {name:?}"))),
+        }
+    }
+
+    /// Copy an f64 block into an existing parameter buffer, rejecting
+    /// shape drift with a diagnostic instead of serving garbage.
+    pub fn copy_f64(&self, name: &str, dst: &mut [f64]) -> Result<()> {
+        let blk = self.f64s(name)?;
+        if blk.len() != dst.len() {
+            return Err(Error::Config(format!(
+                "checkpoint block {name:?} holds {} values, this model wants {} \
+                 (was the checkpoint written at a different shape?)",
+                blk.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(blk);
+        Ok(())
+    }
+
+    /// [`Checkpoint::copy_f64`] for u64 ring blocks.
+    pub fn copy_u64(&self, name: &str, dst: &mut [u64]) -> Result<()> {
+        let blk = self.u64s(name)?;
+        if blk.len() != dst.len() {
+            return Err(Error::Config(format!(
+                "checkpoint block {name:?} holds {} words, this model wants {} \
+                 (was the checkpoint written at a different shape?)",
+                blk.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(blk);
+        Ok(())
+    }
+
+    /// Find a cursor by name.
+    pub fn cursor(&self, name: &str) -> Result<(u64, u64)> {
+        self.cursors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| Error::Config(format!("checkpoint is missing cursor {name:?}")))
+    }
+
+    /// Validate that this checkpoint belongs to (protocol, role, config);
+    /// the specific mismatch diagnostics are pinned by tests.
+    pub fn expect(&self, protocol: &str, role: &str, cfg_digest: u64) -> Result<()> {
+        if self.protocol != protocol {
+            return Err(Error::Config(format!(
+                "checkpoint protocol mismatch: file was written by {:?}, this session runs {:?}",
+                self.protocol, protocol
+            )));
+        }
+        if self.role != role {
+            return Err(Error::Config(format!(
+                "checkpoint role mismatch: file belongs to role {:?}, this party is {:?}",
+                self.role, role
+            )));
+        }
+        if self.cfg_digest != cfg_digest {
+            return Err(Error::Config(format!(
+                "checkpoint config mismatch: file has digest 0x{:016x}, session has 0x{:016x} \
+                 (batch/seed/key-size/compression must match the training run)",
+                self.cfg_digest, cfg_digest
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the on-disk byte layout (checksum included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        put_str(&mut out, &self.protocol);
+        put_str(&mut out, &self.role);
+        out.extend_from_slice(&self.cfg_digest.to_le_bytes());
+        out.extend_from_slice(&(self.blocks.len() as u32).to_le_bytes());
+        for (name, data) in &self.blocks {
+            put_str(&mut out, name);
+            out.push(data.tag());
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            match data {
+                BlockData::F64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_bits().to_le_bytes());
+                    }
+                }
+                BlockData::U64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out.extend_from_slice(&(self.cursors.len() as u32).to_le_bytes());
+        for (name, (counter, pos)) in &self.cursors {
+            put_str(&mut out, name);
+            out.extend_from_slice(&counter.to_le_bytes());
+            out.extend_from_slice(&pos.to_le_bytes());
+        }
+        let mut f = Fnv::new();
+        f.add_bytes(&out);
+        out.extend_from_slice(&f.0.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify the on-disk byte layout.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        // the checksum footer is verified first: a flipped bit anywhere
+        // (header, payload or footer itself) is "corrupt", while a short
+        // file is "truncated"
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err(Error::Config(format!(
+                "checkpoint truncated: {} bytes is shorter than the fixed header",
+                bytes.len()
+            )));
+        }
+        let (body, foot) = bytes.split_at(bytes.len() - 8);
+        if &body[..8] != MAGIC {
+            return Err(Error::Config(
+                "not a checkpoint file (bad magic; expected SPNNCKPT)".into(),
+            ));
+        }
+        let mut f = Fnv::new();
+        f.add_bytes(body);
+        let want = u64::from_le_bytes(foot.try_into().unwrap());
+        if f.0 != want {
+            return Err(Error::Config(format!(
+                "checkpoint corrupt: checksum mismatch (stored 0x{want:016x}, \
+                 computed 0x{:016x})",
+                f.0
+            )));
+        }
+        let mut r = Reader { buf: body, pos: 8 };
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(Error::Config(format!(
+                "unsupported checkpoint version {version} (this build reads version {VERSION})"
+            )));
+        }
+        let protocol = r.str()?;
+        let role = r.str()?;
+        let cfg_digest = r.u64()?;
+        let n_blocks = r.u32()? as usize;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            let name = r.str()?;
+            let tag = r.u8()?;
+            let len = r.u64()? as usize;
+            let data = match tag {
+                0 => {
+                    let mut v = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        v.push(f64::from_bits(r.u64()?));
+                    }
+                    BlockData::F64(v)
+                }
+                1 => {
+                    let mut v = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        v.push(r.u64()?);
+                    }
+                    BlockData::U64(v)
+                }
+                t => {
+                    return Err(Error::Config(format!(
+                        "checkpoint corrupt: unknown block tag {t} for {name:?}"
+                    )))
+                }
+            };
+            blocks.push((name, data));
+        }
+        let n_cursors = r.u32()? as usize;
+        let mut cursors = Vec::with_capacity(n_cursors);
+        for _ in 0..n_cursors {
+            let name = r.str()?;
+            let counter = r.u64()?;
+            let pos = r.u64()?;
+            cursors.push((name, (counter, pos)));
+        }
+        if r.pos != body.len() {
+            return Err(Error::Config(format!(
+                "checkpoint corrupt: {} trailing bytes after the cursor table",
+                body.len() - r.pos
+            )));
+        }
+        Ok(Checkpoint { protocol, role, cfg_digest, blocks, cursors })
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Config(format!(
+                "checkpoint truncated: wanted {n} bytes at offset {}, file body ends at {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 1 << 20 {
+            return Err(Error::Config(format!(
+                "checkpoint corrupt: implausible string length {len}"
+            )));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Config("checkpoint corrupt: non-utf8 string".into()))
+    }
+}
+
+/// Path of a role's checkpoint file inside a checkpoint dir.
+pub fn path_for(dir: &str, role: &str) -> PathBuf {
+    Path::new(dir).join(format!("{role}.ckpt"))
+}
+
+/// Atomically persist a role's checkpoint under `dir` (created if
+/// absent): write `<role>.ckpt.tmp`, fsync-free rename over the final
+/// name — a crash mid-write never leaves a half-written checkpoint
+/// visible.
+pub fn save(dir: &str, ck: &Checkpoint) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let path = path_for(dir, &ck.role);
+    let tmp = path.with_extension("ckpt.tmp");
+    fs::write(&tmp, ck.encode())?;
+    fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Load a role's checkpoint from `dir`, with a clear error when the file
+/// is missing (the most common operator mistake: serving from a dir that
+/// was never trained into).
+pub fn load(dir: &str, role: &str) -> Result<Checkpoint> {
+    let path = path_for(dir, role);
+    let bytes = fs::read(&path).map_err(|e| {
+        Error::Config(format!(
+            "cannot read checkpoint {} for role {role:?}: {e} \
+             (train with --checkpoint-dir first)",
+            path.display()
+        ))
+    })?;
+    Checkpoint::decode(&bytes)
+}
+
+/// The checkpoint dir a warm start reads from, with the operator-facing
+/// diagnostic when the process was launched without one. The dir is a
+/// process-local knob (never broadcast), so in launch mode every party
+/// process needs its own flag.
+pub fn warm_dir(tc: &crate::config::TrainConfig) -> Result<&str> {
+    tc.checkpoint_dir.as_deref().ok_or_else(|| {
+        Error::Config(
+            "warm start requires a checkpoint dir on this process \
+             (--from-checkpoint DIR or --checkpoint-dir DIR)"
+                .into(),
+        )
+    })
+}
+
+/// Load + validate one role's checkpoint for a warm-starting session:
+/// reads `<tc.checkpoint_dir>/<role>.ckpt` and rejects protocol / role /
+/// config mismatches via [`Checkpoint::expect`].
+pub fn load_verified(
+    tc: &crate::config::TrainConfig,
+    protocol: &str,
+    role: &str,
+    n_holders: usize,
+) -> Result<Checkpoint> {
+    let ck = load(warm_dir(tc)?, role)?;
+    ck.expect(protocol, role, config_digest(protocol, tc, n_holders))?;
+    Ok(ck)
+}
+
+/// Digest of the configuration knobs a checkpoint's blocks depend on.
+/// Loading under any other value is rejected by [`Checkpoint::expect`]:
+/// the blocks would be shaped/scaled for a different run. Deliberately
+/// excludes process-local knobs (threads, transport, pipeline depth,
+/// checkpoint dir) that do not change the trained values.
+pub fn config_digest(protocol: &str, tc: &crate::config::TrainConfig, n_holders: usize) -> u64 {
+    let compress = tc.compress.map(|c| c.canonical()).unwrap_or_default();
+    let s = format!(
+        "ckpt-cfg v1 proto={protocol} holders={n_holders} batch={} seed={} sgld={} \
+         lr={:?} pbits={} shortexp={} noise={:?} slot={} compress={compress}",
+        tc.batch,
+        tc.seed,
+        tc.sgld as u8,
+        tc.lr_override,
+        tc.paillier_bits,
+        tc.paillier_short_exp as u8,
+        tc.sgld_noise,
+        tc.slot_bits,
+    );
+    let mut f = Fnv::new();
+    f.add_bytes(s.as_bytes());
+    f.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Representative role blocks for all four trainers: SPNN-HE/SS
+    /// holder (f64 theta + mask-RNG cursor), SPNN server stack (f64),
+    /// SecureML party (u64 ring shares + dealer/mask cursors), SplitNN
+    /// holder encoder (f64, no cursors).
+    fn samples() -> Vec<Checkpoint> {
+        let mut hld = Checkpoint::new("spnn-he", "holder0", 0x1111);
+        hld.push_f64("theta", vec![0.25, -1.5, 3.0e-9, f64::MIN_POSITIVE]);
+        hld.push_cursor("rng", (42, 6));
+        let mut srv = Checkpoint::new("spnn-ss", "server", 0x2222);
+        srv.push_f64("server0_w", (0..64).map(|i| i as f64 * 0.125).collect());
+        srv.push_f64("server0_b", vec![0.0; 8]);
+        srv.push_cursor("rng", (7, 0));
+        srv.push_cursor("dealer", (9, 14));
+        let mut mpc = Checkpoint::new("secureml", "party0", 0x3333);
+        mpc.push_u64("w0", vec![u64::MAX, 0, 1, 0x8000_0000_0000_0000]);
+        mpc.push_u64("b0", vec![3, 5, 7]);
+        mpc.push_cursor("rng", (1, 2));
+        let mut spl = Checkpoint::new("splitnn", "holder1", 0x4444);
+        spl.push_f64("enc", vec![-0.5; 24]);
+        vec![hld, srv, mpc, spl]
+    }
+
+    #[test]
+    fn roundtrips_all_four_trainers_role_blocks_bit_exactly() {
+        for ck in samples() {
+            let bytes = ck.encode();
+            let back = Checkpoint::decode(&bytes).unwrap();
+            assert_eq!(back, ck, "{}/{}", ck.protocol, ck.role);
+        }
+        // f64 payloads roundtrip via to_bits: NaN and -0.0 included
+        let mut ck = Checkpoint::new("spnn-he", "server", 1);
+        ck.push_f64("w", vec![f64::NAN, -0.0, f64::INFINITY]);
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        let w = back.f64s("w").unwrap();
+        assert!(w[0].is_nan());
+        assert_eq!(w[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(w[2], f64::INFINITY);
+    }
+
+    #[test]
+    fn every_truncation_is_reported_as_truncated_or_corrupt() {
+        let ck = &samples()[1];
+        let bytes = ck.encode();
+        for cut in 0..bytes.len() {
+            let err = Checkpoint::decode(&bytes[..cut]).unwrap_err().to_string();
+            // a prefix either fails the length check, the checksum (the
+            // last 8 bytes of the prefix are not a valid footer), or the
+            // magic — never parses successfully
+            assert!(
+                err.contains("truncated") || err.contains("checksum") || err.contains("magic"),
+                "cut={cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn flipped_bytes_fail_the_checksum() {
+        let ck = &samples()[2];
+        let bytes = ck.encode();
+        for &at in &[0usize, 9, 20, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+            assert!(
+                err.contains("checksum") || err.contains("magic"),
+                "flip at {at}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_version_header_is_rejected_by_number() {
+        let ck = &samples()[0];
+        let mut bytes = ck.encode();
+        // bump the version field (offset 8) and re-stamp the checksum so
+        // only the version check can fire
+        bytes[8] = 99;
+        let n = bytes.len();
+        let mut f = Fnv::new();
+        f.add_bytes(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&f.0.to_le_bytes());
+        let err = Checkpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 99"), "{err}");
+    }
+
+    #[test]
+    fn cross_role_and_cross_protocol_loads_are_rejected() {
+        let ck = &samples()[0]; // spnn-he / holder0 / 0x1111
+        let err = ck.expect("spnn-he", "holder1", 0x1111).unwrap_err().to_string();
+        assert!(err.contains("role mismatch"), "{err}");
+        assert!(err.contains("holder0") && err.contains("holder1"), "{err}");
+        let err = ck.expect("spnn-ss", "holder0", 0x1111).unwrap_err().to_string();
+        assert!(err.contains("protocol mismatch"), "{err}");
+        let err = ck.expect("spnn-he", "holder0", 0xdead).unwrap_err().to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+        ck.expect("spnn-he", "holder0", 0x1111).unwrap();
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_reports_missing_files() {
+        let dir = std::env::temp_dir().join(format!("spnn-ckpt-test-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = fs::remove_dir_all(&dir);
+        let err = load(&dir, "server").unwrap_err().to_string();
+        assert!(err.contains("cannot read checkpoint"), "{err}");
+        let ck = &samples()[1];
+        save(&dir, ck).unwrap();
+        // no tmp file left behind
+        assert!(!path_for(&dir, "server").with_extension("ckpt.tmp").exists());
+        let back = load(&dir, "server").unwrap();
+        assert_eq!(&back, ck);
+        // overwrite is atomic too (rename over the existing file)
+        save(&dir, ck).unwrap();
+        assert_eq!(&load(&dir, "server").unwrap(), ck);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_digest_tracks_training_knobs_only() {
+        let tc = crate::config::TrainConfig::default();
+        let base = config_digest("spnn-he", &tc, 2);
+        assert_eq!(base, config_digest("spnn-he", &tc.clone(), 2));
+        assert_ne!(base, config_digest("spnn-ss", &tc, 2));
+        assert_ne!(base, config_digest("spnn-he", &tc, 3));
+        let mut t2 = tc.clone();
+        t2.seed = 8;
+        assert_ne!(base, config_digest("spnn-he", &t2, 2));
+        let mut t3 = tc.clone();
+        t3.batch = 512;
+        assert_ne!(base, config_digest("spnn-he", &t3, 2));
+        // process-local knobs do not change the digest
+        let mut t4 = tc.clone();
+        t4.exec_threads = 4;
+        t4.pipeline_depth = 3;
+        t4.transport = crate::config::TransportKind::Tcp;
+        t4.checkpoint_dir = Some("/tmp/x".into());
+        t4.warm_start = true;
+        assert_eq!(base, config_digest("spnn-he", &t4, 2));
+    }
+}

@@ -283,6 +283,21 @@ pub struct TrainConfig {
     /// triple, and share matrix at the source
     /// (see [`crate::data::CompressPlan`]). `None` = seed behavior.
     pub compress: Option<CompressCfg>,
+    /// Directory for durable per-role checkpoints (see [`crate::ckpt`]).
+    /// When set, every party writes its **own** parameter blocks + RNG
+    /// cursors to `<dir>/<role>.ckpt` at the end of training (atomic
+    /// tmp+rename), and journaled TCP links spill their unacked tails
+    /// under `<dir>/journal/`. Local to each process — never serialized
+    /// into the session config broadcast (like [`TrainConfig::psk_file`]),
+    /// so no party learns where its peers keep their secrets.
+    pub checkpoint_dir: Option<String>,
+    /// Warm-start mode (`spnn serve --from-checkpoint`): the session runs
+    /// zero training epochs and every role loads its parameter blocks and
+    /// RNG cursors from [`TrainConfig::checkpoint_dir`] instead, then
+    /// serves. Scores are bit-identical to the continuous train→serve
+    /// path. Broadcast in the session config (`warm=1` wire key) so all
+    /// parties agree on the schedule.
+    pub warm_start: bool,
 }
 
 impl Default for TrainConfig {
@@ -302,6 +317,8 @@ impl Default for TrainConfig {
             transport: TransportKind::Netsim,
             psk_file: None,
             compress: None,
+            checkpoint_dir: None,
+            warm_start: false,
         }
     }
 }

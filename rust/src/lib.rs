@@ -43,6 +43,7 @@
 pub mod attack;
 pub mod bench_harness;
 pub mod bignum;
+pub mod ckpt;
 pub mod config;
 pub mod data;
 pub mod error;

@@ -107,6 +107,11 @@ USAGE:
               (write the dot: 0.5) or an absolute column total >= holders;
               every holder projects its private feature block through a
               seeded orthogonal basis before any encryption or sharing
+              [--checkpoint-dir DIR] [--from-checkpoint [DIR]]
+              --checkpoint-dir writes each role's private parameter
+              blocks (plus RNG/nonce cursors) at the end of training;
+              --from-checkpoint warm-starts from those blocks with zero
+              epochs — bit-identical to the run that wrote them
   spnn launch [same training flags as train]
               [--listen HOST:PORT] [--no-spawn] [--psk-file PATH]
               [--chaos ROLE:N]
@@ -118,13 +123,19 @@ USAGE:
               (reconnect drill)
   spnn party  --role <name> --connect HOST:PORT [--bind HOST]
               [--psk-file PATH] [--chaos-kill N]
+              [--checkpoint-dir DIR] [--from-checkpoint [DIR]]
               join a hosted session as one role (e.g. server, dealer,
-              holder0, holder1 — role names come from the protocol)
+              holder0, holder1 — role names come from the protocol);
+              the checkpoint dir holds THIS role's private blocks and
+              its crash-durable relink journal, so a killed party can
+              relaunch and rejoin with exactly-once delivery
   spnn serve  [same training flags as train] [--listen HOST:PORT]
               [--coalesce N] [--serve-depth D] [--serve-requests N]
               [--request-timeout MS] [--max-queue N]
               [--metrics-listen HOST:PORT]
               [--launch [--rendezvous HOST:PORT] [--no-spawn]]
+              [--replicas N] [--fleet ADDR,ADDR,...]
+              [--door-psk-file PATH] [--reply-timeout S]
               --request-timeout fails requests that sat queued longer
               than MS milliseconds (0 = never, the default); --max-queue
               rejects requests beyond N queued per round before any
@@ -135,16 +146,27 @@ USAGE:
               inference requests into crypto-amortized batches the
               trained parties answer; --serve-requests N exits after N
               requests (smoke tests); --launch runs every role as its
-              own OS process (workers join via `spnn party` as usual)
+              own OS process (workers join via `spnn party` as usual);
+              --replicas runs N in-process serve sessions behind one
+              load-balancing door (pair with --from-checkpoint so each
+              warm-starts instead of retraining); --fleet skips training
+              and routes to downstream serve front doors, failing over
+              when a replica dies and answering `replica unavailable`
+              once none are left; --door-psk-file demands PSK client
+              auth at the door (and keys downstream --fleet dials)
   spnn infer  --connect HOST:PORT [--ids 1,2,3 | --count N [--offset K]]
-              [--repeat R] | --local [training flags]
+              [--repeat R] [--psk-file PATH] [--reply-timeout S]
+              | --local [training flags]
               score rows of the held-out table against a running
               `spnn serve` (prints the scores, per-request wall-clock
               latency with a min/mean/max summary, and a bit-exact
               infer_digest); --repeat sends the same request R times
-              (latency sampling); --local trains in this process instead
-              and scores through an in-process serve session (the parity
-              reference the serve smoke test compares against)
+              (latency sampling); --psk-file answers a keyed door's auth
+              challenge; --reply-timeout bounds the wait for scores
+              (default: wait out training); --local trains in this
+              process instead and scores through an in-process serve
+              session (the parity reference the serve smoke test
+              compares against)
   spnn repro  <table1|table2|table3|fig5|fig67|fig8|fig9|all>
               [--scale F] [--quick] [--out FILE]
   spnn attack [--rows N] [--epochs E] [--seed S]
@@ -196,9 +218,25 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
     }
     let rows = flag(flags, "rows", if dataset == "fraud" { 12_000 } else { 3_672 });
     let seed = flag(flags, "seed", 7u64);
+    // --checkpoint-dir DIR: write per-role checkpoints at the end of
+    // training. --from-checkpoint [DIR]: warm-start (zero epochs, load
+    // blocks from DIR, or from --checkpoint-dir when given bare).
+    let warm = flags.contains_key("from-checkpoint");
+    let ckpt_dir = match flags.get("from-checkpoint") {
+        Some(v) if v != "true" => Some(v.clone()),
+        _ => flags.get("checkpoint-dir").cloned(),
+    };
+    if warm && ckpt_dir.is_none() {
+        return Err(err(
+            "--from-checkpoint needs a directory (inline or via --checkpoint-dir)".into(),
+        ));
+    }
     let tc = TrainConfig {
         batch: flag(flags, "batch", 1024),
-        epochs: flag(flags, "epochs", 3),
+        // a warm start replays checkpointed blocks instead of training:
+        // zero epochs through the unchanged coordinator protocol, so all
+        // pre-epoch setup (key broadcast, init sharing) still runs
+        epochs: if warm { 0 } else { flag(flags, "epochs", 3) },
         sgld: flags.contains_key("sgld"),
         seed,
         lr_override: flags.get("lr").and_then(|v| v.parse().ok()),
@@ -225,6 +263,8 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
                 })
             })
             .transpose()?,
+        checkpoint_dir: ckpt_dir,
+        warm_start: warm,
     };
     Ok(SessionSpec {
         protocol: proto.to_string(),
@@ -327,7 +367,13 @@ fn cmd_party(flags: &HashMap<String, String>) -> CliResult<()> {
     if chaos_kill == Some(0) {
         return Err(err("--chaos-kill count must be >= 1 (the kill fires after N frames)".into()));
     }
-    run_party(connect, role, bind, psk.as_ref(), chaos_kill)?;
+    // the checkpoint dir is process-local (it holds THIS role's private
+    // blocks); whether the session warm-starts rides the config broadcast
+    let ckpt_dir = match flags.get("from-checkpoint") {
+        Some(v) if v != "true" => Some(v.clone()),
+        _ => flags.get("checkpoint-dir").cloned(),
+    };
+    run_party(connect, role, bind, psk.as_ref(), chaos_kill, ckpt_dir.as_deref())?;
     Ok(())
 }
 
@@ -346,9 +392,6 @@ fn serve_opts_from_flags(flags: &HashMap<String, String>) -> ServeOpts {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
-    let mut spec = spec_from_flags(flags)?;
-    let opts = serve_opts_from_flags(flags);
-    spec.serve = Some(opts.clone());
     let max_requests = flag(flags, "serve-requests", 0usize);
     let listen = flags
         .get("listen")
@@ -364,15 +407,62 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
         eprintln!("spnn serve: Prometheus metrics endpoint on http://{got}/metrics");
         let _exporter = spnn::obs::prom::spawn_exporter(ml);
     }
+    let door_psk = flags
+        .get("door-psk-file")
+        .map(|p| Psk::from_file(std::path::Path::new(p)))
+        .transpose()?;
+    let reply_timeout = flags
+        .get("reply-timeout")
+        .map(|v| {
+            v.parse::<u64>().map_err(|_| err(format!("bad --reply-timeout seconds {v:?}")))
+        })
+        .transpose()?
+        .map(std::time::Duration::from_secs);
+    if let Some(list) = flags.get("fleet") {
+        // pure router mode: no training in this process — a front door
+        // load-balancing over downstream `spnn serve` replicas, failing
+        // over when one dies
+        let addrs: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+        if addrs.is_empty() {
+            return Err(err("--fleet wants a comma-separated list of serve addresses".into()));
+        }
+        eprintln!(
+            "spnn serve: fleet router on {addr} over {} remote replica(s): {}",
+            addrs.len(),
+            addrs.join(", "),
+        );
+        let mut fleet = serve::fleet::Fleet::new(
+            addrs
+                .into_iter()
+                .map(|a| (a.clone(), serve::fleet::Backend::remote(a)))
+                .collect(),
+        );
+        fleet.connect_timeout =
+            std::time::Duration::from_secs(flag(flags, "connect-timeout", 10u64));
+        fleet.reply_timeout = reply_timeout;
+        fleet.downstream_psk = door_psk.clone();
+        serve::fleet::run_door(listener, fleet, max_requests, door_psk)?;
+        return Ok(());
+    }
+    let mut spec = spec_from_flags(flags)?;
+    let opts = serve_opts_from_flags(flags);
+    spec.serve = Some(opts.clone());
+    let replicas = flag(flags, "replicas", 1usize).max(1);
     eprintln!(
         "spnn serve: training {} on {} ({} rows, {} holders), then serving the \
-         held-out table on {addr} (coalesce {}, depth {}{})",
+         held-out table on {addr} (coalesce {}, depth {}{}{})",
         spec.protocol,
         spec.dataset,
         spec.rows,
         spec.holders,
         opts.coalesce,
         opts.depth,
+        if replicas > 1 { format!(", {replicas} replicas") } else { String::new() },
         if max_requests > 0 {
             format!(", exiting after {max_requests} request(s)")
         } else {
@@ -380,6 +470,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
         },
     );
     let rep = if flags.contains_key("launch") {
+        if replicas > 1 {
+            return Err(err(
+                "--replicas needs in-process mode; for multi-process fleets point a \
+                 `spnn serve --fleet` router at N independent serves instead"
+                    .into(),
+            ));
+        }
         // one OS process per role: host the rendezvous here, front door
         // feeds the coordinator's request queue
         let (tx, rx) = std::sync::mpsc::channel();
@@ -393,25 +490,68 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult<()> {
         };
         let spec2 = spec.clone();
         let host = std::thread::spawn(move || run_serve(&spec2, &lopts, rx));
-        serve::frontdoor::run(listener, tx, max_requests)?;
+        let scorer: serve::frontdoor::Scorer =
+            std::sync::Arc::new(move |rows: &[u32]| serve::request_scores(&tx, rows));
+        serve::frontdoor::serve_clients(listener, scorer, max_requests, door_psk)?;
         host.join().map_err(|_| err("serve host panicked".into()))??
     } else {
         // in-process parties over the selected transport
         let (cfg, train, test) = spec.datasets()?;
-        let trainer = protocols::by_name(&spec.protocol)
-            .ok_or_else(|| err(format!("unknown protocol {:?}", spec.protocol)))?;
-        let handle = serve::serve(
-            trainer,
-            cfg,
-            &spec.tc,
-            spec.link(),
-            &train,
-            &test,
-            spec.holders,
-            &opts,
-        )?;
-        serve::frontdoor::run(listener, handle.sender(), max_requests)?;
-        handle.shutdown()?
+        let mk = || {
+            protocols::by_name(&spec.protocol)
+                .ok_or_else(|| err(format!("unknown protocol {:?}", spec.protocol)))
+        };
+        if replicas > 1 {
+            // N resident sessions behind one load-balancing door. Pair
+            // with --from-checkpoint so each replica warm-starts from the
+            // same blocks instead of retraining; without it the shared
+            // seed still makes every replica bit-identical, just slower.
+            let mut handles = Vec::with_capacity(replicas);
+            for _ in 0..replicas {
+                handles.push(serve::serve(
+                    mk()?,
+                    cfg,
+                    &spec.tc,
+                    spec.link(),
+                    &train,
+                    &test,
+                    spec.holders,
+                    &opts,
+                )?);
+            }
+            let mut fleet = serve::fleet::Fleet::new(
+                handles
+                    .iter()
+                    .enumerate()
+                    .map(|(i, h)| {
+                        (format!("replica-{i}"), serve::fleet::Backend::local(h.sender()))
+                    })
+                    .collect(),
+            );
+            fleet.reply_timeout = reply_timeout;
+            serve::fleet::run_door(listener, fleet, max_requests, door_psk)?;
+            let mut rep = None;
+            for h in handles {
+                rep = Some(h.shutdown()?);
+            }
+            rep.ok_or_else(|| err("no replica produced a report".into()))?
+        } else {
+            let handle = serve::serve(
+                mk()?,
+                cfg,
+                &spec.tc,
+                spec.link(),
+                &train,
+                &test,
+                spec.holders,
+                &opts,
+            )?;
+            let tx = handle.sender();
+            let scorer: serve::frontdoor::Scorer =
+                std::sync::Arc::new(move |rows: &[u32]| serve::request_scores(&tx, rows));
+            serve::frontdoor::serve_clients(listener, scorer, max_requests, door_psk)?;
+            handle.shutdown()?
+        }
     };
     print_report(&rep);
     Ok(())
@@ -479,10 +619,28 @@ fn cmd_infer(flags: &HashMap<String, String>) -> CliResult<()> {
             .get("connect")
             .ok_or_else(|| err("infer needs --connect HOST:PORT (or --local)".into()))?;
         let timeout = std::time::Duration::from_secs(flag(flags, "connect-timeout", 30u64));
+        let psk = flags
+            .get("psk-file")
+            .map(|p| Psk::from_file(std::path::Path::new(p)))
+            .transpose()?;
+        let reply_timeout = flags
+            .get("reply-timeout")
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| err(format!("bad --reply-timeout seconds {v:?}")))
+            })
+            .transpose()?
+            .map(std::time::Duration::from_secs);
         let mut scores = Vec::new();
         for k in 0..repeat {
             let t0 = std::time::Instant::now();
-            scores = serve::frontdoor::infer_once(connect, &rows, timeout)?;
+            scores = serve::frontdoor::infer_once_opts(
+                connect,
+                &rows,
+                timeout,
+                reply_timeout,
+                psk.as_ref(),
+            )?;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             eprintln!("request {k}: {} row(s) in {ms:.2} ms", scores.len());
             lat_ms.push(ms);

@@ -309,6 +309,19 @@ impl SpnnHolderFwd {
         }
     }
 
+    /// Position of the holder's private mask/nonce RNG, for checkpointing
+    /// at the training→serving boundary (see [`crate::ckpt`]).
+    pub fn rng_cursor(&self) -> (u64, u64) {
+        self.rng.cursor()
+    }
+
+    /// Restore the mask/nonce RNG to a checkpointed cursor so a
+    /// warm-started replica draws the same serving-phase randomness the
+    /// continuous session would have.
+    pub fn rng_seek(&mut self, cursor: (u64, u64)) -> Result<()> {
+        self.rng.seek(cursor)
+    }
+
     /// Algorithm 2 holder. A and B (j 0/1) carry the Beaver engine; A also
     /// runs the opportunistic dealer feed.
     #[allow(clippy::too_many_arguments)]
@@ -1021,6 +1034,19 @@ impl MlpMpcFwd {
         self.train = train;
     }
 
+    /// Position of the party's private mask RNG, for checkpointing at the
+    /// training→serving boundary (see [`crate::ckpt`]).
+    pub fn rng_cursor(&self) -> (u64, u64) {
+        self.rng.cursor()
+    }
+
+    /// Restore the mask RNG to a checkpointed cursor so a warm-started
+    /// replica draws the same serving-phase masks the continuous session
+    /// would have.
+    pub fn rng_seek(&mut self, cursor: (u64, u64)) -> Result<()> {
+        self.rng.seek(cursor)
+    }
+
     fn peer(&self) -> usize {
         if self.role == 0 {
             self.b_id
@@ -1335,6 +1361,17 @@ impl MlpExtraFwd {
     /// `rng` is the holder's mask RNG (seeded per the deployment).
     pub fn new(a_id: usize, b_id: usize, src: FeatureSource, rng: ChaChaRng) -> Self {
         MlpExtraFwd { src, a_id, b_id, rng, staged: VecDeque::new() }
+    }
+
+    /// Position of the holder's private mask RNG, for checkpointing at the
+    /// training→serving boundary (see [`crate::ckpt`]).
+    pub fn rng_cursor(&self) -> (u64, u64) {
+        self.rng.cursor()
+    }
+
+    /// Restore the mask RNG to a checkpointed cursor (warm start).
+    pub fn rng_seek(&mut self, cursor: (u64, u64)) -> Result<()> {
+        self.rng.seek(cursor)
     }
 
     /// Encode the block and pre-draw the mask (schedule order).

@@ -37,6 +37,7 @@
 use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport};
 use super::fwd::{enc_const, FeatureSource, LayerShare, MlpExtraFwd, MlpMpcFwd, MpcActs};
 use super::Trainer;
+use crate::ckpt;
 use crate::config::{Act, ModelConfig, TrainConfig};
 use crate::data::{auc, CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::fixed;
@@ -149,12 +150,27 @@ impl SecureMl {
         }
         {
             let seed = tc.seed ^ 0x5ec;
+            let tc = tc.clone();
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 parties::await_start(p)?;
+                // warm start: resume the seed-expansion stream from the
+                // cursor checkpointed at the training→serving boundary
+                let resume = if tc.warm_start {
+                    let ck = ckpt::load_verified(&tc, "secureml", "dealer", n_holders)?;
+                    Some(ck.cursor("rng")?)
+                } else {
+                    None
+                };
                 // under serving, A keeps the dealer alive through the serve
                 // phase (dealer::idle relaxes its timeout) and stops it on
                 // shutdown
-                dealer::serve(p, a_id, b_id, seed)?;
+                let cursor = dealer::serve_from(p, a_id, b_id, seed, resume)?;
+                if let Some(dir) = tc.checkpoint_dir.as_deref() {
+                    let digest = ckpt::config_digest("secureml", &tc, n_holders);
+                    let mut ck = ckpt::Checkpoint::new("secureml", "dealer", digest);
+                    ck.push_cursor("rng", cursor);
+                    ckpt::save(dir, &ck)?;
+                }
                 parties::await_stop(p)?;
                 Ok(PartyOut::default())
             }));
@@ -188,6 +204,7 @@ impl SecureMl {
             let tf = cplan.as_ref().map(|p| p.tf(j));
             let tc = tc.clone();
             let me = 2 + j; // ids 4..
+            let role_name = format!("holder{j}");
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 let epochs = parties::await_start(p)?;
@@ -202,6 +219,17 @@ impl SecureMl {
                     })?;
                 }
                 parties::await_stop(p)?;
+                // checkpoint boundary: an extra holder's only serving
+                // state is its mask-RNG position
+                if tc.warm_start {
+                    let ck = ckpt::load_verified(&tc, "secureml", &role_name, n_holders)?;
+                    fwd.rng_seek(ck.cursor("rng")?)?;
+                } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+                    let digest = ckpt::config_digest("secureml", &tc, n_holders);
+                    let mut ck = ckpt::Checkpoint::new("secureml", &role_name, digest);
+                    ck.push_cursor("rng", fwd.rng_cursor());
+                    ckpt::save(dir, &ck)?;
+                }
                 if let Some(sr) = srv {
                     fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj)
                         .with_transform(tf);
@@ -550,6 +578,32 @@ fn mpc_party(
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
     parties::await_stop(p)?;
+
+    // ---- checkpoint boundary (end of training): each compute party
+    // persists / restores only its OWN layer shares (u64 ring words — the
+    // plaintext model never exists on disk) plus the mask-RNG cursor ----
+    let role_name = format!("party{role}");
+    if tc.warm_start {
+        let ck = ckpt::load_verified(tc, "secureml", &role_name, n_holders)?;
+        for (l, layer) in fwd.layers.iter_mut().enumerate() {
+            ck.copy_u64(&format!("w{l}"), &mut layer.w.data)?;
+            if let Some(bv) = layer.b.as_mut() {
+                ck.copy_u64(&format!("b{l}"), bv)?;
+            }
+        }
+        fwd.rng_seek(ck.cursor("rng")?)?;
+    } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+        let digest = ckpt::config_digest("secureml", tc, n_holders);
+        let mut ck = ckpt::Checkpoint::new("secureml", &role_name, digest);
+        for (l, layer) in fwd.layers.iter().enumerate() {
+            ck.push_u64(&format!("w{l}"), layer.w.data.clone());
+            if let Some(bv) = layer.b.as_ref() {
+                ck.push_u64(&format!("b{l}"), bv.clone());
+            }
+        }
+        ck.push_cursor("rng", fwd.rng_cursor());
+        ckpt::save(dir, &ck)?;
+    }
 
     // ---- serving: forward-only MPC over the held-out table; the output
     // probability shares are opened to A, which returns the scores ----

@@ -25,6 +25,7 @@
 use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
 use super::fwd::{FeatureSource, SplitHolderFwd, SplitServerFwd};
 use super::Trainer;
+use crate::ckpt;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{auc, CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::netsim::Payload;
@@ -120,7 +121,7 @@ impl SplitNn {
             let cfg = cfg.clone();
             let srv = role_serve;
             fns.push(Box::new(move |p: &mut dyn Channel| {
-                holder_role(p, &cfg, &tc, &plan, j, xj, dj, tf, enc, srv, serve_xj)
+                holder_role(p, &cfg, &tc, &plan, j, n_holders, xj, dj, tf, enc, srv, serve_xj)
             }));
         }
         Ok(Deployment { names, fns })
@@ -347,6 +348,26 @@ fn server_role(
     }
     parties::await_stop(p)?;
 
+    // ---- checkpoint boundary (end of training): SplitNN serving is
+    // RNG-free, so the server's durable state is just its stack + head ----
+    if tc.warm_start {
+        let ck = ckpt::load_verified(tc, "splitnn", "server", n_holders)?;
+        for (i, m) in fwd.params.server.iter_mut().enumerate() {
+            ck.copy_f64(&format!("server{i}"), &mut m.data)?;
+        }
+        ck.copy_f64("wy", &mut fwd.params.wy.data)?;
+        ck.copy_f64("by", &mut fwd.params.by.data)?;
+    } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+        let digest = ckpt::config_digest("splitnn", tc, n_holders);
+        let mut ck = ckpt::Checkpoint::new("splitnn", "server", digest);
+        for (i, m) in fwd.params.server.iter().enumerate() {
+            ck.push_f64(&format!("server{i}"), m.data.clone());
+        }
+        ck.push_f64("wy", fwd.params.wy.data.clone());
+        ck.push_f64("by", fwd.params.by.data.clone());
+        ckpt::save(dir, &ck)?;
+    }
+
     // ---- serving: the server is the scoring role (owns the head) ----
     if let Some(sr) = srv {
         serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
@@ -377,6 +398,7 @@ fn holder_role(
     tc: &TrainConfig,
     plan: &[(usize, usize)],
     j: usize,
+    n_holders: usize,
     xj: Vec<f32>,
     dj: usize,
     tf: Option<FeatureTransform>,
@@ -415,6 +437,19 @@ fn holder_role(
         })?;
     }
     parties::await_stop(p)?;
+
+    // ---- checkpoint boundary: the holder's only durable state is its
+    // private bottom encoder (no serving RNG) ----
+    let role_name = format!("holder{j}");
+    if tc.warm_start {
+        let ck = ckpt::load_verified(tc, "splitnn", &role_name, n_holders)?;
+        ck.copy_f64("enc", &mut fwd.enc.data)?;
+    } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+        let digest = ckpt::config_digest("splitnn", tc, n_holders);
+        let mut ck = ckpt::Checkpoint::new("splitnn", &role_name, digest);
+        ck.push_f64("enc", fwd.enc.data.clone());
+        ckpt::save(dir, &ck)?;
+    }
 
     // ---- serving: score requests against the held-out table ----
     if let Some(sr) = srv {

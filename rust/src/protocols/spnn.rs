@@ -51,6 +51,7 @@ use super::common::{batch_plan, evaluate, run_pipeline, ModelParams, Step, Train
 use super::fwd::{FeatureSource, SpnnHeadFwd, SpnnHolderFwd, SpnnLabelFwd, SpnnServerFwd};
 use super::Trainer;
 use crate::bignum::BigUint;
+use crate::ckpt;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::data::{CompressPlan, Dataset, FeatureTransform, VerticalSplit};
 use crate::netsim::Payload;
@@ -142,6 +143,7 @@ impl Spnn {
         {
             let he = self.he;
             let seed = tc.seed ^ 0xdea1;
+            let tc = tc.clone();
             fns.push(Box::new(move |p: &mut dyn Channel| {
                 if he {
                     // HE runs have no preprocessing; wait for the stop order
@@ -149,10 +151,25 @@ impl Spnn {
                     parties::await_stop(p)?;
                 } else {
                     parties::await_start(p)?;
+                    // warm start: resume the seed-expansion stream from the
+                    // cursor checkpointed at the training→serving boundary
+                    let resume = if tc.warm_start {
+                        let ck = ckpt::load_verified(&tc, "spnn-ss", "dealer", n_holders)?;
+                        Some(ck.cursor("rng")?)
+                    } else {
+                        None
+                    };
                     // under serving, A keeps the dealer alive through the
                     // serve phase (dealer::idle relaxes its timeout) and
                     // stops it on shutdown
-                    dealer::serve(p, ids::holder(0), ids::holder(1), seed)?;
+                    let cursor =
+                        dealer::serve_from(p, ids::holder(0), ids::holder(1), seed, resume)?;
+                    if let Some(dir) = tc.checkpoint_dir.as_deref() {
+                        let digest = ckpt::config_digest("spnn-ss", &tc, n_holders);
+                        let mut ck = ckpt::Checkpoint::new("spnn-ss", "dealer", digest);
+                        ck.push_cursor("rng", cursor);
+                        ckpt::save(dir, &ck)?;
+                    }
                     parties::await_stop(p)?;
                 }
                 Ok(PartyOut::default())
@@ -414,6 +431,23 @@ fn server_role(
     }
     parties::await_stop(p)?;
 
+    // ---- checkpoint boundary (end of training): the server persists /
+    // restores only its own hidden stack ----
+    let proto = if he { "spnn-he" } else { "spnn-ss" };
+    if tc.warm_start {
+        let ck = ckpt::load_verified(tc, proto, "server", n_holders)?;
+        for (i, m) in fwd.params.server.iter_mut().enumerate() {
+            ck.copy_f64(&format!("server{i}"), &mut m.data)?;
+        }
+    } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+        let digest = ckpt::config_digest(proto, tc, n_holders);
+        let mut ck = ckpt::Checkpoint::new(proto, "server", digest);
+        for (i, m) in fwd.params.server.iter().enumerate() {
+            ck.push_f64(&format!("server{i}"), m.data.clone());
+        }
+        ckpt::save(dir, &ck)?;
+    }
+
     // ---- serving: stay resident and answer inference request batches ----
     if let Some(sr) = srv {
         serve::party_serve_loop(p, ids::COORDINATOR, sr.depth, &mut fwd)?;
@@ -563,6 +597,32 @@ fn holder_role(
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
     parties::await_stop(p)?;
+
+    // ---- checkpoint boundary (end of training): this holder's theta
+    // rows, A's label layer, and the mask/nonce RNG cursor that makes a
+    // warm-started serve phase draw the exact randomness the continuous
+    // session would ----
+    let proto = if he { "spnn-he" } else { "spnn-ss" };
+    let role_name = format!("holder{j}");
+    if tc.warm_start {
+        let ck = ckpt::load_verified(tc, proto, &role_name, n_holders)?;
+        ck.copy_f64("theta", &mut fwd.theta.data)?;
+        fwd.rng_seek(ck.cursor("rng")?)?;
+        if let Some(head) = head.as_mut() {
+            ck.copy_f64("wy", &mut head.wy.data)?;
+            ck.copy_f64("by", &mut head.by.data)?;
+        }
+    } else if let Some(dir) = tc.checkpoint_dir.as_deref() {
+        let digest = ckpt::config_digest(proto, tc, n_holders);
+        let mut ck = ckpt::Checkpoint::new(proto, &role_name, digest);
+        ck.push_f64("theta", fwd.theta.data.clone());
+        ck.push_cursor("rng", fwd.rng_cursor());
+        if let Some(head) = head.as_ref() {
+            ck.push_f64("wy", head.wy.data.clone());
+            ck.push_f64("by", head.by.data.clone());
+        }
+        ckpt::save(dir, &ck)?;
+    }
 
     // ---- serving: swap to the held-out table and stay resident ----
     if let Some(sr) = srv {

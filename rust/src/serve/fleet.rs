@@ -1,0 +1,361 @@
+//! Replicated serving **fleet router**: one front door over N serve
+//! replicas.
+//!
+//! Each replica is a [`Backend`] — either a **local** in-process serve
+//! session (the coordinator's request queue, typically warm-started from
+//! a shared checkpoint dir so N replicas cost one training run) or a
+//! **remote** downstream `spnn serve` front door reached over TCP. The
+//! [`Fleet`] owns one slot per replica and routes each request:
+//!
+//! * **queue-depth-aware round robin** — candidates are ordered by their
+//!   live in-flight count, with a rotating offset breaking ties, so an
+//!   idle replica is preferred over a busy one but equal replicas share
+//!   the load evenly;
+//! * **sticky failover** — a replica whose queue is gone (process died,
+//!   handle dropped) or whose socket dies mid-request is marked dead and
+//!   skipped from then on; the request retries on a sibling. Application
+//!   errors (row out of range, queue overflow) do **not** fail over: the
+//!   replica answered, the answer is a rejection.
+//! * **prompt terminal error** — when every replica is dead the client
+//!   gets `replica unavailable: ...` immediately instead of a hang.
+//!
+//! The router is itself just a [`Scorer`], so the shared
+//! [`frontdoor`](super::frontdoor) accept/quota/auth machinery serves it
+//! unchanged via [`run_door`].
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::frontdoor::{self, Scorer};
+use super::Request;
+use crate::obs;
+use crate::transport::auth::Psk;
+use crate::{Error, Result};
+
+/// Where a replica's requests go.
+pub enum Backend {
+    /// An in-process serve session: the coordinator's request queue.
+    /// (Wrapped in a `Mutex` so the fleet is `Sync` without leaning on
+    /// `mpsc::Sender`'s `Sync`-ness; the lock is held only to clone.)
+    Local(Mutex<mpsc::Sender<Request>>),
+    /// A downstream `spnn serve` front door, dialed per request.
+    Remote(String),
+}
+
+impl Backend {
+    /// Wrap an in-process serve session's request queue.
+    pub fn local(tx: mpsc::Sender<Request>) -> Backend {
+        Backend::Local(Mutex::new(tx))
+    }
+    /// Point at a downstream front door by address.
+    pub fn remote(addr: impl Into<String>) -> Backend {
+        Backend::Remote(addr.into())
+    }
+}
+
+/// One replica: its backend plus the router's live view of it.
+struct Slot {
+    name: String,
+    backend: Backend,
+    /// Requests currently dispatched to this replica (the load signal).
+    inflight: AtomicUsize,
+    /// Sticky: once a replica's transport dies it stays out of rotation.
+    dead: AtomicBool,
+}
+
+/// How one dispatch attempt ended, seen from the router.
+enum Dispatch {
+    /// The replica answered — scores or an application-level rejection.
+    /// Either way the answer is final: no failover.
+    Answered(Result<Vec<f32>>),
+    /// The replica's transport died before an answer; retry a sibling.
+    Dead(Error),
+}
+
+/// The router: a set of replica slots plus the routing state.
+pub struct Fleet {
+    slots: Vec<Slot>,
+    /// Rotating tie-break offset for the round robin.
+    rr: AtomicUsize,
+    /// Per-request connect budget for [`Backend::Remote`] dials.
+    pub connect_timeout: Duration,
+    /// How long to wait for a replica's answer before declaring it dead.
+    /// `None` waits indefinitely — right for a fleet that is still
+    /// training, wrong for one that should already be warm.
+    pub reply_timeout: Option<Duration>,
+    /// PSK presented to keyed downstream doors ([`Backend::Remote`]).
+    pub downstream_psk: Option<Psk>,
+}
+
+impl Fleet {
+    /// Build a fleet over named backends. Names only label log lines and
+    /// errors (`replica-0`, `10.0.0.7:7450`, ...).
+    pub fn new(backends: Vec<(String, Backend)>) -> Fleet {
+        let slots = backends
+            .into_iter()
+            .map(|(name, backend)| Slot {
+                name,
+                backend,
+                inflight: AtomicUsize::new(0),
+                dead: AtomicBool::new(false),
+            })
+            .collect();
+        Fleet {
+            slots,
+            rr: AtomicUsize::new(0),
+            connect_timeout: Duration::from_secs(10),
+            reply_timeout: None,
+            downstream_psk: None,
+        }
+    }
+
+    /// How many replicas are still in rotation.
+    pub fn alive(&self) -> usize {
+        self.slots.iter().filter(|s| !s.dead.load(Ordering::SeqCst)).count()
+    }
+
+    /// Route one request: try replicas in load order, failing over past
+    /// dead ones, until one answers or none are left.
+    pub fn score(&self, rows: &[u32]) -> Result<Vec<f32>> {
+        let n = self.slots.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n.max(1);
+        let mut order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
+        // stable sort: equal in-flight counts keep the rotated order, so
+        // an idle fleet degenerates to plain round robin
+        order.sort_by_key(|&i| self.slots[i].inflight.load(Ordering::Relaxed));
+        let mut last_err: Option<Error> = None;
+        for i in order {
+            let slot = &self.slots[i];
+            if slot.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            slot.inflight.fetch_add(1, Ordering::SeqCst);
+            let outcome = self.dispatch(slot, rows);
+            slot.inflight.fetch_sub(1, Ordering::SeqCst);
+            match outcome {
+                Dispatch::Answered(reply) => return reply,
+                Dispatch::Dead(e) => {
+                    slot.dead.store(true, Ordering::SeqCst);
+                    obs::counter_add("fleet_failover_total", 1);
+                    obs::gauge_set("fleet_replicas_alive", self.alive() as f64);
+                    eprintln!(
+                        "spnn fleet: replica {} is down ({e}); failing over \
+                         ({} of {n} replicas alive)",
+                        slot.name,
+                        self.alive(),
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        // the satellite fix: a dead or draining mesh used to hang the
+        // client until the 7-day idle timeout — now it is told at once
+        Err(Error::Protocol(format!(
+            "replica unavailable: all {n} serve replica(s) are down or draining{}",
+            match last_err {
+                Some(e) => format!(" (last error: {e})"),
+                None => String::new(),
+            }
+        )))
+    }
+
+    fn dispatch(&self, slot: &Slot, rows: &[u32]) -> Dispatch {
+        match &slot.backend {
+            Backend::Local(tx) => {
+                let tx = tx.lock().expect("fleet sender lock").clone();
+                let (rtx, rrx) = mpsc::channel();
+                let req =
+                    Request { rows: rows.to_vec(), reply: rtx, enqueued: Instant::now() };
+                if tx.send(req).is_err() {
+                    return Dispatch::Dead(Error::Net(
+                        "serve session is gone (parties exited)".into(),
+                    ));
+                }
+                let got = match self.reply_timeout {
+                    Some(t) => rrx.recv_timeout(t).map_err(|e| match e {
+                        mpsc::RecvTimeoutError::Timeout => Error::Net(format!(
+                            "no reply within {:.1}s (replica wedged?)",
+                            t.as_secs_f64()
+                        )),
+                        mpsc::RecvTimeoutError::Disconnected => Error::Net(
+                            "serve session ended before replying".into(),
+                        ),
+                    }),
+                    None => rrx.recv().map_err(|_| {
+                        Error::Net("serve session ended before replying".into())
+                    }),
+                };
+                match got {
+                    Ok(reply) => Dispatch::Answered(reply),
+                    Err(e) => Dispatch::Dead(e),
+                }
+            }
+            Backend::Remote(addr) => {
+                let r = frontdoor::infer_once_opts(
+                    addr,
+                    rows,
+                    self.connect_timeout,
+                    self.reply_timeout,
+                    self.downstream_psk.as_ref(),
+                );
+                match r {
+                    // transport-level death (connect refused, closed
+                    // before replying, reply timeout) → failover
+                    Err(e @ Error::Net(_)) => Dispatch::Dead(e),
+                    // scores or an application rejection → final
+                    other => Dispatch::Answered(other),
+                }
+            }
+        }
+    }
+
+    /// Wrap the fleet as a [`Scorer`] for the shared front door.
+    pub fn into_scorer(self) -> Scorer {
+        let fleet = Arc::new(self);
+        Arc::new(move |rows: &[u32]| fleet.score(rows))
+    }
+}
+
+/// Run the shared front door with this fleet as the scorer. `psk` keys
+/// the door itself (client auth); the fleet's own `downstream_psk` keys
+/// its dials to remote replicas.
+pub fn run_door(
+    listener: std::net::TcpListener,
+    fleet: Fleet,
+    max_requests: usize,
+    psk: Option<Psk>,
+) -> Result<()> {
+    obs::gauge_set("fleet_replicas_alive", fleet.alive() as f64);
+    frontdoor::serve_clients(listener, fleet.into_scorer(), max_requests, psk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A stub replica: answers `row / 100` until told to die, then drops
+    /// its receiver (exactly what a crashed serve session looks like).
+    fn stub_replica(die_after: usize) -> (mpsc::Sender<Request>, std::thread::JoinHandle<u64>) {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let h = std::thread::spawn(move || {
+            let mut answered = 0u64;
+            while let Ok(req) = rx.recv() {
+                if die_after > 0 && answered as usize >= die_after {
+                    break; // rx drops: session gone
+                }
+                let reply = if req.rows.contains(&99) {
+                    Err(Error::Config("row 99 out of range".into()))
+                } else {
+                    Ok(req.rows.iter().map(|&r| r as f32 / 100.0).collect())
+                };
+                let _ = req.reply.send(reply);
+                answered += 1;
+            }
+            answered
+        });
+        (tx, h)
+    }
+
+    /// Load-aware round robin over healthy replicas: both replicas see
+    /// traffic, and application errors come back without failover.
+    #[test]
+    fn fleet_balances_and_returns_app_errors() {
+        let (tx0, h0) = stub_replica(0);
+        let (tx1, h1) = stub_replica(0);
+        let fleet = Fleet::new(vec![
+            ("r0".into(), Backend::local(tx0)),
+            ("r1".into(), Backend::local(tx1)),
+        ]);
+        for k in 0..10u32 {
+            assert_eq!(fleet.score(&[k]).unwrap(), vec![k as f32 / 100.0]);
+        }
+        // an app rejection is NOT a dead replica: it propagates, and both
+        // replicas stay in rotation
+        let err = fleet.score(&[99]).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        assert_eq!(fleet.alive(), 2);
+        drop(fleet);
+        // both stubs answered: the round robin actually spread the load
+        let (n0, n1) = (h0.join().unwrap(), h1.join().unwrap());
+        assert_eq!(n0 + n1, 11);
+        assert!(n0 >= 2 && n1 >= 2, "unbalanced: {n0} vs {n1}");
+    }
+
+    /// One replica dies mid-traffic: the request that hits it fails over
+    /// to the sibling transparently, and the dead slot is sticky.
+    #[test]
+    fn fleet_fails_over_when_a_replica_dies() {
+        let (tx0, _h0) = stub_replica(2); // dies after 2 answers
+        let (tx1, h1) = stub_replica(0);
+        let fleet = Fleet::new(vec![
+            ("r0".into(), Backend::local(tx0)),
+            ("r1".into(), Backend::local(tx1)),
+        ]);
+        for k in 0..12u32 {
+            assert_eq!(fleet.score(&[k]).unwrap(), vec![k as f32 / 100.0]);
+        }
+        assert_eq!(fleet.alive(), 1, "dead replica must leave the rotation");
+        drop(fleet);
+        assert!(h1.join().unwrap() >= 10, "survivor must absorb the load");
+    }
+
+    /// The regression the fleet exists to fix: a client of a fully dead
+    /// mesh must get a prompt "replica unavailable" error, not a hang
+    /// until the 7-day idle timeout.
+    #[test]
+    fn dead_fleet_reports_replica_unavailable_promptly() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(rx); // the serve session is gone before the first request
+        let fleet = Fleet::new(vec![("r0".into(), Backend::local(tx))]);
+        let t0 = Instant::now();
+        let err = fleet.score(&[1, 2, 3]).unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "dead-mesh error must be prompt, took {:?}",
+            t0.elapsed()
+        );
+        let msg = format!("{err}");
+        assert!(msg.contains("replica unavailable"), "{msg}");
+        assert!(msg.contains("1 serve replica"), "{msg}");
+        // and it is terminal for every later request too
+        let err = fleet.score(&[4]).unwrap_err();
+        assert!(format!("{err}").contains("replica unavailable"), "{err}");
+    }
+
+    /// Remote backends through real sockets: the fleet dials downstream
+    /// doors, fails over past an address nobody listens on, and the
+    /// full door-over-fleet stack round-trips for a TCP client.
+    #[test]
+    fn fleet_routes_remote_backends_and_serves_a_door() {
+        use std::net::TcpListener;
+        // downstream replica: a real (stub-backed) front door
+        let down = TcpListener::bind("127.0.0.1:0").unwrap();
+        let down_addr = down.local_addr().unwrap().to_string();
+        let (tx, h) = stub_replica(0);
+        let down_door = std::thread::spawn(move || frontdoor::run(down, tx, 4));
+        // a second "replica" on a port nobody listens on: dead on arrival
+        let vacant = TcpListener::bind("127.0.0.1:0").unwrap();
+        let vacant_addr = vacant.local_addr().unwrap().to_string();
+        drop(vacant);
+        let mut fleet = Fleet::new(vec![
+            ("ghost".into(), Backend::remote(&vacant_addr)),
+            ("live".into(), Backend::remote(&down_addr)),
+        ]);
+        fleet.connect_timeout = Duration::from_millis(300);
+        // front door over the fleet, quota 3
+        let up = TcpListener::bind("127.0.0.1:0").unwrap();
+        let up_addr = up.local_addr().unwrap().to_string();
+        let up_door = std::thread::spawn(move || run_door(up, fleet, 3, None));
+        let t = Duration::from_secs(10);
+        for k in 1..=3u32 {
+            let got = frontdoor::infer_once(&up_addr, &[k], t).unwrap();
+            assert_eq!(got, vec![k as f32 / 100.0]);
+        }
+        up_door.join().unwrap().unwrap();
+        // drain the downstream door's quota so it exits too
+        let _ = frontdoor::infer_once(&down_addr, &[1], t);
+        down_door.join().unwrap().unwrap();
+        drop(h);
+    }
+}

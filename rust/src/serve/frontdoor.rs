@@ -9,9 +9,19 @@
 //! `Control("spnn-err ...")` frame naming the rejection. Connections
 //! stream: a client may keep the socket open and send many requests.
 //!
+//! With a pre-shared key the door additionally challenges every client
+//! before the first request: it sends `Control("spnn-serve-auth v1
+//! nonce=<hex>")` and expects `Control("spnn-serve-auth-ok proof=<hex>")`
+//! back, where the proof is the PSK-keyed HMAC transcript of
+//! [`Psk::party_proof`] under the `"infer-client"` role label. Wrong or
+//! missing proofs are rejected before any score is computed.
+//!
 //! Each accepted connection gets its own thread feeding the shared
-//! [`Request`] queue, so concurrent clients **coalesce** into shared
-//! crypto batches inside [`coordinator_serve`](super::coordinator_serve).
+//! scorer. The production scorer pushes [`Request`]s into the shared
+//! queue, so concurrent clients **coalesce** into shared crypto batches
+//! inside [`coordinator_serve`](super::coordinator_serve); the fleet
+//! router ([`fleet`](super::fleet)) plugs in a scorer that load-balances
+//! across replicas instead.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use super::{request_scores, Request};
 use crate::netsim::{Msg, Payload, Phase};
+use crate::transport::auth::{self, Psk};
 use crate::transport::wire;
 use crate::{Error, Result};
 
@@ -27,6 +38,15 @@ use crate::{Error, Result};
 /// front door is draining toward a request quota (keeps the final join
 /// bounded).
 const CLIENT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// How long the door waits for a client's auth proof, and how long a
+/// keyed client waits for the door's challenge. Bounds the damage an
+/// unauthenticated half-open connection can do to either side.
+const AUTH_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Anything that turns row ids into scores: the single-session queue
+/// ([`request_scores`]), or a fleet router fanning out over replicas.
+pub type Scorer = Arc<dyn Fn(&[u32]) -> Result<Vec<f32>> + Send + Sync>;
 
 /// Run the front door on an already-bound listener, feeding `tx`.
 ///
@@ -39,6 +59,24 @@ pub fn run(
     tx: mpsc::Sender<Request>,
     max_requests: usize,
 ) -> Result<()> {
+    let scorer: Scorer = Arc::new(move |rows: &[u32]| request_scores(&tx, rows));
+    serve_clients(listener, scorer, max_requests, None)
+}
+
+/// The generalized front door: accept clients on `listener`, answer each
+/// request through `scorer`, optionally demanding PSK client auth first.
+///
+/// [`run`] is this with the single-session queue scorer; the fleet router
+/// calls it with a load-balancing scorer. The scorer (and whatever queue
+/// senders it captured) is dropped before returning, preserving the
+/// drop-to-shutdown semantics of the original single-queue door.
+pub fn serve_clients(
+    listener: TcpListener,
+    scorer: Scorer,
+    max_requests: usize,
+    psk: Option<Psk>,
+) -> Result<()> {
+    let psk = psk.map(Arc::new);
     let served = Arc::new(AtomicUsize::new(0));
     let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
     listener
@@ -54,11 +92,12 @@ pub fn run(
         clients.retain(|c| !c.is_finished());
         match listener.accept() {
             Ok((stream, addr)) => {
-                let tx = tx.clone();
+                let scorer = scorer.clone();
                 let served = served.clone();
+                let psk = psk.clone();
                 eprintln!("spnn serve: client {addr} connected");
                 clients.push(std::thread::spawn(move || {
-                    if let Err(e) = client_loop(stream, tx, served, max_requests) {
+                    if let Err(e) = client_loop(stream, scorer, served, max_requests, psk) {
                         eprintln!("spnn serve: client {addr}: {e}");
                     }
                 }));
@@ -69,32 +108,86 @@ pub fn run(
             Err(e) => return Err(Error::Net(format!("front door accept: {e}"))),
         }
     }
-    // drop our sender before joining so no request can outlive the quota,
-    // then wait for the per-client threads (bounded by their idle timeout)
-    drop(tx);
+    // drop our scorer before joining so no queue sender it captured can
+    // outlive the quota, then wait for the per-client threads (bounded by
+    // their idle timeout)
+    drop(scorer);
     for c in clients {
         let _ = c.join();
     }
     Ok(())
 }
 
+/// Challenge one freshly-accepted client and verify its proof. Leaves the
+/// stream's read timeout set; the caller restores the idle policy.
+fn challenge_client(stream: &mut TcpStream, psk: &Psk) -> Result<()> {
+    let nonce = auth::fresh_nonce();
+    wire::write_msg(
+        stream,
+        &Msg {
+            from: 0,
+            tag: 0,
+            payload: Payload::Control(format!(
+                "spnn-serve-auth v1 nonce={}",
+                auth::to_hex(&nonce)
+            )),
+            depart: 0.0,
+            phase: Phase::Online,
+        },
+    )
+    .map_err(|e| Error::Net(format!("auth challenge send: {e}")))?;
+    stream
+        .set_read_timeout(Some(AUTH_TIMEOUT))
+        .map_err(|e| Error::Net(format!("auth read timeout: {e}")))?;
+    let ok = match wire::read_msg(stream) {
+        Ok(Some(Msg { payload: Payload::Control(c), .. })) => c
+            .strip_prefix("spnn-serve-auth-ok proof=")
+            .map(|p| psk.verify_party(p.trim(), &nonce, b"", "infer-client"))
+            .unwrap_or(false),
+        _ => false, // wrong frame kind, timeout, or disconnect
+    };
+    if !ok {
+        // name the rejection for honest-but-misconfigured clients before
+        // hanging up (an attacker learns nothing: the nonce is spent)
+        let _ = wire::write_msg(
+            stream,
+            &Msg {
+                from: 0,
+                tag: 0,
+                payload: Payload::Control(
+                    "spnn-err client authentication failed (wrong or missing pre-shared key)"
+                        .into(),
+                ),
+                depart: 0.0,
+                phase: Phase::Online,
+            },
+        );
+        return Err(Error::Protocol("client failed PSK authentication".into()));
+    }
+    Ok(())
+}
+
 fn client_loop(
     mut stream: TcpStream,
-    tx: mpsc::Sender<Request>,
+    scorer: Scorer,
     served: Arc<AtomicUsize>,
     max_requests: usize,
+    psk: Option<Arc<Psk>>,
 ) -> Result<()> {
     // the listener polls nonblocking; the accepted stream must block
     stream
         .set_nonblocking(false)
         .map_err(|e| Error::Net(format!("client unset nonblocking: {e}")))?;
     stream.set_nodelay(true).ok();
-    if max_requests > 0 {
-        // bound the final join: an idle streaming client is disconnected
-        stream
-            .set_read_timeout(Some(CLIENT_IDLE_TIMEOUT))
-            .map_err(|e| Error::Net(format!("client read timeout: {e}")))?;
+    if let Some(psk) = &psk {
+        challenge_client(&mut stream, psk)?;
     }
+    // bound the final join when draining toward a quota: an idle
+    // streaming client is disconnected (also undoes the auth timeout)
+    let idle = if max_requests > 0 { Some(CLIENT_IDLE_TIMEOUT) } else { None };
+    stream
+        .set_read_timeout(idle)
+        .map_err(|e| Error::Net(format!("client read timeout: {e}")))?;
     loop {
         let Some(msg) = wire::read_msg(&mut stream)? else {
             return Ok(()); // clean disconnect
@@ -111,7 +204,7 @@ fn client_loop(
         } else {
             0
         };
-        let reply = match request_scores(&tx, &rows) {
+        let reply = match scorer(&rows) {
             Ok(scores) => Payload::InferResp(scores),
             Err(e) => Payload::Control(format!("spnn-err {e}")),
         };
@@ -131,6 +224,21 @@ fn client_loop(
 /// block until the scores arrive (the first request of a session waits for
 /// training to finish).
 pub fn infer_once(connect: &str, rows: &[u32], connect_timeout: Duration) -> Result<Vec<f32>> {
+    infer_once_opts(connect, rows, connect_timeout, None, None)
+}
+
+/// [`infer_once`] with the full knob set: an optional **reply timeout**
+/// (how long to wait for the scores once connected — `None` waits
+/// indefinitely, which the first request of a fresh session needs while
+/// training finishes) and an optional **PSK** answering the door's auth
+/// challenge.
+pub fn infer_once_opts(
+    connect: &str,
+    rows: &[u32],
+    connect_timeout: Duration,
+    reply_timeout: Option<Duration>,
+    psk: Option<&Psk>,
+) -> Result<Vec<f32>> {
     let deadline = Instant::now() + connect_timeout;
     let mut stream = loop {
         match TcpStream::connect(connect) {
@@ -144,6 +252,53 @@ pub fn infer_once(connect: &str, rows: &[u32], connect_timeout: Duration) -> Res
         }
     };
     stream.set_nodelay(true).ok();
+    if let Some(psk) = psk {
+        // a keyed client leads by waiting for the challenge; a door that
+        // never sends one (started without --psk-file) is caught by the
+        // bounded wait instead of deadlocking both sides
+        stream
+            .set_read_timeout(Some(AUTH_TIMEOUT))
+            .map_err(|e| Error::Net(format!("auth read timeout: {e}")))?;
+        let nonce = match wire::read_msg(&mut stream) {
+            Ok(Some(Msg { payload: Payload::Control(c), .. })) => c
+                .strip_prefix("spnn-serve-auth v1 nonce=")
+                .map(str::trim)
+                .map(auth::from_hex)
+                .transpose()?,
+            Ok(_) => None,
+            Err(_) => {
+                return Err(Error::Protocol(
+                    "front door sent no auth challenge (server started without --psk-file?); \
+                     drop --psk-file or key the server"
+                        .into(),
+                ))
+            }
+        };
+        let Some(nonce) = nonce else {
+            return Err(Error::Protocol(
+                "front door sent no auth challenge (server started without --psk-file?); \
+                 drop --psk-file or key the server"
+                    .into(),
+            ));
+        };
+        wire::write_msg(
+            &mut stream,
+            &Msg {
+                from: 0,
+                tag: 0,
+                payload: Payload::Control(format!(
+                    "spnn-serve-auth-ok proof={}",
+                    psk.party_proof(&nonce, b"", "infer-client")
+                )),
+                depart: 0.0,
+                phase: Phase::Online,
+            },
+        )
+        .map_err(|e| Error::Net(format!("auth proof send: {e}")))?;
+    }
+    stream
+        .set_read_timeout(reply_timeout)
+        .map_err(|e| Error::Net(format!("reply timeout: {e}")))?;
     wire::write_msg(
         &mut stream,
         &Msg {
@@ -155,9 +310,25 @@ pub fn infer_once(connect: &str, rows: &[u32], connect_timeout: Duration) -> Res
         },
     )
     .map_err(|e| Error::Net(format!("infer send: {e}")))?;
-    match wire::read_msg(&mut stream)? {
+    let reply = match (wire::read_msg(&mut stream), reply_timeout) {
+        (Err(e), Some(t)) => {
+            return Err(Error::Net(format!(
+                "no reply within {:.1}s (replica dead or draining?): {e}",
+                t.as_secs_f64()
+            )))
+        }
+        (r, _) => r?,
+    };
+    match reply {
         Some(Msg { payload: Payload::InferResp(scores), .. }) => Ok(scores),
         Some(Msg { payload: Payload::Control(e), .. }) => {
+            if e.starts_with("spnn-serve-auth v1 ") {
+                // we sent a bare InferReq into a keyed door: its challenge
+                // frame arrives where we expected scores
+                return Err(Error::Protocol(
+                    "this front door requires authentication (retry with --psk-file)".into(),
+                ));
+            }
             Err(Error::Protocol(match e.strip_prefix("spnn-err ") {
                 Some(r) => r.to_string(),
                 None => e,
@@ -210,5 +381,40 @@ mod tests {
         scorer.join().unwrap();
         // new connections are refused (or time out) once the door is shut
         assert!(infer_once(&addr, &[1], Duration::from_millis(400)).is_err());
+    }
+
+    /// A keyed door accepts the right proof, rejects the wrong key with a
+    /// named error, and tells bare clients they need a key.
+    #[test]
+    fn front_door_psk_auth_accepts_and_rejects() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let psk = Psk::from_bytes(b"front-door-secret");
+        let scorer: Scorer = Arc::new(|rows: &[u32]| {
+            Ok(rows.iter().map(|&r| r as f32 / 100.0).collect())
+        });
+        let door_psk = psk.clone();
+        let door =
+            std::thread::spawn(move || serve_clients(listener, scorer, 3, Some(door_psk)));
+
+        let t = Duration::from_secs(10);
+        // right key: full round trip
+        let got = infer_once_opts(&addr, &[7, 8], t, None, Some(&psk)).unwrap();
+        assert_eq!(got, vec![0.07, 0.08]);
+        // wrong key: named rejection, and the request never reaches the
+        // scorer (quota still has 2 slots — both consumed below)
+        let bad = Psk::from_bytes(b"not-the-secret");
+        let err = infer_once_opts(&addr, &[1], t, None, Some(&bad)).unwrap_err();
+        assert!(format!("{err}").contains("authentication failed"), "{err}");
+        // no key at all: the challenge frame arrives where scores were
+        // expected and is translated into a "requires authentication" error
+        let err = infer_once(&addr, &[1], t).unwrap_err();
+        assert!(format!("{err}").contains("requires authentication"), "{err}");
+        // the two remaining quota slots still serve keyed clients
+        let got = infer_once_opts(&addr, &[50], t, None, Some(&psk)).unwrap();
+        assert_eq!(got, vec![0.5]);
+        let got = infer_once_opts(&addr, &[51], t, None, Some(&psk)).unwrap();
+        assert_eq!(got, vec![0.51]);
+        door.join().unwrap().unwrap();
     }
 }

@@ -40,6 +40,7 @@
 //! [`ServeHandle`]; `spnn serve` additionally opens a TCP front door for
 //! `spnn infer` clients ([`frontdoor`]).
 
+pub mod fleet;
 pub mod frontdoor;
 
 use std::collections::VecDeque;

@@ -98,14 +98,43 @@ fn expand_vec(seed: [u8; 32], nonce: u64, n: usize) -> Vec<u64> {
 /// for several future batches can be outstanding at once and the parties
 /// reassemble them per batch with `recv_tagged`.
 pub fn serve(port: &mut dyn Channel, a: PartyId, b: PartyId, seed: u64) -> Result<()> {
+    serve_from(port, a, b, seed, None).map(|_| ())
+}
+
+/// [`serve`] with a checkpointable RNG stream: optionally seeks the
+/// dealer's seed-expansion RNG to a cursor saved by an earlier session
+/// (`resume`), and returns the **end-of-training** cursor so a deployment
+/// with a checkpoint dir can persist it (see [`crate::ckpt`]).
+///
+/// "End of training" is the first `idle` request (the requester's
+/// training→serving transition) or, for train-and-exit sessions that
+/// never idle, the `stop`. Every role checkpoints its RNG position at
+/// that same boundary, so a warm-started session replays the *serving*
+/// randomness stream from exactly where the continuous session's serving
+/// phase would start — which is what keeps warm-start serve transcripts
+/// bit-identical to the continuous train→serve path.
+pub fn serve_from(
+    port: &mut dyn Channel,
+    a: PartyId,
+    b: PartyId,
+    seed: u64,
+    resume: Option<(u64, u64)>,
+) -> Result<(u64, u64)> {
     let mut rng = ChaChaRng::seed_from_u64(seed);
+    if let Some(cur) = resume {
+        rng.seek(cur)?;
+    }
+    let mut end_of_train: Option<(u64, u64)> = None;
     port.set_stage("dealer");
     loop {
         let (tag, payload) = port.recv_any_tag(a)?;
         let req = payload.into_control()?;
         let (kind, args) = req.split_once(':').unwrap_or((req.as_str(), ""));
+        if kind == "idle" && end_of_train.is_none() {
+            end_of_train = Some(rng.cursor());
+        }
         match kind {
-            "stop" => return Ok(()),
+            "stop" => return Ok(end_of_train.unwrap_or_else(|| rng.cursor())),
             // the requester entered its serving phase: requests may now be
             // arbitrarily far apart, so the training-era deadlock timeout
             // must not fire while everyone is healthily idle

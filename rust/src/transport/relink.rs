@@ -22,7 +22,15 @@
 //!   keeps the trained weights bit-identical through a reconnect;
 //! * an orderly shutdown sends a goodbye marker ([`wire::FT_BYE`]), so a
 //!   clean peer exit is distinguishable from a dropped link and never
-//!   triggers a reconnect storm.
+//!   triggers a reconnect storm;
+//! * with a journal directory configured ([`RelinkOpts::journal_dir`],
+//!   derived from `--checkpoint-dir`), the unacked tail and both
+//!   delivery watermarks also spill to an append-only, checksummed file
+//!   per link, so even a killed **process** can be relaunched and rejoin
+//!   through the same `spnn-relink` exchange: the restored watermarks
+//!   dedupe the peer's replay, the restored tail replays to the peer,
+//!   and sequence numbering continues where it left off — exactly-once
+//!   delivery holds across the crash.
 //!
 //! Deadlock freedom: no thread ever blocks in a socket write while
 //! holding the link lock. The writer journals under the lock but writes
@@ -45,7 +53,10 @@
 //! the chaos tests here and in `rust/tests/decentralized.rs`.
 
 use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::io::{Seek as _, SeekFrom, Write as _};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -54,6 +65,7 @@ use std::time::{Duration, Instant};
 use super::tcp::connect_retry;
 use super::wire;
 use crate::netsim::{LinkSpec, Msg, NetPort, NetStats, PartyId, Payload, Phase, NO_TAG};
+use crate::protocols::common::Fnv;
 use crate::{Error, Result};
 
 /// Per-step deadline for the relink control exchange on a fresh socket.
@@ -89,12 +101,237 @@ pub(crate) struct RelinkOpts {
     pub(crate) reconnect_timeout: Duration,
     /// Chaos: sever the first link that has sent this many data frames.
     pub(crate) chaos_kill_after: Option<u64>,
+    /// Durable journal directory: when set, each link spills its unacked
+    /// tail and delivery watermarks to `<dir>/link-<me>-<peer>.jnl` so a
+    /// killed-and-relaunched process can rejoin the session with
+    /// exactly-once delivery (see [`Durable`]).
+    pub(crate) journal_dir: Option<String>,
 }
 
 impl Default for RelinkOpts {
     fn default() -> Self {
-        RelinkOpts { token: 0, reconnect_timeout: RECONNECT_TIMEOUT, chaos_kill_after: None }
+        RelinkOpts {
+            token: 0,
+            reconnect_timeout: RECONNECT_TIMEOUT,
+            chaos_kill_after: None,
+            journal_dir: None,
+        }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Durable journal (crash-restartable links)
+// ---------------------------------------------------------------------------
+
+/// Magic + format tag at the head of a durable link-journal file,
+/// followed by the session token (8 bytes LE).
+const JNL_MAGIC: &[u8; 8] = b"SPNNJNL1";
+/// Record kinds: a journaled data frame, the peer-ack watermark (our
+/// frames the peer confirmed), and the delivery watermark (peer frames
+/// we handed to the protocol).
+const JREC_FRAME: u8 = 1;
+const JREC_ACKED: u8 = 2;
+const JREC_DELIVERED: u8 = 3;
+/// Compact the file once this many bytes were appended since the last
+/// rewrite (dead records accumulate as watermarks advance).
+const JNL_COMPACT_BYTES: u64 = 1 << 20;
+
+/// Append-only spill of one link's unacked tail and delivery watermarks.
+///
+/// Every journaled frame and every watermark advance is appended as a
+/// checksummed record, so a killed process relaunched with the same
+/// journal directory rebuilds the exact link state: the unacked frames
+/// to replay, the next sequence number to assign, and the highest peer
+/// frame already delivered (which dedupes the peer's replay after the
+/// `spnn-relink` exchange). A torn tail record — the mark of a crash
+/// mid-append — is truncated away on restore; a file written under a
+/// different session token belongs to a different run and is reset.
+struct Durable {
+    path: PathBuf,
+    file: fs::File,
+    /// Bytes appended since the last compaction (growth bound).
+    appended: u64,
+}
+
+/// Link state rebuilt from a durable journal on relaunch.
+struct Restored {
+    journal: VecDeque<(u64, Vec<u8>)>,
+    next_seq: u64,
+    delivered: u64,
+    acked: u64,
+}
+
+impl Default for Restored {
+    fn default() -> Self {
+        Restored { journal: VecDeque::new(), next_seq: 1, delivered: 0, acked: 0 }
+    }
+}
+
+/// Encode one journal record: kind byte, payload, FNV-1a 64 over both.
+fn jnl_record(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(1 + payload.len() + 8);
+    rec.push(kind);
+    rec.extend_from_slice(payload);
+    let mut f = Fnv::new();
+    f.add_bytes(&rec);
+    rec.extend_from_slice(&f.0.to_le_bytes());
+    rec
+}
+
+fn jnl_frame_record(seq: u64, frame: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + frame.len());
+    p.extend_from_slice(&seq.to_le_bytes());
+    p.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+    p.extend_from_slice(frame);
+    jnl_record(JREC_FRAME, &p)
+}
+
+/// Total byte length of the record at the head of `rest` (checksum
+/// included), or `None` when it is short or of unknown kind.
+fn jnl_record_len(rest: &[u8]) -> Option<usize> {
+    match *rest.first()? {
+        JREC_FRAME => {
+            if rest.len() < 13 {
+                return None;
+            }
+            let len = u32::from_le_bytes(rest[9..13].try_into().unwrap()) as usize;
+            let total = 13 + len + 8;
+            (rest.len() >= total).then_some(total)
+        }
+        JREC_ACKED | JREC_DELIVERED => (rest.len() >= 17).then_some(17),
+        _ => None,
+    }
+}
+
+/// Parse a journal image, returning the restored link state plus the
+/// number of leading bytes that form valid records. A return of 0 means
+/// "start fresh": the header is missing or corrupt, or the file was
+/// written under a different session token.
+fn parse_journal(buf: &[u8], token: u64) -> (Restored, usize) {
+    let mut r = Restored::default();
+    if buf.len() < 16
+        || &buf[..8] != JNL_MAGIC
+        || u64::from_le_bytes(buf[8..16].try_into().unwrap()) != token
+    {
+        return (r, 0);
+    }
+    let mut frames: Vec<(u64, Vec<u8>)> = Vec::new();
+    let mut pos = 16usize;
+    loop {
+        let Some(total) = jnl_record_len(&buf[pos..]) else { break };
+        let rec = &buf[pos..pos + total];
+        let body = &rec[..total - 8];
+        let mut f = Fnv::new();
+        f.add_bytes(body);
+        if u64::from_le_bytes(rec[total - 8..].try_into().unwrap()) != f.0 {
+            break; // torn or corrupt record: the valid prefix ends here
+        }
+        let v = u64::from_le_bytes(body[1..9].try_into().unwrap());
+        match body[0] {
+            JREC_FRAME => frames.push((v, body[13..].to_vec())),
+            JREC_ACKED => r.acked = r.acked.max(v),
+            _ => r.delivered = r.delivered.max(v),
+        }
+        pos += total;
+    }
+    // every sent frame is either still unacked (tail) or covered by the
+    // ack watermark, so the highest seq seen fixes the next to assign
+    frames.retain(|(s, _)| *s > r.acked);
+    r.next_seq = frames.last().map_or(0, |(s, _)| *s).max(r.acked) + 1;
+    r.journal = frames.into();
+    (r, pos)
+}
+
+impl Durable {
+    /// Open (and restore from) the journal for one link, creating or
+    /// resetting the file as needed. The returned handle is positioned
+    /// for appends past the valid prefix.
+    fn open(dir: &str, me: PartyId, peer: PartyId, token: u64) -> Result<(Durable, Restored)> {
+        fs::create_dir_all(dir)
+            .map_err(|e| Error::Net(format!("relink journal dir {dir:?}: {e}")))?;
+        let path = Path::new(dir).join(format!("link-{me}-{peer}.jnl"));
+        let buf = fs::read(&path).unwrap_or_default();
+        let (restored, valid) = parse_journal(&buf, token);
+        let io = |e: std::io::Error| Error::Net(format!("relink journal {path:?}: {e}"));
+        let mut file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .map_err(io)?;
+        if valid == 0 {
+            // fresh file, stale token, or corrupt header: start over
+            file.set_len(0).map_err(io)?;
+            let mut hdr = Vec::with_capacity(16);
+            hdr.extend_from_slice(JNL_MAGIC);
+            hdr.extend_from_slice(&token.to_le_bytes());
+            file.write_all(&hdr).map_err(io)?;
+        } else {
+            if valid < buf.len() {
+                eprintln!(
+                    "spnn-relink: journal {path:?}: dropping torn tail ({valid} of {} \
+                     bytes valid)",
+                    buf.len()
+                );
+                file.set_len(valid as u64).map_err(io)?;
+            }
+            file.seek(SeekFrom::End(0)).map_err(io)?;
+        }
+        Ok((Durable { path, file, appended: 0 }, restored))
+    }
+
+    /// Append one pre-encoded record. Failures degrade the link to
+    /// in-memory journaling only (a later relaunch recovers less, live
+    /// delivery is unaffected).
+    fn append(&mut self, rec: &[u8]) {
+        if self.file.write_all(rec).is_err() {
+            eprintln!(
+                "spnn-relink: journal {:?}: append failed; crash durability degraded",
+                self.path
+            );
+        }
+        self.appended += rec.len() as u64;
+    }
+
+    fn frame(&mut self, seq: u64, frame: &[u8]) {
+        self.append(&jnl_frame_record(seq, frame));
+    }
+
+    fn watermark(&mut self, kind: u8, v: u64) {
+        self.append(&jnl_record(kind, &v.to_le_bytes()));
+    }
+}
+
+/// Rewrite the durable file down to the live state — the unacked tail
+/// plus both watermarks — once enough dead bytes accumulated. Failures
+/// leave the append-only file in place (it just keeps growing).
+fn jnl_compact(g: &mut Inner, token: u64) {
+    if !matches!(&g.durable, Some(d) if d.appended >= JNL_COMPACT_BYTES) {
+        return;
+    }
+    let mut buf = Vec::with_capacity(1024);
+    buf.extend_from_slice(JNL_MAGIC);
+    buf.extend_from_slice(&token.to_le_bytes());
+    for (s, f) in &g.journal {
+        buf.extend_from_slice(&jnl_frame_record(*s, f));
+    }
+    buf.extend_from_slice(&jnl_record(JREC_ACKED, &g.acked.to_le_bytes()));
+    buf.extend_from_slice(&jnl_record(JREC_DELIVERED, &g.delivered.to_le_bytes()));
+    let d = g.durable.as_mut().expect("checked above");
+    let tmp = d.path.with_extension("jnl.tmp");
+    // write through a handle we keep: after the rename it IS the live
+    // file, so appends never land in a renamed-over inode
+    let mut nf = match fs::OpenOptions::new().create(true).write(true).truncate(true).open(&tmp)
+    {
+        Ok(f) => f,
+        Err(_) => return,
+    };
+    if nf.write_all(&buf).is_err() || fs::rename(&tmp, &d.path).is_err() {
+        return;
+    }
+    d.file = nf;
+    d.appended = 0;
 }
 
 /// Mutable link state shared by the reader, writer, replay-worker and
@@ -126,6 +363,12 @@ struct Inner {
     replaying: Option<u64>,
     /// Data frames written on this link (chaos trigger).
     frames_sent: u64,
+    /// Durable spill of the journal and watermarks (crash-restart
+    /// support); `None` when journaling is memory-only.
+    durable: Option<Durable>,
+    /// Chaos: this endpoint was "killed" — stop all recovery, send no
+    /// goodbye, leave the durable journal as the only trace.
+    killed: bool,
 }
 
 /// One resilient link's shared state.
@@ -144,6 +387,9 @@ struct Shared {
 fn prune_journal(g: &mut Inner, ack: u64) {
     if ack > g.acked {
         g.acked = ack;
+        if let Some(d) = g.durable.as_mut() {
+            d.watermark(JREC_ACKED, ack);
+        }
     }
     while g.journal.front().is_some_and(|(s, _)| *s <= g.acked) {
         g.journal.pop_front();
@@ -344,6 +590,9 @@ fn reconnect_locked(sh: &Arc<Shared>, g: &mut Inner, addr: &str) -> bool {
     let _sp = crate::obs::span("transport_relink_seconds");
     let deadline = Instant::now() + sh.reconnect_timeout;
     loop {
+        if g.killed {
+            return false;
+        }
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             eprintln!(
@@ -425,6 +674,10 @@ fn writer_loop(sh: Arc<Shared>, out_rx: mpsc::Receiver<Msg>, redial: Redial) {
                     let ack = g.delivered;
                     let frame = wire::encode_frame(&msg, seq, ack);
                     g.journal.push_back((seq, frame.clone()));
+                    if let Some(d) = g.durable.as_mut() {
+                        d.frame(seq, &frame);
+                    }
+                    jnl_compact(&mut g, sh.token);
                     refresh_cache(&g, &mut cache);
                     (frame, ack)
                 };
@@ -440,6 +693,9 @@ fn writer_loop(sh: Arc<Shared>, out_rx: mpsc::Receiver<Msg>, redial: Redial) {
                 // peer's journal stays bounded on one-way traffic phases
                 let frame = {
                     let mut g = sh.inner.lock().unwrap();
+                    if g.killed {
+                        return;
+                    }
                     refresh_cache(&g, &mut cache);
                     if cache.is_some() && g.delivered > g.last_ack_sent {
                         g.last_ack_sent = g.delivered;
@@ -461,6 +717,9 @@ fn writer_loop(sh: Arc<Shared>, out_rx: mpsc::Receiver<Msg>, redial: Redial) {
     // runs one reconnect cycle so an unacked tail is not silently
     // swallowed by a dead link.
     let mut g = sh.inner.lock().unwrap();
+    if g.killed {
+        return;
+    }
     g.closed = true;
     g = wait_replay(&sh, g);
     if !g.bye_sent && !send_bye_locked(&mut g) && !g.journal.is_empty() && !g.peer_bye {
@@ -483,7 +742,7 @@ fn reader_loop(sh: Arc<Shared>, inbox_tx: mpsc::Sender<Msg>, redial: Redial) {
         let (mut rd, my_epoch) = {
             let mut g = sh.inner.lock().unwrap();
             loop {
-                if g.closed || g.peer_bye {
+                if g.closed || g.peer_bye || g.killed {
                     return;
                 }
                 if let Some(s) = g.stream.as_ref() {
@@ -503,7 +762,7 @@ fn reader_loop(sh: Arc<Shared>, inbox_tx: mpsc::Sender<Msg>, redial: Redial) {
                     }
                     Redial::Accept => {
                         let deadline = Instant::now() + sh.reconnect_timeout;
-                        while g.stream.is_none() && !g.closed && !g.peer_bye {
+                        while g.stream.is_none() && !g.closed && !g.peer_bye && !g.killed {
                             let now = Instant::now();
                             if now >= deadline {
                                 eprintln!(
@@ -557,6 +816,10 @@ fn reader_loop(sh: Arc<Shared>, inbox_tx: mpsc::Sender<Msg>, redial: Redial) {
                                 return;
                             }
                             g.delivered = f.seq;
+                            if let Some(d) = g.durable.as_mut() {
+                                d.watermark(JREC_DELIVERED, f.seq);
+                            }
+                            jnl_compact(&mut g, sh.token);
                             drop(g);
                             if inbox_tx.send(msg).is_err() {
                                 let mut g = sh.inner.lock().unwrap();
@@ -570,7 +833,7 @@ fn reader_loop(sh: Arc<Shared>, inbox_tx: mpsc::Sender<Msg>, redial: Redial) {
                 Ok(None) | Err(_) => {
                     // EOF without a goodbye, or a torn frame: link dropped
                     let mut g = sh.inner.lock().unwrap();
-                    if g.closed || g.peer_bye {
+                    if g.closed || g.peer_bye || g.killed {
                         return;
                     }
                     if g.epoch == my_epoch {
@@ -738,12 +1001,30 @@ impl LinkSet {
             }
         }
     }
+
+    /// Chaos hook: simulate a process kill. Every connection drops with
+    /// no goodbye, all recovery stops, and the durable journal (when
+    /// configured) is left as the only trace — a relaunched endpoint
+    /// restores from it and rejoins.
+    pub(crate) fn kill_all(&self) {
+        for (_, sh) in &self.shareds {
+            let mut g = sh.inner.lock().unwrap();
+            g.killed = true;
+            drop_stream(&mut g);
+            sh.cv.notify_all();
+        }
+    }
 }
 
 /// Build a `NetPort` whose peer connections are resilient links:
 /// `streams[p]` is the established socket to party `p`, `redials[p]`
 /// names the recovery role for that link, and `listener` (required when
 /// any link is [`Redial::Accept`]) stays open behind the accept hub.
+///
+/// A link with a redial role but **no** initial socket starts down and
+/// recovers through the normal relink path — this is how a relaunched
+/// process rejoins after a crash, with its journal restored from
+/// [`RelinkOpts::journal_dir`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn resilient_port(
     me: PartyId,
@@ -763,16 +1044,31 @@ pub(crate) fn resilient_port(
     let mut shareds: Vec<(PartyId, Arc<Shared>)> = Vec::new();
     let mut acceptors: Vec<(PartyId, Arc<Shared>)> = Vec::new();
     for (peer, (slot, redial)) in streams.into_iter().zip(redials).enumerate() {
-        let Some(stream) = slot else { continue };
-        let redial = redial.ok_or_else(|| {
-            Error::Net(format!("party {me}: no redial role for the link to peer {peer}"))
-        })?;
-        stream.set_nodelay(true).map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
-        // the handshake may have left a read timeout installed; the reader
-        // must block indefinitely (deadlock detection lives in the port)
-        stream
-            .set_read_timeout(None)
-            .map_err(|e| Error::Net(format!("clear read timeout: {e}")))?;
+        let Some(redial) = redial else {
+            if slot.is_some() {
+                return Err(Error::Net(format!(
+                    "party {me}: no redial role for the link to peer {peer}"
+                )));
+            }
+            continue;
+        };
+        if let Some(stream) = &slot {
+            stream.set_nodelay(true).map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
+            // the handshake may have left a read timeout installed; the
+            // reader must block indefinitely (deadlock detection lives in
+            // the port)
+            stream
+                .set_read_timeout(None)
+                .map_err(|e| Error::Net(format!("clear read timeout: {e}")))?;
+        }
+        let (durable, restored) = match opts.journal_dir.as_deref() {
+            Some(dir) => {
+                let (d, r) = Durable::open(dir, me, peer, opts.token)?;
+                (Some(d), r)
+            }
+            None => (None, Restored::default()),
+        };
+        let live = slot.is_some();
         let sh = Arc::new(Shared {
             me,
             peer,
@@ -781,18 +1077,20 @@ pub(crate) fn resilient_port(
             chaos_after: opts.chaos_kill_after,
             chaos_fired: chaos_fired.clone(),
             inner: Mutex::new(Inner {
-                stream: Some(stream),
-                epoch: 1,
-                journal: VecDeque::new(),
-                next_seq: 1,
-                delivered: 0,
-                acked: 0,
-                last_ack_sent: 0,
+                stream: slot,
+                epoch: if live { 1 } else { 0 },
+                journal: restored.journal,
+                next_seq: restored.next_seq,
+                delivered: restored.delivered,
+                acked: restored.acked,
+                last_ack_sent: restored.delivered,
                 peer_bye: false,
                 closed: false,
                 bye_sent: false,
                 replaying: None,
                 frames_sent: 0,
+                durable,
+                killed: false,
             }),
             cv: Condvar::new(),
         });
@@ -854,7 +1152,7 @@ mod tests {
             vec![None, Some(sa)],
             vec![None, Some(Redial::Accept)],
             Some(listener),
-            RelinkOpts { token: 99, reconnect_timeout: timeout, chaos_kill_after: None },
+            RelinkOpts { token: 99, reconnect_timeout: timeout, ..Default::default() },
             LinkSpec::lan(),
             stats_a,
         )
@@ -865,7 +1163,12 @@ mod tests {
             vec![Some(sb), None],
             vec![Some(Redial::Dial(addr.clone())), None],
             None,
-            RelinkOpts { token: 99, reconnect_timeout: timeout, chaos_kill_after: chaos_b },
+            RelinkOpts {
+                token: 99,
+                reconnect_timeout: timeout,
+                chaos_kill_after: chaos_b,
+                journal_dir: None,
+            },
             LinkSpec::lan(),
             stats_b,
         )
@@ -971,7 +1274,7 @@ mod tests {
             RelinkOpts {
                 token: 1,
                 reconnect_timeout: Duration::from_millis(300),
-                chaos_kill_after: None,
+                ..Default::default()
             },
             LinkSpec::lan(),
             stats,
@@ -1028,5 +1331,195 @@ mod tests {
         // regular traffic keeps flowing around the strays
         pb.send(0, Payload::U64s(vec![1])).unwrap();
         assert_eq!(pa.recv_u64s(1).unwrap(), vec![1]);
+    }
+
+    fn jnl_test_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("spnn-jnl-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Satellite of the crash-restart story: a killed endpoint (no
+    /// goodbye, threads dead, only the on-disk journal surviving) is
+    /// relaunched from that journal and rejoins the same session —
+    /// outage-window frames replay to it exactly once, and its own
+    /// sequence numbering continues where the dead process stopped.
+    #[test]
+    fn killed_endpoint_restores_journal_and_rejoins_exactly_once() {
+        let dir = jnl_test_dir("kill");
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sb = TcpStream::connect(&addr).unwrap();
+        let (sa, _) = listener.accept().unwrap();
+        let jopts = || RelinkOpts {
+            token: 5,
+            reconnect_timeout: Duration::from_secs(20),
+            chaos_kill_after: None,
+            journal_dir: Some(dir.to_string_lossy().into_owned()),
+        };
+        let (mut pa, _la) = resilient_port(
+            0,
+            &["A", "B"],
+            vec![None, Some(sa)],
+            vec![None, Some(Redial::Accept)],
+            Some(listener),
+            RelinkOpts {
+                token: 5,
+                reconnect_timeout: Duration::from_secs(20),
+                ..Default::default()
+            },
+            LinkSpec::lan(),
+            Arc::new(NetStats::new(&["A", "B"])),
+        )
+        .unwrap();
+        let (mut pb, lb) = resilient_port(
+            1,
+            &["A", "B"],
+            vec![Some(sb), None],
+            vec![Some(Redial::Dial(addr.clone())), None],
+            None,
+            jopts(),
+            LinkSpec::lan(),
+            Arc::new(NetStats::new(&["A", "B"])),
+        )
+        .unwrap();
+        pa.set_recv_timeout(Duration::from_secs(30));
+        pb.set_recv_timeout(Duration::from_secs(30));
+
+        // settle two-way traffic so the journal holds real watermarks
+        for i in 0..50u64 {
+            pb.send(0, Payload::U64s(vec![i])).unwrap();
+        }
+        drain_n(&mut pa, 1, 50, "A<-B before kill");
+        for i in 0..20u64 {
+            pa.send(1, Payload::U64s(vec![i])).unwrap();
+        }
+        drain_n(&mut pb, 0, 20, "B<-A before kill");
+
+        // kill B: no goodbye, no recovery — only the journal remains
+        lb.kill_all();
+        drop(pb);
+        for wh in lb.writers {
+            wh.join().unwrap();
+        }
+
+        // A keeps sending into the outage; its journal holds the tail
+        for i in 20..30u64 {
+            pa.send(1, Payload::U64s(vec![i])).unwrap();
+        }
+
+        // relaunch B from the journal: no initial socket — the dial-side
+        // reader re-establishes the link with the restored watermarks
+        let (mut pb2, _lb2) = resilient_port(
+            1,
+            &["A", "B"],
+            vec![None, None],
+            vec![Some(Redial::Dial(addr)), None],
+            None,
+            jopts(),
+            LinkSpec::lan(),
+            Arc::new(NetStats::new(&["A", "B"])),
+        )
+        .unwrap();
+        pb2.set_recv_timeout(Duration::from_secs(30));
+
+        // the outage-window frames arrive exactly once, in order; the
+        // pre-kill frames (delivered watermark 20) must NOT reappear
+        for want in 20..30u64 {
+            assert_eq!(pb2.recv_u64s(0).unwrap(), vec![want], "lost/duplicated at {want}");
+        }
+        // and the relaunched sender continues its sequence seamlessly
+        // (a next_seq reset to 1 would be dropped by A as duplicates)
+        for i in 50..70u64 {
+            pb2.send(0, Payload::U64s(vec![i])).unwrap();
+        }
+        for want in 50..70u64 {
+            assert_eq!(pa.recv_u64s(1).unwrap(), vec![want]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_restore_truncates_torn_tails_and_discards_stale_tokens() {
+        let dir = jnl_test_dir("torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("link-1-0.jnl");
+        // a valid journal image: two frames, watermarks, then a record
+        // torn mid-append by a crash
+        let mut buf = Vec::new();
+        buf.extend_from_slice(JNL_MAGIC);
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(&jnl_frame_record(1, b"alpha"));
+        buf.extend_from_slice(&jnl_frame_record(2, b"beta"));
+        buf.extend_from_slice(&jnl_record(JREC_ACKED, &1u64.to_le_bytes()));
+        buf.extend_from_slice(&jnl_record(JREC_DELIVERED, &9u64.to_le_bytes()));
+        let valid_len = buf.len();
+        buf.push(JREC_FRAME);
+        buf.extend_from_slice(&[3, 0, 0]);
+        std::fs::write(&path, &buf).unwrap();
+
+        let (_d, r) = Durable::open(dir.to_str().unwrap(), 1, 0, 7).unwrap();
+        assert_eq!((r.acked, r.delivered, r.next_seq), (1, 9, 3));
+        let tail: Vec<u64> = r.journal.iter().map(|(s, _)| *s).collect();
+        assert_eq!(tail, vec![2], "acked frames must not be replayed");
+        assert_eq!(r.journal[0].1, b"beta");
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            valid_len as u64,
+            "torn tail not truncated"
+        );
+
+        // a different session token means a different run: start fresh
+        let (_d, r) = Durable::open(dir.to_str().unwrap(), 1, 0, 8).unwrap();
+        assert_eq!((r.next_seq, r.delivered, r.acked, r.journal.len()), (1, 0, 0, 0));
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 16, "stale journal kept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_compaction_rewrites_to_live_state() {
+        let dir = jnl_test_dir("compact");
+        let (d, _r) = Durable::open(dir.to_str().unwrap(), 0, 1, 3).unwrap();
+        let mut g = Inner {
+            stream: None,
+            epoch: 0,
+            journal: VecDeque::new(),
+            next_seq: 1,
+            delivered: 0,
+            acked: 0,
+            last_ack_sent: 0,
+            peer_bye: false,
+            closed: false,
+            bye_sent: false,
+            replaying: None,
+            frames_sent: 0,
+            durable: Some(d),
+            killed: false,
+        };
+        // one acked frame, one live one, a delivery — then force a rewrite
+        g.journal.push_back((1, b"one".to_vec()));
+        g.next_seq = 2;
+        if let Some(d) = g.durable.as_mut() {
+            d.frame(1, b"one");
+        }
+        prune_journal(&mut g, 1);
+        g.delivered = 4;
+        g.journal.push_back((2, b"two".to_vec()));
+        g.next_seq = 3;
+        if let Some(d) = g.durable.as_mut() {
+            d.watermark(JREC_DELIVERED, 4);
+            d.frame(2, b"two");
+            d.appended = JNL_COMPACT_BYTES; // force the size trigger
+        }
+        jnl_compact(&mut g, 3);
+        let path = dir.join("link-0-1.jnl");
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert!(len < 128, "compaction did not shrink the file ({len} bytes)");
+        // a restore from the compacted file reproduces the live state
+        let (_d, r) = Durable::open(dir.to_str().unwrap(), 0, 1, 3).unwrap();
+        assert_eq!((r.next_seq, r.delivered, r.acked), (3, 4, 1));
+        assert_eq!(r.journal.len(), 1);
+        assert_eq!(r.journal[0], (2, b"two".to_vec()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -82,16 +82,22 @@ fn traffic_metrics(stats: &NetStats, id: usize) -> Vec<(String, f64)> {
 }
 
 /// Run one worker party: `spnn party --role <role> --connect <addr>`,
-/// plus `--psk-file` for authenticated sessions and `--chaos-kill N`
-/// (sever one connection after N sent frames) for reconnect drills.
+/// plus `--psk-file` for authenticated sessions, `--chaos-kill N`
+/// (sever one connection after N sent frames) for reconnect drills, and
+/// `--checkpoint-dir DIR` to persist / warm-load this role's parameter
+/// blocks. The dir is process-local by design (it holds this party's
+/// private shares), so it never rides the config broadcast — only the
+/// `warm_start` bit does.
 pub fn run_party(
     connect: &str,
     role: &str,
     bind_host: &str,
     psk: Option<&Psk>,
     chaos_kill_after: Option<u64>,
+    ckpt_dir: Option<&str>,
 ) -> Result<()> {
-    let sess = session::join(connect, role, bind_host, SESSION_TIMEOUT, psk)?;
+    let mut sess = session::join(connect, role, bind_host, SESSION_TIMEOUT, psk)?;
+    sess.spec.tc.checkpoint_dir = ckpt_dir.map(|s| s.to_string());
     let Prepared { dep, .. } = build_deployment(&sess.spec, ServeQueue::detached())?;
     if dep.names.len() != sess.n {
         return Err(Error::Protocol(format!(
@@ -138,6 +144,9 @@ pub fn run_party(
         token: sess.token,
         reconnect_timeout: relink::RECONNECT_TIMEOUT,
         chaos_kill_after,
+        // a checkpointed party also journals its links durably, so a
+        // kill between checkpoint and shutdown stays recoverable
+        journal_dir: sess.spec.tc.checkpoint_dir.as_ref().map(|d| format!("{d}/journal")),
     };
     let (port, links) = relink::resilient_port(
         sess.id,
@@ -306,6 +315,11 @@ fn launch_on(
             if let Some(path) = &spec.tc.psk_file {
                 cmd.args(["--psk-file", path.as_str()]);
             }
+            // spawned children share this host's checkpoint dir; each
+            // writes/reads only its own <role>.ckpt inside it
+            if let Some(dir) = &spec.tc.checkpoint_dir {
+                cmd.args(["--checkpoint-dir", dir.as_str()]);
+            }
             if let Some((chaos_role, n_frames)) = &opts.chaos {
                 if chaos_role == role {
                     cmd.args(["--chaos-kill", &n_frames.to_string()]);
@@ -343,6 +357,7 @@ fn launch_on(
         token: hosted.token,
         reconnect_timeout: relink::RECONNECT_TIMEOUT,
         chaos_kill_after: None,
+        journal_dir: spec.tc.checkpoint_dir.as_ref().map(|d| format!("{d}/journal")),
     };
     let (port, links) = relink::resilient_port(
         0,
@@ -432,7 +447,7 @@ mod tests {
         for role in roles {
             let addr = addr.clone();
             workers
-                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None)));
+                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None, None)));
         }
         let rep = run_launch_on(listener, &s, &opts).unwrap();
         for w in workers {
@@ -474,7 +489,7 @@ mod tests {
         for (role, chaos) in [("party0", Some(25u64)), ("dealer", None), ("party1", None)] {
             let addr = addr.clone();
             workers.push(std::thread::spawn(move || {
-                run_party(&addr, role, "127.0.0.1", None, chaos)
+                run_party(&addr, role, "127.0.0.1", None, chaos, None)
             }));
         }
         let rep = run_launch_on(listener, &s, &opts).unwrap();
@@ -510,7 +525,7 @@ mod tests {
         {
             let addr = addr.clone();
             workers.push(std::thread::spawn(move || {
-                run_party(&addr, role, "127.0.0.1", Some(&key), None)
+                run_party(&addr, role, "127.0.0.1", Some(&key), None, None)
             }));
         }
         let err = run_launch_on(listener, &s, &opts).unwrap_err();
@@ -544,7 +559,7 @@ mod tests {
         for role in ["server", "dealer", "holder0", "holder1"] {
             let addr = addr.clone();
             workers
-                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None)));
+                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None, None)));
         }
         let (tx, rx) = std::sync::mpsc::channel();
         let rows: Vec<u32> = (0..21).collect(); // ragged through coalesce 16

@@ -127,6 +127,12 @@ impl SessionSpec {
         if let Some(cc) = &t.compress {
             s.push_str(&format!(" compress={}", cc.canonical()));
         }
+        // warm-start (serve --from-checkpoint) rides the broadcast so all
+        // parties run the zero-epoch schedule; absent when false so every
+        // earlier wire string (and its digest) is unchanged
+        if t.warm_start {
+            s.push_str(" warm=1");
+        }
         // serve mode rides the config broadcast so every worker process
         // builds the serve deployment (field absent = train-and-exit,
         // keeping old wire strings parseable). The timeout and max-queue
@@ -196,6 +202,10 @@ impl SessionSpec {
             transport: TransportKind::Tcp,
             psk_file: None,
             compress,
+            // local-only (never broadcast): each process points the flag
+            // at its own disk, like psk_file
+            checkpoint_dir: None,
+            warm_start: kv.get("warm").copied() == Some("1"),
         };
         let serve = match kv.get("serve") {
             None => None,

@@ -1,0 +1,119 @@
+//! Warm-start parity: for every trainer, a session checkpointed at the
+//! end of training (`--checkpoint-dir`) and then warm-started from those
+//! blocks (`--from-checkpoint`, zero epochs) must report the **same
+//! weight digest, bit for bit** — over netsim and over real loopback TCP.
+//!
+//! This is the ISSUE 9 acceptance criterion for the durable per-role
+//! parameter blocks: a restartable serving fleet is only correct if a
+//! replica restored from disk is indistinguishable from one that never
+//! stopped. The digest covers every role's private blocks (holder
+//! weights, server/party shares, dealer cursors), so any drift in the
+//! checkpoint format, the RNG cursor capture, or the restore path shows
+//! up here as a digest mismatch.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn digest_of(output: &std::process::Output, what: &str) -> u64 {
+    assert!(
+        output.status.success(),
+        "{what} failed (status {:?})\nstdout:\n{}\nstderr:\n{}",
+        output.status.code(),
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let line = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("weight_digest=0x"))
+        .unwrap_or_else(|| panic!("{what}: no weight_digest line in\n{stdout}"));
+    u64::from_str_radix(line.trim(), 16)
+        .unwrap_or_else(|e| panic!("{what}: bad digest {line:?}: {e}"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("spnn-warmstart-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Cold run with `--checkpoint-dir`, warm run with `--from-checkpoint`,
+/// over one transport; both digests must match exactly.
+fn assert_warm_parity(protocol: &str, transport: &str, extra: &[&str]) {
+    let exe = env!("CARGO_BIN_EXE_spnn");
+    let dir = fresh_dir(&format!("{protocol}-{transport}"));
+    let dir_s = dir.to_string_lossy().into_owned();
+    let mut common: Vec<&str> =
+        vec!["--protocol", protocol, "--rows", "256", "--epochs", "1", "--batch", "128"];
+    common.extend_from_slice(extra);
+    let mut cold = Command::new(exe);
+    cold.arg("train").args(&common).args(["--checkpoint-dir", &dir_s]);
+    if transport != "netsim" {
+        cold.args(["--transport", transport]);
+    }
+    let cold = cold.output().expect("spawn cold train");
+    let d_cold = digest_of(&cold, &format!("{protocol}/{transport} cold train"));
+    assert_ne!(d_cold, 0, "{protocol}/{transport}: degenerate digest");
+
+    let mut warm = Command::new(exe);
+    warm.arg("train").args(&common).args(["--from-checkpoint", &dir_s]);
+    if transport != "netsim" {
+        warm.args(["--transport", transport]);
+    }
+    let warm = warm.output().expect("spawn warm train");
+    let d_warm = digest_of(&warm, &format!("{protocol}/{transport} warm start"));
+    assert_eq!(
+        d_cold, d_warm,
+        "{protocol}/{transport}: warm start diverged from the session that \
+         wrote the checkpoint"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spnn_ss_warm_start_is_bit_identical_netsim_and_tcp() {
+    assert_warm_parity("spnn-ss", "netsim", &[]);
+    assert_warm_parity("spnn-ss", "tcp", &[]);
+}
+
+#[test]
+fn spnn_he_warm_start_is_bit_identical_netsim_and_tcp() {
+    // small Paillier modulus keeps the HE leg CI-sized; the checkpoint
+    // still carries real ciphertext-path state (keys are re-derived)
+    let extra = ["--paillier-bits", "256"];
+    assert_warm_parity("spnn-he", "netsim", &extra);
+    assert_warm_parity("spnn-he", "tcp", &extra);
+}
+
+#[test]
+fn secureml_warm_start_is_bit_identical_netsim_and_tcp() {
+    assert_warm_parity("secureml", "netsim", &[]);
+    assert_warm_parity("secureml", "tcp", &[]);
+}
+
+#[test]
+fn splitnn_warm_start_is_bit_identical_netsim_and_tcp() {
+    assert_warm_parity("splitnn", "netsim", &[]);
+    assert_warm_parity("splitnn", "tcp", &[]);
+}
+
+/// A warm start must refuse to run when the checkpoint is missing — a
+/// fleet replica pointed at an empty volume should fail loudly, not
+/// train silently from scratch and drift from its siblings.
+#[test]
+fn warm_start_from_an_empty_dir_fails_loudly() {
+    let exe = env!("CARGO_BIN_EXE_spnn");
+    let dir = fresh_dir("empty");
+    let out = Command::new(exe)
+        .args(["train", "--protocol", "spnn-ss", "--rows", "256", "--epochs", "1"])
+        .args(["--batch", "128", "--from-checkpoint", &dir.to_string_lossy()])
+        .output()
+        .expect("spawn warm train");
+    assert!(
+        !out.status.success(),
+        "warm start from an empty dir must fail; stdout:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
