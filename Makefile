@@ -11,19 +11,21 @@ test:
 
 # Perf trajectory: run every bench and copy the machine-readable
 # BENCH_*.json artifacts into the repo root (the layout the CI bench job
-# uploads): pipeline-depth, serve-throughput, the replicated fleet,
-# crypto substrate, the feature-compression sweep, and the observability
-# overhead A/B.
+# uploads): pipeline-depth, the bounded-staleness async sweep,
+# serve-throughput, the replicated fleet, crypto substrate, the
+# feature-compression sweep, and the observability overhead A/B.
 bench:
 	cd rust && cargo bench --bench pipeline_depth \
+	        && cargo bench --bench async_depth \
 	        && cargo bench --bench serve_throughput \
 	        && cargo bench --bench fleet_load \
 	        && cargo bench --bench micro_crypto \
 	        && cargo bench --bench compress_sweep \
 	        && cargo bench --bench obs_overhead
-	cp rust/BENCH_pipeline.json rust/BENCH_serve.json \
-	   rust/BENCH_fleet.json rust/BENCH_crypto.json \
-	   rust/BENCH_compress.json rust/BENCH_obs.json .
+	cp rust/BENCH_pipeline.json rust/BENCH_async.json \
+	   rust/BENCH_serve.json rust/BENCH_fleet.json \
+	   rust/BENCH_crypto.json rust/BENCH_compress.json \
+	   rust/BENCH_obs.json .
 
 # AOT-lower the JAX/Pallas graphs (python half; needs a JAX environment).
 # Without artifacts the rust engine transparently uses its native graph

@@ -1,0 +1,105 @@
+//! Bounded-staleness sweep: end-to-end sim-time + wall-clock per trainer
+//! at `staleness` 0 / 1 / 2 / 4 crossed with `pipeline_depth` 1 / 4,
+//! emitted as machine-readable `BENCH_async.json` (CI bench job).
+//!
+//! The headline statistic is the speedup of (staleness 2, depth 4) over
+//! the lock-step baseline (staleness 0, depth 1): with a bounded lag the
+//! update dependency between adjacent batches turns soft, so
+//! value-dependent work overlaps across batches instead of only the
+//! input prefetch. Each point also records the test AUC so the
+//! convergence cost of staleness is visible next to the speed gain
+//! (EXPERIMENTS.md §Async).
+//!
+//! SPNN-HE needs the AOT artifacts (`make artifacts`); without them it is
+//! recorded as `"skipped"` and SecureML / SplitNN / SPNN-SS (artifact-
+//! free) still produce real numbers.
+
+use spnn::bench_harness::JsonObj;
+use spnn::config::{TrainConfig, FRAUD};
+use spnn::data::{synth_fraud, SynthOpts};
+use spnn::netsim::LinkSpec;
+use spnn::protocols;
+
+const STALENESS: [usize; 4] = [0, 1, 2, 4];
+const DEPTHS: [usize; 2] = [1, 4];
+
+fn run_sweep(proto: &str, rows: usize, batch: usize, seed: u64) -> JsonObj {
+    let ds = synth_fraud(SynthOpts::small(rows));
+    let (train, test) = ds.split(0.8, seed);
+    let t = protocols::by_name(proto).expect("known trainer");
+    let mut obj = JsonObj::new().str("trainer", proto);
+    // (staleness, depth) -> (sim_s, wall_s), for the speedup summary
+    let mut points: Vec<((usize, usize), (f64, f64))> = Vec::new();
+    for staleness in STALENESS {
+        for depth in DEPTHS {
+            let tc = TrainConfig {
+                batch,
+                epochs: 2, // >1 so the prefetch window crosses an epoch boundary
+                seed,
+                paillier_bits: 256, // bench-size keys; experiments use 512/1024
+                lr_override: Some(0.05),
+                pipeline_depth: depth,
+                staleness,
+                ..Default::default()
+            };
+            let key = format!("s{staleness}_d{depth}");
+            match t.train(&FRAUD, &tc, LinkSpec::mbps100(), &train, &test, 2) {
+                Ok(rep) => {
+                    let sim = rep.mean_epoch_time();
+                    println!(
+                        "{proto:<10} staleness {staleness} depth {depth}: sim {sim:.4}s, \
+                         wall {:.3}s, auc {:.4}",
+                        rep.wall_seconds, rep.auc
+                    );
+                    points.push(((staleness, depth), (sim, rep.wall_seconds)));
+                    obj = obj.obj(
+                        &key,
+                        JsonObj::new()
+                            .num("sim_s", sim)
+                            .num("wall_s", rep.wall_seconds)
+                            .num("auc", rep.auc)
+                            .int("online_bytes", rep.online_bytes as u64)
+                            // hex string: u64 digests overflow JSON doubles
+                            .str("weight_digest", &format!("{:016x}", rep.weight_digest)),
+                    );
+                }
+                Err(e) => {
+                    println!("{proto:<10} staleness {staleness} depth {depth}: skipped ({e})");
+                    obj = obj.obj(&key, JsonObj::new().str("skipped", &format!("{e}")));
+                }
+            }
+        }
+    }
+    // headline: async (S, depth 4) vs the lock-step baseline (S=0, depth 1)
+    let find = |s: usize, d: usize| points.iter().find(|(k, _)| *k == (s, d)).map(|(_, v)| *v);
+    if let Some((base_sim, base_wall)) = find(0, 1) {
+        for s in [1usize, 2, 4] {
+            if let Some((sim, wall)) = find(s, 4) {
+                obj = obj
+                    .num(&format!("sim_speedup_s{s}_d4"), base_sim / sim)
+                    .num(&format!("wall_speedup_s{s}_d4"), base_wall / wall);
+            }
+        }
+    }
+    obj
+}
+
+fn main() {
+    // modest sizes: the bench must finish on a 1-core CI runner
+    let out = JsonObj::new()
+        .str("bench", "async_depth")
+        .str(
+            "config",
+            "fraud, 2 epochs, 100 Mbps, 2 holders; speedup keys compare \
+             (staleness S, depth 4) to lock-step (staleness 0, depth 1)",
+        )
+        .obj("secureml", run_sweep("secureml", 240, 64, 7))
+        .obj("splitnn", run_sweep("splitnn", 1200, 256, 7))
+        .obj("spnn_ss", run_sweep("spnn-ss", 1200, 256, 7))
+        .obj("spnn_he", run_sweep("spnn-he", 1200, 256, 7));
+    let json = out.render();
+    match std::fs::write("BENCH_async.json", format!("{json}\n")) {
+        Ok(()) => println!("wrote BENCH_async.json"),
+        Err(e) => eprintln!("could not write BENCH_async.json: {e}"),
+    }
+}

@@ -1,5 +1,6 @@
 //! Fleet-load sweep: rows/sec and request-latency percentiles of the
-//! replicated serving **fleet router** at 1, 2 and 4 warm replicas,
+//! replicated serving **fleet router** at 1, 2 and 4 warm replicas, plus
+//! a high-concurrency point (64 clients against a 2-replica fleet),
 //! emitted as machine-readable `BENCH_fleet.json` (CI artifact).
 //!
 //! Each replica is a full in-process serve session (trained on the same
@@ -23,17 +24,27 @@ use spnn::protocols::common::Fnv;
 use spnn::serve::fleet::{Backend, Fleet};
 use spnn::serve::{serve, ServeOpts};
 
-/// Rows per timed request.
+/// Rows per timed request in the replica-count sweep.
 const REQ_ROWS: u32 = 96;
-/// Concurrent client threads hammering the router.
+/// Concurrent client threads in the replica-count sweep.
 const CLIENTS: usize = 4;
 /// Requests per client thread (so 4 * 2 * 96 = 768 rows per sweep point).
 const REQS_PER_CLIENT: usize = 2;
+/// Client threads in the high-concurrency load point (2-replica fleet).
+const LOAD_CLIENTS: usize = 64;
+/// Rows per request in the load point (smaller: 64 concurrent requests).
+const LOAD_ROWS: u32 = 24;
 
-/// One sweep point: `n_replicas` warm serve sessions behind one router.
-/// Returns (timed seconds, first client's score digest, whether every
-/// client scored bit-identically).
-fn run_once(n_replicas: usize) -> (f64, String, bool) {
+/// One sweep point: `clients` threads, each firing `reqs_per_client`
+/// requests of `req_rows` rows at `n_replicas` warm serve sessions
+/// behind one router. Returns (timed seconds, first client's score
+/// digest, whether every client scored bit-identically).
+fn run_once(
+    n_replicas: usize,
+    clients: usize,
+    reqs_per_client: usize,
+    req_rows: u32,
+) -> (f64, String, bool) {
     let ds = synth_fraud(SynthOpts::small(600));
     let (train, test) = ds.split(0.8, 7);
     let tc = TrainConfig {
@@ -65,15 +76,15 @@ fn run_once(n_replicas: usize) -> (f64, String, bool) {
             .map(|(i, h)| (format!("replica-{i}"), Backend::local(h.sender())))
             .collect(),
     ));
-    let rows: Vec<u32> = (0..REQ_ROWS).collect();
+    let rows: Vec<u32> = (0..req_rows).collect();
     let t0 = Instant::now();
-    let clients: Vec<_> = (0..CLIENTS)
+    let clients: Vec<_> = (0..clients)
         .map(|_| {
             let fleet = fleet.clone();
             let rows = rows.clone();
             std::thread::spawn(move || {
                 let mut digest = Fnv::new();
-                for _ in 0..REQS_PER_CLIENT {
+                for _ in 0..reqs_per_client {
                     let scores = fleet.score(&rows).expect("routed infer");
                     for s in &scores {
                         digest.add_bytes(&s.to_bits().to_le_bytes());
@@ -100,44 +111,56 @@ fn run_once(n_replicas: usize) -> (f64, String, bool) {
     (secs, digests[0].clone(), agree)
 }
 
+/// Run one sweep point and fold it into a JSON object (throughput +
+/// latency percentiles from the serve runtime's obs histogram).
+fn point(n_replicas: usize, clients: usize, reqs_per_client: usize, req_rows: u32) -> JsonObj {
+    let (secs, digest, agree) = run_once(n_replicas, clients, reqs_per_client, req_rows);
+    let rows_scored = clients * reqs_per_client * req_rows as usize;
+    let rows_per_sec = rows_scored as f64 / secs.max(1e-9);
+    // end-to-end latency (enqueue -> scored) across all replicas,
+    // recorded by each serve runtime's obs histogram during the run
+    let lat = spnn::obs::registry().hist("serve_request_seconds");
+    let (p50, p95, p99) = (
+        lat.quantile_secs(0.5) * 1e3,
+        lat.quantile_secs(0.95) * 1e3,
+        lat.quantile_secs(0.99) * 1e3,
+    );
+    println!(
+        "replicas {n_replicas} x {clients} clients: {rows_per_sec:>9.1} rows/s \
+         ({rows_scored} rows in {secs:.3}s, p50 {p50:.2} ms / p95 {p95:.2} ms / \
+         p99 {p99:.2} ms)"
+    );
+    JsonObj::new()
+        .int("replicas", n_replicas as u64)
+        .int("clients", clients as u64)
+        .num("rows_per_sec", rows_per_sec)
+        .num("seconds", secs)
+        .int("rows_scored", rows_scored as u64)
+        .num("latency_p50_ms", p50)
+        .num("latency_p95_ms", p95)
+        .num("latency_p99_ms", p99)
+        // identical across replica counts for batching-insensitive
+        // protocols; SS truncation noise may vary it with routing
+        .str("score_digest", &digest)
+        .str("clients_agree", if agree { "true" } else { "false" })
+}
+
 fn main() {
     let mut out = JsonObj::new().str("bench", "fleet_load").str(
         "config",
-        "spnn-ss, fraud, 1 epoch, batch 128, 100 Mbps, 2 holders, coalesce 16, \
-         4 clients x 2 requests x 96 rows",
+        "spnn-ss, fraud, 1 epoch, batch 128, 100 Mbps, 2 holders, coalesce 16; \
+         sweep: 4 clients x 2 requests x 96 rows; load: 64 clients x 1 request x 24 rows",
     );
     for &n_replicas in &[1usize, 2, 4] {
-        let (secs, digest, agree) = run_once(n_replicas);
-        let rows_scored = CLIENTS * REQS_PER_CLIENT * REQ_ROWS as usize;
-        let rows_per_sec = rows_scored as f64 / secs.max(1e-9);
-        // end-to-end latency (enqueue -> scored) across all replicas,
-        // recorded by each serve runtime's obs histogram during the run
-        let lat = spnn::obs::registry().hist("serve_request_seconds");
-        let (p50, p95, p99) = (
-            lat.quantile_secs(0.5) * 1e3,
-            lat.quantile_secs(0.95) * 1e3,
-            lat.quantile_secs(0.99) * 1e3,
-        );
-        println!(
-            "replicas {n_replicas}: {rows_per_sec:>9.1} rows/s ({rows_scored} rows in \
-             {secs:.3}s, p50 {p50:.2} ms / p95 {p95:.2} ms / p99 {p99:.2} ms)"
-        );
         out = out.obj(
             &format!("replicas_{n_replicas}"),
-            JsonObj::new()
-                .int("replicas", n_replicas as u64)
-                .num("rows_per_sec", rows_per_sec)
-                .num("seconds", secs)
-                .int("rows_scored", rows_scored as u64)
-                .num("latency_p50_ms", p50)
-                .num("latency_p95_ms", p95)
-                .num("latency_p99_ms", p99)
-                // identical across replica counts for batching-insensitive
-                // protocols; SS truncation noise may vary it with routing
-                .str("score_digest", &digest)
-                .str("clients_agree", if agree { "true" } else { "false" }),
+            point(n_replicas, CLIENTS, REQS_PER_CLIENT, REQ_ROWS),
         );
     }
+    // high-concurrency point: 64 clients fire one request each at a
+    // 2-replica fleet, so the router sees 64 simultaneous enqueues and the
+    // tail percentiles measure queueing under contention
+    out = out.obj("load_64x2", point(2, LOAD_CLIENTS, 1, LOAD_ROWS));
     let json = out.render();
     match std::fs::write("BENCH_fleet.json", format!("{json}\n")) {
         Ok(()) => println!("wrote BENCH_fleet.json"),

@@ -389,6 +389,62 @@ pub fn save(dir: &str, ck: &Checkpoint) -> Result<()> {
     Ok(())
 }
 
+/// Path of a rotated checkpoint generation (`generation >= 1`);
+/// generation 0 is the live `<role>.ckpt` itself ([`path_for`]).
+pub fn rotated_path(dir: &str, role: &str, generation: usize) -> PathBuf {
+    Path::new(dir).join(format!("{role}.{generation}.ckpt"))
+}
+
+/// [`save`] with generation rotation (`--checkpoint-keep N`): the
+/// previous live checkpoint survives as `<role>.1.ckpt`, the one before
+/// as `<role>.2.ckpt`, …, and every generation `>= N` is pruned, so the
+/// dir holds at most `N` generations per role. Every step is a rename or
+/// an atomic tmp+rename write — a crash at any point leaves each
+/// surviving generation intact, and the live `<role>.ckpt` (written
+/// last) always warm-starts. `keep = None` is exactly [`save`].
+pub fn save_rotated(dir: &str, ck: &Checkpoint, keep: Option<usize>) -> Result<()> {
+    let Some(n) = keep else { return save(dir, ck) };
+    let n = n.max(1);
+    fs::create_dir_all(dir)?;
+    if n >= 2 {
+        // shift surviving generations up, oldest first, then retire the
+        // live file to generation 1
+        for g in (1..=n - 2).rev() {
+            let from = rotated_path(dir, &ck.role, g);
+            if from.exists() {
+                fs::rename(&from, rotated_path(dir, &ck.role, g + 1))?;
+            }
+        }
+        let live = path_for(dir, &ck.role);
+        if live.exists() {
+            fs::rename(&live, rotated_path(dir, &ck.role, 1))?;
+        }
+    }
+    prune_generations(dir, &ck.role, n)?;
+    save(dir, ck)
+}
+
+/// Remove this role's rotated generations at index `>= keep` (also
+/// handles a lowered `--checkpoint-keep` against an older, deeper dir).
+fn prune_generations(dir: &str, role: &str, keep: usize) -> Result<()> {
+    let prefix = format!("{role}.");
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(mid) = name.strip_prefix(&prefix).and_then(|r| r.strip_suffix(".ckpt"))
+        else {
+            continue;
+        };
+        if let Ok(g) = mid.parse::<usize>() {
+            if g >= keep {
+                fs::remove_file(entry.path())?;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Load a role's checkpoint from `dir`, with a clear error when the file
 /// is missing (the most common operator mistake: serving from a dir that
 /// was never trained into).
@@ -439,7 +495,7 @@ pub fn load_verified(
 /// checkpoint dir) that do not change the trained values.
 pub fn config_digest(protocol: &str, tc: &crate::config::TrainConfig, n_holders: usize) -> u64 {
     let compress = tc.compress.map(|c| c.canonical()).unwrap_or_default();
-    let s = format!(
+    let mut s = format!(
         "ckpt-cfg v1 proto={protocol} holders={n_holders} batch={} seed={} sgld={} \
          lr={:?} pbits={} shortexp={} noise={:?} slot={} compress={compress}",
         tc.batch,
@@ -451,6 +507,12 @@ pub fn config_digest(protocol: &str, tc: &crate::config::TrainConfig, n_holders:
         tc.sgld_noise,
         tc.slot_bits,
     );
+    // bounded staleness reorders weight updates, so the trained blocks
+    // differ from the lock-step run; appended only when nonzero so every
+    // checkpoint written before this field keeps its digest
+    if tc.staleness != 0 {
+        s.push_str(&format!(" stale={}", tc.staleness));
+    }
     let mut f = Fnv::new();
     f.add_bytes(s.as_bytes());
     f.0
@@ -597,6 +659,55 @@ mod tests {
         t4.transport = crate::config::TransportKind::Tcp;
         t4.checkpoint_dir = Some("/tmp/x".into());
         t4.warm_start = true;
+        t4.checkpoint_keep = Some(3);
         assert_eq!(base, config_digest("spnn-he", &t4, 2));
+        // bounded staleness changes the trained values, so it taints the
+        // digest — but only when nonzero, keeping old checkpoints valid
+        let mut t5 = tc.clone();
+        t5.staleness = 2;
+        assert_ne!(base, config_digest("spnn-he", &t5, 2));
+        let mut t6 = tc.clone();
+        t6.staleness = 0;
+        assert_eq!(base, config_digest("spnn-he", &t6, 2));
+    }
+
+    #[test]
+    fn rotation_keeps_n_generations_and_pruned_dir_warm_starts() {
+        let dir = std::env::temp_dir().join(format!("spnn-ckpt-rot-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = fs::remove_dir_all(&dir);
+        let gen_ck = |v: f64| {
+            let mut ck = Checkpoint::new("splitnn", "server", 0xabc);
+            ck.push_f64("enc", vec![v; 4]);
+            ck
+        };
+        // keep=2: live + one rotated generation, older ones pruned
+        for i in 0..4 {
+            save_rotated(&dir, &gen_ck(i as f64), Some(2)).unwrap();
+        }
+        let live = load(&dir, "server").unwrap();
+        assert_eq!(live.f64s("enc").unwrap(), &[3.0; 4]);
+        let prev_bytes = fs::read(rotated_path(&dir, "server", 1)).unwrap();
+        let prev = Checkpoint::decode(&prev_bytes).unwrap();
+        assert_eq!(prev.f64s("enc").unwrap(), &[2.0; 4]);
+        assert!(!rotated_path(&dir, "server", 2).exists(), "generation 2 not pruned");
+        assert!(!path_for(&dir, "server").with_extension("ckpt.tmp").exists());
+        // a pruned dir still warm-starts: the live file is always the
+        // newest generation and loads verbatim
+        let back = load(&dir, "server").unwrap();
+        back.expect("splitnn", "server", 0xabc).unwrap();
+        // lowering keep prunes the now-excess generation too
+        save_rotated(&dir, &gen_ck(4.0), Some(1)).unwrap();
+        assert_eq!(load(&dir, "server").unwrap().f64s("enc").unwrap(), &[4.0; 4]);
+        assert!(!rotated_path(&dir, "server", 1).exists());
+        // keep=None is exactly save(): no rotated files appear
+        save_rotated(&dir, &gen_ck(5.0), None).unwrap();
+        assert_eq!(load(&dir, "server").unwrap().f64s("enc").unwrap(), &[5.0; 4]);
+        assert!(!rotated_path(&dir, "server", 1).exists());
+        // other roles' files are untouched by this role's pruning
+        save(&dir, &samples()[0]).unwrap();
+        save_rotated(&dir, &gen_ck(6.0), Some(1)).unwrap();
+        assert!(path_for(&dir, "holder0").exists());
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -266,6 +266,19 @@ pub struct TrainConfig {
     /// any depth trains bit-identical weights (RNG draws stay in schedule
     /// order). 0 is coerced to 1.
     pub pipeline_depth: usize,
+    /// Bounded-staleness asynchrony (`--staleness S`): a party may apply a
+    /// batch's weight update up to `S` batches late, following the
+    /// seed-derived per-batch lag schedule
+    /// (`protocols::common::staleness_lags`). This turns the hard update
+    /// dependency between consecutive batches into a soft one —
+    /// value-*dependent* work (matmuls, HE forward hops, triple
+    /// consumption) overlaps across batches and the prefetch window flows
+    /// across epoch boundaries. Every party derives the same schedule, so
+    /// the async transcript stays digest-pinned across transports, depths
+    /// and thread counts. 0 (default) = strict lock-step, byte-identical
+    /// to the seed. Broadcast in the session config (`stale=` wire key,
+    /// emitted only when nonzero).
+    pub staleness: usize,
     /// Transport backend for the party mesh: the in-process netsim
     /// simulator (default), real loopback TCP sockets, or Unix-domain
     /// socketpairs. Multi-process deployments (`spnn party` /
@@ -298,6 +311,14 @@ pub struct TrainConfig {
     /// path. Broadcast in the session config (`warm=1` wire key) so all
     /// parties agree on the schedule.
     pub warm_start: bool,
+    /// Checkpoint generations to keep per role (`--checkpoint-keep N`):
+    /// each save shifts `<role>.ckpt` → `<role>.1.ckpt` → … and prunes
+    /// generations ≥ N atomically, so the directory never grows without
+    /// bound and the live `<role>.ckpt` always warm-starts. `None`
+    /// (default) = keep only the live file (seed behavior). Local to each
+    /// process — never serialized into the session config broadcast (like
+    /// [`TrainConfig::checkpoint_dir`]).
+    pub checkpoint_keep: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -314,11 +335,13 @@ impl Default for TrainConfig {
             slot_bits: crate::paillier::pack::DEFAULT_SLOT_BITS,
             exec_threads: 0,
             pipeline_depth: 1,
+            staleness: 0,
             transport: TransportKind::Netsim,
             psk_file: None,
             compress: None,
             checkpoint_dir: None,
             warm_start: false,
+            checkpoint_keep: None,
         }
     }
 }
@@ -362,6 +385,10 @@ mod tests {
         assert_eq!(tc.exec_threads, 0);
         // depth 1 = strict lock-step, the reference schedule
         assert_eq!(tc.pipeline_depth, 1);
+        // staleness 0 = synchronous updates, byte-identical to the seed
+        assert_eq!(tc.staleness, 0);
+        // checkpoints keep only the live generation unless asked
+        assert!(tc.checkpoint_keep.is_none());
         // the simulator stays the default transport, auth is opt-in
         assert_eq!(tc.transport, TransportKind::Netsim);
         assert!(tc.psk_file.is_none());

@@ -102,16 +102,25 @@ USAGE:
               [--dataset fraud|distress] [--rows N] [--epochs E]
               [--batch B] [--holders K] [--mbps M] [--sgld] [--lr F]
               [--paillier-bits N] [--slot-bits N] [--threads T] [--seed S]
-              [--pipeline-depth D] [--transport netsim|tcp|uds]
+              [--pipeline-depth D] [--staleness S]
+              [--transport netsim|tcp|uds]
+              --staleness lets weight updates land up to S batches late
+              on a seed-derived schedule (bounded-staleness asynchrony):
+              batches overlap across the update dependency and across
+              epoch boundaries; 0 (default) is strict lock-step,
+              bit-identical to the synchronous transcript
               [--compress [dct:|sketch:]K]  K = kept-column ratio in (0,1]
               (write the dot: 0.5) or an absolute column total >= holders;
               every holder projects its private feature block through a
               seeded orthogonal basis before any encryption or sharing
               [--checkpoint-dir DIR] [--from-checkpoint [DIR]]
+              [--checkpoint-keep N]
               --checkpoint-dir writes each role's private parameter
               blocks (plus RNG/nonce cursors) at the end of training;
               --from-checkpoint warm-starts from those blocks with zero
-              epochs — bit-identical to the run that wrote them
+              epochs — bit-identical to the run that wrote them;
+              --checkpoint-keep rotates N checkpoint generations per
+              role and prunes older ones atomically
   spnn launch [same training flags as train]
               [--listen HOST:PORT] [--no-spawn] [--psk-file PATH]
               [--chaos ROLE:N]
@@ -124,6 +133,7 @@ USAGE:
   spnn party  --role <name> --connect HOST:PORT [--bind HOST]
               [--psk-file PATH] [--chaos-kill N]
               [--checkpoint-dir DIR] [--from-checkpoint [DIR]]
+              [--checkpoint-keep N]
               join a hosted session as one role (e.g. server, dealer,
               holder0, holder1 — role names come from the protocol);
               the checkpoint dir holds THIS role's private blocks and
@@ -246,6 +256,7 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
         slot_bits: flag(flags, "slot-bits", spnn::paillier::pack::DEFAULT_SLOT_BITS),
         exec_threads: flag(flags, "threads", 0usize),
         pipeline_depth: flag(flags, "pipeline-depth", 1usize),
+        staleness: flag(flags, "staleness", 0usize),
         transport: flags
             .get("transport")
             .map(|v| TransportKind::parse(v).ok_or_else(|| err(format!("unknown transport {v:?}"))))
@@ -265,6 +276,7 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> CliResult<SessionSpec> {
             .transpose()?,
         checkpoint_dir: ckpt_dir,
         warm_start: warm,
+        checkpoint_keep: flags.get("checkpoint-keep").and_then(|v| v.parse().ok()),
     };
     Ok(SessionSpec {
         protocol: proto.to_string(),
@@ -373,7 +385,8 @@ fn cmd_party(flags: &HashMap<String, String>) -> CliResult<()> {
         Some(v) if v != "true" => Some(v.clone()),
         _ => flags.get("checkpoint-dir").cloned(),
     };
-    run_party(connect, role, bind, psk.as_ref(), chaos_kill, ckpt_dir.as_deref())?;
+    let ckpt_keep = flags.get("checkpoint-keep").and_then(|v| v.parse().ok());
+    run_party(connect, role, bind, psk.as_ref(), chaos_kill, ckpt_dir.as_deref(), ckpt_keep)?;
     Ok(())
 }
 

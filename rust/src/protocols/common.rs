@@ -1,6 +1,6 @@
 //! Shared protocol machinery: parameter containers, updates, evaluation,
 //! and the **pipelined session framework** every trainer's party loop runs
-//! on ([`run_pipeline`]).
+//! on ([`run_pipeline`] / [`run_epochs`]).
 //!
 //! # Pipelined batch-stage state machine
 //!
@@ -20,6 +20,35 @@
 //! in schedule order and the trained weights are **bit-identical at any
 //! depth** (asserted by the transcript-equality tests via
 //! [`TrainReport::weight_digest`]).
+//!
+//! # Bounded-staleness mode (`TrainConfig::staleness` > 0)
+//!
+//! Lock-step saturates once the prefetch window covers the crypto
+//! lookahead: [`Step::Complete`] — the weight update — still serializes
+//! every batch behind a full network round-trip, and the window drains at
+//! every epoch boundary. [`run_epochs`] generalizes the machine with a
+//! **deferred-update queue**: a batch's `Complete` may run up to `lag_t`
+//! submits late, where `lag_t ∈ [0, staleness]` is drawn per batch from
+//! the seed-derived [`staleness_lags`] schedule. Value-*dependent* work
+//! (matmuls, HE forward hops, triple consumption) of up to `staleness + 1`
+//! batches then overlaps, and the prefetch window flows straight across
+//! epoch boundaries instead of draining.
+//!
+//! The contract of the deferred-update queue:
+//!
+//! - `Submit`s run in batch order; `Complete`s run in batch order (FIFO —
+//!   updates are never applied out of order);
+//! - the queue head `t` pops right before `Submit(t + lag_t + 1)`; a
+//!   batch queued behind a larger-lag head pops with it, so for every
+//!   batch `Complete(t)` runs before `Submit(t + staleness + 1)` — no
+//!   weight update is ever applied more than `staleness` batches late;
+//! - every party derives the identical `lag` schedule from `(seed,
+//!   staleness)` alone, so all parties interleave their sends/receives at
+//!   the same schedule positions (deadlock-free) and the *async*
+//!   transcript is itself digest-pinned across netsim/TCP/UDS, pipeline
+//!   depths, thread counts and process layouts;
+//! - `staleness = 0` routes through the exact per-epoch lock-step loop —
+//!   byte-identical to the seed schedule, tags and all.
 //!
 //! The party loops talk through the [`Channel`](crate::transport::Channel)
 //! abstraction, so the same per-batch schedule runs unchanged on the
@@ -51,18 +80,32 @@ pub enum Step {
 /// One mini-batch in flight through the pipelined session.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchCtx {
-    /// Batch index within the epoch (also the message tag).
+    /// Batch index. Within an epoch for the lock-step path; global
+    /// (monotone across epochs) for the bounded-staleness path, where
+    /// batches from adjacent epochs are concurrently in flight.
     pub index: usize,
+    /// Epoch this batch belongs to (always 0 on the legacy
+    /// [`run_pipeline`] path, which is driven once per epoch).
+    pub epoch: usize,
     /// First row of the batch in the training set.
     pub start: usize,
     /// Rows in this batch (the last batch may be partial).
     pub rows: usize,
+    /// Message tag for this batch's traffic. Equal to `index` on the
+    /// lock-step path (the seed wire format); globally unique on the
+    /// staleness path so concurrent adjacent-epoch batches never collide.
+    pub tag: u64,
 }
 
 impl BatchCtx {
+    /// Lock-step construction: epoch 0, tag = index (the seed schedule).
+    pub fn new(index: usize, start: usize, rows: usize) -> Self {
+        BatchCtx { index, epoch: 0, start, rows, tag: index as u64 }
+    }
+
     /// Message tag for this batch's traffic.
     pub fn tag(&self) -> u64 {
-        self.index as u64
+        self.tag
     }
 }
 
@@ -96,26 +139,197 @@ pub fn run_pipeline<F>(plan: &[(usize, usize)], depth: usize, mut step: F) -> Re
 where
     F: FnMut(Step, &BatchCtx) -> Result<()>,
 {
+    let ctx = |i: usize| BatchCtx::new(i, plan[i].0, plan[i].1);
+    drive_lockstep(plan.len(), depth, &ctx, &mut step)
+}
+
+/// The lock-step schedule body shared by [`run_pipeline`] and the
+/// `staleness = 0` path of [`run_epochs`]: identical event order, timers
+/// and gauge in both, so `S=0` stays byte-identical to the seed.
+fn drive_lockstep<F>(
+    n: usize,
+    depth: usize,
+    ctx: &dyn Fn(usize) -> BatchCtx,
+    step: &mut F,
+) -> Result<()>
+where
+    F: FnMut(Step, &BatchCtx) -> Result<()>,
+{
     let depth = depth.max(1);
-    let ctx = |i: usize| BatchCtx { index: i, start: plan[i].0, rows: plan[i].1 };
     // wall-clock step timers + in-flight gauge; inert when obs is disabled
     let t_pre = crate::obs::timer("pipeline_prefetch_seconds");
     let t_sub = crate::obs::timer("pipeline_submit_seconds");
     let t_com = crate::obs::timer("pipeline_complete_seconds");
     let mut pre = 0usize;
-    for t in 0..plan.len() {
+    for t in 0..n {
         while pre <= t {
             t_pre.observe(|| step(Step::Prefetch, &ctx(pre)))?;
             pre += 1;
         }
         t_sub.observe(|| step(Step::Submit, &ctx(t)))?;
-        while pre < plan.len() && pre < t + depth {
+        while pre < n && pre < t + depth {
             t_pre.observe(|| step(Step::Prefetch, &ctx(pre)))?;
             pre += 1;
         }
         // batches prefetched beyond the one now completing = pipeline occupancy
         crate::obs::gauge_set("pipeline_inflight", (pre - t) as f64);
         t_com.observe(|| step(Step::Complete, &ctx(t)))?;
+    }
+    Ok(())
+}
+
+/// Per-batch staleness lags for a whole run: `out[g] ∈ [0, staleness]` is
+/// how many later submits batch `g`'s `Complete` (weight update) may run
+/// behind. Pure function of `(n, staleness, seed)` — every party computes
+/// the identical schedule locally (no coordination round), which is what
+/// keeps the async interleave deadlock-free and digest-pinned across
+/// transports, depths and thread counts. `staleness = 0` is all-zeros.
+pub fn staleness_lags(n: usize, staleness: usize, seed: u64) -> Vec<usize> {
+    if staleness == 0 {
+        return vec![0; n];
+    }
+    // splitmix64 stream keyed by FNV of (domain tag, seed, staleness)
+    let mut f = Fnv::new();
+    f.add_bytes(b"spnn-staleness-schedule v1");
+    f.add_u64(seed);
+    f.add_u64(staleness as u64);
+    let mut state = f.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        out.push((z % (staleness as u64 + 1)) as usize);
+    }
+    out
+}
+
+/// Event stream of a whole multi-epoch training run (see [`run_epochs`]).
+/// A single enum (rather than three callbacks) so one closure can borrow
+/// the party's mutable state for all of them.
+pub enum Ev<'a> {
+    /// An epoch is starting. On the staleness path, tail batches of the
+    /// previous epoch may still be in flight (the window does not drain).
+    EpochStart(usize),
+    /// A scheduler step for one batch, exactly as in [`run_pipeline`].
+    Step(Step, &'a BatchCtx),
+    /// All batches of this epoch have completed (their updates applied).
+    EpochEnd(usize),
+}
+
+/// Drive a party's full multi-epoch batch loop.
+///
+/// With `staleness == 0` this is exactly `epochs` back-to-back
+/// [`run_pipeline`] passes with `EpochStart`/`EpochEnd` brackets — same
+/// event order, same per-epoch tags, byte-identical transcript to the
+/// seed. With `staleness > 0` batches get globally-unique tags and each
+/// batch's `Complete` is deferred by its [`staleness_lags`] lag: the
+/// deferred-update queue pops in FIFO batch order right before the first
+/// `Submit` that would exceed a pending batch's lag, and the prefetch
+/// window flows across epoch boundaries. `EpochEnd(e)` fires when the
+/// last batch of epoch `e` completes (possibly after submits of epoch
+/// `e + 1` have already run).
+pub fn run_epochs<F>(
+    plan: &[(usize, usize)],
+    epochs: usize,
+    depth: usize,
+    staleness: usize,
+    seed: u64,
+    mut ev: F,
+) -> Result<()>
+where
+    F: FnMut(Ev) -> Result<()>,
+{
+    if staleness == 0 {
+        for e in 0..epochs {
+            ev(Ev::EpochStart(e))?;
+            let ctx = |i: usize| BatchCtx {
+                index: i,
+                epoch: e,
+                start: plan[i].0,
+                rows: plan[i].1,
+                tag: i as u64,
+            };
+            drive_lockstep(plan.len(), depth, &ctx, &mut |st, b| ev(Ev::Step(st, b)))?;
+            ev(Ev::EpochEnd(e))?;
+        }
+        return Ok(());
+    }
+    run_async(plan, epochs, depth, staleness, seed, &mut ev)
+}
+
+/// The bounded-staleness schedule (see [`run_epochs`] and module docs).
+fn run_async<F>(
+    plan: &[(usize, usize)],
+    epochs: usize,
+    depth: usize,
+    staleness: usize,
+    seed: u64,
+    ev: &mut F,
+) -> Result<()>
+where
+    F: FnMut(Ev) -> Result<()>,
+{
+    let n = plan.len();
+    if n == 0 {
+        for e in 0..epochs {
+            ev(Ev::EpochStart(e))?;
+            ev(Ev::EpochEnd(e))?;
+        }
+        return Ok(());
+    }
+    let depth = depth.max(1);
+    let total = n * epochs;
+    let lags = staleness_lags(total, staleness, seed);
+    let ctx = |g: usize| BatchCtx {
+        index: g,
+        epoch: g / n,
+        start: plan[g % n].0,
+        rows: plan[g % n].1,
+        tag: g as u64,
+    };
+    let t_pre = crate::obs::timer("pipeline_prefetch_seconds");
+    let t_sub = crate::obs::timer("pipeline_submit_seconds");
+    let t_com = crate::obs::timer("pipeline_complete_seconds");
+    let mut pre = 0usize; // next batch to prefetch
+    let mut oldest = 0usize; // oldest batch whose Complete is still pending
+    for g in 0..total {
+        if g % n == 0 {
+            ev(Ev::EpochStart(g / n))?;
+        }
+        // Deferred-update queue: pop (in FIFO batch order) while the head's
+        // lag budget would be exceeded by this Submit. A batch t' queued
+        // behind a larger-lag head t stays until t pops at g = t+lag_t+1,
+        // where its own effective lag is g-1-t' = t+lag_t-t' < lag_t <= S
+        // (t < t'), so every update still lands within `staleness` submits.
+        while oldest < g && oldest + lags[oldest] < g {
+            t_com.observe(|| ev(Ev::Step(Step::Complete, &ctx(oldest))))?;
+            oldest += 1;
+            if oldest % n == 0 {
+                ev(Ev::EpochEnd(oldest / n - 1))?;
+            }
+        }
+        while pre <= g {
+            t_pre.observe(|| ev(Ev::Step(Step::Prefetch, &ctx(pre))))?;
+            pre += 1;
+        }
+        t_sub.observe(|| ev(Ev::Step(Step::Submit, &ctx(g))))?;
+        // the prefetch window flows across epoch boundaries: no drain
+        while pre < total && pre < g + depth {
+            t_pre.observe(|| ev(Ev::Step(Step::Prefetch, &ctx(pre))))?;
+            pre += 1;
+        }
+        crate::obs::gauge_set("pipeline_inflight", (g + 1 - oldest) as f64);
+    }
+    // drain: all remaining updates apply in order at end of run
+    while oldest < total {
+        t_com.observe(|| ev(Ev::Step(Step::Complete, &ctx(oldest))))?;
+        oldest += 1;
+        if oldest % n == 0 {
+            ev(Ev::EpochEnd(oldest / n - 1))?;
+        }
     }
     Ok(())
 }
@@ -527,6 +741,190 @@ mod tests {
             assert_eq!(seen_pre, vec![0, 1, 2], "depth {d}");
             assert_eq!(completed, vec![0, 1, 2], "depth {d}");
         }
+    }
+
+    #[test]
+    fn staleness_schedule_is_seeded_and_bounded() {
+        // pure function of (n, staleness, seed): identical on every call
+        // (and hence identical across parties / exec thread counts)
+        let a = staleness_lags(500, 3, 7);
+        let b = staleness_lags(500, 3, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&l| l <= 3));
+        // prefixes agree: party loops sized by different epoch counts
+        // still draw the same lags for shared batch positions
+        assert_eq!(&staleness_lags(1000, 3, 7)[..500], &a[..]);
+        // sensitive to both seed and bound
+        assert_ne!(staleness_lags(500, 3, 8), a);
+        assert_ne!(staleness_lags(500, 2, 7), a);
+        // not degenerate: some nonzero and some zero lags in a long run
+        assert!(a.iter().any(|&l| l > 0));
+        assert!(a.iter().any(|&l| l == 0));
+        // S=0 is the all-zeros (lock-step) schedule
+        assert_eq!(staleness_lags(10, 0, 7), vec![0; 10]);
+    }
+
+    #[test]
+    fn run_epochs_s0_matches_per_epoch_run_pipeline() {
+        // staleness 0 must reproduce the seed's per-epoch loop event for
+        // event, with per-epoch indices/tags and the right epoch labels
+        let plan = [(0usize, 4usize), (4, 4), (8, 2)];
+        for depth in 1..4 {
+            let mut want = Vec::new();
+            for e in 0..3 {
+                want.push((None, e, 0, 0u64, true));
+                run_pipeline(&plan, depth, |st, b| {
+                    want.push((Some(st), e, b.index, b.tag(), true));
+                    Ok(())
+                })
+                .unwrap();
+                want.push((None, e, 0, 0, false));
+            }
+            let mut got = Vec::new();
+            run_epochs(&plan, 3, depth, 0, 7, |ev| {
+                match ev {
+                    Ev::EpochStart(e) => got.push((None, e, 0, 0, true)),
+                    Ev::Step(st, b) => {
+                        assert_eq!(b.tag(), b.index as u64, "S=0 keeps per-epoch tags");
+                        got.push((Some(st), b.epoch, b.index, b.tag(), true));
+                    }
+                    Ev::EpochEnd(e) => got.push((None, e, 0, 0, false)),
+                }
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, want, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn run_epochs_async_respects_the_update_queue_contract() {
+        let plan = batch_plan(37, 4);
+        let n = plan.len();
+        for &(staleness, depth, epochs) in
+            &[(1usize, 1usize, 2usize), (2, 4, 3), (4, 2, 2), (3, 8, 1)]
+        {
+            let total = n * epochs;
+            let lags = staleness_lags(total, staleness, 7);
+            let mut prefetched = Vec::new();
+            let mut submitted = Vec::new();
+            let mut completed = Vec::new();
+            let mut ends = Vec::new();
+            run_epochs(&plan, epochs, depth, staleness, 7, |ev| {
+                match ev {
+                    Ev::EpochStart(_) => {}
+                    Ev::Step(Step::Prefetch, b) => prefetched.push(b.index),
+                    Ev::Step(Step::Submit, b) => {
+                        assert!(prefetched.contains(&b.index), "submit before prefetch");
+                        // the staleness bound: Complete(t) ran before
+                        // Submit(t + S + 1) for every earlier batch (a
+                        // batch may be held past its own lag by a
+                        // larger-lag FIFO head, never past S)
+                        for t in 0..b.index {
+                            if t + staleness < b.index {
+                                assert!(completed.contains(&t), "stale past bound S={staleness}");
+                            }
+                        }
+                        // and the queue head itself honors its drawn lag
+                        // (FIFO completes => head index == completed count)
+                        let pending_head = completed.len();
+                        if pending_head < b.index {
+                            assert!(
+                                pending_head + lags[pending_head] >= b.index,
+                                "head popped late: lag schedule violated"
+                            );
+                        }
+                        // globally-unique tags, monotone across epochs
+                        assert_eq!(b.tag(), b.index as u64);
+                        assert_eq!(b.epoch, b.index / n);
+                        submitted.push(b.index);
+                    }
+                    Ev::Step(Step::Complete, b) => completed.push(b.index),
+                    Ev::EpochEnd(e) => {
+                        ends.push(e);
+                        // an epoch ends exactly when its last update lands
+                        assert_eq!(completed.len(), (e + 1) * n);
+                    }
+                }
+                Ok(())
+            })
+            .unwrap();
+            let all: Vec<usize> = (0..total).collect();
+            assert_eq!(submitted, all, "submits in batch order");
+            assert_eq!(completed, all, "updates applied FIFO");
+            assert_eq!(prefetched, all, "prefetch in schedule order");
+            assert_eq!(ends, (0..epochs).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_epochs_async_event_order_is_depth_invariant() {
+        // at fixed S the Submit/Complete interleave is a function of the
+        // lag schedule alone — pipeline depth only moves Prefetch events,
+        // so trained weights stay bit-identical across depths
+        let plan = batch_plan(29, 4);
+        let order = |depth: usize| {
+            let mut log = Vec::new();
+            run_epochs(&plan, 2, depth, 2, 7, |ev| {
+                if let Ev::Step(st, b) = ev {
+                    if st != Step::Prefetch {
+                        log.push((st, b.index));
+                    }
+                }
+                Ok(())
+            })
+            .unwrap();
+            log
+        };
+        let d1 = order(1);
+        for d in 2..6 {
+            assert_eq!(order(d), d1, "depth {d}");
+        }
+    }
+
+    #[test]
+    fn run_epochs_async_overlaps_across_epoch_boundary() {
+        // with S>0 at least one Submit of epoch e+1 must land before the
+        // final Complete of epoch e (the window no longer drains), and
+        // some update must actually be deferred (lag realized)
+        let plan = batch_plan(40, 4);
+        let n = plan.len();
+        let mut overlap = false;
+        let mut deferred = false;
+        let mut completed = 0usize;
+        run_epochs(&plan, 2, 2, 2, 7, |ev| {
+            match ev {
+                Ev::Step(Step::Submit, b) => {
+                    if b.epoch == 1 && completed < n {
+                        overlap = true;
+                    }
+                    if b.index > completed + 1 {
+                        deferred = true;
+                    }
+                }
+                Ev::Step(Step::Complete, _) => completed += 1,
+                _ => {}
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!(overlap, "epoch boundary drained despite staleness");
+        assert!(deferred, "no update was ever deferred at S=2");
+    }
+
+    #[test]
+    fn run_epochs_empty_plan_still_brackets_epochs() {
+        let mut events = Vec::new();
+        run_epochs(&[], 2, 1, 3, 7, |ev| {
+            match ev {
+                Ev::EpochStart(e) => events.push((true, e)),
+                Ev::EpochEnd(e) => events.push((false, e)),
+                Ev::Step(..) => panic!("no steps for an empty plan"),
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(events, vec![(true, 0), (false, 0), (true, 1), (false, 1)]);
     }
 
     #[test]

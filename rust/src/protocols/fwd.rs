@@ -1798,12 +1798,12 @@ mod tests {
         let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 6 rows x 2 cols
         let mut src = FeatureSource::slice(x, 2);
         assert_eq!(src.width(), 2);
-        let b = BatchCtx { index: 0, start: 2, rows: 3 };
+        let b = BatchCtx::new(0, 2, 3);
         let m = src.block(&b).unwrap();
         assert_eq!(m.shape(), (3, 2));
         assert_eq!(m.data, vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
         // beyond the table errors instead of panicking
-        let bad = BatchCtx { index: 1, start: 5, rows: 3 };
+        let bad = BatchCtx::new(1, 5, 3);
         assert!(src.block(&bad).is_err());
     }
 
@@ -1812,17 +1812,17 @@ mod tests {
         let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // 4 rows x 2 cols
         let mut src = FeatureSource::gather(x, 2);
         src.stage(7, &[3, 0, 3]);
-        let b = BatchCtx { index: 7, start: 0, rows: 3 };
+        let b = BatchCtx::new(7, 0, 3);
         let m = src.block(&b).unwrap();
         assert_eq!(m.data, vec![6.0, 7.0, 0.0, 1.0, 6.0, 7.0]);
         // consumed: a second block() for the same batch fails
         assert!(src.block(&b).is_err());
         // row count mismatch and out-of-range ids are protocol errors
         src.stage(8, &[1]);
-        let wrong = BatchCtx { index: 8, start: 0, rows: 2 };
+        let wrong = BatchCtx::new(8, 0, 2);
         assert!(src.block(&wrong).is_err());
         src.stage(9, &[99]);
-        let oob = BatchCtx { index: 9, start: 0, rows: 1 };
+        let oob = BatchCtx::new(9, 0, 1);
         assert!(src.block(&oob).is_err());
     }
 
@@ -1834,7 +1834,7 @@ mod tests {
         let mut src = FeatureSource::slice(x.clone(), 4).with_transform(Some(tf.clone()));
         assert_eq!(src.raw_width(), 4);
         assert_eq!(src.width(), 2);
-        let b = BatchCtx { index: 0, start: 0, rows: 3 };
+        let b = BatchCtx::new(0, 0, 3);
         let m = src.block(&b).unwrap();
         assert_eq!(m.shape(), (3, 2));
         // bit-identical to applying the transform to the raw block directly
@@ -1843,7 +1843,7 @@ mod tests {
         // gather mode transforms too
         let mut g = FeatureSource::gather(x.clone(), 4).with_transform(Some(tf.clone()));
         g.stage(0, &[2, 0]);
-        let gb = BatchCtx { index: 0, start: 0, rows: 2 };
+        let gb = BatchCtx::new(0, 0, 2);
         let gm = g.block(&gb).unwrap();
         assert_eq!(gm.shape(), (2, 2));
         let mut picked = Vec::new();

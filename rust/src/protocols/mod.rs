@@ -35,7 +35,10 @@ pub mod secureml;
 pub mod splitnn;
 pub mod spnn;
 
-pub use common::{batch_plan, run_pipeline, BatchCtx, ModelParams, Step, TrainReport};
+pub use common::{
+    batch_plan, run_epochs, run_pipeline, staleness_lags, BatchCtx, Ev, ModelParams, Step,
+    TrainReport,
+};
 pub use fwd::ForwardPass;
 
 use std::time::Instant;

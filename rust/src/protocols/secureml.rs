@@ -26,7 +26,7 @@
 //! opened to A, which returns the scores).
 //!
 //! **Pipelining**: the party loops run on the shared
-//! [`run_pipeline`] batch-stage state machine. The dealer material a batch
+//! [`run_epochs`] batch-stage state machine. The dealer material a batch
 //! needs is fully determined by the layer plan
 //! ([`super::fwd::mpc_batch_script`]), so A fires the whole script as
 //! tagged requests from `Prefetch` — up to `pipeline_depth - 1` batches
@@ -34,7 +34,7 @@
 //! of use: the dealer's triple generation streams ahead of demand instead
 //! of serializing a request round-trip into every Beaver multiplication.
 
-use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport};
+use super::common::{batch_plan, run_epochs, Ev, Fnv, ModelParams, Step, TrainReport};
 use super::fwd::{enc_const, FeatureSource, LayerShare, MlpExtraFwd, MlpMpcFwd, MpcActs};
 use super::Trainer;
 use crate::ckpt;
@@ -51,6 +51,7 @@ use crate::smpc::matmul::{beaver_mul_elem, native_mm};
 use crate::smpc::{beaver_matmul, trunc_share_mat, RingMat};
 use crate::transport::Channel;
 use crate::{Error, Result};
+use std::collections::VecDeque;
 
 pub struct SecureMl;
 
@@ -169,7 +170,7 @@ impl SecureMl {
                     let digest = ckpt::config_digest("secureml", &tc, n_holders);
                     let mut ck = ckpt::Checkpoint::new("secureml", "dealer", digest);
                     ck.push_cursor("rng", cursor);
-                    ckpt::save(dir, &ck)?;
+                    ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
                 }
                 parties::await_stop(p)?;
                 Ok(PartyOut::default())
@@ -211,13 +212,16 @@ impl SecureMl {
                 let rng = ChaChaRng::seed_from_u64(tc.seed ^ (0xe0 + me as u64));
                 let src = FeatureSource::slice(xj, dj).with_transform(tf.clone());
                 let mut fwd = MlpExtraFwd::new(a_id, b_id, src, rng);
-                for _ in 0..epochs {
-                    run_pipeline(&plan, tc.pipeline_depth, |step, b| match step {
-                        Step::Prefetch => fwd.prefetch(b),
-                        Step::Submit => fwd.submit(p, b),
-                        Step::Complete => Ok(()),
-                    })?;
-                }
+                // run_epochs (not a per-epoch loop): with staleness > 0 the
+                // compute parties use globally-unique tags, and this
+                // holder's share sends must carry the same tags
+                run_epochs(&plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+                    match ev {
+                        Ev::Step(Step::Prefetch, b) => fwd.prefetch(b),
+                        Ev::Step(Step::Submit, b) => fwd.submit(p, b),
+                        _ => Ok(()),
+                    }
+                })?;
                 parties::await_stop(p)?;
                 // checkpoint boundary: an extra holder's only serving
                 // state is its mask-RNG position
@@ -228,7 +232,7 @@ impl SecureMl {
                     let digest = ckpt::config_digest("secureml", &tc, n_holders);
                     let mut ck = ckpt::Checkpoint::new("secureml", &role_name, digest);
                     ck.push_cursor("rng", fwd.rng_cursor());
-                    ckpt::save(dir, &ck)?;
+                    ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
                 }
                 if let Some(sr) = srv {
                     fwd.src = FeatureSource::gather(serve_xj.expect("serve slice"), dj)
@@ -461,11 +465,36 @@ fn mpc_party(
     let mut epoch_times = Vec::new();
     let mut epoch_losses = Vec::new();
 
-    for _ in 0..epochs {
-        p.reset_clock();
-        let mut loss_sum = 0.0;
-        let mut inflight: Option<InFlight> = None;
-        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+    // per-epoch loss buckets + staleness-deferred handoff queue (FIFO:
+    // updates apply in batch order even when Complete runs batches late)
+    let mut losses = vec![0.0f64; epochs];
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    let mut prev_t = 0.0f64;
+    run_epochs(plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+        let (step, b) = match ev {
+            Ev::EpochStart(ep) => {
+                // lock-step resets the sim clock per epoch (seed behavior);
+                // async time flows across epochs — report deltas instead
+                if tc.staleness == 0 || ep == 0 {
+                    p.reset_clock();
+                    prev_t = 0.0;
+                }
+                return Ok(());
+            }
+            Ev::EpochEnd(ep) => {
+                let t = p.now();
+                epoch_times.push(t - prev_t);
+                prev_t = t;
+                if me_is_a {
+                    let mean = losses[ep] / plan.len().max(1) as f64;
+                    epoch_losses.push(mean);
+                    parties::report_epoch(p, mean)?;
+                }
+                return Ok(());
+            }
+            Ev::Step(step, b) => (step, b),
+        };
+        {
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
             match step {
@@ -506,16 +535,16 @@ fn mpc_party(
                             let yi = yv[i] as f64;
                             loss -= yi * pi.ln() + (1.0 - yi) * (1.0 - pi).ln();
                         }
-                        loss_sum += loss / rows as f64;
+                        losses[b.epoch] += loss / rows as f64;
                     } else {
                         p.send_tagged(peer, tag, Payload::U64s(p_share.data.clone()))?;
                     }
-                    inflight = Some(InFlight { acts: acts_out, g_out: g });
+                    inflight.push_back(InFlight { acts: acts_out, g_out: g });
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("bwd");
-                    let fl = inflight.take().expect("submit before complete");
+                    let fl = inflight.pop_front().expect("submit before complete");
                     // g_out: gradient w.r.t. the current layer's output
                     let InFlight { acts: MpcActs { act_shares, deriv_shares }, mut g_out } =
                         fl;
@@ -567,13 +596,8 @@ fn mpc_party(
                     Ok(())
                 }
             }
-        })?;
-        epoch_times.push(p.now());
-        if me_is_a {
-            epoch_losses.push(loss_sum / plan.len() as f64);
-            parties::report_epoch(p, loss_sum / plan.len() as f64)?;
         }
-    }
+    })?;
     if me_is_a && srv.is_none() {
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
@@ -602,7 +626,7 @@ fn mpc_party(
             }
         }
         ck.push_cursor("rng", fwd.rng_cursor());
-        ckpt::save(dir, &ck)?;
+        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
     }
 
     // ---- serving: forward-only MPC over the held-out table; the output
@@ -870,6 +894,54 @@ mod tests {
         assert_ne!(runs[0].0, 0, "digest not populated");
         assert_eq!(runs[0], runs[1], "depth 2 diverged from depth 1");
         assert_eq!(runs[0], runs[2], "depth 4 diverged from depth 1");
+    }
+
+    #[test]
+    fn secureml_async_transcript_is_pinned_across_depth_and_transport() {
+        // bounded staleness replays a seed-derived lag schedule, so the
+        // async run is deterministic: same weights at any depth and over
+        // real sockets — and (when the schedule draws a nonzero lag)
+        // different weights from the lock-step run it relaxes
+        use crate::protocols::common::staleness_lags;
+        let ds = synth_fraud(SynthOpts::small(200));
+        let (train, test) = ds.split(0.8, 9);
+        let tc_for = |staleness: usize, depth: usize, kind: TransportKind| TrainConfig {
+            batch: 32,
+            epochs: 2,
+            lr_override: Some(0.05),
+            pipeline_depth: depth,
+            staleness,
+            transport: kind,
+            ..Default::default()
+        };
+        let run = |tc: &TrainConfig| {
+            SecureMl.train(&FRAUD, tc, LinkSpec::lan(), &train, &test, 2).unwrap()
+        };
+        let base = run(&tc_for(2, 1, TransportKind::Netsim));
+        assert_ne!(base.weight_digest, 0);
+        let deep = run(&tc_for(2, 4, TransportKind::Netsim));
+        assert_eq!(
+            base.weight_digest, deep.weight_digest,
+            "depth 4 diverged from depth 1 at staleness 2"
+        );
+        let bits = |r: &TrainReport| -> Vec<u64> {
+            r.train_losses.iter().map(|l| l.to_bits()).collect()
+        };
+        assert_eq!(bits(&base), bits(&deep), "loss transcript diverged with depth");
+        let tcp = run(&tc_for(2, 4, TransportKind::Tcp));
+        assert_eq!(base.weight_digest, tcp.weight_digest, "TCP diverged at staleness 2");
+        let lockstep = run(&tc_for(0, 1, TransportKind::Netsim));
+        let total = batch_plan(train.len(), 32).len() * 2;
+        if staleness_lags(total, 2, tc_for(2, 1, TransportKind::Netsim).seed)
+            .iter()
+            .any(|&l| l != 0)
+        {
+            assert_ne!(
+                base.weight_digest, lockstep.weight_digest,
+                "a drawn lag must reorder updates vs lock-step"
+            );
+        }
+        assert!(base.auc.is_finite() && lockstep.auc.is_finite());
     }
 
     #[test]

@@ -16,13 +16,14 @@
 //! the same forward objects answer inference requests after training
 //! (the **server** is the scoring role — it owns the label layer).
 //!
-//! The party loops run on the shared [`run_pipeline`] batch-stage state
+//! The party loops run on the shared [`run_epochs`] batch-stage state
 //! machine: holders stage their (value-independent) feature-block decode
 //! in `Prefetch`, send cut-layer activations in `Submit` and consume the
 //! server's gradients in `Complete`, so the knob sweep in the pipeline
-//! bench covers this baseline too.
+//! bench — and the bounded-staleness mode (`TrainConfig::staleness`) —
+//! covers this baseline too.
 
-use super::common::{batch_plan, run_pipeline, Fnv, ModelParams, Step, TrainReport, Updater};
+use super::common::{batch_plan, run_epochs, Ev, Fnv, ModelParams, Step, TrainReport, Updater};
 use super::fwd::{FeatureSource, SplitHolderFwd, SplitServerFwd};
 use super::Trainer;
 use crate::ckpt;
@@ -36,6 +37,7 @@ use crate::runtime::{Engine, TensorIn};
 use crate::serve::{self, ServeOpts, ServeQueue, ServeRole};
 use crate::transport::Channel;
 use crate::{Error, Result};
+use std::collections::VecDeque;
 
 pub struct SplitNn;
 
@@ -270,15 +272,33 @@ fn server_role(
     let mut times = Vec::new();
     let mut losses = Vec::new();
 
-    for _ in 0..epochs {
-        p.reset_clock();
-        let mut loss_sum = 0.0;
-        run_pipeline(plan, tc.pipeline_depth, |step, b| {
-            // the server's whole per-batch load depends on the holders'
-            // activations, so it all lives in Submit (no lookahead work)
-            if step != Step::Submit {
+    let mut bucket = vec![0.0f64; epochs];
+    let mut prev_t = 0.0f64;
+    run_epochs(plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+        let b = match ev {
+            Ev::EpochStart(ep) => {
+                // lock-step resets the sim clock per epoch (seed behavior);
+                // async time flows across epochs — record deltas instead
+                if tc.staleness == 0 || ep == 0 {
+                    p.reset_clock();
+                    prev_t = 0.0;
+                }
                 return Ok(());
             }
+            Ev::EpochEnd(ep) => {
+                let t = p.now();
+                times.push(t - prev_t);
+                prev_t = t;
+                let mean = bucket[ep] / plan.len().max(1) as f64;
+                losses.push(mean);
+                return parties::report_epoch(p, mean);
+            }
+            // the server's whole per-batch load depends on the holders'
+            // activations, so it all lives in Submit (no lookahead work)
+            Ev::Step(Step::Submit, b) => b,
+            Ev::Step(..) => return Ok(()),
+        };
+        {
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
             // gather cut-layer blocks + hidden stack (the forward layer)
@@ -302,7 +322,7 @@ fn server_role(
                     TensorIn::F32(&by),
                 ],
             )?;
-            loss_sum += outs[1].scalar()?;
+            bucket[b.epoch] += outs[1].scalar()?;
             let g_hl = outs[2].clone().f32()?;
             let g_wy = outs[3].clone().f32()?;
             let g_by = outs[4].clone().f32()?;
@@ -341,11 +361,8 @@ fn server_role(
                 p.send_tagged(ids::holder(j), tag, Payload::F32s(blk))?;
             }
             Ok(())
-        })?;
-        times.push(p.now());
-        losses.push(loss_sum / plan.len() as f64);
-        parties::report_epoch(p, loss_sum / plan.len() as f64)?;
-    }
+        }
+    })?;
     parties::await_stop(p)?;
 
     // ---- checkpoint boundary (end of training): SplitNN serving is
@@ -365,7 +382,7 @@ fn server_role(
         }
         ck.push_f64("wy", fwd.params.wy.data.clone());
         ck.push_f64("by", fwd.params.by.data.clone());
-        ckpt::save(dir, &ck)?;
+        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
     }
 
     // ---- serving: the server is the scoring role (owns the head) ----
@@ -413,29 +430,28 @@ fn holder_role(
     // gradient, x^T . g) sees post-transform columns throughout.
     let src = FeatureSource::slice(xj, dj).with_transform(tf.clone());
     let mut fwd = SplitHolderFwd::new(enc, src);
-    for _ in 0..epochs {
-        // in-flight block for backward
-        let mut inflight: Option<MatF64> = None;
-        run_pipeline(plan, tc.pipeline_depth, |step, b| {
-            match step {
-                Step::Prefetch => fwd.prefetch(p, b),
-                Step::Submit => {
-                    inflight = Some(fwd.submit(p, b)?);
-                    Ok(())
-                }
-                Step::Complete => {
-                    p.set_stage("cut-bwd");
-                    let x = inflight.take().expect("submit before complete");
-                    let g = p.recv_tagged(ids::SERVER, b.tag())?.into_f32s()?;
-                    let g_m = MatF64::from_f32(b.rows, fwd.enc.cols, &g);
-                    let g_w = x.transpose().matmul(&g_m);
-                    up.step_mat_f32(&mut fwd.enc, &g_w.to_f32());
-                    up.tick();
-                    Ok(())
-                }
+    // in-flight block queue for backward (staleness may defer Completes)
+    let mut inflight: VecDeque<MatF64> = VecDeque::new();
+    run_epochs(plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+        match ev {
+            Ev::EpochStart(_) | Ev::EpochEnd(_) => Ok(()),
+            Ev::Step(Step::Prefetch, b) => fwd.prefetch(p, b),
+            Ev::Step(Step::Submit, b) => {
+                inflight.push_back(fwd.submit(p, b)?);
+                Ok(())
             }
-        })?;
-    }
+            Ev::Step(Step::Complete, b) => {
+                p.set_stage("cut-bwd");
+                let x = inflight.pop_front().expect("submit before complete");
+                let g = p.recv_tagged(ids::SERVER, b.tag())?.into_f32s()?;
+                let g_m = MatF64::from_f32(b.rows, fwd.enc.cols, &g);
+                let g_w = x.transpose().matmul(&g_m);
+                up.step_mat_f32(&mut fwd.enc, &g_w.to_f32());
+                up.tick();
+                Ok(())
+            }
+        }
+    })?;
     parties::await_stop(p)?;
 
     // ---- checkpoint boundary: the holder's only durable state is its
@@ -448,7 +464,7 @@ fn holder_role(
         let digest = ckpt::config_digest("splitnn", tc, n_holders);
         let mut ck = ckpt::Checkpoint::new("splitnn", &role_name, digest);
         ck.push_f64("enc", fwd.enc.data.clone());
-        ckpt::save(dir, &ck)?;
+        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
     }
 
     // ---- serving: score requests against the held-out table ----
@@ -553,6 +569,53 @@ mod tests {
         }
         assert_eq!(digests[0], digests[1], "SplitNN over TCP diverged from netsim");
         assert_eq!(digests[0], digests[2], "SplitNN over UDS diverged from netsim");
+    }
+
+    #[test]
+    fn splitnn_async_transcript_is_pinned_across_depth_and_transport() {
+        // bounded staleness replays a seed-derived lag schedule: the async
+        // run trains the same composite model at any depth and over real
+        // TCP sockets, and (when the schedule draws a nonzero lag)
+        // different weights from the lock-step run it relaxes
+        use crate::protocols::common::{batch_plan, staleness_lags};
+        let ds = synth_fraud(SynthOpts::small(400));
+        let (train, test) = ds.split(0.8, 31);
+        let tc_for = |staleness: usize, depth: usize, kind: TransportKind| TrainConfig {
+            batch: 64,
+            epochs: 2,
+            lr_override: Some(0.3),
+            pipeline_depth: depth,
+            staleness,
+            transport: kind,
+            ..Default::default()
+        };
+        let run = |tc: &TrainConfig| {
+            SplitNn.train(&FRAUD, tc, LinkSpec::lan(), &train, &test, 2).unwrap()
+        };
+        let base = run(&tc_for(2, 1, TransportKind::Netsim));
+        assert_ne!(base.weight_digest, 0);
+        let deep = run(&tc_for(2, 4, TransportKind::Netsim));
+        assert_eq!(
+            base.weight_digest, deep.weight_digest,
+            "depth 4 diverged from depth 1 at staleness 2"
+        );
+        let bits = |r: &TrainReport| -> Vec<u64> {
+            r.train_losses.iter().map(|l| l.to_bits()).collect()
+        };
+        assert_eq!(bits(&base), bits(&deep), "loss transcript diverged with depth");
+        let tcp = run(&tc_for(2, 4, TransportKind::Tcp));
+        assert_eq!(base.weight_digest, tcp.weight_digest, "TCP diverged at staleness 2");
+        let lockstep = run(&tc_for(0, 1, TransportKind::Netsim));
+        let total = batch_plan(train.len(), 64).len() * 2;
+        if staleness_lags(total, 2, tc_for(2, 1, TransportKind::Netsim).seed)
+            .iter()
+            .any(|&l| l != 0)
+        {
+            assert_ne!(
+                base.weight_digest, lockstep.weight_digest,
+                "a drawn lag must reorder updates vs lock-step"
+            );
+        }
     }
 
     #[test]

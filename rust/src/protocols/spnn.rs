@@ -37,7 +37,7 @@
 //! is built through [`Trainer::serve_deployment`] (`crate::serve`).
 //!
 //! **Pipelining** (`TrainConfig::pipeline_depth`): every party loop runs on
-//! the shared [`run_pipeline`] batch-stage state machine. The holders'
+//! the shared [`run_epochs`] batch-stage state machine. The holders'
 //! value-independent crypto — Paillier nonce exponentiations (HE), share
 //! masks / input encodes / dealer triple requests (SS) — runs in the
 //! `Prefetch` stage up to `depth - 1` batches ahead, inside the window
@@ -46,8 +46,15 @@
 //! inside the prefetch window (the SecureML `DealerFeed` pattern).
 //! Weight updates themselves stay in schedule order, so the trained model
 //! is bit-identical at any depth (see `spnn_depths_are_transcript_equal`).
+//! With `TrainConfig::staleness > 0` the updates additionally defer by the
+//! seed-derived lag schedule (bounded-staleness asynchrony): up to `S+1`
+//! batches of value-dependent work overlap, the window flows across epoch
+//! boundaries, and the async transcript stays digest-pinned because every
+//! party draws the same schedule.
 
-use super::common::{batch_plan, evaluate, run_pipeline, ModelParams, Step, TrainReport, Updater};
+use super::common::{
+    batch_plan, evaluate, run_epochs, Ev, ModelParams, Step, TrainReport, Updater,
+};
 use super::fwd::{FeatureSource, SpnnHeadFwd, SpnnHolderFwd, SpnnLabelFwd, SpnnServerFwd};
 use super::Trainer;
 use crate::bignum::BigUint;
@@ -64,6 +71,7 @@ use crate::serve::{self, ServeOpts, ServeQueue, ServeRole};
 use crate::smpc::dealer;
 use crate::transport::Channel;
 use crate::{Error, Result};
+use std::collections::VecDeque;
 
 /// SPNN trainer; `he` selects Algorithm 3 (Paillier) over Algorithm 2 (SS).
 pub struct Spnn {
@@ -168,7 +176,7 @@ impl Spnn {
                         let digest = ckpt::config_digest("spnn-ss", &tc, n_holders);
                         let mut ck = ckpt::Checkpoint::new("spnn-ss", "dealer", digest);
                         ck.push_cursor("rng", cursor);
-                        ckpt::save(dir, &ck)?;
+                        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
                     }
                     parties::await_stop(p)?;
                 }
@@ -370,12 +378,33 @@ fn server_role(
     let mut epoch_times = Vec::with_capacity(epochs);
     let mut out = PartyOut::default();
 
-    for _epoch in 0..epochs {
-        p.reset_clock();
-        let mut loss_sum = 0.0;
-        // padded h1 of the in-flight batch, handed from Submit to Complete
-        let mut inflight_h1: Option<Vec<f32>> = None;
-        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+    // per-epoch loss buckets + handoff queue: with staleness > 0 up to
+    // S+1 batches (possibly spanning an epoch boundary) sit between their
+    // Submit and their deferred Complete
+    let mut losses = vec![0.0f64; epochs];
+    let mut inflight_h1: VecDeque<Vec<f32>> = VecDeque::new();
+    let mut prev_t = 0.0f64;
+    run_epochs(plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+        let (step, b) = match ev {
+            Ev::EpochStart(ep) => {
+                // lock-step resets the sim clock every epoch (seed
+                // behavior); async time flows across epochs, so reset
+                // only once and report per-epoch deltas below
+                if tc.staleness == 0 || ep == 0 {
+                    p.reset_clock();
+                    prev_t = 0.0;
+                }
+                return Ok(());
+            }
+            Ev::EpochEnd(ep) => {
+                let t = p.now();
+                epoch_times.push(t - prev_t);
+                prev_t = t;
+                return parties::report_epoch(p, losses[ep] / plan.len().max(1) as f64);
+            }
+            Ev::Step(step, b) => (step, b),
+        };
+        {
             let rows = b.rows;
             let tag = b.tag();
             match step {
@@ -384,12 +413,12 @@ fn server_role(
                 Step::Prefetch => Ok(()),
                 // ---- receive h1, hidden stack forward, hL to A ----
                 Step::Submit => {
-                    inflight_h1 = Some(fwd.run(p, b)?);
+                    inflight_h1.push_back(fwd.run(p, b)?);
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("server-bwd");
-                    let h1_pad = inflight_h1.take().expect("submit before complete");
+                    let h1_pad = inflight_h1.pop_front().expect("submit before complete");
                     // ---- backward ----
                     let g_hl_rows = p.recv_tagged(a, tag)?.into_f32s()?;
                     let mut g_hl = vec![0.0f32; cap * hl_dim];
@@ -421,14 +450,12 @@ fn server_role(
 
                     // loss bookkeeping (A reports its scalar loss for monitoring)
                     let loss = p.recv_tagged(a, tag)?.into_f64s()?[0];
-                    loss_sum += loss;
+                    losses[b.epoch] += loss;
                     Ok(())
                 }
             }
-        })?;
-        epoch_times.push(p.now());
-        parties::report_epoch(p, loss_sum / plan.len() as f64)?;
-    }
+        }
+    })?;
     parties::await_stop(p)?;
 
     // ---- checkpoint boundary (end of training): the server persists /
@@ -445,7 +472,7 @@ fn server_role(
         for (i, m) in fwd.params.server.iter().enumerate() {
             ck.push_f64(&format!("server{i}"), m.data.clone());
         }
-        ckpt::save(dir, &ck)?;
+        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
     }
 
     // ---- serving: stay resident and answer inference request batches ----
@@ -518,24 +545,39 @@ fn holder_role(
     let cap = crate::config::ModelConfig::pick_batch(tc.batch);
     let mut train_losses = Vec::new();
 
-    for _epoch in 0..epochs {
-        p.reset_clock();
-        let mut loss_sum = 0.0;
-        // the in-flight feature block handed from Submit to Complete
-        let mut inflight: Option<MatF64> = None;
-        run_pipeline(plan, tc.pipeline_depth, |step, b| {
+    // per-epoch loss buckets + the in-flight feature-block queue handed
+    // from Submit to (possibly staleness-deferred) Complete
+    let mut losses = vec![0.0f64; epochs];
+    let mut inflight: VecDeque<MatF64> = VecDeque::new();
+    run_epochs(plan, epochs, tc.pipeline_depth, tc.staleness, tc.seed, |ev| {
+        let (step, b) = match ev {
+            Ev::EpochStart(ep) => {
+                if tc.staleness == 0 || ep == 0 {
+                    p.reset_clock();
+                }
+                return Ok(());
+            }
+            Ev::EpochEnd(ep) => {
+                if is_a {
+                    train_losses.push(losses[ep] / plan.len().max(1) as f64);
+                }
+                return Ok(());
+            }
+            Ev::Step(step, b) => (step, b),
+        };
+        {
             let (s, rows) = (b.start, b.rows);
             let tag = b.tag();
             match step {
                 Step::Prefetch => fwd.prefetch(p, b),
                 // ---- Algorithm 2 / 3 private-feature forward ----
                 Step::Submit => {
-                    inflight = Some(fwd.submit(p, b)?);
+                    inflight.push_back(fwd.submit(p, b)?);
                     Ok(())
                 }
                 Step::Complete => {
                     p.set_stage("label-bwd");
-                    let xblk = inflight.take().expect("submit before complete");
+                    let xblk = inflight.pop_front().expect("submit before complete");
                     // ---- label computations on A (§4.5) ----
                     if let Some(head) = head.as_mut() {
                         let hl_pad = head.recv_hidden(p, b)?;
@@ -569,7 +611,7 @@ fn holder_role(
                             tag,
                             Payload::F32s(g_hl[..rows * hl_dim].to_vec()),
                         )?;
-                        loss_sum += loss;
+                        losses[b.epoch] += loss;
                         // loss scalar to server for epoch monitoring (f64
                         // channel, sent after g_hl so the server can overlap
                         // the backward)
@@ -588,11 +630,8 @@ fn holder_role(
                     Ok(())
                 }
             }
-        })?;
-        if is_a {
-            train_losses.push(loss_sum / plan.len() as f64);
         }
-    }
+    })?;
     if is_a && !he && srv.is_none() {
         dealer::stop(p, ids::DEALER)?; // release the dealer's serve loop
     }
@@ -621,7 +660,7 @@ fn holder_role(
             ck.push_f64("wy", head.wy.data.clone());
             ck.push_f64("by", head.by.data.clone());
         }
-        ckpt::save(dir, &ck)?;
+        ckpt::save_rotated(dir, &ck, tc.checkpoint_keep)?;
     }
 
     // ---- serving: swap to the held-out table and stay resident ----
@@ -938,6 +977,53 @@ mod tests {
             assert_ne!(runs[0].0, 0, "digest not populated (he={he})");
             assert_eq!(runs[0], runs[1], "depth 2 diverged from depth 1 (he={he})");
             assert_eq!(runs[0], runs[2], "depth 4 diverged from depth 1 (he={he})");
+        }
+    }
+
+    #[test]
+    fn spnn_ss_async_transcript_is_pinned_across_depth_and_transport() {
+        // bounded staleness replays a seed-derived lag schedule: the async
+        // SS run trains the same weights at any depth and over real TCP
+        // sockets, and (when the schedule draws a nonzero lag) different
+        // weights from the lock-step run. Runs in tier-1 via the native
+        // graph fallback, like spnn_ss_transports_are_transcript_equal.
+        use crate::protocols::common::{batch_plan, staleness_lags};
+        let ds = synth_fraud(SynthOpts::small(520));
+        let (train, test) = ds.split(0.8, 21);
+        let tc_for = |staleness: usize, depth: usize, kind: TransportKind| TrainConfig {
+            batch: 128,
+            epochs: 2,
+            pipeline_depth: depth,
+            staleness,
+            transport: kind,
+            ..Default::default()
+        };
+        let run = |tc: &TrainConfig| {
+            Spnn { he: false }.train(&FRAUD, tc, LinkSpec::lan(), &train, &test, 2).unwrap()
+        };
+        let base = run(&tc_for(2, 1, TransportKind::Netsim));
+        assert_ne!(base.weight_digest, 0);
+        let deep = run(&tc_for(2, 4, TransportKind::Netsim));
+        assert_eq!(
+            base.weight_digest, deep.weight_digest,
+            "depth 4 diverged from depth 1 at staleness 2"
+        );
+        let bits = |r: &TrainReport| -> Vec<u64> {
+            r.train_losses.iter().map(|l| l.to_bits()).collect()
+        };
+        assert_eq!(bits(&base), bits(&deep), "loss transcript diverged with depth");
+        let tcp = run(&tc_for(2, 4, TransportKind::Tcp));
+        assert_eq!(base.weight_digest, tcp.weight_digest, "TCP diverged at staleness 2");
+        let lockstep = run(&tc_for(0, 1, TransportKind::Netsim));
+        let total = batch_plan(train.len(), 128).len() * 2;
+        if staleness_lags(total, 2, tc_for(2, 1, TransportKind::Netsim).seed)
+            .iter()
+            .any(|&l| l != 0)
+        {
+            assert_ne!(
+                base.weight_digest, lockstep.weight_digest,
+                "a drawn lag must reorder updates vs lock-step"
+            );
         }
     }
 }

@@ -433,7 +433,7 @@ pub fn party_serve_loop(
         while !stopped && pending.is_empty() {
             match parse_announce(p.recv_tagged(coord, next)?)? {
                 Announce::Batch(ids) => {
-                    let b = BatchCtx { index: next as usize, start: 0, rows: ids.len() };
+                    let b = BatchCtx::new(next as usize, 0, ids.len());
                     fwd.stage_rows(next, &ids);
                     fwd.prefetch(p, &b)?;
                     pending.push_back(b);
@@ -448,8 +448,7 @@ pub fn party_serve_loop(
                 None => break,
                 Some(payload) => match parse_announce(payload)? {
                     Announce::Batch(ids) => {
-                        let b =
-                            BatchCtx { index: next as usize, start: 0, rows: ids.len() };
+                        let b = BatchCtx::new(next as usize, 0, ids.len());
                         fwd.stage_rows(next, &ids);
                         fwd.prefetch(p, &b)?;
                         pending.push_back(b);

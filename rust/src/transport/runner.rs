@@ -95,9 +95,12 @@ pub fn run_party(
     psk: Option<&Psk>,
     chaos_kill_after: Option<u64>,
     ckpt_dir: Option<&str>,
+    ckpt_keep: Option<usize>,
 ) -> Result<()> {
     let mut sess = session::join(connect, role, bind_host, SESSION_TIMEOUT, psk)?;
     sess.spec.tc.checkpoint_dir = ckpt_dir.map(|s| s.to_string());
+    // like the dir, the rotation depth is a process-local retention policy
+    sess.spec.tc.checkpoint_keep = ckpt_keep;
     let Prepared { dep, .. } = build_deployment(&sess.spec, ServeQueue::detached())?;
     if dep.names.len() != sess.n {
         return Err(Error::Protocol(format!(
@@ -320,6 +323,9 @@ fn launch_on(
             if let Some(dir) = &spec.tc.checkpoint_dir {
                 cmd.args(["--checkpoint-dir", dir.as_str()]);
             }
+            if let Some(keep) = spec.tc.checkpoint_keep {
+                cmd.arg("--checkpoint-keep").arg(keep.to_string());
+            }
             if let Some((chaos_role, n_frames)) = &opts.chaos {
                 if chaos_role == role {
                     cmd.args(["--chaos-kill", &n_frames.to_string()]);
@@ -446,8 +452,9 @@ mod tests {
         let mut workers = Vec::new();
         for role in roles {
             let addr = addr.clone();
-            workers
-                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None, None)));
+            workers.push(std::thread::spawn(move || {
+                run_party(&addr, role, "127.0.0.1", None, None, None, None)
+            }));
         }
         let rep = run_launch_on(listener, &s, &opts).unwrap();
         for w in workers {
@@ -489,7 +496,7 @@ mod tests {
         for (role, chaos) in [("party0", Some(25u64)), ("dealer", None), ("party1", None)] {
             let addr = addr.clone();
             workers.push(std::thread::spawn(move || {
-                run_party(&addr, role, "127.0.0.1", None, chaos, None)
+                run_party(&addr, role, "127.0.0.1", None, chaos, None, None)
             }));
         }
         let rep = run_launch_on(listener, &s, &opts).unwrap();
@@ -525,7 +532,7 @@ mod tests {
         {
             let addr = addr.clone();
             workers.push(std::thread::spawn(move || {
-                run_party(&addr, role, "127.0.0.1", Some(&key), None, None)
+                run_party(&addr, role, "127.0.0.1", Some(&key), None, None, None)
             }));
         }
         let err = run_launch_on(listener, &s, &opts).unwrap_err();
@@ -558,8 +565,9 @@ mod tests {
         let mut workers = Vec::new();
         for role in ["server", "dealer", "holder0", "holder1"] {
             let addr = addr.clone();
-            workers
-                .push(std::thread::spawn(move || run_party(&addr, role, "127.0.0.1", None, None, None)));
+            workers.push(std::thread::spawn(move || {
+                run_party(&addr, role, "127.0.0.1", None, None, None, None)
+            }));
         }
         let (tx, rx) = std::sync::mpsc::channel();
         let rows: Vec<u32> = (0..21).collect(); // ragged through coalesce 16

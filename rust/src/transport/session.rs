@@ -121,6 +121,12 @@ impl SessionSpec {
             t.exec_threads,
             t.pipeline_depth,
         );
+        // bounded-staleness asynchrony rides the broadcast (every party
+        // must drive the same lag schedule); absent when 0 so earlier
+        // wire strings (and their digests) are unchanged
+        if t.staleness != 0 {
+            s.push_str(&format!(" stale={}", t.staleness));
+        }
         // the feature-compression knob rides the broadcast in its
         // canonical form (field absent = uncompressed, keeping old wire
         // strings parseable and their digests unchanged)
@@ -199,6 +205,13 @@ impl SessionSpec {
             slot_bits: num("slot")?,
             exec_threads: num("threads")?,
             pipeline_depth: num("depth")?,
+            // absent = 0 keeps every pre-staleness wire string parseable
+            staleness: match kv.get("stale") {
+                None => 0,
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad stale={v:?}")))?,
+            },
             transport: TransportKind::Tcp,
             psk_file: None,
             compress,
@@ -206,6 +219,7 @@ impl SessionSpec {
             // at its own disk, like psk_file
             checkpoint_dir: None,
             warm_start: kv.get("warm").copied() == Some("1"),
+            checkpoint_keep: None,
         };
         let serve = match kv.get("serve") {
             None => None,
@@ -819,6 +833,23 @@ mod tests {
         assert!(
             SessionSpec::from_wire(&format!("{} serve=1,2,3,4,5", s.to_wire())).is_err()
         );
+        // bounded staleness rides the broadcast (all parties must drive
+        // the same lag schedule) and moves the digest; absent = 0, so
+        // pre-staleness wire strings and digests are unchanged
+        let mut st = s.clone();
+        st.tc.staleness = 2;
+        assert!(st.to_wire().contains(" stale=2"), "{}", st.to_wire());
+        assert_ne!(st.digest(), s.digest(), "staleness must change the digest");
+        let back = SessionSpec::from_wire(&st.to_wire()).unwrap();
+        assert_eq!(back.tc.staleness, 2);
+        assert_eq!(SessionSpec::from_wire(&s.to_wire()).unwrap().tc.staleness, 0);
+        assert!(!s.to_wire().contains("stale="), "S=0 must keep the old wire form");
+        assert!(SessionSpec::from_wire(&format!("{} stale=x", s.to_wire())).is_err());
+        // checkpoint rotation is local-only, like the dir and the psk path
+        let mut ck = s.clone();
+        ck.tc.checkpoint_keep = Some(3);
+        assert_eq!(ck.to_wire(), s.to_wire());
+        assert!(SessionSpec::from_wire(&ck.to_wire()).unwrap().tc.checkpoint_keep.is_none());
         // the compression knob roundtrips in canonical form and moves the
         // config digest; absent = uncompressed, as before this field
         let mut cs = s.clone();
